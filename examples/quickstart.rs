@@ -1,0 +1,49 @@
+//! Quickstart: load the AOT artifacts, serve a handful of synthetic
+//! summarization requests with the Faster-Transformer engine, print the
+//! generated summaries.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use aigc_infer::config::{EngineKind, ServingConfig};
+use aigc_infer::data::{TraceConfig, TraceGenerator};
+use aigc_infer::pipeline;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure: FT-pruned engine (the paper's fastest single-engine
+    //    row), sequential executor for simplicity.
+    let mut cfg = ServingConfig::default();
+    cfg.engine = EngineKind::FtPruned;
+    cfg.pipelined = false;
+    cfg.gen.max_new_tokens = 12;
+
+    // 2. A tiny synthetic workload (stands in for the paper's Baidu
+    //    commercial-material documents — DESIGN.md §3).
+    let mut trace = TraceGenerator::new(
+        TraceConfig { max_new_tokens: 12, ..Default::default() },
+        7,
+    );
+    let requests = trace.take(8);
+
+    // 3. Serve.
+    let summary = pipeline::run(&cfg, &requests)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // 4. Inspect.
+    for r in &summary.responses {
+        println!(
+            "request {:>2}: {:>5.1}ms  acc {:.2}  \"{}\"",
+            r.id,
+            r.latency.as_secs_f64() * 1e3,
+            r.accuracy.unwrap_or(0.0),
+            r.summary_text
+        );
+    }
+    println!(
+        "\n{} requests in {:.2}s -> {:.2} samples/s, mean accuracy {:.3}",
+        summary.responses.len(),
+        summary.wall.as_secs_f64(),
+        summary.samples_per_sec,
+        summary.mean_accuracy
+    );
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! END-TO-END driver (the DESIGN.md §E2E experiment): serve a realistic
+//! Poisson request trace through the full stack — fast tokenizer →
+//! dynamic length-bucketed batcher → Fig-4 parallel pipeline → FT engine
+//! with fp16 KV cache over PJRT — and report latency, throughput and
+//! summary quality of the build-time-trained model.
+//!
+//!     cargo run --release --example serve_workload [-- N_REQUESTS [ENGINE]]
+//!
+//! Also prints the training loss curve recorded by `make artifacts`
+//! (artifacts/train_loss.json), tying the served model back to its
+//! training run.  Results are recorded in EXPERIMENTS.md §E2E.
+
+use aigc_infer::config::{EngineKind, ServingConfig};
+use aigc_infer::data::{TraceConfig, TraceGenerator};
+use aigc_infer::pipeline;
+use aigc_infer::util::json;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128);
+    let engine = std::env::args()
+        .nth(2)
+        .map(|s| EngineKind::parse(&s).expect("bad engine"))
+        .unwrap_or(EngineKind::FtPruned);
+
+    // ---- the trained model: show its loss curve ------------------------
+    if let Ok(text) = std::fs::read_to_string("artifacts/train_loss.json") {
+        let log = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let entries = log.as_array().unwrap_or(&[]).to_vec();
+        println!("## Training curve (build-time, python/compile/train.py)");
+        let first = entries.first();
+        let last = entries.last();
+        if let (Some(f), Some(l)) = (first, last) {
+            println!(
+                "   masked-CE {:.3} (step {}) -> {:.3} (step {})",
+                f.get("loss").as_f64().unwrap_or(0.0),
+                f.get("step").as_usize().unwrap_or(0),
+                l.get("loss").as_f64().unwrap_or(0.0),
+                l.get("step").as_usize().unwrap_or(0),
+            );
+        }
+        // sparkline-ish dump every few entries
+        for e in entries.iter().step_by(entries.len().max(8) / 8) {
+            println!(
+                "   step {:>4}  loss {:.3}",
+                e.get("step").as_usize().unwrap_or(0),
+                e.get("loss").as_f64().unwrap_or(0.0)
+            );
+        }
+    }
+
+    // ---- the serving run ----------------------------------------------
+    let mut cfg = ServingConfig::default();
+    cfg.engine = engine;
+    cfg.pipelined = true;
+    cfg.gen.max_new_tokens = 12;
+    cfg.precompile = true;
+
+    let mut trace = TraceGenerator::new(
+        TraceConfig {
+            rate: 100.0,
+            max_new_tokens: cfg.gen.max_new_tokens,
+            ..Default::default()
+        },
+        42,
+    );
+    let requests = trace.take(n);
+
+    println!("\n## Serving {n} requests (engine={}, pipelined)", engine.label());
+    let s = pipeline::run(&cfg, &requests)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!("   wall            {:.2}s", s.wall.as_secs_f64());
+    println!("   throughput      {:.2} samples/s ({:.1} tok/s)",
+             s.samples_per_sec,
+             s.generated_tokens as f64 / s.wall.as_secs_f64());
+    println!("   latency         {}", s.latency.summary());
+    println!("   summary acc     {:.3}", s.mean_accuracy);
+    println!(
+        "   stage busy      pre={:.2}s inf={:.2}s post={:.2}s",
+        s.stages.preprocess.as_secs_f64(),
+        s.stages.inference.as_secs_f64(),
+        s.stages.postprocess.as_secs_f64()
+    );
+    println!(
+        "   overlappable    {:.1}% (Amdahl bound on Fig-4 pipelining)",
+        s.stages.overlappable_fraction() * 100.0
+    );
+
+    // a few sample generations
+    println!("\n## Samples");
+    for r in s.responses.iter().take(5) {
+        println!(
+            "   [{}] acc {:.2}: \"{}\"",
+            r.id,
+            r.accuracy.unwrap_or(0.0),
+            &r.summary_text.chars().take(60).collect::<String>()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT export.
+
+Python here runs ONCE (`make artifacts`) and never on the request path —
+the rust coordinator consumes only `artifacts/*.hlo.txt`,
+`artifacts/weights_*.bin` and `artifacts/manifest.json`.
+"""

@@ -1,0 +1,290 @@
+"""AOT export: lower every (graph, bucket) to HLO text + weight blobs.
+
+This is the ONLY python entrypoint on the build path:
+
+    python -m compile.aot --out-dir ../artifacts
+
+It (1) trains the scaled UNIMO model on the synthetic corpus (train.py),
+(2) lowers each engine graph at each static (batch, seq) bucket to HLO
+*text* — NOT serialized protos: jax ≥ 0.5 emits 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md) —
+and (3) writes `manifest.json` + flat little-endian `weights_*.bin` that
+the rust runtime consumes without numpy/pickle.
+
+Re-running is a no-op when the content hash of the compile package and
+the export parameters is unchanged (`make artifacts` idempotence).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import pathlib
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .config import DEFAULT, DEFAULT_BUCKETS, DEFAULT_PRUNED, ModelConfig
+
+_DTYPE_STR = {"f32": "f32", "bf16": "bf16", "f16": "f16"}
+_JNP_DTYPE = {"f32": jnp.float32, "bf16": jnp.bfloat16, "f16": jnp.float16}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg: ModelConfig):
+    return tuple(_spec(s) for _, s in M.param_spec(cfg))
+
+
+def _io_entry(name: str, role: str, shape, dtype: str) -> dict:
+    return {"name": name, "role": role, "shape": list(shape), "dtype": dtype}
+
+
+def _graph_inputs(cfg: ModelConfig, data: List[dict]) -> List[dict]:
+    """Flat input ordering = param_spec order, then data args (matches the
+    positional flattening of fn(flat, *data))."""
+    params = [
+        _io_entry(n, "param", s, "f32") for n, s in M.param_spec(cfg)
+    ]
+    return params + data
+
+
+def lower_baseline(cfg: ModelConfig, b: int, s: int):
+    fn = functools.partial(M.baseline_forward, cfg=cfg)
+    lowered = jax.jit(fn).lower(
+        _param_specs(cfg), _spec((b, s), jnp.int32), _spec((b,), jnp.int32)
+    )
+    inputs = _graph_inputs(cfg, [
+        _io_entry("token_ids", "data", (b, s), "s32"),
+        _io_entry("lengths", "data", (b,), "s32"),
+    ])
+    outputs = [_io_entry("next_logits", "out", (b, cfg.vocab_size), "f32")]
+    return lowered, inputs, outputs
+
+
+def lower_prefill(cfg: ModelConfig, b: int, s: int):
+    fn = functools.partial(M.ft_prefill, cfg=cfg)
+    lowered = jax.jit(fn).lower(
+        _param_specs(cfg), _spec((b, s), jnp.int32), _spec((b,), jnp.int32)
+    )
+    cache_shape = (cfg.n_layers, b, cfg.n_heads, s, cfg.d_head)
+    dt = _DTYPE_STR[cfg.dtype]
+    inputs = _graph_inputs(cfg, [
+        _io_entry("token_ids", "data", (b, s), "s32"),
+        _io_entry("lengths", "data", (b,), "s32"),
+    ])
+    outputs = [
+        _io_entry("next_logits", "out", (b, cfg.vocab_size), "f32"),
+        _io_entry("k_cache", "out", cache_shape, dt),
+        _io_entry("v_cache", "out", cache_shape, dt),
+    ]
+    return lowered, inputs, outputs
+
+
+def lower_decode(cfg: ModelConfig, b: int, s: int):
+    fn = functools.partial(M.ft_decode, cfg=cfg)
+    cache_shape = (cfg.n_layers, b, cfg.n_heads, s, cfg.d_head)
+    cache_spec = _spec(cache_shape, _JNP_DTYPE[cfg.dtype])
+    lowered = jax.jit(fn).lower(
+        _param_specs(cfg), _spec((b,), jnp.int32), _spec((b,), jnp.int32),
+        cache_spec, cache_spec,
+    )
+    dt = _DTYPE_STR[cfg.dtype]
+    inputs = _graph_inputs(cfg, [
+        _io_entry("token_ids", "data", (b,), "s32"),
+        _io_entry("positions", "data", (b,), "s32"),
+        _io_entry("k_cache", "data", cache_shape, dt),
+        _io_entry("v_cache", "data", cache_shape, dt),
+    ])
+    outputs = [
+        _io_entry("next_logits", "out", (b, cfg.vocab_size), "f32"),
+        _io_entry("k_cache", "out", cache_shape, dt),
+        _io_entry("v_cache", "out", cache_shape, dt),
+    ]
+    return lowered, inputs, outputs
+
+
+def lower_decode_multi(cfg: ModelConfig, b: int, s: int, steps: int):
+    fn = functools.partial(M.ft_decode_multi, cfg=cfg, steps=steps)
+    cache_shape = (cfg.n_layers, b, cfg.n_heads, s, cfg.d_head)
+    cache_spec = _spec(cache_shape, _JNP_DTYPE[cfg.dtype])
+    lowered = jax.jit(fn).lower(
+        _param_specs(cfg), _spec((b,), jnp.int32), _spec((b,), jnp.int32),
+        cache_spec, cache_spec,
+    )
+    dt = _DTYPE_STR[cfg.dtype]
+    inputs = _graph_inputs(cfg, [
+        _io_entry("token_ids", "data", (b,), "s32"),
+        _io_entry("positions", "data", (b,), "s32"),
+        _io_entry("k_cache", "data", cache_shape, dt),
+        _io_entry("v_cache", "data", cache_shape, dt),
+    ])
+    outputs = [
+        _io_entry("tokens", "out", (b, steps), "s32"),
+        _io_entry("k_cache", "out", cache_shape, dt),
+        _io_entry("v_cache", "out", cache_shape, dt),
+    ]
+    return lowered, inputs, outputs
+
+
+def write_weights(params: Dict[str, np.ndarray], cfg: ModelConfig,
+                  path: pathlib.Path) -> List[dict]:
+    """Flat little-endian f32 blob in param_spec order + offset index."""
+    index = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, shape in M.param_spec(cfg):
+            arr = np.ascontiguousarray(params[name], dtype="<f4")
+            assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+            f.write(arr.tobytes())
+            index.append({
+                "name": name, "shape": list(shape),
+                "offset": offset, "nbytes": arr.nbytes,
+            })
+            offset += arr.nbytes
+    return index
+
+
+def content_hash(extra: dict) -> str:
+    h = hashlib.sha256()
+    pkg = pathlib.Path(__file__).parent
+    for p in sorted(pkg.glob("*.py")) + sorted(pkg.glob("kernels/*.py")):
+        h.update(p.name.encode())
+        h.update(p.read_bytes())
+    h.update(json.dumps(extra, sort_keys=True).encode())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=500)
+    ap.add_argument("--multi-steps", type=int, default=8,
+                    help="tokens per fused multi-step decode executable")
+    ap.add_argument("--batch-sizes", type=int, nargs="+",
+                    default=list(DEFAULT_BUCKETS.batch_sizes))
+    ap.add_argument("--seq-lens", type=int, nargs="+",
+                    default=list(DEFAULT_BUCKETS.seq_lens))
+    ap.add_argument("--ft-dtype", default="f16", choices=["f32", "bf16", "f16"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    manifest_path = out / "manifest.json"
+
+    params_hash = content_hash({
+        "train_steps": args.train_steps, "multi_steps": args.multi_steps,
+        "batch_sizes": args.batch_sizes, "seq_lens": args.seq_lens,
+        "ft_dtype": args.ft_dtype,
+    })
+    if manifest_path.exists() and not args.force:
+        try:
+            old = json.loads(manifest_path.read_text())
+            if old.get("input_hash") == params_hash:
+                print(f"artifacts up to date ({manifest_path}); nothing to do")
+                return
+        except json.JSONDecodeError:
+            pass
+
+    full = DEFAULT  # f32 interface; ft graphs cast internally
+    pruned_arch = DEFAULT_PRUNED
+    ft_full = full.with_dtype(args.ft_dtype)
+    ft_pruned = pruned_arch.with_dtype(args.ft_dtype)
+
+    print(f"[1/3] training scaled UNIMO ({args.train_steps} steps)…")
+    t0 = time.time()
+    params, loss_log = T.train(full, steps=args.train_steps)
+    T.save_loss_log(loss_log, str(out / "train_loss.json"))
+    print(f"      trained in {time.time() - t0:.1f}s "
+          f"(loss {loss_log[0]['loss']:.3f} -> {loss_log[-1]['loss']:.3f})")
+
+    print("[2/3] writing weight blobs…")
+    pruned_params = M.prune_params(params, full, pruned_arch)
+    windex_full = write_weights(params, full, out / "weights_full.bin")
+    windex_pruned = write_weights(pruned_params, pruned_arch,
+                                  out / "weights_pruned.bin")
+
+    print("[3/3] lowering graphs…")
+    artifacts = []
+
+    def emit(name: str, kind: str, variant: str, cfg: ModelConfig,
+             b: int, s: int, lower_fn, **kw):
+        t = time.time()
+        lowered, inputs, outputs = lower_fn(cfg, b, s, **kw)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        (out / path).write_text(text)
+        artifacts.append({
+            "name": name, "path": path, "kind": kind, "variant": variant,
+            "batch": b, "seq": s, "dtype": cfg.dtype,
+            "vocab_size": cfg.vocab_size, "max_position": cfg.max_position,
+            "inputs": inputs, "outputs": outputs,
+            **({"steps": kw["steps"]} if "steps" in kw else {}),
+        })
+        print(f"      {name:34s} {len(text) / 1e6:6.2f} MB  "
+              f"{time.time() - t:5.1f}s")
+
+    for b in args.batch_sizes:
+        for s in args.seq_lens:
+            emit(f"baseline_fwd_b{b}_s{s}", "baseline_fwd", "baseline",
+                 full, b, s, lower_baseline)
+            for variant, cfg in (("full", ft_full), ("pruned", ft_pruned)):
+                if s > cfg.max_position:
+                    continue  # pruned position table cannot serve this bucket
+                emit(f"ft_prefill_{variant}_b{b}_s{s}", "ft_prefill", variant,
+                     cfg, b, s, lower_prefill)
+                emit(f"ft_decode_{variant}_b{b}_s{s}", "ft_decode", variant,
+                     cfg, b, s, lower_decode)
+                emit(f"ft_decode{args.multi_steps}_{variant}_b{b}_s{s}",
+                     "ft_decode_multi", variant, cfg, b, s,
+                     lower_decode_multi, steps=args.multi_steps)
+
+    manifest = {
+        "version": 1,
+        "input_hash": params_hash,
+        "special_tokens": {"pad": M.PAD_ID, "bos": M.BOS_ID,
+                           "eos": M.EOS_ID, "sep": M.SEP_ID},
+        "configs": {
+            "full": full.to_dict(),
+            "pruned": pruned_arch.to_dict(),
+            "ft_full": ft_full.to_dict(),
+            "ft_pruned": ft_pruned.to_dict(),
+        },
+        "weights": {
+            "full": {"path": "weights_full.bin", "params": windex_full},
+            "pruned": {"path": "weights_pruned.bin", "params": windex_pruned},
+        },
+        "train_loss": "train_loss.json",
+        "multi_steps": args.multi_steps,
+        "batch_sizes": args.batch_sizes,
+        "seq_lens": args.seq_lens,
+        "artifacts": artifacts,
+    }
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {manifest_path} ({len(artifacts)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

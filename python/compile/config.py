@@ -1,0 +1,84 @@
+"""Model / engine configuration shared across the compile path.
+
+Mirrors `rust/src/config/model.rs` — the rust coordinator reads the same
+values from `configs/*.toml` and from `artifacts/manifest.json`, so the two
+sides never disagree about shapes.
+
+The paper's model is UNIMO-text: 24 layers, d_model 1024, vocab 12800,
+position table 512x1024 (trimmed to 128x1024 by the pruning step).  On this
+CPU-PJRT testbed we default to a scaled config (see DESIGN.md §3) but keep
+every dimension configurable so the full-size model remains expressible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for the UNIMO-style prefix LM."""
+
+    vocab_size: int = 8000
+    max_position: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    # dtype of parameters/activations in the lowered graph: "f32" for the
+    # baseline engine, "bf16" for the FasterTransformer-style engine (the
+    # paper uses fp16; bf16 is the numerically-safe CPU stand-in with the
+    # same 2-byte footprint — DESIGN.md §3).
+    dtype: str = "f32"
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def pruned(self, vocab_size: int = 4000, max_position: int = 128) -> "ModelConfig":
+        """The embedding-layer-pruning transform of §3.2: trim the vocab to
+        the high-frequency prefix and the position table to the observed
+        maximum sequence length (paper: 512x1024 -> 128x1024)."""
+        return dataclasses.replace(
+            self, vocab_size=vocab_size, max_position=max_position
+        )
+
+    def with_dtype(self, dtype: str) -> "ModelConfig":
+        return dataclasses.replace(self, dtype=dtype)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["d_head"] = self.d_head
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketConfig:
+    """Static (batch, seq) buckets to AOT-compile.
+
+    PJRT executables have static shapes, so the dynamic batcher in rust
+    routes each batch to the nearest compiled bucket (the paper's
+    "allocation of data inference order" = length-bucketed scheduling).
+    """
+
+    batch_sizes: Tuple[int, ...] = (1, 4, 8)
+    seq_lens: Tuple[int, ...] = (32, 64, 128)
+
+    def pairs(self) -> List[Tuple[int, int]]:
+        return [(b, s) for b in self.batch_sizes for s in self.seq_lens]
+
+
+# The default scaled testbed config (DESIGN.md §3 substitution table).
+DEFAULT = ModelConfig()
+# Pruned variant: vocab 8000 -> 4000 (high-frequency prefix; the synthetic
+# Zipf corpus concentrates >99% of mass there), positions 512 -> 128
+# (paper Fig 3: real inputs are almost always < 100 tokens).
+DEFAULT_PRUNED = DEFAULT.pruned()
+DEFAULT_BUCKETS = BucketConfig()
+
+
+def dump_json(cfg: ModelConfig) -> str:
+    return json.dumps(cfg.to_dict(), indent=2, sort_keys=True)

@@ -1,0 +1,107 @@
+"""Synthetic training corpus — python mirror of `rust/src/data/`.
+
+The paper's dataset is Baidu commercial material (proprietary).  DESIGN.md
+§3: we substitute a synthetic corpus that reproduces the *statistics* the
+optimizations exploit —
+
+- token frequencies are Zipf-distributed (so a high-frequency vocab prefix
+  covers almost all mass → embedding pruning is sound),
+- document lengths follow a mixture with most mass under 100 tokens and a
+  thin tail to `max_position` (paper Fig 3 → position-table trim is sound),
+- the task is EXTRACTIVE summarization: the target summary is the leading
+  ~20% of the document.  A small LM genuinely learns this copy task, so
+  the E2E example serves a *trained* model and can score summary-token
+  overlap across engine variants ("maintaining performance", §4).
+
+Sequence layout (shared with rust): [BOS] doc… [SEP] summary… [EOS] [PAD]….
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .model import BOS_ID, EOS_ID, PAD_ID, SEP_ID
+
+FIRST_WORD_ID = 4  # ids below are special tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    vocab_size: int = 8000
+    zipf_alpha: float = 1.1
+    # Length mixture (in tokens): lognormal body + uniform tail, clipped.
+    body_median: float = 40.0
+    body_sigma: float = 0.55
+    tail_prob: float = 0.04
+    max_doc_len: int = 400
+    min_doc_len: int = 8
+    summary_ratio: float = 0.2
+
+
+def zipf_probs(cfg: CorpusConfig) -> np.ndarray:
+    n = cfg.vocab_size - FIRST_WORD_ID
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-cfg.zipf_alpha)
+    return p / p.sum()
+
+
+def sample_doc_len(rng: np.random.Generator, cfg: CorpusConfig) -> int:
+    """Fig 3 shape: bulk < 100 tokens, thin tail out to max_doc_len."""
+    if rng.random() < cfg.tail_prob:
+        n = int(rng.integers(100, cfg.max_doc_len + 1))
+    else:
+        n = int(np.exp(rng.normal(np.log(cfg.body_median), cfg.body_sigma)))
+    return int(np.clip(n, cfg.min_doc_len, cfg.max_doc_len))
+
+
+def sample_doc(rng: np.random.Generator, probs: np.ndarray,
+               cfg: CorpusConfig) -> np.ndarray:
+    n = sample_doc_len(rng, cfg)
+    words = rng.choice(len(probs), size=n, p=probs) + FIRST_WORD_ID
+    return words.astype(np.int32)
+
+
+def summary_of(doc: np.ndarray, cfg: CorpusConfig) -> np.ndarray:
+    k = max(1, int(round(len(doc) * cfg.summary_ratio)))
+    return doc[:k]
+
+
+def pack_example(doc: np.ndarray, summ: np.ndarray, seq_len: int):
+    """-> (tokens [S] i32, length i32, loss_mask [S] f32).
+
+    loss positions predict the summary tokens and the EOS: position t's
+    logits predict tokens[t+1], so the mask marks t in [sep_idx, end)."""
+    toks = np.full(seq_len, PAD_ID, np.int32)
+    seq = np.concatenate([[BOS_ID], doc, [SEP_ID], summ, [EOS_ID]])
+    seq = seq[:seq_len]
+    toks[: len(seq)] = seq
+    mask = np.zeros(seq_len, np.float32)
+    sep = 1 + len(doc)  # index of SEP
+    end = len(seq)
+    # Positions predicting summary/EOS tokens: t with t+1 in (sep, end),
+    # i.e. t in [sep, end-1).
+    if end - 1 > sep:
+        mask[sep: end - 1] = 1.0
+    return toks, np.int32(len(seq)), mask
+
+
+def make_batch(rng: np.random.Generator, probs: np.ndarray, cfg: CorpusConfig,
+               batch: int, seq_len: int):
+    """Batch of packed examples whose docs fit the bucket (doc+summary+3
+    control tokens <= seq_len)."""
+    toks = np.zeros((batch, seq_len), np.int32)
+    lens = np.zeros(batch, np.int32)
+    masks = np.zeros((batch, seq_len), np.float32)
+    max_doc = int((seq_len - 3) / (1.0 + cfg.summary_ratio)) - 1
+    for i in range(batch):
+        while True:
+            doc = sample_doc(rng, probs, cfg)
+            if len(doc) <= max_doc:
+                break
+            doc = doc[:max_doc]
+            break
+        summ = summary_of(doc, cfg)
+        toks[i], lens[i], masks[i] = pack_example(doc, summ, seq_len)
+    return toks, lens, masks

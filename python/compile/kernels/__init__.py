@@ -1,0 +1,24 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- `attention`: fused decode-step attention over the KV cache (Fig 2) and
+  fused full-sequence prefill attention.
+- `ffn`: vertically-fused matmul→gelu→matmul block.
+- `layernorm`: fused residual-add + LayerNorm.
+- `ref`: pure-jnp oracles for all of the above (the correctness signal).
+
+All kernels are lowered with interpret=True on this CPU-PJRT testbed; see
+DESIGN.md §Hardware-Adaptation for the GPU→TPU mapping.
+"""
+
+from .attention import fused_decode_attention, fused_prefill_attention
+from .ffn import fused_ffn
+from .layernorm import fused_add_layernorm
+from . import ref
+
+__all__ = [
+    "fused_decode_attention",
+    "fused_prefill_attention",
+    "fused_ffn",
+    "fused_add_layernorm",
+    "ref",
+]

@@ -1,0 +1,140 @@
+"""Fused attention Pallas kernels — the paper's compute hot-spot.
+
+Faster Transformer's core wins (§3.2) are (a) the K-V cache, which turns
+decode from an O(T²)-per-sequence recompute into one O(S) step per token,
+and (b) kernel fusion, which collapses QK^T → mask → softmax → ·V into one
+kernel so the [S] score row never round-trips to HBM.
+
+Block-shape selection (the §Perf iteration — see EXPERIMENTS.md §Perf/L1):
+
+- v1 tiled one grid step per (batch·head).  That is the literal port of
+  FT's one-threadblock-per-(b,h) CUDA layout, but it is the WRONG shape
+  for both targets: on TPU the MXU sees degenerate [1,Dh]x[Dh,S] GEMMs,
+  and under interpret=True the grid becomes a 64-iteration loop of tiny
+  ops (~30 ms/decode-step at B=8).
+- v2 (current) keeps a whole (b·h)-chunk resident per grid step and lets
+  the kernel do one batched einsum.  VMEM per decode step at the paper's
+  full size (B=8, H=16, S=512, Dh=64, fp16) is 2·S·Dh·chunk·2B — the
+  default chunk is capped so K+V tiles stay ≤ ~4 MiB, well inside the
+  16 MiB VMEM budget; at the scaled config the whole cache fits in one
+  block.  Decode-step wall time under interpret dropped ~5x (see
+  EXPERIMENTS.md §Perf).
+
+Kernels MUST be lowered with interpret=True on this CPU-PJRT testbed —
+real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Cap on the K+V VMEM bytes resident per grid step (TPU budget ~16 MiB;
+# leave generous headroom for q/mask/scores/output tiles).
+_VMEM_CAP_BYTES = 4 * 1024 * 1024
+
+
+def _chunk_rows(bh: int, s: int, dh: int, itemsize: int) -> int:
+    """Largest divisor of `bh` whose K+V tiles fit the VMEM cap."""
+    per_row = 2 * s * dh * itemsize  # K and V
+    max_rows = max(1, _VMEM_CAP_BYTES // per_row)
+    chunk = min(bh, max_rows)
+    while bh % chunk != 0:
+        chunk -= 1
+    return chunk
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale: float):
+    """One grid step = one chunk of (batch·head) rows.
+
+    q_ref: [C, Dh]; k_ref/v_ref: [C, S, Dh]; mask_ref: [C, S]; o_ref: [C, Dh].
+    Numerically-stable softmax, f32 accumulation (MXU-style), cast on store.
+    """
+    q = q_ref[...].astype(jnp.float32)               # [C, Dh]
+    k = k_ref[...].astype(jnp.float32)               # [C, S, Dh]
+    v = v_ref[...].astype(jnp.float32)
+    scores = jnp.einsum("cd,csd->cs", q, k) * scale
+    scores = scores + mask_ref[...].astype(jnp.float32)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    o = jnp.einsum("cs,csd->cd", p, v) / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def fused_decode_attention(q, k_cache, v_cache, mask, *, interpret: bool = True):
+    """softmax(q·Kᵀ/√d + mask)·V in one fused kernel, one token per call.
+
+    Shapes as in `ref.decode_attention_ref`; bit-compatible with it up to
+    f32 rounding (the oracle also accumulates in f32).
+    """
+    b, h, dh = q.shape
+    s = k_cache.shape[2]
+    bh = b * h
+    scale = 1.0 / float(dh) ** 0.5
+    qf = q.reshape(bh, dh)
+    kf = k_cache.reshape(bh, s, dh)
+    vf = v_cache.reshape(bh, s, dh)
+    # Broadcast the per-batch cache mask across heads: [B, S] -> [B*H, S].
+    maskf = jnp.broadcast_to(mask[:, None, :], (b, h, s)).reshape(bh, s)
+    c = _chunk_rows(bh, s, dh, q.dtype.itemsize)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(bh // c,),
+        in_specs=[
+            pl.BlockSpec((c, dh), lambda i: (i, 0)),
+            pl.BlockSpec((c, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((c, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((c, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, dh), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf, maskf)
+    return out.reshape(b, h, dh)
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale: float):
+    """One grid step = one batch element, ALL heads at once.
+
+    q/k/v_ref: [1, H, S, Dh]; mask_ref: [1, S, S]; o_ref: [1, H, S, Dh].
+    The [H, S, S] score tile stays in VMEM (H=8, S=128 f32: 512 KiB),
+    which is exactly the fusion FT does on GPU with shared memory.
+    """
+    q = q_ref[0].astype(jnp.float32)                 # [H, S, Dh]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    scores = scores + mask_ref[...].astype(jnp.float32)  # [1,S,S] broadcasts
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    o = jnp.einsum("hqk,hkd->hqd", p, v) / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def fused_prefill_attention(q, k, v, mask, *, interpret: bool = True):
+    """Full-sequence fused attention for the prefill / baseline graphs.
+
+    Shapes as in `ref.prefill_attention_ref` ([B, H, S, Dh] + [B, S, S]).
+    Grid over batch: the padding/causal mask is per batch element, so one
+    [S, S] mask tile serves all H heads of the step (no H× broadcast
+    materialized in HBM).
+    """
+    b, h, s, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, scale=scale),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s, s), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, mask)
+    return out

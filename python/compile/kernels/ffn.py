@@ -1,0 +1,64 @@
+"""Vertically-fused position-wise FFN Pallas kernel.
+
+The paper's "fine-grained OP vertical fusion" (§3.3) merges chains of ops
+that a naive graph executes as separate kernels.  The FFN block is the
+canonical case: matmul → bias-add → gelu → matmul → bias-add is five
+kernel launches unfused; here it is ONE pallas_call, so the [bn, F]
+hidden activation never leaves VMEM.
+
+Grid/tiling (DESIGN.md §Hardware-Adaptation): rows are tiled in blocks of
+`block_rows`; both weight matrices stay VMEM-resident across the whole
+grid (D=256, F=1024, f32 → W1+W2 = 2 MiB ≪ VMEM).  MXU sees two
+[bn,256]×[256,1024]-class GEMMs per step — well-shaped for the 128×128
+systolic array at the full-size (D=1024, F=4096) config too.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                      # [bn, D]
+    h = x @ w1_ref[...].astype(jnp.float32) + b1_ref[...].astype(jnp.float32)
+    h = jax.nn.gelu(h, approximate=True)                    # [bn, F] in VMEM
+    o = h @ w2_ref[...].astype(jnp.float32) + b2_ref[...].astype(jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def _row_block(n: int, preferred: int = 128) -> int:
+    """Largest divisor of n that is <= preferred (static shapes only)."""
+    bn = min(n, preferred)
+    while n % bn != 0:
+        bn -= 1
+    return bn
+
+
+def fused_ffn(x, w1, b1, w2, b2, *, block_rows: int | None = None,
+              interpret: bool = True):
+    """gelu(x @ w1 + b1) @ w2 + b2 as a single fused kernel.
+
+    x: [N, D]; w1: [D, F]; b1: [F]; w2: [F, D]; b2: [D].
+    Matches `ref.ffn_ref` to f32-accumulation rounding.
+    """
+    n, d = x.shape
+    f = w1.shape[1]
+    bn = block_rows or _row_block(n)
+    assert n % bn == 0, f"block_rows {bn} must divide N={n}"
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            # Weights: same full block every step -> stays resident in VMEM.
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: `python/tests/test_kernels.py`
+asserts `assert_allclose(kernel(...), ref(...))` across a hypothesis sweep
+of shapes and dtypes, and `model.py` can be built entirely from these
+references (`use_pallas=False`) to cross-check the fused graphs.
+
+Everything here is deliberately naive jnp — no pallas, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9  # additive-mask "minus infinity"; finite to stay fp16-safe
+
+
+def decode_attention_ref(q, k_cache, v_cache, mask):
+    """Single-step attention against a KV cache (paper Fig 2).
+
+    q:        [B, H, Dh]   query for the one new token
+    k_cache:  [B, H, S, Dh]
+    v_cache:  [B, H, S, Dh]
+    mask:     [B, S] additive (0 for valid cache slots, NEG_INF beyond the
+              current length) — computed once per step in the L2 graph.
+    returns   [B, H, Dh]
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    # [B, H, S]
+    scores = jnp.einsum("bhd,bhsd->bhs", qf, kf) * scale
+    scores = scores + mask[:, None, :].astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def prefill_attention_ref(q, k, v, mask):
+    """Full-sequence masked attention (prefill / baseline forward).
+
+    q, k, v: [B, H, S, Dh]
+    mask:    [B, S, S] additive (causal + padding, built in L2)
+    returns  [B, H, S, Dh]
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    scores = scores + mask[:, None, :, :].astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """Position-wise FFN: gelu(x @ w1 + b1) @ w2 + b2.
+
+    x: [N, D]; w1: [D, F]; b1: [F]; w2: [F, D]; b2: [D].
+    Accumulation in f32 regardless of input dtype (MXU-style).
+    """
+    xf = x.astype(jnp.float32)
+    h = xf @ w1.astype(jnp.float32) + b1.astype(jnp.float32)
+    h = jax.nn.gelu(h, approximate=True)
+    o = h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+    return o.astype(x.dtype)
+
+
+def add_layernorm_ref(x, residual, gamma, beta, eps: float = 1e-5):
+    """Fused residual-add + LayerNorm (the paper's "vertical fusion").
+
+    x, residual: [N, D]; gamma, beta: [D].
+    """
+    y = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(y - mean), axis=-1, keepdims=True)
+    norm = (y - mean) * jax.lax.rsqrt(var + eps)
+    out = norm * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def build_decode_mask(lengths, seq_len: int):
+    """[B] lengths -> [B, S] additive mask over cache slots.
+
+    Slot s is valid iff s < lengths[b]."""
+    pos = jnp.arange(seq_len)[None, :]
+    return jnp.where(pos < lengths[:, None], 0.0, NEG_INF).astype(jnp.float32)
+
+
+def build_causal_mask(lengths, seq_len: int):
+    """[B] lengths -> [B, S, S] additive causal+padding mask.
+
+    Query q may attend key k iff k <= q and k < lengths[b]."""
+    q = jnp.arange(seq_len)[None, :, None]
+    k = jnp.arange(seq_len)[None, None, :]
+    causal = k <= q
+    valid = k < lengths[:, None, None]
+    return jnp.where(causal & valid, 0.0, NEG_INF).astype(jnp.float32)

@@ -1,0 +1,307 @@
+"""L2: UNIMO-text-style prefix LM — the paper's model, in JAX.
+
+The paper serves UNIMO-text (Ernie family) for text summarization.  We
+adapt it as a decoder-only prefix LM over [BOS, doc…, SEP, summary…, EOS]
+(DESIGN.md §3): generation conditions on the document prefix and emits the
+summary autoregressively, which exercises exactly the prefill/decode split
+Faster Transformer optimizes.
+
+Three lowered graphs per (batch, seq) bucket:
+
+- `baseline_forward` — the naive engine: full-sequence forward, fp32,
+  UNfused reference ops (separate matmul/softmax/add/LN ops, the way a
+  stock graph executor would run it).  The baseline engine in rust calls
+  this once per generated token over the whole growing sequence — the
+  O(T²) recompute the KV cache eliminates.
+- `ft_prefill` — Faster-Transformer-style: one fused pass over the prompt
+  that also RETURNS the KV cache; fp16 activations; Pallas kernels.
+- `ft_decode` — one fused decode step: consumes (token, position, caches),
+  returns (next logits, updated caches).  The caches round-trip through
+  the rust coordinator as opaque literals, so fp16 halves the bytes moved
+  per step (the paper's fp16 memory win, preserved on CPU).
+
+Weight layout is a FLAT TUPLE in `param_spec` order — the same order the
+rust runtime reads from `artifacts/weights_*.bin` (manifest-driven, no
+pickle/numpy on the rust side).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .kernels import (
+    fused_add_layernorm,
+    fused_decode_attention,
+    fused_ffn,
+    fused_prefill_attention,
+)
+from .kernels import ref
+
+# Special token ids shared with rust/src/tokenizer (keep in sync with
+# manifest.json "special_tokens").
+PAD_ID, BOS_ID, EOS_ID, SEP_ID = 0, 1, 2, 3
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the single source of truth for
+    weight ordering across python training, the .bin exporter and rust."""
+    d, f = cfg.d_model, cfg.d_ff
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab_size, d)),
+        ("pos_emb", (cfg.max_position, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+            (p + "wq", (d, d)), (p + "bq", (d,)),
+            (p + "wk", (d, d)), (p + "bk", (d,)),
+            (p + "wv", (d, d)), (p + "bv", (d,)),
+            (p + "wo", (d, d)), (p + "bo", (d,)),
+            (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+        ]
+    spec += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Scaled-normal init (f32 host arrays)."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    for name, shape in param_spec(cfg):
+        if name.endswith(("_g",)):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith(("_b", "bq", "bk", "bv", "bo", "b1", "b2")) or ".b" in name:
+            params[name] = np.zeros(shape, np.float32)
+        elif name in ("tok_emb", "pos_emb"):
+            params[name] = rng.standard_normal(shape).astype(np.float32) * 0.02
+        else:
+            fan_in = shape[0]
+            params[name] = rng.standard_normal(shape).astype(np.float32) * (
+                1.0 / np.sqrt(fan_in)
+            )
+    return params
+
+
+def prune_params(params: Dict[str, np.ndarray], full: ModelConfig,
+                 pruned: ModelConfig) -> Dict[str, np.ndarray]:
+    """Embedding-layer pruning (§3.2): keep the high-frequency vocab prefix
+    and truncate the position table (512→128 in the paper).
+
+    The tokenizer emits frequency-ranked ids, so "high-frequency subset" ==
+    "id prefix" by construction; logits over retained tokens are unchanged.
+    """
+    out = dict(params)
+    out["tok_emb"] = params["tok_emb"][: pruned.vocab_size].copy()
+    out["pos_emb"] = params["pos_emb"][: pruned.max_position].copy()
+    return out
+
+
+def flatten_params(params: Dict[str, np.ndarray], cfg: ModelConfig):
+    return tuple(jnp.asarray(params[name]) for name, _ in param_spec(cfg))
+
+
+def unflatten_params(flat, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    return {name: arr for (name, _), arr in zip(param_spec(cfg), flat)}
+
+
+# --------------------------------------------------------------------------
+# Unfused reference blocks (baseline graph + training)
+# --------------------------------------------------------------------------
+
+def _split_heads(x, n_heads):  # [B,S,D] -> [B,H,S,Dh]
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):  # [B,H,S,Dh] -> [B,S,D]
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _layer_unfused(p: Dict[str, jnp.ndarray], prefix: str, x, mask, n_heads):
+    """One transformer layer, naive op-by-op (pre-LN)."""
+    g = lambda n: p[prefix + n]
+    h = ref.add_layernorm_ref(x, jnp.zeros_like(x), g("ln1_g"), g("ln1_b"))
+    q = _split_heads(h @ g("wq") + g("bq"), n_heads)
+    k = _split_heads(h @ g("wk") + g("bk"), n_heads)
+    v = _split_heads(h @ g("wv") + g("bv"), n_heads)
+    attn = _merge_heads(ref.prefill_attention_ref(q, k, v, mask))
+    x = x + attn @ g("wo") + g("bo")
+    h = ref.add_layernorm_ref(x, jnp.zeros_like(x), g("ln2_g"), g("ln2_b"))
+    b2, s2, d2 = h.shape
+    ff = ref.ffn_ref(h.reshape(b2 * s2, d2), g("w1"), g("b1"), g("w2"), g("b2"))
+    return x + ff.reshape(b2, s2, d2)
+
+
+def forward_logits_all(flat, token_ids, lengths, cfg: ModelConfig):
+    """Full-sequence forward returning logits at EVERY position [B,S,V].
+
+    Used by training (cross-entropy over summary positions) and by the
+    equivalence tests.  Unfused, f32.
+    """
+    p = unflatten_params(flat, cfg)
+    b, s = token_ids.shape
+    mask = ref.build_causal_mask(lengths, s)
+    pos = jnp.minimum(jnp.arange(s), cfg.max_position - 1)
+    x = p["tok_emb"][token_ids] + p["pos_emb"][pos][None, :, :]
+    for i in range(cfg.n_layers):
+        x = _layer_unfused(p, f"layer{i}.", x, mask, cfg.n_heads)
+    x = ref.add_layernorm_ref(x, jnp.zeros_like(x), p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T  # tied embedding -> [B,S,V]
+
+
+def baseline_forward(flat, token_ids, lengths, cfg: ModelConfig):
+    """The naive serving graph: next-token logits [B,V] at position
+    lengths-1, recomputed over the whole padded sequence each call."""
+    logits = forward_logits_all(flat, token_ids, lengths, cfg)
+    idx = jnp.clip(lengths - 1, 0, token_ids.shape[1] - 1)
+    return (jnp.take_along_axis(
+        logits, idx[:, None, None], axis=1
+    ).squeeze(1),)
+
+
+# --------------------------------------------------------------------------
+# Fused Faster-Transformer-style graphs
+# --------------------------------------------------------------------------
+
+def _cast(x, dtype_str):
+    return x.astype({"f32": jnp.float32, "bf16": jnp.bfloat16,
+                     "f16": jnp.float16}[dtype_str])
+
+
+def _layer_fused(p, prefix, x, mask, cfg: ModelConfig, interpret=True):
+    """One fused layer for prefill: Pallas attention + fused LN + fused FFN.
+
+    Also returns this layer's [B,H,S,Dh] K and V for the cache.
+    """
+    g = lambda n: _cast(p[prefix + n], cfg.dtype)
+    b, s, d = x.shape
+    zeros = jnp.zeros_like(x.reshape(b * s, d))
+    h = fused_add_layernorm(x.reshape(b * s, d), zeros, g("ln1_g"), g("ln1_b"),
+                            interpret=interpret).reshape(b, s, d)
+    q = _split_heads(h @ g("wq") + g("bq"), cfg.n_heads)
+    k = _split_heads(h @ g("wk") + g("bk"), cfg.n_heads)
+    v = _split_heads(h @ g("wv") + g("bv"), cfg.n_heads)
+    attn = _merge_heads(fused_prefill_attention(q, k, v, mask, interpret=interpret))
+    x = x + attn @ g("wo") + g("bo")
+    h2 = fused_add_layernorm(x.reshape(b * s, d), zeros, g("ln2_g"), g("ln2_b"),
+                             interpret=interpret).reshape(b, s, d)
+    ff = fused_ffn(h2.reshape(b * s, d), g("w1"), g("b1"), g("w2"), g("b2"),
+                   interpret=interpret)
+    return x + ff.reshape(b, s, d), k, v
+
+
+def ft_prefill(flat, token_ids, lengths, cfg: ModelConfig, interpret=True):
+    """Fused prefill: (next logits [B,V], k_cache, v_cache [L,B,H,S,Dh]).
+
+    Cache dtype == cfg.dtype (fp16 halves the bytes the rust coordinator
+    round-trips per decode step)."""
+    p = unflatten_params(flat, cfg)
+    b, s = token_ids.shape
+    mask = ref.build_causal_mask(lengths, s)
+    pos = jnp.minimum(jnp.arange(s), cfg.max_position - 1)
+    x = _cast(p["tok_emb"][token_ids] + p["pos_emb"][pos][None, :, :], cfg.dtype)
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        x, k, v = _layer_fused(p, f"layer{i}.", x, mask, cfg, interpret)
+        ks.append(k)
+        vs.append(v)
+    xf = x.reshape(b * s, -1)
+    x = fused_add_layernorm(
+        xf, jnp.zeros_like(xf), _cast(p["lnf_g"], cfg.dtype),
+        _cast(p["lnf_b"], cfg.dtype), interpret=interpret
+    ).reshape(b, s, -1)
+    # Only the last valid position feeds generation: gather FIRST, then do a
+    # [B,D]x[D,V] GEMM instead of [B*S,D]x[D,V] (S× less logits work — the
+    # baseline graph deliberately keeps the naive full-sequence GEMM).
+    idx = jnp.clip(lengths - 1, 0, s - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1).squeeze(1)
+    next_logits = (x_last @ _cast(p["tok_emb"], cfg.dtype).T).astype(jnp.float32)
+    k_cache = jnp.stack(ks)  # [L,B,H,S,Dh] in cfg.dtype
+    v_cache = jnp.stack(vs)
+    return next_logits, k_cache, v_cache
+
+
+def _update_cache(cache_l, new, positions):
+    """cache_l: [B,H,S,Dh]; new: [B,H,Dh]; positions: [B] (i32).
+
+    Writes new[b] at cache_l[b, :, positions[b], :] via per-batch
+    dynamic_update_slice (vmap keeps it a single fused scatter in XLA)."""
+
+    def upd(c_bh, n_h, pos):
+        return jax.lax.dynamic_update_slice(c_bh, n_h[:, None, :], (0, pos, 0))
+
+    return jax.vmap(upd)(cache_l, new, positions)
+
+
+def ft_decode(flat, token_ids, positions, k_cache, v_cache, cfg: ModelConfig,
+              interpret=True):
+    """One fused decode step (Fig 2).
+
+    token_ids: [B] i32 (the tokens just emitted); positions: [B] i32 (their
+    absolute positions, == current lengths); caches: [L,B,H,S,Dh].
+    Returns (next logits [B,V] f32, updated k_cache, v_cache).
+    """
+    p = unflatten_params(flat, cfg)
+    l, b, h, s, dh = k_cache.shape
+    pos_clamped = jnp.minimum(positions, cfg.max_position - 1)
+    x = _cast(p["tok_emb"][token_ids] + p["pos_emb"][pos_clamped], cfg.dtype)  # [B,D]
+    # Cache-slot mask: after writing this token, slots [0, positions] valid.
+    mask = ref.build_decode_mask(positions + 1, s)
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        g = lambda n: _cast(p[f"layer{i}." + n], cfg.dtype)
+        hh = fused_add_layernorm(x, jnp.zeros_like(x), g("ln1_g"), g("ln1_b"),
+                                 interpret=interpret)
+        q = (hh @ g("wq") + g("bq")).reshape(b, cfg.n_heads, dh)
+        k = (hh @ g("wk") + g("bk")).reshape(b, cfg.n_heads, dh)
+        v = (hh @ g("wv") + g("bv")).reshape(b, cfg.n_heads, dh)
+        k_l = _update_cache(k_cache[i], k, positions)
+        v_l = _update_cache(v_cache[i], v, positions)
+        new_k.append(k_l)
+        new_v.append(v_l)
+        attn = fused_decode_attention(q, k_l, v_l, mask, interpret=interpret)
+        x = x + attn.reshape(b, -1) @ g("wo") + g("bo")
+        h2 = fused_add_layernorm(x, jnp.zeros_like(x), g("ln2_g"), g("ln2_b"),
+                                 interpret=interpret)
+        x = x + fused_ffn(h2, g("w1"), g("b1"), g("w2"), g("b2"),
+                          interpret=interpret)
+    x = fused_add_layernorm(x, jnp.zeros_like(x), _cast(p["lnf_g"], cfg.dtype),
+                            _cast(p["lnf_b"], cfg.dtype), interpret=interpret)
+    logits = (x @ _cast(p["tok_emb"], cfg.dtype).T).astype(jnp.float32)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def ft_decode_multi(flat, token_ids, positions, k_cache, v_cache,
+                    cfg: ModelConfig, steps: int, interpret=True):
+    """`steps` greedy decode steps fused into ONE executable via lax.scan.
+
+    Perf-pass artifact (EXPERIMENTS.md §Perf): amortizes the rust↔PJRT
+    cache round-trip over `steps` tokens.  Greedy sampling runs inside the
+    graph; rust still applies stop conditions on the returned tokens.
+    Returns (tokens [B,steps] i32, k_cache, v_cache).
+    """
+
+    def body(carry, _):
+        tok, pos, kc, vc = carry
+        logits, kc, vc = ft_decode(flat, tok, pos, kc, vc, cfg, interpret)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, pos + 1, kc, vc), nxt
+
+    (_, _, kc, vc), toks = jax.lax.scan(
+        body, (token_ids, positions, k_cache, v_cache), None, length=steps
+    )
+    return jnp.transpose(toks), kc, vc  # [B,steps]

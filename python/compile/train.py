@@ -1,0 +1,82 @@
+"""Build-time mini-training so the served model is *real*, not noise.
+
+The paper optimizes inference of an already-trained UNIMO model; we have
+no Baidu checkpoint, so `aot.py` first trains the scaled model on the
+synthetic extractive-summarization corpus (corpus.py) for a few hundred
+Adam steps.  The model genuinely learns the copy-after-SEP task, which
+lets the E2E example measure summary-token accuracy across engine
+variants and verify that fp16 + pruning "maintain performance" (§4).
+
+The loss curve is written to artifacts/train_loss.json (EXPERIMENTS.md
+§E2E reproduces it).
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as C
+from . import model as M
+from .config import ModelConfig
+
+
+def loss_fn(flat, toks, lens, mask, cfg: ModelConfig):
+    """Masked next-token cross-entropy (mask marks summary positions)."""
+    logits = M.forward_logits_all(flat, toks, lens, cfg)  # [B,S,V]
+    targets = jnp.roll(toks, -1, axis=1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).squeeze(-1)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def adam_step(flat, m, v, t, toks, lens, mask, cfg: ModelConfig, lr: float):
+    """One hand-rolled Adam step (no optax in this image)."""
+    loss, grads = jax.value_and_grad(loss_fn)(flat, toks, lens, mask, cfg)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = tuple(b1 * mi + (1 - b1) * gi for mi, gi in zip(m, grads))
+    v = tuple(b2 * vi + (1 - b2) * gi * gi for vi, gi in zip(v, grads))
+    mhat = tuple(mi / (1 - b1**t) for mi in m)
+    vhat = tuple(vi / (1 - b2**t) for vi in v)
+    flat = tuple(
+        fi - lr * mh / (jnp.sqrt(vh) + eps)
+        for fi, mh, vh in zip(flat, mhat, vhat)
+    )
+    return flat, m, v, loss
+
+
+def train(cfg: ModelConfig, steps: int, batch: int = 8, seq_len: int = 64,
+          lr: float = 3e-4, seed: int = 0, log_every: int = 10,
+          ) -> tuple[Dict[str, np.ndarray], List[dict]]:
+    """Returns (trained param dict, loss log)."""
+    params = M.init_params(cfg, seed)
+    flat = M.flatten_params(params, cfg)
+    m = tuple(jnp.zeros_like(x) for x in flat)
+    v = tuple(jnp.zeros_like(x) for x in flat)
+    rng = np.random.default_rng(seed + 1)
+    ccfg = C.CorpusConfig(vocab_size=cfg.vocab_size)
+    probs = C.zipf_probs(ccfg)
+    log: List[dict] = []
+    for t in range(1, steps + 1):
+        toks, lens, mask = C.make_batch(rng, probs, ccfg, batch, seq_len)
+        flat, m, v, loss = adam_step(
+            flat, m, v, t, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(mask), cfg, lr
+        )
+        if t == 1 or t % log_every == 0 or t == steps:
+            entry = {"step": t, "loss": float(loss)}
+            log.append(entry)
+            print(f"  train step {t:4d}  masked-CE {float(loss):.4f}")
+    names = [n for n, _ in M.param_spec(cfg)]
+    return {n: np.asarray(x) for n, x in zip(names, flat)}, log
+
+
+def save_loss_log(log: List[dict], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(log, f, indent=1)

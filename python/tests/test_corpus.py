@@ -1,0 +1,70 @@
+"""Corpus statistics: the synthetic substitute must reproduce the two
+distributions the paper's optimizations exploit (DESIGN.md §3)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus as C
+from compile.model import BOS_ID, EOS_ID, PAD_ID, SEP_ID
+
+CFG = C.CorpusConfig(vocab_size=2000)
+
+
+def test_zipf_prefix_covers_most_mass():
+    """Embedding pruning is sound iff a high-frequency prefix covers almost
+    all token mass (paper: 12800 -> high-frequency subset)."""
+    p = C.zipf_probs(CFG)
+    half = p[: len(p) // 2].sum()
+    # alpha=1.1 gives ~94% mass in the top half; the residual tail is
+    # exactly what the tokenizer's syllable-piece fallback re-segments
+    # after pruning (rust/src/tokenizer), so >0.9 is the soundness bar.
+    assert half > 0.9, f"top-half coverage only {half:.3f}"
+
+
+def test_length_distribution_matches_fig3_shape():
+    """Fig 3: typical inputs < 100 tokens, tail exists but is thin."""
+    rng = np.random.default_rng(0)
+    lens = np.array([C.sample_doc_len(rng, CFG) for _ in range(4000)])
+    assert (lens < 100).mean() > 0.9
+    assert lens.max() > 100  # the tail the 512-entry table was sized for
+    assert lens.min() >= CFG.min_doc_len
+    assert lens.max() <= CFG.max_doc_len
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_pack_example_layout(seed):
+    rng = np.random.default_rng(seed)
+    probs = C.zipf_probs(CFG)
+    doc = C.sample_doc(rng, probs, CFG)[:20]
+    summ = C.summary_of(doc, CFG)
+    seq_len = 32
+    toks, length, mask = C.pack_example(doc, summ, seq_len)
+    assert toks[0] == BOS_ID
+    assert toks[1 + len(doc)] == SEP_ID
+    assert int(length) == min(len(doc) + len(summ) + 3, seq_len)
+    if int(length) < seq_len:
+        assert toks[int(length):].max(initial=PAD_ID) == PAD_ID
+        assert toks[int(length) - 1] == EOS_ID
+    # mask is exactly the positions predicting summary tokens + EOS
+    assert mask.sum() == max(0, int(length) - 1 - (1 + len(doc)))
+
+
+def test_summary_is_extractive_prefix():
+    rng = np.random.default_rng(1)
+    probs = C.zipf_probs(CFG)
+    doc = C.sample_doc(rng, probs, CFG)
+    summ = C.summary_of(doc, CFG)
+    np.testing.assert_array_equal(summ, doc[: len(summ)])
+    assert 1 <= len(summ) <= max(1, int(round(len(doc) * 0.2)))
+
+
+def test_make_batch_fits_bucket():
+    rng = np.random.default_rng(2)
+    probs = C.zipf_probs(CFG)
+    toks, lens, masks = C.make_batch(rng, probs, CFG, batch=16, seq_len=64)
+    assert toks.shape == (16, 64)
+    assert (lens <= 64).all() and (lens >= 5).all()
+    assert masks.shape == (16, 64)
+    # every row has at least one trainable position
+    assert (masks.sum(1) >= 1).all()

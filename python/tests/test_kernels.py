@@ -1,0 +1,219 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; the oracles in `compile.kernels.ref`
+are the ground truth.  Tolerances: f32 kernels accumulate in f32 like the
+oracle (tight); bf16/f16 inputs round at the 2-byte boundary (loose).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fused_add_layernorm,
+    fused_decode_attention,
+    fused_ffn,
+    fused_prefill_attention,
+    ref,
+)
+
+DTYPES = {
+    "f32": (jnp.float32, 1e-5, 1e-5),
+    "bf16": (jnp.bfloat16, 4e-2, 4e-2),
+    "f16": (jnp.float16, 1e-2, 1e-2),
+}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32)).astype(dtype)
+
+
+def _close(a, b, rtol, atol):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32),
+        rtol=rtol, atol=atol,
+    )
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    s=st.sampled_from([4, 16, 33]),
+    dh=st.sampled_from([4, 8, 32]),
+    dt=st.sampled_from(sorted(DTYPES)),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attention_matches_ref(b, h, s, dh, dt, seed):
+    dtype, rtol, atol = DTYPES[dt]
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, dh), dtype)
+    k = _rand(rng, (b, h, s, dh), dtype)
+    v = _rand(rng, (b, h, s, dh), dtype)
+    lens = jnp.asarray(rng.integers(1, s + 1, b), jnp.int32)
+    mask = ref.build_decode_mask(lens, s)
+    _close(
+        fused_decode_attention(q, k, v, mask),
+        ref.decode_attention_ref(q, k, v, mask), rtol, atol,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s=st.sampled_from([4, 16, 24]),
+    dh=st.sampled_from([4, 16]),
+    dt=st.sampled_from(sorted(DTYPES)),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_attention_matches_ref(b, h, s, dh, dt, seed):
+    dtype, rtol, atol = DTYPES[dt]
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, s, dh), dtype)
+    k = _rand(rng, (b, h, s, dh), dtype)
+    v = _rand(rng, (b, h, s, dh), dtype)
+    lens = jnp.asarray(rng.integers(1, s + 1, b), jnp.int32)
+    mask = ref.build_causal_mask(lens, s)
+    _close(
+        fused_prefill_attention(q, k, v, mask),
+        ref.prefill_attention_ref(q, k, v, mask), rtol, atol,
+    )
+
+
+def test_decode_attention_ignores_masked_slots():
+    """Garbage beyond the current length must not leak into the output."""
+    rng = np.random.default_rng(0)
+    b, h, s, dh = 2, 2, 8, 4
+    q = _rand(rng, (b, h, dh), jnp.float32)
+    k = _rand(rng, (b, h, s, dh), jnp.float32)
+    v = _rand(rng, (b, h, s, dh), jnp.float32)
+    lens = jnp.array([3, 5], jnp.int32)
+    mask = ref.build_decode_mask(lens, s)
+    out1 = fused_decode_attention(q, k, v, mask)
+    # Poison the masked tail.
+    k2 = k.at[:, :, 5:, :].set(1e4)
+    v2 = v.at[:, :, 5:, :].set(-1e4)
+    k2 = k2.at[0, :, 3:, :].set(7e3)
+    v2 = v2.at[0, :, 3:, :].set(-7e3)
+    out2 = fused_decode_attention(q, k2, v2, mask)
+    _close(out1, out2, 1e-6, 1e-6)
+
+
+def test_prefill_attention_is_causal():
+    """Changing future tokens must not change past outputs."""
+    rng = np.random.default_rng(1)
+    b, h, s, dh = 1, 2, 8, 4
+    q = _rand(rng, (b, h, s, dh), jnp.float32)
+    k = _rand(rng, (b, h, s, dh), jnp.float32)
+    v = _rand(rng, (b, h, s, dh), jnp.float32)
+    lens = jnp.array([s], jnp.int32)
+    mask = ref.build_causal_mask(lens, s)
+    out1 = fused_prefill_attention(q, k, v, mask)
+    k2 = k.at[:, :, 6:, :].add(3.0)
+    v2 = v.at[:, :, 6:, :].add(-3.0)
+    out2 = fused_prefill_attention(q, k2, v2, mask)
+    _close(out1[:, :, :6], out2[:, :, :6], 1e-6, 1e-6)
+
+
+def test_decode_attention_softmax_normalized():
+    """With identical V rows, output must equal that row exactly
+    (softmax weights sum to one regardless of masking)."""
+    b, h, s, dh = 1, 1, 8, 4
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (b, h, dh), jnp.float32)
+    k = _rand(rng, (b, h, s, dh), jnp.float32)
+    row = rng.standard_normal(dh).astype(np.float32)
+    v = jnp.broadcast_to(jnp.asarray(row), (b, h, s, dh))
+    mask = ref.build_decode_mask(jnp.array([5], jnp.int32), s)
+    out = fused_decode_attention(q, k, v, mask)
+    _close(out[0, 0], row, 1e-5, 1e-5)
+
+
+# ---------------------------------------------------------------------- ffn
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([1, 3, 8, 130]),
+    d=st.sampled_from([8, 32]),
+    f=st.sampled_from([16, 64]),
+    dt=st.sampled_from(sorted(DTYPES)),
+    seed=st.integers(0, 2**16),
+)
+def test_ffn_matches_ref(n, d, f, dt, seed):
+    dtype, rtol, atol = DTYPES[dt]
+    rtol, atol = rtol * 10, atol * 10  # two chained GEMMs
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, d), dtype)
+    w1 = _rand(rng, (d, f), dtype)
+    b1 = _rand(rng, (f,), dtype)
+    w2 = _rand(rng, (f, d), dtype)
+    b2 = _rand(rng, (d,), dtype)
+    _close(fused_ffn(x, w1, b1, w2, b2), ref.ffn_ref(x, w1, b1, w2, b2),
+           rtol, atol)
+
+
+def test_ffn_block_rows_partition_is_invisible():
+    """Different row-tilings must give identical results."""
+    rng = np.random.default_rng(3)
+    n, d, f = 12, 8, 16
+    x = _rand(rng, (n, d), jnp.float32)
+    w1, b1 = _rand(rng, (d, f), jnp.float32), _rand(rng, (f,), jnp.float32)
+    w2, b2 = _rand(rng, (f, d), jnp.float32), _rand(rng, (d,), jnp.float32)
+    full = fused_ffn(x, w1, b1, w2, b2, block_rows=12)
+    for bn in (1, 2, 3, 4, 6):
+        _close(fused_ffn(x, w1, b1, w2, b2, block_rows=bn), full, 1e-6, 1e-6)
+
+
+# ---------------------------------------------------------------- layernorm
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([1, 5, 64]),
+    d=st.sampled_from([8, 33, 256]),
+    dt=st.sampled_from(sorted(DTYPES)),
+    seed=st.integers(0, 2**16),
+)
+def test_add_layernorm_matches_ref(n, d, dt, seed):
+    dtype, rtol, atol = DTYPES[dt]
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, d), dtype)
+    r = _rand(rng, (n, d), dtype)
+    g = _rand(rng, (d,), dtype)
+    b = _rand(rng, (d,), dtype)
+    _close(fused_add_layernorm(x, r, g, b),
+           ref.add_layernorm_ref(x, r, g, b), rtol, atol)
+
+
+def test_add_layernorm_output_is_normalized():
+    """gamma=1, beta=0 => per-row mean 0, var 1."""
+    rng = np.random.default_rng(4)
+    x = _rand(rng, (7, 64), jnp.float32)
+    r = _rand(rng, (7, 64), jnp.float32)
+    out = np.asarray(fused_add_layernorm(
+        x, r, jnp.ones(64), jnp.zeros(64)))
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.var(-1), 1.0, atol=1e-3)
+
+
+# ------------------------------------------------------------------- masks
+
+@given(s=st.integers(1, 40), seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_decode_mask_marks_exactly_valid_slots(s, seed):
+    rng = np.random.default_rng(seed)
+    lens = jnp.asarray(rng.integers(0, s + 1, 3), jnp.int32)
+    m = np.asarray(ref.build_decode_mask(lens, s))
+    for b in range(3):
+        valid = (m[b] == 0.0).sum()
+        assert valid == int(lens[b])
+
+
+def test_causal_mask_diagonal_valid():
+    m = np.asarray(ref.build_causal_mask(jnp.array([5], jnp.int32), 8))
+    for qpos in range(5):
+        assert m[0, qpos, qpos] == 0.0  # self-attention always allowed
+    assert (m[0, :, 5:] < -1e8).all()  # padding never attended

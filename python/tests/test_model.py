@@ -1,0 +1,152 @@
+"""L2 correctness: the fused FT graphs are numerically equivalent to the
+naive baseline graph — i.e. the paper's optimizations change SPEED, not
+answers (§4 "maintaining high levels of performance")."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import ModelConfig
+
+CFG = ModelConfig(vocab_size=96, max_position=32, d_model=32, n_layers=2,
+                  n_heads=4, d_ff=64, dtype="f32")
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return M.flatten_params(M.init_params(CFG, 7), CFG)
+
+
+def _toks(rng, b, s, lens):
+    t = rng.integers(4, CFG.vocab_size, (b, s)).astype(np.int32)
+    for i, l in enumerate(lens):
+        t[i, l:] = 0
+    return jnp.asarray(t)
+
+
+def test_prefill_matches_baseline(flat):
+    rng = np.random.default_rng(0)
+    lens = np.array([9, 16], np.int32)
+    toks = _toks(rng, 2, 16, lens)
+    base = M.baseline_forward(flat, toks, jnp.asarray(lens), CFG)[0]
+    ft, k, v = M.ft_prefill(flat, toks, jnp.asarray(lens), CFG)
+    np.testing.assert_allclose(base, ft, rtol=3e-4, atol=3e-4)
+    assert k.shape == (2, 2, 4, 16, 8)
+    assert v.dtype == jnp.float32
+
+
+def test_decode_chain_matches_full_forward(flat):
+    """Prefill + N single decode steps == one full forward over the final
+    sequence: the KV cache is exact, not approximate (paper Fig 2)."""
+    rng = np.random.default_rng(1)
+    b, s = 2, 24
+    lens = np.array([6, 9], np.int32)
+    toks = _toks(rng, b, s, lens)
+    logits, k, v = M.ft_prefill(flat, toks, jnp.asarray(lens), CFG)
+    cur = jnp.asarray(lens)
+    toks_np = np.asarray(toks).copy()
+    for _ in range(5):
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(b):
+            toks_np[i, int(cur[i])] = int(nxt[i])
+        logits, k, v = M.ft_decode(flat, nxt, cur, k, v, CFG)
+        cur = cur + 1
+    base = M.baseline_forward(
+        flat, jnp.asarray(toks_np), cur, CFG)[0]
+    np.testing.assert_allclose(base, logits, rtol=2e-3, atol=2e-3)
+
+
+def test_decode_multi_matches_single_steps(flat):
+    """The fused multi-step (scan) graph produces the same greedy tokens
+    as repeated single-step decode."""
+    rng = np.random.default_rng(2)
+    b, s = 2, 24
+    lens = np.array([5, 11], np.int32)
+    toks = _toks(rng, b, s, lens)
+    logits, k, v = M.ft_prefill(flat, toks, jnp.asarray(lens), CFG)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # single-step chain
+    cur = jnp.asarray(lens)
+    tok, kk, vv = first, k, v
+    singles = []
+    for _ in range(4):
+        lg, kk, vv = M.ft_decode(flat, tok, cur, kk, vv, CFG)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        singles.append(np.asarray(tok))
+        cur = cur + 1
+
+    multi, _, _ = M.ft_decode_multi(flat, first, jnp.asarray(lens), k, v,
+                                    CFG, steps=4)
+    np.testing.assert_array_equal(np.stack(singles, 1), np.asarray(multi))
+
+
+def test_fp16_variant_stays_close(flat):
+    """fp16 ("half-precision inference", §3.2) must not change the argmax
+    on a trained-scale model and stays within loose logit tolerance."""
+    rng = np.random.default_rng(3)
+    lens = np.array([8, 13], np.int32)
+    toks = _toks(rng, 2, 16, lens)
+    f32, _, _ = M.ft_prefill(flat, toks, jnp.asarray(lens), CFG)
+    cfg16 = CFG.with_dtype("f16")
+    f16, k16, _ = M.ft_prefill(flat, toks, jnp.asarray(lens), cfg16)
+    assert k16.dtype == jnp.float16
+    np.testing.assert_allclose(f32, f16, rtol=0.1, atol=0.1)
+
+
+def test_pruned_params_match_on_retained_vocab(flat):
+    """Pruning only REMOVES rows: logits over the retained vocabulary are
+    bit-identical when inputs stay within the pruned tables (§3.2)."""
+    pruned_cfg = CFG.pruned(vocab_size=64, max_position=16)
+    params = M.init_params(CFG, 7)
+    pruned = M.prune_params(params, CFG, pruned_cfg)
+    pflat = M.flatten_params(pruned, pruned_cfg)
+
+    rng = np.random.default_rng(4)
+    lens = np.array([7, 12], np.int32)
+    s = 16  # <= pruned max_position
+    t = rng.integers(4, 64, (2, s)).astype(np.int32)  # within pruned vocab
+    for i, l in enumerate(lens):
+        t[i, l:] = 0
+    toks = jnp.asarray(t)
+
+    full_logits, _, _ = M.ft_prefill(flat, toks, jnp.asarray(lens), CFG)
+    pr_logits, _, _ = M.ft_prefill(pflat, toks, jnp.asarray(lens), pruned_cfg)
+    np.testing.assert_allclose(full_logits[:, :64], pr_logits,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cache_positions_beyond_length_are_irrelevant(flat):
+    """Poisoning cache slots beyond the current position must not change
+    decode output (the mask invariant end-to-end through the model)."""
+    rng = np.random.default_rng(5)
+    lens = np.array([6, 6], np.int32)
+    toks = _toks(rng, 2, 16, lens)
+    logits, k, v = M.ft_prefill(flat, toks, jnp.asarray(lens), CFG)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    out1, _, _ = M.ft_decode(flat, nxt, jnp.asarray(lens), k, v, CFG)
+    k2 = k.at[:, :, :, 10:, :].set(1e3)
+    v2 = v.at[:, :, :, 10:, :].set(-1e3)
+    out2, _, _ = M.ft_decode(flat, nxt, jnp.asarray(lens), k2, v2, CFG)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_param_spec_roundtrip():
+    spec = M.param_spec(CFG)
+    names = [n for n, _ in spec]
+    assert len(names) == len(set(names))
+    params = M.init_params(CFG, 0)
+    flat = M.flatten_params(params, CFG)
+    rt = M.unflatten_params(flat, CFG)
+    for n, sh in spec:
+        assert tuple(rt[n].shape) == tuple(sh)
+
+
+def test_prune_params_shapes():
+    pruned_cfg = CFG.pruned(vocab_size=48, max_position=8)
+    pruned = M.prune_params(M.init_params(CFG, 0), CFG, pruned_cfg)
+    assert pruned["tok_emb"].shape == (48, 32)
+    assert pruned["pos_emb"].shape == (8, 32)
+    # non-embedding weights untouched
+    assert pruned["layer0.wq"].shape == (32, 32)

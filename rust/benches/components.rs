@@ -1,0 +1,127 @@
+//! BENCH C — microbenchmarks of the L3 substrates, including the
+//! Faster-Tokenizer comparison (§2.3): trie fast path vs textbook
+//! WordPiece, plus batcher / JSON / RNG / histogram hot paths.
+
+use std::time::Instant;
+
+use aigc_infer::config::BatchPolicy;
+use aigc_infer::coordinator::{DynamicBatcher, PreparedRequest};
+use aigc_infer::data::{CorpusConfig, Generator, ZipfSampler};
+use aigc_infer::metrics::Histogram;
+use aigc_infer::tokenizer::{Encode, FastTokenizer, SlowTokenizer, Vocab};
+use aigc_infer::util::bench::{self, Sample};
+use aigc_infer::util::rng::Rng;
+
+fn main() {
+    let mut samples: Vec<Sample> = Vec::new();
+
+    // corpus of text to tokenize
+    let mut gen = Generator::new(CorpusConfig::default(), 0);
+    let docs: Vec<String> =
+        (0..200).map(|_| gen.generate().text).collect();
+    let total_tokens: u64 =
+        docs.iter().map(|d| d.split(' ').count() as u64).sum();
+
+    let vocab = Vocab::synthetic(8000);
+    let slow = SlowTokenizer::new(vocab.clone());
+    let fast = FastTokenizer::new(vocab.clone());
+
+    // --- Faster Tokenizer ablation --------------------------------------
+    let (s, slow_tps) = bench::time_units("tokenizer: slow wordpiece", 1, 5, || {
+        let mut n = 0u64;
+        for d in &docs {
+            n += slow.encode(d, 8000).len() as u64;
+        }
+        n
+    });
+    samples.push(s);
+    let (s, fast_tps) = bench::time_units("tokenizer: fast trie (LinMaxMatch)", 1, 5, || {
+        let mut n = 0u64;
+        for d in &docs {
+            n += fast.encode(d, 8000).len() as u64;
+        }
+        n
+    });
+    samples.push(s);
+    // pruned-vocab re-segmentation path
+    let (s, _) = bench::time_units("tokenizer: fast, pruned max_id=4000", 1, 5, || {
+        let mut n = 0u64;
+        for d in &docs {
+            n += fast.encode(d, 4000).len() as u64;
+        }
+        n
+    });
+    samples.push(s);
+
+    // --- batcher ---------------------------------------------------------
+    let policy = BatchPolicy { max_batch: 8, max_wait_ms: 0, length_bucketing: true };
+    samples.push(bench::time("batcher: push+pop 1000 reqs", 1, 10, || {
+        let mut b = DynamicBatcher::new(policy.clone(), vec![32, 64, 128]);
+        for i in 0..1000u64 {
+            b.push(PreparedRequest {
+                id: i,
+                prompt: vec![5; (i % 100) as usize + 1],
+                max_new_tokens: 12,
+                reference_summary: None,
+                enqueued: Instant::now(),
+            });
+            while b.pop(false).is_some() {}
+        }
+        while b.pop(true).is_some() {}
+    }));
+
+    // --- zipf / rng -------------------------------------------------------
+    let zipf = ZipfSampler::new(8000, 1.1);
+    samples.push(bench::time("zipf: 100k samples", 1, 5, || {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut acc = 0usize;
+        for _ in 0..100_000 {
+            acc += zipf.sample(&mut rng);
+        }
+        std::hint::black_box(acc);
+    }));
+
+    // --- json (wire protocol + manifest path) ----------------------------
+    let manifest_text =
+        std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = &manifest_text {
+        let mb = text.len() as f64 / 1e6;
+        let s = bench::time("json: parse manifest.json", 1, 5, || {
+            std::hint::black_box(
+                aigc_infer::util::json::parse(text).unwrap(),
+            );
+        });
+        eprintln!(
+            "  (manifest is {mb:.2} MB -> {:.1} MB/s)",
+            mb / s.mean.as_secs_f64()
+        );
+        samples.push(s);
+    }
+    let line = r#"{"id": 7, "text": "ba gedu seky mano", "max_new_tokens": 16}"#;
+    samples.push(bench::time("json: parse 10k request lines", 1, 5, || {
+        for _ in 0..10_000 {
+            std::hint::black_box(
+                aigc_infer::server::parse_request_line(line).unwrap(),
+            );
+        }
+    }));
+
+    // --- metrics ----------------------------------------------------------
+    samples.push(bench::time("histogram: 100k records", 1, 5, || {
+        let mut h = Histogram::new();
+        for i in 0..100_000u64 {
+            h.record(std::time::Duration::from_micros(i % 10_000 + 1));
+        }
+        std::hint::black_box(h.quantile(0.99));
+    }));
+
+    bench::print_table("component microbenchmarks", &samples);
+    println!(
+        "\nFaster Tokenizer speedup (fast/slow): {:.2}x  \
+         ({:.1}M vs {:.1}M tokens/s over {} tokens)",
+        fast_tps / slow_tps.max(1e-9),
+        fast_tps / 1e6,
+        slow_tps / 1e6,
+        total_tokens
+    );
+}

@@ -1,0 +1,63 @@
+//! BENCH T1 — regenerates paper Table 1 (the headline ablation ladder).
+//!
+//! Paper (A100-class GPU, 24L UNIMO, Baidu commercial data):
+//!   1 Baseline                           16.11 samples/s
+//!   2 + Fast transformer                 98.46  (6.11x)
+//!   3 + embedding layer pruning         125.32  (7.78x)
+//!   4 + multi-process parallel          144.45  (8.96x)
+//!
+//! Here: scaled model on CPU PJRT — absolute speeds differ; the target is
+//! the ladder SHAPE (each step helps; step 2 dominates; see
+//! EXPERIMENTS.md).  Env: BENCH_N (requests, default 32).
+
+use aigc_infer::config::{EngineKind, ServingConfig};
+use aigc_infer::data::{TraceConfig, TraceGenerator};
+use aigc_infer::metrics::{LadderRow, Report};
+use aigc_infer::pipeline;
+
+fn main() {
+    let n: usize = std::env::var("BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    let max_new = 12usize;
+    let steps: [(usize, &str, EngineKind, bool); 4] = [
+        (1, "Baseline", EngineKind::Baseline, false),
+        (2, "Fast transformer", EngineKind::FtFull, false),
+        (3, "embedding layer pruning", EngineKind::FtPruned, false),
+        (4, "multi-process parallel processing", EngineKind::FtPruned, true),
+    ];
+
+    let mut report = Report::default();
+    for (step, name, engine, pipelined) in steps {
+        let mut cfg = ServingConfig::default();
+        cfg.engine = engine;
+        cfg.pipelined = pipelined;
+        cfg.gen.max_new_tokens = max_new;
+        cfg.precompile = true; // startup compile, outside the measured window
+        let mut trace = TraceGenerator::new(
+            TraceConfig { max_new_tokens: max_new, ..Default::default() },
+            0,
+        );
+        let requests = trace.take(n);
+        let s = pipeline::run(&cfg, &requests).expect("run");
+        eprintln!(
+            "  step {step}: {:>8.2} samples/s  ({})",
+            s.samples_per_sec, name
+        );
+        report.push(LadderRow {
+            step,
+            method: name.to_string(),
+            speed: s.samples_per_sec,
+            latency_ms: s.latency.mean().as_secs_f64() * 1e3,
+            accuracy: s.mean_accuracy,
+        });
+    }
+    println!("\n# Table 1 (reproduced; {n} requests, max_new={max_new})\n");
+    println!("{}", report.render());
+    let base = report.rows[0].speed.max(1e-9);
+    println!(
+        "total speedup: {:.2}x (paper: 8.96x on GPU testbed)",
+        report.rows.last().unwrap().speed / base
+    );
+}

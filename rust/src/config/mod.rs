@@ -1,0 +1,322 @@
+//! Serving-side configuration: which engine variant, batching policy,
+//! pipeline mode, workload shape.  Loaded from JSON (`configs/*.json`)
+//! via the in-crate parser, or built programmatically by the benches.
+
+use std::path::Path;
+
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+/// Which engine serves the batch — the paper's Table 1 ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Row 1: naive fp32 full-recompute decode.
+    Baseline,
+    /// Row 2: + Faster Transformer (fused kernels, fp16, KV cache).
+    FtFull,
+    /// Row 3: + embedding-layer pruning (vocab & position trim).
+    FtPruned,
+}
+
+impl EngineKind {
+    /// The manifest variant string this engine loads.
+    pub fn variant(self) -> &'static str {
+        match self {
+            EngineKind::Baseline => "baseline",
+            EngineKind::FtFull => "full",
+            EngineKind::FtPruned => "pruned",
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineKind::Baseline => "baseline",
+            EngineKind::FtFull => "ft_full",
+            EngineKind::FtPruned => "ft_pruned",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "baseline" => Ok(EngineKind::Baseline),
+            "ft_full" | "full" => Ok(EngineKind::FtFull),
+            "ft_pruned" | "pruned" => Ok(EngineKind::FtPruned),
+            _ => Err(Error::Other(format!(
+                "unknown engine '{s}' (baseline|ft_full|ft_pruned)"
+            ))),
+        }
+    }
+}
+
+/// Token sampling policy (applied in rust, on returned logits).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// Deterministic argmax.  Enables the fused multi-step decode graph.
+    Greedy,
+    /// Top-k sampling with temperature (single-step decode only).
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+impl Default for Sampling {
+    fn default() -> Self {
+        Sampling::Greedy
+    }
+}
+
+/// Dynamic batcher policy (§2.3 "dynamic batch size", §1 "allocation of
+/// data inference order").
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Hard cap on requests per batch (must be <= the largest compiled
+    /// batch bucket).
+    pub max_batch: usize,
+    /// Flush an incomplete batch after this many milliseconds.
+    pub max_wait_ms: u64,
+    /// Group requests by length bucket before batching (vs. FIFO).
+    pub length_bucketing: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait_ms: 20, length_bucketing: true }
+    }
+}
+
+/// Generation limits for a serving run.
+#[derive(Debug, Clone, Copy)]
+pub struct GenConfig {
+    /// Upper bound on generated tokens per request (on top of EOS).
+    pub max_new_tokens: usize,
+    /// Use the fused multi-step decode executable when sampling is greedy.
+    pub use_multi_step: bool,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        Self { max_new_tokens: 16, use_multi_step: true }
+    }
+}
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Directory holding manifest.json + *.hlo.txt + weights.
+    pub artifacts_dir: String,
+    pub engine: EngineKind,
+    pub sampling: Sampling,
+    pub batch: BatchPolicy,
+    pub gen: GenConfig,
+    /// Run the 4-stage parallel pipeline (paper §3.3 Fig 4) instead of the
+    /// sequential reference executor.
+    pub pipelined: bool,
+    /// Bounded channel capacity between pipeline stages (backpressure).
+    pub stage_queue: usize,
+    /// Compile every artifact of the engine's variant at startup (clean
+    /// steady-state latency numbers; default false = lazy compile on
+    /// first use per bucket).
+    pub precompile: bool,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            engine: EngineKind::FtPruned,
+            sampling: Sampling::Greedy,
+            batch: BatchPolicy::default(),
+            gen: GenConfig::default(),
+            pipelined: true,
+            stage_queue: 4,
+            precompile: false,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Parse a JSON config file (schema = this struct; all keys optional,
+    /// falling back to defaults).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = Self::from_json(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let mut cfg = Self::default();
+        if let Some(s) = v.get("artifacts_dir").as_str() {
+            cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = v.get("engine").as_str() {
+            cfg.engine = EngineKind::parse(s)?;
+        }
+        let sampling = v.get("sampling");
+        if let Some(kind) = sampling.get("kind").as_str() {
+            cfg.sampling = match kind {
+                "greedy" => Sampling::Greedy,
+                "top_k" => Sampling::TopK {
+                    k: sampling.get("k").as_usize().unwrap_or(8),
+                    temperature: sampling
+                        .get("temperature")
+                        .as_f64()
+                        .unwrap_or(1.0) as f32,
+                    seed: sampling.get("seed").as_u64().unwrap_or(0),
+                },
+                other => {
+                    return Err(Error::Other(format!(
+                        "unknown sampling kind '{other}'"
+                    )))
+                }
+            };
+        }
+        let b = v.get("batch");
+        if !b.is_null() {
+            if let Some(n) = b.get("max_batch").as_usize() {
+                cfg.batch.max_batch = n;
+            }
+            if let Some(n) = b.get("max_wait_ms").as_u64() {
+                cfg.batch.max_wait_ms = n;
+            }
+            if let Some(x) = b.get("length_bucketing").as_bool() {
+                cfg.batch.length_bucketing = x;
+            }
+        }
+        let g = v.get("gen");
+        if !g.is_null() {
+            if let Some(n) = g.get("max_new_tokens").as_usize() {
+                cfg.gen.max_new_tokens = n;
+            }
+            if let Some(x) = g.get("use_multi_step").as_bool() {
+                cfg.gen.use_multi_step = x;
+            }
+        }
+        if let Some(x) = v.get("pipelined").as_bool() {
+            cfg.pipelined = x;
+        }
+        if let Some(n) = v.get("stage_queue").as_usize() {
+            cfg.stage_queue = n;
+        }
+        if let Some(x) = v.get("precompile").as_bool() {
+            cfg.precompile = x;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize (stable key order) — the inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> String {
+        let sampling = match self.sampling {
+            Sampling::Greedy => Value::obj(vec![("kind", Value::str("greedy"))]),
+            Sampling::TopK { k, temperature, seed } => Value::obj(vec![
+                ("kind", Value::str("top_k")),
+                ("k", Value::num(k as f64)),
+                ("temperature", Value::num(temperature as f64)),
+                ("seed", Value::num(seed as f64)),
+            ]),
+        };
+        Value::obj(vec![
+            ("artifacts_dir", Value::str(self.artifacts_dir.clone())),
+            ("engine", Value::str(self.engine.label())),
+            ("sampling", sampling),
+            (
+                "batch",
+                Value::obj(vec![
+                    ("max_batch", Value::num(self.batch.max_batch as f64)),
+                    ("max_wait_ms", Value::num(self.batch.max_wait_ms as f64)),
+                    (
+                        "length_bucketing",
+                        Value::Bool(self.batch.length_bucketing),
+                    ),
+                ]),
+            ),
+            (
+                "gen",
+                Value::obj(vec![
+                    (
+                        "max_new_tokens",
+                        Value::num(self.gen.max_new_tokens as f64),
+                    ),
+                    ("use_multi_step", Value::Bool(self.gen.use_multi_step)),
+                ]),
+            ),
+            ("pipelined", Value::Bool(self.pipelined)),
+            ("stage_queue", Value::num(self.stage_queue as f64)),
+            ("precompile", Value::Bool(self.precompile)),
+        ])
+        .to_json()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch.max_batch == 0 {
+            return Err(Error::Other("max_batch must be > 0".into()));
+        }
+        if self.gen.max_new_tokens == 0 {
+            return Err(Error::Other("max_new_tokens must be > 0".into()));
+        }
+        if self.stage_queue == 0 {
+            return Err(Error::Other("stage_queue must be > 0".into()));
+        }
+        if let Sampling::TopK { k, temperature, .. } = self.sampling {
+            if k == 0 {
+                return Err(Error::Other("top-k k must be > 0".into()));
+            }
+            if !(temperature > 0.0) {
+                return Err(Error::Other("temperature must be > 0".into()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn engine_variants_map() {
+        assert_eq!(EngineKind::Baseline.variant(), "baseline");
+        assert_eq!(EngineKind::FtFull.variant(), "full");
+        assert_eq!(EngineKind::FtPruned.variant(), "pruned");
+        assert!(EngineKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut c = ServingConfig::default();
+        c.batch.max_batch = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServingConfig::default();
+        c.gen.max_new_tokens = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServingConfig::default();
+        c.sampling = Sampling::TopK { k: 0, temperature: 1.0, seed: 0 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ServingConfig::default();
+        c.engine = EngineKind::Baseline;
+        c.sampling = Sampling::TopK { k: 5, temperature: 0.7, seed: 9 };
+        c.batch.length_bucketing = false;
+        let s = c.to_json();
+        let back = ServingConfig::from_json(&s).unwrap();
+        assert_eq!(back.engine, c.engine);
+        assert_eq!(back.sampling, c.sampling);
+        assert_eq!(back.batch.length_bucketing, false);
+        assert_eq!(back.gen.max_new_tokens, c.gen.max_new_tokens);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let c = ServingConfig::from_json(r#"{"engine": "baseline"}"#).unwrap();
+        assert_eq!(c.engine, EngineKind::Baseline);
+        assert_eq!(c.batch.max_batch, 8);
+        assert!(c.pipelined);
+    }
+}

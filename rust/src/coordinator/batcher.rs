@@ -1,0 +1,244 @@
+//! Dynamic batcher with length bucketing.
+//!
+//! The paper's two processing-level levers live here:
+//! - **dynamic batch size** (§2.3): flush on max-size OR timeout, so load
+//!   spikes batch densely and trickles don't wait forever;
+//! - **allocation of data inference order** (§1): requests are grouped by
+//!   the sequence bucket they need, so short prompts don't pay the
+//!   padding of long ones (measured by the A2 bench).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::request::PreparedRequest;
+use crate::config::BatchPolicy;
+
+/// A batch aimed at one (batch, seq) bucket.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<PreparedRequest>,
+    /// Sequence bucket the batch was aimed at.
+    pub seq_bucket: usize,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Padding waste: fraction of token slots that are padding when this
+    /// batch runs at its bucket.
+    pub fn padding_waste(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        let used: usize = self.requests.iter().map(|r| r.need_seq()).sum();
+        let cap = self.requests.len() * self.seq_bucket;
+        1.0 - used as f64 / cap as f64
+    }
+}
+
+/// Accumulates prepared requests and emits bucket-aligned batches.
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    /// Available sequence buckets (ascending), from the manifest.
+    seq_buckets: Vec<usize>,
+    /// One FIFO queue per sequence bucket (length_bucketing=true) or a
+    /// single global FIFO (index 0) otherwise.
+    queues: Vec<VecDeque<PreparedRequest>>,
+    /// Arrival time of the oldest waiting request per queue.
+    oldest: Vec<Option<Instant>>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy, mut seq_buckets: Vec<usize>) -> Self {
+        seq_buckets.sort_unstable();
+        let n = if policy.length_bucketing { seq_buckets.len() } else { 1 };
+        Self {
+            policy,
+            seq_buckets,
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            oldest: vec![None; n],
+        }
+    }
+
+    /// Smallest bucket that fits `need` tokens (falls back to largest —
+    /// the engine will truncate/fail explicitly, not silently).
+    pub fn bucket_for(&self, need: usize) -> usize {
+        for (i, &b) in self.seq_buckets.iter().enumerate() {
+            if need <= b {
+                return i;
+            }
+        }
+        self.seq_buckets.len() - 1
+    }
+
+    pub fn push(&mut self, req: PreparedRequest) {
+        let qi = if self.policy.length_bucketing {
+            self.bucket_for(req.need_seq())
+        } else {
+            0
+        };
+        if self.queues[qi].is_empty() {
+            self.oldest[qi] = Some(Instant::now());
+        }
+        self.queues[qi].push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Emit the next batch according to the policy:
+    /// - any queue at `max_batch` flushes immediately;
+    /// - else the queue whose head has waited longest flushes once past
+    ///   `max_wait_ms` (or if `force`).
+    pub fn pop(&mut self, force: bool) -> Option<Batch> {
+        // full queue first
+        for qi in 0..self.queues.len() {
+            if self.queues[qi].len() >= self.policy.max_batch {
+                return Some(self.drain(qi));
+            }
+        }
+        // timeout / forced flush: oldest head wins
+        let mut best: Option<(usize, Instant)> = None;
+        for qi in 0..self.queues.len() {
+            if let (false, Some(t)) = (self.queues[qi].is_empty(), self.oldest[qi]) {
+                if best.map_or(true, |(_, bt)| t < bt) {
+                    best = Some((qi, t));
+                }
+            }
+        }
+        let (qi, t) = best?;
+        let waited = t.elapsed().as_millis() as u64;
+        if force || waited >= self.policy.max_wait_ms {
+            return Some(self.drain(qi));
+        }
+        None
+    }
+
+    /// Size-based variant for offline drains: emit only FULL batches
+    /// unless `force` (never timeout-flushes — composition is then
+    /// independent of inference timing).
+    pub fn pop_full_or(&mut self, force: bool) -> Option<Batch> {
+        for qi in 0..self.queues.len() {
+            if self.queues[qi].len() >= self.policy.max_batch {
+                return Some(self.drain(qi));
+            }
+        }
+        if force {
+            for qi in 0..self.queues.len() {
+                if !self.queues[qi].is_empty() {
+                    return Some(self.drain(qi));
+                }
+            }
+        }
+        None
+    }
+
+    fn drain(&mut self, qi: usize) -> Batch {
+        let take = self.policy.max_batch.min(self.queues[qi].len());
+        let requests: Vec<PreparedRequest> =
+            self.queues[qi].drain(..take).collect();
+        self.oldest[qi] = if self.queues[qi].is_empty() {
+            None
+        } else {
+            Some(Instant::now())
+        };
+        let seq_bucket = if self.policy.length_bucketing {
+            self.seq_buckets[qi]
+        } else {
+            // global FIFO: bucket = what the longest member needs
+            let need =
+                requests.iter().map(|r| r.need_seq()).max().unwrap_or(1);
+            self.seq_buckets[self.bucket_for(need)]
+        };
+        Batch { requests, seq_bucket }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64, prompt_len: usize) -> PreparedRequest {
+        PreparedRequest {
+            id,
+            prompt: vec![5; prompt_len],
+            max_new_tokens: 4,
+            reference_summary: None,
+            enqueued: Instant::now(),
+        }
+    }
+
+    fn policy(max_batch: usize, bucketing: bool) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait_ms: 10_000, length_bucketing: bucketing }
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let mut b = DynamicBatcher::new(policy(2, true), vec![32, 64, 128]);
+        b.push(req(1, 10));
+        assert!(b.pop(false).is_none()); // not full, not timed out
+        b.push(req(2, 12));
+        let batch = b.pop(false).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.seq_bucket, 32);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn force_flushes_partial() {
+        let mut b = DynamicBatcher::new(policy(8, true), vec![32, 64]);
+        b.push(req(1, 10));
+        let batch = b.pop(true).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn length_bucketing_separates_queues() {
+        let mut b = DynamicBatcher::new(policy(2, true), vec![32, 64, 128]);
+        b.push(req(1, 10)); // bucket 32
+        b.push(req(2, 60)); // bucket 64
+        assert!(b.pop(false).is_none()); // neither queue full
+        b.push(req(3, 12)); // bucket 32 now full
+        let batch = b.pop(false).unwrap();
+        assert_eq!(batch.seq_bucket, 32);
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn fifo_mode_mixes_lengths() {
+        let mut b = DynamicBatcher::new(policy(2, false), vec![32, 64, 128]);
+        b.push(req(1, 10));
+        b.push(req(2, 100));
+        let batch = b.pop(false).unwrap();
+        // bucket must cover the longest request
+        assert_eq!(batch.seq_bucket, 128);
+        // short request pays heavy padding — that's the waste A2 measures
+        assert!(batch.padding_waste() > 0.3);
+    }
+
+    #[test]
+    fn oversized_request_goes_to_largest_bucket() {
+        let mut b = DynamicBatcher::new(policy(1, true), vec![32, 64]);
+        b.push(req(1, 1000));
+        let batch = b.pop(true).unwrap();
+        assert_eq!(batch.seq_bucket, 64);
+    }
+
+    #[test]
+    fn drain_respects_max_batch() {
+        let mut b = DynamicBatcher::new(policy(2, true), vec![32]);
+        for i in 0..5 {
+            b.push(req(i, 8));
+        }
+        assert_eq!(b.pop(false).unwrap().len(), 2);
+        assert_eq!(b.pending(), 3);
+    }
+}

@@ -1,0 +1,38 @@
+//! L3 coordination: request lifecycle, dynamic length-bucketed batching,
+//! and the generation driver — the serving-system contribution of the
+//! paper (§2.3 dynamic batch size, §1 "allocation of data inference
+//! order", §3.3 processing optimization).
+
+mod batcher;
+pub mod request;
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use request::{PreparedRequest, ServingResponse, StageTimes};
+
+use crate::engine::{Engine, EngineInput, Sampler};
+use crate::Result;
+
+/// Run one prepared batch through an engine and stamp outputs back onto
+/// the requests (the "model inference process" box of Fig 4).
+pub fn run_batch(
+    engine: &dyn Engine,
+    sampler: &mut Sampler,
+    batch: &Batch,
+) -> Result<Vec<(PreparedRequest, Vec<u32>)>> {
+    let inputs: Vec<EngineInput> = batch
+        .requests
+        .iter()
+        .map(|r| EngineInput {
+            request_id: r.id,
+            prompt: r.prompt.clone(),
+            max_new_tokens: r.max_new_tokens,
+        })
+        .collect();
+    let outputs = engine.generate(&inputs, sampler)?;
+    Ok(batch
+        .requests
+        .iter()
+        .cloned()
+        .zip(outputs.into_iter().map(|o| o.generated))
+        .collect())
+}

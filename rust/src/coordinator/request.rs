@@ -1,0 +1,88 @@
+//! Request/response types as they move through the pipeline stages.
+
+use std::time::{Duration, Instant};
+
+/// A request after preprocessing (tokenization) — what the batcher and
+/// engine operate on.
+#[derive(Debug, Clone)]
+pub struct PreparedRequest {
+    pub id: u64,
+    /// `[BOS] doc… [SEP]`.
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Ground-truth summary ids for quality scoring (synthetic workloads).
+    pub reference_summary: Option<Vec<u32>>,
+    /// When the request entered the system (latency measurement).
+    pub enqueued: Instant,
+}
+
+impl PreparedRequest {
+    /// Sequence capacity this request needs (prompt + generation).
+    pub fn need_seq(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+/// Wall-clock spent per pipeline stage for one batch (Fig 4 data).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimes {
+    pub preprocess: Duration,
+    pub inference: Duration,
+    pub postprocess: Duration,
+}
+
+/// The finished response.
+#[derive(Debug, Clone)]
+pub struct ServingResponse {
+    pub id: u64,
+    /// Generated summary token ids (EOS-trimmed).
+    pub summary_ids: Vec<u32>,
+    /// Detokenized summary text.
+    pub summary_text: String,
+    /// End-to-end latency (enqueue -> postprocess complete).
+    pub latency: Duration,
+    /// Positional token accuracy vs. the reference summary, if known.
+    pub accuracy: Option<f64>,
+}
+
+/// Positional token accuracy: fraction of reference positions the
+/// generation got right (the quality guard for fp16/pruning — §4
+/// "maintaining high levels of performance").
+pub fn summary_accuracy(generated: &[u32], reference: &[u32]) -> f64 {
+    if reference.is_empty() {
+        return if generated.is_empty() { 1.0 } else { 0.0 };
+    }
+    let hits = generated
+        .iter()
+        .zip(reference)
+        .filter(|(g, r)| g == r)
+        .count();
+    hits as f64 / reference.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_perfect_and_partial() {
+        assert_eq!(summary_accuracy(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(summary_accuracy(&[1, 9, 3], &[1, 2, 3]), 2.0 / 3.0);
+        assert_eq!(summary_accuracy(&[], &[1, 2]), 0.0);
+        assert_eq!(summary_accuracy(&[], &[]), 1.0);
+        // generation longer than reference: extra tokens don't add credit
+        assert_eq!(summary_accuracy(&[1, 2, 3, 4], &[1, 2]), 1.0);
+    }
+
+    #[test]
+    fn need_seq_adds_generation_budget() {
+        let r = PreparedRequest {
+            id: 0,
+            prompt: vec![1; 10],
+            max_new_tokens: 6,
+            reference_summary: None,
+            enqueued: Instant::now(),
+        };
+        assert_eq!(r.need_seq(), 16);
+    }
+}

@@ -1,0 +1,180 @@
+//! Synthetic document generator (rust twin of `python/compile/corpus.py`).
+//!
+//! A [`Document`] carries both its rendered text (what a client would
+//! POST) and its ground-truth token ids + extractive summary (what the
+//! E2E example scores generated output against).
+
+use crate::util::rng::Rng;
+
+use super::zipf::ZipfSampler;
+use crate::special::FIRST_WORD;
+use crate::tokenizer::vocab::render_rank;
+
+/// Distribution parameters — keep in sync with `corpus.py::CorpusConfig`.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub vocab_size: usize,
+    pub zipf_alpha: f64,
+    pub body_median: f64,
+    pub body_sigma: f64,
+    pub tail_prob: f64,
+    pub max_doc_len: usize,
+    pub min_doc_len: usize,
+    pub summary_ratio: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self {
+            vocab_size: 8000,
+            zipf_alpha: 1.1,
+            body_median: 40.0,
+            body_sigma: 0.55,
+            tail_prob: 0.04,
+            max_doc_len: 400,
+            min_doc_len: 8,
+            summary_ratio: 0.2,
+        }
+    }
+}
+
+/// One synthetic "commercial material" document.
+#[derive(Debug, Clone)]
+pub struct Document {
+    pub id: u64,
+    /// Rendered surface text (space-separated pseudo-words).
+    pub text: String,
+    /// Ground-truth token ids of the document body (no specials).
+    pub doc_tokens: Vec<u32>,
+    /// Extractive reference summary (leading ~20% of the body).
+    pub summary_tokens: Vec<u32>,
+}
+
+impl Document {
+    pub fn len(&self) -> usize {
+        self.doc_tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.doc_tokens.is_empty()
+    }
+}
+
+/// Seeded document stream.
+pub struct Generator {
+    cfg: CorpusConfig,
+    zipf: ZipfSampler,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl Generator {
+    pub fn new(cfg: CorpusConfig, seed: u64) -> Self {
+        let zipf =
+            ZipfSampler::new(cfg.vocab_size - FIRST_WORD as usize, cfg.zipf_alpha);
+        Self { cfg, zipf, rng: Rng::seed_from_u64(seed), next_id: 0 }
+    }
+
+    pub fn config(&self) -> &CorpusConfig {
+        &self.cfg
+    }
+
+    /// Fig-3-shaped document length: lognormal body + thin uniform tail.
+    pub fn sample_len(&mut self) -> usize {
+        let n = if self.rng.gen_f64() < self.cfg.tail_prob {
+            self.rng.gen_range(100, self.cfg.max_doc_len + 1)
+        } else {
+            let z = self.rng.gen_normal();
+            (self.cfg.body_median.ln() + self.cfg.body_sigma * z).exp() as usize
+        };
+        n.clamp(self.cfg.min_doc_len, self.cfg.max_doc_len)
+    }
+
+    /// Generate the next document, capping the body at `max_len` tokens.
+    pub fn generate_capped(&mut self, max_len: usize) -> Document {
+        let n = self.sample_len().min(max_len);
+        let mut doc_tokens = Vec::with_capacity(n);
+        let mut text = String::with_capacity(n * 5);
+        for i in 0..n {
+            let rank = self.zipf.sample(&mut self.rng);
+            doc_tokens.push(FIRST_WORD + rank as u32);
+            if i > 0 {
+                text.push(' ');
+            }
+            text.push_str(&render_rank(rank));
+        }
+        let k = ((n as f64 * self.cfg.summary_ratio).round() as usize).max(1);
+        let summary_tokens = doc_tokens[..k.min(n)].to_vec();
+        let id = self.next_id;
+        self.next_id += 1;
+        Document { id, text, doc_tokens, summary_tokens }
+    }
+
+    pub fn generate(&mut self) -> Document {
+        self.generate_capped(self.cfg.max_doc_len)
+    }
+
+    /// A batch of documents.
+    pub fn take(&mut self, n: usize) -> Vec<Document> {
+        (0..n).map(|_| self.generate()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{Encode, FastTokenizer, Vocab};
+
+    #[test]
+    fn text_tokenizes_back_to_doc_tokens() {
+        let mut g = Generator::new(CorpusConfig::default(), 42);
+        let tok = FastTokenizer::new(Vocab::synthetic(8000));
+        for _ in 0..20 {
+            let d = g.generate();
+            assert_eq!(tok.encode(&d.text, 8000), d.doc_tokens);
+        }
+    }
+
+    #[test]
+    fn lengths_match_fig3_shape() {
+        let mut g = Generator::new(CorpusConfig::default(), 1);
+        let lens: Vec<usize> = (0..4000).map(|_| g.sample_len()).collect();
+        let short = lens.iter().filter(|&&l| l < 100).count() as f64
+            / lens.len() as f64;
+        assert!(short > 0.9, "short fraction {short}");
+        assert!(lens.iter().any(|&l| l > 100), "tail missing");
+        assert!(lens.iter().all(|&l| l >= 8 && l <= 400));
+    }
+
+    #[test]
+    fn summary_is_prefix() {
+        let mut g = Generator::new(CorpusConfig::default(), 2);
+        let d = g.generate();
+        assert_eq!(
+            &d.doc_tokens[..d.summary_tokens.len()],
+            d.summary_tokens.as_slice()
+        );
+        assert!(d.summary_tokens.len() >= 1);
+        assert!(d.summary_tokens.len() <= d.doc_tokens.len() / 4 + 1);
+    }
+
+    #[test]
+    fn deterministic_and_ids_increment() {
+        let mut a = Generator::new(CorpusConfig::default(), 9);
+        let mut b = Generator::new(CorpusConfig::default(), 9);
+        let da = a.take(3);
+        let db = b.take(3);
+        for (x, y) in da.iter().zip(&db) {
+            assert_eq!(x.text, y.text);
+        }
+        assert_eq!(da[2].id, 2);
+    }
+
+    #[test]
+    fn capped_generation_respects_cap() {
+        let mut g = Generator::new(CorpusConfig::default(), 3);
+        for _ in 0..50 {
+            assert!(g.generate_capped(20).len() <= 20);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Data substrate: the synthetic stand-in for the paper's proprietary
+//! Baidu commercial-material dataset (DESIGN.md §3).
+//!
+//! The generator reproduces the *statistics* the paper's optimizations
+//! exploit — Zipf token frequencies (vocab pruning), a Fig-3-shaped
+//! length distribution (position-table trim + length bucketing), and an
+//! extractive-summary target (so "maintaining performance" is
+//! measurable).  It mirrors `python/compile/corpus.py`, which trains the
+//! served model on the same distributions.
+
+mod corpus;
+mod trace;
+mod zipf;
+
+pub use corpus::{CorpusConfig, Document, Generator};
+pub use trace::{Request, TraceConfig, TraceGenerator};
+pub use zipf::ZipfSampler;

@@ -1,0 +1,123 @@
+//! Request traces: Poisson arrivals over synthetic documents, feeding the
+//! server example and the pipeline benches (open-loop load generation).
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+use super::corpus::{CorpusConfig, Document, Generator};
+
+/// One serving request as the front-end sees it.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub text: String,
+    pub max_new_tokens: usize,
+    /// Offset from trace start at which this request arrives.
+    pub arrival: Duration,
+    /// Ground truth for quality scoring (None for live traffic).
+    pub reference_summary: Option<Vec<u32>>,
+}
+
+/// Trace parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub corpus: CorpusConfig,
+    /// Mean arrival rate, requests/second (Poisson).
+    pub rate: f64,
+    pub max_new_tokens: usize,
+    /// Cap document length so prompt+summary fits the largest bucket.
+    pub max_doc_len: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            corpus: CorpusConfig::default(),
+            rate: 50.0,
+            max_new_tokens: 16,
+            max_doc_len: 96,
+        }
+    }
+}
+
+/// Seeded Poisson trace generator.
+pub struct TraceGenerator {
+    cfg: TraceConfig,
+    gen: Generator,
+    rng: Rng,
+    clock: Duration,
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: TraceConfig, seed: u64) -> Self {
+        let gen = Generator::new(cfg.corpus.clone(), seed);
+        Self { cfg, gen, rng: Rng::seed_from_u64(seed ^ 0x9e3779b9), clock: Duration::ZERO }
+    }
+
+    /// Next request (arrival times strictly increase).
+    pub fn next_request(&mut self) -> Request {
+        let doc: Document = self.gen.generate_capped(self.cfg.max_doc_len);
+        // exponential inter-arrival
+        let gap = self.rng.gen_exp(self.cfg.rate);
+        self.clock += Duration::from_secs_f64(gap);
+        Request {
+            id: doc.id,
+            max_new_tokens: self.cfg.max_new_tokens,
+            arrival: self.clock,
+            reference_summary: Some(doc.summary_tokens.clone()),
+            text: doc.text,
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_increase_and_rate_is_close() {
+        let mut t = TraceGenerator::new(
+            TraceConfig { rate: 100.0, ..Default::default() },
+            0,
+        );
+        let reqs = t.take(2000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let span = reqs.last().unwrap().arrival.as_secs_f64();
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 100.0).abs() < 10.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn docs_respect_cap() {
+        let mut t = TraceGenerator::new(
+            TraceConfig { max_doc_len: 30, ..Default::default() },
+            1,
+        );
+        for r in t.take(100) {
+            assert!(r.text.split(' ').count() <= 30);
+            assert!(r.reference_summary.unwrap().len() <= 30);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<_> = TraceGenerator::new(TraceConfig::default(), 5)
+            .take(10)
+            .iter()
+            .map(|r| r.text.clone())
+            .collect();
+        let b: Vec<_> = TraceGenerator::new(TraceConfig::default(), 5)
+            .take(10)
+            .iter()
+            .map(|r| r.text.clone())
+            .collect();
+        assert_eq!(a, b);
+    }
+}

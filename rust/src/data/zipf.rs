@@ -1,0 +1,104 @@
+//! Zipf(α) sampler over word ranks via inverse-CDF table + binary search.
+//! Mirrors `python/compile/corpus.py::zipf_probs` exactly (same α, same
+//! support), so the rust workload matches the training distribution.
+
+use crate::util::rng::Rng;
+
+/// Precomputed cumulative distribution over `n` ranks.
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    /// `n` ranks with P(rank k) ∝ (k+1)^-alpha.
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 0..n {
+            acc += ((k + 1) as f64).powf(-alpha);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in &mut cdf {
+            *v /= total;
+        }
+        // guard against fp round-off at the top
+        *cdf.last_mut().unwrap() = 1.0;
+        Self { cdf }
+    }
+
+    pub fn support(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Probability mass of ranks `< prefix` (analytic coverage).
+    pub fn prefix_mass(&self, prefix: usize) -> f64 {
+        if prefix == 0 {
+            return 0.0;
+        }
+        self.cdf[(prefix - 1).min(self.cdf.len() - 1)]
+    }
+
+    /// Draw one rank in `[0, n)`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u: f64 = rng.gen_f64();
+        // first index with cdf[i] >= u
+        match self
+            .cdf
+            .binary_search_by(|v| v.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_in_range_and_skewed() {
+        let z = ZipfSampler::new(1000, 1.1);
+        let mut rng = Rng::seed_from_u64(0);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // rank 0 much more frequent than rank 500
+        assert!(counts[0] > 50 * counts[500].max(1) / 10);
+        // empirical top-half coverage close to analytic
+        let top: u32 = counts[..500].iter().sum();
+        let emp = top as f64 / 20_000.0;
+        let ana = z.prefix_mass(500);
+        assert!((emp - ana).abs() < 0.02, "emp {emp} vs analytic {ana}");
+    }
+
+    #[test]
+    fn prefix_mass_monotone() {
+        let z = ZipfSampler::new(100, 1.2);
+        let mut last = 0.0;
+        for p in 0..=100 {
+            let m = z.prefix_mass(p);
+            assert!(m >= last);
+            last = m;
+        }
+        assert!((z.prefix_mass(100) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let z = ZipfSampler::new(50, 1.1);
+        let a: Vec<usize> = {
+            let mut rng = Rng::seed_from_u64(7);
+            (0..20).map(|_| z.sample(&mut rng)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut rng = Rng::seed_from_u64(7);
+            (0..20).map(|_| z.sample(&mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

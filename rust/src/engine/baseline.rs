@@ -1,0 +1,130 @@
+//! Row 1 of Table 1: the naive engine.
+//!
+//! Each generated token re-executes the FULL forward pass (fp32, unfused
+//! ops, full embedding tables) over the whole padded bucket and samples
+//! from the last-position logits.  No KV cache, no fp16, no fusion —
+//! this is the "Paddle baseline" the paper starts from (speed 16.11).
+
+use std::rc::Rc;
+
+use super::{trim_at_eos, Engine, EngineInput, EngineOutput, Sampler};
+use crate::runtime::{DataArg, Runtime};
+use crate::{special, Error, Result};
+
+pub struct BaselineEngine {
+    runtime: Rc<Runtime>,
+    max_seq: usize,
+    vocab_size: usize,
+}
+
+impl BaselineEngine {
+    pub fn new(runtime: Rc<Runtime>) -> Result<Self> {
+        let max_seq = runtime
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "baseline_fwd")
+            .map(|a| a.seq)
+            .max()
+            .ok_or_else(|| {
+                Error::Manifest("no baseline_fwd artifacts".into())
+            })?;
+        let vocab_size = runtime.manifest.config_for("baseline").vocab_size;
+        Ok(Self { runtime, max_seq, vocab_size })
+    }
+}
+
+impl Engine for BaselineEngine {
+    fn label(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn vocab_limit(&self) -> u32 {
+        self.vocab_size as u32
+    }
+
+    fn generate(
+        &self,
+        batch: &[EngineInput],
+        sampler: &mut Sampler,
+    ) -> Result<Vec<EngineOutput>> {
+        if batch.is_empty() {
+            return Ok(vec![]);
+        }
+        let longest_prompt =
+            batch.iter().map(|r| r.prompt.len()).max().unwrap();
+        let max_new =
+            batch.iter().map(|r| r.max_new_tokens).max().unwrap();
+        let need_seq = longest_prompt + max_new;
+        let entry = self.runtime.select(
+            "baseline_fwd",
+            "baseline",
+            batch.len(),
+            need_seq,
+        )?;
+        let (b, s) = (entry.batch, entry.seq);
+        let exe = self.runtime.load(&entry.name)?;
+
+        // padded token matrix [b, s] + per-sequence write cursors
+        let mut tokens = vec![special::PAD as i32; b * s];
+        let mut lens = vec![0i32; b];
+        for (i, r) in batch.iter().enumerate() {
+            for (j, &t) in r.prompt.iter().enumerate() {
+                tokens[i * s + j] = t as i32;
+            }
+            lens[i] = r.prompt.len() as i32;
+        }
+
+        let mut generated: Vec<Vec<u32>> = vec![Vec::new(); batch.len()];
+        let mut done = vec![false; batch.len()];
+        let mut steps = 0usize;
+
+        // THE baseline inefficiency: one full forward per emitted token.
+        for _ in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let outs = self.runtime.run(
+                &exe,
+                vec![
+                    DataArg::I32(tokens.clone(), vec![b, s]),
+                    DataArg::I32(lens.clone(), vec![b]),
+                ],
+            )?;
+            let logits = outs[0].to_vec::<f32>()?; // [b, V]
+            let v = self.vocab_size;
+            steps += 1;
+            for (i, r) in batch.iter().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                let next = sampler.sample(&logits[i * v..(i + 1) * v]);
+                if next == special::EOS
+                    || generated[i].len() + 1 >= r.max_new_tokens
+                    || (lens[i] as usize) >= s
+                {
+                    done[i] = true;
+                }
+                if next != special::EOS && (lens[i] as usize) < s {
+                    tokens[i * s + lens[i] as usize] = next as i32;
+                    lens[i] += 1;
+                    generated[i].push(next);
+                }
+            }
+        }
+
+        Ok(batch
+            .iter()
+            .zip(generated)
+            .map(|(r, g)| EngineOutput {
+                request_id: r.request_id,
+                generated: trim_at_eos(&g).to_vec(),
+                steps,
+            })
+            .collect())
+    }
+}

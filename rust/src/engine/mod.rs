@@ -1,0 +1,129 @@
+//! Inference engines — the paper's Table 1 ladder, rows 1-3.
+//!
+//! All engines share the [`Engine`] trait: they take a *prepared* batch
+//! (tokenized prompts) and autoregressively generate summaries.
+//!
+//! - [`BaselineEngine`]: row 1.  fp32, full embeddings, and — the
+//!   defining inefficiency — every generated token re-runs the FULL
+//!   forward pass over the whole (padded) sequence.  O(T²·S) work per
+//!   sequence, exactly what a stock graph executor without a KV cache
+//!   does.
+//! - [`FtEngine`]: rows 2-3.  Faster-Transformer-style split into one
+//!   fused prefill (which also materializes the KV cache) + O(1)-context
+//!   decode steps; fp16 activations/caches; optionally the fused
+//!   multi-step decode executable (8 greedy tokens per PJRT call).
+//!   Row 3 is the same engine over the pruned-embedding artifacts.
+
+mod baseline;
+mod ft;
+mod sampling;
+
+pub use baseline::BaselineEngine;
+pub use ft::FtEngine;
+pub use sampling::Sampler;
+
+use crate::config::{EngineKind, GenConfig, Sampling};
+use crate::runtime::Runtime;
+use crate::{special, Result};
+use std::rc::Rc;
+
+/// One prepared (tokenized) request inside a batch.
+#[derive(Debug, Clone)]
+pub struct EngineInput {
+    pub request_id: u64,
+    /// `[BOS] doc… [SEP]` — tokenized prompt including specials.
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+/// Generated continuation for one request.
+#[derive(Debug, Clone)]
+pub struct EngineOutput {
+    pub request_id: u64,
+    /// Generated ids up to (exclusive) EOS.
+    pub generated: Vec<u32>,
+    /// Decode iterations the batch spent on this request's sequence.
+    pub steps: usize,
+}
+
+/// A batched autoregressive generator.
+pub trait Engine {
+    fn label(&self) -> &'static str;
+    /// Largest compiled sequence bucket (prompt + generation must fit).
+    fn max_seq(&self) -> usize;
+    /// Vocabulary visible to this engine (pruned engines see a prefix);
+    /// the tokenizer's `max_id`.
+    fn vocab_limit(&self) -> u32;
+    /// Generate for a batch (<= largest compiled batch bucket).
+    fn generate(
+        &self,
+        batch: &[EngineInput],
+        sampler: &mut Sampler,
+    ) -> Result<Vec<EngineOutput>>;
+}
+
+/// Construct the engine for a ladder row over a shared runtime.
+pub fn build(
+    kind: EngineKind,
+    runtime: Rc<Runtime>,
+    gen: GenConfig,
+) -> Result<Box<dyn Engine>> {
+    Ok(match kind {
+        EngineKind::Baseline => Box::new(BaselineEngine::new(runtime)?),
+        EngineKind::FtFull => {
+            Box::new(FtEngine::new(runtime, "full", gen.use_multi_step)?)
+        }
+        EngineKind::FtPruned => {
+            Box::new(FtEngine::new(runtime, "pruned", gen.use_multi_step)?)
+        }
+    })
+}
+
+/// Compile every artifact the engine variant can touch — the "model
+/// loading" startup step (keeps first-request latency clean; the paper's
+/// engines also build once before serving).
+pub fn precompile(kind: EngineKind, runtime: &Runtime) -> Result<()> {
+    let variant = kind.variant();
+    let names: Vec<String> = runtime
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.variant == variant)
+        .map(|a| a.name.clone())
+        .collect();
+    for name in names {
+        runtime.load(&name)?;
+    }
+    runtime.device_weights(runtime.manifest.weights_key_for(variant))?;
+    Ok(())
+}
+
+/// Build the sampler for a sampling config.
+pub fn sampler_for(s: Sampling) -> Sampler {
+    match s {
+        Sampling::Greedy => Sampler::greedy(),
+        Sampling::TopK { k, temperature, seed } => {
+            Sampler::top_k(k, temperature, seed)
+        }
+    }
+}
+
+/// Truncate generated ids at the first EOS (exclusive).
+pub(crate) fn trim_at_eos(ids: &[u32]) -> &[u32] {
+    match ids.iter().position(|&t| t == special::EOS) {
+        Some(i) => &ids[..i],
+        None => ids,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trim_at_eos_works() {
+        assert_eq!(trim_at_eos(&[5, 6, 2, 7]), &[5, 6]);
+        assert_eq!(trim_at_eos(&[5, 6]), &[5, 6]);
+        assert_eq!(trim_at_eos(&[2]), &[] as &[u32]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Logits → token sampling (runs in rust, on host logits).
+
+use crate::util::rng::Rng;
+
+/// Sampling state (owns the RNG for top-k).
+pub enum Sampler {
+    Greedy,
+    TopK { k: usize, temperature: f32, rng: Rng },
+}
+
+impl Sampler {
+    pub fn greedy() -> Self {
+        Sampler::Greedy
+    }
+
+    pub fn top_k(k: usize, temperature: f32, seed: u64) -> Self {
+        Sampler::TopK { k, temperature, rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// Is this sampler argmax-deterministic (enables the fused multi-step
+    /// greedy decode executable)?
+    pub fn is_greedy(&self) -> bool {
+        matches!(self, Sampler::Greedy)
+    }
+
+    /// Draw one token id from a logits row.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        match self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::TopK { k, temperature, rng } => {
+                top_k_sample(logits, *k, *temperature, rng)
+            }
+        }
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+fn top_k_sample(logits: &[f32], k: usize, temperature: f32,
+                rng: &mut Rng) -> u32 {
+    let k = k.min(logits.len()).max(1);
+    // indices of the k largest logits (selection over a small k)
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap()
+    });
+    let top = &idx[..k];
+    let m = top
+        .iter()
+        .map(|&i| logits[i])
+        .fold(f32::NEG_INFINITY, f32::max);
+    let mut weights: Vec<f64> = top
+        .iter()
+        .map(|&i| (((logits[i] - m) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    for w in &mut weights {
+        *w /= total;
+    }
+    let mut u = rng.gen_f64();
+    for (i, &w) in weights.iter().enumerate() {
+        if u < w {
+            return top[i] as u32;
+        }
+        u -= w;
+    }
+    top[k - 1] as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn greedy_sampler_deterministic() {
+        let mut s = Sampler::greedy();
+        assert!(s.is_greedy());
+        assert_eq!(s.sample(&[0.0, 1.0, 0.5]), 1);
+        assert_eq!(s.sample(&[0.0, 1.0, 0.5]), 1);
+    }
+
+    #[test]
+    fn top_k_stays_in_top_k() {
+        let mut s = Sampler::top_k(2, 1.0, 42);
+        let logits = vec![0.0, 5.0, 4.9, -3.0, 1.0];
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 1 || t == 2, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn top_k_respects_temperature_skew() {
+        // extremely low temperature ~ greedy
+        let mut s = Sampler::top_k(5, 1e-4, 7);
+        let logits = vec![0.0, 2.0, 1.0];
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_1_is_greedy() {
+        let mut s = Sampler::top_k(1, 1.0, 0);
+        assert_eq!(s.sample(&[0.3, 0.9, 0.1]), 1);
+    }
+}

@@ -1,0 +1,90 @@
+//! Crate-wide error type.
+//!
+//! Hand-rolled (no `thiserror`) to keep the dependency set to what the
+//! image bakes; every layer converts into [`Error`] via `From`.
+
+use std::fmt;
+
+/// All the ways the serving stack can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT / XLA failures (compile, execute, literal marshalling).
+    Xla(xla::Error),
+    /// Filesystem / socket errors.
+    Io(std::io::Error),
+    /// manifest.json / protocol decode errors.
+    Json(crate::util::json::JsonError),
+    /// No compiled bucket can serve the requested (batch, seq) shape.
+    NoBucket {
+        kind: String,
+        variant: String,
+        batch: usize,
+        seq: usize,
+    },
+    /// Artifact referenced by the manifest is missing on disk.
+    MissingArtifact(String),
+    /// Weight blob layout disagrees with the manifest index.
+    WeightLayout(String),
+    /// Manifest semantic problems (bad version, missing graph, …).
+    Manifest(String),
+    /// Input exceeded a hard limit (sequence too long for every bucket…).
+    Capacity(String),
+    /// Request rejected / channel closed during shutdown.
+    Shutdown(&'static str),
+    /// Anything else worth a message.
+    Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla/pjrt error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(e) => write!(f, "json error: {e}"),
+            Error::NoBucket { kind, variant, batch, seq } => write!(
+                f,
+                "no compiled bucket for kind={kind} variant={variant} \
+                 batch={batch} seq={seq} (re-run `make artifacts` with \
+                 larger --batch-sizes/--seq-lens?)"
+            ),
+            Error::MissingArtifact(p) => {
+                write!(f, "artifact file missing: {p} (run `make artifacts`)")
+            }
+            Error::WeightLayout(m) => write!(f, "weight blob mismatch: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Capacity(m) => write!(f, "capacity exceeded: {m}"),
+            Error::Shutdown(w) => write!(f, "shutting down: {w}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Json(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

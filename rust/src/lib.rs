@@ -1,0 +1,52 @@
+//! # aigc-infer
+//!
+//! Reproduction of *"The Solution for the AIGC Inference Performance
+//! Optimization Competition"* (Pan, Xu, Wan & Yang, 2024) as a
+//! three-layer rust + JAX + Pallas serving stack:
+//!
+//! - **L3 (this crate)** — the serving coordinator: request routing,
+//!   dynamic length-bucketed batching, KV-cache state management, the
+//!   paper's four-stage parallel pipeline (§3.3 Fig 4), a fast
+//!   wordpiece tokenizer, synthetic-workload substrates, metrics, and a
+//!   TCP serving front-end.  Python is never on the request path.
+//! - **L2/L1 (python/, build-time only)** — the UNIMO-style prefix LM and
+//!   its fused Pallas kernels, AOT-lowered by `make artifacts` into
+//!   `artifacts/*.hlo.txt`, which [`runtime`] loads and executes through
+//!   the PJRT C API (`xla` crate).
+//!
+//! Engine variants reproduce the paper's Table 1 ladder:
+//!
+//! | step | paper | here |
+//! |------|-------|------|
+//! | 1 | Paddle baseline | [`engine::BaselineEngine`] — fp32, full-sequence recompute per token |
+//! | 2 | + Faster Transformer | [`engine::FtEngine`] (full) — fused kernels, fp16, KV cache |
+//! | 3 | + embedding pruning | [`engine::FtEngine`] (pruned) — vocab 8000→4000, positions 512→128 |
+//! | 4 | + multi-process parallel | [`pipeline::Orchestrator`] — overlapped pre/infer/post stages |
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod error;
+pub mod metrics;
+pub mod pipeline;
+pub mod pruning;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Special token ids — MUST match `python/compile/model.py` and the
+/// `special_tokens` block of `artifacts/manifest.json` (checked at load).
+pub mod special {
+    pub const PAD: u32 = 0;
+    pub const BOS: u32 = 1;
+    pub const EOS: u32 = 2;
+    pub const SEP: u32 = 3;
+    /// First non-special id; ids `FIRST_WORD..vocab_size` are words ranked
+    /// by corpus frequency (rank order == id order, which is what makes
+    /// prefix-pruning of the embedding matrix sound).
+    pub const FIRST_WORD: u32 = 4;
+}

@@ -1,0 +1,248 @@
+//! `aigc-infer` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         — manifest / artifact inventory
+//!   run    [--engine E] [--n N] [--no-pipeline] [--no-bucketing]
+//!          [--max-new T] [--seed S] — offline synthetic workload
+//!   ladder [--n N]               — the Table 1 ablation ladder
+//!   serve  [--addr A] [--engine E] — TCP serving front-end
+//!
+//! Args are parsed by hand (offline build: no clap in the vendor set).
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use aigc_infer::config::{EngineKind, ServingConfig};
+use aigc_infer::data::{TraceConfig, TraceGenerator};
+use aigc_infer::metrics::{LadderRow, Report};
+use aigc_infer::pipeline;
+use aigc_infer::runtime::Manifest;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: aigc-infer <info|run|ladder|serve> [options]\n\
+         common: --artifacts DIR (default: artifacts)  --config FILE.json\n\
+         run:    --engine baseline|ft_full|ft_pruned  --n N  --max-new T\n\
+                 --no-pipeline  --no-bucketing  --no-multi-step  --seed S\n\
+         ladder: --n N\n\
+         serve:  --addr HOST:PORT  --engine E"
+    );
+    std::process::exit(2);
+}
+
+struct Args {
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = if i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    i += 1;
+                    Some(argv[i].clone())
+                } else {
+                    None
+                };
+                flags.push((name.to_string(), value));
+            } else {
+                eprintln!("unexpected argument: {a}");
+                usage();
+            }
+            i += 1;
+        }
+        Self { flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+}
+
+fn build_config(args: &Args) -> ServingConfig {
+    // --config FILE loads a JSON ServingConfig (see configs/*.json);
+    // remaining flags override it.
+    let mut cfg = match args.get("config") {
+        Some(path) => ServingConfig::load(path).unwrap_or_else(|e| {
+            eprintln!("bad config {path}: {e}");
+            std::process::exit(2);
+        }),
+        None => ServingConfig::default(),
+    };
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = EngineKind::parse(e).unwrap_or_else(|err| {
+            eprintln!("{err}");
+            usage()
+        });
+    }
+    if let Some(n) = args.get("max-new") {
+        cfg.gen.max_new_tokens = n.parse().unwrap_or(16);
+    }
+    if args.has("no-pipeline") {
+        cfg.pipelined = false;
+    }
+    if args.has("no-bucketing") {
+        cfg.batch.length_bucketing = false;
+    }
+    if args.has("no-multi-step") {
+        cfg.gen.use_multi_step = false;
+    }
+    cfg
+}
+
+fn workload(args: &Args, cfg: &ServingConfig) -> Vec<aigc_infer::data::Request> {
+    let n: usize = args.get("n").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let seed: u64 = args.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let mut trace = TraceGenerator::new(
+        TraceConfig {
+            max_new_tokens: cfg.gen.max_new_tokens,
+            ..Default::default()
+        },
+        seed,
+    );
+    trace.take(n)
+}
+
+fn cmd_info(args: &Args) {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    match Manifest::load(dir) {
+        Ok(m) => {
+            println!("manifest: {} (hash {})", dir, &m.input_hash[..12]);
+            for (k, c) in &m.configs {
+                println!(
+                    "  config[{k}]: vocab={} pos={} d={} L={} H={} dtype={}",
+                    c.vocab_size, c.max_position, c.d_model, c.n_layers,
+                    c.n_heads, c.dtype
+                );
+            }
+            println!("  buckets: batch={:?} seq={:?}", m.batch_sizes, m.seq_lens);
+            println!("  artifacts: {}", m.artifacts.len());
+            for a in &m.artifacts {
+                println!(
+                    "    {:34} kind={:15} variant={:8} b={} s={}",
+                    a.name, a.kind, a.variant, a.batch, a.seq
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let cfg = build_config(args);
+    let reqs = workload(args, &cfg);
+    println!(
+        "engine={} pipelined={} bucketing={} requests={}",
+        cfg.engine.label(),
+        cfg.pipelined,
+        cfg.batch.length_bucketing,
+        reqs.len()
+    );
+    match pipeline::run(&cfg, &reqs) {
+        Ok(s) => {
+            println!("wall          {:.3}s", s.wall.as_secs_f64());
+            println!("speed         {:.2} samples/s", s.samples_per_sec);
+            println!("tokens        {} generated", s.generated_tokens);
+            println!("latency       {}", s.latency.summary());
+            println!("accuracy      {:.3}", s.mean_accuracy);
+            println!(
+                "pjrt          {} execs, {} compiles ({:.2}s compile, {:.2}s exec+download {:.2}s)",
+                s.runtime_stats.executions,
+                s.runtime_stats.compiles,
+                s.runtime_stats.compile_secs,
+                s.runtime_stats.execute_secs,
+                s.runtime_stats.download_secs,
+            );
+            println!(
+                "stage busy    pre={:.3}s inf={:.3}s post={:.3}s (overlappable {:.1}%)",
+                s.stages.preprocess.as_secs_f64(),
+                s.stages.inference.as_secs_f64(),
+                s.stages.postprocess.as_secs_f64(),
+                s.stages.overlappable_fraction() * 100.0
+            );
+        }
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_ladder(args: &Args) {
+    let n: usize = args.get("n").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let base = build_config(args);
+    let mut report = Report::default();
+    let rows: [(usize, &str, EngineKind, bool); 4] = [
+        (1, "Baseline", EngineKind::Baseline, false),
+        (2, "Fast transformer", EngineKind::FtFull, false),
+        (3, "embedding layer pruning", EngineKind::FtPruned, false),
+        (4, "multi-process parallel processing", EngineKind::FtPruned, true),
+    ];
+    for (step, name, engine, pipelined) in rows {
+        let mut cfg = base.clone();
+        cfg.engine = engine;
+        cfg.pipelined = pipelined;
+        let reqs = workload(args, &cfg);
+        match pipeline::run(&cfg, &reqs) {
+            Ok(s) => {
+                println!(
+                    "step {step} ({name}): {:.2} samples/s, acc {:.3}",
+                    s.samples_per_sec, s.mean_accuracy
+                );
+                report.push(LadderRow {
+                    step,
+                    method: name.to_string(),
+                    speed: s.samples_per_sec,
+                    latency_ms: s.latency.mean().as_secs_f64() * 1e3,
+                    accuracy: s.mean_accuracy,
+                });
+            }
+            Err(e) => {
+                eprintln!("step {step} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("\nTable 1 (reproduced, {n} requests):\n{}", report.render());
+}
+
+fn cmd_serve(args: &Args) {
+    let cfg = build_config(args);
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7071");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    if let Err(e) = aigc_infer::server::serve(cfg, addr, shutdown) {
+        eprintln!("server failed: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "run" => cmd_run(&args),
+        "ladder" => cmd_ladder(&args),
+        "serve" => cmd_serve(&args),
+        _ => usage(),
+    }
+}

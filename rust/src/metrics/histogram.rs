@@ -1,0 +1,171 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, fixed memory).
+
+use std::time::Duration;
+
+const BUCKETS_PER_DECADE: usize = 20;
+/// Covers 1µs .. ~1000s in log space.
+const N_BUCKETS: usize = 9 * BUCKETS_PER_DECADE;
+const MIN_MICROS: f64 = 1.0;
+
+/// Latency histogram with log-spaced buckets and exact min/max/mean.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_micros: f64,
+    min_micros: f64,
+    max_micros: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum_micros: 0.0,
+            min_micros: f64::INFINITY,
+            max_micros: 0.0,
+        }
+    }
+
+    fn bucket_of(micros: f64) -> usize {
+        if micros <= MIN_MICROS {
+            return 0;
+        }
+        let idx = (micros / MIN_MICROS).log10() * BUCKETS_PER_DECADE as f64;
+        (idx as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Upper edge (µs) of a bucket.
+    fn edge(idx: usize) -> f64 {
+        MIN_MICROS * 10f64.powf((idx + 1) as f64 / BUCKETS_PER_DECADE as f64)
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_micros += us;
+        self.min_micros = self.min_micros.min(us);
+        self.max_micros = self.max_micros.max(us);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_micros += other.sum_micros;
+        self.min_micros = self.min_micros.min(other.min_micros);
+        self.max_micros = self.max_micros.max(other.max_micros);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(self.sum_micros / self.count as f64 / 1e6)
+    }
+
+    pub fn min(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(self.min_micros / 1e6)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_secs_f64(self.max_micros / 1e6)
+    }
+
+    /// Quantile via bucket interpolation (upper edge — conservative).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return Duration::from_secs_f64(
+                    Self::edge(i).min(self.max_micros.max(MIN_MICROS)) / 1e6,
+                );
+            }
+        }
+        self.max()
+    }
+
+    /// "p50=…ms p95=…ms p99=…ms mean=…ms" summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.count,
+            self.mean().as_secs_f64() * 1e3,
+            self.quantile(0.50).as_secs_f64() * 1e3,
+            self.quantile(0.95).as_secs_f64() * 1e3,
+            self.quantile(0.99).as_secs_f64() * 1e3,
+            self.max().as_secs_f64() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max());
+        // p50 within a bucket-width of the true median (log buckets: ~12%)
+        let true_median = 500e-6;
+        assert!((p50.as_secs_f64() - true_median).abs() / true_median < 0.2);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert!((h.mean().as_secs_f64() - 0.020).abs() < 1e-9);
+        assert_eq!(h.min(), Duration::from_millis(10));
+        assert_eq!(h.max(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(Duration::from_millis(1));
+        b.record(Duration::from_millis(100));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), Duration::from_millis(100));
+        assert_eq!(a.min(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,116 @@
+//! Throughput meter + per-stage wall-time accounting (Fig 4 data).
+
+use std::time::{Duration, Instant};
+
+/// Counts completed items over a wall-clock window.
+#[derive(Debug)]
+pub struct Throughput {
+    started: Instant,
+    items: u64,
+    tokens: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self { started: Instant::now(), items: 0, tokens: 0 }
+    }
+
+    pub fn record(&mut self, items: u64, tokens: u64) {
+        self.items += items;
+        self.tokens += tokens;
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Items per second — the paper's Table 1 "Speed" column
+    /// (samples/sec).
+    pub fn items_per_sec(&self) -> f64 {
+        let s = self.elapsed().as_secs_f64();
+        if s > 0.0 {
+            self.items as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let s = self.elapsed().as_secs_f64();
+        if s > 0.0 {
+            self.tokens as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Accumulated busy-time per named pipeline stage.
+#[derive(Debug, Default, Clone)]
+pub struct StageTimer {
+    pub preprocess: Duration,
+    pub inference: Duration,
+    pub postprocess: Duration,
+}
+
+impl StageTimer {
+    pub fn add(&mut self, other: &StageTimer) {
+        self.preprocess += other.preprocess;
+        self.inference += other.inference;
+        self.postprocess += other.postprocess;
+    }
+
+    pub fn total(&self) -> Duration {
+        self.preprocess + self.inference + self.postprocess
+    }
+
+    /// Fraction of busy time spent outside inference — the Amdahl bound
+    /// on what the paper's multi-process pipeline (Fig 4) can hide.
+    pub fn overlappable_fraction(&self) -> f64 {
+        let t = self.total().as_secs_f64();
+        if t == 0.0 {
+            return 0.0;
+        }
+        (self.preprocess + self.postprocess).as_secs_f64() / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.record(3, 30);
+        t.record(1, 10);
+        assert_eq!(t.items(), 4);
+        assert_eq!(t.tokens(), 40);
+        assert!(t.items_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn stage_timer_fractions() {
+        let st = StageTimer {
+            preprocess: Duration::from_millis(10),
+            inference: Duration::from_millis(80),
+            postprocess: Duration::from_millis(10),
+        };
+        assert!((st.overlappable_fraction() - 0.2).abs() < 1e-9);
+        assert_eq!(st.total(), Duration::from_millis(100));
+    }
+}

@@ -1,0 +1,10 @@
+//! Serving metrics: latency histograms, throughput meters, per-stage
+//! timers, and the Table-1-style report formatter.
+
+mod histogram;
+mod meter;
+mod report;
+
+pub use histogram::Histogram;
+pub use meter::{StageTimer, Throughput};
+pub use report::{LadderRow, Report};

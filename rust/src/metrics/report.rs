@@ -1,0 +1,87 @@
+//! Table-1-style report formatting: the ablation ladder rows the paper
+//! prints (method, speed, speedup vs. baseline).
+
+use std::fmt::Write as _;
+
+/// One ladder row (paper Table 1).
+#[derive(Debug, Clone)]
+pub struct LadderRow {
+    pub step: usize,
+    pub method: String,
+    /// Samples per second ("Speed" in the paper).
+    pub speed: f64,
+    /// Mean per-request latency (ms) — extra visibility vs. the paper.
+    pub latency_ms: f64,
+    /// Summary-token accuracy vs. ground truth (quality guard).
+    pub accuracy: f64,
+}
+
+/// Collects rows and renders the final table.
+#[derive(Debug, Default, Clone)]
+pub struct Report {
+    pub rows: Vec<LadderRow>,
+}
+
+impl Report {
+    pub fn push(&mut self, row: LadderRow) {
+        self.rows.push(row);
+    }
+
+    pub fn baseline_speed(&self) -> Option<f64> {
+        self.rows.first().map(|r| r.speed)
+    }
+
+    /// Render the table (paper Table 1 layout + speedup column).
+    pub fn render(&self) -> String {
+        let base = self.baseline_speed().unwrap_or(1.0).max(1e-9);
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "| # | Method                            | Speed (samples/s) | Speedup | Latency (ms) | Summary acc |"
+        );
+        let _ = writeln!(
+            s,
+            "|---|-----------------------------------|-------------------|---------|--------------|-------------|"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "| {} | {:<33} | {:>17.2} | {:>6.2}x | {:>12.2} | {:>11.3} |",
+                r.step,
+                r.method,
+                r.speed,
+                r.speed / base,
+                r.latency_ms,
+                r.accuracy,
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_speedup() {
+        let mut rep = Report::default();
+        rep.push(LadderRow {
+            step: 1,
+            method: "Baseline".into(),
+            speed: 10.0,
+            latency_ms: 100.0,
+            accuracy: 0.9,
+        });
+        rep.push(LadderRow {
+            step: 2,
+            method: "Fast transformer".into(),
+            speed: 60.0,
+            latency_ms: 16.0,
+            accuracy: 0.9,
+        });
+        let out = rep.render();
+        assert!(out.contains("6.00x"));
+        assert!(out.contains("Baseline"));
+    }
+}

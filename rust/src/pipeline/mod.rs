@@ -1,0 +1,377 @@
+//! The paper's §3.3 "multi-process parallel processing" (Fig 4).
+//!
+//! Four logical stages — main (feeder), data preprocessing, model
+//! inference, data post-processing — connected by BOUNDED channels so a
+//! slow stage backpressures the others instead of ballooning memory.
+//! The paper uses OS processes because CPython's GIL serializes threads;
+//! rust threads give the same overlap semantics cheaper (DESIGN.md §3).
+//!
+//! Two executors over the SAME stage code so the Fig 4 / Table 1 row-4
+//! comparison isolates exactly the overlap:
+//! - [`run_sequential`]: stages run one after another on one thread
+//!   (rows 1-3 of Table 1);
+//! - [`run_pipelined`]: stage-per-thread with bounded handoff (row 4).
+//!
+//! The inference stage CONSTRUCTS the PJRT runtime inside its own thread
+//! (the `xla` client is `Rc`-based, not `Send`); everything crosses
+//! stages as plain data.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::ServingConfig;
+use crate::coordinator::{
+    run_batch, Batch, DynamicBatcher, PreparedRequest, ServingResponse,
+};
+use crate::coordinator::request::summary_accuracy;
+use crate::data::Request;
+use crate::engine::{build as build_engine, sampler_for};
+use crate::metrics::{Histogram, StageTimer};
+use crate::runtime::{Runtime, RuntimeStats};
+use crate::tokenizer::{decode as detokenize, Encode, FastTokenizer, Vocab};
+use crate::{special, Error, Result};
+
+/// Outcome of a (sequential or pipelined) serving run.
+#[derive(Debug)]
+pub struct RunSummary {
+    pub responses: Vec<ServingResponse>,
+    pub latency: Histogram,
+    pub stages: StageTimer,
+    pub wall: Duration,
+    /// Completed requests per second over raw wall time (includes any
+    /// first-use XLA compilation that happened during the run).
+    pub samples_per_sec_raw: f64,
+    /// Completed requests per second with one-time XLA compilation
+    /// excluded — the steady-state "Speed" of the paper's Table 1 (their
+    /// engines also build/load once before serving).
+    pub samples_per_sec: f64,
+    pub generated_tokens: u64,
+    pub mean_accuracy: f64,
+    /// PJRT counters from the inference runtime (compiles, transfers).
+    pub runtime_stats: RuntimeStats,
+}
+
+fn summarize(
+    responses: Vec<ServingResponse>,
+    stages: StageTimer,
+    wall: Duration,
+    runtime_stats: RuntimeStats,
+) -> RunSummary {
+    let mut latency = Histogram::new();
+    let mut generated_tokens = 0u64;
+    let mut acc_sum = 0.0;
+    let mut acc_n = 0usize;
+    for r in &responses {
+        latency.record(r.latency);
+        generated_tokens += r.summary_ids.len() as u64;
+        if let Some(a) = r.accuracy {
+            acc_sum += a;
+            acc_n += 1;
+        }
+    }
+    let samples_per_sec_raw = if wall.as_secs_f64() > 0.0 {
+        responses.len() as f64 / wall.as_secs_f64()
+    } else {
+        0.0
+    };
+    // compile happens on the inference critical path in both executors,
+    // so subtracting it from wall gives the steady-state rate
+    let steady = (wall.as_secs_f64() - runtime_stats.compile_secs).max(1e-9);
+    RunSummary {
+        samples_per_sec_raw,
+        samples_per_sec: responses.len() as f64 / steady,
+        runtime_stats,
+        mean_accuracy: if acc_n > 0 { acc_sum / acc_n as f64 } else { 0.0 },
+        generated_tokens,
+        latency,
+        stages,
+        wall,
+        responses,
+    }
+}
+
+// ---------------------------------------------------------------- stages
+
+/// Preprocess: normalize + tokenize + frame as `[BOS] doc [SEP]`,
+/// truncating so prompt + generation budget fits `max_seq`.
+pub fn preprocess(
+    tok: &FastTokenizer,
+    vocab_limit: u32,
+    max_seq: usize,
+    req: &Request,
+    enqueued: Instant,
+) -> PreparedRequest {
+    let mut ids = tok.encode(&req.text, vocab_limit);
+    let budget = max_seq
+        .saturating_sub(2 + req.max_new_tokens)
+        .max(1);
+    ids.truncate(budget);
+    let mut prompt = Vec::with_capacity(ids.len() + 2);
+    prompt.push(special::BOS);
+    prompt.extend_from_slice(&ids);
+    prompt.push(special::SEP);
+    PreparedRequest {
+        id: req.id,
+        prompt,
+        max_new_tokens: req.max_new_tokens,
+        reference_summary: req.reference_summary.clone(),
+        enqueued,
+    }
+}
+
+/// Postprocess: detokenize + score + stamp latency.
+pub fn postprocess(
+    vocab: &Vocab,
+    req: &PreparedRequest,
+    generated: Vec<u32>,
+) -> ServingResponse {
+    let summary_text = detokenize(vocab, &generated);
+    let accuracy = req
+        .reference_summary
+        .as_ref()
+        .map(|r| summary_accuracy(&generated, r));
+    ServingResponse {
+        id: req.id,
+        latency: req.enqueued.elapsed(),
+        summary_ids: generated,
+        summary_text,
+        accuracy,
+    }
+}
+
+fn make_tokenizer(runtime_vocab: usize) -> FastTokenizer {
+    FastTokenizer::new(Vocab::synthetic(runtime_vocab))
+}
+
+// ----------------------------------------------------------- sequential
+
+/// Rows 1-3: stages executed strictly in order on the caller's thread.
+pub fn run_sequential(
+    cfg: &ServingConfig,
+    requests: &[Request],
+) -> Result<RunSummary> {
+    cfg.validate()?;
+    let runtime = std::rc::Rc::new(Runtime::new(&cfg.artifacts_dir)?);
+    // The tokenizer always speaks the FULL vocabulary; pruned engines see
+    // a prefix via vocab_limit (re-segmentation happens in the encoder).
+    let full_vocab = runtime.manifest.config_for("baseline").vocab_size;
+    let tok = make_tokenizer(full_vocab);
+    let engine = build_engine(cfg.engine, runtime.clone(), cfg.gen)?;
+    if cfg.precompile {
+        crate::engine::precompile(cfg.engine, &runtime)?;
+    }
+    let mut sampler = sampler_for(cfg.sampling);
+    let mut batcher = DynamicBatcher::new(
+        cfg.batch.clone(),
+        runtime.manifest.seq_lens.clone(),
+    );
+
+    let mut stages = StageTimer::default();
+    let mut responses = Vec::with_capacity(requests.len());
+    let wall_start = Instant::now();
+    // only compilation INSIDE the measured window counts against steady
+    // state (precompile above already ran before wall_start)
+    let compile_before = runtime.stats().compile_secs;
+
+    // Offline semantics: the whole workload is available up front (the
+    // paper's test-set runs are the same), so preprocess everything, let
+    // the batcher form size-aligned batches, and only force-flush the
+    // residual tails.  This keeps batch composition independent of how
+    // long each inference call happens to take (timeout flushes are a
+    // STREAMING policy — exercised by the pipelined executor and server).
+    for req in requests {
+        let t = Instant::now();
+        let prepared = preprocess(
+            &tok,
+            engine.vocab_limit(),
+            engine.max_seq(),
+            req,
+            Instant::now(),
+        );
+        stages.preprocess += t.elapsed();
+        batcher.push(prepared);
+    }
+    for force in [false, true] {
+        while let Some(batch) = batcher.pop_full_or(force) {
+            let t = Instant::now();
+            let outs = run_batch(engine.as_ref(), &mut sampler, &batch)?;
+            stages.inference += t.elapsed();
+
+            let t = Instant::now();
+            for (req, generated) in outs {
+                responses.push(postprocess(tok.vocab(), &req, generated));
+            }
+            stages.postprocess += t.elapsed();
+        }
+    }
+
+    let mut rt_stats = runtime.stats();
+    rt_stats.compile_secs -= compile_before;
+    Ok(summarize(responses, stages, wall_start.elapsed(), rt_stats))
+}
+
+// ------------------------------------------------------------ pipelined
+
+/// Row 4: stage-per-thread with bounded channels (Fig 4).
+pub fn run_pipelined(
+    cfg: &ServingConfig,
+    requests: &[Request],
+) -> Result<RunSummary> {
+    cfg.validate()?;
+    // Manifest read on the main thread for static facts; the runtime
+    // itself is created inside the inference thread.
+    let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+    let full_vocab = manifest.config_for("baseline").vocab_size;
+    let engine_cfg = manifest.config_for(cfg.engine.variant());
+    let vocab_limit = engine_cfg.vocab_size as u32;
+    let max_seq = manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.variant == cfg.engine.variant())
+        .map(|a| a.seq)
+        .max()
+        .ok_or_else(|| Error::Manifest("no artifacts for engine".into()))?;
+    let seq_lens = manifest.seq_lens.clone();
+    drop(manifest);
+
+    let tok = Arc::new(make_tokenizer(full_vocab));
+    let (pre_tx, pre_rx) = mpsc::sync_channel::<(Request, Instant)>(
+        cfg.stage_queue * cfg.batch.max_batch,
+    );
+    let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(cfg.stage_queue);
+    let (post_tx, post_rx) =
+        mpsc::sync_channel::<(Batch, Vec<Vec<u32>>, Duration)>(cfg.stage_queue);
+
+    // --- preprocessing process (tokenize + dynamic batching) ----------
+    let pre_cfg = cfg.batch.clone();
+    let pre_tok = tok.clone();
+    let pre_handle = std::thread::Builder::new()
+        .name("preprocess".into())
+        .spawn(move || -> Result<Duration> {
+            let mut busy = Duration::ZERO;
+            let mut batcher = DynamicBatcher::new(pre_cfg.clone(), seq_lens);
+            loop {
+                match pre_rx.recv_timeout(Duration::from_millis(
+                    pre_cfg.max_wait_ms.max(1),
+                )) {
+                    Ok((req, enq)) => {
+                        let t = Instant::now();
+                        let prepared = preprocess(
+                            &pre_tok, vocab_limit, max_seq, &req, enq,
+                        );
+                        busy += t.elapsed();
+                        batcher.push(prepared);
+                        while let Some(b) = batcher.pop(false) {
+                            batch_tx
+                                .send(b)
+                                .map_err(|_| Error::Shutdown("batch chan"))?;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        while let Some(b) = batcher.pop(true) {
+                            batch_tx
+                                .send(b)
+                                .map_err(|_| Error::Shutdown("batch chan"))?;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        while let Some(b) = batcher.pop(true) {
+                            batch_tx
+                                .send(b)
+                                .map_err(|_| Error::Shutdown("batch chan"))?;
+                        }
+                        return Ok(busy);
+                    }
+                }
+            }
+        })
+        .expect("spawn preprocess");
+
+    // --- model inference process (owns the PJRT runtime) --------------
+    let inf_cfg = cfg.clone();
+    let (ready_tx, ready_rx) = mpsc::channel::<()>();
+    let inf_handle = std::thread::Builder::new()
+        .name("inference".into())
+        .spawn(move || -> Result<(Duration, RuntimeStats)> {
+            let runtime =
+                std::rc::Rc::new(Runtime::new(&inf_cfg.artifacts_dir)?);
+            let engine =
+                build_engine(inf_cfg.engine, runtime.clone(), inf_cfg.gen)?;
+            if inf_cfg.precompile {
+                crate::engine::precompile(inf_cfg.engine, &runtime)?;
+            }
+            let _ = ready_tx.send(());
+            let compile_before = runtime.stats().compile_secs;
+            let mut sampler = sampler_for(inf_cfg.sampling);
+            let mut busy = Duration::ZERO;
+            for batch in batch_rx.iter() {
+                let t = Instant::now();
+                let outs =
+                    run_batch(engine.as_ref(), &mut sampler, &batch)?;
+                let dt = t.elapsed();
+                busy += dt;
+                let generated: Vec<Vec<u32>> =
+                    outs.into_iter().map(|(_, g)| g).collect();
+                post_tx
+                    .send((batch, generated, dt))
+                    .map_err(|_| Error::Shutdown("post chan"))?;
+            }
+            let mut st = runtime.stats();
+            st.compile_secs -= compile_before;
+            Ok((busy, st))
+        })
+        .expect("spawn inference");
+
+    // --- post-processing process --------------------------------------
+    let post_tok = tok.clone();
+    let post_handle = std::thread::Builder::new()
+        .name("postprocess".into())
+        .spawn(move || -> (Vec<ServingResponse>, Duration) {
+            let mut busy = Duration::ZERO;
+            let mut responses = Vec::new();
+            for (batch, generated, _inf_dt) in post_rx.iter() {
+                let t = Instant::now();
+                for (req, gen) in batch.requests.iter().zip(generated) {
+                    responses.push(postprocess(post_tok.vocab(), req, gen));
+                }
+                busy += t.elapsed();
+            }
+            (responses, busy)
+        })
+        .expect("spawn postprocess");
+
+    // --- main process: wait for the engine, then feed the trace --------
+    // (the ready gate keeps startup compilation out of request latency)
+    let _ = ready_rx.recv();
+    let wall_start = Instant::now();
+    for req in requests {
+        pre_tx
+            .send((req.clone(), Instant::now()))
+            .map_err(|_| Error::Shutdown("pre chan"))?;
+    }
+    drop(pre_tx); // end of input: stages drain and exit in order
+
+    let pre_busy = pre_handle.join().expect("preprocess panicked")?;
+    let (inf_busy, rt_stats) =
+        inf_handle.join().expect("inference panicked")?;
+    let (responses, post_busy) =
+        post_handle.join().expect("postprocess panicked");
+    let wall = wall_start.elapsed();
+
+    let stages = StageTimer {
+        preprocess: pre_busy,
+        inference: inf_busy,
+        postprocess: post_busy,
+    };
+    Ok(summarize(responses, stages, wall, rt_stats))
+}
+
+/// Dispatch on `cfg.pipelined`.
+pub fn run(cfg: &ServingConfig, requests: &[Request]) -> Result<RunSummary> {
+    if cfg.pipelined {
+        run_pipelined(cfg, requests)
+    } else {
+        run_sequential(cfg, requests)
+    }
+}

@@ -1,0 +1,114 @@
+//! Embedding-pruning analysis (§3.2): quantifies WHY the paper's vocab
+//! trim and position-table trim are safe, on the synthetic corpus.
+//!
+//! Produces (a) vocab coverage curves — what fraction of token
+//! occurrences a frequency-prefix retains — and (b) the Fig 3
+//! sequence-length histogram that justifies 512→128 positions.
+
+use crate::data::{CorpusConfig, Generator};
+use crate::tokenizer::{CoveragePoint, Encode, FastTokenizer, FreqStats, Vocab};
+
+/// Vocab-pruning study over a freshly generated corpus sample.
+pub struct PruningAnalysis {
+    pub stats: FreqStats,
+    pub n_docs: usize,
+}
+
+impl PruningAnalysis {
+    /// Tokenize `n_docs` synthetic documents and collect id frequencies.
+    pub fn run(cfg: &CorpusConfig, n_docs: usize, seed: u64) -> Self {
+        let tok = FastTokenizer::new(Vocab::synthetic(cfg.vocab_size));
+        let mut gen = Generator::new(cfg.clone(), seed);
+        let mut stats = FreqStats::new(cfg.vocab_size);
+        for _ in 0..n_docs {
+            let d = gen.generate();
+            let ids = tok.encode(&d.text, cfg.vocab_size as u32);
+            stats.observe(&ids);
+        }
+        Self { stats, n_docs }
+    }
+
+    /// Coverage curve at standard prefix fractions of the vocabulary.
+    pub fn coverage_curve(&self, vocab_size: usize) -> Vec<CoveragePoint> {
+        let prefixes: Vec<usize> = [
+            0.05, 0.1, 0.25, 0.5, 0.75, 1.0,
+        ]
+        .iter()
+        .map(|f| ((vocab_size as f64 * f) as usize).max(1))
+        .collect();
+        self.stats.coverage_curve(&prefixes)
+    }
+}
+
+/// Fig 3: histogram of document lengths (tokens), fixed bins.
+pub fn length_histogram(
+    cfg: &CorpusConfig,
+    n_docs: usize,
+    seed: u64,
+    bin_width: usize,
+) -> Vec<(usize, u64)> {
+    let mut gen = Generator::new(cfg.clone(), seed);
+    let n_bins = cfg.max_doc_len / bin_width + 1;
+    let mut bins = vec![0u64; n_bins];
+    for _ in 0..n_docs {
+        let l = gen.generate().len();
+        bins[(l / bin_width).min(n_bins - 1)] += 1;
+    }
+    bins.iter()
+        .enumerate()
+        .map(|(i, &c)| (i * bin_width, c))
+        .collect()
+}
+
+/// The paper's position-table claim: fraction of docs that fit within
+/// `max_position` once packed as [BOS] doc [SEP] summary [EOS].
+pub fn fit_fraction(cfg: &CorpusConfig, n_docs: usize, seed: u64,
+                    max_position: usize) -> f64 {
+    let mut gen = Generator::new(cfg.clone(), seed);
+    let mut fit = 0usize;
+    for _ in 0..n_docs {
+        let d = gen.generate();
+        let packed = d.len() + d.summary_tokens.len() + 3;
+        if packed <= max_position {
+            fit += 1;
+        }
+    }
+    fit as f64 / n_docs as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn half_vocab_covers_most_tokens() {
+        let cfg = CorpusConfig::default();
+        let a = PruningAnalysis::run(&cfg, 200, 0);
+        let half = a.stats.coverage_at(cfg.vocab_size / 2);
+        assert!(half > 0.9, "coverage {half}");
+    }
+
+    #[test]
+    fn histogram_mass_below_100() {
+        let cfg = CorpusConfig::default();
+        let h = length_histogram(&cfg, 1000, 0, 20);
+        let total: u64 = h.iter().map(|(_, c)| c).sum();
+        let short: u64 = h
+            .iter()
+            .filter(|(edge, _)| *edge < 100)
+            .map(|(_, c)| c)
+            .sum();
+        assert_eq!(total, 1000);
+        assert!(short as f64 / total as f64 > 0.85);
+    }
+
+    #[test]
+    fn most_docs_fit_128_positions() {
+        let cfg = CorpusConfig::default();
+        // the paper trims 512 -> 128 because "input sentences are
+        // typically less than 100 words"
+        let f = fit_fraction(&cfg, 1000, 0, 128);
+        assert!(f > 0.85, "fit fraction {f}");
+        assert!(fit_fraction(&cfg, 1000, 0, 512) > 0.999);
+    }
+}

@@ -1,0 +1,273 @@
+//! The PJRT client wrapper: compile cache, persistent device-resident
+//! weights, and the execute path used by every engine.
+//!
+//! Execution protocol (per graph, from the manifest):
+//!   args = [ all params (device-resident, uploaded once) ]
+//!        ++ [ data args (uploaded per call; KV caches round-trip as
+//!             opaque literals so their dtype — fp16 for the FT engines —
+//!             never needs host-side decoding) ]
+//! The lowered graphs return a single tuple (return_tuple=True at
+//! lowering), which we decompose into one [`xla::Literal`] per output.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::runtime::weights::HostWeights;
+use crate::{Error, Result};
+
+/// One data (non-param) argument for a graph call.
+pub enum DataArg {
+    /// Host i32 tensor (token ids, lengths, positions).
+    I32(Vec<i32>, Vec<usize>),
+    /// Host f32 tensor.
+    F32(Vec<f32>, Vec<usize>),
+    /// An opaque literal from a previous call (KV caches).
+    Lit(xla::Literal),
+}
+
+/// Counters for EXPERIMENTS.md §Perf and the metrics endpoint.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+    pub upload_secs: f64,
+    pub download_secs: f64,
+}
+
+/// A compiled artifact plus its manifest entry.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+}
+
+/// Thread-confined PJRT runtime (see module docs).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// name -> compiled executable (compile-once cache).
+    executables: RefCell<HashMap<String, Rc<Executable>>>,
+    /// "full"/"pruned" -> device-resident parameter buffers.
+    weights: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+    host_weights: HashMap<String, HostWeights>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load the manifest + weight blobs from `artifacts_dir` and stand up
+    /// a CPU PJRT client.  Weights are uploaded lazily per variant.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut host_weights = HashMap::new();
+        for (key, entry) in &manifest.weights {
+            host_weights
+                .insert(key.clone(), HostWeights::load(&manifest.dir, entry)?);
+        }
+        Ok(Self {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            host_weights,
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Host-side weights for a variant (used by pruning analysis).
+    pub fn host_weights(&self, key: &str) -> Option<&HostWeights> {
+        self.host_weights.get(key)
+    }
+
+    /// Select the cheapest compiled bucket with `batch >= b && seq >= s`.
+    ///
+    /// This is the static-shape face of the paper's "allocation of data
+    /// inference order": the batcher aims batches at exact buckets and
+    /// this lookup guarantees safety when it cannot.
+    pub fn select(
+        &self,
+        kind: &str,
+        variant: &str,
+        batch: usize,
+        seq: usize,
+    ) -> Result<&ArtifactEntry> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind
+                    && a.variant == variant
+                    && a.batch >= batch
+                    && a.seq >= seq
+            })
+            // cheapest = fewest padded elements
+            .min_by_key(|a| a.batch * a.seq)
+            .ok_or_else(|| Error::NoBucket {
+                kind: kind.into(),
+                variant: variant.into(),
+                batch,
+                seq,
+            })
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.executables.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown artifact {name}")))?
+            .clone();
+        let path = self.manifest.dir.join(&entry.path);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Other("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        let e = Rc::new(Executable { exe, entry });
+        self.executables
+            .borrow_mut()
+            .insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Device-resident parameter buffers for a weights key, uploading on
+    /// first use (the "model loading" step of the paper's pipeline).
+    pub fn device_weights(&self, key: &str) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
+        if let Some(w) = self.weights.borrow().get(key) {
+            return Ok(w.clone());
+        }
+        let host = self.host_weights.get(key).ok_or_else(|| {
+            Error::Manifest(format!("no weights variant '{key}'"))
+        })?;
+        let t0 = Instant::now();
+        let mut bufs = Vec::with_capacity(host.params.len());
+        for p in &host.params {
+            bufs.push(self.client.buffer_from_host_buffer::<f32>(
+                &p.data,
+                &p.shape,
+                None,
+            )?);
+        }
+        self.stats.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+        let rc = Rc::new(bufs);
+        self.weights.borrow_mut().insert(key.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute `exe` with its variant's weights plus `data` args.
+    /// Returns the decomposed output literals in manifest order.
+    pub fn run(
+        &self,
+        exe: &Executable,
+        data: Vec<DataArg>,
+    ) -> Result<Vec<xla::Literal>> {
+        let wkey = self.manifest.weights_key_for(&exe.entry.variant);
+        let weights = self.device_weights(wkey)?;
+
+        let n_data_expected = exe
+            .entry
+            .inputs
+            .iter()
+            .filter(|i| i.role == "data")
+            .count();
+        if data.len() != n_data_expected {
+            return Err(Error::Other(format!(
+                "{}: expected {n_data_expected} data args, got {}",
+                exe.entry.name,
+                data.len()
+            )));
+        }
+
+        // Upload data args.
+        //
+        // SAFETY/lifetime note: `BufferFromHostLiteral` (the PJRT CPU
+        // client) transfers ASYNCHRONOUSLY — the source literal must stay
+        // alive until the execute below has consumed the buffer.  `data`
+        // is therefore held until after the output download (which
+        // synchronizes the stream) and only dropped at function exit.
+        // `buffer_from_host_buffer` copies during the call
+        // (kImmutableOnlyDuringCall), so the I32/F32 vecs have no such
+        // constraint, but they ride along anyway.
+        let t_up = Instant::now();
+        let mut data_bufs = Vec::with_capacity(data.len());
+        for arg in &data {
+            let buf = match arg {
+                DataArg::I32(v, dims) => {
+                    self.client.buffer_from_host_buffer::<i32>(v, dims, None)?
+                }
+                DataArg::F32(v, dims) => {
+                    self.client.buffer_from_host_buffer::<f32>(v, dims, None)?
+                }
+                DataArg::Lit(lit) => {
+                    self.client.buffer_from_host_literal(None, lit)?
+                }
+            };
+            data_bufs.push(buf);
+        }
+        let upload_secs = t_up.elapsed().as_secs_f64();
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(weights.len() + data_bufs.len());
+        args.extend(weights.iter());
+        args.extend(data_bufs.iter());
+
+        let t_ex = Instant::now();
+        let out = exe.exe.execute_b(&args)?;
+        let execute_secs = t_ex.elapsed().as_secs_f64();
+
+        let t_dl = Instant::now();
+        let tuple = out[0][0].to_literal_sync()?;
+        let outputs = tuple.to_tuple()?;
+        let download_secs = t_dl.elapsed().as_secs_f64();
+
+        if outputs.len() != exe.entry.outputs.len() {
+            return Err(Error::Other(format!(
+                "{}: graph returned {} outputs, manifest says {}",
+                exe.entry.name,
+                outputs.len(),
+                exe.entry.outputs.len()
+            )));
+        }
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.upload_secs += upload_secs;
+        st.execute_secs += execute_secs;
+        st.download_secs += download_secs;
+        drop(st);
+        // keep input literals alive past the synchronized download
+        drop(data);
+        Ok(outputs)
+    }
+}
+
+/// Read a `[rows, cols]` f32 literal into a flat host vector.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read an i32 literal into a flat host vector.
+pub fn literal_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}

@@ -1,0 +1,450 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! python compile path and this runtime.  `python/compile/aot.py` is the
+//! producer; nothing else writes it.  Decoded with the in-crate JSON
+//! parser ([`crate::util::json`]).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+/// Architecture hyper-parameters (mirrors `python/compile/config.py`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub max_position: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub d_head: usize,
+    pub dtype: String,
+}
+
+/// One named parameter inside a flat weight blob.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// A weight blob (`weights_full.bin` / `weights_pruned.bin`).
+#[derive(Debug, Clone)]
+pub struct WeightsEntry {
+    pub path: String,
+    pub params: Vec<ParamEntry>,
+}
+
+/// One input or output of a lowered graph.
+#[derive(Debug, Clone)]
+pub struct IoEntry {
+    pub name: String,
+    pub role: String, // "param" | "data" | "out"
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "f16" | "bf16" | "s32"
+}
+
+/// One AOT-lowered executable (an `.hlo.txt` file).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: String,
+    /// "baseline_fwd" | "ft_prefill" | "ft_decode" | "ft_decode_multi"
+    pub kind: String,
+    /// "baseline" | "full" | "pruned"
+    pub variant: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub dtype: String,
+    pub vocab_size: usize,
+    pub max_position: usize,
+    pub inputs: Vec<IoEntry>,
+    pub outputs: Vec<IoEntry>,
+    /// Only for kind == "ft_decode_multi": tokens emitted per call.
+    pub steps: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SpecialTokens {
+    pub pad: u32,
+    pub bos: u32,
+    pub eos: u32,
+    pub sep: u32,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub input_hash: String,
+    pub special_tokens: SpecialTokens,
+    pub configs: Vec<(String, ModelConfig)>,
+    pub weights: Vec<(String, WeightsEntry)>,
+    pub multi_steps: usize,
+    pub batch_sizes: Vec<usize>,
+    pub seq_lens: Vec<usize>,
+    pub artifacts: Vec<ArtifactEntry>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+fn need_str(v: &Value, key: &str, ctx: &str) -> Result<String> {
+    v.get(key)
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Manifest(format!("{ctx}: missing string '{key}'")))
+}
+
+fn need_usize(v: &Value, key: &str, ctx: &str) -> Result<usize> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| Error::Manifest(format!("{ctx}: missing integer '{key}'")))
+}
+
+fn usize_array(v: &Value, key: &str, ctx: &str) -> Result<Vec<usize>> {
+    v.get(key)
+        .as_array()
+        .ok_or_else(|| Error::Manifest(format!("{ctx}: missing array '{key}'")))?
+        .iter()
+        .map(|x| {
+            x.as_usize().ok_or_else(|| {
+                Error::Manifest(format!("{ctx}: non-integer in '{key}'"))
+            })
+        })
+        .collect()
+}
+
+fn parse_model_config(v: &Value, ctx: &str) -> Result<ModelConfig> {
+    Ok(ModelConfig {
+        vocab_size: need_usize(v, "vocab_size", ctx)?,
+        max_position: need_usize(v, "max_position", ctx)?,
+        d_model: need_usize(v, "d_model", ctx)?,
+        n_layers: need_usize(v, "n_layers", ctx)?,
+        n_heads: need_usize(v, "n_heads", ctx)?,
+        d_ff: need_usize(v, "d_ff", ctx)?,
+        d_head: need_usize(v, "d_head", ctx)?,
+        dtype: need_str(v, "dtype", ctx)?,
+    })
+}
+
+fn parse_io(v: &Value, ctx: &str) -> Result<IoEntry> {
+    Ok(IoEntry {
+        name: need_str(v, "name", ctx)?,
+        role: need_str(v, "role", ctx)?,
+        shape: usize_array(v, "shape", ctx)?,
+        dtype: need_str(v, "dtype", ctx)?,
+    })
+}
+
+impl Manifest {
+    /// Load and sanity-check `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} ({e}); run `make artifacts`",
+                path.display()
+            ))
+        })?;
+        let v = json::parse(&text)?;
+        let m = Self::from_value(&v, dir)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn from_value(v: &Value, dir: &Path) -> Result<Self> {
+        let st = v.get("special_tokens");
+        let special_tokens = SpecialTokens {
+            pad: need_usize(st, "pad", "special_tokens")? as u32,
+            bos: need_usize(st, "bos", "special_tokens")? as u32,
+            eos: need_usize(st, "eos", "special_tokens")? as u32,
+            sep: need_usize(st, "sep", "special_tokens")? as u32,
+        };
+
+        let mut configs = Vec::new();
+        for (k, cv) in v
+            .get("configs")
+            .as_object()
+            .ok_or_else(|| Error::Manifest("missing configs".into()))?
+        {
+            configs.push((k.clone(), parse_model_config(cv, k)?));
+        }
+
+        let mut weights = Vec::new();
+        for (k, wv) in v
+            .get("weights")
+            .as_object()
+            .ok_or_else(|| Error::Manifest("missing weights".into()))?
+        {
+            let params = wv
+                .get("params")
+                .as_array()
+                .ok_or_else(|| {
+                    Error::Manifest(format!("weights[{k}]: missing params"))
+                })?
+                .iter()
+                .map(|p| {
+                    Ok(ParamEntry {
+                        name: need_str(p, "name", "param")?,
+                        shape: usize_array(p, "shape", "param")?,
+                        offset: need_usize(p, "offset", "param")?,
+                        nbytes: need_usize(p, "nbytes", "param")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            weights.push((
+                k.clone(),
+                WeightsEntry { path: need_str(wv, "path", "weights")?, params },
+            ));
+        }
+
+        let artifacts = v
+            .get("artifacts")
+            .as_array()
+            .ok_or_else(|| Error::Manifest("missing artifacts".into()))?
+            .iter()
+            .map(|a| {
+                let ctx = a.get("name").as_str().unwrap_or("artifact");
+                Ok(ArtifactEntry {
+                    name: need_str(a, "name", ctx)?,
+                    path: need_str(a, "path", ctx)?,
+                    kind: need_str(a, "kind", ctx)?,
+                    variant: need_str(a, "variant", ctx)?,
+                    batch: need_usize(a, "batch", ctx)?,
+                    seq: need_usize(a, "seq", ctx)?,
+                    dtype: need_str(a, "dtype", ctx)?,
+                    vocab_size: need_usize(a, "vocab_size", ctx)?,
+                    max_position: need_usize(a, "max_position", ctx)?,
+                    inputs: a
+                        .get("inputs")
+                        .as_array()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|io| parse_io(io, ctx))
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .as_array()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|io| parse_io(io, ctx))
+                        .collect::<Result<Vec<_>>>()?,
+                    steps: a.get("steps").as_usize(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            version: v.get("version").as_u64().unwrap_or(0),
+            input_hash: need_str(v, "input_hash", "manifest")?,
+            special_tokens,
+            configs,
+            weights,
+            multi_steps: need_usize(v, "multi_steps", "manifest")?,
+            batch_sizes: usize_array(v, "batch_sizes", "manifest")?,
+            seq_lens: usize_array(v, "seq_lens", "manifest")?,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.version != 1 {
+            return Err(Error::Manifest(format!(
+                "unsupported manifest version {}",
+                self.version
+            )));
+        }
+        let st = &self.special_tokens;
+        if (st.pad, st.bos, st.eos, st.sep)
+            != (
+                crate::special::PAD,
+                crate::special::BOS,
+                crate::special::EOS,
+                crate::special::SEP,
+            )
+        {
+            return Err(Error::Manifest(
+                "special token ids disagree with crate::special".into(),
+            ));
+        }
+        for key in ["full", "pruned"] {
+            if self.weights_entry(key).is_none() {
+                return Err(Error::Manifest(format!("missing weights[{key}]")));
+            }
+            if self.config(key).is_none() {
+                return Err(Error::Manifest(format!("missing configs[{key}]")));
+            }
+        }
+        for a in &self.artifacts {
+            if !self.dir.join(&a.path).exists() {
+                return Err(Error::MissingArtifact(a.path.clone()));
+            }
+            let n_params =
+                a.inputs.iter().filter(|i| i.role == "param").count();
+            let wkey = self.weights_key_for(&a.variant);
+            let expect = self.weights_entry(wkey).unwrap().params.len();
+            if n_params != expect {
+                return Err(Error::Manifest(format!(
+                    "{}: {n_params} param inputs but weights[{wkey}] has {expect}",
+                    a.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Which weight blob a graph variant consumes.
+    pub fn weights_key_for(&self, variant: &str) -> &'static str {
+        if variant == "pruned" {
+            "pruned"
+        } else {
+            "full"
+        }
+    }
+
+    pub fn weights_entry(&self, key: &str) -> Option<&WeightsEntry> {
+        self.weights.iter().find(|(k, _)| k == key).map(|(_, w)| w)
+    }
+
+    pub fn config(&self, key: &str) -> Option<&ModelConfig> {
+        self.configs.iter().find(|(k, _)| k == key).map(|(_, c)| c)
+    }
+
+    /// Model config for an engine variant ("baseline" shares "full").
+    pub fn config_for(&self, variant: &str) -> &ModelConfig {
+        match variant {
+            "pruned" => self.config("pruned").expect("validated"),
+            _ => self.config("full").expect("validated"),
+        }
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    /// Minimal syntactically-valid manifest with one artifact.
+    fn manifest_json(hlo_name: &str, n_params: usize) -> String {
+        let params: Vec<String> = (0..n_params)
+            .map(|i| {
+                format!(
+                    r#"{{"name":"p{i}","shape":[2],"offset":{},"nbytes":8}}"#,
+                    i * 8
+                )
+            })
+            .collect();
+        let params = params.join(",");
+        format!(
+            r#"{{
+  "version": 1,
+  "input_hash": "abc",
+  "special_tokens": {{"pad":0,"bos":1,"eos":2,"sep":3}},
+  "configs": {{
+    "full": {{"vocab_size":8,"max_position":4,"d_model":2,"n_layers":1,"n_heads":1,"d_ff":4,"d_head":2,"dtype":"f32"}},
+    "pruned": {{"vocab_size":4,"max_position":2,"d_model":2,"n_layers":1,"n_heads":1,"d_ff":4,"d_head":2,"dtype":"f32"}}
+  }},
+  "weights": {{
+    "full": {{"path":"w.bin","params":[{params}]}},
+    "pruned": {{"path":"w.bin","params":[{params}]}}
+  }},
+  "multi_steps": 8,
+  "batch_sizes": [1],
+  "seq_lens": [4],
+  "artifacts": [
+    {{"name":"{hlo_name}","path":"{hlo_name}.hlo.txt","kind":"baseline_fwd",
+      "variant":"baseline","batch":1,"seq":4,"dtype":"f32",
+      "vocab_size":8,"max_position":4,
+      "inputs":[{{"name":"p0","role":"param","shape":[2],"dtype":"f32"}},
+                {{"name":"t","role":"data","shape":[1,4],"dtype":"s32"}}],
+      "outputs":[{{"name":"o","role":"out","shape":[1,8],"dtype":"f32"}}]}}
+  ]
+}}"#
+        )
+    }
+
+    fn write_manifest(dir: &TempDir, text: &str, with_hlo: bool) {
+        std::fs::write(dir.path().join("manifest.json"), text).unwrap();
+        if with_hlo {
+            std::fs::write(dir.path().join("m.hlo.txt"), "HloModule m").unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = TempDir::new("man").unwrap();
+        write_manifest(&dir, &manifest_json("m", 1), true);
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.config_for("pruned").vocab_size, 4);
+        assert_eq!(m.config_for("baseline").vocab_size, 8);
+        assert_eq!(m.weights_key_for("pruned"), "pruned");
+        assert_eq!(m.weights_key_for("full"), "full");
+        assert_eq!(m.weights_key_for("baseline"), "full");
+        assert!(m.find("m").is_some());
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn missing_file_gives_actionable_error() {
+        let dir = TempDir::new("man").unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn missing_artifact_file_rejected() {
+        let dir = TempDir::new("man").unwrap();
+        write_manifest(&dir, &manifest_json("m", 1), false);
+        assert!(matches!(
+            Manifest::load(dir.path()),
+            Err(crate::Error::MissingArtifact(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let dir = TempDir::new("man").unwrap();
+        let text = manifest_json("m", 1).replace("\"version\": 1", "\"version\": 9");
+        write_manifest(&dir, &text, true);
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn special_token_mismatch_rejected() {
+        let dir = TempDir::new("man").unwrap();
+        let text = manifest_json("m", 1)
+            .replace(r#""pad":0"#, r#""pad":7"#);
+        write_manifest(&dir, &text, true);
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn param_count_mismatch_rejected() {
+        let dir = TempDir::new("man").unwrap();
+        // weights list 2 params but the artifact declares only 1
+        let text = manifest_json("m", 2);
+        write_manifest(&dir, &text, true);
+        let err = Manifest::load(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("param inputs"), "{err}");
+    }
+
+    #[test]
+    fn malformed_json_rejected() {
+        let dir = TempDir::new("man").unwrap();
+        write_manifest(&dir, "{not json", true);
+        assert!(matches!(
+            Manifest::load(dir.path()),
+            Err(crate::Error::Json(_))
+        ));
+    }
+}

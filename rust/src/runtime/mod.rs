@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (`*.hlo.txt`), compile once, execute
+//! from the serving hot path.
+//!
+//! Threading model: the `xla` crate's client is `Rc`-based (not `Send`),
+//! so a [`Runtime`] is **thread-confined** — the inference pipeline stage
+//! constructs it inside its own thread and everything else talks to that
+//! thread over channels (see [`crate::pipeline`]).  This mirrors the
+//! vLLM-style split between router threads and a model-executor thread.
+
+mod client;
+pub mod manifest;
+mod weights;
+
+pub use client::{DataArg, Executable, Runtime, RuntimeStats};
+pub use manifest::{ArtifactEntry, Manifest, ModelConfig};
+pub use weights::{HostParam, HostWeights};

@@ -1,0 +1,142 @@
+//! Weight loading: flat little-endian f32 blobs → host tensors → device
+//! buffers, driven entirely by the manifest index (no numpy/pickle).
+
+use std::path::Path;
+
+use crate::runtime::manifest::{ParamEntry, WeightsEntry};
+use crate::{Error, Result};
+
+/// One named host-side parameter tensor (row-major f32).
+#[derive(Debug, Clone)]
+pub struct HostParam {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostParam {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// All parameters of one model variant, in manifest (= graph input) order.
+#[derive(Debug, Clone)]
+pub struct HostWeights {
+    pub params: Vec<HostParam>,
+}
+
+impl HostWeights {
+    /// Read `dir/<entry.path>` and slice it per the manifest index.
+    pub fn load(dir: impl AsRef<Path>, entry: &WeightsEntry) -> Result<Self> {
+        let path = dir.as_ref().join(&entry.path);
+        let blob = std::fs::read(&path)?;
+        let total: usize = entry.params.iter().map(|p| p.nbytes).sum();
+        if blob.len() != total {
+            return Err(Error::WeightLayout(format!(
+                "{}: file is {} bytes, index expects {total}",
+                path.display(),
+                blob.len()
+            )));
+        }
+        let mut params = Vec::with_capacity(entry.params.len());
+        for p in &entry.params {
+            params.push(decode_param(&blob, p)?);
+        }
+        Ok(Self { params })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostParam> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Total parameter count (for reporting).
+    pub fn total_elements(&self) -> usize {
+        self.params.iter().map(|p| p.element_count()).sum()
+    }
+}
+
+fn decode_param(blob: &[u8], p: &ParamEntry) -> Result<HostParam> {
+    let end = p.offset + p.nbytes;
+    if end > blob.len() || p.nbytes % 4 != 0 {
+        return Err(Error::WeightLayout(format!(
+            "param {} spans {}..{end} outside blob of {} bytes",
+            p.name,
+            p.offset,
+            blob.len()
+        )));
+    }
+    let elems: usize = p.shape.iter().product();
+    if elems * 4 != p.nbytes {
+        return Err(Error::WeightLayout(format!(
+            "param {}: shape {:?} disagrees with nbytes {}",
+            p.name, p.shape, p.nbytes
+        )));
+    }
+    let bytes = &blob[p.offset..end];
+    let mut data = vec![0f32; elems];
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+    Ok(HostParam {
+        name: p.name.clone(),
+        shape: p.shape.clone(),
+        data,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(params: Vec<ParamEntry>) -> WeightsEntry {
+        WeightsEntry { path: "w.bin".into(), params }
+    }
+
+    fn write_blob(dir: &Path, vals: &[f32]) {
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("w.bin"), bytes).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = crate::util::tmp::TempDir::new("w").unwrap();
+        write_blob(dir.path(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let e = entry(vec![
+            ParamEntry { name: "a".into(), shape: vec![2, 2], offset: 0, nbytes: 16 },
+            ParamEntry { name: "b".into(), shape: vec![2], offset: 16, nbytes: 8 },
+        ]);
+        let w = HostWeights::load(dir.path(), &e).unwrap();
+        assert_eq!(w.params.len(), 2);
+        assert_eq!(w.get("a").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.get("b").unwrap().data, vec![5.0, 6.0]);
+        assert_eq!(w.total_elements(), 6);
+    }
+
+    #[test]
+    fn size_mismatch_is_error() {
+        let dir = crate::util::tmp::TempDir::new("w").unwrap();
+        write_blob(dir.path(), &[1.0, 2.0]);
+        let e = entry(vec![ParamEntry {
+            name: "a".into(),
+            shape: vec![4],
+            offset: 0,
+            nbytes: 16,
+        }]);
+        assert!(HostWeights::load(dir.path(), &e).is_err());
+    }
+
+    #[test]
+    fn shape_bytes_disagreement_is_error() {
+        let dir = crate::util::tmp::TempDir::new("w").unwrap();
+        write_blob(dir.path(), &[1.0, 2.0, 3.0, 4.0]);
+        let e = entry(vec![ParamEntry {
+            name: "a".into(),
+            shape: vec![3], // 12 bytes, but nbytes says 16
+            offset: 0,
+            nbytes: 16,
+        }]);
+        assert!(HostWeights::load(dir.path(), &e).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! TCP serving front-end: newline-delimited JSON over a streaming
+//! instance of the Fig-4 pipeline.
+//!
+//! Wire protocol (one JSON object per line):
+//!   -> {"id": 7, "text": "ba gedu …", "max_new_tokens": 16}
+//!   <- {"id": 7, "summary": "ba gedu", "latency_ms": 12.3}
+//!   <- {"id": 7, "error": "…"}            (on failure)
+//!
+//! Threads: acceptor + one reader/writer pair per connection + the three
+//! pipeline stage threads.  The PJRT runtime lives on the inference
+//! thread only.
+
+mod protocol;
+mod streaming;
+
+pub use protocol::{parse_request_line, response_to_json};
+pub use streaming::{StreamingPipeline, SubmitHandle};
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::config::ServingConfig;
+use crate::Result;
+
+/// Serve until `shutdown` flips true (or forever).
+pub fn serve(cfg: ServingConfig, addr: &str,
+             shutdown: Arc<AtomicBool>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    eprintln!("aigc-infer serving on {addr} (engine={})",
+              cfg.engine.label());
+    let pipeline = StreamingPipeline::start(cfg)?;
+    let next_internal_id = Arc::new(AtomicU64::new(1));
+
+    let mut conn_handles = Vec::new();
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let submit = pipeline.handle();
+                let ids = next_internal_id.clone();
+                conn_handles.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, submit, ids) {
+                        eprintln!("connection {peer}: {e}");
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    drop(pipeline); // drains and joins stage threads
+    for h in conn_handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, submit: SubmitHandle,
+               ids: Arc<AtomicU64>) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request_line(&line) {
+            Ok(mut req) => {
+                // client ids are echoed; internal routing uses unique ids
+                let client_id = req.id;
+                req.id = ids.fetch_add(1, Ordering::Relaxed);
+                let (tx, rx) = mpsc::channel();
+                submit.submit(req, tx)?;
+                let mut resp = rx
+                    .recv()
+                    .map_err(|_| crate::Error::Shutdown("pipeline closed"))?;
+                resp.id = client_id;
+                writeln!(writer, "{}", response_to_json(&resp))?;
+            }
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{{\"error\":{}}}",
+                    crate::util::json::Value::str(e.to_string()).to_json()
+                )?;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Wire protocol: newline-JSON encode/decode.
+
+use crate::coordinator::ServingResponse;
+use crate::data::Request;
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+/// Decode one request line.
+pub fn parse_request_line(line: &str) -> Result<Request> {
+    let v = json::parse(line)?;
+    let text = v
+        .get("text")
+        .as_str()
+        .ok_or_else(|| Error::Other("request missing 'text'".into()))?
+        .to_string();
+    Ok(Request {
+        id: v.get("id").as_u64().unwrap_or(0),
+        text,
+        max_new_tokens: v.get("max_new_tokens").as_usize().unwrap_or(16),
+        arrival: std::time::Duration::ZERO,
+        reference_summary: None,
+    })
+}
+
+/// Encode one response line.
+pub fn response_to_json(r: &ServingResponse) -> String {
+    let mut pairs = vec![
+        ("id", Value::num(r.id as f64)),
+        ("summary", Value::str(r.summary_text.clone())),
+        (
+            "latency_ms",
+            Value::num((r.latency.as_secs_f64() * 1e3 * 100.0).round() / 100.0),
+        ),
+        (
+            "n_tokens",
+            Value::num(r.summary_ids.len() as f64),
+        ),
+    ];
+    if let Some(a) = r.accuracy {
+        pairs.push(("accuracy", Value::num(a)));
+    }
+    Value::obj(pairs).to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn parse_minimal_and_full() {
+        let r = parse_request_line(r#"{"text": "ba be"}"#).unwrap();
+        assert_eq!(r.text, "ba be");
+        assert_eq!(r.max_new_tokens, 16);
+        let r = parse_request_line(
+            r#"{"id": 9, "text": "ba", "max_new_tokens": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 9);
+        assert_eq!(r.max_new_tokens, 4);
+    }
+
+    #[test]
+    fn parse_rejects_missing_text() {
+        assert!(parse_request_line(r#"{"id": 1}"#).is_err());
+        assert!(parse_request_line("not json").is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_through_parser() {
+        let resp = ServingResponse {
+            id: 3,
+            summary_ids: vec![5, 6],
+            summary_text: "ba be".into(),
+            latency: Duration::from_millis(12),
+            accuracy: Some(0.5),
+        };
+        let v = json::parse(&response_to_json(&resp)).unwrap();
+        assert_eq!(v.get("id").as_u64(), Some(3));
+        assert_eq!(v.get("summary").as_str(), Some("ba be"));
+        assert_eq!(v.get("n_tokens").as_usize(), Some(2));
+        assert!(v.get("latency_ms").as_f64().unwrap() >= 12.0);
+        assert_eq!(v.get("accuracy").as_f64(), Some(0.5));
+    }
+}

@@ -1,0 +1,196 @@
+//! Streaming instance of the Fig-4 pipeline for live traffic: same three
+//! stage threads as `pipeline::run_pipelined`, but requests arrive one at
+//! a time with a per-request reply channel instead of a fixed workload.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::ServingConfig;
+use crate::coordinator::{run_batch, Batch, DynamicBatcher, ServingResponse};
+use crate::data::Request;
+use crate::engine::{build as build_engine, sampler_for};
+use crate::pipeline::{postprocess, preprocess};
+use crate::runtime::Runtime;
+use crate::tokenizer::{FastTokenizer, Vocab};
+use crate::{Error, Result};
+
+type ReplyTx = mpsc::Sender<ServingResponse>;
+
+/// Cloneable submission handle.
+#[derive(Clone)]
+pub struct SubmitHandle {
+    tx: mpsc::SyncSender<(Request, ReplyTx, Instant)>,
+}
+
+impl SubmitHandle {
+    pub fn submit(&self, req: Request, reply: ReplyTx) -> Result<()> {
+        self.tx
+            .send((req, reply, Instant::now()))
+            .map_err(|_| Error::Shutdown("pipeline input closed"))
+    }
+}
+
+/// The running pipeline; dropping it drains and joins all stages.
+pub struct StreamingPipeline {
+    handle: SubmitHandle,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl StreamingPipeline {
+    pub fn handle(&self) -> SubmitHandle {
+        self.handle.clone()
+    }
+
+    pub fn start(cfg: ServingConfig) -> Result<Self> {
+        cfg.validate()?;
+        let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+        let full_vocab = manifest.config_for("baseline").vocab_size;
+        let vocab_limit =
+            manifest.config_for(cfg.engine.variant()).vocab_size as u32;
+        let max_seq = manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.variant == cfg.engine.variant())
+            .map(|a| a.seq)
+            .max()
+            .ok_or_else(|| Error::Manifest("no artifacts".into()))?;
+        let seq_lens = manifest.seq_lens.clone();
+        drop(manifest);
+
+        let tok = Arc::new(FastTokenizer::new(Vocab::synthetic(full_vocab)));
+        let replies: Arc<Mutex<HashMap<u64, ReplyTx>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+
+        let (in_tx, in_rx) = mpsc::sync_channel::<(Request, ReplyTx, Instant)>(
+            cfg.stage_queue * cfg.batch.max_batch,
+        );
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(cfg.stage_queue);
+        let (post_tx, post_rx) =
+            mpsc::sync_channel::<(Batch, Vec<Vec<u32>>)>(cfg.stage_queue);
+
+        // preprocess + dynamic batching
+        let pre_tok = tok.clone();
+        let pre_replies = replies.clone();
+        let pre_policy = cfg.batch.clone();
+        let pre = std::thread::Builder::new()
+            .name("srv-preprocess".into())
+            .spawn(move || {
+                let mut batcher =
+                    DynamicBatcher::new(pre_policy.clone(), seq_lens);
+                loop {
+                    match in_rx.recv_timeout(Duration::from_millis(
+                        pre_policy.max_wait_ms.max(1),
+                    )) {
+                        Ok((req, reply, enq)) => {
+                            let prepared = preprocess(
+                                &pre_tok, vocab_limit, max_seq, &req, enq,
+                            );
+                            pre_replies
+                                .lock()
+                                .unwrap()
+                                .insert(prepared.id, reply);
+                            batcher.push(prepared);
+                            // arrivals flush on SIZE only; partial batches
+                            // wait for the idle timeout below
+                            while let Some(b) = batcher.pop_full_or(false) {
+                                if batch_tx.send(b).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            while let Some(b) = batcher.pop(true) {
+                                if batch_tx.send(b).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            while let Some(b) = batcher.pop(true) {
+                                if batch_tx.send(b).is_err() {
+                                    return;
+                                }
+                            }
+                            return;
+                        }
+                    }
+                }
+            })
+            .expect("spawn");
+
+        // inference (owns PJRT)
+        let inf_cfg = cfg.clone();
+        let inf = std::thread::Builder::new()
+            .name("srv-inference".into())
+            .spawn(move || {
+                let runtime = match Runtime::new(&inf_cfg.artifacts_dir) {
+                    Ok(r) => std::rc::Rc::new(r),
+                    Err(e) => {
+                        eprintln!("inference thread: {e}");
+                        return;
+                    }
+                };
+                let engine = match build_engine(
+                    inf_cfg.engine,
+                    runtime,
+                    inf_cfg.gen,
+                ) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("inference thread: {e}");
+                        return;
+                    }
+                };
+                let mut sampler = sampler_for(inf_cfg.sampling);
+                for batch in batch_rx.iter() {
+                    match run_batch(engine.as_ref(), &mut sampler, &batch) {
+                        Ok(outs) => {
+                            let generated =
+                                outs.into_iter().map(|(_, g)| g).collect();
+                            if post_tx.send((batch, generated)).is_err() {
+                                return;
+                            }
+                        }
+                        Err(e) => eprintln!("batch failed: {e}"),
+                    }
+                }
+            })
+            .expect("spawn");
+
+        // postprocess + reply routing
+        let post_tok = tok;
+        let post_replies = replies;
+        let post = std::thread::Builder::new()
+            .name("srv-postprocess".into())
+            .spawn(move || {
+                for (batch, generated) in post_rx.iter() {
+                    for (req, gen) in batch.requests.iter().zip(generated) {
+                        let resp = postprocess(post_tok.vocab(), req, gen);
+                        if let Some(tx) =
+                            post_replies.lock().unwrap().remove(&req.id)
+                        {
+                            let _ = tx.send(resp);
+                        }
+                    }
+                }
+            })
+            .expect("spawn");
+
+        Ok(Self {
+            handle: SubmitHandle { tx: in_tx },
+            joins: vec![pre, inf, post],
+        })
+    }
+}
+
+impl Drop for StreamingPipeline {
+    fn drop(&mut self) {
+        // closing the input channel cascades shutdown through the stages
+        let (dead_tx, _) = mpsc::sync_channel(1);
+        self.handle = SubmitHandle { tx: dead_tx };
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Fast single-pass tokenizer: byte trie + longest-match backtracking,
+//! in the spirit of LinMaxMatch (Song et al. 2020), the algorithm behind
+//! the paper's "Faster Tokenizer" (§2.3).
+//!
+//! Differences from [`super::wordpiece::SlowTokenizer`] (same output,
+//! verified by a proptest):
+//! - one left-to-right walk over the bytes of each word; no substring
+//!   allocation, no repeated hashing,
+//! - trie nodes are flat `[u32; 26]` child tables (arena-indexed), so a
+//!   step is one array load,
+//! - longest-accepting-state is tracked during the walk, giving greedy
+//!   longest-match on failure without rescanning.
+
+use super::vocab::Vocab;
+use super::{normalize, Encode};
+
+const NO_NODE: u32 = u32::MAX;
+const NO_ID: u32 = u32::MAX;
+
+struct Node {
+    children: [u32; 26],
+    /// Word id accepted at this node (NO_ID if none).
+    id: u32,
+}
+
+impl Node {
+    fn new() -> Self {
+        Self { children: [NO_NODE; 26], id: NO_ID }
+    }
+}
+
+/// Trie-based tokenizer. Build once per vocabulary, reuse everywhere
+/// (it is `Send + Sync`; stages share it via `Arc`).
+pub struct FastTokenizer {
+    vocab: Vocab,
+    arena: Vec<Node>,
+}
+
+impl FastTokenizer {
+    pub fn new(vocab: Vocab) -> Self {
+        let mut arena = vec![Node::new()];
+        for (word, id) in vocab.iter() {
+            let mut cur = 0usize;
+            for &b in word.as_bytes() {
+                let c = (b - b'a') as usize;
+                let next = arena[cur].children[c];
+                cur = if next == NO_NODE {
+                    arena.push(Node::new());
+                    let idx = (arena.len() - 1) as u32;
+                    arena[cur].children[c] = idx;
+                    idx as usize
+                } else {
+                    next as usize
+                };
+            }
+            arena[cur].id = id;
+        }
+        Self { vocab, arena }
+    }
+
+    pub fn vocab(&self) -> &Vocab {
+        &self.vocab
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.arena.len()
+    }
+
+    #[inline]
+    fn encode_word(&self, word: &[u8], max_id: u32, out: &mut Vec<u32>) {
+        let mut start = 0usize;
+        while start < word.len() {
+            let mut cur = 0usize;
+            let mut best: Option<(u32, usize)> = None; // (id, end)
+            let mut i = start;
+            while i < word.len() {
+                let b = word[i];
+                if !(b'a'..=b'z').contains(&b) {
+                    break;
+                }
+                let next = self.arena[cur].children[(b - b'a') as usize];
+                if next == NO_NODE {
+                    break;
+                }
+                cur = next as usize;
+                i += 1;
+                let id = self.arena[cur].id;
+                if id != NO_ID && id < max_id {
+                    best = Some((id, i));
+                }
+            }
+            match best {
+                Some((id, end)) => {
+                    out.push(id);
+                    start = end;
+                }
+                None => start += 1, // unmatchable byte: skip
+            }
+        }
+    }
+}
+
+impl Encode for FastTokenizer {
+    fn encode(&self, text: &str, max_id: u32) -> Vec<u32> {
+        let norm = normalize(text);
+        let mut out = Vec::with_capacity(norm.len() / 4 + 1);
+        for word in norm.as_bytes().split(|&b| b == b' ') {
+            if !word.is_empty() {
+                self.encode_word(word, max_id, &mut out);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::special::FIRST_WORD;
+    use crate::tokenizer::vocab::render_rank;
+    use crate::tokenizer::SlowTokenizer;
+
+    #[test]
+    fn matches_slow_tokenizer_on_generated_words() {
+        let vocab = Vocab::synthetic(4000);
+        let fast = FastTokenizer::new(vocab.clone());
+        let slow = SlowTokenizer::new(vocab);
+        for rank in [0usize, 1, 63, 64, 100, 999, 3000, 3995] {
+            let w = render_rank(rank);
+            assert_eq!(
+                fast.encode(&w, 4000),
+                slow.encode(&w, 4000),
+                "rank {rank}"
+            );
+            // and under a pruning cutoff
+            assert_eq!(fast.encode(&w, 200), slow.encode(&w, 200));
+        }
+    }
+
+    #[test]
+    fn whole_word_preferred_over_pieces() {
+        let fast = FastTokenizer::new(Vocab::synthetic(8000));
+        let w = render_rank(5000); // multi-syllable word
+        assert_eq!(fast.encode(&w, 8000), vec![FIRST_WORD + 5000]);
+    }
+
+    #[test]
+    fn resegmentation_preserves_surface_form() {
+        let fast = FastTokenizer::new(Vocab::synthetic(8000));
+        let w = render_rank(7321);
+        let ids = fast.encode(&w, 500);
+        let joined: String = ids
+            .iter()
+            .map(|&i| fast.vocab().render(i).unwrap())
+            .collect();
+        assert_eq!(joined, w);
+    }
+
+    #[test]
+    fn multiword_text() {
+        let fast = FastTokenizer::new(Vocab::synthetic(1000));
+        let text = format!("{} {} {}", render_rank(3), render_rank(40), render_rank(700));
+        assert_eq!(
+            fast.encode(&text, 1000),
+            vec![FIRST_WORD + 3, FIRST_WORD + 40, FIRST_WORD + 700]
+        );
+    }
+}

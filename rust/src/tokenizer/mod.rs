@@ -1,0 +1,70 @@
+//! Tokenizer substrate — the "Faster Tokenizer" axis of the paper (§2.3).
+//!
+//! The synthetic language (see [`crate::data`]) writes every word as a
+//! concatenation of two-character syllables from a fixed 64-syllable
+//! alphabet, and the model vocabulary assigns ids in corpus-frequency
+//! order (rank == id), which is exactly the property that makes the
+//! paper's embedding-layer pruning a *prefix* slice (§3.2).
+//!
+//! Two interchangeable encoders over the same [`Vocab`]:
+//!
+//! - [`wordpiece::SlowTokenizer`] — textbook greedy longest-match
+//!   WordPiece: repeated substring + hash probes per word (the
+//!   reference implementation and the baseline in the A1/components
+//!   benches).
+//! - [`fast::FastTokenizer`] — single-pass trie matcher in the spirit of
+//!   LinMaxMatch (Song et al., "Fast WordPiece Tokenization"), no
+//!   per-word allocation on the hot path.
+//!
+//! Both support a `max_id` cutoff: with the pruned engine, words whose id
+//! fell outside the retained prefix are re-segmented into high-frequency
+//! pieces (single syllables always survive pruning), so the pruned model
+//! serves the SAME text — slightly longer token sequences instead of
+//! unknown tokens.
+
+pub mod fast;
+mod normalizer;
+mod stats;
+pub mod vocab;
+pub mod wordpiece;
+
+pub use fast::FastTokenizer;
+pub use normalizer::normalize;
+pub use stats::{CoveragePoint, FreqStats};
+pub use vocab::{Vocab, N_SYLLABLES};
+pub use wordpiece::SlowTokenizer;
+
+use crate::Result;
+
+/// Common interface so engines/benches can swap implementations.
+pub trait Encode {
+    /// Text -> token ids, using only ids `< max_id` (pass `vocab.size()`
+    /// for the unpruned model).  Always succeeds on normalizable text:
+    /// unknown single characters are dropped (they cannot occur in
+    /// generator output, only in adversarial input).
+    fn encode(&self, text: &str, max_id: u32) -> Vec<u32>;
+}
+
+/// Token ids -> text (shared by both tokenizers; decoding is not on the
+/// benchmarked hot path).
+pub fn decode(vocab: &Vocab, ids: &[u32]) -> String {
+    let mut out = String::new();
+    for &id in ids {
+        if id < crate::special::FIRST_WORD {
+            continue; // specials render as nothing
+        }
+        if let Some(w) = vocab.render(id) {
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(&w);
+        }
+    }
+    out
+}
+
+/// Convenience: build the default (vocab-complete) fast tokenizer for a
+/// model vocabulary size.
+pub fn default_fast(vocab_size: usize) -> Result<FastTokenizer> {
+    Ok(FastTokenizer::new(Vocab::synthetic(vocab_size)))
+}

@@ -1,0 +1,54 @@
+//! Text normalization: the cheap, allocation-light cleanup pass both
+//! tokenizers share (the real Faster Tokenizer fuses this with matching;
+//! we keep it separate so the benches can attribute cost per phase).
+
+/// Lowercase ASCII, collapse all whitespace runs to single spaces, strip
+/// every character outside the synthetic alphabet (letters survive,
+/// punctuation/digits drop — matching how the corpus generator writes).
+pub fn normalize(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut pending_space = false;
+    for ch in text.chars() {
+        if ch.is_whitespace() {
+            pending_space = !out.is_empty();
+            continue;
+        }
+        let ch = ch.to_ascii_lowercase();
+        if ch.is_ascii_lowercase() {
+            if pending_space {
+                out.push(' ');
+                pending_space = false;
+            }
+            out.push(ch);
+        }
+        // anything else (digits, punctuation, non-ascii) is dropped
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collapses_whitespace() {
+        assert_eq!(normalize("ba  be\t\nbi"), "ba be bi");
+    }
+
+    #[test]
+    fn lowercases() {
+        assert_eq!(normalize("Ba BE"), "ba be");
+    }
+
+    #[test]
+    fn strips_non_letters() {
+        assert_eq!(normalize("ba, be! 42 bi?"), "ba be bi");
+    }
+
+    #[test]
+    fn no_leading_or_trailing_space() {
+        assert_eq!(normalize("  ba be  "), "ba be");
+        assert_eq!(normalize(""), "");
+        assert_eq!(normalize("   "), "");
+    }
+}

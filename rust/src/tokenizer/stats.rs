@@ -1,0 +1,121 @@
+//! Token-frequency statistics — the measurement side of §3.2's
+//! embedding-layer pruning ("the embedding layer contains a large number
+//! of rarely used characters").  `examples/pruning_analysis.rs` and the
+//! A1 bench build coverage curves from this.
+
+/// Cumulative-coverage sample: keeping ids `< vocab_prefix` retains
+/// `coverage` of all token occurrences.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoveragePoint {
+    pub vocab_prefix: usize,
+    pub coverage: f64,
+}
+
+/// Streaming frequency counter over token ids.
+#[derive(Debug, Clone)]
+pub struct FreqStats {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl FreqStats {
+    pub fn new(vocab_size: usize) -> Self {
+        Self { counts: vec![0; vocab_size], total: 0 }
+    }
+
+    pub fn observe(&mut self, ids: &[u32]) {
+        for &id in ids {
+            if (id as usize) < self.counts.len() {
+                self.counts[id as usize] += 1;
+                self.total += 1;
+            }
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count_of(&self, id: u32) -> u64 {
+        self.counts.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// Fraction of observed tokens whose id is `< prefix`.
+    pub fn coverage_at(&self, prefix: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let kept: u64 = self.counts[..prefix.min(self.counts.len())]
+            .iter()
+            .sum();
+        kept as f64 / self.total as f64
+    }
+
+    /// Coverage curve at the given prefix sizes.
+    pub fn coverage_curve(&self, prefixes: &[usize]) -> Vec<CoveragePoint> {
+        prefixes
+            .iter()
+            .map(|&p| CoveragePoint { vocab_prefix: p, coverage: self.coverage_at(p) })
+            .collect()
+    }
+
+    /// Smallest prefix achieving at least `target` coverage.
+    pub fn prefix_for_coverage(&self, target: f64) -> usize {
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if self.total > 0 && acc as f64 / self.total as f64 >= target {
+                return i + 1;
+            }
+        }
+        self.counts.len()
+    }
+
+    /// Ids sorted by descending frequency (sanity check: for the synthetic
+    /// Zipf corpus this should be ~identity on the word range).
+    pub fn rank_order(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = (0..self.counts.len() as u32).collect();
+        ids.sort_by_key(|&i| std::cmp::Reverse(self.counts[i as usize]));
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coverage_monotone_and_bounded() {
+        let mut s = FreqStats::new(10);
+        s.observe(&[4, 4, 4, 5, 5, 9]);
+        assert_eq!(s.total(), 6);
+        assert_eq!(s.coverage_at(0), 0.0);
+        assert!((s.coverage_at(5) - 0.5).abs() < 1e-9);
+        assert!((s.coverage_at(6) - 5.0 / 6.0).abs() < 1e-9);
+        assert_eq!(s.coverage_at(10), 1.0);
+        assert_eq!(s.coverage_at(99), 1.0);
+    }
+
+    #[test]
+    fn prefix_for_coverage_finds_min() {
+        let mut s = FreqStats::new(10);
+        s.observe(&[4, 4, 4, 5, 5, 9]);
+        assert_eq!(s.prefix_for_coverage(0.5), 5);
+        assert_eq!(s.prefix_for_coverage(0.83), 6);
+        assert_eq!(s.prefix_for_coverage(1.0), 10);
+    }
+
+    #[test]
+    fn out_of_range_ids_ignored() {
+        let mut s = FreqStats::new(4);
+        s.observe(&[1, 2, 99]);
+        assert_eq!(s.total(), 2);
+    }
+
+    #[test]
+    fn empty_stats() {
+        let s = FreqStats::new(4);
+        assert_eq!(s.coverage_at(4), 0.0);
+        assert_eq!(s.prefix_for_coverage(0.9), 4);
+    }
+}

@@ -1,0 +1,155 @@
+//! The synthetic vocabulary: deterministic id <-> surface-form mapping.
+//!
+//! Surface forms are built from a 64-syllable alphabet (8 consonants x
+//! 8 vowels, every syllable exactly 2 chars), composed positionally in
+//! little-endian base 64.  All of:
+//!   - unambiguous segmentation (even char boundaries),
+//!   - guaranteed sub-word fallback (every syllable is itself a word with
+//!     a small id, so it survives any reasonable pruning cutoff),
+//!   - O(1) rendering without a stored wordlist,
+//! fall out of this construction.
+
+use std::collections::HashMap;
+
+use crate::special::FIRST_WORD;
+
+pub const CONSONANTS: [char; 8] = ['b', 'd', 'f', 'g', 'k', 'm', 'n', 's'];
+pub const VOWELS: [char; 8] = ['a', 'e', 'i', 'o', 'u', 'y', 'r', 'l'];
+/// 8 x 8 two-character syllables.
+pub const N_SYLLABLES: usize = 64;
+
+/// Render syllable index 0..64 as its two characters.
+fn syllable(idx: usize) -> [char; 2] {
+    [CONSONANTS[idx / 8], VOWELS[idx % 8]]
+}
+
+/// The vocabulary: id space `[0, size)`, ids `< FIRST_WORD` are specials,
+/// ids `>= FIRST_WORD` are words ranked by corpus frequency.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    size: usize,
+    /// surface form -> id, for every word id in `[FIRST_WORD, size)`.
+    lookup: HashMap<String, u32>,
+}
+
+impl Vocab {
+    /// Build the synthetic vocabulary of `size` ids.
+    pub fn synthetic(size: usize) -> Self {
+        assert!(size as u64 >= FIRST_WORD as u64 + 64, "vocab too small");
+        let mut lookup = HashMap::with_capacity(size);
+        for id in FIRST_WORD..size as u32 {
+            lookup.insert(render_rank((id - FIRST_WORD) as usize), id);
+        }
+        Self { size, lookup }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Surface form of a word id (None for specials / out of range).
+    pub fn render(&self, id: u32) -> Option<String> {
+        if id < FIRST_WORD || id as usize >= self.size {
+            return None;
+        }
+        Some(render_rank((id - FIRST_WORD) as usize))
+    }
+
+    /// id of an exact surface form.
+    pub fn id_of(&self, word: &str) -> Option<u32> {
+        self.lookup.get(word).copied()
+    }
+
+    /// Iterate (surface form, id) pairs — used to build the trie.
+    pub fn iter(&self) -> impl Iterator<Item = (&String, u32)> {
+        self.lookup.iter().map(|(s, &i)| (s, i))
+    }
+}
+
+/// Word rank -> surface form (little-endian base-64 syllable digits).
+pub fn render_rank(rank: usize) -> String {
+    let mut s = String::with_capacity(6);
+    let mut n = rank;
+    loop {
+        let [c, v] = syllable(n % N_SYLLABLES);
+        s.push(c);
+        s.push(v);
+        n /= N_SYLLABLES;
+        if n == 0 {
+            break;
+        }
+        n -= 1; // bijective base-64: no leading-zero ambiguity
+    }
+    s
+}
+
+/// Surface form -> word rank (inverse of [`render_rank`]); None if the
+/// string is not a well-formed word.
+pub fn parse_rank(word: &str) -> Option<usize> {
+    let chars: Vec<char> = word.chars().collect();
+    if chars.is_empty() || chars.len() % 2 != 0 {
+        return None;
+    }
+    let mut digits = Vec::with_capacity(chars.len() / 2);
+    for pair in chars.chunks(2) {
+        let c = CONSONANTS.iter().position(|&x| x == pair[0])?;
+        let v = VOWELS.iter().position(|&x| x == pair[1])?;
+        digits.push(c * 8 + v);
+    }
+    // invert bijective little-endian base 64
+    let mut rank = 0usize;
+    for &d in digits.iter().rev() {
+        rank = rank * N_SYLLABLES + d + 1;
+    }
+    Some(rank - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_parse_roundtrip() {
+        for rank in (0..5000).chain([64, 63, 65, 4095, 4096, 262143]) {
+            let s = render_rank(rank);
+            assert_eq!(parse_rank(&s), Some(rank), "rank {rank} -> {s}");
+        }
+    }
+
+    #[test]
+    fn renders_are_unique_and_even_length() {
+        let mut seen = std::collections::HashSet::new();
+        for rank in 0..10_000 {
+            let s = render_rank(rank);
+            assert!(s.len() % 2 == 0 && !s.is_empty());
+            assert!(seen.insert(s), "collision at rank {rank}");
+        }
+    }
+
+    #[test]
+    fn single_syllable_words_are_lowest_ranks() {
+        for rank in 0..N_SYLLABLES {
+            assert_eq!(render_rank(rank).len(), 2);
+        }
+        assert_eq!(render_rank(N_SYLLABLES).len(), 4);
+    }
+
+    #[test]
+    fn vocab_lookup_matches_render() {
+        let v = Vocab::synthetic(1000);
+        for id in crate::special::FIRST_WORD..1000 {
+            let s = v.render(id).unwrap();
+            assert_eq!(v.id_of(&s), Some(id));
+        }
+        assert_eq!(v.render(0), None);
+        assert_eq!(v.render(1000), None);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert_eq!(parse_rank(""), None);
+        assert_eq!(parse_rank("x"), None);
+        assert_eq!(parse_rank("bax"), None);
+        assert_eq!(parse_rank("ab"), None); // vowel-first
+    }
+}

@@ -1,0 +1,126 @@
+//! Reference WordPiece encoder: greedy longest-match with repeated
+//! substring + hash probes.  This is the *baseline* tokenizer the fast
+//! trie version is benchmarked against (components bench / A1).
+
+use super::vocab::Vocab;
+use super::{normalize, Encode};
+
+/// Textbook greedy longest-match tokenizer.
+pub struct SlowTokenizer {
+    vocab: Vocab,
+}
+
+impl SlowTokenizer {
+    pub fn new(vocab: Vocab) -> Self {
+        Self { vocab }
+    }
+
+    pub fn vocab(&self) -> &Vocab {
+        &self.vocab
+    }
+
+    fn encode_word(&self, word: &str, max_id: u32, out: &mut Vec<u32>) {
+        // whole-word fast path
+        if let Some(id) = self.vocab.id_of(word) {
+            if id < max_id {
+                out.push(id);
+                return;
+            }
+        }
+        // greedy longest-match over progressively shorter prefixes —
+        // O(n^2) substring hashing, the cost LinMaxMatch removes.
+        let bytes = word.as_bytes();
+        let mut start = 0;
+        while start < bytes.len() {
+            let mut end = bytes.len();
+            let mut matched = None;
+            while end > start {
+                let piece = &word[start..end];
+                if let Some(id) = self.vocab.id_of(piece) {
+                    if id < max_id {
+                        matched = Some((id, end));
+                        break;
+                    }
+                }
+                end -= 1;
+            }
+            match matched {
+                Some((id, e)) => {
+                    out.push(id);
+                    start = e;
+                }
+                None => {
+                    // unmatchable character (cannot happen for generator
+                    // output): skip one byte
+                    start += 1;
+                }
+            }
+        }
+    }
+}
+
+impl Encode for SlowTokenizer {
+    fn encode(&self, text: &str, max_id: u32) -> Vec<u32> {
+        let norm = normalize(text);
+        let mut out = Vec::with_capacity(norm.len() / 4 + 1);
+        for word in norm.split(' ') {
+            if !word.is_empty() {
+                self.encode_word(word, max_id, &mut out);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::special::FIRST_WORD;
+    use crate::tokenizer::vocab::render_rank;
+
+    fn tok(size: usize) -> SlowTokenizer {
+        SlowTokenizer::new(Vocab::synthetic(size))
+    }
+
+    #[test]
+    fn known_words_map_to_their_ids() {
+        let t = tok(1000);
+        let text = format!("{} {}", render_rank(0), render_rank(500));
+        assert_eq!(
+            t.encode(&text, 1000),
+            vec![FIRST_WORD, FIRST_WORD + 500]
+        );
+    }
+
+    #[test]
+    fn pruned_words_resegment_into_pieces() {
+        let t = tok(8000);
+        // pick a word whose id is beyond a cutoff of 100
+        let big = render_rank(6000); // multi-syllable, id 6004
+        let ids = t.encode(&big, 100);
+        assert!(!ids.is_empty());
+        assert!(ids.iter().all(|&i| i < 100 && i >= FIRST_WORD));
+        // pieces re-render to the same string
+        let joined: String = ids
+            .iter()
+            .map(|&i| t.vocab().render(i).unwrap())
+            .collect();
+        assert_eq!(joined, big);
+    }
+
+    #[test]
+    fn empty_and_whitespace() {
+        let t = tok(1000);
+        assert!(t.encode("", 1000).is_empty());
+        assert!(t.encode("   \n\t", 1000).is_empty());
+    }
+
+    #[test]
+    fn garbage_characters_skipped() {
+        let t = tok(1000);
+        // 'x' is not in the consonant/vowel alphabet: normalization keeps
+        // it (a letter) but no piece can match; encoder skips it.
+        let ids = t.encode("xx ba", 1000);
+        assert_eq!(ids, vec![FIRST_WORD]);
+    }
+}

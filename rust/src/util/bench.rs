@@ -1,0 +1,131 @@
+//! Tiny benchmark harness (the vendor set has no criterion).
+//!
+//! `cargo bench` runs each `harness = false` bench binary; they use this
+//! module for warmup + repeated timing + table printing, so every paper
+//! table/figure bench reports consistent statistics.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmarked closure.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Sample {
+    pub fn per_sec(&self) -> f64 {
+        let s = self.mean.as_secs_f64();
+        if s > 0.0 {
+            1.0 / s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Run `f` after `warmup` unmeasured calls, measuring `iters` calls.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                        mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut durations = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        durations.push(t.elapsed());
+    }
+    summarize(name, &durations)
+}
+
+/// Time one closure invocation `iters` times where the closure itself
+/// reports units of work; returns (sample, units/sec).
+pub fn time_units<F: FnMut() -> u64>(name: &str, warmup: usize,
+                                     iters: usize, mut f: F) -> (Sample, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut durations = Vec::with_capacity(iters);
+    let mut units = 0u64;
+    for _ in 0..iters {
+        let t = Instant::now();
+        units += f();
+        durations.push(t.elapsed());
+    }
+    let s = summarize(name, &durations);
+    let total: f64 = durations.iter().map(|d| d.as_secs_f64()).sum();
+    let ups = if total > 0.0 { units as f64 / total } else { 0.0 };
+    (s, ups)
+}
+
+fn summarize(name: &str, durations: &[Duration]) -> Sample {
+    let total: Duration = durations.iter().sum();
+    Sample {
+        name: name.to_string(),
+        iters: durations.len(),
+        mean: total / durations.len().max(1) as u32,
+        min: durations.iter().min().copied().unwrap_or_default(),
+        max: durations.iter().max().copied().unwrap_or_default(),
+    }
+}
+
+/// Pretty-print a set of samples as an aligned table.
+pub fn print_table(title: &str, samples: &[Sample]) {
+    println!("\n## {title}");
+    println!(
+        "{:<40} {:>8} {:>12} {:>12} {:>12}",
+        "case", "iters", "mean", "min", "max"
+    );
+    for s in samples {
+        println!(
+            "{:<40} {:>8} {:>12} {:>12} {:>12}",
+            s.name,
+            s.iters,
+            fmt_dur(s.mean),
+            fmt_dur(s.min),
+            fmt_dur(s.max)
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_something() {
+        let s = time("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn units_per_sec_positive() {
+        let (_, ups) = time_units("u", 0, 3, || 10);
+        assert!(ups > 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_dur(Duration::from_millis(2)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_micros(2)).ends_with("µs"));
+    }
+}

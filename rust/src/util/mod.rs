@@ -1,0 +1,10 @@
+//! In-crate utility substrates.
+//!
+//! The build is fully offline against a fixed vendor set, so the crates a
+//! normal serving project would pull (serde_json, rand, clap, criterion,
+//! crossbeam) are replaced by small, tested, purpose-built modules here.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod tmp;

@@ -1,0 +1,325 @@
+//! Integration tests over the REAL artifacts (`make artifacts` first).
+//!
+//! These exercise the full L3→PJRT→L2/L1 stack: manifest load, weight
+//! upload, graph execution, engine equivalence across the Table 1 ladder,
+//! pipeline modes, and the TCP server.
+
+use std::io::{BufRead, BufReader, Write};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use aigc_infer::config::{EngineKind, ServingConfig};
+use aigc_infer::coordinator::request::summary_accuracy;
+use aigc_infer::data::{CorpusConfig, Generator, TraceConfig, TraceGenerator};
+use aigc_infer::engine::{build as build_engine, EngineInput, Sampler};
+use aigc_infer::pipeline;
+use aigc_infer::runtime::{DataArg, Runtime};
+use aigc_infer::special;
+
+const ARTIFACTS: &str = "artifacts";
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(
+        Runtime::new(ARTIFACTS)
+            .expect("artifacts/ missing — run `make artifacts` first"),
+    )
+}
+
+fn cfg(engine: EngineKind, pipelined: bool) -> ServingConfig {
+    let mut c = ServingConfig::default();
+    c.artifacts_dir = ARTIFACTS.into();
+    c.engine = engine;
+    c.pipelined = pipelined;
+    c.gen.max_new_tokens = 8;
+    c
+}
+
+fn workload(n: usize, seed: u64) -> Vec<aigc_infer::data::Request> {
+    let mut t = TraceGenerator::new(
+        TraceConfig { max_new_tokens: 8, ..Default::default() },
+        seed,
+    );
+    t.take(n)
+}
+
+fn inputs_from_docs(n: usize, seed: u64, max_new: usize) -> Vec<EngineInput> {
+    let mut gen = Generator::new(CorpusConfig::default(), seed);
+    (0..n)
+        .map(|i| {
+            let d = gen.generate_capped(20);
+            let mut prompt = vec![special::BOS];
+            prompt.extend_from_slice(&d.doc_tokens);
+            prompt.push(special::SEP);
+            EngineInput {
+                request_id: i as u64,
+                prompt,
+                max_new_tokens: max_new,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_loads_and_inventory_is_complete() {
+    let rt = runtime();
+    let m = &rt.manifest;
+    assert_eq!(m.version, 1);
+    for kind in ["baseline_fwd", "ft_prefill", "ft_decode", "ft_decode_multi"]
+    {
+        assert!(
+            m.artifacts.iter().any(|a| a.kind == kind),
+            "missing kind {kind}"
+        );
+    }
+    // pruned config is actually pruned
+    let full = m.config_for("full");
+    let pruned = m.config_for("pruned");
+    assert!(pruned.vocab_size < full.vocab_size);
+    assert!(pruned.max_position < full.max_position);
+}
+
+#[test]
+fn raw_graph_execution_shapes() {
+    let rt = runtime();
+    let entry = rt.select("ft_prefill", "full", 1, 32).unwrap();
+    assert_eq!((entry.batch, entry.seq), (1, 32));
+    let name = entry.name.clone();
+    let exe = rt.load(&name).unwrap();
+    let tokens: Vec<i32> = {
+        let mut t = vec![special::PAD as i32; 32];
+        t[0] = special::BOS as i32;
+        for (i, slot) in t.iter_mut().enumerate().take(9).skip(1) {
+            *slot = (special::FIRST_WORD + i as u32) as i32;
+        }
+        t[9] = special::SEP as i32;
+        t
+    };
+    let outs = rt
+        .run(
+            &exe,
+            vec![
+                DataArg::I32(tokens, vec![1, 32]),
+                DataArg::I32(vec![10], vec![1]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 3); // logits + k_cache + v_cache
+    let logits = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(logits.len(), rt.manifest.config_for("full").vocab_size);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn bucket_selection_prefers_cheapest() {
+    let rt = runtime();
+    let e = rt.select("ft_prefill", "full", 2, 40).unwrap();
+    assert_eq!((e.batch, e.seq), (4, 64));
+    let e = rt.select("baseline_fwd", "baseline", 1, 1).unwrap();
+    assert_eq!((e.batch, e.seq), (1, 32));
+    assert!(rt.select("ft_prefill", "full", 9, 32).is_err());
+    assert!(rt.select("ft_prefill", "pruned", 1, 512).is_err());
+}
+
+#[test]
+fn ft_matches_baseline_greedy_tokens() {
+    // The FT engine (fp16 + KV cache + fused kernels) must generate
+    // essentially the same greedy continuations as the naive fp32
+    // baseline: the optimizations change speed, not answers (§4).
+    let rt = runtime();
+    let baseline = build_engine(
+        EngineKind::Baseline,
+        rt.clone(),
+        Default::default(),
+    )
+    .unwrap();
+    let ft =
+        build_engine(EngineKind::FtFull, rt.clone(), Default::default())
+            .unwrap();
+    let inputs = inputs_from_docs(4, 11, 8);
+    let a = baseline.generate(&inputs, &mut Sampler::greedy()).unwrap();
+    let b = ft.generate(&inputs, &mut Sampler::greedy()).unwrap();
+    let mut matches = 0usize;
+    let mut total = 0usize;
+    for (x, y) in a.iter().zip(&b) {
+        total += x.generated.len().max(y.generated.len());
+        matches += x
+            .generated
+            .iter()
+            .zip(&y.generated)
+            .filter(|(p, q)| p == q)
+            .count();
+    }
+    assert!(total > 0);
+    let agree = matches as f64 / total as f64;
+    assert!(agree >= 0.75, "fp16/fp32 greedy agreement only {agree}");
+}
+
+#[test]
+fn multi_step_equals_single_step() {
+    // Same graphs, same dtype, both greedy: bitwise-identical tokens.
+    let rt = runtime();
+    let multi = build_engine(
+        EngineKind::FtPruned,
+        rt.clone(),
+        aigc_infer::config::GenConfig { max_new_tokens: 12, use_multi_step: true },
+    )
+    .unwrap();
+    let single = build_engine(
+        EngineKind::FtPruned,
+        rt.clone(),
+        aigc_infer::config::GenConfig {
+            max_new_tokens: 12,
+            use_multi_step: false,
+        },
+    )
+    .unwrap();
+    let inputs = inputs_from_docs(3, 22, 12);
+    let a = multi.generate(&inputs, &mut Sampler::greedy()).unwrap();
+    let b = single.generate(&inputs, &mut Sampler::greedy()).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.generated, y.generated);
+    }
+}
+
+#[test]
+fn pruned_engine_still_summarizes() {
+    let rt = runtime();
+    let ft = build_engine(EngineKind::FtPruned, rt, Default::default())
+        .unwrap();
+    let mut gen = Generator::new(CorpusConfig::default(), 33);
+    let docs: Vec<_> = (0..4).map(|_| gen.generate_capped(20)).collect();
+    let inputs: Vec<EngineInput> = docs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            let mut prompt = vec![special::BOS];
+            prompt.extend_from_slice(&d.doc_tokens);
+            prompt.push(special::SEP);
+            EngineInput { request_id: i as u64, prompt, max_new_tokens: 8 }
+        })
+        .collect();
+    let outs = ft.generate(&inputs, &mut Sampler::greedy()).unwrap();
+    // trained model should beat chance comfortably on the copy task
+    let acc: f64 = docs
+        .iter()
+        .zip(&outs)
+        .map(|(d, o)| summary_accuracy(&o.generated, &d.summary_tokens))
+        .sum::<f64>()
+        / docs.len() as f64;
+    assert!(acc > 0.05, "summary accuracy {acc} — model collapsed?");
+}
+
+#[test]
+fn top_k_sampling_generates_valid_ids() {
+    let rt = runtime();
+    let vocab = rt.manifest.config_for("pruned").vocab_size as u32;
+    let ft = build_engine(EngineKind::FtPruned, rt, Default::default())
+        .unwrap();
+    let inputs = inputs_from_docs(2, 44, 6);
+    let outs = ft
+        .generate(&inputs, &mut Sampler::top_k(8, 0.9, 123))
+        .unwrap();
+    for o in outs {
+        for &t in &o.generated {
+            assert!(t < vocab);
+            assert_ne!(t, special::EOS);
+        }
+    }
+}
+
+#[test]
+fn pipelined_equals_sequential_results() {
+    let reqs = workload(12, 55);
+    let seq = pipeline::run(&cfg(EngineKind::FtPruned, false), &reqs)
+        .unwrap();
+    let par = pipeline::run(&cfg(EngineKind::FtPruned, true), &reqs)
+        .unwrap();
+    assert_eq!(seq.responses.len(), reqs.len());
+    assert_eq!(par.responses.len(), reqs.len());
+    let mut a: Vec<_> = seq
+        .responses
+        .iter()
+        .map(|r| (r.id, r.summary_ids.clone()))
+        .collect();
+    let mut b: Vec<_> = par
+        .responses
+        .iter()
+        .map(|r| (r.id, r.summary_ids.clone()))
+        .collect();
+    a.sort();
+    b.sort();
+    // Greedy decoding is deterministic; batch composition can differ
+    // between executors (timing-dependent flushes), which changes padding
+    // and can occasionally change a bucket choice — identity must hold on
+    // ids and overwhelmingly on tokens.
+    assert_eq!(
+        a.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+        b.iter().map(|(i, _)| *i).collect::<Vec<_>>()
+    );
+    let same = a
+        .iter()
+        .zip(&b)
+        .filter(|((_, x), (_, y))| x == y)
+        .count();
+    assert!(
+        same * 10 >= a.len() * 8,
+        "only {same}/{} identical summaries",
+        a.len()
+    );
+}
+
+#[test]
+fn server_round_trip() {
+    let addr = "127.0.0.1:17071";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = shutdown.clone();
+    let mut scfg = cfg(EngineKind::FtPruned, true);
+    scfg.batch.max_wait_ms = 5;
+    let server = std::thread::spawn(move || {
+        let _ = aigc_infer::server::serve(scfg, addr, sd);
+    });
+    // wait for the listener
+    let mut stream = None;
+    let deadline = Instant::now() + std::time::Duration::from_secs(30);
+    while Instant::now() < deadline {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
+        }
+    }
+    let stream = stream.expect("server did not come up");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    let mut gen = Generator::new(CorpusConfig::default(), 66);
+    for i in 0..3 {
+        let d = gen.generate_capped(16);
+        writeln!(
+            writer,
+            "{{\"id\": {i}, \"text\": \"{}\", \"max_new_tokens\": 4}}",
+            d.text
+        )
+        .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = aigc_infer::util::json::parse(&line).unwrap();
+        assert_eq!(v.get("id").as_u64(), Some(i));
+        assert!(v.get("summary").as_str().is_some());
+        assert!(v.get("latency_ms").as_f64().unwrap() > 0.0);
+    }
+    // malformed line gets an error object, not a hang
+    writeln!(writer, "{{\"nope\": 1}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"));
+
+    shutdown.store(true, Ordering::Relaxed);
+    drop(writer);
+    drop(reader);
+    let _ = server.join();
+}

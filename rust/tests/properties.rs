@@ -1,0 +1,239 @@
+//! Property-based tests (hand-rolled generators over the in-crate PRNG —
+//! the offline vendor set has no proptest).  Each property runs a few
+//! hundred randomized cases with a fixed seed, so failures reproduce.
+
+use std::time::Instant;
+
+use aigc_infer::config::BatchPolicy;
+use aigc_infer::coordinator::{DynamicBatcher, PreparedRequest};
+use aigc_infer::tokenizer::vocab::{parse_rank, render_rank};
+use aigc_infer::tokenizer::{
+    decode, Encode, FastTokenizer, SlowTokenizer, Vocab,
+};
+use aigc_infer::util::json::{self, Value};
+use aigc_infer::util::rng::Rng;
+
+const VOCAB: usize = 8000;
+
+fn random_text(rng: &mut Rng, max_words: usize) -> String {
+    let n = rng.gen_range(0, max_words + 1);
+    let mut s = String::new();
+    for i in 0..n {
+        if i > 0 {
+            s.push(' ');
+        }
+        // mix known words, rare words, and adversarial junk
+        match rng.gen_range(0, 10) {
+            0 => s.push_str("xqz"),                       // unmatchable
+            1 => s.push_str(&render_rank(rng.gen_range(0, 300_000))), // OOV-huge
+            _ => s.push_str(&render_rank(rng.gen_range(0, VOCAB - 4))),
+        }
+    }
+    s
+}
+
+#[test]
+fn prop_fast_equals_slow_tokenizer() {
+    let vocab = Vocab::synthetic(VOCAB);
+    let fast = FastTokenizer::new(vocab.clone());
+    let slow = SlowTokenizer::new(vocab);
+    let mut rng = Rng::seed_from_u64(0xF00D);
+    for case in 0..300 {
+        let text = random_text(&mut rng, 30);
+        let max_id = [64u32 + 4, 500, 4000, 8000][case % 4];
+        assert_eq!(
+            fast.encode(&text, max_id),
+            slow.encode(&text, max_id),
+            "case {case}: text={text:?} max_id={max_id}"
+        );
+    }
+}
+
+#[test]
+fn prop_tokenizer_roundtrip_on_vocab_words() {
+    // decode(encode(text)) == normalized text for texts of known words
+    let fast = FastTokenizer::new(Vocab::synthetic(VOCAB));
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    for _ in 0..200 {
+        let n = rng.gen_range(1, 25);
+        let words: Vec<String> = (0..n)
+            .map(|_| render_rank(rng.gen_range(0, VOCAB - 4)))
+            .collect();
+        let text = words.join(" ");
+        let ids = fast.encode(&text, VOCAB as u32);
+        assert_eq!(decode(fast.vocab(), &ids), text);
+    }
+}
+
+#[test]
+fn prop_pruned_encoding_preserves_surface_and_ids_below_cutoff() {
+    let fast = FastTokenizer::new(Vocab::synthetic(VOCAB));
+    let mut rng = Rng::seed_from_u64(0xCAFE);
+    for _ in 0..200 {
+        let cutoff = rng.gen_range(68, VOCAB) as u32;
+        let word = render_rank(rng.gen_range(0, VOCAB - 4));
+        let ids = fast.encode(&word, cutoff);
+        assert!(ids.iter().all(|&i| i >= 4 && i < cutoff));
+        let joined: String = ids
+            .iter()
+            .map(|&i| fast.vocab().render(i).unwrap())
+            .collect();
+        assert_eq!(joined, word);
+    }
+}
+
+#[test]
+fn prop_render_parse_rank_bijection() {
+    let mut rng = Rng::seed_from_u64(0xABCD);
+    for _ in 0..2000 {
+        let rank = rng.gen_range(0, 1_000_000);
+        assert_eq!(parse_rank(&render_rank(rank)), Some(rank));
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    // No request is lost or duplicated; every batch respects max_batch
+    // and its bucket covers every member's need (or is the largest).
+    let mut rng = Rng::seed_from_u64(0x5EED);
+    for case in 0..100 {
+        let max_batch = rng.gen_range(1, 10);
+        let bucketing = case % 2 == 0;
+        let policy = BatchPolicy {
+            max_batch,
+            max_wait_ms: 10_000,
+            length_bucketing: bucketing,
+        };
+        let buckets = vec![32usize, 64, 128];
+        let mut b = DynamicBatcher::new(policy, buckets.clone());
+        let n = rng.gen_range(1, 100);
+        let mut seen = vec![false; n];
+        for id in 0..n {
+            b.push(PreparedRequest {
+                id: id as u64,
+                prompt: vec![5; rng.gen_range(1, 140)],
+                max_new_tokens: 4,
+                reference_summary: None,
+                enqueued: Instant::now(),
+            });
+        }
+        let mut batches = Vec::new();
+        while let Some(batch) = b.pop_full_or(false) {
+            batches.push(batch);
+        }
+        while let Some(batch) = b.pop_full_or(true) {
+            batches.push(batch);
+        }
+        assert_eq!(b.pending(), 0);
+        for batch in &batches {
+            assert!(batch.len() <= max_batch && !batch.is_empty());
+            assert!(buckets.contains(&batch.seq_bucket));
+            for r in &batch.requests {
+                assert!(
+                    !seen[r.id as usize],
+                    "duplicate request {}",
+                    r.id
+                );
+                seen[r.id as usize] = true;
+                // bucket covers the request unless nothing can
+                assert!(
+                    r.need_seq() <= batch.seq_bucket
+                        || batch.seq_bucket == *buckets.last().unwrap()
+                );
+            }
+            let waste = batch.padding_waste();
+            assert!((0.0..1.0).contains(&waste) || batch.seq_bucket == 128);
+        }
+        assert!(seen.iter().all(|&s| s), "lost requests in case {case}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Value {
+    match if depth == 0 { rng.gen_range(0, 4) } else { rng.gen_range(0, 6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.gen_f64() < 0.5),
+        2 => Value::Num((rng.gen_f64() * 2e6).floor() - 1e6),
+        3 => {
+            let n = rng.gen_range(0, 12);
+            let s: String = (0..n)
+                .map(|_| {
+                    let c = rng.gen_range(0, 100);
+                    match c {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => 'é',
+                        4 => '😀',
+                        _ => (b'a' + (c % 26) as u8) as char,
+                    }
+                })
+                .collect();
+            Value::Str(s)
+        }
+        4 => Value::Array(
+            (0..rng.gen_range(0, 5))
+                .map(|_| random_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => Value::Object(
+            (0..rng.gen_range(0, 5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Rng::seed_from_u64(0x12AB);
+    for _ in 0..500 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_json();
+        let back = json::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(back, v, "roundtrip mismatch for {text}");
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_monotone() {
+    use aigc_infer::metrics::Histogram;
+    use std::time::Duration;
+    let mut rng = Rng::seed_from_u64(0x77AA);
+    for _ in 0..50 {
+        let mut h = Histogram::new();
+        let n = rng.gen_range(1, 2000);
+        for _ in 0..n {
+            h.record(Duration::from_micros(rng.gen_range(1, 10_000_000) as u64));
+        }
+        let mut last = Duration::ZERO;
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= last, "quantile({q}) decreased");
+            last = v;
+        }
+        assert!(h.quantile(1.0) <= h.max() + Duration::from_micros(1));
+        assert!(h.mean() >= h.min() && h.mean() <= h.max());
+    }
+}
+
+#[test]
+fn prop_zipf_prefix_mass_matches_empirical() {
+    use aigc_infer::data::ZipfSampler;
+    let z = ZipfSampler::new(2000, 1.1);
+    let mut rng = Rng::seed_from_u64(0x31337);
+    let mut counts = vec![0u32; 2000];
+    let n = 50_000;
+    for _ in 0..n {
+        counts[z.sample(&mut rng)] += 1;
+    }
+    for prefix in [10usize, 100, 1000, 2000] {
+        let emp: u32 = counts[..prefix].iter().sum();
+        let emp = emp as f64 / n as f64;
+        let ana = z.prefix_mass(prefix);
+        assert!(
+            (emp - ana).abs() < 0.02,
+            "prefix {prefix}: empirical {emp} vs analytic {ana}"
+        );
+    }
+}
