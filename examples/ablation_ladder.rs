@@ -15,7 +15,7 @@ use aigc_infer::data::{TraceConfig, TraceGenerator};
 use aigc_infer::metrics::{LadderRow, Report};
 use aigc_infer::pipeline;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> aigc_infer::Result<()> {
     let n: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -45,8 +45,9 @@ fn main() -> anyhow::Result<()> {
         );
         let requests = trace.take(n);
 
-        let s = pipeline::run(&cfg, &requests)
-            .map_err(|e| anyhow::anyhow!("step {step}: {e}"))?;
+        let s = pipeline::run(&cfg, &requests).map_err(|e| {
+            aigc_infer::Error::Other(format!("step {step}: {e}"))
+        })?;
         eprintln!(
             "step {step} {name:<34} {:8.2} samples/s  acc {:.3}  wall {:.2}s",
             s.samples_per_sec, s.mean_accuracy, s.wall.as_secs_f64()

@@ -1,14 +1,15 @@
-//! Quickstart: load the AOT artifacts, serve a handful of synthetic
-//! summarization requests with the Faster-Transformer engine, print the
-//! generated summaries.
+//! Quickstart: serve a handful of synthetic summarization requests with
+//! the Faster-Transformer engine and print the generated summaries.
+//! Runs hermetically on the reference backend — no `make artifacts`
+//! needed (drop AOT artifacts into `artifacts/` to serve those instead).
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use aigc_infer::config::{EngineKind, ServingConfig};
 use aigc_infer::data::{TraceConfig, TraceGenerator};
 use aigc_infer::pipeline;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> aigc_infer::Result<()> {
     // 1. Configure: FT-pruned engine (the paper's fastest single-engine
     //    row), sequential executor for simplicity.
     let mut cfg = ServingConfig::default();
@@ -25,8 +26,7 @@ fn main() -> anyhow::Result<()> {
     let requests = trace.take(8);
 
     // 3. Serve.
-    let summary = pipeline::run(&cfg, &requests)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let summary = pipeline::run(&cfg, &requests)?;
 
     // 4. Inspect.
     for r in &summary.responses {

@@ -15,7 +15,7 @@ use aigc_infer::data::{TraceConfig, TraceGenerator};
 use aigc_infer::pipeline;
 use aigc_infer::util::json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> aigc_infer::Result<()> {
     let n: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- the trained model: show its loss curve ------------------------
     if let Ok(text) = std::fs::read_to_string("artifacts/train_loss.json") {
-        let log = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let log = json::parse(&text)?;
         let entries = log.as_array().unwrap_or(&[]).to_vec();
         println!("## Training curve (build-time, python/compile/train.py)");
         let first = entries.first();
@@ -69,8 +69,7 @@ fn main() -> anyhow::Result<()> {
     let requests = trace.take(n);
 
     println!("\n## Serving {n} requests (engine={}, pipelined)", engine.label());
-    let s = pipeline::run(&cfg, &requests)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let s = pipeline::run(&cfg, &requests)?;
 
     println!("   wall            {:.2}s", s.wall.as_secs_f64());
     println!("   throughput      {:.2} samples/s ({:.1} tok/s)",

@@ -43,6 +43,7 @@ fn main() {
             max_batch: 8,
             max_wait_ms: 0,
             length_bucketing: bucketing,
+            ..BatchPolicy::default()
         };
         let mut b = DynamicBatcher::new(policy, vec![32, 64, 128]);
         let mut waste = 0.0;

@@ -54,7 +54,12 @@ fn main() {
     samples.push(s);
 
     // --- batcher ---------------------------------------------------------
-    let policy = BatchPolicy { max_batch: 8, max_wait_ms: 0, length_bucketing: true };
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait_ms: 0,
+        length_bucketing: true,
+        ..BatchPolicy::default()
+    };
     samples.push(bench::time("batcher: push+pop 1000 reqs", 1, 10, || {
         let mut b = DynamicBatcher::new(policy.clone(), vec![32, 64, 128]);
         for i in 0..1000u64 {

@@ -9,11 +9,15 @@
 //! We time, per sequence-length bucket: one baseline full forward (=
 //! baseline per-token cost) vs one fused decode step (= FT per-token
 //! cost), plus the fused multi-step variant (per-token amortized).
+//! Runs on the default-config backend — always the hermetic reference
+//! backend (interpreting `artifacts/` weights when that directory
+//! exists); PJRT timings would need a config with `backend: pjrt` and
+//! a `--features pjrt` build.
 
-use aigc_infer::runtime::{DataArg, Runtime};
+use aigc_infer::config::ServingConfig;
+use aigc_infer::runtime::{backend_for, Backend, DataArg};
 use aigc_infer::special;
 use aigc_infer::util::bench;
-use std::rc::Rc;
 
 fn tokens(b: usize, s: usize, len: usize) -> Vec<i32> {
     let mut t = vec![special::PAD as i32; b * s];
@@ -27,39 +31,52 @@ fn tokens(b: usize, s: usize, len: usize) -> Vec<i32> {
 }
 
 fn main() {
-    let rt = Rc::new(Runtime::new("artifacts").expect("make artifacts"));
+    let backend = backend_for(&ServingConfig::default()).expect("backend");
     let b = 4usize;
     let iters = 10;
-    println!("# Fig 2 (measured): per-token cost, recompute vs KV cache\n");
+    println!(
+        "# Fig 2 (measured, {} backend): per-token cost, recompute vs KV cache\n",
+        backend.name()
+    );
     println!(
         "{:>6} {:>22} {:>22} {:>22} {:>9}",
-        "seq", "baseline fwd/token", "ft decode/token", "ft multi8/token", "speedup"
+        "seq", "baseline fwd/token", "ft decode/token", "ft multi/token", "speedup"
     );
 
-    for &s in &rt.manifest.seq_lens.clone() {
+    let seq_lens = backend.manifest().seq_lens.clone();
+    for &s in &seq_lens {
         let len = s / 2;
         // baseline: one full forward == cost of ONE token
-        let base_entry = rt.select("baseline_fwd", "baseline", b, s).unwrap();
-        let base = rt.load(&base_entry.name).unwrap();
+        let base_name = backend
+            .manifest()
+            .select("baseline_fwd", "baseline", b, s)
+            .unwrap()
+            .name
+            .clone();
         let toks = tokens(b, s, len);
         let lens = vec![len as i32; b];
         let sample_base = bench::time(&format!("baseline_s{s}"), 2, iters, || {
-            rt.run(
-                &base,
-                vec![
-                    DataArg::I32(toks.clone(), vec![b, s]),
-                    DataArg::I32(lens.clone(), vec![b]),
-                ],
-            )
-            .unwrap();
+            backend
+                .execute(
+                    &base_name,
+                    vec![
+                        DataArg::I32(toks.clone(), vec![b, s]),
+                        DataArg::I32(lens.clone(), vec![b]),
+                    ],
+                )
+                .unwrap();
         });
 
         // ft: prefill once to get caches, then time single decode steps
-        let pre_entry = rt.select("ft_prefill", "full", b, s).unwrap();
-        let pre = rt.load(&pre_entry.name).unwrap();
-        let outs = rt
-            .run(
-                &pre,
+        let pre_name = backend
+            .manifest()
+            .select("ft_prefill", "full", b, s)
+            .unwrap()
+            .name
+            .clone();
+        let outs = backend
+            .execute(
+                &pre_name,
                 vec![
                     DataArg::I32(toks.clone(), vec![b, s]),
                     DataArg::I32(lens.clone(), vec![b]),
@@ -68,56 +85,49 @@ fn main() {
             .unwrap();
         let mut it = outs.into_iter();
         let _logits = it.next().unwrap();
-        let k0 = it.next().unwrap();
-        let v0 = it.next().unwrap();
+        let k0 = it.next().unwrap().into_opaque().unwrap();
+        let v0 = it.next().unwrap().into_opaque().unwrap();
 
-        let dec_entry = rt
-            .manifest
-            .artifacts
-            .iter()
-            .find(|a| a.kind == "ft_decode" && a.variant == "full"
-                  && a.batch == b && a.seq == s)
-            .unwrap()
-            .clone();
-        let dec = rt.load(&dec_entry.name).unwrap();
+        let find = |kind: &str| {
+            backend
+                .manifest()
+                .find_exact(kind, "full", b, s)
+                .map(|a| (a.name.clone(), a.steps))
+                .unwrap()
+        };
+        let (dec_name, _) = find("ft_decode");
         let tok1 = vec![special::FIRST_WORD as i32; b];
         let pos1 = vec![len as i32; b];
         // each iteration re-feeds the same caches (cost-identical)
         let sample_dec = bench::time(&format!("decode_s{s}"), 2, iters, || {
-            rt.run(
-                &dec,
-                vec![
-                    DataArg::I32(tok1.clone(), vec![b]),
-                    DataArg::I32(pos1.clone(), vec![b]),
-                    DataArg::Lit(k0.clone()),
-                    DataArg::Lit(v0.clone()),
-                ],
-            )
-            .unwrap();
-        });
-
-        let multi_entry = rt
-            .manifest
-            .artifacts
-            .iter()
-            .find(|a| a.kind == "ft_decode_multi" && a.variant == "full"
-                  && a.batch == b && a.seq == s)
-            .unwrap()
-            .clone();
-        let steps = multi_entry.steps.unwrap_or(8);
-        let multi = rt.load(&multi_entry.name).unwrap();
-        let sample_multi =
-            bench::time(&format!("multi_s{s}"), 2, iters, || {
-                rt.run(
-                    &multi,
+            backend
+                .execute(
+                    &dec_name,
                     vec![
                         DataArg::I32(tok1.clone(), vec![b]),
                         DataArg::I32(pos1.clone(), vec![b]),
-                        DataArg::Lit(k0.clone()),
-                        DataArg::Lit(v0.clone()),
+                        DataArg::Opaque(k0.clone()),
+                        DataArg::Opaque(v0.clone()),
                     ],
                 )
                 .unwrap();
+        });
+
+        let (multi_name, multi_steps) = find("ft_decode_multi");
+        let steps = multi_steps.unwrap_or(8);
+        let sample_multi =
+            bench::time(&format!("multi_s{s}"), 2, iters, || {
+                backend
+                    .execute(
+                        &multi_name,
+                        vec![
+                            DataArg::I32(tok1.clone(), vec![b]),
+                            DataArg::I32(pos1.clone(), vec![b]),
+                            DataArg::Opaque(k0.clone()),
+                            DataArg::Opaque(v0.clone()),
+                        ],
+                    )
+                    .unwrap();
             });
 
         let per_tok_multi = sample_multi.mean / steps as u32;
@@ -133,7 +143,7 @@ fn main() {
     }
     println!(
         "\nshape check: baseline/token grows with seq; decode/token ~flat;\n\
-         the gap IS the KV cache (paper Fig 2).  multi8 additionally\n\
-         amortizes the rust<->PJRT cache round-trip (§Perf)."
+         the gap IS the KV cache (paper Fig 2).  multi additionally\n\
+         amortizes the engine<->backend cache round-trip (§Perf)."
     );
 }

@@ -7,6 +7,35 @@ use std::path::Path;
 use crate::util::json::{self, Value};
 use crate::{Error, Result};
 
+/// Which execution backend runs the graphs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust reference execution — hermetic, always available.
+    #[default]
+    Reference,
+    /// PJRT over AOT artifacts (`--features pjrt` + `make artifacts`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendKind::Reference => "reference",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            _ => Err(Error::Other(format!(
+                "unknown backend '{s}' (reference|pjrt)"
+            ))),
+        }
+    }
+}
+
 /// Which engine serves the batch — the paper's Table 1 ladder.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
@@ -74,11 +103,20 @@ pub struct BatchPolicy {
     pub max_wait_ms: u64,
     /// Group requests by length bucket before batching (vs. FIFO).
     pub length_bucketing: bool,
+    /// Cap on the summed token footprint (prompt + generation budget)
+    /// of one batch; 0 = unlimited.  A batch always carries at least
+    /// one request even if that request alone exceeds the cap.
+    pub max_batch_tokens: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 8, max_wait_ms: 20, length_bucketing: true }
+        Self {
+            max_batch: 8,
+            max_wait_ms: 20,
+            length_bucketing: true,
+            max_batch_tokens: 0,
+        }
     }
 }
 
@@ -100,8 +138,12 @@ impl Default for GenConfig {
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
-    /// Directory holding manifest.json + *.hlo.txt + weights.
+    /// Directory holding manifest.json + *.hlo.txt + weights.  With the
+    /// reference backend the directory is optional: when absent, a
+    /// synthetic seeded model is served.
     pub artifacts_dir: String,
+    /// Execution backend (reference by default; pjrt needs the feature).
+    pub backend: BackendKind,
     pub engine: EngineKind,
     pub sampling: Sampling,
     pub batch: BatchPolicy,
@@ -121,6 +163,7 @@ impl Default for ServingConfig {
     fn default() -> Self {
         Self {
             artifacts_dir: "artifacts".into(),
+            backend: BackendKind::default(),
             engine: EngineKind::FtPruned,
             sampling: Sampling::Greedy,
             batch: BatchPolicy::default(),
@@ -147,6 +190,9 @@ impl ServingConfig {
         let mut cfg = Self::default();
         if let Some(s) = v.get("artifacts_dir").as_str() {
             cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = v.get("backend").as_str() {
+            cfg.backend = BackendKind::parse(s)?;
         }
         if let Some(s) = v.get("engine").as_str() {
             cfg.engine = EngineKind::parse(s)?;
@@ -180,6 +226,9 @@ impl ServingConfig {
             }
             if let Some(x) = b.get("length_bucketing").as_bool() {
                 cfg.batch.length_bucketing = x;
+            }
+            if let Some(n) = b.get("max_batch_tokens").as_usize() {
+                cfg.batch.max_batch_tokens = n;
             }
         }
         let g = v.get("gen");
@@ -216,6 +265,7 @@ impl ServingConfig {
         };
         Value::obj(vec![
             ("artifacts_dir", Value::str(self.artifacts_dir.clone())),
+            ("backend", Value::str(self.backend.label())),
             ("engine", Value::str(self.engine.label())),
             ("sampling", sampling),
             (
@@ -226,6 +276,10 @@ impl ServingConfig {
                     (
                         "length_bucketing",
                         Value::Bool(self.batch.length_bucketing),
+                    ),
+                    (
+                        "max_batch_tokens",
+                        Value::num(self.batch.max_batch_tokens as f64),
                     ),
                 ]),
             ),
@@ -317,6 +371,22 @@ mod tests {
         let c = ServingConfig::from_json(r#"{"engine": "baseline"}"#).unwrap();
         assert_eq!(c.engine, EngineKind::Baseline);
         assert_eq!(c.batch.max_batch, 8);
+        assert_eq!(c.backend, BackendKind::Reference);
+        assert_eq!(c.batch.max_batch_tokens, 0);
         assert!(c.pipelined);
+    }
+
+    #[test]
+    fn backend_parses_and_roundtrips() {
+        assert_eq!(BackendKind::parse("reference").unwrap(),
+                   BackendKind::Reference);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("gpu").is_err());
+        let mut c = ServingConfig::default();
+        c.backend = BackendKind::Pjrt;
+        c.batch.max_batch_tokens = 512;
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.backend, BackendKind::Pjrt);
+        assert_eq!(back.batch.max_batch_tokens, 512);
     }
 }

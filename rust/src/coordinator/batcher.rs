@@ -84,7 +84,9 @@ impl DynamicBatcher {
             0
         };
         if self.queues[qi].is_empty() {
-            self.oldest[qi] = Some(Instant::now());
+            // age from the request's enqueue time (same clock drain()
+            // uses for leftovers), not from when it reached the batcher
+            self.oldest[qi] = Some(req.enqueued);
         }
         self.queues[qi].push_back(req);
     }
@@ -141,14 +143,25 @@ impl DynamicBatcher {
     }
 
     fn drain(&mut self, qi: usize) -> Batch {
-        let take = self.policy.max_batch.min(self.queues[qi].len());
+        let mut take = self.policy.max_batch.min(self.queues[qi].len());
+        if self.policy.max_batch_tokens > 0 {
+            // stop before the token-footprint cap; always emit >= 1
+            let mut tokens = 0usize;
+            let mut n = 0usize;
+            for r in self.queues[qi].iter().take(take) {
+                tokens += r.need_seq();
+                if n > 0 && tokens > self.policy.max_batch_tokens {
+                    break;
+                }
+                n += 1;
+            }
+            take = n.max(1);
+        }
         let requests: Vec<PreparedRequest> =
             self.queues[qi].drain(..take).collect();
-        self.oldest[qi] = if self.queues[qi].is_empty() {
-            None
-        } else {
-            Some(Instant::now())
-        };
+        // leftovers (common with a token cap) keep their real age so the
+        // timeout flush doesn't restart from zero per emitted batch
+        self.oldest[qi] = self.queues[qi].front().map(|r| r.enqueued);
         let seq_bucket = if self.policy.length_bucketing {
             self.seq_buckets[qi]
         } else {
@@ -177,7 +190,12 @@ mod tests {
     }
 
     fn policy(max_batch: usize, bucketing: bool) -> BatchPolicy {
-        BatchPolicy { max_batch, max_wait_ms: 10_000, length_bucketing: bucketing }
+        BatchPolicy {
+            max_batch,
+            max_wait_ms: 10_000,
+            length_bucketing: bucketing,
+            ..BatchPolicy::default()
+        }
     }
 
     #[test]
@@ -240,5 +258,23 @@ mod tests {
         }
         assert_eq!(b.pop(false).unwrap().len(), 2);
         assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn drain_respects_token_cap() {
+        let mut p = policy(8, true);
+        p.max_batch_tokens = 30; // each req needs 8 + 4 = 12 tokens
+        let mut b = DynamicBatcher::new(p, vec![32]);
+        for i in 0..8 {
+            b.push(req(i, 8));
+        }
+        let batch = b.pop(false).unwrap(); // queue at max_batch -> flush
+        assert_eq!(batch.len(), 2, "2 * 12 <= 30 < 3 * 12");
+        // a single oversized request still goes out alone
+        let mut p = policy(8, true);
+        p.max_batch_tokens = 4;
+        let mut b = DynamicBatcher::new(p, vec![32]);
+        b.push(req(0, 8));
+        assert_eq!(b.pop(true).unwrap().len(), 1);
     }
 }

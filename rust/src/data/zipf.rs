@@ -89,6 +89,48 @@ mod tests {
     }
 
     #[test]
+    fn prefix_mass_matches_analytic_harmonic_sums() {
+        // cdf construction vs a direct evaluation of the normalized
+        // generalized harmonic sums — deterministic, no sampling
+        let (n, alpha) = (500usize, 1.3f64);
+        let z = ZipfSampler::new(n, alpha);
+        let total: f64 = (0..n).map(|k| ((k + 1) as f64).powf(-alpha)).sum();
+        for prefix in [1usize, 2, 10, 137, 500] {
+            let direct: f64 = (0..prefix)
+                .map(|k| ((k + 1) as f64).powf(-alpha))
+                .sum::<f64>()
+                / total;
+            let got = z.prefix_mass(prefix);
+            assert!(
+                (got - direct).abs() < 1e-9,
+                "prefix {prefix}: {got} vs {direct}"
+            );
+        }
+        assert_eq!(z.support(), n);
+    }
+
+    #[test]
+    fn empirical_counts_decay_with_rank() {
+        // Zipf shape: block frequencies are monotone decreasing in rank
+        // (seeded, so the counts are reproducible)
+        let z = ZipfSampler::new(4000, 1.1);
+        let mut rng = Rng::seed_from_u64(0x21F);
+        let mut counts = vec![0u32; 4000];
+        for _ in 0..40_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let block: Vec<u32> = (0..4)
+            .map(|b| counts[b * 1000..(b + 1) * 1000].iter().sum())
+            .collect();
+        assert!(
+            block.windows(2).all(|w| w[0] > w[1]),
+            "block mass must decay: {block:?}"
+        );
+        // head dominance: top 1000 ranks carry most of the mass
+        assert!(block[0] as f64 / 40_000.0 > 0.6, "head {:?}", block[0]);
+    }
+
+    #[test]
     fn deterministic_under_seed() {
         let z = ZipfSampler::new(50, 1.1);
         let a: Vec<usize> = {

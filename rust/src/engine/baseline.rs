@@ -8,19 +8,19 @@
 use std::rc::Rc;
 
 use super::{trim_at_eos, Engine, EngineInput, EngineOutput, Sampler};
-use crate::runtime::{DataArg, Runtime};
+use crate::runtime::{Backend, DataArg};
 use crate::{special, Error, Result};
 
 pub struct BaselineEngine {
-    runtime: Rc<Runtime>,
+    backend: Rc<dyn Backend>,
     max_seq: usize,
     vocab_size: usize,
 }
 
 impl BaselineEngine {
-    pub fn new(runtime: Rc<Runtime>) -> Result<Self> {
-        let max_seq = runtime
-            .manifest
+    pub fn new(backend: Rc<dyn Backend>) -> Result<Self> {
+        let max_seq = backend
+            .manifest()
             .artifacts
             .iter()
             .filter(|a| a.kind == "baseline_fwd")
@@ -29,8 +29,8 @@ impl BaselineEngine {
             .ok_or_else(|| {
                 Error::Manifest("no baseline_fwd artifacts".into())
             })?;
-        let vocab_size = runtime.manifest.config_for("baseline").vocab_size;
-        Ok(Self { runtime, max_seq, vocab_size })
+        let vocab_size = backend.manifest().config_for("baseline").vocab_size;
+        Ok(Self { backend, max_seq, vocab_size })
     }
 }
 
@@ -60,14 +60,15 @@ impl Engine for BaselineEngine {
         let max_new =
             batch.iter().map(|r| r.max_new_tokens).max().unwrap();
         let need_seq = longest_prompt + max_new;
-        let entry = self.runtime.select(
-            "baseline_fwd",
-            "baseline",
-            batch.len(),
-            need_seq,
-        )?;
-        let (b, s) = (entry.batch, entry.seq);
-        let exe = self.runtime.load(&entry.name)?;
+        let (exe_name, b, s) = {
+            let entry = self.backend.manifest().select(
+                "baseline_fwd",
+                "baseline",
+                batch.len(),
+                need_seq,
+            )?;
+            (entry.name.clone(), entry.batch, entry.seq)
+        };
 
         // padded token matrix [b, s] + per-sequence write cursors
         let mut tokens = vec![special::PAD as i32; b * s];
@@ -88,14 +89,15 @@ impl Engine for BaselineEngine {
             if done.iter().all(|&d| d) {
                 break;
             }
-            let outs = self.runtime.run(
-                &exe,
+            let outs = self.backend.execute(
+                &exe_name,
                 vec![
                     DataArg::I32(tokens.clone(), vec![b, s]),
                     DataArg::I32(lens.clone(), vec![b]),
                 ],
             )?;
-            let logits = outs[0].to_vec::<f32>()?; // [b, V]
+            let logits =
+                outs.into_iter().next().unwrap().into_f32()?; // [b, V]
             let v = self.vocab_size;
             steps += 1;
             for (i, r) in batch.iter().enumerate() {

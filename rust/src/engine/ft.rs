@@ -1,15 +1,16 @@
 //! Rows 2-3 of Table 1: the Faster-Transformer-style engine.
 //!
 //! One fused **prefill** call processes the whole prompt AND returns the
-//! KV cache (fp16); each subsequent **decode** call attends against the
-//! cache in O(S) — the Fig 2 mechanism.  The caches round-trip between
-//! calls as opaque PJRT literals (never decoded on the host), so fp16
-//! halves the bytes moved per step.
+//! KV cache; each subsequent **decode** call attends against the cache
+//! in O(S) — the Fig 2 mechanism.  The caches round-trip between calls
+//! as backend-opaque tensors (never decoded here), so their storage —
+//! fp16 literals on PJRT, flat f32 on the reference backend — stays a
+//! backend detail.
 //!
 //! With greedy sampling the engine prefers the fused **multi-step**
-//! executable: 8 decode steps + argmax run inside ONE graph (lax.scan at
-//! L2), amortizing the per-call host↔device cache transfer — the main
-//! §Perf lever on this CPU testbed.
+//! executable: N decode steps + argmax run inside ONE graph call,
+//! amortizing the per-call cache round-trip — the main §Perf lever on
+//! this CPU testbed.
 //!
 //! Variant "pruned" is the same code over the pruned-embedding artifacts
 //! (vocab 8000→4000, positions 512→128): smaller embedding gather,
@@ -18,11 +19,11 @@
 use std::rc::Rc;
 
 use super::{trim_at_eos, Engine, EngineInput, EngineOutput, Sampler};
-use crate::runtime::{DataArg, Runtime};
+use crate::runtime::{Backend, DataArg};
 use crate::{special, Error, Result};
 
 pub struct FtEngine {
-    runtime: Rc<Runtime>,
+    backend: Rc<dyn Backend>,
     variant: &'static str,
     use_multi_step: bool,
     max_seq: usize,
@@ -32,12 +33,12 @@ pub struct FtEngine {
 
 impl FtEngine {
     pub fn new(
-        runtime: Rc<Runtime>,
+        backend: Rc<dyn Backend>,
         variant: &'static str,
         use_multi_step: bool,
     ) -> Result<Self> {
-        let max_seq = runtime
-            .manifest
+        let max_seq = backend
+            .manifest()
             .artifacts
             .iter()
             .filter(|a| a.kind == "ft_prefill" && a.variant == variant)
@@ -46,20 +47,16 @@ impl FtEngine {
             .ok_or_else(|| {
                 Error::Manifest(format!("no ft_prefill[{variant}] artifacts"))
             })?;
-        let vocab_size = runtime.manifest.config_for(variant).vocab_size;
-        let multi_steps = runtime.manifest.multi_steps;
+        let vocab_size = backend.manifest().config_for(variant).vocab_size;
+        let multi_steps = backend.manifest().multi_steps;
         Ok(Self {
-            runtime,
+            backend,
             variant,
             use_multi_step,
             max_seq,
             vocab_size,
             multi_steps,
         })
-    }
-
-    fn variant_static(&self) -> &'static str {
-        self.variant
     }
 }
 
@@ -87,47 +84,35 @@ impl Engine for FtEngine {
         if batch.is_empty() {
             return Ok(vec![]);
         }
-        let variant = self.variant_static();
+        let variant = self.variant;
         let longest_prompt =
             batch.iter().map(|r| r.prompt.len()).max().unwrap();
         let max_new = batch.iter().map(|r| r.max_new_tokens).max().unwrap();
         let need_seq = longest_prompt + max_new;
-        let prefill_entry =
-            self.runtime
-                .select("ft_prefill", variant, batch.len(), need_seq)?;
-        let (b, s) = (prefill_entry.batch, prefill_entry.seq);
+        let manifest = self.backend.manifest();
+        let (prefill_name, b, s) = {
+            let entry =
+                manifest.select("ft_prefill", variant, batch.len(), need_seq)?;
+            (entry.name.clone(), entry.batch, entry.seq)
+        };
         // decode buckets must match the cache shape [L,b,H,s,Dh]
-        let decode_entry = self
-            .runtime
-            .manifest
-            .artifacts
-            .iter()
-            .find(|a| {
-                a.kind == "ft_decode"
-                    && a.variant == variant
-                    && a.batch == b
-                    && a.seq == s
-            })
+        let decode_name = manifest
+            .find_exact("ft_decode", variant, b, s)
+            .map(|a| a.name.clone())
             .ok_or_else(|| Error::NoBucket {
                 kind: "ft_decode".into(),
                 variant: variant.into(),
                 batch: b,
                 seq: s,
-            })?
-            .clone();
-        let multi_entry = self.runtime.manifest.artifacts.iter().find(|a| {
-            a.kind == "ft_decode_multi"
-                && a.variant == variant
-                && a.batch == b
-                && a.seq == s
-        });
-
-        let prefill = self.runtime.load(&prefill_entry.name)?;
-        let decode = self.runtime.load(&decode_entry.name)?;
-        let multi = match (self.use_multi_step && sampler.is_greedy(),
-                           multi_entry) {
-            (true, Some(e)) => Some(self.runtime.load(&e.name)?),
-            _ => None,
+            })?;
+        // the fused graph's token-matrix width is the ENTRY's step
+        // count (falling back to the manifest-wide default)
+        let multi = if self.use_multi_step && sampler.is_greedy() {
+            manifest
+                .find_exact("ft_decode_multi", variant, b, s)
+                .map(|a| (a.name.clone(), a.steps.unwrap_or(self.multi_steps)))
+        } else {
+            None
         };
 
         // ---- prefill --------------------------------------------------
@@ -139,20 +124,19 @@ impl Engine for FtEngine {
             }
             positions[i] = r.prompt.len() as i32;
         }
-        let outs = self.runtime.run(
-            &prefill,
+        let outs = self.backend.execute(
+            &prefill_name,
             vec![
                 DataArg::I32(tokens, vec![b, s]),
                 DataArg::I32(positions.clone(), vec![b]),
             ],
         )?;
         let mut outs = outs.into_iter();
-        let logits_lit = outs.next().unwrap();
-        let mut k_cache = outs.next().unwrap();
-        let mut v_cache = outs.next().unwrap();
+        let logits = outs.next().unwrap().into_f32()?; // [b, V]
+        let mut k_cache = outs.next().unwrap().into_opaque()?;
+        let mut v_cache = outs.next().unwrap().into_opaque()?;
 
         let v = self.vocab_size;
-        let logits = logits_lit.to_vec::<f32>()?; // [b, V]
 
         let mut generated: Vec<Vec<u32>> = vec![Vec::new(); batch.len()];
         let mut done = vec![false; batch.len()];
@@ -204,26 +188,28 @@ impl Engine for FtEngine {
                 cur_pos[i] = positions[i] + generated[i].len() as i32 - 1;
             }
 
-            if let (Some(m), true) =
-                (multi.as_ref(), remaining >= self.multi_steps)
-            {
-                // fused multi-step greedy decode: 8 tokens per call
-                let outs = self.runtime.run(
-                    m,
+            let fused = match multi.as_ref() {
+                Some((name, st)) if remaining >= *st => Some((name, *st)),
+                _ => None,
+            };
+            if let Some((m_name, m_steps)) = fused {
+                // fused multi-step greedy decode: m_steps tokens per call
+                let outs = self.backend.execute(
+                    m_name,
                     vec![
                         DataArg::I32(last_tok.clone(), vec![b]),
                         DataArg::I32(cur_pos.clone(), vec![b]),
-                        DataArg::Lit(k_cache),
-                        DataArg::Lit(v_cache),
+                        DataArg::Opaque(k_cache),
+                        DataArg::Opaque(v_cache),
                     ],
                 )?;
                 let mut it = outs.into_iter();
-                let toks = it.next().unwrap().to_vec::<i32>()?; // [b, steps]
-                k_cache = it.next().unwrap();
-                v_cache = it.next().unwrap();
+                let toks = it.next().unwrap().into_i32()?; // [b, m_steps]
+                k_cache = it.next().unwrap().into_opaque()?;
+                v_cache = it.next().unwrap().into_opaque()?;
                 steps += 1;
                 for (i, r) in batch.iter().enumerate() {
-                    for step in 0..self.multi_steps {
+                    for step in 0..m_steps {
                         if done[i]
                             || generated[i].len() >= r.max_new_tokens
                             || positions[i] as usize + generated[i].len() >= s
@@ -231,7 +217,7 @@ impl Engine for FtEngine {
                             done[i] = true;
                             break;
                         }
-                        let t = toks[i * self.multi_steps + step] as u32;
+                        let t = toks[i * m_steps + step] as u32;
                         if t == special::EOS {
                             done[i] = true;
                             break;
@@ -241,19 +227,19 @@ impl Engine for FtEngine {
                     }
                 }
             } else {
-                let outs = self.runtime.run(
-                    &decode,
+                let outs = self.backend.execute(
+                    &decode_name,
                     vec![
                         DataArg::I32(last_tok.clone(), vec![b]),
                         DataArg::I32(cur_pos.clone(), vec![b]),
-                        DataArg::Lit(k_cache),
-                        DataArg::Lit(v_cache),
+                        DataArg::Opaque(k_cache),
+                        DataArg::Opaque(v_cache),
                     ],
                 )?;
                 let mut it = outs.into_iter();
-                let logits = it.next().unwrap().to_vec::<f32>()?;
-                k_cache = it.next().unwrap();
-                v_cache = it.next().unwrap();
+                let logits = it.next().unwrap().into_f32()?;
+                k_cache = it.next().unwrap().into_opaque()?;
+                v_cache = it.next().unwrap().into_opaque()?;
                 steps += 1;
                 for (i, r) in batch.iter().enumerate() {
                     if done[i] {

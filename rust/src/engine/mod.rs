@@ -23,7 +23,7 @@ pub use ft::FtEngine;
 pub use sampling::Sampler;
 
 use crate::config::{EngineKind, GenConfig, Sampling};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::{special, Result};
 use std::rc::Rc;
 
@@ -62,39 +62,40 @@ pub trait Engine {
     ) -> Result<Vec<EngineOutput>>;
 }
 
-/// Construct the engine for a ladder row over a shared runtime.
+/// Construct the engine for a ladder row over a shared backend (the
+/// reference backend by default; PJRT behind `--features pjrt`).
 pub fn build(
     kind: EngineKind,
-    runtime: Rc<Runtime>,
+    backend: Rc<dyn Backend>,
     gen: GenConfig,
 ) -> Result<Box<dyn Engine>> {
     Ok(match kind {
-        EngineKind::Baseline => Box::new(BaselineEngine::new(runtime)?),
+        EngineKind::Baseline => Box::new(BaselineEngine::new(backend)?),
         EngineKind::FtFull => {
-            Box::new(FtEngine::new(runtime, "full", gen.use_multi_step)?)
+            Box::new(FtEngine::new(backend, "full", gen.use_multi_step)?)
         }
         EngineKind::FtPruned => {
-            Box::new(FtEngine::new(runtime, "pruned", gen.use_multi_step)?)
+            Box::new(FtEngine::new(backend, "pruned", gen.use_multi_step)?)
         }
     })
 }
 
-/// Compile every artifact the engine variant can touch — the "model
+/// Ready every artifact the engine variant can touch — the "model
 /// loading" startup step (keeps first-request latency clean; the paper's
 /// engines also build once before serving).
-pub fn precompile(kind: EngineKind, runtime: &Runtime) -> Result<()> {
+pub fn precompile(kind: EngineKind, backend: &dyn Backend) -> Result<()> {
     let variant = kind.variant();
-    let names: Vec<String> = runtime
-        .manifest
+    let names: Vec<String> = backend
+        .manifest()
         .artifacts
         .iter()
         .filter(|a| a.variant == variant)
         .map(|a| a.name.clone())
         .collect();
     for name in names {
-        runtime.load(&name)?;
+        backend.prepare(&name)?;
     }
-    runtime.device_weights(runtime.manifest.weights_key_for(variant))?;
+    backend.upload_weights(backend.manifest().weights_key_for(variant))?;
     Ok(())
 }
 

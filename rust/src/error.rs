@@ -9,6 +9,7 @@ use std::fmt;
 #[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA failures (compile, execute, literal marshalling).
+    #[cfg(feature = "pjrt")]
     Xla(xla::Error),
     /// Filesystem / socket errors.
     Io(std::io::Error),
@@ -38,6 +39,7 @@ pub enum Error {
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
+            #[cfg(feature = "pjrt")]
             Error::Xla(e) => write!(f, "xla/pjrt error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json(e) => write!(f, "json error: {e}"),
@@ -69,6 +71,7 @@ impl std::error::Error for Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e)

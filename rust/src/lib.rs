@@ -9,10 +9,23 @@
 //!   paper's four-stage parallel pipeline (§3.3 Fig 4), a fast
 //!   wordpiece tokenizer, synthetic-workload substrates, metrics, and a
 //!   TCP serving front-end.  Python is never on the request path.
-//! - **L2/L1 (python/, build-time only)** — the UNIMO-style prefix LM and
-//!   its fused Pallas kernels, AOT-lowered by `make artifacts` into
-//!   `artifacts/*.hlo.txt`, which [`runtime`] loads and executes through
-//!   the PJRT C API (`xla` crate).
+//! - **L2/L1 (python/, optional, build-time only)** — the UNIMO-style
+//!   prefix LM and its fused Pallas kernels, AOT-lowered by `make
+//!   artifacts` into `artifacts/*.hlo.txt`.
+//!
+//! Engines execute graphs through the [`runtime::Backend`] abstraction,
+//! which has two implementations:
+//!
+//! - [`runtime::RefBackend`] (**default, hermetic**) — a pure-Rust
+//!   reference interpreter of the same manifest graphs (a port of
+//!   `python/compile/kernels/ref.py`).  With no `artifacts/` directory
+//!   it serves a synthetic seeded model, so the full stack — every
+//!   engine, the pipeline, the TCP server, all benches — builds, tests
+//!   and runs from a clean checkout with zero system dependencies.
+//!   `make artifacts` is optional for development.
+//! - `runtime::Runtime` (**`--features pjrt`**) — the PJRT client that
+//!   compiles and executes the AOT artifacts through the PJRT C API
+//!   (vendored `xla` crate required; see `rust/Cargo.toml`).
 //!
 //! Engine variants reproduce the paper's Table 1 ladder:
 //!

@@ -12,16 +12,18 @@
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
-use aigc_infer::config::{EngineKind, ServingConfig};
+use aigc_infer::config::{BackendKind, EngineKind, ServingConfig};
 use aigc_infer::data::{TraceConfig, TraceGenerator};
 use aigc_infer::metrics::{LadderRow, Report};
 use aigc_infer::pipeline;
-use aigc_infer::runtime::Manifest;
+use aigc_infer::runtime::manifest_for;
 
 fn usage() -> ! {
     eprintln!(
         "usage: aigc-infer <info|run|ladder|serve> [options]\n\
          common: --artifacts DIR (default: artifacts)  --config FILE.json\n\
+                 --backend reference|pjrt (default: reference; a synthetic\n\
+                 model is served when DIR has no manifest.json)\n\
          run:    --engine baseline|ft_full|ft_pruned  --n N  --max-new T\n\
                  --no-pipeline  --no-bucketing  --no-multi-step  --seed S\n\
          ladder: --n N\n\
@@ -84,6 +86,12 @@ fn build_config(args: &Args) -> ServingConfig {
     if let Some(d) = args.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendKind::parse(b).unwrap_or_else(|err| {
+            eprintln!("{err}");
+            usage()
+        });
+    }
     if let Some(e) = args.get("engine") {
         cfg.engine = EngineKind::parse(e).unwrap_or_else(|err| {
             eprintln!("{err}");
@@ -119,10 +127,15 @@ fn workload(args: &Args, cfg: &ServingConfig) -> Vec<aigc_infer::data::Request> 
 }
 
 fn cmd_info(args: &Args) {
-    let dir = args.get("artifacts").unwrap_or("artifacts");
-    match Manifest::load(dir) {
+    let cfg = build_config(args);
+    match manifest_for(&cfg) {
         Ok(m) => {
-            println!("manifest: {} (hash {})", dir, &m.input_hash[..12]);
+            println!(
+                "manifest: {} (backend {}, hash {})",
+                cfg.artifacts_dir,
+                cfg.backend.label(),
+                &m.input_hash[..m.input_hash.len().min(12)]
+            );
             for (k, c) in &m.configs {
                 println!(
                     "  config[{k}]: vocab={} pos={} d={} L={} H={} dtype={}",
@@ -150,7 +163,8 @@ fn cmd_run(args: &Args) {
     let cfg = build_config(args);
     let reqs = workload(args, &cfg);
     println!(
-        "engine={} pipelined={} bucketing={} requests={}",
+        "backend={} engine={} pipelined={} bucketing={} requests={}",
+        cfg.backend.label(),
         cfg.engine.label(),
         cfg.pipelined,
         cfg.batch.length_bucketing,
@@ -164,7 +178,7 @@ fn cmd_run(args: &Args) {
             println!("latency       {}", s.latency.summary());
             println!("accuracy      {:.3}", s.mean_accuracy);
             println!(
-                "pjrt          {} execs, {} compiles ({:.2}s compile, {:.2}s exec+download {:.2}s)",
+                "backend       {} execs, {} compiles ({:.2}s compile, {:.2}s exec+download {:.2}s)",
                 s.runtime_stats.executions,
                 s.runtime_stats.compiles,
                 s.runtime_stats.compile_secs,

@@ -168,4 +168,53 @@ mod tests {
         assert_eq!(h.quantile(0.99), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
     }
+
+    #[test]
+    fn quantile_extremes_and_single_sample() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_millis(7));
+        // with one sample every quantile reports that sample's bucket
+        let lo = h.quantile(0.0);
+        let hi = h.quantile(1.0);
+        assert_eq!(lo, hi);
+        let v = lo.as_secs_f64();
+        assert!((0.007..0.0085).contains(&v), "bucket edge {v}");
+        // out-of-range q is clamped, not a panic
+        assert_eq!(h.quantile(-3.0), lo);
+        assert_eq!(h.quantile(9.0), hi);
+    }
+
+    #[test]
+    fn quantiles_deterministic_under_seeded_load() {
+        use crate::util::rng::Rng;
+        let build = || {
+            let mut rng = Rng::seed_from_u64(0xD157);
+            let mut h = Histogram::new();
+            for _ in 0..5000 {
+                h.record(Duration::from_micros(
+                    rng.gen_range(1, 2_000_000) as u64
+                ));
+            }
+            h
+        };
+        let (a, b) = (build(), build());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), b.quantile(q), "q={q}");
+        }
+        // log-bucketed p50 of ~uniform[1us, 2s] stays within one bucket
+        // width (~12%) of the true median
+        let p50 = a.quantile(0.5).as_secs_f64();
+        assert!((p50 - 1.0).abs() < 0.2, "p50 {p50}");
+    }
+
+    #[test]
+    fn extreme_durations_saturate_into_edge_buckets() {
+        let mut h = Histogram::new();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_secs(50_000)); // beyond the last decade
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) > Duration::ZERO); // lowest bucket edge
+        assert!(h.quantile(1.0) <= h.max());
+        assert_eq!(h.max(), Duration::from_secs(50_000));
+    }
 }

@@ -12,9 +12,9 @@
 //!   (rows 1-3 of Table 1);
 //! - [`run_pipelined`]: stage-per-thread with bounded handoff (row 4).
 //!
-//! The inference stage CONSTRUCTS the PJRT runtime inside its own thread
-//! (the `xla` client is `Rc`-based, not `Send`); everything crosses
-//! stages as plain data.
+//! The inference stage CONSTRUCTS its execution backend inside its own
+//! thread (backends are thread-confined — the PJRT client is `Rc`-based,
+//! not `Send`); everything crosses stages as plain data.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -28,7 +28,7 @@ use crate::coordinator::request::summary_accuracy;
 use crate::data::Request;
 use crate::engine::{build as build_engine, sampler_for};
 use crate::metrics::{Histogram, StageTimer};
-use crate::runtime::{Runtime, RuntimeStats};
+use crate::runtime::{backend_for, manifest_for, Backend, RuntimeStats};
 use crate::tokenizer::{decode as detokenize, Encode, FastTokenizer, Vocab};
 use crate::{special, Error, Result};
 
@@ -48,7 +48,7 @@ pub struct RunSummary {
     pub samples_per_sec: f64,
     pub generated_tokens: u64,
     pub mean_accuracy: f64,
-    /// PJRT counters from the inference runtime (compiles, transfers).
+    /// Backend counters from the inference runtime (compiles, transfers).
     pub runtime_stats: RuntimeStats,
 }
 
@@ -152,27 +152,25 @@ pub fn run_sequential(
     requests: &[Request],
 ) -> Result<RunSummary> {
     cfg.validate()?;
-    let runtime = std::rc::Rc::new(Runtime::new(&cfg.artifacts_dir)?);
+    let backend = backend_for(cfg)?;
     // The tokenizer always speaks the FULL vocabulary; pruned engines see
     // a prefix via vocab_limit (re-segmentation happens in the encoder).
-    let full_vocab = runtime.manifest.config_for("baseline").vocab_size;
+    let full_vocab = backend.manifest().config_for("baseline").vocab_size;
+    let seq_lens = backend.manifest().seq_lens.clone();
     let tok = make_tokenizer(full_vocab);
-    let engine = build_engine(cfg.engine, runtime.clone(), cfg.gen)?;
+    let engine = build_engine(cfg.engine, backend.clone(), cfg.gen)?;
     if cfg.precompile {
-        crate::engine::precompile(cfg.engine, &runtime)?;
+        crate::engine::precompile(cfg.engine, backend.as_ref())?;
     }
     let mut sampler = sampler_for(cfg.sampling);
-    let mut batcher = DynamicBatcher::new(
-        cfg.batch.clone(),
-        runtime.manifest.seq_lens.clone(),
-    );
+    let mut batcher = DynamicBatcher::new(cfg.batch.clone(), seq_lens);
 
     let mut stages = StageTimer::default();
     let mut responses = Vec::with_capacity(requests.len());
     let wall_start = Instant::now();
     // only compilation INSIDE the measured window counts against steady
     // state (precompile above already ran before wall_start)
-    let compile_before = runtime.stats().compile_secs;
+    let compile_before = backend.stats().compile_secs;
 
     // Offline semantics: the whole workload is available up front (the
     // paper's test-set runs are the same), so preprocess everything, let
@@ -206,7 +204,7 @@ pub fn run_sequential(
         }
     }
 
-    let mut rt_stats = runtime.stats();
+    let mut rt_stats = backend.stats();
     rt_stats.compile_secs -= compile_before;
     Ok(summarize(responses, stages, wall_start.elapsed(), rt_stats))
 }
@@ -219,9 +217,9 @@ pub fn run_pipelined(
     requests: &[Request],
 ) -> Result<RunSummary> {
     cfg.validate()?;
-    // Manifest read on the main thread for static facts; the runtime
+    // Manifest read on the main thread for static facts; the backend
     // itself is created inside the inference thread.
-    let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+    let manifest = manifest_for(cfg)?;
     let full_vocab = manifest.config_for("baseline").vocab_size;
     let engine_cfg = manifest.config_for(cfg.engine.variant());
     let vocab_limit = engine_cfg.vocab_size as u32;
@@ -288,21 +286,20 @@ pub fn run_pipelined(
         })
         .expect("spawn preprocess");
 
-    // --- model inference process (owns the PJRT runtime) --------------
+    // --- model inference process (owns the execution backend) ---------
     let inf_cfg = cfg.clone();
     let (ready_tx, ready_rx) = mpsc::channel::<()>();
     let inf_handle = std::thread::Builder::new()
         .name("inference".into())
         .spawn(move || -> Result<(Duration, RuntimeStats)> {
-            let runtime =
-                std::rc::Rc::new(Runtime::new(&inf_cfg.artifacts_dir)?);
+            let backend = backend_for(&inf_cfg)?;
             let engine =
-                build_engine(inf_cfg.engine, runtime.clone(), inf_cfg.gen)?;
+                build_engine(inf_cfg.engine, backend.clone(), inf_cfg.gen)?;
             if inf_cfg.precompile {
-                crate::engine::precompile(inf_cfg.engine, &runtime)?;
+                crate::engine::precompile(inf_cfg.engine, backend.as_ref())?;
             }
             let _ = ready_tx.send(());
-            let compile_before = runtime.stats().compile_secs;
+            let compile_before = backend.stats().compile_secs;
             let mut sampler = sampler_for(inf_cfg.sampling);
             let mut busy = Duration::ZERO;
             for batch in batch_rx.iter() {
@@ -317,7 +314,7 @@ pub fn run_pipelined(
                     .send((batch, generated, dt))
                     .map_err(|_| Error::Shutdown("post chan"))?;
             }
-            let mut st = runtime.stats();
+            let mut st = backend.stats();
             st.compile_secs -= compile_before;
             Ok((busy, st))
         })

@@ -1,0 +1,239 @@
+//! The execution-backend abstraction.
+//!
+//! [`Backend`] captures the contract every engine in the Table 1 ladder
+//! speaks: manifest-described graphs addressed by name, persistent
+//! per-variant weights, host tensors in ([`DataArg`]), typed tensors out
+//! ([`ExecOut`]), with KV caches round-tripping as backend-opaque
+//! handles ([`OpaqueTensor`]) so their storage (fp16 device literals on
+//! PJRT, flat f32 on the reference backend) never leaks into engine
+//! code.  This mirrors how EnergonAI-style serving stacks isolate the
+//! device runtime behind a narrow execution interface.
+//!
+//! Two implementations ship:
+//! - [`crate::runtime::RefBackend`] — pure-Rust reference execution of
+//!   the same graph semantics (always available; the default);
+//! - `crate::runtime::Runtime` — the PJRT client over AOT artifacts
+//!   (`--features pjrt`, needs the vendored `xla` crate).
+//!
+//! Backends are **thread-confined** (the PJRT client is `Rc`-based):
+//! construct one per thread via [`backend_for`] and share it through
+//! `Rc<dyn Backend>`.
+
+use std::any::Any;
+use std::rc::Rc;
+
+use crate::config::{BackendKind, ServingConfig};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::reference::RefBackend;
+use crate::runtime::weights::HostWeights;
+use crate::{Error, Result};
+
+/// A backend-private tensor handle (KV caches between calls).  Cloning
+/// is cheap (shared reference); backends downcast to their own type.
+#[derive(Clone)]
+pub struct OpaqueTensor(Rc<dyn Any>);
+
+impl OpaqueTensor {
+    pub fn new<T: Any>(value: T) -> Self {
+        Self(Rc::new(value))
+    }
+
+    pub fn downcast<T: Any>(&self) -> Option<&T> {
+        self.0.downcast_ref::<T>()
+    }
+
+    /// Recover the inner value, cloning only when other handles are
+    /// still alive.  Engines move caches into each call, so the decode
+    /// hot path takes the zero-copy branch; benches that re-feed a
+    /// cloned handle pay the copy.
+    pub fn take<T: Any + Clone>(self) -> Option<T> {
+        match self.0.downcast::<T>() {
+            Ok(rc) => {
+                Some(Rc::try_unwrap(rc).unwrap_or_else(|rc| (*rc).clone()))
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Debug for OpaqueTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "OpaqueTensor")
+    }
+}
+
+/// One data (non-param) argument for a graph call.
+pub enum DataArg {
+    /// Host i32 tensor (token ids, lengths, positions) + dims.
+    I32(Vec<i32>, Vec<usize>),
+    /// Host f32 tensor + dims.
+    F32(Vec<f32>, Vec<usize>),
+    /// An opaque tensor from a previous call (KV caches).
+    Opaque(OpaqueTensor),
+}
+
+/// One output of a graph call, typed per the manifest entry.
+pub enum ExecOut {
+    I32(Vec<i32>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+    Opaque(OpaqueTensor),
+}
+
+impl ExecOut {
+    /// Flat f32 data (logits); error if the output is not f32.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            ExecOut::F32(v, _) => Ok(v),
+            _ => Err(Error::Other("expected f32 graph output".into())),
+        }
+    }
+
+    /// Flat i32 data (token matrices); error if the output is not i32.
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            ExecOut::I32(v, _) => Ok(v),
+            _ => Err(Error::Other("expected i32 graph output".into())),
+        }
+    }
+
+    /// Opaque handle (KV caches); error otherwise.
+    pub fn into_opaque(self) -> Result<OpaqueTensor> {
+        match self {
+            ExecOut::Opaque(o) => Ok(o),
+            _ => Err(Error::Other("expected opaque graph output".into())),
+        }
+    }
+}
+
+/// Counters for EXPERIMENTS.md §Perf and the metrics endpoint.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+    pub upload_secs: f64,
+    pub download_secs: f64,
+}
+
+/// An execution backend: compiled-graph inventory + execute path.
+pub trait Backend {
+    /// Short human label ("reference" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The graph/weight inventory this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execution counters so far.
+    fn stats(&self) -> RuntimeStats;
+
+    /// Compile (or otherwise ready) one artifact by manifest name —
+    /// the "model loading" startup step.
+    fn prepare(&self, name: &str) -> Result<()>;
+
+    /// Make a weight variant resident (device upload on PJRT; no-op on
+    /// host backends).
+    fn upload_weights(&self, _key: &str) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute an artifact by manifest name with its data args,
+    /// returning outputs in manifest order.
+    fn execute(&self, name: &str, data: Vec<DataArg>) -> Result<Vec<ExecOut>>;
+
+    /// Host-side weights for a variant key (reporting / analysis).
+    fn host_weights(&self, key: &str) -> Option<&HostWeights>;
+}
+
+/// Construct the backend a config asks for.  Call this on the thread
+/// that will own the backend (see module docs).
+pub fn backend_for(cfg: &ServingConfig) -> Result<Rc<dyn Backend>> {
+    match cfg.backend {
+        BackendKind::Reference => {
+            Ok(Rc::new(RefBackend::open(&cfg.artifacts_dir)?))
+        }
+        BackendKind::Pjrt => pjrt_backend(cfg),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(cfg: &ServingConfig) -> Result<Rc<dyn Backend>> {
+    Ok(Rc::new(crate::runtime::Runtime::new(&cfg.artifacts_dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_cfg: &ServingConfig) -> Result<Rc<dyn Backend>> {
+    Err(Error::Other(
+        "backend 'pjrt' requires building with `--features pjrt` \
+         (and the vendored xla crate; see rust/Cargo.toml)"
+            .into(),
+    ))
+}
+
+/// The manifest a config's backend would serve, without standing the
+/// backend up (no weight init / device contact).  Used by pipeline
+/// coordinators that need bucket lists and vocab sizes on the main
+/// thread while the backend itself lives on the inference thread.
+pub fn manifest_for(cfg: &ServingConfig) -> Result<Manifest> {
+    match cfg.backend {
+        BackendKind::Reference => RefBackend::manifest_only(&cfg.artifacts_dir),
+        BackendKind::Pjrt => Manifest::load(&cfg.artifacts_dir),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opaque_tensor_downcasts_to_its_own_type_only() {
+        let o = OpaqueTensor::new(vec![1u8, 2, 3]);
+        assert_eq!(o.downcast::<Vec<u8>>(), Some(&vec![1u8, 2, 3]));
+        assert!(o.downcast::<Vec<f32>>().is_none());
+        let c = o.clone();
+        assert_eq!(c.downcast::<Vec<u8>>(), Some(&vec![1u8, 2, 3]));
+    }
+
+    #[test]
+    fn opaque_take_moves_when_unique_and_clones_when_shared() {
+        let o = OpaqueTensor::new(vec![1u8, 2]);
+        assert_eq!(o.take::<Vec<u8>>(), Some(vec![1, 2])); // unique: moved
+        let o = OpaqueTensor::new(7u32);
+        let kept = o.clone();
+        assert_eq!(o.take::<u32>(), Some(7)); // shared: cloned
+        assert_eq!(kept.downcast::<u32>(), Some(&7));
+        assert_eq!(OpaqueTensor::new(1u8).take::<u64>(), None); // wrong type
+    }
+
+    #[test]
+    fn exec_out_typed_accessors() {
+        assert_eq!(
+            ExecOut::F32(vec![1.0], vec![1]).into_f32().unwrap(),
+            vec![1.0]
+        );
+        assert_eq!(
+            ExecOut::I32(vec![7], vec![1]).into_i32().unwrap(),
+            vec![7]
+        );
+        assert!(ExecOut::F32(vec![], vec![0]).into_i32().is_err());
+        assert!(ExecOut::I32(vec![], vec![0]).into_opaque().is_err());
+        let o = ExecOut::Opaque(OpaqueTensor::new(5u32));
+        assert_eq!(o.into_opaque().unwrap().downcast::<u32>(), Some(&5));
+    }
+
+    #[test]
+    fn reference_backend_is_the_default() {
+        let cfg = ServingConfig::default();
+        let b = backend_for(&cfg).unwrap();
+        assert_eq!(b.name(), "reference");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_requires_feature() {
+        let mut cfg = ServingConfig::default();
+        cfg.backend = BackendKind::Pjrt;
+        let err = backend_for(&cfg).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -1,5 +1,6 @@
-//! The PJRT client wrapper: compile cache, persistent device-resident
-//! weights, and the execute path used by every engine.
+//! The PJRT client wrapper (`--features pjrt`): compile cache,
+//! persistent device-resident weights, and the execute path — the PJRT
+//! face of [`crate::runtime::Backend`].
 //!
 //! Execution protocol (per graph, from the manifest):
 //!   args = [ all params (device-resident, uploaded once) ]
@@ -7,37 +8,21 @@
 //!             opaque literals so their dtype — fp16 for the FT engines —
 //!             never needs host-side decoding) ]
 //! The lowered graphs return a single tuple (return_tuple=True at
-//! lowering), which we decompose into one [`xla::Literal`] per output.
+//! lowering), which we decompose into one `xla::Literal` per output and
+//! re-type per the manifest entry (`f32`/`s32` to host vectors,
+//! everything else stays an [`OpaqueTensor`]).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
+use crate::runtime::backend::{
+    Backend, DataArg, ExecOut, OpaqueTensor, RuntimeStats,
+};
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
 use crate::runtime::weights::HostWeights;
 use crate::{Error, Result};
-
-/// One data (non-param) argument for a graph call.
-pub enum DataArg {
-    /// Host i32 tensor (token ids, lengths, positions).
-    I32(Vec<i32>, Vec<usize>),
-    /// Host f32 tensor.
-    F32(Vec<f32>, Vec<usize>),
-    /// An opaque literal from a previous call (KV caches).
-    Lit(xla::Literal),
-}
-
-/// Counters for EXPERIMENTS.md §Perf and the metrics endpoint.
-#[derive(Debug, Default, Clone)]
-pub struct RuntimeStats {
-    pub compiles: usize,
-    pub compile_secs: f64,
-    pub executions: usize,
-    pub execute_secs: f64,
-    pub upload_secs: f64,
-    pub download_secs: f64,
-}
 
 /// A compiled artifact plus its manifest entry.
 pub struct Executable {
@@ -80,46 +65,6 @@ impl Runtime {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
-    }
-
-    pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
-    }
-
-    /// Host-side weights for a variant (used by pruning analysis).
-    pub fn host_weights(&self, key: &str) -> Option<&HostWeights> {
-        self.host_weights.get(key)
-    }
-
-    /// Select the cheapest compiled bucket with `batch >= b && seq >= s`.
-    ///
-    /// This is the static-shape face of the paper's "allocation of data
-    /// inference order": the batcher aims batches at exact buckets and
-    /// this lookup guarantees safety when it cannot.
-    pub fn select(
-        &self,
-        kind: &str,
-        variant: &str,
-        batch: usize,
-        seq: usize,
-    ) -> Result<&ArtifactEntry> {
-        self.manifest
-            .artifacts
-            .iter()
-            .filter(|a| {
-                a.kind == kind
-                    && a.variant == variant
-                    && a.batch >= batch
-                    && a.seq >= seq
-            })
-            // cheapest = fewest padded elements
-            .min_by_key(|a| a.batch * a.seq)
-            .ok_or_else(|| Error::NoBucket {
-                kind: kind.into(),
-                variant: variant.into(),
-                batch,
-                seq,
-            })
     }
 
     /// Compile (or fetch from cache) an artifact by manifest name.
@@ -175,14 +120,33 @@ impl Runtime {
         self.weights.borrow_mut().insert(key.to_string(), rc.clone());
         Ok(rc)
     }
+}
 
-    /// Execute `exe` with its variant's weights plus `data` args.
+impl Backend for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn prepare(&self, name: &str) -> Result<()> {
+        self.load(name).map(|_| ())
+    }
+
+    fn upload_weights(&self, key: &str) -> Result<()> {
+        self.device_weights(key).map(|_| ())
+    }
+
+    /// Execute an artifact with its variant's weights plus `data` args.
     /// Returns the decomposed output literals in manifest order.
-    pub fn run(
-        &self,
-        exe: &Executable,
-        data: Vec<DataArg>,
-    ) -> Result<Vec<xla::Literal>> {
+    fn execute(&self, name: &str, data: Vec<DataArg>) -> Result<Vec<ExecOut>> {
+        let exe = self.load(name)?;
         let wkey = self.manifest.weights_key_for(&exe.entry.variant);
         let weights = self.device_weights(wkey)?;
 
@@ -220,7 +184,13 @@ impl Runtime {
                 DataArg::F32(v, dims) => {
                     self.client.buffer_from_host_buffer::<f32>(v, dims, None)?
                 }
-                DataArg::Lit(lit) => {
+                DataArg::Opaque(o) => {
+                    let lit =
+                        o.downcast::<xla::Literal>().ok_or_else(|| {
+                            Error::Other(
+                                "opaque tensor is not a PJRT literal".into(),
+                            )
+                        })?;
                     self.client.buffer_from_host_literal(None, lit)?
                 }
             };
@@ -250,6 +220,15 @@ impl Runtime {
                 exe.entry.outputs.len()
             )));
         }
+        let mut typed = Vec::with_capacity(outputs.len());
+        for (lit, io) in outputs.into_iter().zip(&exe.entry.outputs) {
+            typed.push(match io.dtype.as_str() {
+                "f32" => ExecOut::F32(lit.to_vec::<f32>()?, io.shape.clone()),
+                "s32" => ExecOut::I32(lit.to_vec::<i32>()?, io.shape.clone()),
+                // caches (f16/bf16) stay device-shaped literals
+                _ => ExecOut::Opaque(OpaqueTensor::new(lit)),
+            });
+        }
         let mut st = self.stats.borrow_mut();
         st.executions += 1;
         st.upload_secs += upload_secs;
@@ -258,16 +237,10 @@ impl Runtime {
         drop(st);
         // keep input literals alive past the synchronized download
         drop(data);
-        Ok(outputs)
+        Ok(typed)
     }
-}
 
-/// Read a `[rows, cols]` f32 literal into a flat host vector.
-pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-/// Read an i32 literal into a flat host vector.
-pub fn literal_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
-    Ok(lit.to_vec::<i32>()?)
+    fn host_weights(&self, key: &str) -> Option<&HostWeights> {
+        self.host_weights.get(key)
+    }
 }

@@ -139,8 +139,23 @@ fn parse_io(v: &Value, ctx: &str) -> Result<IoEntry> {
 }
 
 impl Manifest {
-    /// Load and sanity-check `dir/manifest.json`.
+    /// Load and sanity-check `dir/manifest.json`, requiring every
+    /// artifact file to exist on disk (the PJRT path).
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let m = Self::load_lenient(dir)?;
+        for a in &m.artifacts {
+            if !m.dir.join(&a.path).exists() {
+                return Err(Error::MissingArtifact(a.path.clone()));
+            }
+        }
+        Ok(m)
+    }
+
+    /// Load and semantically validate `dir/manifest.json` WITHOUT
+    /// requiring the lowered `.hlo.txt` files — the reference backend
+    /// re-executes the graphs from their manifest descriptions, so a
+    /// manifest plus weight blobs is a complete model description.
+    pub fn load_lenient(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref();
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).map_err(|e| {
@@ -251,7 +266,10 @@ impl Manifest {
         })
     }
 
-    fn validate(&self) -> Result<()> {
+    /// Semantic checks shared by every backend (versions, special
+    /// tokens, config/weight coverage, param counts).  File existence
+    /// is checked separately by [`Manifest::load`].
+    pub(crate) fn validate(&self) -> Result<()> {
         if self.version != 1 {
             return Err(Error::Manifest(format!(
                 "unsupported manifest version {}",
@@ -280,9 +298,6 @@ impl Manifest {
             }
         }
         for a in &self.artifacts {
-            if !self.dir.join(&a.path).exists() {
-                return Err(Error::MissingArtifact(a.path.clone()));
-            }
             let n_params =
                 a.inputs.iter().filter(|i| i.role == "param").count();
             let wkey = self.weights_key_for(&a.variant);
@@ -324,6 +339,54 @@ impl Manifest {
 
     pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
         self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The artifact compiled for EXACTLY this (kind, variant, batch,
+    /// seq) bucket — used to pair decode graphs with the prefill bucket
+    /// that shaped their KV cache.
+    pub fn find_exact(
+        &self,
+        kind: &str,
+        variant: &str,
+        batch: usize,
+        seq: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind
+                && a.variant == variant
+                && a.batch == batch
+                && a.seq == seq
+        })
+    }
+
+    /// Select the cheapest compiled bucket with `batch >= b && seq >= s`.
+    ///
+    /// This is the static-shape face of the paper's "allocation of data
+    /// inference order": the batcher aims batches at exact buckets and
+    /// this lookup guarantees safety when it cannot.
+    pub fn select(
+        &self,
+        kind: &str,
+        variant: &str,
+        batch: usize,
+        seq: usize,
+    ) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind
+                    && a.variant == variant
+                    && a.batch >= batch
+                    && a.seq >= seq
+            })
+            // cheapest = fewest padded elements
+            .min_by_key(|a| a.batch * a.seq)
+            .ok_or_else(|| Error::NoBucket {
+                kind: kind.into(),
+                variant: variant.into(),
+                batch,
+                seq,
+            })
     }
 }
 
@@ -446,5 +509,40 @@ mod tests {
             Manifest::load(dir.path()),
             Err(crate::Error::Json(_))
         ));
+    }
+
+    #[test]
+    fn lenient_load_skips_artifact_files_but_not_semantics() {
+        let dir = TempDir::new("man").unwrap();
+        // no .hlo.txt on disk: strict load fails, lenient succeeds
+        write_manifest(&dir, &manifest_json("m", 1), false);
+        assert!(Manifest::load(dir.path()).is_err());
+        let m = Manifest::load_lenient(dir.path()).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        // semantic problems still rejected
+        let bad = manifest_json("m", 1).replace(r#""pad":0"#, r#""pad":9"#);
+        write_manifest(&dir, &bad, false);
+        assert!(Manifest::load_lenient(dir.path()).is_err());
+    }
+
+    #[test]
+    fn select_prefers_cheapest_covering_bucket() {
+        use crate::runtime::reference::RefPreset;
+        let m = crate::runtime::reference::synthetic_manifest(
+            &RefPreset::default(),
+        );
+        let e = m.select("ft_prefill", "full", 2, 40).unwrap();
+        assert!(e.batch >= 2 && e.seq >= 40);
+        // cheapest bucket: nothing smaller also covers the request
+        for a in m.artifacts.iter().filter(|a| {
+            a.kind == "ft_prefill"
+                && a.variant == "full"
+                && a.batch >= 2
+                && a.seq >= 40
+        }) {
+            assert!(a.batch * a.seq >= e.batch * e.seq);
+        }
+        assert!(m.select("ft_prefill", "full", 10_000, 32).is_err());
+        assert!(m.select("no_such_kind", "full", 1, 1).is_err());
     }
 }

@@ -1,16 +1,33 @@
-//! PJRT runtime: load AOT artifacts (`*.hlo.txt`), compile once, execute
-//! from the serving hot path.
+//! Execution runtimes behind the [`Backend`] abstraction.
 //!
-//! Threading model: the `xla` crate's client is `Rc`-based (not `Send`),
-//! so a [`Runtime`] is **thread-confined** — the inference pipeline stage
-//! constructs it inside its own thread and everything else talks to that
-//! thread over channels (see [`crate::pipeline`]).  This mirrors the
-//! vLLM-style split between router threads and a model-executor thread.
+//! - [`reference`] — the hermetic pure-Rust backend (always compiled,
+//!   the default): interprets the manifest graphs with scalar f32 math,
+//!   so the whole serving stack builds, tests and benches from a clean
+//!   checkout with no Python and no AOT artifacts.
+//! - `client` (`--features pjrt`) — the PJRT client over `make
+//!   artifacts` output (`*.hlo.txt` + weight blobs), compiled through
+//!   the vendored `xla` crate.
+//!
+//! Threading model: backends are **thread-confined** (the `xla` client
+//! is `Rc`-based, not `Send`) — the inference pipeline stage constructs
+//! its backend inside its own thread via [`backend_for`] and everything
+//! else talks to that thread over channels (see [`crate::pipeline`]).
+//! This mirrors the vLLM-style split between router threads and a
+//! model-executor thread.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 mod client;
 pub mod manifest;
+pub mod reference;
 mod weights;
 
-pub use client::{DataArg, Executable, Runtime, RuntimeStats};
+pub use backend::{
+    backend_for, manifest_for, Backend, DataArg, ExecOut, OpaqueTensor,
+    RuntimeStats,
+};
+#[cfg(feature = "pjrt")]
+pub use client::Runtime;
 pub use manifest::{ArtifactEntry, Manifest, ModelConfig};
+pub use reference::{RefBackend, RefPreset};
 pub use weights::{HostParam, HostWeights};

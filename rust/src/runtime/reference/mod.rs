@@ -1,0 +1,859 @@
+//! The hermetic pure-Rust reference backend.
+//!
+//! [`RefBackend`] executes the same manifest-described graphs as the
+//! PJRT client — `baseline_fwd`, `ft_prefill`, `ft_decode`,
+//! `ft_decode_multi` — by interpreting them with the scalar math in
+//! [`model`] (a port of `python/compile/kernels/ref.py`).  It needs no
+//! Python, no AOT artifacts and no external crates, which is what lets
+//! the whole serving stack (engines, pipeline, TCP server, benches)
+//! build and verify from a clean checkout.
+//!
+//! Weights come from either
+//! - a **synthetic seeded model** ([`RefBackend::synthetic`], the
+//!   default when no `artifacts/manifest.json` exists).  Token-embedding
+//!   row norms taper with id rank, mimicking the frequency-ranked vocab
+//!   of the corpus so greedy generation concentrates on low ids — the
+//!   property that makes embedding-layer pruning (§3.2) safe; or
+//! - an on-disk manifest + weight blobs ([`RefBackend::from_dir`]), the
+//!   `make artifacts` output, with the `.hlo.txt` files optional.
+//!
+//! The baseline engine's algorithmic handicap is preserved: a
+//! `baseline_fwd` call recomputes every prompt position, so per-token
+//! cost grows with context length, while `ft_decode` reuses the KV
+//! cache in O(context) — the Table 1 ladder keeps its shape on this
+//! backend.
+
+pub mod model;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::runtime::backend::{
+    Backend, DataArg, ExecOut, OpaqueTensor, RuntimeStats,
+};
+use crate::runtime::manifest::{
+    ArtifactEntry, IoEntry, Manifest, ModelConfig, ParamEntry, SpecialTokens,
+    WeightsEntry,
+};
+use crate::runtime::weights::{HostParam, HostWeights};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+use model::{argmax, KvCache, Model, Scratch};
+
+/// Shape of the synthetic reference model + its compiled-bucket grid.
+/// Mirrors the seed semantics (vocab 8000 -> 4000, positions 512 -> 128)
+/// at a width that keeps CPU tests fast.
+#[derive(Debug, Clone)]
+pub struct RefPreset {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab_full: usize,
+    pub vocab_pruned: usize,
+    pub pos_full: usize,
+    pub pos_pruned: usize,
+    pub batch_sizes: Vec<usize>,
+    pub seq_lens: Vec<usize>,
+    pub multi_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for RefPreset {
+    fn default() -> Self {
+        Self {
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 64,
+            vocab_full: 8000,
+            vocab_pruned: 4000,
+            pos_full: 512,
+            pos_pruned: 128,
+            batch_sizes: vec![1, 4, 8],
+            seq_lens: vec![32, 64, 128],
+            multi_steps: 8,
+            seed: 0xA16C,
+        }
+    }
+}
+
+impl RefPreset {
+    fn full_config(&self) -> ModelConfig {
+        ModelConfig {
+            vocab_size: self.vocab_full,
+            max_position: self.pos_full,
+            d_model: self.d_model,
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+            d_ff: self.d_ff,
+            d_head: self.d_model / self.n_heads,
+            dtype: "f32".into(),
+        }
+    }
+
+    fn pruned_config(&self) -> ModelConfig {
+        ModelConfig {
+            vocab_size: self.vocab_pruned,
+            max_position: self.pos_pruned,
+            ..self.full_config()
+        }
+    }
+}
+
+/// Deterministic (name, shape) parameter list — the rust twin of
+/// `python/compile/model.py::param_spec`, the single source of truth
+/// for weight ordering.
+pub fn param_spec(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let mut spec: Vec<(String, Vec<usize>)> = vec![
+        ("tok_emb".into(), vec![cfg.vocab_size, d]),
+        ("pos_emb".into(), vec![cfg.max_position, d]),
+    ];
+    for i in 0..cfg.n_layers {
+        let leaves: [(&str, Vec<usize>); 16] = [
+            ("ln1_g", vec![d]),
+            ("ln1_b", vec![d]),
+            ("wq", vec![d, d]),
+            ("bq", vec![d]),
+            ("wk", vec![d, d]),
+            ("bk", vec![d]),
+            ("wv", vec![d, d]),
+            ("bv", vec![d]),
+            ("wo", vec![d, d]),
+            ("bo", vec![d]),
+            ("ln2_g", vec![d]),
+            ("ln2_b", vec![d]),
+            ("w1", vec![d, f]),
+            ("b1", vec![f]),
+            ("w2", vec![f, d]),
+            ("b2", vec![d]),
+        ];
+        for (leaf, shape) in leaves {
+            spec.push((format!("layer{i}.{leaf}"), shape));
+        }
+    }
+    spec.push(("lnf_g".into(), vec![d]));
+    spec.push(("lnf_b".into(), vec![d]));
+    spec
+}
+
+/// Seeded synthetic weights for the FULL config.  Token-embedding rows
+/// taper in norm with id rank (frequency-ranked vocab), so greedy
+/// argmax lands in the retained prefix and pruning stays behavior-
+/// preserving on in-vocab prompts.
+fn synth_weights(cfg: &ModelConfig, seed: u64) -> HostWeights {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut params = Vec::new();
+    for (name, shape) in param_spec(cfg) {
+        let n: usize = shape.iter().product();
+        let leaf = name.rsplit('.').next().unwrap_or(&name).to_string();
+        let data: Vec<f32> = if leaf.ends_with("_g") {
+            vec![1.0; n]
+        } else if leaf.ends_with("_b") || leaf.starts_with('b') {
+            vec![0.0; n]
+        } else if leaf == "tok_emb" {
+            let d = shape[1];
+            let mut v = Vec::with_capacity(n);
+            for row in 0..shape[0] {
+                let scale = 0.05 / (1.0 + row as f64 / 64.0);
+                for _ in 0..d {
+                    v.push((rng.gen_normal() * scale) as f32);
+                }
+            }
+            v
+        } else if leaf == "pos_emb" {
+            (0..n).map(|_| (rng.gen_normal() * 0.02) as f32).collect()
+        } else {
+            let scale = 1.0 / (shape[0] as f64).sqrt();
+            (0..n).map(|_| (rng.gen_normal() * scale) as f32).collect()
+        };
+        params.push(HostParam { name, shape, data });
+    }
+    HostWeights { params }
+}
+
+/// Embedding-layer pruning (§3.2): the pruned variant is a PREFIX slice
+/// of the full weights (vocab rows, position rows), everything else
+/// shared — logits over retained ids are unchanged by construction.
+fn prune_weights(full: &HostWeights, pruned_cfg: &ModelConfig) -> HostWeights {
+    let d = pruned_cfg.d_model;
+    let params = full
+        .params
+        .iter()
+        .map(|p| match p.name.as_str() {
+            "tok_emb" => HostParam {
+                name: p.name.clone(),
+                shape: vec![pruned_cfg.vocab_size, d],
+                data: p.data[..pruned_cfg.vocab_size * d].to_vec(),
+            },
+            "pos_emb" => HostParam {
+                name: p.name.clone(),
+                shape: vec![pruned_cfg.max_position, d],
+                data: p.data[..pruned_cfg.max_position * d].to_vec(),
+            },
+            _ => p.clone(),
+        })
+        .collect();
+    HostWeights { params }
+}
+
+fn param_ios(cfg: &ModelConfig) -> Vec<IoEntry> {
+    param_spec(cfg)
+        .into_iter()
+        .map(|(name, shape)| IoEntry {
+            name,
+            role: "param".into(),
+            shape,
+            dtype: "f32".into(),
+        })
+        .collect()
+}
+
+fn data_io(name: &str, shape: Vec<usize>, dtype: &str) -> IoEntry {
+    IoEntry {
+        name: name.into(),
+        role: "data".into(),
+        shape,
+        dtype: dtype.into(),
+    }
+}
+
+fn out_io(name: &str, shape: Vec<usize>, dtype: &str) -> IoEntry {
+    IoEntry {
+        name: name.into(),
+        role: "out".into(),
+        shape,
+        dtype: dtype.into(),
+    }
+}
+
+fn weights_index(cfg: &ModelConfig, path: &str) -> WeightsEntry {
+    let mut params = Vec::new();
+    let mut offset = 0usize;
+    for (name, shape) in param_spec(cfg) {
+        let nbytes = shape.iter().product::<usize>() * 4;
+        params.push(ParamEntry { name, shape, offset, nbytes });
+        offset += nbytes;
+    }
+    WeightsEntry { path: path.into(), params }
+}
+
+fn cache_shape(cfg: &ModelConfig, b: usize, s: usize) -> Vec<usize> {
+    vec![cfg.n_layers, b, cfg.n_heads, s, cfg.d_head]
+}
+
+/// Build the full synthetic graph inventory for a preset.  The same
+/// manifest shape `make artifacts` emits, minus the `.hlo.txt` files.
+pub fn synthetic_manifest(p: &RefPreset) -> Manifest {
+    let full = p.full_config();
+    let pruned = p.pruned_config();
+    let mut artifacts = Vec::new();
+    for &b in &p.batch_sizes {
+        for &s in &p.seq_lens {
+            // row 1: the naive full-recompute graph
+            artifacts.push(ArtifactEntry {
+                name: format!("baseline_fwd_b{b}_s{s}"),
+                path: format!("baseline_fwd_b{b}_s{s}.hlo.txt"),
+                kind: "baseline_fwd".into(),
+                variant: "baseline".into(),
+                batch: b,
+                seq: s,
+                dtype: "f32".into(),
+                vocab_size: full.vocab_size,
+                max_position: full.max_position,
+                inputs: {
+                    let mut ios = param_ios(&full);
+                    ios.push(data_io("token_ids", vec![b, s], "s32"));
+                    ios.push(data_io("lengths", vec![b], "s32"));
+                    ios
+                },
+                outputs: vec![out_io(
+                    "logits",
+                    vec![b, full.vocab_size],
+                    "f32",
+                )],
+                steps: None,
+            });
+            // rows 2-3: the Faster-Transformer graphs per variant
+            for (variant, cfg) in [("full", &full), ("pruned", &pruned)] {
+                let cache = cache_shape(cfg, b, s);
+                artifacts.push(ArtifactEntry {
+                    name: format!("ft_prefill_{variant}_b{b}_s{s}"),
+                    path: format!("ft_prefill_{variant}_b{b}_s{s}.hlo.txt"),
+                    kind: "ft_prefill".into(),
+                    variant: variant.into(),
+                    batch: b,
+                    seq: s,
+                    dtype: cfg.dtype.clone(),
+                    vocab_size: cfg.vocab_size,
+                    max_position: cfg.max_position,
+                    inputs: {
+                        let mut ios = param_ios(cfg);
+                        ios.push(data_io("token_ids", vec![b, s], "s32"));
+                        ios.push(data_io("lengths", vec![b], "s32"));
+                        ios
+                    },
+                    outputs: vec![
+                        out_io("logits", vec![b, cfg.vocab_size], "f32"),
+                        out_io("k_cache", cache.clone(), &cfg.dtype),
+                        out_io("v_cache", cache.clone(), &cfg.dtype),
+                    ],
+                    steps: None,
+                });
+                for (kind, steps) in [
+                    ("ft_decode", None),
+                    ("ft_decode_multi", Some(p.multi_steps)),
+                ] {
+                    let out0 = match steps {
+                        None => {
+                            out_io("logits", vec![b, cfg.vocab_size], "f32")
+                        }
+                        Some(n) => out_io("tokens", vec![b, n], "s32"),
+                    };
+                    artifacts.push(ArtifactEntry {
+                        name: format!("{kind}_{variant}_b{b}_s{s}"),
+                        path: format!("{kind}_{variant}_b{b}_s{s}.hlo.txt"),
+                        kind: kind.into(),
+                        variant: variant.into(),
+                        batch: b,
+                        seq: s,
+                        dtype: cfg.dtype.clone(),
+                        vocab_size: cfg.vocab_size,
+                        max_position: cfg.max_position,
+                        inputs: {
+                            let mut ios = param_ios(cfg);
+                            ios.push(data_io("token", vec![b], "s32"));
+                            ios.push(data_io("position", vec![b], "s32"));
+                            ios.push(data_io(
+                                "k_cache",
+                                cache.clone(),
+                                &cfg.dtype,
+                            ));
+                            ios.push(data_io(
+                                "v_cache",
+                                cache.clone(),
+                                &cfg.dtype,
+                            ));
+                            ios
+                        },
+                        outputs: vec![
+                            out0,
+                            out_io("k_cache", cache.clone(), &cfg.dtype),
+                            out_io("v_cache", cache.clone(), &cfg.dtype),
+                        ],
+                        steps,
+                    });
+                }
+            }
+        }
+    }
+    let m = Manifest {
+        version: 1,
+        input_hash: "synthetic-reference".into(),
+        special_tokens: SpecialTokens {
+            pad: crate::special::PAD,
+            bos: crate::special::BOS,
+            eos: crate::special::EOS,
+            sep: crate::special::SEP,
+        },
+        configs: vec![
+            ("full".into(), full.clone()),
+            ("pruned".into(), pruned.clone()),
+        ],
+        weights: vec![
+            ("full".into(), weights_index(&full, "weights_full.bin")),
+            ("pruned".into(), weights_index(&pruned, "weights_pruned.bin")),
+        ],
+        multi_steps: p.multi_steps,
+        batch_sizes: p.batch_sizes.clone(),
+        seq_lens: p.seq_lens.clone(),
+        artifacts,
+        dir: PathBuf::from("."),
+    };
+    m.validate().expect("synthetic manifest is internally consistent");
+    m
+}
+
+/// Pure-Rust reference backend (see module docs).
+pub struct RefBackend {
+    manifest: Manifest,
+    weights: HashMap<String, HostWeights>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl RefBackend {
+    /// Synthetic model with the default preset.
+    pub fn synthetic() -> Self {
+        Self::with_preset(&RefPreset::default())
+    }
+
+    /// Synthetic model with an explicit preset (tests/benches).
+    pub fn with_preset(p: &RefPreset) -> Self {
+        let manifest = synthetic_manifest(p);
+        let full = synth_weights(&p.full_config(), p.seed);
+        let pruned = prune_weights(&full, &p.pruned_config());
+        let mut weights = HashMap::new();
+        weights.insert("full".to_string(), full);
+        weights.insert("pruned".to_string(), pruned);
+        Self { manifest, weights, stats: RefCell::new(RuntimeStats::default()) }
+    }
+
+    /// Load a real manifest + weight blobs; `.hlo.txt` files optional.
+    pub fn from_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load_lenient(&dir)?;
+        let mut weights = HashMap::new();
+        for (key, entry) in &manifest.weights {
+            weights
+                .insert(key.clone(), HostWeights::load(&manifest.dir, entry)?);
+        }
+        Ok(Self {
+            manifest,
+            weights,
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// `from_dir` when `dir/manifest.json` exists, synthetic otherwise —
+    /// the "just works from a clean checkout" constructor.  The fallback
+    /// is announced on stderr so synthetic-weight numbers are never
+    /// mistaken for trained-model results (e.g. on a typo'd path).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        if dir.as_ref().join("manifest.json").exists() {
+            Self::from_dir(dir)
+        } else {
+            eprintln!(
+                "aigc-infer: no manifest at {}; serving the SYNTHETIC \
+                 seeded reference model (run `make artifacts` for trained \
+                 weights)",
+                dir.as_ref().display()
+            );
+            Ok(Self::synthetic())
+        }
+    }
+
+    /// The manifest [`RefBackend::open`] would serve, without weight
+    /// initialization.
+    pub fn manifest_only(dir: impl AsRef<Path>) -> Result<Manifest> {
+        if dir.as_ref().join("manifest.json").exists() {
+            Manifest::load_lenient(dir)
+        } else {
+            Ok(synthetic_manifest(&RefPreset::default()))
+        }
+    }
+
+    fn model_for(&self, entry: &ArtifactEntry) -> Result<Model<'_>> {
+        let wkey = self.manifest.weights_key_for(&entry.variant);
+        let weights = self.weights.get(wkey).ok_or_else(|| {
+            Error::Manifest(format!("no weights variant '{wkey}'"))
+        })?;
+        Model::new(weights, self.manifest.config_for(&entry.variant))
+    }
+}
+
+// ---------------------------------------------------------- graph runners
+
+fn take_i32(arg: Option<DataArg>, what: &str, n: usize) -> Result<Vec<i32>> {
+    match arg {
+        Some(DataArg::I32(v, _)) if v.len() == n => Ok(v),
+        Some(DataArg::I32(v, _)) => Err(Error::Other(format!(
+            "{what}: expected {n} i32 elements, got {}",
+            v.len()
+        ))),
+        _ => Err(Error::Other(format!("{what}: expected an i32 tensor"))),
+    }
+}
+
+fn take_cache(arg: Option<DataArg>, what: &str) -> Result<KvCache> {
+    match arg {
+        // zero-copy when the engine moved its only handle in; a clone
+        // only happens for callers that kept another handle alive
+        Some(DataArg::Opaque(o)) => o.take::<KvCache>().ok_or_else(|| {
+            Error::Other(format!("{what}: opaque tensor is not a KV cache"))
+        }),
+        _ => Err(Error::Other(format!("{what}: expected an opaque KV cache"))),
+    }
+}
+
+/// The shared prompt walk behind `baseline_fwd` and `ft_prefill`:
+/// embed + forward every valid row of every batch row, filling the
+/// caches and the last-position logits.  ONE implementation for both
+/// graphs is what makes them bitwise-identical by construction.
+fn prompt_walk(
+    model: &Model<'_>,
+    b: usize,
+    s: usize,
+    data: Vec<DataArg>,
+) -> Result<(Vec<f32>, KvCache, KvCache)> {
+    let mut it = data.into_iter();
+    let tokens = take_i32(it.next(), "token_ids", b * s)?;
+    let lens = take_i32(it.next(), "lengths", b)?;
+    let cfg = model.cfg;
+    let vsize = cfg.vocab_size;
+    let mut k = KvCache::zeros(cfg.n_layers, b, cfg.n_heads, s, cfg.d_head);
+    let mut v = KvCache::zeros(cfg.n_layers, b, cfg.n_heads, s, cfg.d_head);
+    let mut logits = vec![0.0f32; b * vsize];
+    let mut x = vec![0.0f32; cfg.d_model];
+    let mut scratch = Scratch::new(cfg, s);
+    for bi in 0..b {
+        let len = (lens[bi].max(0) as usize).min(s);
+        if len == 0 {
+            continue; // padding batch row: logits stay zero, never read
+        }
+        for j in 0..len {
+            model.embed_row(tokens[bi * s + j], j, &mut x);
+            model.forward_row(bi, j, j + 1, &mut x, &mut k, &mut v, &mut scratch);
+        }
+        model.logits_row(&x, &mut logits[bi * vsize..(bi + 1) * vsize]);
+    }
+    Ok((logits, k, v))
+}
+
+/// `baseline_fwd`: recompute the whole prompt, return last-position
+/// logits.  One call == the cost of ONE generated token on row 1 of
+/// Table 1; the caches it builds are discarded — that waste IS the
+/// baseline's defining inefficiency.
+fn run_baseline(
+    model: &Model<'_>,
+    entry: &ArtifactEntry,
+    data: Vec<DataArg>,
+) -> Result<Vec<ExecOut>> {
+    let (b, s) = (entry.batch, entry.seq);
+    let (logits, _k, _v) = prompt_walk(model, b, s, data)?;
+    Ok(vec![ExecOut::F32(logits, vec![b, model.cfg.vocab_size])])
+}
+
+/// `ft_prefill`: one pass over the prompt that also materializes the KV
+/// cache; returns (last-position logits, k_cache, v_cache).
+fn run_prefill(
+    model: &Model<'_>,
+    entry: &ArtifactEntry,
+    data: Vec<DataArg>,
+) -> Result<Vec<ExecOut>> {
+    let (b, s) = (entry.batch, entry.seq);
+    let (logits, k, v) = prompt_walk(model, b, s, data)?;
+    Ok(vec![
+        ExecOut::F32(logits, vec![b, model.cfg.vocab_size]),
+        ExecOut::Opaque(OpaqueTensor::new(k)),
+        ExecOut::Opaque(OpaqueTensor::new(v)),
+    ])
+}
+
+fn check_cache(c: &KvCache, entry: &ArtifactEntry, what: &str) -> Result<()> {
+    if c.batch != entry.batch || c.slots != entry.seq {
+        return Err(Error::Other(format!(
+            "{}: {what} shaped [.,{},.,{},.], bucket wants [.,{},.,{},.]",
+            entry.name, c.batch, c.slots, entry.batch, entry.seq
+        )));
+    }
+    Ok(())
+}
+
+/// `ft_decode` / `ft_decode_multi`: one (or `steps` fused greedy) decode
+/// iterations against the cache — the Fig 2 mechanism.
+fn run_decode(
+    model: &Model<'_>,
+    entry: &ArtifactEntry,
+    steps: Option<usize>,
+    data: Vec<DataArg>,
+) -> Result<Vec<ExecOut>> {
+    let (b, s) = (entry.batch, entry.seq);
+    let mut it = data.into_iter();
+    let mut last = take_i32(it.next(), "token", b)?;
+    let mut pos = take_i32(it.next(), "position", b)?;
+    let mut k = take_cache(it.next(), "k_cache")?;
+    let mut v = take_cache(it.next(), "v_cache")?;
+    check_cache(&k, entry, "k_cache")?;
+    check_cache(&v, entry, "v_cache")?;
+    let cfg = model.cfg;
+    let vsize = cfg.vocab_size;
+    let n_steps = steps.unwrap_or(1);
+    let mut logits = vec![0.0f32; b * vsize];
+    let mut toks = vec![0i32; b * n_steps];
+    let mut x = vec![0.0f32; cfg.d_model];
+    let mut scratch = Scratch::new(cfg, s);
+    for step in 0..n_steps {
+        for bi in 0..b {
+            let tok = last[bi].max(0);
+            let at = (pos[bi].max(0) as usize).min(s - 1);
+            model.embed_row(tok, pos[bi].max(0) as usize, &mut x);
+            model.forward_row(bi, at, at + 1, &mut x, &mut k, &mut v, &mut scratch);
+            let row = &mut logits[bi * vsize..(bi + 1) * vsize];
+            model.logits_row(&x, row);
+            if steps.is_some() {
+                // fused greedy: argmax inside the graph (lax.scan)
+                let t = argmax(row) as i32;
+                toks[bi * n_steps + step] = t;
+                last[bi] = t;
+                pos[bi] += 1;
+            }
+        }
+    }
+    let head = if steps.is_some() {
+        ExecOut::I32(toks, vec![b, n_steps])
+    } else {
+        ExecOut::F32(logits, vec![b, vsize])
+    };
+    Ok(vec![
+        head,
+        ExecOut::Opaque(OpaqueTensor::new(k)),
+        ExecOut::Opaque(OpaqueTensor::new(v)),
+    ])
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn prepare(&self, name: &str) -> Result<()> {
+        if self.manifest.find(name).is_none() {
+            return Err(Error::Manifest(format!("unknown artifact {name}")));
+        }
+        self.stats.borrow_mut().compiles += 1; // interpretation: free
+        Ok(())
+    }
+
+    fn execute(&self, name: &str, data: Vec<DataArg>) -> Result<Vec<ExecOut>> {
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown artifact {name}")))?;
+        let n_data = entry.inputs.iter().filter(|i| i.role == "data").count();
+        if data.len() != n_data {
+            return Err(Error::Other(format!(
+                "{}: expected {n_data} data args, got {}",
+                entry.name,
+                data.len()
+            )));
+        }
+        let model = self.model_for(entry)?;
+        let t0 = Instant::now();
+        let outs = match entry.kind.as_str() {
+            "baseline_fwd" => run_baseline(&model, entry, data)?,
+            "ft_prefill" => run_prefill(&model, entry, data)?,
+            "ft_decode" => run_decode(&model, entry, None, data)?,
+            "ft_decode_multi" => {
+                let steps = entry.steps.unwrap_or(self.manifest.multi_steps);
+                run_decode(&model, entry, Some(steps), data)?
+            }
+            other => {
+                return Err(Error::Manifest(format!(
+                    "{}: reference backend cannot execute kind '{other}'",
+                    entry.name
+                )))
+            }
+        };
+        debug_assert_eq!(outs.len(), entry.outputs.len());
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    fn host_weights(&self, key: &str) -> Option<&HostWeights> {
+        self.weights.get(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::special;
+
+    fn tiny_preset() -> RefPreset {
+        RefPreset {
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            vocab_full: 64,
+            vocab_pruned: 32,
+            pos_full: 64,
+            pos_pruned: 32,
+            batch_sizes: vec![1, 2],
+            seq_lens: vec![8, 16],
+            multi_steps: 4,
+            seed: 7,
+        }
+    }
+
+    fn prompt_args(b: usize, s: usize, prompt: &[i32]) -> Vec<DataArg> {
+        let mut tokens = vec![special::PAD as i32; b * s];
+        tokens[..prompt.len()].copy_from_slice(prompt);
+        vec![
+            DataArg::I32(tokens, vec![b, s]),
+            DataArg::I32(vec![prompt.len() as i32; b], vec![b]),
+        ]
+    }
+
+    #[test]
+    fn synthetic_manifest_covers_every_kind_and_validates() {
+        let m = synthetic_manifest(&RefPreset::default());
+        for kind in
+            ["baseline_fwd", "ft_prefill", "ft_decode", "ft_decode_multi"]
+        {
+            assert!(
+                m.artifacts.iter().any(|a| a.kind == kind),
+                "missing kind {kind}"
+            );
+        }
+        assert!(
+            m.config_for("pruned").vocab_size < m.config_for("full").vocab_size
+        );
+        assert!(
+            m.config_for("pruned").max_position
+                < m.config_for("full").max_position
+        );
+    }
+
+    #[test]
+    fn pruned_weights_are_prefix_slices() {
+        let p = tiny_preset();
+        let b = RefBackend::with_preset(&p);
+        let full = b.host_weights("full").unwrap();
+        let pruned = b.host_weights("pruned").unwrap();
+        let ft = full.get("tok_emb").unwrap();
+        let pt = pruned.get("tok_emb").unwrap();
+        assert_eq!(pt.data.len(), p.vocab_pruned * p.d_model);
+        assert_eq!(&ft.data[..pt.data.len()], pt.data.as_slice());
+        assert_eq!(
+            full.get("layer0.wq").unwrap().data,
+            pruned.get("layer0.wq").unwrap().data
+        );
+    }
+
+    #[test]
+    fn prefill_logits_match_baseline_forward_exactly() {
+        let p = tiny_preset();
+        let b = RefBackend::with_preset(&p);
+        let prompt =
+            [special::BOS as i32, 5, 9, 6, 11, special::SEP as i32];
+        let base = b
+            .execute("baseline_fwd_b1_s8", prompt_args(1, 8, &prompt))
+            .unwrap();
+        let pre = b
+            .execute("ft_prefill_full_b1_s8", prompt_args(1, 8, &prompt))
+            .unwrap();
+        let bl = base.into_iter().next().unwrap().into_f32().unwrap();
+        let pl = pre.into_iter().next().unwrap().into_f32().unwrap();
+        assert_eq!(bl, pl, "prefill must be bitwise-equal to full forward");
+        assert!(bl.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn decode_step_matches_full_recompute() {
+        // One decode step against the cache must reproduce exactly what
+        // re-running the full forward over prompt+token produces.
+        let p = tiny_preset();
+        let b = RefBackend::with_preset(&p);
+        let prompt = [special::BOS as i32, 7, 12, special::SEP as i32];
+        let pre = b
+            .execute("ft_prefill_full_b1_s8", prompt_args(1, 8, &prompt))
+            .unwrap();
+        let mut it = pre.into_iter();
+        let logits = it.next().unwrap().into_f32().unwrap();
+        let k = it.next().unwrap().into_opaque().unwrap();
+        let v = it.next().unwrap().into_opaque().unwrap();
+        let next = argmax(&logits) as i32;
+
+        let dec = b
+            .execute(
+                "ft_decode_full_b1_s8",
+                vec![
+                    DataArg::I32(vec![next], vec![1]),
+                    DataArg::I32(vec![prompt.len() as i32], vec![1]),
+                    DataArg::Opaque(k),
+                    DataArg::Opaque(v),
+                ],
+            )
+            .unwrap();
+        let dec_logits =
+            dec.into_iter().next().unwrap().into_f32().unwrap();
+
+        let mut grown = prompt.to_vec();
+        grown.push(next);
+        let base = b
+            .execute("baseline_fwd_b1_s8", prompt_args(1, 8, &grown))
+            .unwrap();
+        let base_logits =
+            base.into_iter().next().unwrap().into_f32().unwrap();
+        assert_eq!(dec_logits, base_logits);
+    }
+
+    #[test]
+    fn multi_step_decode_equals_repeated_single_steps() {
+        let p = tiny_preset();
+        let b = RefBackend::with_preset(&p);
+        let prompt = [special::BOS as i32, 3, 8, 4, special::SEP as i32];
+        let pre = b
+            .execute("ft_prefill_pruned_b1_s16", prompt_args(1, 16, &prompt))
+            .unwrap();
+        let mut it = pre.into_iter();
+        let logits = it.next().unwrap().into_f32().unwrap();
+        let k0 = it.next().unwrap().into_opaque().unwrap();
+        let v0 = it.next().unwrap().into_opaque().unwrap();
+        let first = argmax(&logits) as i32;
+
+        // fused path
+        let multi = b
+            .execute(
+                "ft_decode_multi_pruned_b1_s16",
+                vec![
+                    DataArg::I32(vec![first], vec![1]),
+                    DataArg::I32(vec![prompt.len() as i32], vec![1]),
+                    DataArg::Opaque(k0.clone()),
+                    DataArg::Opaque(v0.clone()),
+                ],
+            )
+            .unwrap();
+        let fused = multi.into_iter().next().unwrap().into_i32().unwrap();
+
+        // single-step path
+        let (mut tok, mut pos) = (first, prompt.len() as i32);
+        let (mut k, mut v) = (k0, v0);
+        let mut singles = Vec::new();
+        for _ in 0..p.multi_steps {
+            let outs = b
+                .execute(
+                    "ft_decode_pruned_b1_s16",
+                    vec![
+                        DataArg::I32(vec![tok], vec![1]),
+                        DataArg::I32(vec![pos], vec![1]),
+                        DataArg::Opaque(k),
+                        DataArg::Opaque(v),
+                    ],
+                )
+                .unwrap();
+            let mut it = outs.into_iter();
+            let l = it.next().unwrap().into_f32().unwrap();
+            k = it.next().unwrap().into_opaque().unwrap();
+            v = it.next().unwrap().into_opaque().unwrap();
+            tok = argmax(&l) as i32;
+            pos += 1;
+            singles.push(tok);
+        }
+        assert_eq!(fused, singles);
+    }
+
+    #[test]
+    fn execute_validates_arity_and_names() {
+        let b = RefBackend::with_preset(&tiny_preset());
+        assert!(b.execute("nope", vec![]).is_err());
+        assert!(b.execute("baseline_fwd_b1_s8", vec![]).is_err());
+        assert!(b.prepare("nope").is_err());
+        assert!(b.prepare("baseline_fwd_b1_s8").is_ok());
+        assert_eq!(b.stats().compiles, 1);
+    }
+}

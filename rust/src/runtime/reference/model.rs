@@ -1,0 +1,492 @@
+//! Pure-Rust port of `python/compile/kernels/ref.py` + the per-position
+//! transformer math of `python/compile/model.py`: embedding lookup,
+//! layernorm, multi-head attention against a KV cache, gelu FFN and
+//! tied-embedding logits.
+//!
+//! Everything is computed **row-wise in f32 with a fixed accumulation
+//! order**, and the SAME routine ([`Model::forward_row`]) serves the
+//! baseline full-forward, the fused prefill and the decode step.  That
+//! makes the three graphs bitwise-consistent: decoding with the KV cache
+//! reproduces exactly what a full recompute would produce, so the
+//! FT-vs-baseline equivalence in the Table 1 ladder can be asserted as
+//! token identity rather than fuzzy agreement.
+
+use crate::runtime::manifest::ModelConfig;
+use crate::runtime::weights::{HostParam, HostWeights};
+use crate::{Error, Result};
+
+/// A KV cache for one graph bucket: `[layers, batch, heads, slots, d_head]`
+/// flat f32, the reference twin of the opaque PJRT literal.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub layers: usize,
+    pub batch: usize,
+    pub heads: usize,
+    pub slots: usize,
+    pub d_head: usize,
+    pub data: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn zeros(
+        layers: usize,
+        batch: usize,
+        heads: usize,
+        slots: usize,
+        d_head: usize,
+    ) -> Self {
+        Self {
+            layers,
+            batch,
+            heads,
+            slots,
+            d_head,
+            data: vec![0.0; layers * batch * heads * slots * d_head],
+        }
+    }
+
+    /// Offset of the `[d_head]` run at (layer, batch row, head, slot).
+    #[inline]
+    fn at(&self, l: usize, b: usize, h: usize, slot: usize) -> usize {
+        (((l * self.batch + b) * self.heads + h) * self.slots + slot)
+            * self.d_head
+    }
+}
+
+/// LayerNorm over one row: `(x - mean) * rsqrt(var + eps) * g + b`.
+fn layernorm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let mut mean = 0.0f32;
+    for &v in x {
+        mean += v;
+    }
+    mean /= d as f32;
+    let mut var = 0.0f32;
+    for &v in x {
+        let c = v - mean;
+        var += c * c;
+    }
+    var /= d as f32;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for j in 0..d {
+        out[j] = (x[j] - mean) * inv * g[j] + b[j];
+    }
+}
+
+/// Dense row: `out = x @ w + b`, `w` row-major `[din, dout]`.
+fn linear(x: &[f32], w: &[f32], b: &[f32], din: usize, dout: usize, out: &mut [f32]) {
+    out[..dout].copy_from_slice(&b[..dout]);
+    for (i, &xi) in x.iter().enumerate().take(din) {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * dout..(i + 1) * dout];
+        for j in 0..dout {
+            out[j] += xi * row[j];
+        }
+    }
+}
+
+/// Tanh-approximate gelu, matching `jax.nn.gelu(approximate=True)`.
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Round-trip f32 -> IEEE binary16 -> f32 (round-to-nearest-even),
+/// simulating the fp16 KV-cache storage of the PJRT artifacts.
+pub fn quantize_f16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let sign = (bits >> 16) & 0x8000;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    let h: u32 = if exp == 0xff {
+        // inf / nan
+        sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 }
+    } else {
+        let e = exp - 127 + 15;
+        if e >= 0x1f {
+            sign | 0x7c00 // overflow -> inf
+        } else if e <= 0 {
+            if e < -10 {
+                sign // underflow -> signed zero
+            } else {
+                // subnormal half
+                let m = mant | 0x0080_0000;
+                let shift = (14 - e) as u32;
+                let half = m >> shift;
+                let rem = m & ((1 << shift) - 1);
+                let midpoint = 1u32 << (shift - 1);
+                let rounded = if rem > midpoint
+                    || (rem == midpoint && (half & 1) == 1)
+                {
+                    half + 1
+                } else {
+                    half
+                };
+                sign | rounded
+            }
+        } else {
+            let half = ((e as u32) << 10) | (mant >> 13);
+            let rem = mant & 0x1fff;
+            if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+                sign | (half + 1) // may carry into the exponent: still valid
+            } else {
+                sign | half
+            }
+        }
+    };
+    // decode binary16 back to f32
+    let s = (h >> 15) & 1;
+    let he = ((h >> 10) & 0x1f) as i32;
+    let hm = h & 0x3ff;
+    let f = if he == 0 {
+        (hm as f32) * (2f32).powi(-24)
+    } else if he == 0x1f {
+        if hm == 0 {
+            f32::INFINITY
+        } else {
+            f32::NAN
+        }
+    } else {
+        (1.0 + (hm as f32) / 1024.0) * (2f32).powi(he - 15)
+    };
+    if s == 1 {
+        -f
+    } else {
+        f
+    }
+}
+
+/// First-index argmax, matching `Sampler::greedy` and `jnp.argmax`.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Scratch buffers allocated once per graph call so the per-token
+/// inner loop ([`Model::forward_row`]) performs no heap allocation.
+/// Every buffer is fully overwritten before it is read, so reuse
+/// across rows/steps cannot change results.
+pub struct Scratch {
+    h: Vec<f32>,
+    q: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    ff: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl Scratch {
+    /// Sized for a model config and a bucket with `slots` cache slots.
+    pub fn new(cfg: &ModelConfig, slots: usize) -> Self {
+        Self {
+            h: vec![0.0; cfg.d_model],
+            q: vec![0.0; cfg.d_model],
+            attn: vec![0.0; cfg.d_model],
+            proj: vec![0.0; cfg.d_model],
+            ff: vec![0.0; cfg.d_ff],
+            scores: vec![0.0; slots],
+        }
+    }
+}
+
+/// Per-layer parameter views resolved once per graph call.
+struct LayerRefs<'a> {
+    ln1_g: &'a [f32],
+    ln1_b: &'a [f32],
+    wq: &'a [f32],
+    bq: &'a [f32],
+    wk: &'a [f32],
+    bk: &'a [f32],
+    wv: &'a [f32],
+    bv: &'a [f32],
+    wo: &'a [f32],
+    bo: &'a [f32],
+    ln2_g: &'a [f32],
+    ln2_b: &'a [f32],
+    w1: &'a [f32],
+    b1: &'a [f32],
+    w2: &'a [f32],
+    b2: &'a [f32],
+}
+
+/// One model variant bound to its weights — the reference "executable".
+pub struct Model<'a> {
+    pub cfg: &'a ModelConfig,
+    tok_emb: &'a [f32],
+    pos_emb: &'a [f32],
+    lnf_g: &'a [f32],
+    lnf_b: &'a [f32],
+    layers: Vec<LayerRefs<'a>>,
+    /// Simulate fp16 KV-cache storage (cfg.dtype == "f16").
+    quantize_cache: bool,
+}
+
+fn param<'a>(w: &'a HostWeights, name: &str) -> Result<&'a HostParam> {
+    w.get(name).ok_or_else(|| {
+        Error::WeightLayout(format!("missing parameter '{name}'"))
+    })
+}
+
+impl<'a> Model<'a> {
+    pub fn new(w: &'a HostWeights, cfg: &'a ModelConfig) -> Result<Self> {
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let g = |n: &str| -> Result<&'a [f32]> {
+                Ok(&param(w, &format!("layer{i}.{n}"))?.data)
+            };
+            layers.push(LayerRefs {
+                ln1_g: g("ln1_g")?,
+                ln1_b: g("ln1_b")?,
+                wq: g("wq")?,
+                bq: g("bq")?,
+                wk: g("wk")?,
+                bk: g("bk")?,
+                wv: g("wv")?,
+                bv: g("bv")?,
+                wo: g("wo")?,
+                bo: g("bo")?,
+                ln2_g: g("ln2_g")?,
+                ln2_b: g("ln2_b")?,
+                w1: g("w1")?,
+                b1: g("b1")?,
+                w2: g("w2")?,
+                b2: g("b2")?,
+            });
+        }
+        Ok(Self {
+            cfg,
+            tok_emb: &param(w, "tok_emb")?.data,
+            pos_emb: &param(w, "pos_emb")?.data,
+            lnf_g: &param(w, "lnf_g")?.data,
+            lnf_b: &param(w, "lnf_b")?.data,
+            layers,
+            quantize_cache: cfg.dtype == "f16",
+        })
+    }
+
+    #[inline]
+    fn store(&self, x: f32) -> f32 {
+        if self.quantize_cache {
+            quantize_f16(x)
+        } else {
+            x
+        }
+    }
+
+    /// `out = tok_emb[token] + pos_emb[min(pos, maxp-1)]` — the shared
+    /// entry row of every graph.
+    pub fn embed_row(&self, token: i32, pos: usize, out: &mut [f32]) {
+        let d = self.cfg.d_model;
+        let t = (token.max(0) as usize).min(self.cfg.vocab_size - 1);
+        let p = pos.min(self.cfg.max_position - 1);
+        let te = &self.tok_emb[t * d..(t + 1) * d];
+        let pe = &self.pos_emb[p * d..(p + 1) * d];
+        for j in 0..d {
+            out[j] = te[j] + pe[j];
+        }
+    }
+
+    /// Run all transformer layers + the final LayerNorm for ONE token at
+    /// cache slot `slot` of batch row `bi`, writing its K/V into the
+    /// caches and attending over slots `[0, attend_len)`.
+    ///
+    /// `x` holds the embedded input row on entry and the final hidden
+    /// state on return.  Used identically by prefill (slot == position,
+    /// attend_len == position+1) and decode — which is what makes the
+    /// cached path bitwise-equal to a full recompute.
+    pub fn forward_row(
+        &self,
+        bi: usize,
+        slot: usize,
+        attend_len: usize,
+        x: &mut [f32],
+        k: &mut KvCache,
+        v: &mut KvCache,
+        scratch: &mut Scratch,
+    ) {
+        let d = self.cfg.d_model;
+        let dh = self.cfg.d_head;
+        let nh = self.cfg.n_heads;
+        let f = self.cfg.d_ff;
+        let slot = slot.min(k.slots - 1);
+        let attend_len = attend_len.min(k.slots);
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // disjoint &mut views into the caller's scratch (no allocation
+        // on this per-token path)
+        let Scratch { h, q, attn, proj, ff, scores } = scratch;
+        let scores = &mut scores[..attend_len];
+
+        for (li, lp) in self.layers.iter().enumerate() {
+            // attention block (pre-LN)
+            layernorm(x, lp.ln1_g, lp.ln1_b, h);
+            linear(h, lp.wq, lp.bq, d, d, q);
+            linear(h, lp.wk, lp.bk, d, d, proj);
+            for hh in 0..nh {
+                let off = k.at(li, bi, hh, slot);
+                for j in 0..dh {
+                    k.data[off + j] = self.store(proj[hh * dh + j]);
+                }
+            }
+            linear(h, lp.wv, lp.bv, d, d, proj);
+            for hh in 0..nh {
+                let off = v.at(li, bi, hh, slot);
+                for j in 0..dh {
+                    v.data[off + j] = self.store(proj[hh * dh + j]);
+                }
+            }
+            for hh in 0..nh {
+                let qh = &q[hh * dh..(hh + 1) * dh];
+                let mut maxs = f32::NEG_INFINITY;
+                for (t, slot_score) in scores.iter_mut().enumerate() {
+                    let off = k.at(li, bi, hh, t);
+                    let mut s = 0.0f32;
+                    for j in 0..dh {
+                        s += qh[j] * k.data[off + j];
+                    }
+                    s *= scale;
+                    *slot_score = s;
+                    if s > maxs {
+                        maxs = s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - maxs).exp();
+                    denom += *s;
+                }
+                let inv = 1.0 / denom;
+                let out = &mut attn[hh * dh..(hh + 1) * dh];
+                out.fill(0.0);
+                for (t, &p) in scores.iter().enumerate() {
+                    let w = p * inv;
+                    let off = v.at(li, bi, hh, t);
+                    for j in 0..dh {
+                        out[j] += w * v.data[off + j];
+                    }
+                }
+            }
+            linear(attn, lp.wo, lp.bo, d, d, proj);
+            for j in 0..d {
+                x[j] += proj[j];
+            }
+
+            // FFN block (pre-LN)
+            layernorm(x, lp.ln2_g, lp.ln2_b, h);
+            linear(h, lp.w1, lp.b1, d, f, ff);
+            for vff in ff.iter_mut() {
+                *vff = gelu(*vff);
+            }
+            linear(ff, lp.w2, lp.b2, f, d, proj);
+            for j in 0..d {
+                x[j] += proj[j];
+            }
+        }
+
+        layernorm(x, self.lnf_g, self.lnf_b, h);
+        x.copy_from_slice(h);
+    }
+
+    /// Tied-embedding logits for one final hidden row: `h @ tok_emb.T`.
+    pub fn logits_row(&self, h: &[f32], out: &mut [f32]) {
+        let d = self.cfg.d_model;
+        for (i, o) in out.iter_mut().enumerate().take(self.cfg.vocab_size) {
+            let row = &self.tok_emb[i * d..(i + 1) * d];
+            let mut s = 0.0f32;
+            for j in 0..d {
+                s += h[j] * row[j];
+            }
+            *o = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layernorm_normalizes() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let g = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        layernorm(&x, &g, &b, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 =
+            out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5, "mean {mean}");
+        assert!((var - 1.0).abs() < 1e-3, "var {var}");
+    }
+
+    #[test]
+    fn linear_matches_manual_matmul() {
+        // x [2] @ w [2,3] + b [3]
+        let x = [1.0f32, 2.0];
+        let w = [1.0f32, 0.0, 2.0, 0.0, 1.0, 3.0];
+        let b = [0.5f32, 0.5, 0.5];
+        let mut out = [0.0f32; 3];
+        linear(&x, &w, &b, 2, 3, &mut out);
+        assert_eq!(out, [1.5, 2.5, 8.5]);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn f16_quantization_roundtrips_representable_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2048.0, -0.125] {
+            assert_eq!(quantize_f16(v), v);
+        }
+        // 1 + 2^-11 is not representable in half: rounds to 1.0
+        assert_eq!(quantize_f16(1.0 + 4.8828125e-4), 1.0);
+        // overflow saturates to inf, tiny values flush toward zero
+        assert_eq!(quantize_f16(1e6), f32::INFINITY);
+        assert!(quantize_f16(1e-9).abs() < 1e-7);
+        // quantization error bounded by 2^-11 relative
+        for i in 1..100 {
+            let v = 0.013 * i as f32;
+            let q = quantize_f16(v);
+            assert!(((q - v) / v).abs() < 6e-4, "{v} -> {q}");
+        }
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn kv_cache_indexing_is_dense_and_disjoint() {
+        let c = KvCache::zeros(2, 3, 4, 5, 6);
+        assert_eq!(c.data.len(), 2 * 3 * 4 * 5 * 6);
+        let mut seen = std::collections::HashSet::new();
+        for l in 0..2 {
+            for b in 0..3 {
+                for h in 0..4 {
+                    for s in 0..5 {
+                        let off = c.at(l, b, h, s);
+                        assert!(off + 6 <= c.data.len());
+                        assert!(seen.insert(off), "overlap at {off}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -11,7 +11,7 @@ use crate::coordinator::{run_batch, Batch, DynamicBatcher, ServingResponse};
 use crate::data::Request;
 use crate::engine::{build as build_engine, sampler_for};
 use crate::pipeline::{postprocess, preprocess};
-use crate::runtime::Runtime;
+use crate::runtime::{backend_for, manifest_for};
 use crate::tokenizer::{FastTokenizer, Vocab};
 use crate::{Error, Result};
 
@@ -44,7 +44,7 @@ impl StreamingPipeline {
 
     pub fn start(cfg: ServingConfig) -> Result<Self> {
         cfg.validate()?;
-        let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+        let manifest = manifest_for(&cfg)?;
         let full_vocab = manifest.config_for("baseline").vocab_size;
         let vocab_limit =
             manifest.config_for(cfg.engine.variant()).vocab_size as u32;
@@ -119,13 +119,13 @@ impl StreamingPipeline {
             })
             .expect("spawn");
 
-        // inference (owns PJRT)
+        // inference (owns the execution backend)
         let inf_cfg = cfg.clone();
         let inf = std::thread::Builder::new()
             .name("srv-inference".into())
             .spawn(move || {
-                let runtime = match Runtime::new(&inf_cfg.artifacts_dir) {
-                    Ok(r) => std::rc::Rc::new(r),
+                let backend = match backend_for(&inf_cfg) {
+                    Ok(b) => b,
                     Err(e) => {
                         eprintln!("inference thread: {e}");
                         return;
@@ -133,7 +133,7 @@ impl StreamingPipeline {
                 };
                 let engine = match build_engine(
                     inf_cfg.engine,
-                    runtime,
+                    backend,
                     inf_cfg.gen,
                 ) {
                     Ok(e) => e,

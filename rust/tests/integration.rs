@@ -1,8 +1,12 @@
-//! Integration tests over the REAL artifacts (`make artifacts` first).
+//! Integration tests over the hermetic reference backend: the full
+//! L3 stack — manifest inventory, raw graph execution, engine
+//! equivalence across the Table 1 ladder, pipeline modes, and the TCP
+//! server — with no Python, no `xla` crate and no `artifacts/`
+//! directory.
 //!
-//! These exercise the full L3→PJRT→L2/L1 stack: manifest load, weight
-//! upload, graph execution, engine equivalence across the Table 1 ladder,
-//! pipeline modes, and the TCP server.
+//! The PJRT/real-artifact path lives in the feature-gated module at the
+//! bottom (`--features pjrt -- --ignored`) instead of hard-failing when
+//! artifacts are absent.
 
 use std::io::{BufRead, BufReader, Write};
 use std::rc::Rc;
@@ -11,25 +15,18 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use aigc_infer::config::{EngineKind, ServingConfig};
-use aigc_infer::coordinator::request::summary_accuracy;
 use aigc_infer::data::{CorpusConfig, Generator, TraceConfig, TraceGenerator};
-use aigc_infer::engine::{build as build_engine, EngineInput, Sampler};
+use aigc_infer::engine::{build as build_engine, Engine, EngineInput, Sampler};
 use aigc_infer::pipeline;
-use aigc_infer::runtime::{DataArg, Runtime};
+use aigc_infer::runtime::{backend_for, Backend, DataArg, RefBackend};
 use aigc_infer::special;
 
-const ARTIFACTS: &str = "artifacts";
-
-fn runtime() -> Rc<Runtime> {
-    Rc::new(
-        Runtime::new(ARTIFACTS)
-            .expect("artifacts/ missing — run `make artifacts` first"),
-    )
+fn backend() -> Rc<dyn Backend> {
+    Rc::new(RefBackend::synthetic())
 }
 
 fn cfg(engine: EngineKind, pipelined: bool) -> ServingConfig {
     let mut c = ServingConfig::default();
-    c.artifacts_dir = ARTIFACTS.into();
     c.engine = engine;
     c.pipelined = pipelined;
     c.gen.max_new_tokens = 8;
@@ -44,13 +41,25 @@ fn workload(n: usize, seed: u64) -> Vec<aigc_infer::data::Request> {
     t.take(n)
 }
 
-fn inputs_from_docs(n: usize, seed: u64, max_new: usize) -> Vec<EngineInput> {
+/// Seeded prompts `[BOS] doc… [SEP]`, optionally restricted to ids
+/// below `vocab_cap` (the pruned-vocab scenario).
+fn seeded_prompts(
+    n: usize,
+    seed: u64,
+    max_new: usize,
+    vocab_cap: Option<u32>,
+) -> Vec<EngineInput> {
     let mut gen = Generator::new(CorpusConfig::default(), seed);
     (0..n)
         .map(|i| {
             let d = gen.generate_capped(20);
             let mut prompt = vec![special::BOS];
-            prompt.extend_from_slice(&d.doc_tokens);
+            match vocab_cap {
+                Some(cap) => prompt.extend(
+                    d.doc_tokens.iter().copied().filter(|&t| t < cap),
+                ),
+                None => prompt.extend_from_slice(&d.doc_tokens),
+            }
             prompt.push(special::SEP);
             EngineInput {
                 request_id: i as u64,
@@ -61,10 +70,25 @@ fn inputs_from_docs(n: usize, seed: u64, max_new: usize) -> Vec<EngineInput> {
         .collect()
 }
 
+/// Generate for many prompts through an engine in bucket-sized chunks.
+fn generate_all(
+    engine: &dyn Engine,
+    inputs: &[EngineInput],
+    chunk: usize,
+) -> Vec<Vec<u32>> {
+    let mut out = Vec::with_capacity(inputs.len());
+    for batch in inputs.chunks(chunk) {
+        let outs = engine.generate(batch, &mut Sampler::greedy()).unwrap();
+        out.extend(outs.into_iter().map(|o| o.generated));
+    }
+    out
+}
+
 #[test]
-fn manifest_loads_and_inventory_is_complete() {
-    let rt = runtime();
-    let m = &rt.manifest;
+fn default_backend_inventory_is_complete() {
+    let b = backend_for(&ServingConfig::default()).unwrap();
+    assert_eq!(b.name(), "reference");
+    let m = b.manifest();
     assert_eq!(m.version, 1);
     for kind in ["baseline_fwd", "ft_prefill", "ft_decode", "ft_decode_multi"]
     {
@@ -82,11 +106,12 @@ fn manifest_loads_and_inventory_is_complete() {
 
 #[test]
 fn raw_graph_execution_shapes() {
-    let rt = runtime();
-    let entry = rt.select("ft_prefill", "full", 1, 32).unwrap();
+    let b = backend();
+    let m = b.manifest();
+    let entry = m.select("ft_prefill", "full", 1, 32).unwrap();
     assert_eq!((entry.batch, entry.seq), (1, 32));
     let name = entry.name.clone();
-    let exe = rt.load(&name).unwrap();
+    let vocab = m.config_for("full").vocab_size;
     let tokens: Vec<i32> = {
         let mut t = vec![special::PAD as i32; 32];
         t[0] = special::BOS as i32;
@@ -96,9 +121,9 @@ fn raw_graph_execution_shapes() {
         t[9] = special::SEP as i32;
         t
     };
-    let outs = rt
-        .run(
-            &exe,
+    let outs = b
+        .execute(
+            &name,
             vec![
                 DataArg::I32(tokens, vec![1, 32]),
                 DataArg::I32(vec![10], vec![1]),
@@ -106,118 +131,115 @@ fn raw_graph_execution_shapes() {
         )
         .unwrap();
     assert_eq!(outs.len(), 3); // logits + k_cache + v_cache
-    let logits = outs[0].to_vec::<f32>().unwrap();
-    assert_eq!(logits.len(), rt.manifest.config_for("full").vocab_size);
+    let logits = outs.into_iter().next().unwrap().into_f32().unwrap();
+    assert_eq!(logits.len(), vocab);
     assert!(logits.iter().all(|v| v.is_finite()));
+    assert!(b.stats().executions >= 1);
 }
 
 #[test]
 fn bucket_selection_prefers_cheapest() {
-    let rt = runtime();
-    let e = rt.select("ft_prefill", "full", 2, 40).unwrap();
+    let b = backend();
+    let m = b.manifest();
+    let e = m.select("ft_prefill", "full", 2, 40).unwrap();
     assert_eq!((e.batch, e.seq), (4, 64));
-    let e = rt.select("baseline_fwd", "baseline", 1, 1).unwrap();
+    let e = m.select("baseline_fwd", "baseline", 1, 1).unwrap();
     assert_eq!((e.batch, e.seq), (1, 32));
-    assert!(rt.select("ft_prefill", "full", 9, 32).is_err());
-    assert!(rt.select("ft_prefill", "pruned", 1, 512).is_err());
+    assert!(m.select("ft_prefill", "full", 9, 32).is_err());
+    assert!(m.select("ft_prefill", "pruned", 1, 512).is_err());
 }
 
 #[test]
 fn ft_matches_baseline_greedy_tokens() {
-    // The FT engine (fp16 + KV cache + fused kernels) must generate
-    // essentially the same greedy continuations as the naive fp32
-    // baseline: the optimizations change speed, not answers (§4).
-    let rt = runtime();
-    let baseline = build_engine(
-        EngineKind::Baseline,
-        rt.clone(),
-        Default::default(),
-    )
-    .unwrap();
-    let ft =
-        build_engine(EngineKind::FtFull, rt.clone(), Default::default())
+    // Acceptance criterion: the FT engine (KV cache + fused prefill/
+    // decode) must generate IDENTICAL greedy tokens to the naive
+    // full-recompute baseline on the reference backend, for >= 16
+    // seeded prompts — the optimizations change speed, not answers (§4).
+    let b = backend();
+    let baseline =
+        build_engine(EngineKind::Baseline, b.clone(), Default::default())
             .unwrap();
-    let inputs = inputs_from_docs(4, 11, 8);
-    let a = baseline.generate(&inputs, &mut Sampler::greedy()).unwrap();
-    let b = ft.generate(&inputs, &mut Sampler::greedy()).unwrap();
-    let mut matches = 0usize;
-    let mut total = 0usize;
-    for (x, y) in a.iter().zip(&b) {
-        total += x.generated.len().max(y.generated.len());
-        matches += x
-            .generated
-            .iter()
-            .zip(&y.generated)
-            .filter(|(p, q)| p == q)
-            .count();
+    let ft = build_engine(EngineKind::FtFull, b.clone(), Default::default())
+        .unwrap();
+    let inputs = seeded_prompts(16, 11, 8, None);
+    let a = generate_all(baseline.as_ref(), &inputs, 4);
+    let c = generate_all(ft.as_ref(), &inputs, 4);
+    for (i, (x, y)) in a.iter().zip(&c).enumerate() {
+        assert_eq!(x, y, "prompt {i}: baseline vs ft_full diverged");
     }
-    assert!(total > 0);
-    let agree = matches as f64 / total as f64;
-    assert!(agree >= 0.75, "fp16/fp32 greedy agreement only {agree}");
+    assert!(
+        a.iter().map(|g| g.len()).sum::<usize>() > 0,
+        "no tokens generated at all"
+    );
+}
+
+#[test]
+fn pruned_engine_matches_full_on_pruned_vocab_prompts() {
+    // Acceptance criterion: on prompts made only of retained (pruned-
+    // prefix) ids, the pruned engine matches the full engine for as
+    // long as the full engine's own greedy choices stay inside the
+    // retained vocabulary (pruning only removes logit rows).
+    let b = backend();
+    let pruned_vocab = b.manifest().config_for("pruned").vocab_size as u32;
+    let full = build_engine(EngineKind::FtFull, b.clone(), Default::default())
+        .unwrap();
+    let pruned =
+        build_engine(EngineKind::FtPruned, b.clone(), Default::default())
+            .unwrap();
+    let inputs = seeded_prompts(16, 23, 8, Some(pruned_vocab));
+    let a = generate_all(full.as_ref(), &inputs, 4);
+    let c = generate_all(pruned.as_ref(), &inputs, 4);
+    let mut compared = 0usize;
+    for (i, (x, y)) in a.iter().zip(&c).enumerate() {
+        // compare up to the first full-engine token outside the prefix
+        let cut = x
+            .iter()
+            .position(|&t| t >= pruned_vocab)
+            .unwrap_or(x.len());
+        assert_eq!(
+            &x[..cut],
+            &y[..cut.min(y.len())],
+            "prompt {i}: pruned diverged inside retained vocab"
+        );
+        compared += cut;
+    }
+    assert!(compared > 0, "pruned comparison was vacuous");
 }
 
 #[test]
 fn multi_step_equals_single_step() {
-    // Same graphs, same dtype, both greedy: bitwise-identical tokens.
-    let rt = runtime();
+    // Same graphs, same dtype, both greedy: identical tokens.
+    let b = backend();
     let multi = build_engine(
         EngineKind::FtPruned,
-        rt.clone(),
+        b.clone(),
         aigc_infer::config::GenConfig { max_new_tokens: 12, use_multi_step: true },
     )
     .unwrap();
     let single = build_engine(
         EngineKind::FtPruned,
-        rt.clone(),
+        b.clone(),
         aigc_infer::config::GenConfig {
             max_new_tokens: 12,
             use_multi_step: false,
         },
     )
     .unwrap();
-    let inputs = inputs_from_docs(3, 22, 12);
+    let inputs = seeded_prompts(3, 22, 12, None);
     let a = multi.generate(&inputs, &mut Sampler::greedy()).unwrap();
-    let b = single.generate(&inputs, &mut Sampler::greedy()).unwrap();
-    for (x, y) in a.iter().zip(&b) {
+    let c = single.generate(&inputs, &mut Sampler::greedy()).unwrap();
+    for (x, y) in a.iter().zip(&c) {
         assert_eq!(x.generated, y.generated);
     }
 }
 
 #[test]
-fn pruned_engine_still_summarizes() {
-    let rt = runtime();
-    let ft = build_engine(EngineKind::FtPruned, rt, Default::default())
-        .unwrap();
-    let mut gen = Generator::new(CorpusConfig::default(), 33);
-    let docs: Vec<_> = (0..4).map(|_| gen.generate_capped(20)).collect();
-    let inputs: Vec<EngineInput> = docs
-        .iter()
-        .enumerate()
-        .map(|(i, d)| {
-            let mut prompt = vec![special::BOS];
-            prompt.extend_from_slice(&d.doc_tokens);
-            prompt.push(special::SEP);
-            EngineInput { request_id: i as u64, prompt, max_new_tokens: 8 }
-        })
-        .collect();
-    let outs = ft.generate(&inputs, &mut Sampler::greedy()).unwrap();
-    // trained model should beat chance comfortably on the copy task
-    let acc: f64 = docs
-        .iter()
-        .zip(&outs)
-        .map(|(d, o)| summary_accuracy(&o.generated, &d.summary_tokens))
-        .sum::<f64>()
-        / docs.len() as f64;
-    assert!(acc > 0.05, "summary accuracy {acc} — model collapsed?");
-}
-
-#[test]
 fn top_k_sampling_generates_valid_ids() {
-    let rt = runtime();
-    let vocab = rt.manifest.config_for("pruned").vocab_size as u32;
-    let ft = build_engine(EngineKind::FtPruned, rt, Default::default())
+    let b = backend();
+    let vocab = b.manifest().config_for("pruned").vocab_size as u32;
+    let ft = build_engine(EngineKind::FtPruned, b, Default::default())
         .unwrap();
-    let inputs = inputs_from_docs(2, 44, 6);
+    let inputs = seeded_prompts(2, 44, 6, None);
     let outs = ft
         .generate(&inputs, &mut Sampler::top_k(8, 0.9, 123))
         .unwrap();
@@ -231,6 +253,9 @@ fn top_k_sampling_generates_valid_ids() {
 
 #[test]
 fn pipelined_equals_sequential_results() {
+    // Greedy decoding on the reference backend is deterministic and
+    // per-request results are independent of batch composition, so the
+    // two executors must agree exactly.
     let reqs = workload(12, 55);
     let seq = pipeline::run(&cfg(EngineKind::FtPruned, false), &reqs)
         .unwrap();
@@ -250,29 +275,30 @@ fn pipelined_equals_sequential_results() {
         .collect();
     a.sort();
     b.sort();
-    // Greedy decoding is deterministic; batch composition can differ
-    // between executors (timing-dependent flushes), which changes padding
-    // and can occasionally change a bucket choice — identity must hold on
-    // ids and overwhelmingly on tokens.
-    assert_eq!(
-        a.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
-        b.iter().map(|(i, _)| *i).collect::<Vec<_>>()
-    );
-    let same = a
-        .iter()
-        .zip(&b)
-        .filter(|((_, x), (_, y))| x == y)
-        .count();
-    assert!(
-        same * 10 >= a.len() * 8,
-        "only {same}/{} identical summaries",
-        a.len()
-    );
+    assert_eq!(a, b);
+    assert!(seq.runtime_stats.executions > 0);
+}
+
+#[test]
+fn full_ladder_runs_end_to_end() {
+    // All four Table 1 rows complete on the hermetic backend and return
+    // every request.
+    let reqs = workload(6, 77);
+    for (engine, pipelined) in [
+        (EngineKind::Baseline, false),
+        (EngineKind::FtFull, false),
+        (EngineKind::FtPruned, false),
+        (EngineKind::FtPruned, true),
+    ] {
+        let s = pipeline::run(&cfg(engine, pipelined), &reqs)
+            .unwrap_or_else(|e| panic!("{engine:?}/{pipelined}: {e}"));
+        assert_eq!(s.responses.len(), reqs.len(), "{engine:?}");
+    }
 }
 
 #[test]
 fn server_round_trip() {
-    let addr = "127.0.0.1:17071";
+    let addr = "127.0.0.1:17171";
     let shutdown = Arc::new(AtomicBool::new(false));
     let sd = shutdown.clone();
     let mut scfg = cfg(EngineKind::FtPruned, true);
@@ -322,4 +348,25 @@ fn server_round_trip() {
     drop(writer);
     drop(reader);
     let _ = server.join();
+}
+
+/// Real-artifact tests.  The `pjrt` feature only compiles after the
+/// vendored `xla` crate is added as a dependency (see the note in
+/// rust/Cargo.toml); on such a build these stay `#[ignore]`d until
+/// `make artifacts` output exists — run with `-- --ignored` on a
+/// prepared machine.
+#[cfg(feature = "pjrt")]
+mod pjrt_real {
+    use super::*;
+    use aigc_infer::config::BackendKind;
+
+    #[test]
+    #[ignore = "requires artifacts/ from `make artifacts`"]
+    fn real_artifacts_serve_and_match_reference_contract() {
+        let mut c = cfg(EngineKind::FtPruned, false);
+        c.backend = BackendKind::Pjrt;
+        let reqs = workload(4, 5);
+        let s = pipeline::run(&c, &reqs).expect("pjrt run");
+        assert_eq!(s.responses.len(), reqs.len());
+    }
 }

@@ -1,0 +1,110 @@
+//! Manifest contract tests over the checked-in fixture
+//! (`tests/fixtures/manifest.json`) — parse, validation, and the
+//! strict-vs-lenient file requirements that separate the PJRT path
+//! from the reference path.
+
+use std::path::Path;
+
+use aigc_infer::runtime::Manifest;
+use aigc_infer::util::tmp::TempDir;
+use aigc_infer::Error;
+
+const FIXTURE_DIR: &str = "tests/fixtures";
+
+fn fixture_text() -> String {
+    std::fs::read_to_string(Path::new(FIXTURE_DIR).join("manifest.json"))
+        .expect("fixture manifest present")
+}
+
+/// Write a patched copy of the fixture into a temp dir.
+fn write_patched(from: &str, to: &str) -> TempDir {
+    let dir = TempDir::new("manifest-fixture").unwrap();
+    let original = fixture_text();
+    let text = original.replace(from, to);
+    assert_ne!(text, original, "patch '{from}' did not match the fixture");
+    std::fs::write(dir.path().join("manifest.json"), &text).unwrap();
+    dir
+}
+
+#[test]
+fn fixture_parses_and_validates_leniently() {
+    let m = Manifest::load_lenient(FIXTURE_DIR).unwrap();
+    assert_eq!(m.version, 1);
+    assert_eq!(m.artifacts.len(), 2);
+    assert_eq!(m.multi_steps, 4);
+    assert_eq!(m.batch_sizes, vec![1, 2]);
+    assert_eq!(m.seq_lens, vec![4, 8]);
+    // config/weights coverage and variant mapping
+    assert_eq!(m.config_for("full").vocab_size, 16);
+    assert_eq!(m.config_for("baseline").vocab_size, 16);
+    assert_eq!(m.config_for("pruned").vocab_size, 8);
+    assert_eq!(m.weights_key_for("baseline"), "full");
+    assert_eq!(m.weights_key_for("pruned"), "pruned");
+    assert_eq!(m.weights_entry("full").unwrap().params.len(), 1);
+    // artifact lookup by name and by bucket
+    assert!(m.find("baseline_fwd_b1_s4").is_some());
+    assert!(m.find("missing").is_none());
+    let e = m.select("ft_prefill", "pruned", 1, 3).unwrap();
+    assert_eq!((e.batch, e.seq), (1, 4));
+    // io roles decoded
+    let a = m.find("ft_prefill_pruned_b1_s4").unwrap();
+    assert_eq!(a.inputs.iter().filter(|i| i.role == "param").count(), 1);
+    assert_eq!(a.inputs.iter().filter(|i| i.role == "data").count(), 2);
+    assert_eq!(a.outputs.len(), 3);
+}
+
+#[test]
+fn strict_load_requires_hlo_files() {
+    // the fixture dir has no .hlo.txt files: strict load must name the
+    // missing artifact instead of succeeding
+    match Manifest::load(FIXTURE_DIR) {
+        Err(Error::MissingArtifact(p)) => {
+            assert!(p.ends_with(".hlo.txt"), "{p}")
+        }
+        other => panic!("expected MissingArtifact, got {other:?}"),
+    }
+}
+
+#[test]
+fn special_token_mismatch_rejected() {
+    let dir = write_patched("\"pad\": 0", "\"pad\": 7");
+    let err = Manifest::load_lenient(dir.path()).unwrap_err();
+    assert!(
+        err.to_string().contains("special token"),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn unsupported_version_rejected() {
+    let dir = write_patched("\"version\": 1", "\"version\": 3");
+    assert!(Manifest::load_lenient(dir.path()).is_err());
+}
+
+#[test]
+fn param_count_mismatch_rejected() {
+    // drop the baseline artifact's param input: 0 params declared vs 1
+    // in weights[full]
+    let dir = write_patched(
+        r#"{"name": "tok_emb", "role": "param", "shape": [16, 4], "dtype": "f32"},"#,
+        "",
+    );
+    let err = Manifest::load_lenient(dir.path()).unwrap_err();
+    assert!(
+        err.to_string().contains("param inputs"),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn missing_pruned_config_rejected() {
+    let dir = write_patched("\"pruned\": {", "\"pruned_x\": {");
+    assert!(Manifest::load_lenient(dir.path()).is_err());
+}
+
+#[test]
+fn missing_manifest_gives_actionable_error() {
+    let dir = TempDir::new("manifest-empty").unwrap();
+    let err = Manifest::load_lenient(dir.path()).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}

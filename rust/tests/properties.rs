@@ -103,6 +103,7 @@ fn prop_batcher_conserves_requests() {
             max_batch,
             max_wait_ms: 10_000,
             length_bucketing: bucketing,
+            ..BatchPolicy::default()
         };
         let buckets = vec![32usize, 64, 128];
         let mut b = DynamicBatcher::new(policy, buckets.clone());
@@ -145,6 +146,54 @@ fn prop_batcher_conserves_requests() {
             assert!((0.0..1.0).contains(&waste) || batch.seq_bucket == 128);
         }
         assert!(seen.iter().all(|&s| s), "lost requests in case {case}");
+    }
+}
+
+#[test]
+fn prop_batcher_never_exceeds_token_or_size_caps() {
+    // With a token-footprint cap set, every emitted batch stays within
+    // BOTH policy caps — except a single oversized request, which must
+    // still ship (alone) rather than starve.
+    let mut rng = Rng::seed_from_u64(0x70CA9);
+    for case in 0..100 {
+        let max_batch = rng.gen_range(1, 10);
+        let max_batch_tokens = rng.gen_range(40, 400);
+        let policy = BatchPolicy {
+            max_batch,
+            max_wait_ms: 10_000,
+            length_bucketing: case % 2 == 0,
+            max_batch_tokens,
+        };
+        let mut b = DynamicBatcher::new(policy, vec![32, 64, 128]);
+        let n = rng.gen_range(1, 80);
+        for id in 0..n {
+            b.push(PreparedRequest {
+                id: id as u64,
+                prompt: vec![5; rng.gen_range(1, 140)],
+                max_new_tokens: 4,
+                reference_summary: None,
+                enqueued: Instant::now(),
+            });
+        }
+        let mut emitted = 0usize;
+        while let Some(batch) = b.pop_full_or(true) {
+            emitted += batch.len();
+            assert!(!batch.is_empty());
+            assert!(
+                batch.len() <= max_batch,
+                "case {case}: batch of {} > max_batch {max_batch}",
+                batch.len()
+            );
+            let tokens: usize =
+                batch.requests.iter().map(|r| r.need_seq()).sum();
+            assert!(
+                tokens <= max_batch_tokens || batch.len() == 1,
+                "case {case}: {tokens} tokens over cap {max_batch_tokens} \
+                 in a batch of {}",
+                batch.len()
+            );
+        }
+        assert_eq!(emitted, n, "case {case}: requests lost");
     }
 }
 
