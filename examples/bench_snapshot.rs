@@ -1,0 +1,183 @@
+//! `bench_snapshot` — the perf-trajectory recorder.
+//!
+//! Runs the Table-1 ladder (hermetic reference backend, synthetic
+//! seeded model) plus a worker-pool sweep of the pipelined row at
+//! `--workers 1` and `--workers 4`, then writes one machine-readable
+//! `BENCH_<n>.json` datapoint (samples/sec, p50/p99 latency, generated
+//! tokens per configuration).  Successive PRs append `BENCH_2.json`,
+//! `BENCH_3.json`, … so the speed trajectory of the repo is diffable.
+//!
+//! The sweep pins `row_threads = 1` so it isolates pool scaling from
+//! the reference backend's intra-batch row parallelism.
+//!
+//! Usage (any arg optional):
+//!   cargo run --release --example bench_snapshot -- \
+//!       [--n 48] [--max-new 12] [--out PATH] [--dir DIR]
+//!
+//! With `--out` the file goes exactly there; otherwise the next free
+//! `BENCH_<n>.json` in `--dir` (default: current directory) is used.
+//! The tool re-reads and validates what it wrote and exits non-zero on
+//! any failure, so CI can use it as a smoke step as-is.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use aigc_infer::config::{EngineKind, ServingConfig};
+use aigc_infer::data::{TraceConfig, TraceGenerator};
+use aigc_infer::pipeline::{self, RunSummary};
+use aigc_infer::util::json::{self, Value};
+
+fn arg(name: &str) -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == name)
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+}
+
+fn row_json(
+    label: &str,
+    step: usize,
+    workers: usize,
+    s: &RunSummary,
+) -> Value {
+    Value::obj(vec![
+        ("method", Value::str(label)),
+        ("step", Value::num(step as f64)),
+        ("workers", Value::num(workers as f64)),
+        ("samples_per_sec", Value::num(s.samples_per_sec)),
+        (
+            "p50_latency_ms",
+            Value::num(s.latency.quantile(0.50).as_secs_f64() * 1e3),
+        ),
+        (
+            "p99_latency_ms",
+            Value::num(s.latency.quantile(0.99).as_secs_f64() * 1e3),
+        ),
+        ("generated_tokens", Value::num(s.generated_tokens as f64)),
+        ("accuracy", Value::num(s.mean_accuracy)),
+        ("wall_secs", Value::num(s.wall.as_secs_f64())),
+    ])
+}
+
+fn run_one(
+    engine: EngineKind,
+    pipelined: bool,
+    workers: usize,
+    n: usize,
+    max_new: usize,
+) -> RunSummary {
+    let mut cfg = ServingConfig::default();
+    cfg.engine = engine;
+    cfg.pipelined = pipelined;
+    cfg.workers = workers;
+    cfg.row_threads = 1;
+    cfg.gen.max_new_tokens = max_new;
+    cfg.precompile = true;
+    let mut trace = TraceGenerator::new(
+        TraceConfig { max_new_tokens: max_new, ..Default::default() },
+        0,
+    );
+    let reqs = trace.take(n);
+    pipeline::run(&cfg, &reqs).expect("bench run failed")
+}
+
+fn next_free_path(dir: &str) -> String {
+    for i in 1..10_000 {
+        let p = format!("{dir}/BENCH_{i}.json");
+        if !std::path::Path::new(&p).exists() {
+            return p;
+        }
+    }
+    panic!("no free BENCH_<n>.json slot in {dir}");
+}
+
+fn main() {
+    let n: usize = arg("--n").and_then(|s| s.parse().ok()).unwrap_or(48);
+    let max_new: usize =
+        arg("--max-new").and_then(|s| s.parse().ok()).unwrap_or(12);
+    let dir = arg("--dir").unwrap_or_else(|| ".".into());
+    let out = arg("--out").unwrap_or_else(|| next_free_path(&dir));
+
+    eprintln!("bench_snapshot: n={n} max_new={max_new} -> {out}");
+
+    // --- Table 1 ladder (workers = 1) ----------------------------------
+    let ladder_rows: [(usize, &str, EngineKind, bool); 4] = [
+        (1, "Baseline", EngineKind::Baseline, false),
+        (2, "Fast transformer", EngineKind::FtFull, false),
+        (3, "embedding layer pruning", EngineKind::FtPruned, false),
+        (4, "multi-process parallel processing", EngineKind::FtPruned, true),
+    ];
+    let mut ladder = Vec::new();
+    for (step, label, engine, pipelined) in ladder_rows {
+        let s = run_one(engine, pipelined, 1, n, max_new);
+        eprintln!(
+            "  step {step} ({label}): {:.2} samples/s",
+            s.samples_per_sec
+        );
+        ladder.push(row_json(label, step, 1, &s));
+    }
+
+    // --- worker-pool sweep on the pipelined row ------------------------
+    let mut sweep = Vec::new();
+    let mut speeds = Vec::new();
+    for workers in [1usize, 4] {
+        let s = run_one(EngineKind::FtPruned, true, workers, n, max_new);
+        eprintln!(
+            "  workers={workers}: {:.2} samples/s (p99 {:.2}ms)",
+            s.samples_per_sec,
+            s.latency.quantile(0.99).as_secs_f64() * 1e3
+        );
+        speeds.push(s.samples_per_sec);
+        sweep.push(row_json("worker pool", 4, workers, &s));
+    }
+    eprintln!(
+        "  pool scaling 1 -> 4 workers: {:.2}x ({} cores available)",
+        speeds[1] / speeds[0].max(1e-9),
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
+    );
+
+    let created = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let doc = Value::obj(vec![
+        ("schema", Value::num(1.0)),
+        ("created_unix", Value::num(created as f64)),
+        ("preset", Value::str("synthetic-reference-default")),
+        ("requests", Value::num(n as f64)),
+        ("max_new_tokens", Value::num(max_new as f64)),
+        ("ladder", Value::Array(ladder)),
+        ("workers_sweep", Value::Array(sweep)),
+    ]);
+    std::fs::write(&out, doc.to_json()).expect("write snapshot");
+
+    // --- self-validation (this is the CI smoke assertion) --------------
+    let text = std::fs::read_to_string(&out).expect("re-read snapshot");
+    let v = json::parse(&text).expect("snapshot must be valid JSON");
+    assert_eq!(v.get("schema").as_usize(), Some(1), "schema");
+    let ladder = v.get("ladder").as_array().expect("ladder array");
+    assert_eq!(ladder.len(), 4, "4 ladder rows");
+    let sweep = v.get("workers_sweep").as_array().expect("sweep array");
+    assert_eq!(sweep.len(), 2, "workers 1 and 4");
+    for row in ladder.iter().chain(sweep) {
+        for key in
+            ["samples_per_sec", "p50_latency_ms", "p99_latency_ms",
+             "generated_tokens", "workers"]
+        {
+            assert!(
+                row.get(key).as_f64().is_some(),
+                "row missing key {key}: {}",
+                row.to_json()
+            );
+        }
+        assert!(
+            row.get("samples_per_sec").as_f64().unwrap() > 0.0,
+            "throughput must be positive"
+        );
+        assert!(
+            row.get("generated_tokens").as_f64().unwrap() > 0.0,
+            "bench must actually generate tokens"
+        );
+    }
+    println!("bench snapshot OK: {out}");
+}

@@ -151,6 +151,16 @@ pub struct ServingConfig {
     /// Run the 4-stage parallel pipeline (paper §3.3 Fig 4) instead of the
     /// sequential reference executor.
     pub pipelined: bool,
+    /// Inference workers in the pipelined/streaming executors: batches
+    /// from the dynamic batcher fan out to this many worker threads,
+    /// each owning its own backend + engine (the paper's multi-process
+    /// lever, scaled past one model process).  1 = the sequential
+    /// single-engine inference stage, token-identical to pre-pool runs.
+    pub workers: usize,
+    /// Reference-backend intra-batch row parallelism: max threads
+    /// splitting the rows of ONE batch.  0 = auto (machine cores ÷
+    /// `workers`); results are bitwise-identical for any value.
+    pub row_threads: usize,
     /// Bounded channel capacity between pipeline stages (backpressure).
     pub stage_queue: usize,
     /// Compile every artifact of the engine's variant at startup (clean
@@ -169,6 +179,8 @@ impl Default for ServingConfig {
             batch: BatchPolicy::default(),
             gen: GenConfig::default(),
             pipelined: true,
+            workers: 1,
+            row_threads: 0,
             stage_queue: 4,
             precompile: false,
         }
@@ -243,6 +255,12 @@ impl ServingConfig {
         if let Some(x) = v.get("pipelined").as_bool() {
             cfg.pipelined = x;
         }
+        if let Some(n) = v.get("workers").as_usize() {
+            cfg.workers = n;
+        }
+        if let Some(n) = v.get("row_threads").as_usize() {
+            cfg.row_threads = n;
+        }
         if let Some(n) = v.get("stage_queue").as_usize() {
             cfg.stage_queue = n;
         }
@@ -294,6 +312,8 @@ impl ServingConfig {
                 ]),
             ),
             ("pipelined", Value::Bool(self.pipelined)),
+            ("workers", Value::num(self.workers as f64)),
+            ("row_threads", Value::num(self.row_threads as f64)),
             ("stage_queue", Value::num(self.stage_queue as f64)),
             ("precompile", Value::Bool(self.precompile)),
         ])
@@ -306,6 +326,9 @@ impl ServingConfig {
         }
         if self.gen.max_new_tokens == 0 {
             return Err(Error::Other("max_new_tokens must be > 0".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Other("workers must be > 0".into()));
         }
         if self.stage_queue == 0 {
             return Err(Error::Other("stage_queue must be > 0".into()));
@@ -374,6 +397,20 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Reference);
         assert_eq!(c.batch.max_batch_tokens, 0);
         assert!(c.pipelined);
+        assert_eq!(c.workers, 1);
+        assert_eq!(c.row_threads, 0);
+    }
+
+    #[test]
+    fn workers_roundtrip_and_validate() {
+        let mut c = ServingConfig::default();
+        c.workers = 4;
+        c.row_threads = 2;
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.workers, 4);
+        assert_eq!(back.row_threads, 2);
+        let c = ServingConfig::from_json(r#"{"workers": 0}"#).unwrap();
+        assert!(c.validate().is_err());
     }
 
     #[test]

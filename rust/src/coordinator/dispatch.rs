@@ -1,0 +1,366 @@
+//! The multi-worker inference pool — the paper's §3.3 "multi-process
+//! parallel processing" scaled past one model process.
+//!
+//! [`InferencePool::start`] spawns `cfg.workers` OS threads.  Each
+//! worker constructs **its own backend + engine** inside its thread
+//! (per-worker weights and stats — the EnergonAI executor-pool shape)
+//! plus a sampler seeded from `derive_seed(seed, worker)`, then
+//! competes for batches on a shared queue.  Results — or typed errors —
+//! flow to a single output channel, so downstream stages never observe
+//! a silent drop: a failing batch yields `PoolOutput { generated:
+//! Err(..) }` for its requests instead of a hung reply channel.
+//!
+//! With `workers == 1` the pool degenerates to the pre-pool pipeline:
+//! one engine consumes batches in arrival order, producing
+//! token-identical output (greedy decoding is deterministic and
+//! per-request results are independent of batch placement).  Pooled
+//! GREEDY runs stay deterministic for any worker count; pooled top-k is
+//! reproducible per worker stream but batch→worker assignment is a
+//! queue race, so run-to-run token sets may differ.
+//!
+//! Shutdown: the pool input disconnects when every
+//! [`InferencePool::input`] clone AND the pool's own handle are
+//! dropped; workers then drain, emit their [`WorkerReport`], and exit.
+//! [`InferencePool::join`] merges the per-worker `Histogram` /
+//! `Throughput` / `RuntimeStats` into one [`PoolReport`].
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batcher::Batch;
+use super::run_batch;
+use crate::config::ServingConfig;
+use crate::engine::{build as build_engine, sampler_for_worker};
+use crate::metrics::{Histogram, Throughput};
+use crate::runtime::{backend_for, Backend, RuntimeStats};
+use crate::{Error, Result};
+
+/// One processed batch leaving the pool.
+pub struct PoolOutput {
+    pub batch: Batch,
+    /// Generated ids per request (batch order), or the batch's failure.
+    pub generated: std::result::Result<Vec<Vec<u32>>, Error>,
+    /// Which worker ran it (0-based).
+    pub worker: usize,
+    /// Inference wall time for this batch on that worker.
+    pub elapsed: Duration,
+}
+
+/// What one worker did over its lifetime.
+pub struct WorkerReport {
+    pub worker: usize,
+    /// Busy wall time inside `run_batch`.
+    pub busy: Duration,
+    pub batches: u64,
+    /// Failed batches (their requests got error replies, not drops).
+    pub failed_batches: u64,
+    /// Per-batch inference latency on this worker.
+    pub batch_latency: Histogram,
+    /// Requests + generated tokens completed by this worker.
+    pub throughput: Throughput,
+    /// This worker's backend counters, with startup compilation that
+    /// happened before the ready gate subtracted out.
+    pub runtime_stats: RuntimeStats,
+}
+
+/// Per-worker reports plus their merged view.
+pub struct PoolReport {
+    pub workers: Vec<WorkerReport>,
+}
+
+impl PoolReport {
+    /// Total busy time across workers (can exceed wall time — that is
+    /// the point of the pool).
+    pub fn busy(&self) -> Duration {
+        self.workers.iter().map(|w| w.busy).sum()
+    }
+
+    /// Per-batch inference latency merged across workers.
+    pub fn batch_latency(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for w in &self.workers {
+            h.merge(&w.batch_latency);
+        }
+        h
+    }
+
+    /// Items/tokens completed, merged across workers.
+    pub fn throughput(&self) -> Throughput {
+        let mut t = Throughput::new();
+        for w in &self.workers {
+            t.merge(&w.throughput);
+        }
+        t
+    }
+
+    /// Backend counters merged across the per-worker backends.
+    pub fn runtime_stats(&self) -> RuntimeStats {
+        let mut s = RuntimeStats::default();
+        for w in &self.workers {
+            s.merge(&w.runtime_stats);
+        }
+        s
+    }
+}
+
+/// A pool of inference workers consuming [`Batch`]es from a shared
+/// queue (see module docs).
+pub struct InferencePool {
+    input: mpsc::SyncSender<Batch>,
+    handles: Vec<std::thread::JoinHandle<WorkerReport>>,
+}
+
+impl InferencePool {
+    /// Spawn `cfg.workers` workers, each standing up its own backend +
+    /// engine, and block until every worker is ready (startup
+    /// compilation done) or return the first startup error.  `out`
+    /// receives one [`PoolOutput`] per consumed batch.
+    pub fn start(
+        cfg: &ServingConfig,
+        out: mpsc::SyncSender<PoolOutput>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let n = cfg.workers;
+        // input queue sized so the batcher can run ahead of slow workers
+        let (input, rx) = mpsc::sync_channel::<Batch>(cfg.stage_queue.max(n));
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let mut handles = Vec::with_capacity(n);
+        for worker in 0..n {
+            let cfg = cfg.clone();
+            let rx = rx.clone();
+            let out = out.clone();
+            let ready_tx = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("inference-{worker}"))
+                .spawn(move || worker_main(worker, cfg, rx, out, ready_tx))
+                .expect("spawn inference worker");
+            handles.push(handle);
+        }
+        drop(out);
+        drop(ready_tx);
+
+        // Ready gate: fail fast (typed) if any worker cannot stand up
+        // its backend/engine, instead of leaving clients to hang.
+        let mut startup_err = None;
+        for _ in 0..n {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if startup_err.is_none() {
+                        startup_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if startup_err.is_none() {
+                        startup_err =
+                            Some(Error::Shutdown("worker died at startup"));
+                    }
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            // unblock and reap the workers that did start
+            drop(input);
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(Self { input, handles })
+    }
+
+    /// A clonable submission handle.  The pool drains and shuts down
+    /// once every clone AND the pool itself are dropped/joined.
+    pub fn input(&self) -> mpsc::SyncSender<Batch> {
+        self.input.clone()
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Close the pool's own input handle, wait for the workers to
+    /// drain, and merge their reports.
+    pub fn join(self) -> PoolReport {
+        let Self { input, handles } = self;
+        drop(input);
+        let mut workers: Vec<WorkerReport> = handles
+            .into_iter()
+            .map(|h| h.join().expect("inference worker panicked"))
+            .collect();
+        workers.sort_by_key(|w| w.worker);
+        PoolReport { workers }
+    }
+}
+
+fn worker_main(
+    worker: usize,
+    cfg: ServingConfig,
+    rx: Arc<Mutex<mpsc::Receiver<Batch>>>,
+    out: mpsc::SyncSender<PoolOutput>,
+    ready_tx: mpsc::Sender<Result<()>>,
+) -> WorkerReport {
+    let mut report = WorkerReport {
+        worker,
+        busy: Duration::ZERO,
+        batches: 0,
+        failed_batches: 0,
+        batch_latency: Histogram::new(),
+        throughput: Throughput::new(),
+        runtime_stats: RuntimeStats::default(),
+    };
+
+    // Per-worker backend + engine, constructed on this thread.
+    let setup = backend_for(&cfg).and_then(|backend| {
+        build_engine(cfg.engine, backend.clone(), cfg.gen)
+            .map(|engine| (backend, engine))
+    });
+    let (backend, engine) = match setup {
+        Ok(pair) => pair,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return report;
+        }
+    };
+    if cfg.precompile {
+        if let Err(e) = crate::engine::precompile(cfg.engine, backend.as_ref())
+        {
+            let _ = ready_tx.send(Err(e));
+            return report;
+        }
+    }
+    let _ = ready_tx.send(Ok(()));
+    // compilation before the ready gate is startup cost, not steady state
+    let compile_before = backend.stats().compile_secs;
+
+    let mut sampler = sampler_for_worker(cfg.sampling, worker as u64);
+    loop {
+        // hold the queue lock only for the pop, never during inference
+        let batch = match rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => break, // all senders gone: drain complete
+        };
+        let t = Instant::now();
+        let result = run_batch(engine.as_ref(), &mut sampler, &batch);
+        let elapsed = t.elapsed();
+        report.busy += elapsed;
+        report.batches += 1;
+        report.batch_latency.record(elapsed);
+        let generated = match result {
+            Ok(outs) => {
+                let generated: Vec<Vec<u32>> =
+                    outs.into_iter().map(|(_, g)| g).collect();
+                let tokens: u64 =
+                    generated.iter().map(|g| g.len() as u64).sum();
+                report.throughput.record(batch.len() as u64, tokens);
+                Ok(generated)
+            }
+            Err(e) => {
+                report.failed_batches += 1;
+                Err(e)
+            }
+        };
+        if out.send(PoolOutput { batch, generated, worker, elapsed }).is_err()
+        {
+            break; // downstream gone: stop consuming
+        }
+    }
+    let mut stats = backend.stats();
+    stats.compile_secs -= compile_before;
+    report.runtime_stats = stats;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PreparedRequest;
+    use crate::special;
+
+    fn small_cfg(workers: usize) -> ServingConfig {
+        let mut cfg = ServingConfig::default();
+        cfg.workers = workers;
+        cfg.row_threads = 1;
+        cfg.gen.max_new_tokens = 4;
+        cfg
+    }
+
+    fn batch_of(ids: &[u64]) -> Batch {
+        Batch {
+            requests: ids
+                .iter()
+                .map(|&id| PreparedRequest {
+                    id,
+                    prompt: vec![
+                        special::BOS,
+                        special::FIRST_WORD + (id as u32 % 40),
+                        special::SEP,
+                    ],
+                    max_new_tokens: 4,
+                    reference_summary: None,
+                    enqueued: std::time::Instant::now(),
+                })
+                .collect(),
+            seq_bucket: 32,
+        }
+    }
+
+    #[test]
+    fn pool_processes_batches_and_reports() {
+        let (out_tx, out_rx) = mpsc::sync_channel(16);
+        let pool = InferencePool::start(&small_cfg(2), out_tx).unwrap();
+        assert_eq!(pool.workers(), 2);
+        let input = pool.input();
+        for i in 0..4u64 {
+            input.send(batch_of(&[i * 2, i * 2 + 1])).unwrap();
+        }
+        drop(input);
+        let report = pool.join();
+        let outs: Vec<PoolOutput> = out_rx.iter().collect();
+        assert_eq!(outs.len(), 4);
+        for o in &outs {
+            let gen = o.generated.as_ref().expect("batch should succeed");
+            assert_eq!(gen.len(), o.batch.len());
+        }
+        assert_eq!(report.workers.len(), 2);
+        assert_eq!(
+            report.workers.iter().map(|w| w.batches).sum::<u64>(),
+            4
+        );
+        assert_eq!(report.throughput().items(), 8);
+        assert_eq!(report.batch_latency().count(), 4);
+        assert!(report.runtime_stats().executions > 0);
+    }
+
+    #[test]
+    fn oversized_batch_yields_typed_error_not_silence() {
+        let (out_tx, out_rx) = mpsc::sync_channel(4);
+        let pool = InferencePool::start(&small_cfg(1), out_tx).unwrap();
+        let input = pool.input();
+        // no compiled bucket fits 10_000 generated tokens -> NoBucket
+        let mut bad = batch_of(&[7]);
+        bad.requests[0].max_new_tokens = 10_000;
+        input.send(bad).unwrap();
+        input.send(batch_of(&[8])).unwrap(); // pool keeps serving after
+        drop(input);
+        let report = pool.join();
+        let outs: Vec<PoolOutput> = out_rx.iter().collect();
+        assert_eq!(outs.len(), 2);
+        assert!(outs.iter().any(|o| o.generated.is_err()));
+        assert!(outs.iter().any(|o| o.generated.is_ok()));
+        assert_eq!(report.workers[0].failed_batches, 1);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn startup_failure_is_typed() {
+        let mut cfg = small_cfg(2);
+        cfg.backend = crate::config::BackendKind::Pjrt; // not built in
+        let (out_tx, _out_rx) = mpsc::sync_channel(1);
+        let err = InferencePool::start(&cfg, out_tx);
+        assert!(err.is_err(), "pjrt without the feature must fail fast");
+    }
+}

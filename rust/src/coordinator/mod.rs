@@ -1,12 +1,15 @@
 //! L3 coordination: request lifecycle, dynamic length-bucketed batching,
-//! and the generation driver — the serving-system contribution of the
-//! paper (§2.3 dynamic batch size, §1 "allocation of data inference
-//! order", §3.3 processing optimization).
+//! the multi-worker inference pool, and the generation driver — the
+//! serving-system contribution of the paper (§2.3 dynamic batch size,
+//! §1 "allocation of data inference order", §3.3 processing
+//! optimization, here scaled to N model workers).
 
 mod batcher;
+pub mod dispatch;
 pub mod request;
 
 pub use batcher::{Batch, DynamicBatcher};
+pub use dispatch::{InferencePool, PoolOutput, PoolReport, WorkerReport};
 pub use request::{PreparedRequest, ServingResponse, StageTimes};
 
 use crate::engine::{Engine, EngineInput, Sampler};

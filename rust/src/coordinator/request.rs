@@ -43,6 +43,25 @@ pub struct ServingResponse {
     pub latency: Duration,
     /// Positional token accuracy vs. the reference summary, if known.
     pub accuracy: Option<f64>,
+    /// Inference failure, if the batch carrying this request errored.
+    /// Failed requests still get a reply (never a silent drop), with
+    /// empty `summary_ids`/`summary_text`.
+    pub error: Option<String>,
+}
+
+impl ServingResponse {
+    /// The reply for a request whose batch failed in the inference
+    /// stage: empty summary, the failure message attached.
+    pub fn failed(id: u64, latency: Duration, message: String) -> Self {
+        Self {
+            id,
+            summary_ids: Vec::new(),
+            summary_text: String::new(),
+            latency,
+            accuracy: None,
+            error: Some(message),
+        }
+    }
 }
 
 /// Positional token accuracy: fraction of reference positions the

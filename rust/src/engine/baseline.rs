@@ -5,20 +5,18 @@
 //! from the last-position logits.  No KV cache, no fp16, no fusion —
 //! this is the "Paddle baseline" the paper starts from (speed 16.11).
 
-use std::rc::Rc;
-
 use super::{trim_at_eos, Engine, EngineInput, EngineOutput, Sampler};
-use crate::runtime::{Backend, DataArg};
+use crate::runtime::{Backend, DataArg, SharedBackend};
 use crate::{special, Error, Result};
 
 pub struct BaselineEngine {
-    backend: Rc<dyn Backend>,
+    backend: SharedBackend,
     max_seq: usize,
     vocab_size: usize,
 }
 
 impl BaselineEngine {
-    pub fn new(backend: Rc<dyn Backend>) -> Result<Self> {
+    pub fn new(backend: SharedBackend) -> Result<Self> {
         let max_seq = backend
             .manifest()
             .artifacts

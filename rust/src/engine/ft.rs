@@ -16,14 +16,12 @@
 //! (vocab 8000→4000, positions 512→128): smaller embedding gather,
 //! 2× smaller logits GEMM, 4× smaller position table.
 
-use std::rc::Rc;
-
 use super::{trim_at_eos, Engine, EngineInput, EngineOutput, Sampler};
-use crate::runtime::{Backend, DataArg};
+use crate::runtime::{Backend, DataArg, SharedBackend};
 use crate::{special, Error, Result};
 
 pub struct FtEngine {
-    backend: Rc<dyn Backend>,
+    backend: SharedBackend,
     variant: &'static str,
     use_multi_step: bool,
     max_seq: usize,
@@ -33,7 +31,7 @@ pub struct FtEngine {
 
 impl FtEngine {
     pub fn new(
-        backend: Rc<dyn Backend>,
+        backend: SharedBackend,
         variant: &'static str,
         use_multi_step: bool,
     ) -> Result<Self> {

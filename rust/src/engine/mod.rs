@@ -23,9 +23,9 @@ pub use ft::FtEngine;
 pub use sampling::Sampler;
 
 use crate::config::{EngineKind, GenConfig, Sampling};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, SharedBackend};
+use crate::util::rng::derive_seed;
 use crate::{special, Result};
-use std::rc::Rc;
 
 /// One prepared (tokenized) request inside a batch.
 #[derive(Debug, Clone)]
@@ -46,8 +46,10 @@ pub struct EngineOutput {
     pub steps: usize,
 }
 
-/// A batched autoregressive generator.
-pub trait Engine {
+/// A batched autoregressive generator.  `Send` so a worker pool can
+/// construct engines anywhere and move them onto worker threads; the
+/// backends they hold are `Send + Sync` by contract.
+pub trait Engine: Send {
     fn label(&self) -> &'static str;
     /// Largest compiled sequence bucket (prompt + generation must fit).
     fn max_seq(&self) -> usize;
@@ -66,7 +68,7 @@ pub trait Engine {
 /// reference backend by default; PJRT behind `--features pjrt`).
 pub fn build(
     kind: EngineKind,
-    backend: Rc<dyn Backend>,
+    backend: SharedBackend,
     gen: GenConfig,
 ) -> Result<Box<dyn Engine>> {
     Ok(match kind {
@@ -101,10 +103,22 @@ pub fn precompile(kind: EngineKind, backend: &dyn Backend) -> Result<()> {
 
 /// Build the sampler for a sampling config.
 pub fn sampler_for(s: Sampling) -> Sampler {
+    sampler_for_worker(s, 0)
+}
+
+/// Build the sampler for inference worker `worker` of a pool: greedy is
+/// stateless (pooled greedy runs are fully deterministic); top-k
+/// derives a per-worker seed stream from the configured seed
+/// (`util::rng::derive_seed`), so each worker's RNG is reproducible and
+/// worker 0 of a 1-worker pool samples exactly like the single-engine
+/// path.  NOTE: with `workers >= 2` and top-k, WHICH worker picks up a
+/// given batch is a race on the shared queue, so top-k outputs are only
+/// reproducible per (worker, batch-sequence), not per run.
+pub fn sampler_for_worker(s: Sampling, worker: u64) -> Sampler {
     match s {
         Sampling::Greedy => Sampler::greedy(),
         Sampling::TopK { k, temperature, seed } => {
-            Sampler::top_k(k, temperature, seed)
+            Sampler::top_k(k, temperature, derive_seed(seed, worker))
         }
     }
 }

@@ -6,9 +6,10 @@
 //!
 //! - **L3 (this crate)** — the serving coordinator: request routing,
 //!   dynamic length-bucketed batching, KV-cache state management, the
-//!   paper's four-stage parallel pipeline (§3.3 Fig 4), a fast
-//!   wordpiece tokenizer, synthetic-workload substrates, metrics, and a
-//!   TCP serving front-end.  Python is never on the request path.
+//!   paper's four-stage parallel pipeline (§3.3 Fig 4) widened to a
+//!   multi-worker inference pool (`--workers N`), a fast wordpiece
+//!   tokenizer, synthetic-workload substrates, metrics, and a TCP
+//!   serving front-end.  Python is never on the request path.
 //! - **L2/L1 (python/, optional, build-time only)** — the UNIMO-style
 //!   prefix LM and its fused Pallas kernels, AOT-lowered by `make
 //!   artifacts` into `artifacts/*.hlo.txt`.
@@ -34,7 +35,7 @@
 //! | 1 | Paddle baseline | [`engine::BaselineEngine`] — fp32, full-sequence recompute per token |
 //! | 2 | + Faster Transformer | [`engine::FtEngine`] (full) — fused kernels, fp16, KV cache |
 //! | 3 | + embedding pruning | [`engine::FtEngine`] (pruned) — vocab 8000→4000, positions 512→128 |
-//! | 4 | + multi-process parallel | [`pipeline::Orchestrator`] — overlapped pre/infer/post stages |
+//! | 4 | + multi-process parallel | [`pipeline::run_pipelined`] over [`coordinator::InferencePool`] — overlapped pre/infer/post stages, N inference workers (`--workers`) |
 
 pub mod config;
 pub mod coordinator;

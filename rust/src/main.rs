@@ -2,10 +2,10 @@
 //!
 //! Subcommands:
 //!   info                         — manifest / artifact inventory
-//!   run    [--engine E] [--n N] [--no-pipeline] [--no-bucketing]
-//!          [--max-new T] [--seed S] — offline synthetic workload
-//!   ladder [--n N]               — the Table 1 ablation ladder
-//!   serve  [--addr A] [--engine E] — TCP serving front-end
+//!   run    [--engine E] [--n N] [--workers W] [--no-pipeline]
+//!          [--no-bucketing] [--max-new T] [--seed S] — offline workload
+//!   ladder [--n N] [--workers W] — the Table 1 ablation ladder
+//!   serve  [--addr A] [--engine E] [--workers W] — TCP front-end
 //!
 //! Args are parsed by hand (offline build: no clap in the vendor set).
 
@@ -24,6 +24,9 @@ fn usage() -> ! {
          common: --artifacts DIR (default: artifacts)  --config FILE.json\n\
                  --backend reference|pjrt (default: reference; a synthetic\n\
                  model is served when DIR has no manifest.json)\n\
+                 --workers N (inference workers in the pipelined/serve\n\
+                 paths; default 1)  --row-threads N (reference backend\n\
+                 intra-batch parallelism; default 0 = auto)\n\
          run:    --engine baseline|ft_full|ft_pruned  --n N  --max-new T\n\
                  --no-pipeline  --no-bucketing  --no-multi-step  --seed S\n\
          ladder: --n N\n\
@@ -101,6 +104,18 @@ fn build_config(args: &Args) -> ServingConfig {
     if let Some(n) = args.get("max-new") {
         cfg.gen.max_new_tokens = n.parse().unwrap_or(16);
     }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w.parse().unwrap_or_else(|_| {
+            eprintln!("--workers expects a positive integer");
+            usage()
+        });
+    }
+    if let Some(r) = args.get("row-threads") {
+        cfg.row_threads = r.parse().unwrap_or_else(|_| {
+            eprintln!("--row-threads expects an integer (0 = auto)");
+            usage()
+        });
+    }
     if args.has("no-pipeline") {
         cfg.pipelined = false;
     }
@@ -163,10 +178,11 @@ fn cmd_run(args: &Args) {
     let cfg = build_config(args);
     let reqs = workload(args, &cfg);
     println!(
-        "backend={} engine={} pipelined={} bucketing={} requests={}",
+        "backend={} engine={} pipelined={} workers={} bucketing={} requests={}",
         cfg.backend.label(),
         cfg.engine.label(),
         cfg.pipelined,
+        cfg.workers,
         cfg.batch.length_bucketing,
         reqs.len()
     );
@@ -191,6 +207,11 @@ fn cmd_run(args: &Args) {
                 s.stages.inference.as_secs_f64(),
                 s.stages.postprocess.as_secs_f64(),
                 s.stages.overlappable_fraction() * 100.0
+            );
+            println!(
+                "inference     {} worker(s), batch latency {}",
+                s.workers,
+                s.batch_latency.summary()
             );
         }
         Err(e) => {

@@ -163,6 +163,75 @@ mod tests {
     }
 
     #[test]
+    fn merge_disjoint_ranges_keeps_quantiles_coherent() {
+        // Worker A sees fast batches, worker B sees slow ones — their
+        // merged histogram must place p50 in A's range and p99 in B's,
+        // exactly as if one histogram had recorded everything.
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for i in 1..=100u64 {
+            let fast = Duration::from_micros(100 + i); // ~0.1ms
+            a.record(fast);
+            all.record(fast);
+        }
+        for i in 1..=100u64 {
+            let slow = Duration::from_millis(100 + i); // ~0.1s
+            b.record(slow);
+            all.record(slow);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        for q in [0.01, 0.25, 0.5, 0.75, 0.99] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+        }
+        // the disjoint gap is visible: p25 fast, p75 slow
+        assert!(a.quantile(0.25) < Duration::from_millis(1));
+        assert!(a.quantile(0.75) > Duration::from_millis(50));
+    }
+
+    #[test]
+    fn merge_overlapping_ranges_matches_single_histogram() {
+        // Interleaved (overlapping) per-worker samples: merged quantiles
+        // equal the quantiles of one histogram fed the union.
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for i in 1..=500u64 {
+            let d = Duration::from_micros(10 * i);
+            if i % 2 == 0 {
+                a.record(d);
+            } else {
+                b.record(d);
+            }
+            all.record(d);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.mean(), all.mean());
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Histogram::new();
+        a.record(Duration::from_millis(3));
+        let before = (a.count(), a.min(), a.max(), a.quantile(0.5));
+        a.merge(&Histogram::new());
+        assert_eq!((a.count(), a.min(), a.max(), a.quantile(0.5)), before);
+        // merging INTO an empty histogram adopts the other side fully
+        let mut e = Histogram::new();
+        e.merge(&a);
+        assert_eq!(e.count(), 1);
+        assert_eq!(e.min(), Duration::from_millis(3));
+        assert_eq!(e.quantile(0.5), a.quantile(0.5));
+    }
+
+    #[test]
     fn empty_histogram_is_zeroes() {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.99), Duration::ZERO);

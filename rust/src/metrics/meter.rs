@@ -26,6 +26,15 @@ impl Throughput {
         self.tokens += tokens;
     }
 
+    /// Fold another meter in (per-worker meters -> one pool meter):
+    /// counts add; the window starts at the EARLIEST start so merged
+    /// rates are measured over the span covering all workers.
+    pub fn merge(&mut self, other: &Throughput) {
+        self.items += other.items;
+        self.tokens += other.tokens;
+        self.started = self.started.min(other.started);
+    }
+
     pub fn items(&self) -> u64 {
         self.items
     }
@@ -101,6 +110,45 @@ mod tests {
         assert_eq!(t.items(), 4);
         assert_eq!(t.tokens(), 40);
         assert!(t.items_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn throughput_token_rate_accounting() {
+        // token rate = tokens / elapsed, and scales with recorded
+        // tokens, not items
+        let mut t = Throughput::new();
+        t.record(1, 100);
+        std::thread::sleep(Duration::from_millis(20));
+        let rate = t.tokens_per_sec();
+        assert!(rate > 0.0);
+        // 100 tokens over >= 20ms -> at most 5000 tokens/s (sleep
+        // guarantees a lower bound on elapsed, so this cannot flake)
+        assert!(rate <= 100.0 / 0.020, "rate {rate}");
+        t.record(0, 100); // zero items still accumulate tokens
+        assert_eq!(t.items(), 1);
+        assert_eq!(t.tokens(), 200);
+        // rate stays tokens/elapsed after more records (no upper-bound
+        // comparison against the earlier reading: elapsed keeps growing
+        // and a loaded runner may stall between the two calls)
+        assert!(t.tokens_per_sec() > 0.0);
+        assert!(t.tokens_per_sec() <= 200.0 / 0.020, "bounded by sleep");
+    }
+
+    #[test]
+    fn throughput_merge_sums_counts_and_widens_window() {
+        let mut a = Throughput::new();
+        a.record(2, 20);
+        std::thread::sleep(Duration::from_millis(5));
+        let mut b = Throughput::new(); // started later than a
+        b.record(3, 30);
+        let a_started_elapsed = a.elapsed();
+        b.merge(&a);
+        assert_eq!(b.items(), 5);
+        assert_eq!(b.tokens(), 50);
+        // merged window spans back to a's start (the earliest)
+        assert!(b.elapsed() >= a_started_elapsed);
+        // rate over the merged window is finite and positive
+        assert!(b.items_per_sec() > 0.0);
     }
 
     #[test]

@@ -1,30 +1,44 @@
-//! The paper's §3.3 "multi-process parallel processing" (Fig 4).
+//! The paper's §3.3 "multi-process parallel processing" (Fig 4) —
+//! generalized to a multi-worker inference pool.
 //!
 //! Four logical stages — main (feeder), data preprocessing, model
 //! inference, data post-processing — connected by BOUNDED channels so a
 //! slow stage backpressures the others instead of ballooning memory.
 //! The paper uses OS processes because CPython's GIL serializes threads;
 //! rust threads give the same overlap semantics cheaper (DESIGN.md §3).
+//! Where the paper runs ONE model process, the inference stage here is
+//! a pool of `cfg.workers` engine threads
+//! ([`crate::coordinator::InferencePool`]), each owning its own backend
+//! — so the model stage itself scales across cores instead of only
+//! overlapping with pre/post work.
 //!
 //! Two executors over the SAME stage code so the Fig 4 / Table 1 row-4
 //! comparison isolates exactly the overlap:
 //! - [`run_sequential`]: stages run one after another on one thread
 //!   (rows 1-3 of Table 1);
-//! - [`run_pipelined`]: stage-per-thread with bounded handoff (row 4).
+//! - [`run_pipelined`]: stage-per-thread with bounded handoff (row 4);
+//!   `--workers N` widens the inference stage.  With `workers == 1`
+//!   output tokens are identical to the pre-pool pipelined path (and to
+//!   [`run_sequential`], batch composition aside) — greedy decoding is
+//!   deterministic and per-request results are independent of batch
+//!   placement.
 //!
-//! The inference stage CONSTRUCTS its execution backend inside its own
-//! thread (backends are thread-confined — the PJRT client is `Rc`-based,
-//! not `Send`); everything crosses stages as plain data.
+//! Threading model: backends are `Send + Sync`
+//! (`Arc<dyn Backend>`), and each pool worker constructs its OWN
+//! backend inside its thread for isolated weights/stats; per-worker
+//! `Histogram`/`Throughput`/`RuntimeStats` are merged into the single
+//! [`RunSummary`].
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::ServingConfig;
-use crate::coordinator::{
-    run_batch, Batch, DynamicBatcher, PreparedRequest, ServingResponse,
-};
 use crate::coordinator::request::summary_accuracy;
+use crate::coordinator::{
+    run_batch, DynamicBatcher, InferencePool, PoolOutput, PreparedRequest,
+    ServingResponse,
+};
 use crate::data::Request;
 use crate::engine::{build as build_engine, sampler_for};
 use crate::metrics::{Histogram, StageTimer};
@@ -48,8 +62,13 @@ pub struct RunSummary {
     pub samples_per_sec: f64,
     pub generated_tokens: u64,
     pub mean_accuracy: f64,
-    /// Backend counters from the inference runtime (compiles, transfers).
+    /// Backend counters from the inference runtime; for pooled runs,
+    /// the MERGE of every worker's own backend counters.
     pub runtime_stats: RuntimeStats,
+    /// Inference workers that served the run (1 for sequential).
+    pub workers: usize,
+    /// Per-batch inference latency, merged across workers.
+    pub batch_latency: Histogram,
 }
 
 fn summarize(
@@ -57,6 +76,13 @@ fn summarize(
     stages: StageTimer,
     wall: Duration,
     runtime_stats: RuntimeStats,
+    // Wall-clock spent compiling inside the measured window.  For
+    // pooled runs this is the MAX over workers (they compile
+    // concurrently), not `runtime_stats.compile_secs` which merges
+    // (sums) every worker's counter.
+    compile_wall_secs: f64,
+    workers: usize,
+    batch_latency: Histogram,
 ) -> RunSummary {
     let mut latency = Histogram::new();
     let mut generated_tokens = 0u64;
@@ -76,8 +102,8 @@ fn summarize(
         0.0
     };
     // compile happens on the inference critical path in both executors,
-    // so subtracting it from wall gives the steady-state rate
-    let steady = (wall.as_secs_f64() - runtime_stats.compile_secs).max(1e-9);
+    // so subtracting its wall-clock share gives the steady-state rate
+    let steady = (wall.as_secs_f64() - compile_wall_secs).max(1e-9);
     RunSummary {
         samples_per_sec_raw,
         samples_per_sec: responses.len() as f64 / steady,
@@ -88,6 +114,8 @@ fn summarize(
         stages,
         wall,
         responses,
+        workers,
+        batch_latency,
     }
 }
 
@@ -137,6 +165,7 @@ pub fn postprocess(
         summary_ids: generated,
         summary_text,
         accuracy,
+        error: None,
     }
 }
 
@@ -152,7 +181,14 @@ pub fn run_sequential(
     requests: &[Request],
 ) -> Result<RunSummary> {
     cfg.validate()?;
-    let backend = backend_for(cfg)?;
+    // One engine serves the whole run here, so don't let an (ignored)
+    // `--workers N` shrink the reference backend's auto row-team: size
+    // row_threads as if workers == 1.
+    let backend = {
+        let mut one = cfg.clone();
+        one.workers = 1;
+        backend_for(&one)?
+    };
     // The tokenizer always speaks the FULL vocabulary; pruned engines see
     // a prefix via vocab_limit (re-segmentation happens in the encoder).
     let full_vocab = backend.manifest().config_for("baseline").vocab_size;
@@ -166,6 +202,7 @@ pub fn run_sequential(
     let mut batcher = DynamicBatcher::new(cfg.batch.clone(), seq_lens);
 
     let mut stages = StageTimer::default();
+    let mut batch_latency = Histogram::new();
     let mut responses = Vec::with_capacity(requests.len());
     let wall_start = Instant::now();
     // only compilation INSIDE the measured window counts against steady
@@ -194,7 +231,9 @@ pub fn run_sequential(
         while let Some(batch) = batcher.pop_full_or(force) {
             let t = Instant::now();
             let outs = run_batch(engine.as_ref(), &mut sampler, &batch)?;
-            stages.inference += t.elapsed();
+            let dt = t.elapsed();
+            stages.inference += dt;
+            batch_latency.record(dt);
 
             let t = Instant::now();
             for (req, generated) in outs {
@@ -206,19 +245,29 @@ pub fn run_sequential(
 
     let mut rt_stats = backend.stats();
     rt_stats.compile_secs -= compile_before;
-    Ok(summarize(responses, stages, wall_start.elapsed(), rt_stats))
+    let compile_wall = rt_stats.compile_secs;
+    Ok(summarize(
+        responses,
+        stages,
+        wall_start.elapsed(),
+        rt_stats,
+        compile_wall,
+        1,
+        batch_latency,
+    ))
 }
 
 // ------------------------------------------------------------ pipelined
 
-/// Row 4: stage-per-thread with bounded channels (Fig 4).
+/// Row 4: stage-per-thread with bounded channels (Fig 4), the inference
+/// stage widened to a pool of `cfg.workers` engines.
 pub fn run_pipelined(
     cfg: &ServingConfig,
     requests: &[Request],
 ) -> Result<RunSummary> {
     cfg.validate()?;
-    // Manifest read on the main thread for static facts; the backend
-    // itself is created inside the inference thread.
+    // Manifest read on the main thread for static facts; each pool
+    // worker constructs its own backend inside its thread.
     let manifest = manifest_for(cfg)?;
     let full_vocab = manifest.config_for("baseline").vocab_size;
     let engine_cfg = manifest.config_for(cfg.engine.variant());
@@ -237,11 +286,18 @@ pub fn run_pipelined(
     let (pre_tx, pre_rx) = mpsc::sync_channel::<(Request, Instant)>(
         cfg.stage_queue * cfg.batch.max_batch,
     );
-    let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(cfg.stage_queue);
-    let (post_tx, post_rx) =
-        mpsc::sync_channel::<(Batch, Vec<Vec<u32>>, Duration)>(cfg.stage_queue);
+    let (out_tx, out_rx) =
+        mpsc::sync_channel::<PoolOutput>(cfg.stage_queue.max(cfg.workers));
 
-    // --- preprocessing process (tokenize + dynamic batching) ----------
+    // --- model inference: the worker pool ------------------------------
+    // start() blocks until every worker is ready (engines built, optional
+    // precompile done), keeping startup compilation out of the wall clock
+    // — same role as the old single-thread ready gate.
+    let pool = InferencePool::start(cfg, out_tx)?;
+    let n_workers = pool.workers();
+    let batch_tx = pool.input();
+
+    // --- preprocessing stage (tokenize + dynamic batching) -------------
     let pre_cfg = cfg.batch.clone();
     let pre_tok = tok.clone();
     let pre_handle = std::thread::Builder::new()
@@ -286,61 +342,44 @@ pub fn run_pipelined(
         })
         .expect("spawn preprocess");
 
-    // --- model inference process (owns the execution backend) ---------
-    let inf_cfg = cfg.clone();
-    let (ready_tx, ready_rx) = mpsc::channel::<()>();
-    let inf_handle = std::thread::Builder::new()
-        .name("inference".into())
-        .spawn(move || -> Result<(Duration, RuntimeStats)> {
-            let backend = backend_for(&inf_cfg)?;
-            let engine =
-                build_engine(inf_cfg.engine, backend.clone(), inf_cfg.gen)?;
-            if inf_cfg.precompile {
-                crate::engine::precompile(inf_cfg.engine, backend.as_ref())?;
-            }
-            let _ = ready_tx.send(());
-            let compile_before = backend.stats().compile_secs;
-            let mut sampler = sampler_for(inf_cfg.sampling);
-            let mut busy = Duration::ZERO;
-            for batch in batch_rx.iter() {
-                let t = Instant::now();
-                let outs =
-                    run_batch(engine.as_ref(), &mut sampler, &batch)?;
-                let dt = t.elapsed();
-                busy += dt;
-                let generated: Vec<Vec<u32>> =
-                    outs.into_iter().map(|(_, g)| g).collect();
-                post_tx
-                    .send((batch, generated, dt))
-                    .map_err(|_| Error::Shutdown("post chan"))?;
-            }
-            let mut st = backend.stats();
-            st.compile_secs -= compile_before;
-            Ok((busy, st))
-        })
-        .expect("spawn inference");
-
-    // --- post-processing process --------------------------------------
+    // --- post-processing stage -----------------------------------------
+    type PostResult = (Vec<ServingResponse>, Duration, Option<Error>);
     let post_tok = tok.clone();
     let post_handle = std::thread::Builder::new()
         .name("postprocess".into())
-        .spawn(move || -> (Vec<ServingResponse>, Duration) {
+        .spawn(move || -> PostResult {
             let mut busy = Duration::ZERO;
             let mut responses = Vec::new();
-            for (batch, generated, _inf_dt) in post_rx.iter() {
-                let t = Instant::now();
-                for (req, gen) in batch.requests.iter().zip(generated) {
-                    responses.push(postprocess(post_tok.vocab(), req, gen));
+            let mut first_err = None;
+            for out in out_rx.iter() {
+                match out.generated {
+                    Ok(generated) => {
+                        let t = Instant::now();
+                        for (req, gen) in
+                            out.batch.requests.iter().zip(generated)
+                        {
+                            responses
+                                .push(postprocess(post_tok.vocab(), req, gen));
+                        }
+                        busy += t.elapsed();
+                    }
+                    Err(e) => {
+                        // offline runs are all-or-nothing: remember the
+                        // failure (the run will return Err) but keep
+                        // draining so upstream stages can exit cleanly.
+                        // Per-request error REPLIES are a streaming
+                        // concern — see server::streaming.
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
                 }
-                busy += t.elapsed();
             }
-            (responses, busy)
+            (responses, busy, first_err)
         })
         .expect("spawn postprocess");
 
-    // --- main process: wait for the engine, then feed the trace --------
-    // (the ready gate keeps startup compilation out of request latency)
-    let _ = ready_rx.recv();
+    // --- main process: feed the trace ----------------------------------
     let wall_start = Instant::now();
     for req in requests {
         pre_tx
@@ -350,18 +389,38 @@ pub fn run_pipelined(
     drop(pre_tx); // end of input: stages drain and exit in order
 
     let pre_busy = pre_handle.join().expect("preprocess panicked")?;
-    let (inf_busy, rt_stats) =
-        inf_handle.join().expect("inference panicked")?;
-    let (responses, post_busy) =
+    let report = pool.join();
+    let (responses, post_busy, first_err) =
         post_handle.join().expect("postprocess panicked");
     let wall = wall_start.elapsed();
+    if let Some(e) = first_err {
+        // an offline run is all-or-nothing; streaming keeps serving past
+        // failed batches instead (see server::streaming)
+        return Err(e);
+    }
 
     let stages = StageTimer {
         preprocess: pre_busy,
-        inference: inf_busy,
+        // summed worker busy time: can exceed wall, which is the pool win
+        inference: report.busy(),
         postprocess: post_busy,
     };
-    Ok(summarize(responses, stages, wall, rt_stats))
+    // workers compile their buckets concurrently, so the wall-clock
+    // compile share is the slowest worker's, not the merged sum
+    let compile_wall = report
+        .workers
+        .iter()
+        .map(|w| w.runtime_stats.compile_secs)
+        .fold(0.0, f64::max);
+    Ok(summarize(
+        responses,
+        stages,
+        wall,
+        report.runtime_stats(),
+        compile_wall,
+        n_workers,
+        report.batch_latency(),
+    ))
 }
 
 /// Dispatch on `cfg.pipelined`.

@@ -15,12 +15,17 @@
 //! - `crate::runtime::Runtime` — the PJRT client over AOT artifacts
 //!   (`--features pjrt`, needs the vendored `xla` crate).
 //!
-//! Backends are **thread-confined** (the PJRT client is `Rc`-based):
-//! construct one per thread via [`backend_for`] and share it through
-//! `Rc<dyn Backend>`.
+//! Threading contract (changed for the multi-worker serving stack):
+//! backends are **`Send + Sync`** and shared as `Arc<dyn Backend>`.
+//! [`OpaqueTensor`] wraps `Arc<dyn Any + Send + Sync>`, so KV caches can
+//! cross worker-thread boundaries.  Worker pools may still construct one
+//! backend per worker thread via [`backend_for`] — per-worker
+//! construction keeps weights/stats isolated and is what
+//! `coordinator::dispatch` does — but nothing requires thread
+//! confinement anymore.
 
 use std::any::Any;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::{BackendKind, ServingConfig};
 use crate::runtime::manifest::Manifest;
@@ -28,14 +33,19 @@ use crate::runtime::reference::RefBackend;
 use crate::runtime::weights::HostWeights;
 use crate::{Error, Result};
 
+/// A backend shared between engine instances and worker threads.
+pub type SharedBackend = Arc<dyn Backend>;
+
 /// A backend-private tensor handle (KV caches between calls).  Cloning
 /// is cheap (shared reference); backends downcast to their own type.
+/// The payload must be `Send + Sync` so handles can move between
+/// inference workers.
 #[derive(Clone)]
-pub struct OpaqueTensor(Rc<dyn Any>);
+pub struct OpaqueTensor(Arc<dyn Any + Send + Sync>);
 
 impl OpaqueTensor {
-    pub fn new<T: Any>(value: T) -> Self {
-        Self(Rc::new(value))
+    pub fn new<T: Any + Send + Sync>(value: T) -> Self {
+        Self(Arc::new(value))
     }
 
     pub fn downcast<T: Any>(&self) -> Option<&T> {
@@ -46,10 +56,10 @@ impl OpaqueTensor {
     /// still alive.  Engines move caches into each call, so the decode
     /// hot path takes the zero-copy branch; benches that re-feed a
     /// cloned handle pay the copy.
-    pub fn take<T: Any + Clone>(self) -> Option<T> {
+    pub fn take<T: Any + Send + Sync + Clone>(self) -> Option<T> {
         match self.0.downcast::<T>() {
-            Ok(rc) => {
-                Some(Rc::try_unwrap(rc).unwrap_or_else(|rc| (*rc).clone()))
+            Ok(arc) => {
+                Some(Arc::try_unwrap(arc).unwrap_or_else(|arc| (*arc).clone()))
             }
             Err(_) => None,
         }
@@ -116,8 +126,26 @@ pub struct RuntimeStats {
     pub download_secs: f64,
 }
 
+impl RuntimeStats {
+    /// Fold another backend's counters into this one — used to combine
+    /// per-worker backends into the single `RunSummary` of a pooled run.
+    pub fn merge(&mut self, other: &RuntimeStats) {
+        self.compiles += other.compiles;
+        self.compile_secs += other.compile_secs;
+        self.executions += other.executions;
+        self.execute_secs += other.execute_secs;
+        self.upload_secs += other.upload_secs;
+        self.download_secs += other.download_secs;
+    }
+}
+
 /// An execution backend: compiled-graph inventory + execute path.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: implementations guard their
+/// mutable state (compile caches, stats) internally so engines on
+/// different worker threads can share one instance through
+/// [`SharedBackend`].
+pub trait Backend: Send + Sync {
     /// Short human label ("reference" / "pjrt").
     fn name(&self) -> &'static str;
 
@@ -145,24 +173,40 @@ pub trait Backend {
     fn host_weights(&self, key: &str) -> Option<&HostWeights>;
 }
 
-/// Construct the backend a config asks for.  Call this on the thread
-/// that will own the backend (see module docs).
-pub fn backend_for(cfg: &ServingConfig) -> Result<Rc<dyn Backend>> {
+/// How many threads the reference backend may use to split the rows of
+/// ONE batch (intra-batch data parallelism).  `cfg.row_threads == 0`
+/// auto-sizes: divide the machine's cores across the worker pool so
+/// `workers × row_threads` never oversubscribes.
+pub(crate) fn resolve_row_threads(cfg: &ServingConfig) -> usize {
+    if cfg.row_threads > 0 {
+        return cfg.row_threads;
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    (cores / cfg.workers.max(1)).max(1)
+}
+
+/// Construct the backend a config asks for.  May be called from any
+/// thread; worker pools call it once per worker for isolated stats.
+pub fn backend_for(cfg: &ServingConfig) -> Result<SharedBackend> {
     match cfg.backend {
         BackendKind::Reference => {
-            Ok(Rc::new(RefBackend::open(&cfg.artifacts_dir)?))
+            let mut b = RefBackend::open(&cfg.artifacts_dir)?;
+            b.set_row_threads(resolve_row_threads(cfg));
+            Ok(Arc::new(b))
         }
         BackendKind::Pjrt => pjrt_backend(cfg),
     }
 }
 
 #[cfg(feature = "pjrt")]
-fn pjrt_backend(cfg: &ServingConfig) -> Result<Rc<dyn Backend>> {
-    Ok(Rc::new(crate::runtime::Runtime::new(&cfg.artifacts_dir)?))
+fn pjrt_backend(cfg: &ServingConfig) -> Result<SharedBackend> {
+    Ok(Arc::new(crate::runtime::Runtime::new(&cfg.artifacts_dir)?))
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn pjrt_backend(_cfg: &ServingConfig) -> Result<Rc<dyn Backend>> {
+fn pjrt_backend(_cfg: &ServingConfig) -> Result<SharedBackend> {
     Err(Error::Other(
         "backend 'pjrt' requires building with `--features pjrt` \
          (and the vendored xla crate; see rust/Cargo.toml)"
@@ -172,8 +216,8 @@ fn pjrt_backend(_cfg: &ServingConfig) -> Result<Rc<dyn Backend>> {
 
 /// The manifest a config's backend would serve, without standing the
 /// backend up (no weight init / device contact).  Used by pipeline
-/// coordinators that need bucket lists and vocab sizes on the main
-/// thread while the backend itself lives on the inference thread.
+/// coordinators that need bucket lists and vocab sizes before the
+/// worker pool has constructed its backends.
 pub fn manifest_for(cfg: &ServingConfig) -> Result<Manifest> {
     match cfg.backend {
         BackendKind::Reference => RefBackend::manifest_only(&cfg.artifacts_dir),
@@ -206,6 +250,17 @@ mod tests {
     }
 
     #[test]
+    fn opaque_tensor_crosses_threads() {
+        // The Send-safe contract in one assertion: an opaque handle
+        // produced on one thread is readable on another.
+        let o = OpaqueTensor::new(vec![1.5f32, 2.5]);
+        let h = std::thread::spawn(move || {
+            o.downcast::<Vec<f32>>().map(|v| v[1])
+        });
+        assert_eq!(h.join().unwrap(), Some(2.5));
+    }
+
+    #[test]
     fn exec_out_typed_accessors() {
         assert_eq!(
             ExecOut::F32(vec![1.0], vec![1]).into_f32().unwrap(),
@@ -226,6 +281,51 @@ mod tests {
         let cfg = ServingConfig::default();
         let b = backend_for(&cfg).unwrap();
         assert_eq!(b.name(), "reference");
+    }
+
+    #[test]
+    fn backend_is_shareable_across_threads() {
+        let b = backend_for(&ServingConfig::default()).unwrap();
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.manifest().artifacts.len());
+        assert_eq!(h.join().unwrap(), b.manifest().artifacts.len());
+    }
+
+    #[test]
+    fn runtime_stats_merge_sums_counters() {
+        let mut a = RuntimeStats {
+            compiles: 1,
+            compile_secs: 0.5,
+            executions: 10,
+            execute_secs: 2.0,
+            upload_secs: 0.1,
+            download_secs: 0.2,
+        };
+        let b = RuntimeStats {
+            compiles: 2,
+            compile_secs: 1.5,
+            executions: 5,
+            execute_secs: 1.0,
+            upload_secs: 0.4,
+            download_secs: 0.3,
+        };
+        a.merge(&b);
+        assert_eq!(a.compiles, 3);
+        assert_eq!(a.executions, 15);
+        assert!((a.compile_secs - 2.0).abs() < 1e-12);
+        assert!((a.execute_secs - 3.0).abs() < 1e-12);
+        assert!((a.upload_secs - 0.5).abs() < 1e-12);
+        assert!((a.download_secs - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_threads_resolution() {
+        let mut cfg = ServingConfig::default();
+        cfg.row_threads = 3;
+        assert_eq!(resolve_row_threads(&cfg), 3);
+        cfg.row_threads = 0;
+        cfg.workers = 1_000_000; // more workers than cores: 1 row thread
+        assert_eq!(resolve_row_threads(&cfg), 1);
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -12,9 +12,8 @@
 //! re-type per the manifest entry (`f32`/`s32` to host vectors,
 //! everything else stays an [`OpaqueTensor`]).
 
-use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
 use std::collections::HashMap;
-use std::rc::Rc;
 use std::time::Instant;
 
 use crate::runtime::backend::{
@@ -30,17 +29,36 @@ pub struct Executable {
     pub entry: ArtifactEntry,
 }
 
-/// Thread-confined PJRT runtime (see module docs).
+/// PJRT runtime (see module docs).  Mutable state (compile cache,
+/// device weights, stats) is mutex-guarded to satisfy the `Send + Sync`
+/// backend contract; worker pools nonetheless construct one `Runtime`
+/// per worker thread (`coordinator::dispatch`), so the locks are
+/// uncontended in practice.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     /// name -> compiled executable (compile-once cache).
-    executables: RefCell<HashMap<String, Rc<Executable>>>,
+    executables: Mutex<HashMap<String, Arc<Executable>>>,
     /// "full"/"pruned" -> device-resident parameter buffers.
-    weights: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+    weights: Mutex<HashMap<String, Arc<Vec<xla::PjRtBuffer>>>>,
     host_weights: HashMap<String, HostWeights>,
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
 }
+
+// SAFETY: the PJRT C API is thread-safe (PJRT_Client and loaded
+// executables may be used concurrently from multiple threads per the
+// PJRT C API contract); all rust-side mutable state above is
+// mutex-guarded.  The vendored `xla` binding predates this contract and
+// does not derive the markers itself.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+/// KV-cache literal wrapper carrying the `Send + Sync` markers
+/// [`OpaqueTensor`] requires.  SAFETY: a literal is an immutable host
+/// buffer once materialized; engines only move it between calls.
+pub(crate) struct SendLiteral(pub xla::Literal);
+unsafe impl Send for SendLiteral {}
+unsafe impl Sync for SendLiteral {}
 
 impl Runtime {
     /// Load the manifest + weight blobs from `artifacts_dir` and stand up
@@ -56,10 +74,10 @@ impl Runtime {
         Ok(Self {
             client,
             manifest,
-            executables: RefCell::new(HashMap::new()),
-            weights: RefCell::new(HashMap::new()),
+            executables: Mutex::new(HashMap::new()),
+            weights: Mutex::new(HashMap::new()),
             host_weights,
-            stats: RefCell::new(RuntimeStats::default()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
@@ -68,8 +86,8 @@ impl Runtime {
     }
 
     /// Compile (or fetch from cache) an artifact by manifest name.
-    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.executables.borrow().get(name) {
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.executables.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let entry = self
@@ -86,21 +104,21 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().unwrap();
             st.compiles += 1;
             st.compile_secs += t0.elapsed().as_secs_f64();
         }
-        let e = Rc::new(Executable { exe, entry });
+        let e = Arc::new(Executable { exe, entry });
         self.executables
-            .borrow_mut()
+            .lock().unwrap()
             .insert(name.to_string(), e.clone());
         Ok(e)
     }
 
     /// Device-resident parameter buffers for a weights key, uploading on
     /// first use (the "model loading" step of the paper's pipeline).
-    pub fn device_weights(&self, key: &str) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
-        if let Some(w) = self.weights.borrow().get(key) {
+    pub fn device_weights(&self, key: &str) -> Result<Arc<Vec<xla::PjRtBuffer>>> {
+        if let Some(w) = self.weights.lock().unwrap().get(key) {
             return Ok(w.clone());
         }
         let host = self.host_weights.get(key).ok_or_else(|| {
@@ -115,9 +133,9 @@ impl Runtime {
                 None,
             )?);
         }
-        self.stats.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
-        let rc = Rc::new(bufs);
-        self.weights.borrow_mut().insert(key.to_string(), rc.clone());
+        self.stats.lock().unwrap().upload_secs += t0.elapsed().as_secs_f64();
+        let rc = Arc::new(bufs);
+        self.weights.lock().unwrap().insert(key.to_string(), rc.clone());
         Ok(rc)
     }
 }
@@ -132,7 +150,7 @@ impl Backend for Runtime {
     }
 
     fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     fn prepare(&self, name: &str) -> Result<()> {
@@ -186,12 +204,12 @@ impl Backend for Runtime {
                 }
                 DataArg::Opaque(o) => {
                     let lit =
-                        o.downcast::<xla::Literal>().ok_or_else(|| {
+                        o.downcast::<SendLiteral>().ok_or_else(|| {
                             Error::Other(
                                 "opaque tensor is not a PJRT literal".into(),
                             )
                         })?;
-                    self.client.buffer_from_host_literal(None, lit)?
+                    self.client.buffer_from_host_literal(None, &lit.0)?
                 }
             };
             data_bufs.push(buf);
@@ -226,10 +244,10 @@ impl Backend for Runtime {
                 "f32" => ExecOut::F32(lit.to_vec::<f32>()?, io.shape.clone()),
                 "s32" => ExecOut::I32(lit.to_vec::<i32>()?, io.shape.clone()),
                 // caches (f16/bf16) stay device-shaped literals
-                _ => ExecOut::Opaque(OpaqueTensor::new(lit)),
+                _ => ExecOut::Opaque(OpaqueTensor::new(SendLiteral(lit))),
             });
         }
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.executions += 1;
         st.upload_secs += upload_secs;
         st.execute_secs += execute_secs;

@@ -8,12 +8,17 @@
 //!   artifacts` output (`*.hlo.txt` + weight blobs), compiled through
 //!   the vendored `xla` crate.
 //!
-//! Threading model: backends are **thread-confined** (the `xla` client
-//! is `Rc`-based, not `Send`) — the inference pipeline stage constructs
-//! its backend inside its own thread via [`backend_for`] and everything
-//! else talks to that thread over channels (see [`crate::pipeline`]).
-//! This mirrors the vLLM-style split between router threads and a
-//! model-executor thread.
+//! Threading model: backends are **`Send + Sync`** and shared as
+//! `Arc<dyn Backend>` ([`SharedBackend`]).  The multi-worker inference
+//! pool (`coordinator::dispatch`) constructs ONE backend per worker
+//! thread via [`backend_for`] — per-worker weights and stats, no lock
+//! contention on the execute path — and merges each worker's
+//! [`RuntimeStats`] into the run summary afterwards.  KV caches cross
+//! threads safely because [`OpaqueTensor`] wraps
+//! `Arc<dyn Any + Send + Sync>`.  The reference backend additionally
+//! parallelizes the rows of a single batch (see
+//! [`reference::RefBackend::set_row_threads`]).  This replaces the
+//! PR-1-era "backends are thread-confined" contract.
 
 pub mod backend;
 #[cfg(feature = "pjrt")]
@@ -24,7 +29,7 @@ mod weights;
 
 pub use backend::{
     backend_for, manifest_for, Backend, DataArg, ExecOut, OpaqueTensor,
-    RuntimeStats,
+    RuntimeStats, SharedBackend,
 };
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;

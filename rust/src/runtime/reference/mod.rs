@@ -22,12 +22,23 @@
 //! cost grows with context length, while `ft_decode` reuses the KV
 //! cache in O(context) — the Table 1 ladder keeps its shape on this
 //! backend.
+//!
+//! **Threading.**  `RefBackend` is `Send + Sync` (stats behind a
+//! `Mutex`; everything else immutable after construction), so one
+//! instance can serve many inference workers.  It additionally supports
+//! **intra-batch row parallelism**: batch rows of one graph call are
+//! independent (each row reads/writes only its own KV-cache slots and
+//! logits row), so [`RefBackend::set_row_threads`] lets a scoped
+//! std-thread team split them.  Every row computes the identical scalar
+//! sequence either way, so row-parallel output is bitwise-equal to
+//! sequential output — asserted by `row_parallel_is_bitwise_identical`
+//! below.
 
 pub mod model;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::runtime::backend::{
@@ -378,11 +389,20 @@ pub fn synthetic_manifest(p: &RefPreset) -> Manifest {
     m
 }
 
+/// Below this many estimated scalar ops per batch row, a graph call
+/// runs its rows sequentially even when a row team is configured —
+/// thread spawn/join would cost more than the split saves.
+const MIN_PAR_ROW_OPS: usize = 200_000;
+
 /// Pure-Rust reference backend (see module docs).
 pub struct RefBackend {
     manifest: Manifest,
     weights: HashMap<String, HostWeights>,
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
+    /// Max scoped threads splitting the rows of ONE batch (1 = off).
+    /// Direct constructors default to 1; `backend_for` sizes it from
+    /// `ServingConfig` (cores ÷ workers).
+    row_threads: usize,
 }
 
 impl RefBackend {
@@ -399,7 +419,12 @@ impl RefBackend {
         let mut weights = HashMap::new();
         weights.insert("full".to_string(), full);
         weights.insert("pruned".to_string(), pruned);
-        Self { manifest, weights, stats: RefCell::new(RuntimeStats::default()) }
+        Self {
+            manifest,
+            weights,
+            stats: Mutex::new(RuntimeStats::default()),
+            row_threads: 1,
+        }
     }
 
     /// Load a real manifest + weight blobs; `.hlo.txt` files optional.
@@ -413,8 +438,43 @@ impl RefBackend {
         Ok(Self {
             manifest,
             weights,
-            stats: RefCell::new(RuntimeStats::default()),
+            stats: Mutex::new(RuntimeStats::default()),
+            row_threads: 1,
         })
+    }
+
+    /// Allow up to `n` scoped threads to split the rows of one batch.
+    /// Results are bitwise-identical for every value of `n`.
+    pub fn set_row_threads(&mut self, n: usize) {
+        self.row_threads = n.max(1);
+    }
+
+    /// Decide the row-team size for one graph call: only split when the
+    /// per-row work estimate clears [`MIN_PAR_ROW_OPS`] (coarse scalar-op
+    /// count: matmuls + attention + logits).
+    fn row_team(&self, entry: &ArtifactEntry) -> usize {
+        if self.row_threads <= 1 || entry.batch <= 1 {
+            return 1;
+        }
+        let cfg = self.manifest.config_for(&entry.variant);
+        let d = cfg.d_model;
+        let per_token =
+            cfg.n_layers * (4 * d * d + 2 * d * cfg.d_ff + entry.seq * d);
+        let (tokens_per_row, logits_calls) = match entry.kind.as_str() {
+            "baseline_fwd" | "ft_prefill" => (entry.seq, 1),
+            "ft_decode_multi" => {
+                let n = entry.steps.unwrap_or(self.manifest.multi_steps);
+                (n, n)
+            }
+            _ => (1, 1),
+        };
+        let per_row =
+            tokens_per_row * per_token + logits_calls * cfg.vocab_size * d;
+        if per_row < MIN_PAR_ROW_OPS {
+            1
+        } else {
+            self.row_threads.min(entry.batch)
+        }
     }
 
     /// `from_dir` when `dir/manifest.json` exists, synthetic otherwise —
@@ -478,15 +538,59 @@ fn take_cache(arg: Option<DataArg>, what: &str) -> Result<KvCache> {
     }
 }
 
+/// Split `(bi, row)` pairs round-robin over `team` groups, run `work`
+/// for each pair on a scoped-thread team, and return the per-row
+/// results.  `work` must only touch row-local state (that is what makes
+/// the rows of one graph call embarrassingly parallel).
+fn par_rows<R, W>(
+    rows: Vec<(usize, &mut [f32])>,
+    team: usize,
+    work: W,
+) -> Vec<(usize, R)>
+where
+    R: Send,
+    W: Fn(usize, &mut [f32]) -> R + Sync,
+{
+    let mut groups: Vec<Vec<(usize, &mut [f32])>> =
+        (0..team).map(|_| Vec::new()).collect();
+    for (i, pair) in rows.into_iter().enumerate() {
+        groups[i % team].push(pair);
+    }
+    let work = &work;
+    let mut out = Vec::new();
+    std::thread::scope(|sc| {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .map(|group| {
+                sc.spawn(move || {
+                    group
+                        .into_iter()
+                        .map(|(bi, row)| (bi, work(bi, row)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("row worker panicked"));
+        }
+    });
+    out
+}
+
 /// The shared prompt walk behind `baseline_fwd` and `ft_prefill`:
 /// embed + forward every valid row of every batch row, filling the
 /// caches and the last-position logits.  ONE implementation for both
 /// graphs is what makes them bitwise-identical by construction.
+///
+/// `team > 1` splits batch rows over scoped threads; every row runs the
+/// identical scalar sequence into its own single-row cache, so the
+/// result is bitwise-equal to the sequential walk.
 fn prompt_walk(
     model: &Model<'_>,
     b: usize,
     s: usize,
     data: Vec<DataArg>,
+    team: usize,
 ) -> Result<(Vec<f32>, KvCache, KvCache)> {
     let mut it = data.into_iter();
     let tokens = take_i32(it.next(), "token_ids", b * s)?;
@@ -496,18 +600,50 @@ fn prompt_walk(
     let mut k = KvCache::zeros(cfg.n_layers, b, cfg.n_heads, s, cfg.d_head);
     let mut v = KvCache::zeros(cfg.n_layers, b, cfg.n_heads, s, cfg.d_head);
     let mut logits = vec![0.0f32; b * vsize];
-    let mut x = vec![0.0f32; cfg.d_model];
-    let mut scratch = Scratch::new(cfg, s);
-    for bi in 0..b {
+
+    if team <= 1 {
+        let mut x = vec![0.0f32; cfg.d_model];
+        let mut scratch = Scratch::new(cfg, s);
+        for bi in 0..b {
+            let len = (lens[bi].max(0) as usize).min(s);
+            if len == 0 {
+                continue; // padding batch row: logits stay zero, never read
+            }
+            for j in 0..len {
+                model.embed_row(tokens[bi * s + j], j, &mut x);
+                model.forward_row(
+                    bi, j, j + 1, &mut x, &mut k, &mut v, &mut scratch,
+                );
+            }
+            model.logits_row(&x, &mut logits[bi * vsize..(bi + 1) * vsize]);
+        }
+        return Ok((logits, k, v));
+    }
+
+    let walk_row = |bi: usize, logits_row: &mut [f32]| {
+        let mut kr =
+            KvCache::zeros(cfg.n_layers, 1, cfg.n_heads, s, cfg.d_head);
+        let mut vr =
+            KvCache::zeros(cfg.n_layers, 1, cfg.n_heads, s, cfg.d_head);
         let len = (lens[bi].max(0) as usize).min(s);
-        if len == 0 {
-            continue; // padding batch row: logits stay zero, never read
+        if len > 0 {
+            let mut x = vec![0.0f32; cfg.d_model];
+            let mut scratch = Scratch::new(cfg, s);
+            for j in 0..len {
+                model.embed_row(tokens[bi * s + j], j, &mut x);
+                model.forward_row(
+                    0, j, j + 1, &mut x, &mut kr, &mut vr, &mut scratch,
+                );
+            }
+            model.logits_row(&x, logits_row);
         }
-        for j in 0..len {
-            model.embed_row(tokens[bi * s + j], j, &mut x);
-            model.forward_row(bi, j, j + 1, &mut x, &mut k, &mut v, &mut scratch);
-        }
-        model.logits_row(&x, &mut logits[bi * vsize..(bi + 1) * vsize]);
+        (kr, vr)
+    };
+    let rows: Vec<(usize, &mut [f32])> =
+        logits.chunks_mut(vsize).enumerate().collect();
+    for (bi, (kr, vr)) in par_rows(rows, team, walk_row) {
+        k.inject_row(bi, &kr);
+        v.inject_row(bi, &vr);
     }
     Ok((logits, k, v))
 }
@@ -520,9 +656,10 @@ fn run_baseline(
     model: &Model<'_>,
     entry: &ArtifactEntry,
     data: Vec<DataArg>,
+    team: usize,
 ) -> Result<Vec<ExecOut>> {
     let (b, s) = (entry.batch, entry.seq);
-    let (logits, _k, _v) = prompt_walk(model, b, s, data)?;
+    let (logits, _k, _v) = prompt_walk(model, b, s, data, team)?;
     Ok(vec![ExecOut::F32(logits, vec![b, model.cfg.vocab_size])])
 }
 
@@ -532,9 +669,10 @@ fn run_prefill(
     model: &Model<'_>,
     entry: &ArtifactEntry,
     data: Vec<DataArg>,
+    team: usize,
 ) -> Result<Vec<ExecOut>> {
     let (b, s) = (entry.batch, entry.seq);
-    let (logits, k, v) = prompt_walk(model, b, s, data)?;
+    let (logits, k, v) = prompt_walk(model, b, s, data, team)?;
     Ok(vec![
         ExecOut::F32(logits, vec![b, model.cfg.vocab_size]),
         ExecOut::Opaque(OpaqueTensor::new(k)),
@@ -554,11 +692,17 @@ fn check_cache(c: &KvCache, entry: &ArtifactEntry, what: &str) -> Result<()> {
 
 /// `ft_decode` / `ft_decode_multi`: one (or `steps` fused greedy) decode
 /// iterations against the cache — the Fig 2 mechanism.
+///
+/// Rows are independent even across fused steps (greedy argmax feeds a
+/// row only its own next token), so `team > 1` runs each row's full
+/// step sequence on its own scoped thread against an extracted
+/// single-row cache — bitwise-equal to the sequential interleaving.
 fn run_decode(
     model: &Model<'_>,
     entry: &ArtifactEntry,
     steps: Option<usize>,
     data: Vec<DataArg>,
+    team: usize,
 ) -> Result<Vec<ExecOut>> {
     let (b, s) = (entry.batch, entry.seq);
     let mut it = data.into_iter();
@@ -573,23 +717,62 @@ fn run_decode(
     let n_steps = steps.unwrap_or(1);
     let mut logits = vec![0.0f32; b * vsize];
     let mut toks = vec![0i32; b * n_steps];
-    let mut x = vec![0.0f32; cfg.d_model];
-    let mut scratch = Scratch::new(cfg, s);
-    for step in 0..n_steps {
-        for bi in 0..b {
-            let tok = last[bi].max(0);
-            let at = (pos[bi].max(0) as usize).min(s - 1);
-            model.embed_row(tok, pos[bi].max(0) as usize, &mut x);
-            model.forward_row(bi, at, at + 1, &mut x, &mut k, &mut v, &mut scratch);
-            let row = &mut logits[bi * vsize..(bi + 1) * vsize];
-            model.logits_row(&x, row);
-            if steps.is_some() {
-                // fused greedy: argmax inside the graph (lax.scan)
-                let t = argmax(row) as i32;
-                toks[bi * n_steps + step] = t;
-                last[bi] = t;
-                pos[bi] += 1;
+    if team <= 1 {
+        let mut x = vec![0.0f32; cfg.d_model];
+        let mut scratch = Scratch::new(cfg, s);
+        for step in 0..n_steps {
+            for bi in 0..b {
+                let tok = last[bi].max(0);
+                let at = (pos[bi].max(0) as usize).min(s - 1);
+                model.embed_row(tok, pos[bi].max(0) as usize, &mut x);
+                model.forward_row(
+                    bi, at, at + 1, &mut x, &mut k, &mut v, &mut scratch,
+                );
+                let row = &mut logits[bi * vsize..(bi + 1) * vsize];
+                model.logits_row(&x, row);
+                if steps.is_some() {
+                    // fused greedy: argmax inside the graph (lax.scan)
+                    let t = argmax(row) as i32;
+                    toks[bi * n_steps + step] = t;
+                    last[bi] = t;
+                    pos[bi] += 1;
+                }
             }
+        }
+    } else {
+        let decode_row = |bi: usize, logits_row: &mut [f32]| {
+            let mut kr = k.extract_row(bi);
+            let mut vr = v.extract_row(bi);
+            let mut toks_row = vec![0i32; n_steps];
+            let mut x = vec![0.0f32; cfg.d_model];
+            let mut scratch = Scratch::new(cfg, s);
+            let mut last_t = last[bi];
+            let mut p = pos[bi];
+            for tr in toks_row.iter_mut() {
+                let tok = last_t.max(0);
+                let at = (p.max(0) as usize).min(s - 1);
+                model.embed_row(tok, p.max(0) as usize, &mut x);
+                model.forward_row(
+                    0, at, at + 1, &mut x, &mut kr, &mut vr, &mut scratch,
+                );
+                model.logits_row(&x, logits_row);
+                if steps.is_some() {
+                    let t = argmax(logits_row) as i32;
+                    *tr = t;
+                    last_t = t;
+                    p += 1;
+                }
+            }
+            (kr, vr, toks_row)
+        };
+        let rows: Vec<(usize, &mut [f32])> =
+            logits.chunks_mut(vsize).enumerate().collect();
+        let results = par_rows(rows, team, decode_row);
+        for (bi, (kr, vr, toks_row)) in results {
+            k.inject_row(bi, &kr);
+            v.inject_row(bi, &vr);
+            toks[bi * n_steps..(bi + 1) * n_steps]
+                .copy_from_slice(&toks_row);
         }
     }
     let head = if steps.is_some() {
@@ -614,14 +797,14 @@ impl Backend for RefBackend {
     }
 
     fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     fn prepare(&self, name: &str) -> Result<()> {
         if self.manifest.find(name).is_none() {
             return Err(Error::Manifest(format!("unknown artifact {name}")));
         }
-        self.stats.borrow_mut().compiles += 1; // interpretation: free
+        self.stats.lock().unwrap().compiles += 1; // interpretation: free
         Ok(())
     }
 
@@ -639,14 +822,15 @@ impl Backend for RefBackend {
             )));
         }
         let model = self.model_for(entry)?;
+        let team = self.row_team(entry);
         let t0 = Instant::now();
         let outs = match entry.kind.as_str() {
-            "baseline_fwd" => run_baseline(&model, entry, data)?,
-            "ft_prefill" => run_prefill(&model, entry, data)?,
-            "ft_decode" => run_decode(&model, entry, None, data)?,
+            "baseline_fwd" => run_baseline(&model, entry, data, team)?,
+            "ft_prefill" => run_prefill(&model, entry, data, team)?,
+            "ft_decode" => run_decode(&model, entry, None, data, team)?,
             "ft_decode_multi" => {
                 let steps = entry.steps.unwrap_or(self.manifest.multi_steps);
-                run_decode(&model, entry, Some(steps), data)?
+                run_decode(&model, entry, Some(steps), data, team)?
             }
             other => {
                 return Err(Error::Manifest(format!(
@@ -656,7 +840,7 @@ impl Backend for RefBackend {
             }
         };
         debug_assert_eq!(outs.len(), entry.outputs.len());
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.executions += 1;
         st.execute_secs += t0.elapsed().as_secs_f64();
         Ok(outs)
@@ -845,6 +1029,91 @@ mod tests {
             singles.push(tok);
         }
         assert_eq!(fused, singles);
+    }
+
+    #[test]
+    fn row_parallel_is_bitwise_identical() {
+        // The default preset clears MIN_PAR_ROW_OPS for prefill and
+        // multi-step decode at batch 4, so the parallel path actually
+        // runs on the `par` backend; results must be bitwise-equal to
+        // the sequential backend anyway.
+        let seq = RefBackend::synthetic();
+        let mut par = RefBackend::synthetic();
+        par.set_row_threads(4);
+        assert!(
+            par.row_team(par.manifest.find("ft_prefill_full_b4_s32").unwrap())
+                > 1,
+            "test preset must actually engage the row team"
+        );
+
+        let (b, s) = (4usize, 32usize);
+        let mut tokens = vec![special::PAD as i32; b * s];
+        let mut lens = vec![0i32; b];
+        for bi in 0..b {
+            let plen = 4 + 3 * bi; // different lengths per row
+            tokens[bi * s] = special::BOS as i32;
+            for j in 1..plen - 1 {
+                tokens[bi * s + j] = (special::FIRST_WORD as usize
+                    + (bi * 17 + j * 5) % 100)
+                    as i32;
+            }
+            tokens[bi * s + plen - 1] = special::SEP as i32;
+            lens[bi] = plen as i32;
+        }
+        let args = |t: &[i32], l: &[i32]| {
+            vec![
+                DataArg::I32(t.to_vec(), vec![b, s]),
+                DataArg::I32(l.to_vec(), vec![b]),
+            ]
+        };
+
+        let run = |backend: &RefBackend| {
+            let pre = backend
+                .execute("ft_prefill_full_b4_s32", args(&tokens, &lens))
+                .unwrap();
+            let mut it = pre.into_iter();
+            let logits = it.next().unwrap().into_f32().unwrap();
+            let k = it.next().unwrap().into_opaque().unwrap();
+            let v = it.next().unwrap().into_opaque().unwrap();
+            let kc = k.downcast::<KvCache>().unwrap().data.clone();
+            let vc = v.downcast::<KvCache>().unwrap().data.clone();
+            let next: Vec<i32> = (0..b)
+                .map(|bi| {
+                    argmax(
+                        &logits[bi * backend.manifest.config_for("full").vocab_size
+                            ..(bi + 1)
+                                * backend
+                                    .manifest
+                                    .config_for("full")
+                                    .vocab_size],
+                    ) as i32
+                })
+                .collect();
+            let multi = backend
+                .execute(
+                    "ft_decode_multi_full_b4_s32",
+                    vec![
+                        DataArg::I32(next, vec![b]),
+                        DataArg::I32(lens.clone(), vec![b]),
+                        DataArg::Opaque(k),
+                        DataArg::Opaque(v),
+                    ],
+                )
+                .unwrap();
+            let mut it = multi.into_iter();
+            let toks = it.next().unwrap().into_i32().unwrap();
+            let k2 = it.next().unwrap().into_opaque().unwrap();
+            let kc2 = k2.downcast::<KvCache>().unwrap().data.clone();
+            (logits, kc, vc, toks, kc2)
+        };
+
+        let a = run(&seq);
+        let c = run(&par);
+        assert_eq!(a.0, c.0, "prefill logits diverged");
+        assert_eq!(a.1, c.1, "k cache diverged");
+        assert_eq!(a.2, c.2, "v cache diverged");
+        assert_eq!(a.3, c.3, "fused decode tokens diverged");
+        assert_eq!(a.4, c.4, "post-decode k cache diverged");
     }
 
     #[test]

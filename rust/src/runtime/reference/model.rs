@@ -51,6 +51,46 @@ impl KvCache {
         (((l * self.batch + b) * self.heads + h) * self.slots + slot)
             * self.d_head
     }
+
+    /// Copy one batch row out into a standalone `batch == 1` cache.
+    /// Row-parallel execution gives every worker thread its own
+    /// single-row cache and scatters results back with
+    /// [`KvCache::inject_row`]; the layer-major layout of the combined
+    /// cache (the PJRT literal layout) is unchanged.
+    pub fn extract_row(&self, bi: usize) -> KvCache {
+        let mut row = KvCache::zeros(
+            self.layers,
+            1,
+            self.heads,
+            self.slots,
+            self.d_head,
+        );
+        // for a fixed (layer, batch row) the whole [heads, slots,
+        // d_head] region is one contiguous run in both caches
+        let span = self.heads * self.slots * self.d_head;
+        for l in 0..self.layers {
+            let src = self.at(l, bi, 0, 0);
+            let dst = row.at(l, 0, 0, 0);
+            row.data[dst..dst + span]
+                .copy_from_slice(&self.data[src..src + span]);
+        }
+        row
+    }
+
+    /// Copy a standalone `batch == 1` cache back into batch row `bi`.
+    pub fn inject_row(&mut self, bi: usize, row: &KvCache) {
+        debug_assert_eq!(row.batch, 1);
+        debug_assert_eq!(row.layers, self.layers);
+        debug_assert_eq!(row.heads, self.heads);
+        debug_assert_eq!(row.slots, self.slots);
+        let span = self.heads * self.slots * self.d_head;
+        for l in 0..self.layers {
+            let dst = self.at(l, bi, 0, 0);
+            let src = row.at(l, 0, 0, 0);
+            self.data[dst..dst + span]
+                .copy_from_slice(&row.data[src..src + span]);
+        }
+    }
 }
 
 /// LayerNorm over one row: `(x - mean) * rsqrt(var + eps) * g + b`.
@@ -470,6 +510,28 @@ mod tests {
     fn argmax_first_max_wins() {
         assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
         assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn extract_inject_row_roundtrips() {
+        let mut c = KvCache::zeros(2, 3, 2, 4, 3);
+        for (i, v) in c.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let before = c.data.clone();
+        let r1 = c.extract_row(1);
+        assert_eq!(r1.batch, 1);
+        assert_eq!(r1.data.len(), 2 * 2 * 4 * 3);
+        // row values land at (l, 0, h, s) of the extracted cache
+        assert_eq!(r1.data[r1.at(0, 0, 0, 0)], c.data[c.at(0, 1, 0, 0)]);
+        assert_eq!(r1.data[r1.at(1, 0, 1, 3)], c.data[c.at(1, 1, 1, 3)]);
+        // inject back: bitwise no-op
+        c.inject_row(1, &r1);
+        assert_eq!(c.data, before);
+        // injecting row 1's data into row 2 changes only row 2
+        c.inject_row(2, &r1);
+        assert_eq!(c.data[c.at(0, 2, 0, 0)], before[c.at(0, 1, 0, 0)]);
+        assert_eq!(c.data[c.at(0, 0, 1, 2)], before[c.at(0, 0, 1, 2)]);
     }
 
     #[test]

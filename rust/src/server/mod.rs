@@ -6,9 +6,11 @@
 //!   <- {"id": 7, "summary": "ba gedu", "latency_ms": 12.3}
 //!   <- {"id": 7, "error": "…"}            (on failure)
 //!
-//! Threads: acceptor + one reader/writer pair per connection + the three
-//! pipeline stage threads.  The PJRT runtime lives on the inference
-//! thread only.
+//! Threads: acceptor + one reader/writer pair per connection + the
+//! pre/post stage threads + `cfg.workers` inference workers (each with
+//! its own backend — `--workers N` scales the model stage).  A batch
+//! that fails inference yields `error` replies for its requests; no
+//! client is left hanging on a dropped reply channel.
 
 mod protocol;
 mod streaming;

@@ -22,8 +22,23 @@ pub fn parse_request_line(line: &str) -> Result<Request> {
     })
 }
 
-/// Encode one response line.
+/// Encode one response line.  Failed requests encode as
+/// `{"id": .., "error": ".."}` (plus latency) so clients can tell an
+/// inference failure from an empty summary.
 pub fn response_to_json(r: &ServingResponse) -> String {
+    if let Some(err) = &r.error {
+        return Value::obj(vec![
+            ("id", Value::num(r.id as f64)),
+            ("error", Value::str(err.clone())),
+            (
+                "latency_ms",
+                Value::num(
+                    (r.latency.as_secs_f64() * 1e3 * 100.0).round() / 100.0,
+                ),
+            ),
+        ])
+        .to_json();
+    }
     let mut pairs = vec![
         ("id", Value::num(r.id as f64)),
         ("summary", Value::str(r.summary_text.clone())),
@@ -74,6 +89,7 @@ mod tests {
             summary_text: "ba be".into(),
             latency: Duration::from_millis(12),
             accuracy: Some(0.5),
+            error: None,
         };
         let v = json::parse(&response_to_json(&resp)).unwrap();
         assert_eq!(v.get("id").as_u64(), Some(3));
@@ -81,5 +97,20 @@ mod tests {
         assert_eq!(v.get("n_tokens").as_usize(), Some(2));
         assert!(v.get("latency_ms").as_f64().unwrap() >= 12.0);
         assert_eq!(v.get("accuracy").as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn failed_response_encodes_error_not_summary() {
+        let resp = ServingResponse::failed(
+            9,
+            Duration::from_millis(5),
+            "no compiled bucket".into(),
+        );
+        let line = response_to_json(&resp);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("id").as_u64(), Some(9));
+        assert_eq!(v.get("error").as_str(), Some("no compiled bucket"));
+        assert!(v.get("summary").is_null(), "{line}");
+        assert!(v.get("latency_ms").as_f64().is_some());
     }
 }

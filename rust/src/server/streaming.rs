@@ -1,17 +1,26 @@
-//! Streaming instance of the Fig-4 pipeline for live traffic: same three
-//! stage threads as `pipeline::run_pipelined`, but requests arrive one at
-//! a time with a per-request reply channel instead of a fixed workload.
+//! Streaming instance of the Fig-4 pipeline for live traffic: the same
+//! preprocessing/postprocessing stage threads as
+//! `pipeline::run_pipelined` around the multi-worker
+//! [`InferencePool`], but requests arrive one at a time with a
+//! per-request reply channel instead of a fixed workload.
+//!
+//! Failure semantics: every submitted request gets EXACTLY ONE reply.
+//! Worker startup failures surface as a typed error from
+//! [`StreamingPipeline::start`]; a batch that fails inference produces
+//! `ServingResponse { error: Some(..) }` replies for its requests —
+//! never an `eprintln!` + silently dropped reply channel.
 
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::ServingConfig;
-use crate::coordinator::{run_batch, Batch, DynamicBatcher, ServingResponse};
+use crate::coordinator::{
+    DynamicBatcher, InferencePool, PoolOutput, ServingResponse,
+};
 use crate::data::Request;
-use crate::engine::{build as build_engine, sampler_for};
 use crate::pipeline::{postprocess, preprocess};
-use crate::runtime::{backend_for, manifest_for};
+use crate::runtime::manifest_for;
 use crate::tokenizer::{FastTokenizer, Vocab};
 use crate::{Error, Result};
 
@@ -34,7 +43,9 @@ impl SubmitHandle {
 /// The running pipeline; dropping it drains and joins all stages.
 pub struct StreamingPipeline {
     handle: SubmitHandle,
-    joins: Vec<std::thread::JoinHandle<()>>,
+    pool: Option<InferencePool>,
+    pre: Option<std::thread::JoinHandle<()>>,
+    post: Option<std::thread::JoinHandle<()>>,
 }
 
 impl StreamingPipeline {
@@ -65,9 +76,15 @@ impl StreamingPipeline {
         let (in_tx, in_rx) = mpsc::sync_channel::<(Request, ReplyTx, Instant)>(
             cfg.stage_queue * cfg.batch.max_batch,
         );
-        let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(cfg.stage_queue);
-        let (post_tx, post_rx) =
-            mpsc::sync_channel::<(Batch, Vec<Vec<u32>>)>(cfg.stage_queue);
+        let (out_tx, out_rx) = mpsc::sync_channel::<PoolOutput>(
+            cfg.stage_queue.max(cfg.workers),
+        );
+
+        // inference worker pool: each worker owns its backend + engine.
+        // Startup failures (bad artifacts dir, missing pjrt feature…)
+        // return a typed error HERE instead of hanging future clients.
+        let pool = InferencePool::start(&cfg, out_tx)?;
+        let batch_tx = pool.input();
 
         // preprocess + dynamic batching
         let pre_tok = tok.clone();
@@ -119,58 +136,46 @@ impl StreamingPipeline {
             })
             .expect("spawn");
 
-        // inference (owns the execution backend)
-        let inf_cfg = cfg.clone();
-        let inf = std::thread::Builder::new()
-            .name("srv-inference".into())
-            .spawn(move || {
-                let backend = match backend_for(&inf_cfg) {
-                    Ok(b) => b,
-                    Err(e) => {
-                        eprintln!("inference thread: {e}");
-                        return;
-                    }
-                };
-                let engine = match build_engine(
-                    inf_cfg.engine,
-                    backend,
-                    inf_cfg.gen,
-                ) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        eprintln!("inference thread: {e}");
-                        return;
-                    }
-                };
-                let mut sampler = sampler_for(inf_cfg.sampling);
-                for batch in batch_rx.iter() {
-                    match run_batch(engine.as_ref(), &mut sampler, &batch) {
-                        Ok(outs) => {
-                            let generated =
-                                outs.into_iter().map(|(_, g)| g).collect();
-                            if post_tx.send((batch, generated)).is_err() {
-                                return;
-                            }
-                        }
-                        Err(e) => eprintln!("batch failed: {e}"),
-                    }
-                }
-            })
-            .expect("spawn");
-
-        // postprocess + reply routing
+        // postprocess + reply routing (successes AND failures)
         let post_tok = tok;
         let post_replies = replies;
         let post = std::thread::Builder::new()
             .name("srv-postprocess".into())
             .spawn(move || {
-                for (batch, generated) in post_rx.iter() {
-                    for (req, gen) in batch.requests.iter().zip(generated) {
-                        let resp = postprocess(post_tok.vocab(), req, gen);
-                        if let Some(tx) =
-                            post_replies.lock().unwrap().remove(&req.id)
-                        {
-                            let _ = tx.send(resp);
+                for out in out_rx.iter() {
+                    match out.generated {
+                        Ok(generated) => {
+                            for (req, gen) in
+                                out.batch.requests.iter().zip(generated)
+                            {
+                                let resp =
+                                    postprocess(post_tok.vocab(), req, gen);
+                                if let Some(tx) = post_replies
+                                    .lock()
+                                    .unwrap()
+                                    .remove(&req.id)
+                                {
+                                    let _ = tx.send(resp);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            // the batch failed: every request in it gets
+                            // an error reply, so no client hangs
+                            let msg = e.to_string();
+                            for req in &out.batch.requests {
+                                if let Some(tx) = post_replies
+                                    .lock()
+                                    .unwrap()
+                                    .remove(&req.id)
+                                {
+                                    let _ = tx.send(ServingResponse::failed(
+                                        req.id,
+                                        req.enqueued.elapsed(),
+                                        msg.clone(),
+                                    ));
+                                }
+                            }
                         }
                     }
                 }
@@ -179,18 +184,29 @@ impl StreamingPipeline {
 
         Ok(Self {
             handle: SubmitHandle { tx: in_tx },
-            joins: vec![pre, inf, post],
+            pool: Some(pool),
+            pre: Some(pre),
+            post: Some(post),
         })
     }
 }
 
 impl Drop for StreamingPipeline {
     fn drop(&mut self) {
-        // closing the input channel cascades shutdown through the stages
+        // closing the input channel cascades shutdown through the
+        // stages: preprocess drains and drops its pool handle, the pool
+        // joins its workers, the output channel closes, postprocess
+        // exits.
         let (dead_tx, _) = mpsc::sync_channel(1);
         self.handle = SubmitHandle { tx: dead_tx };
-        for j in self.joins.drain(..) {
-            let _ = j.join();
+        if let Some(pre) = self.pre.take() {
+            let _ = pre.join();
+        }
+        if let Some(pool) = self.pool.take() {
+            let _ = pool.join();
+        }
+        if let Some(post) = self.post.take() {
+            let _ = post.join();
         }
     }
 }

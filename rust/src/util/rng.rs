@@ -8,6 +8,18 @@ pub struct Rng {
     s: [u64; 4],
 }
 
+/// Derive the seed for a parallel stream (one per inference worker)
+/// from a base seed.  Stream 0 is the identity, so a 1-worker pool
+/// samples exactly like the pre-pool single-engine path; distinct
+/// streams land in statistically independent SplitMix64 cells.
+pub fn derive_seed(base: u64, stream: u64) -> u64 {
+    if stream == 0 {
+        return base;
+    }
+    let mut state = base ^ stream.wrapping_mul(0x9E3779B97F4A7C15);
+    splitmix64(&mut state)
+}
+
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;
@@ -83,6 +95,20 @@ mod tests {
         }
         let mut c = Rng::seed_from_u64(2);
         assert_ne!(Rng::seed_from_u64(1).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn derive_seed_identity_and_spread() {
+        // stream 0 keeps the configured seed (1-worker determinism)
+        assert_eq!(derive_seed(42, 0), 42);
+        // distinct streams get distinct, deterministic seeds
+        let a = derive_seed(42, 1);
+        let b = derive_seed(42, 2);
+        assert_ne!(a, 42);
+        assert_ne!(a, b);
+        assert_eq!(a, derive_seed(42, 1));
+        // distinct bases diverge on the same stream
+        assert_ne!(derive_seed(7, 3), derive_seed(8, 3));
     }
 
     #[test]

@@ -9,7 +9,6 @@
 //! artifacts are absent.
 
 use std::io::{BufRead, BufReader, Write};
-use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -21,8 +20,8 @@ use aigc_infer::pipeline;
 use aigc_infer::runtime::{backend_for, Backend, DataArg, RefBackend};
 use aigc_infer::special;
 
-fn backend() -> Rc<dyn Backend> {
-    Rc::new(RefBackend::synthetic())
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(RefBackend::synthetic())
 }
 
 fn cfg(engine: EngineKind, pipelined: bool) -> ServingConfig {
@@ -279,6 +278,121 @@ fn pipelined_equals_sequential_results() {
     assert!(seq.runtime_stats.executions > 0);
 }
 
+/// Sorted (id, tokens) pairs for order-independent comparison.
+fn response_set(s: &pipeline::RunSummary) -> Vec<(u64, Vec<u32>)> {
+    let mut v: Vec<_> = s
+        .responses
+        .iter()
+        .map(|r| (r.id, r.summary_ids.clone()))
+        .collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn one_worker_pool_matches_sequential_across_full_ladder() {
+    // Acceptance criterion: with --workers 1 the pooled pipelined
+    // executor produces output tokens identical to the pre-refactor
+    // (sequential) path, for EVERY Table 1 ladder row.
+    let reqs = workload(12, 41);
+    for engine in
+        [EngineKind::Baseline, EngineKind::FtFull, EngineKind::FtPruned]
+    {
+        let seq = pipeline::run(&cfg(engine, false), &reqs).unwrap();
+        let mut pooled_cfg = cfg(engine, true);
+        pooled_cfg.workers = 1;
+        let pooled = pipeline::run(&pooled_cfg, &reqs).unwrap();
+        assert_eq!(
+            response_set(&seq),
+            response_set(&pooled),
+            "{engine:?}: workers=1 pool diverged from sequential"
+        );
+        assert_eq!(pooled.workers, 1);
+    }
+}
+
+#[test]
+fn two_worker_pool_matches_one_worker_token_sets() {
+    // Determinism across pool sizes: same trace, same seeds -> the SAME
+    // SET of (id, tokens), only completion order may differ.
+    let reqs = workload(16, 99);
+    let mut one = cfg(EngineKind::FtPruned, true);
+    one.workers = 1;
+    let mut two = cfg(EngineKind::FtPruned, true);
+    two.workers = 2;
+    let a = pipeline::run(&one, &reqs).unwrap();
+    let b = pipeline::run(&two, &reqs).unwrap();
+    assert_eq!(a.responses.len(), reqs.len());
+    assert_eq!(b.responses.len(), reqs.len());
+    assert_eq!(response_set(&a), response_set(&b));
+    assert_eq!(b.workers, 2);
+    // per-worker metrics merged back into one summary: every batch is
+    // at least one backend execution (prefill), usually more (decode)
+    assert!(b.batch_latency.count() > 0);
+    assert!(
+        b.runtime_stats.executions as u64 >= b.batch_latency.count(),
+        "executions {} < batches {}",
+        b.runtime_stats.executions,
+        b.batch_latency.count()
+    );
+}
+
+#[test]
+fn failing_batch_yields_error_reply_not_deadlock() {
+    use aigc_infer::server::StreamingPipeline;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    let mut scfg = cfg(EngineKind::FtPruned, true);
+    scfg.batch.max_wait_ms = 5;
+    let pipeline = StreamingPipeline::start(scfg).unwrap();
+    let handle = pipeline.handle();
+
+    // max_new_tokens far beyond every compiled bucket -> NoBucket in the
+    // inference stage; the reply channel must get an ERROR, not be
+    // silently dropped.
+    let (tx, rx) = mpsc::channel();
+    handle
+        .submit(
+            aigc_infer::data::Request {
+                id: 1,
+                text: "ba gedu".into(),
+                max_new_tokens: 100_000,
+                arrival: Duration::ZERO,
+                reference_summary: None,
+            },
+            tx,
+        )
+        .unwrap();
+    let resp = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("failing batch must produce a reply, not a hang");
+    assert_eq!(resp.id, 1);
+    let err = resp.error.expect("reply must carry the inference error");
+    assert!(err.contains("bucket"), "unexpected error: {err}");
+    assert!(resp.summary_ids.is_empty());
+
+    // the pipeline keeps serving after a failed batch
+    let (tx, rx) = mpsc::channel();
+    handle
+        .submit(
+            aigc_infer::data::Request {
+                id: 2,
+                text: "ba gedu".into(),
+                max_new_tokens: 4,
+                arrival: Duration::ZERO,
+                reference_summary: None,
+            },
+            tx,
+        )
+        .unwrap();
+    let resp = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("pipeline must survive a failed batch");
+    assert_eq!(resp.id, 2);
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+}
+
 #[test]
 fn full_ladder_runs_end_to_end() {
     // All four Table 1 rows complete on the hermetic backend and return
@@ -347,6 +461,85 @@ fn server_round_trip() {
     shutdown.store(true, Ordering::Relaxed);
     drop(writer);
     drop(reader);
+    let _ = server.join();
+}
+
+#[test]
+fn server_round_trip_multi_worker() {
+    // The streaming TCP server over a 2-worker inference pool, driven
+    // by concurrent clients; every request gets exactly one reply, and
+    // an unservable request gets an error reply on the right id.
+    let addr = "127.0.0.1:17173";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = shutdown.clone();
+    let mut scfg = cfg(EngineKind::FtPruned, true);
+    scfg.workers = 2;
+    scfg.batch.max_wait_ms = 5;
+    let server = std::thread::spawn(move || {
+        let _ = aigc_infer::server::serve(scfg, addr, sd);
+    });
+    let deadline = Instant::now() + std::time::Duration::from_secs(30);
+    let connect = || loop {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(std::time::Duration::from_millis(50))
+            }
+            Err(e) => panic!("server did not come up: {e}"),
+        }
+    };
+    let _probe = connect(); // wait for the listener before spawning clients
+
+    let clients: Vec<_> = (0..2)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = loop {
+                    match std::net::TcpStream::connect(addr) {
+                        Ok(s) => break s,
+                        Err(_) => std::thread::sleep(
+                            std::time::Duration::from_millis(50),
+                        ),
+                    }
+                };
+                let mut reader =
+                    BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut gen =
+                    Generator::new(CorpusConfig::default(), 100 + c);
+                for i in 0..4u64 {
+                    let d = gen.generate_capped(16);
+                    writeln!(
+                        writer,
+                        "{{\"id\": {i}, \"text\": \"{}\", \
+                         \"max_new_tokens\": 4}}",
+                        d.text
+                    )
+                    .unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let v = aigc_infer::util::json::parse(&line).unwrap();
+                    assert_eq!(v.get("id").as_u64(), Some(i), "{line}");
+                    assert!(v.get("summary").as_str().is_some(), "{line}");
+                }
+                // unservable request: error reply, correct id, no hang
+                writeln!(
+                    writer,
+                    "{{\"id\": 77, \"text\": \"ba\", \
+                     \"max_new_tokens\": 100000}}"
+                )
+                .unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let v = aigc_infer::util::json::parse(&line).unwrap();
+                assert_eq!(v.get("id").as_u64(), Some(77), "{line}");
+                assert!(v.get("error").as_str().is_some(), "{line}");
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread failed");
+    }
+    shutdown.store(true, Ordering::Relaxed);
     let _ = server.join();
 }
 
