@@ -1,11 +1,14 @@
 //! `bench_snapshot` — the perf-trajectory recorder.
 //!
 //! Runs the Table-1 ladder (hermetic reference backend, synthetic
-//! seeded model) plus a worker-pool sweep of the pipelined row at
-//! `--workers 1` and `--workers 4`, then writes one machine-readable
-//! `BENCH_<n>.json` datapoint (samples/sec, p50/p99 latency, generated
-//! tokens per configuration).  Successive PRs append `BENCH_2.json`,
-//! `BENCH_3.json`, … so the speed trajectory of the repo is diffable.
+//! seeded model), a worker-pool sweep of the pipelined row at
+//! `--workers 1` and `--workers 4`, and a **continuous-vs-static
+//! batching** serving comparison through the embedded `Server` (same
+//! trace, admission between decode steps ON vs OFF), then writes one
+//! machine-readable `BENCH_<n>.json` datapoint (samples/sec, p50/p99
+//! latency, TTFT, tokens/sec per configuration).  Successive PRs
+//! append `BENCH_2.json`, `BENCH_3.json`, … so the speed trajectory of
+//! the repo is diffable.
 //!
 //! The sweep pins `row_threads = 1` so it isolates pool scaling from
 //! the reference backend's intra-batch row parallelism.
@@ -19,12 +22,14 @@
 //! The tool re-reads and validates what it wrote and exits non-zero on
 //! any failure, so CI can use it as a smoke step as-is.
 
-use std::time::{SystemTime, UNIX_EPOCH};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use aigc_infer::config::{EngineKind, ServingConfig};
 use aigc_infer::data::{TraceConfig, TraceGenerator};
+use aigc_infer::metrics::Histogram;
 use aigc_infer::pipeline::{self, RunSummary};
 use aigc_infer::util::json::{self, Value};
+use aigc_infer::Server;
 
 fn arg(name: &str) -> Option<String> {
     let argv: Vec<String> = std::env::args().collect();
@@ -53,9 +58,110 @@ fn row_json(
             "p99_latency_ms",
             Value::num(s.latency.quantile(0.99).as_secs_f64() * 1e3),
         ),
+        (
+            "ttft_p50_ms",
+            Value::num(s.ttft.quantile(0.50).as_secs_f64() * 1e3),
+        ),
+        ("steps_per_retire", Value::num(s.steps_per_retire)),
+        (
+            "tokens_per_sec",
+            Value::num(if s.wall.as_secs_f64() > 0.0 {
+                s.generated_tokens as f64 / s.wall.as_secs_f64()
+            } else {
+                0.0
+            }),
+        ),
         ("generated_tokens", Value::num(s.generated_tokens as f64)),
         ("accuracy", Value::num(s.mean_accuracy)),
         ("wall_secs", Value::num(s.wall.as_secs_f64())),
+    ])
+}
+
+/// Serve `n` trace requests through the embedded `Server` and measure
+/// the client-visible serving shape: TTFT, latency, tokens/s.
+/// `continuous` toggles between-step admission — the A/B this records.
+fn run_serving(continuous: bool, n: usize, max_new: usize) -> Value {
+    let server = Server::builder()
+        .engine(EngineKind::FtPruned)
+        .max_new_tokens(max_new)
+        .continuous(continuous)
+        .precompile(true)
+        .start()
+        .expect("server start");
+    let mut trace = TraceGenerator::new(
+        TraceConfig {
+            max_new_tokens: max_new,
+            // the serving boundary is strict (no truncation): keep
+            // prompt + BOS/SEP + generation inside the largest bucket
+            max_doc_len: 96.min(128usize.saturating_sub(2 + max_new)),
+            ..Default::default()
+        },
+        7,
+    );
+    let reqs = trace.take(n);
+    let wall_start = Instant::now();
+    let streams: Vec<_> = reqs
+        .into_iter()
+        .map(|r| server.submit(r.text, max_new).expect("submit"))
+        .collect();
+    let mut ttft = Histogram::new();
+    let mut latency = Histogram::new();
+    let mut tokens = 0u64;
+    let mut steps = 0u64;
+    let count = streams.len() as u64;
+    for stream in streams {
+        let resp = stream.wait().expect("terminal event");
+        assert!(resp.error.is_none(), "bench request failed: {resp:?}");
+        if let Some(t) = resp.ttft {
+            ttft.record(t);
+        }
+        latency.record(resp.latency);
+        tokens += resp.summary_ids.len() as u64;
+        steps += resp.steps as u64;
+    }
+    let wall = wall_start.elapsed();
+    drop(server);
+    let mode = if continuous { "continuous" } else { "static" };
+    eprintln!(
+        "  serving[{mode}]: {:.2} samples/s, ttft p50 {:.2}ms, \
+         {:.1} tok/s",
+        count as f64 / wall.as_secs_f64().max(1e-9),
+        ttft.quantile(0.50).as_secs_f64() * 1e3,
+        tokens as f64 / wall.as_secs_f64().max(1e-9),
+    );
+    Value::obj(vec![
+        ("mode", Value::str(mode)),
+        ("requests", Value::num(count as f64)),
+        (
+            "samples_per_sec",
+            Value::num(count as f64 / wall.as_secs_f64().max(1e-9)),
+        ),
+        (
+            "tokens_per_sec",
+            Value::num(tokens as f64 / wall.as_secs_f64().max(1e-9)),
+        ),
+        (
+            "ttft_p50_ms",
+            Value::num(ttft.quantile(0.50).as_secs_f64() * 1e3),
+        ),
+        (
+            "ttft_p99_ms",
+            Value::num(ttft.quantile(0.99).as_secs_f64() * 1e3),
+        ),
+        (
+            "p50_latency_ms",
+            Value::num(latency.quantile(0.50).as_secs_f64() * 1e3),
+        ),
+        (
+            "p99_latency_ms",
+            Value::num(latency.quantile(0.99).as_secs_f64() * 1e3),
+        ),
+        (
+            "steps_per_retire",
+            Value::num(steps as f64 / (count as f64).max(1.0)),
+        ),
+        ("generated_tokens", Value::num(tokens as f64)),
+        ("wall_secs", Value::num(wall.as_secs_f64())),
     ])
 }
 
@@ -136,25 +242,32 @@ fn main() {
         std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
     );
 
+    // --- continuous vs static batching through the embedded Server -----
+    let serving = vec![
+        run_serving(true, n, max_new),
+        run_serving(false, n, max_new),
+    ];
+
     let created = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let doc = Value::obj(vec![
-        ("schema", Value::num(1.0)),
+        ("schema", Value::num(2.0)),
         ("created_unix", Value::num(created as f64)),
         ("preset", Value::str("synthetic-reference-default")),
         ("requests", Value::num(n as f64)),
         ("max_new_tokens", Value::num(max_new as f64)),
         ("ladder", Value::Array(ladder)),
         ("workers_sweep", Value::Array(sweep)),
+        ("serving", Value::Array(serving)),
     ]);
     std::fs::write(&out, doc.to_json()).expect("write snapshot");
 
     // --- self-validation (this is the CI smoke assertion) --------------
     let text = std::fs::read_to_string(&out).expect("re-read snapshot");
     let v = json::parse(&text).expect("snapshot must be valid JSON");
-    assert_eq!(v.get("schema").as_usize(), Some(1), "schema");
+    assert_eq!(v.get("schema").as_usize(), Some(2), "schema");
     let ladder = v.get("ladder").as_array().expect("ladder array");
     assert_eq!(ladder.len(), 4, "4 ladder rows");
     let sweep = v.get("workers_sweep").as_array().expect("sweep array");
@@ -162,6 +275,7 @@ fn main() {
     for row in ladder.iter().chain(sweep) {
         for key in
             ["samples_per_sec", "p50_latency_ms", "p99_latency_ms",
+             "ttft_p50_ms", "steps_per_retire", "tokens_per_sec",
              "generated_tokens", "workers"]
         {
             assert!(
@@ -179,5 +293,26 @@ fn main() {
             "bench must actually generate tokens"
         );
     }
+    let serving = v.get("serving").as_array().expect("serving array");
+    assert_eq!(serving.len(), 2, "continuous + static modes");
+    for row in serving {
+        for key in
+            ["samples_per_sec", "tokens_per_sec", "ttft_p50_ms",
+             "ttft_p99_ms", "p50_latency_ms", "steps_per_retire",
+             "generated_tokens"]
+        {
+            assert!(
+                row.get(key).as_f64().is_some(),
+                "serving row missing key {key}: {}",
+                row.to_json()
+            );
+        }
+        assert!(row.get("samples_per_sec").as_f64().unwrap() > 0.0);
+    }
+    let modes: Vec<&str> = serving
+        .iter()
+        .filter_map(|r| r.get("mode").as_str())
+        .collect();
+    assert_eq!(modes, ["continuous", "static"], "both modes recorded");
     println!("bench snapshot OK: {out}");
 }

@@ -4,8 +4,6 @@
 //!
 //! Env: BENCH_N (default 48).
 
-use std::time::Instant;
-
 use aigc_infer::config::{BatchPolicy, EngineKind, ServingConfig};
 use aigc_infer::coordinator::{DynamicBatcher, PreparedRequest};
 use aigc_infer::data::{TraceConfig, TraceGenerator};
@@ -28,13 +26,7 @@ fn main() {
         .into_iter()
         .map(|r| {
             let ids = tok.encode(&r.text, 8000);
-            PreparedRequest {
-                id: r.id,
-                prompt: ids,
-                max_new_tokens: r.max_new_tokens,
-                reference_summary: None,
-                enqueued: Instant::now(),
-            }
+            PreparedRequest::new(r.id, ids, r.max_new_tokens)
         })
         .collect();
 

@@ -2,8 +2,6 @@
 //! Faster-Tokenizer comparison (§2.3): trie fast path vs textbook
 //! WordPiece, plus batcher / JSON / RNG / histogram hot paths.
 
-use std::time::Instant;
-
 use aigc_infer::config::BatchPolicy;
 use aigc_infer::coordinator::{DynamicBatcher, PreparedRequest};
 use aigc_infer::data::{CorpusConfig, Generator, ZipfSampler};
@@ -63,13 +61,11 @@ fn main() {
     samples.push(bench::time("batcher: push+pop 1000 reqs", 1, 10, || {
         let mut b = DynamicBatcher::new(policy.clone(), vec![32, 64, 128]);
         for i in 0..1000u64 {
-            b.push(PreparedRequest {
-                id: i,
-                prompt: vec![5; (i % 100) as usize + 1],
-                max_new_tokens: 12,
-                reference_summary: None,
-                enqueued: Instant::now(),
-            });
+            b.push(PreparedRequest::new(
+                i,
+                vec![5; (i % 100) as usize + 1],
+                12,
+            ));
             while b.pop(false).is_some() {}
         }
         while b.pop(true).is_some() {}

@@ -80,12 +80,12 @@ fn main() {
         }
         println!(
             "workers={workers}  wall {:>7.3}s  speed {:>7.2}/s  \
-             ({:.2}x vs 1 worker)  inf busy {:>6.3}s  batch {}",
+             ({:.2}x vs 1 worker)  inf busy {:>6.3}s  session {}",
             s.wall.as_secs_f64(),
             s.samples_per_sec,
             s.samples_per_sec / base.max(1e-9),
             s.stages.inference.as_secs_f64(),
-            s.batch_latency.summary(),
+            s.session_latency.summary(),
         );
     }
 }

@@ -161,6 +161,17 @@ pub struct ServingConfig {
     /// splitting the rows of ONE batch.  0 = auto (machine cores ÷
     /// `workers`); results are bitwise-identical for any value.
     pub row_threads: usize,
+    /// Continuous batching: workers retire finished rows at EOS and
+    /// admit queued requests into freed slots *between decode steps*
+    /// (the EnergonAI-style step scheduler).  false = static batching:
+    /// a batch runs start-to-finish before the next one is picked up
+    /// (the pre-redesign behavior; kept for A/B benching).
+    pub continuous: bool,
+    /// Emit per-step `PoolEvent::Tokens` events (live token streaming).
+    /// The offline pipelined executor turns this off — nothing consumes
+    /// the stream there, so the per-step sends would only tax the
+    /// measured hot path.  TTFT is recorded either way.
+    pub stream_tokens: bool,
     /// Bounded channel capacity between pipeline stages (backpressure).
     pub stage_queue: usize,
     /// Compile every artifact of the engine's variant at startup (clean
@@ -181,6 +192,8 @@ impl Default for ServingConfig {
             pipelined: true,
             workers: 1,
             row_threads: 0,
+            continuous: true,
+            stream_tokens: true,
             stage_queue: 4,
             precompile: false,
         }
@@ -261,6 +274,12 @@ impl ServingConfig {
         if let Some(n) = v.get("row_threads").as_usize() {
             cfg.row_threads = n;
         }
+        if let Some(x) = v.get("continuous").as_bool() {
+            cfg.continuous = x;
+        }
+        if let Some(x) = v.get("stream_tokens").as_bool() {
+            cfg.stream_tokens = x;
+        }
         if let Some(n) = v.get("stage_queue").as_usize() {
             cfg.stage_queue = n;
         }
@@ -314,6 +333,8 @@ impl ServingConfig {
             ("pipelined", Value::Bool(self.pipelined)),
             ("workers", Value::num(self.workers as f64)),
             ("row_threads", Value::num(self.row_threads as f64)),
+            ("continuous", Value::Bool(self.continuous)),
+            ("stream_tokens", Value::Bool(self.stream_tokens)),
             ("stage_queue", Value::num(self.stage_queue as f64)),
             ("precompile", Value::Bool(self.precompile)),
         ])
@@ -399,6 +420,20 @@ mod tests {
         assert!(c.pipelined);
         assert_eq!(c.workers, 1);
         assert_eq!(c.row_threads, 0);
+        assert!(c.continuous, "continuous batching is the default");
+    }
+
+    #[test]
+    fn continuous_roundtrips() {
+        let mut c = ServingConfig::default();
+        c.continuous = false;
+        c.stream_tokens = false;
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert!(!back.continuous);
+        assert!(!back.stream_tokens);
+        let c = ServingConfig::from_json(r#"{"continuous": false}"#).unwrap();
+        assert!(!c.continuous);
+        assert!(c.stream_tokens, "streaming stays on by default");
     }
 
     #[test]

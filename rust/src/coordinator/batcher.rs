@@ -6,6 +6,11 @@
 //! - **allocation of data inference order** (§1): requests are grouped by
 //!   the sequence bucket they need, so short prompts don't pay the
 //!   padding of long ones (measured by the A2 bench).
+//!
+//! Batches leaving here are only the ARRIVAL grouping: the continuous
+//! batcher ([`crate::coordinator::dispatch`]) is free to merge them
+//! into already-running decode sessions between steps — see its module
+//! docs for the admission policy.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -177,16 +182,9 @@ impl DynamicBatcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Instant;
 
     fn req(id: u64, prompt_len: usize) -> PreparedRequest {
-        PreparedRequest {
-            id,
-            prompt: vec![5; prompt_len],
-            max_new_tokens: 4,
-            reference_summary: None,
-            enqueued: Instant::now(),
-        }
+        PreparedRequest::new(id, vec![5; prompt_len], 4)
     }
 
     fn policy(max_batch: usize, bucketing: bool) -> BatchPolicy {

@@ -1,66 +1,148 @@
-//! The multi-worker inference pool — the paper's §3.3 "multi-process
-//! parallel processing" scaled past one model process.
+//! The continuous-batching inference pool — the paper's §3.3
+//! "multi-process parallel processing" rebuilt as an EnergonAI-style
+//! **step-level scheduler**.
 //!
 //! [`InferencePool::start`] spawns `cfg.workers` OS threads.  Each
 //! worker constructs **its own backend + engine** inside its thread
-//! (per-worker weights and stats — the EnergonAI executor-pool shape)
-//! plus a sampler seeded from `derive_seed(seed, worker)`, then
-//! competes for batches on a shared queue.  Results — or typed errors —
-//! flow to a single output channel, so downstream stages never observe
-//! a silent drop: a failing batch yields `PoolOutput { generated:
-//! Err(..) }` for its requests instead of a hung reply channel.
+//! plus a sampler seeded from `derive_seed(seed, worker)`, then runs a
+//! step loop over [`crate::engine::DecodeSession`]s:
 //!
-//! With `workers == 1` the pool degenerates to the pre-pool pipeline:
-//! one engine consumes batches in arrival order, producing
-//! token-identical output (greedy decoding is deterministic and
-//! per-request results are independent of batch placement).  Pooled
-//! GREEDY runs stay deterministic for any worker count; pooled top-k is
-//! reproducible per worker stream but batch→worker assignment is a
-//! queue race, so run-to-run token sets may differ.
+//! 1. seed a session from ONE queued [`Batch`] (the dynamic batcher's
+//!    bucket grouping still shapes arrivals);
+//! 2. per iteration: check per-request **deadline/cancellation** at the
+//!    step boundary, run one decode step, stream the emitted tokens as
+//!    [`PoolEvent::Tokens`], retire finished rows at EOS
+//!    ([`PoolEvent::Finished`]), then **admit** waiting requests into
+//!    the freed slots and keep stepping — no request waits for the
+//!    slowest member of a static batch.
+//!
+//! ## Admission policy
+//!
+//! Between steps (and only there — admission mid-step would tear the
+//! KV state) a worker pulls queued requests while ALL of these hold:
+//!
+//! - **batch cap**: live rows + accepted candidates < `batch.max_batch`;
+//! - **token cap**: summed `need_seq` (prompt + generation budget) of
+//!   live rows + candidates stays within `batch.max_batch_tokens`
+//!   (when nonzero);
+//! - **bucket feasibility** ([`crate::engine::DecodeSession::can_admit`]):
+//!   some compiled (batch, seq) bucket covers the grown batch — the FT
+//!   engines re-prefill at the bigger bucket, the baseline regrows its
+//!   token matrix.
+//!
+//! Candidates are considered strictly in arrival (FIFO) order; the
+//! first inadmissible candidate stops the round, so admission never
+//! reorders requests past each other (no starvation).  A candidate that
+//! could not be admitted stays in the worker's small carry buffer and
+//! seeds that worker's next session.  Greedy token streams are
+//! unaffected by admission timing — rows are independent and the
+//! re-prefill reproduces decode logits exactly (property-tested).
+//! `cfg.continuous = false` disables between-step admission (static
+//! batching, the pre-redesign behavior) for A/B benches.
+//!
+//! Every request yields EXACTLY ONE terminal event —
+//! [`PoolEvent::Finished`] or [`PoolEvent::Failed`] (engine errors,
+//! cancellation, deadline expiry) — so downstream reply channels never
+//! observe a silent drop.  With `workers == 1` and greedy sampling, pooled output
+//! tokens are identical to the sequential executor's.
 //!
 //! Shutdown: the pool input disconnects when every
 //! [`InferencePool::input`] clone AND the pool's own handle are
 //! dropped; workers then drain, emit their [`WorkerReport`], and exit.
-//! [`InferencePool::join`] merges the per-worker `Histogram` /
-//! `Throughput` / `RuntimeStats` into one [`PoolReport`].
+//! [`InferencePool::join`] merges the per-worker reports into one
+//! [`PoolReport`].
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::batcher::Batch;
-use super::run_batch;
+use super::engine_input;
+use super::request::PreparedRequest;
 use crate::config::ServingConfig;
-use crate::engine::{build as build_engine, sampler_for_worker};
+use crate::engine::{
+    build as build_engine, sampler_for_worker, DecodeSession, Engine,
+    FinishReason,
+};
 use crate::metrics::{Histogram, Throughput};
 use crate::runtime::{backend_for, Backend, RuntimeStats};
 use crate::{Error, Result};
 
-/// One processed batch leaving the pool.
-pub struct PoolOutput {
-    pub batch: Batch,
-    /// Generated ids per request (batch order), or the batch's failure.
-    pub generated: std::result::Result<Vec<Vec<u32>>, Error>,
-    /// Which worker ran it (0-based).
-    pub worker: usize,
-    /// Inference wall time for this batch on that worker.
-    pub elapsed: Duration,
+/// Per-request lifecycle events leaving the pool.
+pub enum PoolEvent {
+    /// Tokens emitted for one request by one decode step (streaming).
+    Tokens { id: u64, tokens: Vec<u32>, worker: usize },
+    /// Terminal success: the request retired at EOS / budget.
+    Finished {
+        request: PreparedRequest,
+        /// Generated ids (EOS-trimmed) — the full summary.
+        generated: Vec<u32>,
+        /// Session iterations spent while the request was live.
+        steps: usize,
+        /// Enqueue -> first streamed token.
+        ttft: Option<Duration>,
+        worker: usize,
+    },
+    /// Terminal failure: engine error, cancellation, or deadline.
+    Failed {
+        request: PreparedRequest,
+        message: String,
+        /// Structured code: `engine_error` | `bad_request` |
+        /// `cancelled` | `deadline`.
+        code: &'static str,
+        worker: usize,
+    },
 }
 
 /// What one worker did over its lifetime.
 pub struct WorkerReport {
     pub worker: usize,
-    /// Busy wall time inside `run_batch`.
+    /// Busy wall time inside decode steps + prefills.
     pub busy: Duration,
-    pub batches: u64,
-    /// Failed batches (their requests got error replies, not drops).
-    pub failed_batches: u64,
-    /// Per-batch inference latency on this worker.
-    pub batch_latency: Histogram,
+    /// Decode sessions run.
+    pub sessions: u64,
+    /// Decode-session iterations run.
+    pub steps: u64,
+    /// Requests admitted (total, including session seeds).
+    pub admitted: u64,
+    /// Requests admitted into an ALREADY-RUNNING session — the
+    /// continuous-batching event the step-trace tests assert on.
+    pub admitted_mid_session: u64,
+    /// Requests that ended in a `Failed` event.
+    pub failed_requests: u64,
+    /// Requests retired successfully.
+    pub retired: u64,
+    /// Σ steps over retired requests (steps-per-retire numerator).
+    pub retired_steps: u64,
+    /// Wall time of each session (seed -> last row retired).
+    pub session_latency: Histogram,
+    /// Enqueue -> first token, per request retired by this worker.
+    pub ttft: Histogram,
     /// Requests + generated tokens completed by this worker.
     pub throughput: Throughput,
     /// This worker's backend counters, with startup compilation that
     /// happened before the ready gate subtracted out.
     pub runtime_stats: RuntimeStats,
+}
+
+impl WorkerReport {
+    fn new(worker: usize) -> Self {
+        Self {
+            worker,
+            busy: Duration::ZERO,
+            sessions: 0,
+            steps: 0,
+            admitted: 0,
+            admitted_mid_session: 0,
+            failed_requests: 0,
+            retired: 0,
+            retired_steps: 0,
+            session_latency: Histogram::new(),
+            ttft: Histogram::new(),
+            throughput: Throughput::new(),
+            runtime_stats: RuntimeStats::default(),
+        }
+    }
 }
 
 /// Per-worker reports plus their merged view.
@@ -75,13 +157,38 @@ impl PoolReport {
         self.workers.iter().map(|w| w.busy).sum()
     }
 
-    /// Per-batch inference latency merged across workers.
-    pub fn batch_latency(&self) -> Histogram {
+    /// Per-session inference latency merged across workers.
+    pub fn session_latency(&self) -> Histogram {
         let mut h = Histogram::new();
         for w in &self.workers {
-            h.merge(&w.batch_latency);
+            h.merge(&w.session_latency);
         }
         h
+    }
+
+    /// Time-to-first-token merged across workers.
+    pub fn ttft(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for w in &self.workers {
+            h.merge(&w.ttft);
+        }
+        h
+    }
+
+    /// Mean decode-session iterations per retired request.
+    pub fn steps_per_retire(&self) -> f64 {
+        let steps: u64 = self.workers.iter().map(|w| w.retired_steps).sum();
+        let retired: u64 = self.workers.iter().map(|w| w.retired).sum();
+        if retired == 0 {
+            0.0
+        } else {
+            steps as f64 / retired as f64
+        }
+    }
+
+    /// Requests admitted into already-running sessions, total.
+    pub fn admitted_mid_session(&self) -> u64 {
+        self.workers.iter().map(|w| w.admitted_mid_session).sum()
     }
 
     /// Items/tokens completed, merged across workers.
@@ -103,8 +210,8 @@ impl PoolReport {
     }
 }
 
-/// A pool of inference workers consuming [`Batch`]es from a shared
-/// queue (see module docs).
+/// A pool of step-scheduled inference workers consuming [`Batch`]es
+/// from a shared queue (see module docs).
 pub struct InferencePool {
     input: mpsc::SyncSender<Batch>,
     handles: Vec<std::thread::JoinHandle<WorkerReport>>,
@@ -114,10 +221,10 @@ impl InferencePool {
     /// Spawn `cfg.workers` workers, each standing up its own backend +
     /// engine, and block until every worker is ready (startup
     /// compilation done) or return the first startup error.  `out`
-    /// receives one [`PoolOutput`] per consumed batch.
+    /// receives the per-request [`PoolEvent`] stream.
     pub fn start(
         cfg: &ServingConfig,
-        out: mpsc::SyncSender<PoolOutput>,
+        out: mpsc::SyncSender<PoolEvent>,
     ) -> Result<Self> {
         cfg.validate()?;
         let n = cfg.workers;
@@ -196,22 +303,90 @@ impl InferencePool {
     }
 }
 
+/// Worker-side bookkeeping for one live request.
+struct RowMeta {
+    req: PreparedRequest,
+    first_token: Option<Instant>,
+}
+
+/// Emit a terminal `Failed` event; false when downstream disconnected.
+fn send_failed(
+    out: &mpsc::SyncSender<PoolEvent>,
+    report: &mut WorkerReport,
+    worker: usize,
+    request: PreparedRequest,
+    message: String,
+    code: &'static str,
+) -> bool {
+    report.failed_requests += 1;
+    out.send(PoolEvent::Failed { request, message, code, worker }).is_ok()
+}
+
+/// Drain retired rows out of the session into terminal events; false
+/// when downstream disconnected.
+fn drain_finished(
+    session: &mut dyn DecodeSession,
+    meta: &mut HashMap<u64, RowMeta>,
+    out: &mpsc::SyncSender<PoolEvent>,
+    report: &mut WorkerReport,
+    worker: usize,
+) -> bool {
+    for fin in session.take_finished() {
+        let id = fin.output.request_id;
+        let Some(m) = meta.remove(&id) else { continue };
+        let ok = match fin.reason {
+            FinishReason::Eos | FinishReason::Length => {
+                let ttft =
+                    m.first_token.map(|t| t.duration_since(m.req.enqueued));
+                if let Some(d) = ttft {
+                    report.ttft.record(d);
+                }
+                report.retired += 1;
+                report.retired_steps += fin.output.steps as u64;
+                report
+                    .throughput
+                    .record(1, fin.output.generated.len() as u64);
+                out.send(PoolEvent::Finished {
+                    request: m.req,
+                    generated: fin.output.generated,
+                    steps: fin.output.steps,
+                    ttft,
+                    worker,
+                })
+                .is_ok()
+            }
+            FinishReason::Cancelled => send_failed(
+                out,
+                report,
+                worker,
+                m.req,
+                "request cancelled by client".into(),
+                "cancelled",
+            ),
+            FinishReason::DeadlineExpired => send_failed(
+                out,
+                report,
+                worker,
+                m.req,
+                "request deadline expired".into(),
+                "deadline",
+            ),
+        };
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
 fn worker_main(
     worker: usize,
     cfg: ServingConfig,
     rx: Arc<Mutex<mpsc::Receiver<Batch>>>,
-    out: mpsc::SyncSender<PoolOutput>,
+    out: mpsc::SyncSender<PoolEvent>,
     ready_tx: mpsc::Sender<Result<()>>,
 ) -> WorkerReport {
-    let mut report = WorkerReport {
-        worker,
-        busy: Duration::ZERO,
-        batches: 0,
-        failed_batches: 0,
-        batch_latency: Histogram::new(),
-        throughput: Throughput::new(),
-        runtime_stats: RuntimeStats::default(),
-    };
+    let mut report = WorkerReport::new(worker);
 
     // Per-worker backend + engine, constructed on this thread.
     let setup = backend_for(&cfg).and_then(|backend| {
@@ -233,41 +408,295 @@ fn worker_main(
         }
     }
     let _ = ready_tx.send(Ok(()));
+    // release the gate sender NOW: if a sibling worker panics during
+    // startup, the gate must disconnect instead of deadlocking start()
+    drop(ready_tx);
     // compilation before the ready gate is startup cost, not steady state
     let compile_before = backend.stats().compile_secs;
 
     let mut sampler = sampler_for_worker(cfg.sampling, worker as u64);
-    loop {
-        // hold the queue lock only for the pop, never during inference
-        let batch = match rx.lock().unwrap().recv() {
-            Ok(b) => b,
-            Err(_) => break, // all senders gone: drain complete
-        };
-        let t = Instant::now();
-        let result = run_batch(engine.as_ref(), &mut sampler, &batch);
-        let elapsed = t.elapsed();
-        report.busy += elapsed;
-        report.batches += 1;
-        report.batch_latency.record(elapsed);
-        let generated = match result {
-            Ok(outs) => {
-                let generated: Vec<Vec<u32>> =
-                    outs.into_iter().map(|(_, g)| g).collect();
-                let tokens: u64 =
-                    generated.iter().map(|g| g.len() as u64).sum();
-                report.throughput.record(batch.len() as u64, tokens);
-                Ok(generated)
+    let policy = cfg.batch.clone();
+    // Carry buffer: arrivals pulled off the queue but not yet admitted
+    // (bounded by roughly one batch — we only pull when slots are free).
+    let mut pending: VecDeque<PreparedRequest> = VecDeque::new();
+
+    'pool: loop {
+        // ---- seed the next session from ONE queued batch -------------
+        // The queue mutex is NEVER held while blocking: an idle worker
+        // parked inside a blocking recv would stall every other
+        // worker's between-step admission on the lock.  Poll + sleep
+        // instead (1ms idle granularity, lock held only for the pop).
+        if pending.is_empty() {
+            let next = { rx.lock().unwrap().try_recv() };
+            match next {
+                Ok(b) => pending.extend(b.requests),
+                Err(mpsc::TryRecvError::Empty) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+                Err(mpsc::TryRecvError::Disconnected) => break,
             }
-            Err(e) => {
-                report.failed_batches += 1;
-                Err(e)
-            }
-        };
-        if out.send(PoolOutput { batch, generated, worker, elapsed }).is_err()
-        {
-            break; // downstream gone: stop consuming
         }
+        let mut seed: Vec<PreparedRequest> = Vec::new();
+        let mut seed_tokens = 0usize;
+        let mut seed_prompt = 0usize; // longest prompt so far
+        let mut seed_new = 0usize; // largest generation budget so far
+        while let Some(r) = pending.front() {
+            if !seed.is_empty() {
+                if seed.len() >= policy.max_batch {
+                    break;
+                }
+                if policy.max_batch_tokens > 0
+                    && seed_tokens + r.need_seq() > policy.max_batch_tokens
+                {
+                    break;
+                }
+                // joint bucket feasibility: the session's conservative
+                // need is max(prompt) + max(max_new); stop before one
+                // more member pushes it past every compiled bucket —
+                // mixed carry-over requests must not fail each other
+                if seed_prompt.max(r.prompt.len())
+                    + seed_new.max(r.max_new_tokens)
+                    > engine.max_seq()
+                {
+                    break;
+                }
+            }
+            let r = pending.pop_front().unwrap();
+            // worker bookkeeping is keyed by request id; a duplicate
+            // would shadow its twin's terminal event, so reject it
+            // (server-side ids are unique — this guards direct users)
+            if seed.iter().any(|s| s.id == r.id) {
+                if !send_failed(
+                    &out,
+                    &mut report,
+                    worker,
+                    r,
+                    "duplicate request id in flight".into(),
+                    "bad_request",
+                ) {
+                    break 'pool;
+                }
+                continue;
+            }
+            seed_tokens += r.need_seq();
+            seed_prompt = seed_prompt.max(r.prompt.len());
+            seed_new = seed_new.max(r.max_new_tokens);
+            seed.push(r);
+        }
+        let inputs: Vec<_> = seed.iter().map(engine_input).collect();
+        let t_session = Instant::now();
+        let mut session = match engine.start(&inputs) {
+            Ok(s) => s,
+            Err(e) => {
+                let (msg, code) = (e.to_string(), e.code());
+                for r in seed {
+                    if !send_failed(
+                        &out,
+                        &mut report,
+                        worker,
+                        r,
+                        msg.clone(),
+                        code,
+                    ) {
+                        break 'pool;
+                    }
+                }
+                continue;
+            }
+        };
+        report.busy += t_session.elapsed(); // prefill cost
+        report.sessions += 1;
+        report.admitted += seed.len() as u64;
+        let mut meta: HashMap<u64, RowMeta> = seed
+            .into_iter()
+            .map(|r| (r.id, RowMeta { req: r, first_token: None }))
+            .collect();
+
+        // ---- the step loop -------------------------------------------
+        loop {
+            // deadline / cancellation checks at the step boundary
+            let now = Instant::now();
+            for (id, m) in meta.iter() {
+                if m.req.expired(now) {
+                    session.retire(*id, FinishReason::DeadlineExpired);
+                } else if m.req.cancelled() {
+                    session.retire(*id, FinishReason::Cancelled);
+                }
+            }
+            if !drain_finished(
+                session.as_mut(),
+                &mut meta,
+                &out,
+                &mut report,
+                worker,
+            ) {
+                break 'pool;
+            }
+            if session.active() == 0 {
+                break;
+            }
+
+            // one decode iteration
+            let t = Instant::now();
+            let events = match session.step(&mut sampler) {
+                Ok(ev) => ev,
+                Err(e) => {
+                    // session is dead: every live request gets a typed
+                    // terminal error, never a silent drop
+                    let (msg, code) = (e.to_string(), e.code());
+                    for (_, m) in meta.drain() {
+                        if !send_failed(
+                            &out,
+                            &mut report,
+                            worker,
+                            m.req,
+                            msg.clone(),
+                            code,
+                        ) {
+                            break 'pool;
+                        }
+                    }
+                    break;
+                }
+            };
+            report.busy += t.elapsed();
+            report.steps += 1;
+            let now = Instant::now();
+            for ev in events {
+                if ev.tokens.is_empty() {
+                    continue;
+                }
+                if let Some(m) = meta.get_mut(&ev.request_id) {
+                    if m.first_token.is_none() {
+                        m.first_token = Some(now);
+                    }
+                }
+                // offline executors disable the live stream — nothing
+                // consumes it there (TTFT was stamped above regardless)
+                if !cfg.stream_tokens {
+                    continue;
+                }
+                if out
+                    .send(PoolEvent::Tokens {
+                        id: ev.request_id,
+                        tokens: ev.tokens,
+                        worker,
+                    })
+                    .is_err()
+                {
+                    break 'pool;
+                }
+            }
+            if !drain_finished(
+                session.as_mut(),
+                &mut meta,
+                &out,
+                &mut report,
+                worker,
+            ) {
+                break 'pool;
+            }
+            if session.active() == 0 {
+                break;
+            }
+
+            // ---- admission between steps (continuous batching) -------
+            if !cfg.continuous {
+                continue;
+            }
+            let mut accepted: Vec<PreparedRequest> = Vec::new();
+            let mut accepted_inputs = Vec::new();
+            let mut live_tokens: usize =
+                meta.values().map(|m| m.req.need_seq()).sum();
+            loop {
+                if session.active() + accepted.len() >= policy.max_batch {
+                    break;
+                }
+                if pending.is_empty() {
+                    // pull fresh arrivals only while slots are free
+                    let next = { rx.lock().unwrap().try_recv() };
+                    match next {
+                        Ok(b) => pending.extend(b.requests),
+                        Err(_) => break,
+                    }
+                    continue;
+                }
+                let cand = pending.front().unwrap();
+                if policy.max_batch_tokens > 0
+                    && live_tokens + cand.need_seq() > policy.max_batch_tokens
+                {
+                    break; // FIFO: an inadmissible head stops the round
+                }
+                // duplicate of an in-flight id: reject it (see the
+                // seed loop) rather than shadow the live request
+                if meta.contains_key(&cand.id)
+                    || accepted.iter().any(|a| a.id == cand.id)
+                {
+                    let dup = pending.pop_front().unwrap();
+                    if !send_failed(
+                        &out,
+                        &mut report,
+                        worker,
+                        dup,
+                        "duplicate request id in flight".into(),
+                        "bad_request",
+                    ) {
+                        break 'pool;
+                    }
+                    continue;
+                }
+                accepted_inputs.push(engine_input(cand));
+                if !session.can_admit(&accepted_inputs) {
+                    accepted_inputs.pop();
+                    break;
+                }
+                let cand = pending.pop_front().unwrap();
+                live_tokens += cand.need_seq();
+                accepted.push(cand);
+            }
+            if accepted.is_empty() {
+                continue;
+            }
+            let t = Instant::now();
+            match session.admit(&accepted_inputs) {
+                Ok(()) => {
+                    report.busy += t.elapsed(); // re-prefill cost
+                    report.admitted += accepted.len() as u64;
+                    report.admitted_mid_session += accepted.len() as u64;
+                    for r in accepted {
+                        meta.insert(
+                            r.id,
+                            RowMeta { req: r, first_token: None },
+                        );
+                    }
+                }
+                Err(e) => {
+                    // admission failure kills the session (contract):
+                    // fail the live rows AND the candidates
+                    let (msg, code) = (e.to_string(), e.code());
+                    for r in accepted
+                        .into_iter()
+                        .chain(meta.drain().map(|(_, m)| m.req))
+                    {
+                        if !send_failed(
+                            &out,
+                            &mut report,
+                            worker,
+                            r,
+                            msg.clone(),
+                            code,
+                        ) {
+                            break 'pool;
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        report.session_latency.record(t_session.elapsed());
     }
+
     let mut stats = backend.stats();
     stats.compile_secs -= compile_before;
     report.runtime_stats = stats;
@@ -288,58 +717,120 @@ mod tests {
         cfg
     }
 
+    fn request(id: u64, max_new: usize) -> PreparedRequest {
+        PreparedRequest::new(
+            id,
+            vec![
+                special::BOS,
+                special::FIRST_WORD + (id as u32 % 40),
+                special::SEP,
+            ],
+            max_new,
+        )
+    }
+
     fn batch_of(ids: &[u64]) -> Batch {
         Batch {
-            requests: ids
-                .iter()
-                .map(|&id| PreparedRequest {
-                    id,
-                    prompt: vec![
-                        special::BOS,
-                        special::FIRST_WORD + (id as u32 % 40),
-                        special::SEP,
-                    ],
-                    max_new_tokens: 4,
-                    reference_summary: None,
-                    enqueued: std::time::Instant::now(),
-                })
-                .collect(),
+            requests: ids.iter().map(|&id| request(id, 4)).collect(),
             seq_bucket: 32,
         }
     }
 
+    /// Collect the event stream on a side thread so workers never block
+    /// on a full channel while the test is joining the pool.
+    fn collector(
+        rx: mpsc::Receiver<PoolEvent>,
+    ) -> std::thread::JoinHandle<Vec<PoolEvent>> {
+        std::thread::spawn(move || rx.iter().collect())
+    }
+
+    fn finished_ids(events: &[PoolEvent]) -> Vec<u64> {
+        let mut ids: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                PoolEvent::Finished { request, .. } => Some(request.id),
+                _ => None,
+            })
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
     #[test]
-    fn pool_processes_batches_and_reports() {
-        let (out_tx, out_rx) = mpsc::sync_channel(16);
+    fn pool_processes_requests_and_reports() {
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
         let pool = InferencePool::start(&small_cfg(2), out_tx).unwrap();
         assert_eq!(pool.workers(), 2);
         let input = pool.input();
+        let events = collector(out_rx);
         for i in 0..4u64 {
             input.send(batch_of(&[i * 2, i * 2 + 1])).unwrap();
         }
         drop(input);
         let report = pool.join();
-        let outs: Vec<PoolOutput> = out_rx.iter().collect();
-        assert_eq!(outs.len(), 4);
-        for o in &outs {
-            let gen = o.generated.as_ref().expect("batch should succeed");
-            assert_eq!(gen.len(), o.batch.len());
+        let events = events.join().unwrap();
+        assert_eq!(finished_ids(&events), (0..8).collect::<Vec<u64>>());
+        // ttft is recorded for exactly the requests that emitted tokens
+        let with_tokens = events
+            .iter()
+            .filter(|e| {
+                matches!(e, PoolEvent::Finished { generated, .. }
+                    if !generated.is_empty())
+            })
+            .count() as u64;
+        for ev in &events {
+            if let PoolEvent::Finished { steps, .. } = ev {
+                assert!(*steps > 0);
+            }
         }
         assert_eq!(report.workers.len(), 2);
-        assert_eq!(
-            report.workers.iter().map(|w| w.batches).sum::<u64>(),
-            4
-        );
         assert_eq!(report.throughput().items(), 8);
-        assert_eq!(report.batch_latency().count(), 4);
+        assert!(report.session_latency().count() > 0);
+        assert!(report.steps_per_retire() >= 1.0);
+        assert_eq!(report.ttft().count(), with_tokens);
         assert!(report.runtime_stats().executions > 0);
     }
 
     #[test]
-    fn oversized_batch_yields_typed_error_not_silence() {
-        let (out_tx, out_rx) = mpsc::sync_channel(4);
+    fn token_events_stream_before_terminal() {
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
         let pool = InferencePool::start(&small_cfg(1), out_tx).unwrap();
         let input = pool.input();
+        let events = collector(out_rx);
+        input.send(batch_of(&[7])).unwrap();
+        drop(input);
+        pool.join();
+        let events = events.join().unwrap();
+        let mut streamed: Vec<u32> = Vec::new();
+        let mut terminal: Option<Vec<u32>> = None;
+        for ev in events {
+            match ev {
+                PoolEvent::Tokens { id, tokens, .. } => {
+                    assert_eq!(id, 7);
+                    assert!(
+                        terminal.is_none(),
+                        "tokens after the terminal event"
+                    );
+                    streamed.extend(tokens);
+                }
+                PoolEvent::Finished { generated, .. } => {
+                    terminal = Some(generated)
+                }
+                PoolEvent::Failed { message, .. } => {
+                    panic!("unexpected failure: {message}")
+                }
+            }
+        }
+        let generated = terminal.expect("no terminal event");
+        assert_eq!(streamed, generated, "stream must equal the summary");
+    }
+
+    #[test]
+    fn oversized_request_yields_typed_error_not_silence() {
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let pool = InferencePool::start(&small_cfg(1), out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
         // no compiled bucket fits 10_000 generated tokens -> NoBucket
         let mut bad = batch_of(&[7]);
         bad.requests[0].max_new_tokens = 10_000;
@@ -347,11 +838,122 @@ mod tests {
         input.send(batch_of(&[8])).unwrap(); // pool keeps serving after
         drop(input);
         let report = pool.join();
-        let outs: Vec<PoolOutput> = out_rx.iter().collect();
-        assert_eq!(outs.len(), 2);
-        assert!(outs.iter().any(|o| o.generated.is_err()));
-        assert!(outs.iter().any(|o| o.generated.is_ok()));
-        assert_eq!(report.workers[0].failed_batches, 1);
+        let events = events.join().unwrap();
+        let failed: Vec<_> = events
+            .iter()
+            .filter_map(|e| match e {
+                PoolEvent::Failed { request, message, code, .. } => {
+                    Some((request.id, message.clone(), *code))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].0, 7);
+        assert!(failed[0].1.contains("bucket"), "{}", failed[0].1);
+        assert_eq!(failed[0].2, "bad_request");
+        assert_eq!(finished_ids(&events), vec![8]);
+        assert_eq!(report.workers[0].failed_requests, 1);
+    }
+
+    #[test]
+    fn late_batch_is_admitted_into_running_session() {
+        // THE continuous-batching assertion: a request that arrives
+        // after a session started decoding joins it mid-flight.  The
+        // worker seeds a session from exactly one queued batch, so the
+        // second batch — already queued when the session starts — can
+        // only be served by between-step admission.
+        let mut cfg = small_cfg(1);
+        cfg.gen.max_new_tokens = 24; // long decode: many step boundaries
+        let (out_tx, out_rx) = mpsc::sync_channel(1024);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        let mut a = batch_of(&[1, 2]);
+        for r in &mut a.requests {
+            r.max_new_tokens = 24;
+        }
+        let mut b = batch_of(&[3]);
+        b.requests[0].max_new_tokens = 24;
+        input.send(a).unwrap();
+        input.send(b).unwrap();
+        drop(input);
+        let report = pool.join();
+        let events = events.join().unwrap();
+        assert_eq!(finished_ids(&events), vec![1, 2, 3]);
+        assert!(
+            report.admitted_mid_session() >= 1,
+            "late batch was not admitted into the running session"
+        );
+        assert_eq!(report.workers[0].sessions, 1, "one continuous session");
+    }
+
+    #[test]
+    fn static_mode_never_admits_mid_session() {
+        let mut cfg = small_cfg(1);
+        cfg.continuous = false;
+        let (out_tx, out_rx) = mpsc::sync_channel(1024);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        input.send(batch_of(&[1, 2])).unwrap();
+        input.send(batch_of(&[3])).unwrap();
+        drop(input);
+        let report = pool.join();
+        let events = events.join().unwrap();
+        assert_eq!(finished_ids(&events), vec![1, 2, 3]);
+        assert_eq!(report.admitted_mid_session(), 0);
+        assert_eq!(report.workers[0].sessions, 2, "static: one per batch");
+    }
+
+    #[test]
+    fn precancelled_request_fails_with_cancelled_code() {
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let pool = InferencePool::start(&small_cfg(1), out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        let mut b = batch_of(&[5, 6]);
+        let flag = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        b.requests[0].cancel = Some(flag);
+        input.send(b).unwrap();
+        drop(input);
+        pool.join();
+        let events = events.join().unwrap();
+        let mut saw_cancel = false;
+        for ev in &events {
+            match ev {
+                PoolEvent::Failed { request, code, .. } => {
+                    assert_eq!(request.id, 5);
+                    assert_eq!(*code, "cancelled");
+                    saw_cancel = true;
+                }
+                PoolEvent::Tokens { id, .. } => {
+                    assert_ne!(*id, 5, "cancelled request streamed tokens");
+                }
+                _ => {}
+            }
+        }
+        assert!(saw_cancel, "no cancelled terminal event");
+        assert_eq!(finished_ids(&events), vec![6], "6 still served");
+    }
+
+    #[test]
+    fn expired_deadline_fails_with_deadline_code() {
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let pool = InferencePool::start(&small_cfg(1), out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        let mut b = batch_of(&[9]);
+        b.requests[0].deadline = Some(Instant::now());
+        input.send(b).unwrap();
+        drop(input);
+        pool.join();
+        let events = events.join().unwrap();
+        assert!(events.iter().any(|e| matches!(
+            e,
+            PoolEvent::Failed { request, code: "deadline", .. }
+                if request.id == 9
+        )));
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -1,19 +1,30 @@
 //! L3 coordination: request lifecycle, dynamic length-bucketed batching,
-//! the multi-worker inference pool, and the generation driver — the
-//! serving-system contribution of the paper (§2.3 dynamic batch size,
-//! §1 "allocation of data inference order", §3.3 processing
-//! optimization, here scaled to N model workers).
+//! the continuous-batching inference pool, and the generation drivers —
+//! the serving-system contribution of the paper (§2.3 dynamic batch
+//! size, §1 "allocation of data inference order", §3.3 processing
+//! optimization, here scaled to N step-scheduled model workers).
 
 mod batcher;
 pub mod dispatch;
 pub mod request;
 
 pub use batcher::{Batch, DynamicBatcher};
-pub use dispatch::{InferencePool, PoolOutput, PoolReport, WorkerReport};
+pub use dispatch::{InferencePool, PoolEvent, PoolReport, WorkerReport};
 pub use request::{PreparedRequest, ServingResponse, StageTimes};
 
-use crate::engine::{Engine, EngineInput, Sampler};
-use crate::Result;
+use std::time::{Duration, Instant};
+
+use crate::engine::{DecodeSession, Engine, EngineInput, EngineOutput, Sampler};
+use crate::{Error, Result};
+
+/// Engine-side view of a prepared request.
+pub(crate) fn engine_input(r: &PreparedRequest) -> EngineInput {
+    EngineInput {
+        request_id: r.id,
+        prompt: r.prompt.clone(),
+        max_new_tokens: r.max_new_tokens,
+    }
+}
 
 /// Run one prepared batch through an engine and stamp outputs back onto
 /// the requests (the "model inference process" box of Fig 4).
@@ -22,15 +33,8 @@ pub fn run_batch(
     sampler: &mut Sampler,
     batch: &Batch,
 ) -> Result<Vec<(PreparedRequest, Vec<u32>)>> {
-    let inputs: Vec<EngineInput> = batch
-        .requests
-        .iter()
-        .map(|r| EngineInput {
-            request_id: r.id,
-            prompt: r.prompt.clone(),
-            max_new_tokens: r.max_new_tokens,
-        })
-        .collect();
+    let inputs: Vec<EngineInput> =
+        batch.requests.iter().map(engine_input).collect();
     let outputs = engine.generate(&inputs, sampler)?;
     Ok(batch
         .requests
@@ -38,4 +42,70 @@ pub fn run_batch(
         .cloned()
         .zip(outputs.into_iter().map(|o| o.generated))
         .collect())
+}
+
+/// One request's result from [`run_batch_stepped`].
+pub struct SteppedOutput {
+    pub request: PreparedRequest,
+    pub output: EngineOutput,
+    /// Enqueue -> first emitted token, observed at the step boundary.
+    pub ttft: Option<Duration>,
+}
+
+/// Like [`run_batch`], but drives the batch through the step API so
+/// per-request TTFT and steps-per-retire are observable — the driver
+/// the sequential executor uses.  Token-identical to [`run_batch`].
+pub fn run_batch_stepped(
+    engine: &dyn Engine,
+    sampler: &mut Sampler,
+    batch: &Batch,
+) -> Result<Vec<SteppedOutput>> {
+    if batch.requests.is_empty() {
+        return Ok(vec![]);
+    }
+    let inputs: Vec<EngineInput> =
+        batch.requests.iter().map(engine_input).collect();
+    let mut session = engine.start(&inputs)?;
+    // admission order == batch order, so `seq` indexes the batch
+    let mut outputs: Vec<Option<EngineOutput>> =
+        vec![None; batch.requests.len()];
+    let mut firsts: Vec<Option<Instant>> = vec![None; batch.requests.len()];
+    loop {
+        for f in session.take_finished() {
+            outputs[f.seq] = Some(f.output);
+        }
+        if session.active() == 0 {
+            break;
+        }
+        let events = session.step(sampler)?;
+        let now = Instant::now();
+        for ev in events {
+            if ev.tokens.is_empty() {
+                continue;
+            }
+            // stamp the first not-yet-stamped row with this id (ids are
+            // unique in practice; duplicates resolve positionally)
+            for (i, r) in batch.requests.iter().enumerate() {
+                if r.id == ev.request_id && firsts[i].is_none() {
+                    firsts[i] = Some(now);
+                    break;
+                }
+            }
+        }
+    }
+    batch
+        .requests
+        .iter()
+        .zip(outputs)
+        .zip(firsts)
+        .map(|((req, out), first)| {
+            Ok(SteppedOutput {
+                request: req.clone(),
+                output: out.ok_or_else(|| {
+                    Error::Other("decode session lost a request".into())
+                })?,
+                ttft: first.map(|t| t.duration_since(req.enqueued)),
+            })
+        })
+        .collect()
 }

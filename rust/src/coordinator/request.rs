@@ -1,5 +1,7 @@
 //! Request/response types as they move through the pipeline stages.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// A request after preprocessing (tokenization) — what the batcher and
@@ -14,12 +16,46 @@ pub struct PreparedRequest {
     pub reference_summary: Option<Vec<u32>>,
     /// When the request entered the system (latency measurement).
     pub enqueued: Instant,
+    /// Absolute wall-clock deadline; the continuous batcher retires the
+    /// request with a `deadline` error at the first step boundary past
+    /// it.  None = no deadline (offline workloads).
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation flag, shared with the client's
+    /// [`crate::server::RequestStream`].  Clones share the flag.
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl PreparedRequest {
+    /// A prepared request with no deadline/cancellation attached (the
+    /// offline-workload shape; streaming fills the extra fields in).
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            reference_summary: None,
+            enqueued: Instant::now(),
+            deadline: None,
+            cancel: None,
+        }
+    }
+
     /// Sequence capacity this request needs (prompt + generation).
     pub fn need_seq(&self) -> usize {
         self.prompt.len() + self.max_new_tokens
+    }
+
+    /// Has the client cancelled this request?
+    pub fn cancelled(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(false)
+    }
+
+    /// Is `now` past the request's deadline?
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map(|d| now >= d).unwrap_or(false)
     }
 }
 
@@ -41,25 +77,42 @@ pub struct ServingResponse {
     pub summary_text: String,
     /// End-to-end latency (enqueue -> postprocess complete).
     pub latency: Duration,
+    /// Time-to-first-token: enqueue -> first streamed token (None when
+    /// the request failed before emitting anything).
+    pub ttft: Option<Duration>,
+    /// Decode-session iterations spent while this request was live
+    /// (the steps-per-retire metric).
+    pub steps: usize,
     /// Positional token accuracy vs. the reference summary, if known.
     pub accuracy: Option<f64>,
-    /// Inference failure, if the batch carrying this request errored.
+    /// Inference failure, if the request errored anywhere in the stack.
     /// Failed requests still get a reply (never a silent drop), with
     /// empty `summary_ids`/`summary_text`.
     pub error: Option<String>,
+    /// Structured error code (`bad_request` | `overloaded` |
+    /// `engine_error` | `cancelled` | `deadline`) when `error` is set.
+    pub code: Option<&'static str>,
 }
 
 impl ServingResponse {
-    /// The reply for a request whose batch failed in the inference
-    /// stage: empty summary, the failure message attached.
-    pub fn failed(id: u64, latency: Duration, message: String) -> Self {
+    /// The reply for a request that failed in the serving stack: empty
+    /// summary, the failure message + structured code attached.
+    pub fn failed(
+        id: u64,
+        latency: Duration,
+        message: String,
+        code: &'static str,
+    ) -> Self {
         Self {
             id,
             summary_ids: Vec::new(),
             summary_text: String::new(),
             latency,
+            ttft: None,
+            steps: 0,
             accuracy: None,
             error: Some(message),
+            code: Some(code),
         }
     }
 }
@@ -95,13 +148,29 @@ mod tests {
 
     #[test]
     fn need_seq_adds_generation_budget() {
-        let r = PreparedRequest {
-            id: 0,
-            prompt: vec![1; 10],
-            max_new_tokens: 6,
-            reference_summary: None,
-            enqueued: Instant::now(),
-        };
+        let r = PreparedRequest::new(0, vec![1; 10], 6);
         assert_eq!(r.need_seq(), 16);
+    }
+
+    #[test]
+    fn cancel_flag_is_shared_across_clones() {
+        let mut r = PreparedRequest::new(1, vec![1], 4);
+        assert!(!r.cancelled());
+        let flag = Arc::new(AtomicBool::new(false));
+        r.cancel = Some(flag.clone());
+        let clone = r.clone();
+        flag.store(true, Ordering::Relaxed);
+        assert!(r.cancelled() && clone.cancelled());
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let mut r = PreparedRequest::new(1, vec![1], 4);
+        let now = Instant::now();
+        assert!(!r.expired(now));
+        r.deadline = Some(now);
+        assert!(r.expired(now));
+        r.deadline = Some(now + Duration::from_secs(3600));
+        assert!(!r.expired(now));
     }
 }

@@ -4,8 +4,17 @@
 //! ops, full embedding tables) over the whole padded bucket and samples
 //! from the last-position logits.  No KV cache, no fp16, no fusion —
 //! this is the "Paddle baseline" the paper starts from (speed 16.11).
+//!
+//! Because every step recomputes from the token matrix, the decode
+//! session is trivially incremental: admission just appends rows (and
+//! re-selects the bucket), and retired rows are skipped by passing them
+//! a zero length — the reference prompt walk ignores zero-length rows.
 
-use super::{trim_at_eos, Engine, EngineInput, EngineOutput, Sampler};
+use super::session::{bucket_need, compact, drain_finished, Row};
+use super::{
+    DecodeSession, Engine, EngineInput, FinishReason, FinishedRequest,
+    Sampler, TokenEvent,
+};
 use crate::runtime::{Backend, DataArg, SharedBackend};
 use crate::{special, Error, Result};
 
@@ -45,86 +54,149 @@ impl Engine for BaselineEngine {
         self.vocab_size as u32
     }
 
-    fn generate(
+    fn start(&self, batch: &[EngineInput]) -> Result<Box<dyn DecodeSession>> {
+        let mut session = BaselineSession {
+            backend: self.backend.clone(),
+            vocab_size: self.vocab_size,
+            exe_name: String::new(),
+            b: 0,
+            s: 0,
+            rows: Vec::new(),
+            done_buf: Vec::new(),
+            admit_seq: 0,
+        };
+        session.admit(batch)?;
+        Ok(Box::new(session))
+    }
+}
+
+/// In-flight batch state for the baseline engine: just the row set —
+/// the token matrix is rebuilt from it on every step (which is exactly
+/// the baseline's defining inefficiency).
+struct BaselineSession {
+    backend: SharedBackend,
+    vocab_size: usize,
+    /// Selected `baseline_fwd` bucket for the current row set.
+    exe_name: String,
+    b: usize,
+    s: usize,
+    /// Lane-aligned rows (index == batch row of the graph call).
+    rows: Vec<Row>,
+    /// Finished rows displaced by a compaction, awaiting drain.
+    done_buf: Vec<FinishedRequest>,
+    admit_seq: usize,
+}
+
+impl BaselineSession {
+    /// Bucket lookup for the (grown) row set; does not mutate.
+    fn plan(
         &self,
-        batch: &[EngineInput],
-        sampler: &mut Sampler,
-    ) -> Result<Vec<EngineOutput>> {
-        if batch.is_empty() {
+        extra: &[EngineInput],
+    ) -> Result<(String, usize, usize)> {
+        let (n, need) = bucket_need(
+            self.rows.iter().filter(|r| r.active()),
+            extra,
+        );
+        let entry = self.backend.manifest().select(
+            "baseline_fwd",
+            "baseline",
+            n.max(1),
+            need,
+        )?;
+        Ok((entry.name.clone(), entry.batch, entry.seq))
+    }
+}
+
+impl DecodeSession for BaselineSession {
+    fn active(&self) -> usize {
+        self.rows.iter().filter(|r| r.active()).count()
+    }
+
+    fn can_admit(&self, extra: &[EngineInput]) -> bool {
+        self.plan(extra).is_ok()
+    }
+
+    fn admit(&mut self, extra: &[EngineInput]) -> Result<()> {
+        if extra.is_empty() {
+            return Ok(());
+        }
+        let (name, b, s) = self.plan(extra)?;
+        compact(&mut self.rows, &mut self.done_buf);
+        for input in extra {
+            self.rows.push(Row::new(input, self.admit_seq));
+            self.admit_seq += 1;
+        }
+        self.exe_name = name;
+        self.b = b;
+        self.s = s;
+        Ok(())
+    }
+
+    fn step(&mut self, sampler: &mut Sampler) -> Result<Vec<TokenEvent>> {
+        if self.active() == 0 {
             return Ok(vec![]);
         }
-        let longest_prompt =
-            batch.iter().map(|r| r.prompt.len()).max().unwrap();
-        let max_new =
-            batch.iter().map(|r| r.max_new_tokens).max().unwrap();
-        let need_seq = longest_prompt + max_new;
-        let (exe_name, b, s) = {
-            let entry = self.backend.manifest().select(
-                "baseline_fwd",
-                "baseline",
-                batch.len(),
-                need_seq,
-            )?;
-            (entry.name.clone(), entry.batch, entry.seq)
-        };
-
-        // padded token matrix [b, s] + per-sequence write cursors
+        let (b, s) = (self.b, self.s);
+        // THE baseline inefficiency: rebuild + re-run the full forward
+        // pass for every emitted token.  Retired lanes get length 0 so
+        // the backend skips them.
         let mut tokens = vec![special::PAD as i32; b * s];
         let mut lens = vec![0i32; b];
-        for (i, r) in batch.iter().enumerate() {
-            for (j, &t) in r.prompt.iter().enumerate() {
-                tokens[i * s + j] = t as i32;
+        for (lane, row) in self.rows.iter().enumerate() {
+            if !row.active() {
+                continue;
             }
-            lens[i] = r.prompt.len() as i32;
+            let ctx = row.prompt.iter().chain(row.generated.iter());
+            for (j, &t) in ctx.enumerate() {
+                tokens[lane * s + j] = t as i32;
+            }
+            lens[lane] = (row.prompt.len() + row.generated.len()) as i32;
         }
-
-        let mut generated: Vec<Vec<u32>> = vec![Vec::new(); batch.len()];
-        let mut done = vec![false; batch.len()];
-        let mut steps = 0usize;
-
-        // THE baseline inefficiency: one full forward per emitted token.
-        for _ in 0..max_new {
-            if done.iter().all(|&d| d) {
-                break;
+        let outs = self.backend.execute(
+            &self.exe_name,
+            vec![
+                DataArg::I32(tokens, vec![b, s]),
+                DataArg::I32(lens, vec![b]),
+            ],
+        )?;
+        let logits = outs.into_iter().next().unwrap().into_f32()?; // [b, V]
+        let v = self.vocab_size;
+        let mut events = Vec::new();
+        for (lane, row) in self.rows.iter_mut().enumerate() {
+            if !row.active() {
+                continue;
             }
-            let outs = self.backend.execute(
-                &exe_name,
-                vec![
-                    DataArg::I32(tokens.clone(), vec![b, s]),
-                    DataArg::I32(lens.clone(), vec![b]),
-                ],
-            )?;
-            let logits =
-                outs.into_iter().next().unwrap().into_f32()?; // [b, V]
-            let v = self.vocab_size;
-            steps += 1;
-            for (i, r) in batch.iter().enumerate() {
-                if done[i] {
-                    continue;
-                }
-                let next = sampler.sample(&logits[i * v..(i + 1) * v]);
-                if next == special::EOS
-                    || generated[i].len() + 1 >= r.max_new_tokens
-                    || (lens[i] as usize) >= s
-                {
-                    done[i] = true;
-                }
-                if next != special::EOS && (lens[i] as usize) < s {
-                    tokens[i * s + lens[i] as usize] = next as i32;
-                    lens[i] += 1;
-                    generated[i].push(next);
-                }
+            row.steps += 1;
+            let next = sampler.sample(&logits[lane * v..(lane + 1) * v]);
+            let mut ev = TokenEvent {
+                request_id: row.id,
+                tokens: Vec::new(),
+                finished: None,
+            };
+            if row.push(next, s) {
+                ev.tokens.push(next);
             }
+            ev.finished = row.finished;
+            events.push(ev);
         }
+        Ok(events)
+    }
 
-        Ok(batch
-            .iter()
-            .zip(generated)
-            .map(|(r, g)| EngineOutput {
-                request_id: r.request_id,
-                generated: trim_at_eos(&g).to_vec(),
-                steps,
-            })
-            .collect())
+    fn retire(&mut self, request_id: u64, reason: FinishReason) -> bool {
+        match self
+            .rows
+            .iter_mut()
+            .find(|r| r.id == request_id && r.active())
+        {
+            Some(row) => {
+                row.finished = Some(reason);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        drain_finished(&mut self.rows, &mut self.done_buf)
     }
 }

@@ -15,9 +15,21 @@
 //! Variant "pruned" is the same code over the pruned-embedding artifacts
 //! (vocab 8000→4000, positions 512→128): smaller embedding gather,
 //! 2× smaller logits GEMM, 4× smaller position table.
+//!
+//! **Session model.**  [`FtEngine::start`] runs the prefill and parks
+//! its last-position logits; the first [`DecodeSession::step`] samples
+//! them (each row's first token), subsequent steps run decode graphs.
+//! Admission re-prefills every live row's `prompt ++ generated` context
+//! at a bucket covering the grown batch (see `engine::session` docs) —
+//! prefill and decode share the same math, so greedy streams are
+//! unchanged by when admissions happen.
 
-use super::{trim_at_eos, Engine, EngineInput, EngineOutput, Sampler};
-use crate::runtime::{Backend, DataArg, SharedBackend};
+use super::session::{bucket_need, compact, drain_finished, Row};
+use super::{
+    DecodeSession, Engine, EngineInput, FinishReason, FinishedRequest,
+    Sampler, TokenEvent,
+};
+use crate::runtime::{Backend, DataArg, OpaqueTensor, SharedBackend};
 use crate::{special, Error, Result};
 
 pub struct FtEngine {
@@ -74,197 +86,330 @@ impl Engine for FtEngine {
         self.vocab_size as u32
     }
 
-    fn generate(
-        &self,
-        batch: &[EngineInput],
-        sampler: &mut Sampler,
-    ) -> Result<Vec<EngineOutput>> {
-        if batch.is_empty() {
-            return Ok(vec![]);
-        }
-        let variant = self.variant;
-        let longest_prompt =
-            batch.iter().map(|r| r.prompt.len()).max().unwrap();
-        let max_new = batch.iter().map(|r| r.max_new_tokens).max().unwrap();
-        let need_seq = longest_prompt + max_new;
-        let manifest = self.backend.manifest();
-        let (prefill_name, b, s) = {
-            let entry =
-                manifest.select("ft_prefill", variant, batch.len(), need_seq)?;
-            (entry.name.clone(), entry.batch, entry.seq)
+    fn start(&self, batch: &[EngineInput]) -> Result<Box<dyn DecodeSession>> {
+        let mut session = FtSession {
+            backend: self.backend.clone(),
+            variant: self.variant,
+            use_multi_step: self.use_multi_step,
+            default_multi_steps: self.multi_steps,
+            vocab_size: self.vocab_size,
+            b: 0,
+            s: 0,
+            prefill_name: String::new(),
+            decode_name: String::new(),
+            multi: None,
+            k_cache: None,
+            v_cache: None,
+            pending_logits: None,
+            last_tok: Vec::new(),
+            positions: Vec::new(),
+            rows: Vec::new(),
+            done_buf: Vec::new(),
+            admit_seq: 0,
         };
-        // decode buckets must match the cache shape [L,b,H,s,Dh]
+        session.admit(batch)?;
+        Ok(Box::new(session))
+    }
+}
+
+/// Executable names + bucket for one row-set shape.
+struct Plan {
+    prefill_name: String,
+    decode_name: String,
+    multi: Option<(String, usize)>,
+    b: usize,
+    s: usize,
+}
+
+/// In-flight FT batch: lane-aligned rows, the opaque KV caches at the
+/// current bucket shape, and (right after a prefill) the parked
+/// last-position logits awaiting their sampling step.
+struct FtSession {
+    backend: SharedBackend,
+    variant: &'static str,
+    use_multi_step: bool,
+    default_multi_steps: usize,
+    vocab_size: usize,
+    b: usize,
+    s: usize,
+    prefill_name: String,
+    decode_name: String,
+    /// Fused multi-step decode executable + its step count, when the
+    /// manifest has one for the current bucket and multi-step is on.
+    multi: Option<(String, usize)>,
+    k_cache: Option<OpaqueTensor>,
+    v_cache: Option<OpaqueTensor>,
+    /// `[b, V]` logits from the latest prefill; the next step samples
+    /// each live row's next token from its row instead of decoding.
+    pending_logits: Option<Vec<f32>>,
+    /// Last consumed token per lane (decode input).
+    last_tok: Vec<i32>,
+    /// Prompt length per lane — `positions[l] + generated.len() - 1`
+    /// is the in-sequence position of `last_tok[l]`, whether the cache
+    /// came from the original prefill or an admission re-prefill.
+    positions: Vec<i32>,
+    rows: Vec<Row>,
+    done_buf: Vec<FinishedRequest>,
+    admit_seq: usize,
+}
+
+impl FtSession {
+    /// Bucket + executable lookup for the grown row set; no mutation,
+    /// so a failed plan leaves the session serving its current rows.
+    fn plan(&self, extra: &[EngineInput]) -> Result<Plan> {
+        let (n, need) =
+            bucket_need(self.rows.iter().filter(|r| r.active()), extra);
+        let manifest = self.backend.manifest();
+        let entry =
+            manifest.select("ft_prefill", self.variant, n.max(1), need)?;
+        let (prefill_name, b, s) = (entry.name.clone(), entry.batch, entry.seq);
         let decode_name = manifest
-            .find_exact("ft_decode", variant, b, s)
+            .find_exact("ft_decode", self.variant, b, s)
             .map(|a| a.name.clone())
             .ok_or_else(|| Error::NoBucket {
                 kind: "ft_decode".into(),
-                variant: variant.into(),
+                variant: self.variant.into(),
                 batch: b,
                 seq: s,
             })?;
         // the fused graph's token-matrix width is the ENTRY's step
         // count (falling back to the manifest-wide default)
-        let multi = if self.use_multi_step && sampler.is_greedy() {
-            manifest
-                .find_exact("ft_decode_multi", variant, b, s)
-                .map(|a| (a.name.clone(), a.steps.unwrap_or(self.multi_steps)))
+        let multi = if self.use_multi_step {
+            manifest.find_exact("ft_decode_multi", self.variant, b, s).map(
+                |a| {
+                    (
+                        a.name.clone(),
+                        a.steps.unwrap_or(self.default_multi_steps),
+                    )
+                },
+            )
         } else {
             None
         };
+        Ok(Plan { prefill_name, decode_name, multi, b, s })
+    }
 
-        // ---- prefill --------------------------------------------------
+    /// (Re-)materialize the KV caches: one prefill over every lane's
+    /// `prompt ++ generated` context.  Parks the last-position logits
+    /// for the next step to sample.
+    fn prefill(&mut self) -> Result<()> {
+        let (b, s) = (self.b, self.s);
         let mut tokens = vec![special::PAD as i32; b * s];
-        let mut positions = vec![0i32; b];
-        for (i, r) in batch.iter().enumerate() {
-            for (j, &t) in r.prompt.iter().enumerate() {
-                tokens[i * s + j] = t as i32;
+        let mut lens = vec![0i32; b];
+        self.positions = vec![0i32; b];
+        for (lane, row) in self.rows.iter().enumerate() {
+            let ctx = row.prompt.iter().chain(row.generated.iter());
+            for (j, &t) in ctx.enumerate() {
+                tokens[lane * s + j] = t as i32;
             }
-            positions[i] = r.prompt.len() as i32;
+            lens[lane] = (row.prompt.len() + row.generated.len()) as i32;
+            self.positions[lane] = row.prompt.len() as i32;
         }
         let outs = self.backend.execute(
-            &prefill_name,
+            &self.prefill_name,
             vec![
                 DataArg::I32(tokens, vec![b, s]),
-                DataArg::I32(positions.clone(), vec![b]),
+                DataArg::I32(lens, vec![b]),
             ],
         )?;
         let mut outs = outs.into_iter();
         let logits = outs.next().unwrap().into_f32()?; // [b, V]
-        let mut k_cache = outs.next().unwrap().into_opaque()?;
-        let mut v_cache = outs.next().unwrap().into_opaque()?;
+        self.k_cache = Some(outs.next().unwrap().into_opaque()?);
+        self.v_cache = Some(outs.next().unwrap().into_opaque()?);
+        self.pending_logits = Some(logits);
+        self.last_tok = vec![special::PAD as i32; b];
+        Ok(())
+    }
 
+    /// Sample each live row's next token from parked prefill logits —
+    /// the step right after a (re-)prefill.  No graph call; the prefill
+    /// already paid for these logits (counted as the row's step).
+    fn step_pending(
+        &mut self,
+        logits: Vec<f32>,
+        sampler: &mut Sampler,
+    ) -> Vec<TokenEvent> {
         let v = self.vocab_size;
-
-        let mut generated: Vec<Vec<u32>> = vec![Vec::new(); batch.len()];
-        let mut done = vec![false; batch.len()];
-        let mut last_tok = vec![special::PAD as i32; b];
-        let mut steps = 1usize; // prefill counts as one
-
-        for (i, r) in batch.iter().enumerate() {
-            let next = sampler.sample(&logits[i * v..(i + 1) * v]);
-            last_tok[i] = next as i32;
-            if next == special::EOS || r.max_new_tokens == 0 {
-                done[i] = true;
-            } else {
-                generated[i].push(next);
+        let s = self.s;
+        let mut events = Vec::new();
+        for (lane, row) in self.rows.iter_mut().enumerate() {
+            if !row.active() {
+                continue;
             }
-        }
-
-        // ---- decode ----------------------------------------------------
-        // Every sequence advances together (static batch); finished rows
-        // keep decoding into masked-off territory and are trimmed later.
-        loop {
-            let all_done = batch
-                .iter()
-                .enumerate()
-                .all(|(i, r)| {
-                    done[i]
-                        || generated[i].len() >= r.max_new_tokens
-                        || (positions[i] as usize + generated[i].len()) >= s
-                });
-            if all_done {
-                break;
-            }
-            let remaining = batch
-                .iter()
-                .enumerate()
-                .map(|(i, r)| {
-                    if done[i] {
-                        0
-                    } else {
-                        r.max_new_tokens - generated[i].len()
-                    }
-                })
-                .max()
-                .unwrap();
-
-            // absolute position of the token in last_tok, per row
-            // (padding rows beyond the real batch stay at 0)
-            let mut cur_pos = vec![0i32; b];
-            for (i, _) in batch.iter().enumerate() {
-                cur_pos[i] = positions[i] + generated[i].len() as i32 - 1;
-            }
-
-            let fused = match multi.as_ref() {
-                Some((name, st)) if remaining >= *st => Some((name, *st)),
-                _ => None,
+            row.steps += 1;
+            let next = sampler.sample(&logits[lane * v..(lane + 1) * v]);
+            let mut ev = TokenEvent {
+                request_id: row.id,
+                tokens: Vec::new(),
+                finished: None,
             };
-            if let Some((m_name, m_steps)) = fused {
-                // fused multi-step greedy decode: m_steps tokens per call
-                let outs = self.backend.execute(
-                    m_name,
-                    vec![
-                        DataArg::I32(last_tok.clone(), vec![b]),
-                        DataArg::I32(cur_pos.clone(), vec![b]),
-                        DataArg::Opaque(k_cache),
-                        DataArg::Opaque(v_cache),
-                    ],
-                )?;
-                let mut it = outs.into_iter();
-                let toks = it.next().unwrap().into_i32()?; // [b, m_steps]
-                k_cache = it.next().unwrap().into_opaque()?;
-                v_cache = it.next().unwrap().into_opaque()?;
-                steps += 1;
-                for (i, r) in batch.iter().enumerate() {
-                    for step in 0..m_steps {
-                        if done[i]
-                            || generated[i].len() >= r.max_new_tokens
-                            || positions[i] as usize + generated[i].len() >= s
-                        {
-                            done[i] = true;
-                            break;
-                        }
-                        let t = toks[i * m_steps + step] as u32;
-                        if t == special::EOS {
-                            done[i] = true;
-                            break;
-                        }
-                        generated[i].push(t);
-                        last_tok[i] = t as i32;
+            if row.push(next, s) {
+                self.last_tok[lane] = next as i32;
+                ev.tokens.push(next);
+            }
+            ev.finished = row.finished;
+            events.push(ev);
+        }
+        events
+    }
+
+    /// One decode graph call (fused multi-step when eligible).
+    fn step_decode(
+        &mut self,
+        sampler: &mut Sampler,
+    ) -> Result<Vec<TokenEvent>> {
+        let (b, s) = (self.b, self.s);
+        let v = self.vocab_size;
+        // absolute position of last_tok per lane (retired lanes keep
+        // their frozen cursors; empty lanes stay at 0)
+        let mut cur_pos = vec![0i32; b];
+        for (lane, row) in self.rows.iter().enumerate() {
+            cur_pos[lane] =
+                self.positions[lane] + row.generated.len() as i32 - 1;
+        }
+        let remaining = self
+            .rows
+            .iter()
+            .filter(|r| r.active())
+            .map(|r| r.remaining())
+            .max()
+            .unwrap_or(0);
+        let fused = match (&self.multi, sampler.is_greedy()) {
+            (Some((name, st)), true) if remaining >= *st => {
+                Some((name.clone(), *st))
+            }
+            _ => None,
+        };
+        let k = self.k_cache.take().expect("session has no k cache");
+        let vc = self.v_cache.take().expect("session has no v cache");
+        let mut events = Vec::new();
+        if let Some((m_name, m_steps)) = fused {
+            // fused multi-step greedy decode: m_steps tokens per call
+            let outs = self.backend.execute(
+                &m_name,
+                vec![
+                    DataArg::I32(self.last_tok.clone(), vec![b]),
+                    DataArg::I32(cur_pos, vec![b]),
+                    DataArg::Opaque(k),
+                    DataArg::Opaque(vc),
+                ],
+            )?;
+            let mut it = outs.into_iter();
+            let toks = it.next().unwrap().into_i32()?; // [b, m_steps]
+            self.k_cache = Some(it.next().unwrap().into_opaque()?);
+            self.v_cache = Some(it.next().unwrap().into_opaque()?);
+            for (lane, row) in self.rows.iter_mut().enumerate() {
+                if !row.active() {
+                    continue;
+                }
+                row.steps += 1;
+                let mut ev = TokenEvent {
+                    request_id: row.id,
+                    tokens: Vec::new(),
+                    finished: None,
+                };
+                for step in 0..m_steps {
+                    if !row.active() {
+                        break;
+                    }
+                    let t = toks[lane * m_steps + step] as u32;
+                    if row.push(t, s) {
+                        self.last_tok[lane] = t as i32;
+                        ev.tokens.push(t);
                     }
                 }
-            } else {
-                let outs = self.backend.execute(
-                    &decode_name,
-                    vec![
-                        DataArg::I32(last_tok.clone(), vec![b]),
-                        DataArg::I32(cur_pos.clone(), vec![b]),
-                        DataArg::Opaque(k_cache),
-                        DataArg::Opaque(v_cache),
-                    ],
-                )?;
-                let mut it = outs.into_iter();
-                let logits = it.next().unwrap().into_f32()?;
-                k_cache = it.next().unwrap().into_opaque()?;
-                v_cache = it.next().unwrap().into_opaque()?;
-                steps += 1;
-                for (i, r) in batch.iter().enumerate() {
-                    if done[i] {
-                        continue;
-                    }
-                    let next = sampler.sample(&logits[i * v..(i + 1) * v]);
-                    if next == special::EOS
-                        || generated[i].len() >= r.max_new_tokens
-                        || positions[i] as usize + generated[i].len() >= s
-                    {
-                        done[i] = true;
-                    } else {
-                        generated[i].push(next);
-                        last_tok[i] = next as i32;
-                    }
+                ev.finished = row.finished;
+                events.push(ev);
+            }
+        } else {
+            let outs = self.backend.execute(
+                &self.decode_name,
+                vec![
+                    DataArg::I32(self.last_tok.clone(), vec![b]),
+                    DataArg::I32(cur_pos, vec![b]),
+                    DataArg::Opaque(k),
+                    DataArg::Opaque(vc),
+                ],
+            )?;
+            let mut it = outs.into_iter();
+            let logits = it.next().unwrap().into_f32()?;
+            self.k_cache = Some(it.next().unwrap().into_opaque()?);
+            self.v_cache = Some(it.next().unwrap().into_opaque()?);
+            for (lane, row) in self.rows.iter_mut().enumerate() {
+                if !row.active() {
+                    continue;
                 }
+                row.steps += 1;
+                let next = sampler.sample(&logits[lane * v..(lane + 1) * v]);
+                let mut ev = TokenEvent {
+                    request_id: row.id,
+                    tokens: Vec::new(),
+                    finished: None,
+                };
+                if row.push(next, s) {
+                    self.last_tok[lane] = next as i32;
+                    ev.tokens.push(next);
+                }
+                ev.finished = row.finished;
+                events.push(ev);
             }
         }
+        Ok(events)
+    }
+}
 
-        Ok(batch
-            .iter()
-            .zip(generated)
-            .map(|(r, g)| EngineOutput {
-                request_id: r.request_id,
-                generated: trim_at_eos(&g).to_vec(),
-                steps,
-            })
-            .collect())
+impl DecodeSession for FtSession {
+    fn active(&self) -> usize {
+        self.rows.iter().filter(|r| r.active()).count()
+    }
+
+    fn can_admit(&self, extra: &[EngineInput]) -> bool {
+        self.plan(extra).is_ok()
+    }
+
+    fn admit(&mut self, extra: &[EngineInput]) -> Result<()> {
+        if extra.is_empty() {
+            return Ok(());
+        }
+        let plan = self.plan(extra)?;
+        compact(&mut self.rows, &mut self.done_buf);
+        for input in extra {
+            self.rows.push(Row::new(input, self.admit_seq));
+            self.admit_seq += 1;
+        }
+        self.prefill_name = plan.prefill_name;
+        self.decode_name = plan.decode_name;
+        self.multi = plan.multi;
+        self.b = plan.b;
+        self.s = plan.s;
+        self.prefill()
+    }
+
+    fn step(&mut self, sampler: &mut Sampler) -> Result<Vec<TokenEvent>> {
+        if self.active() == 0 {
+            return Ok(vec![]);
+        }
+        match self.pending_logits.take() {
+            Some(logits) => Ok(self.step_pending(logits, sampler)),
+            None => self.step_decode(sampler),
+        }
+    }
+
+    fn retire(&mut self, request_id: u64, reason: FinishReason) -> bool {
+        match self
+            .rows
+            .iter_mut()
+            .find(|r| r.id == request_id && r.active())
+        {
+            Some(row) => {
+                row.finished = Some(reason);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        drain_finished(&mut self.rows, &mut self.done_buf)
     }
 }

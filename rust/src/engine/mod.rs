@@ -1,8 +1,25 @@
-//! Inference engines — the paper's Table 1 ladder, rows 1-3.
+//! Inference engines — the paper's Table 1 ladder, rows 1-3 — behind
+//! the **step-based generation API**.
 //!
-//! All engines share the [`Engine`] trait: they take a *prepared* batch
-//! (tokenized prompts) and autoregressively generate summaries.
+//! Generation is split in two (the EnergonAI-style step-level serving
+//! contract):
 //!
+//! - [`Engine::start`] runs the prefill for a prepared batch and
+//!   returns a [`DecodeSession`] — the engine-side state of an
+//!   in-flight batch (KV caches, per-row cursors);
+//! - [`DecodeSession::step`] runs ONE decode iteration and reports, per
+//!   request, the tokens it emitted and whether the request finished
+//!   ([`TokenEvent`]).  Finished requests are retired incrementally via
+//!   [`DecodeSession::take_finished`], and new requests can be admitted
+//!   into freed slots mid-decode via [`DecodeSession::admit`] — the
+//!   primitive the continuous batcher
+//!   ([`crate::coordinator::InferencePool`]) is built on.
+//!
+//! [`Engine::generate`] survives as a default-method driver loop over
+//! the session API, so one-shot batch generation stays available and
+//! token-identical to driving the session by hand.
+//!
+//! Engines:
 //! - [`BaselineEngine`]: row 1.  fp32, full embeddings, and — the
 //!   defining inefficiency — every generated token re-runs the FULL
 //!   forward pass over the whole (padded) sequence.  O(T²·S) work per
@@ -17,6 +34,7 @@
 mod baseline;
 mod ft;
 mod sampling;
+mod session;
 
 pub use baseline::BaselineEngine;
 pub use ft::FtEngine;
@@ -25,7 +43,7 @@ pub use sampling::Sampler;
 use crate::config::{EngineKind, GenConfig, Sampling};
 use crate::runtime::{Backend, SharedBackend};
 use crate::util::rng::derive_seed;
-use crate::{special, Result};
+use crate::{special, Error, Result};
 
 /// One prepared (tokenized) request inside a batch.
 #[derive(Debug, Clone)]
@@ -42,8 +60,84 @@ pub struct EngineOutput {
     pub request_id: u64,
     /// Generated ids up to (exclusive) EOS.
     pub generated: Vec<u32>,
-    /// Decode iterations the batch spent on this request's sequence.
+    /// Session iterations (prefill + decode steps) run while THIS
+    /// request was live — the per-retire cost, not the whole batch's.
     pub steps: usize,
+}
+
+/// Why a request stopped decoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The model emitted EOS.
+    Eos,
+    /// `max_new_tokens` (or the compiled sequence bucket) was exhausted.
+    Length,
+    /// The caller retired the request (client cancellation).
+    Cancelled,
+    /// The caller retired the request past its deadline.
+    DeadlineExpired,
+}
+
+/// One request's progress in one decode-session iteration.
+#[derive(Debug, Clone)]
+pub struct TokenEvent {
+    pub request_id: u64,
+    /// Tokens emitted this iteration (several under the fused
+    /// multi-step decode graph; empty when the row finished without a
+    /// new token, e.g. on EOS).
+    pub tokens: Vec<u32>,
+    /// Set when the request retired this iteration.
+    pub finished: Option<FinishReason>,
+}
+
+/// A retired request leaving a [`DecodeSession`].
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    /// 0-based admission order within the session — a stable key even
+    /// when request ids collide inside one batch.
+    pub seq: usize,
+    pub reason: FinishReason,
+    pub output: EngineOutput,
+}
+
+/// The engine-side state of one in-flight batch: KV caches (where the
+/// engine has them), per-row generation cursors, and the bucket the
+/// batch is compiled against.
+///
+/// Lifecycle: [`Engine::start`] → repeated [`DecodeSession::step`] /
+/// [`DecodeSession::take_finished`], with [`DecodeSession::admit`]
+/// allowed *between* steps to grow the batch.  If `step` or `admit`
+/// returns an error the session is dead: the caller must fail or
+/// re-submit every request still inside it.
+pub trait DecodeSession: Send {
+    /// Requests still decoding.
+    fn active(&self) -> usize;
+
+    /// Could `extra` join the running batch — i.e. does a compiled
+    /// bucket cover the grown batch?  Policy caps (`max_batch`,
+    /// `max_batch_tokens`) are the caller's business.
+    fn can_admit(&self, extra: &[EngineInput]) -> bool;
+
+    /// Admit requests into the running batch.  The FT engines
+    /// re-materialize the KV cache with one prefill over every live
+    /// row's context (see `engine::session` docs); the baseline engine
+    /// just grows its token matrix.  Emits no tokens itself — admitted
+    /// rows produce their first [`TokenEvent`] on the next [`step`].
+    ///
+    /// [`step`]: DecodeSession::step
+    fn admit(&mut self, extra: &[EngineInput]) -> Result<()>;
+
+    /// One decode iteration over the active rows; returns one event per
+    /// row that was active at entry (empty once everything finished).
+    fn step(&mut self, sampler: &mut Sampler) -> Result<Vec<TokenEvent>>;
+
+    /// Forcibly finish a live request (cancellation / deadline).  Its
+    /// tokens-so-far surface via [`DecodeSession::take_finished`] with
+    /// the given reason.  Returns false when no live row has that id.
+    fn retire(&mut self, request_id: u64, reason: FinishReason) -> bool;
+
+    /// Drain every request that retired since the last call.
+    fn take_finished(&mut self) -> Vec<FinishedRequest>;
 }
 
 /// A batched autoregressive generator.  `Send` so a worker pool can
@@ -56,12 +150,40 @@ pub trait Engine: Send {
     /// Vocabulary visible to this engine (pruned engines see a prefix);
     /// the tokenizer's `max_id`.
     fn vocab_limit(&self) -> u32;
-    /// Generate for a batch (<= largest compiled batch bucket).
+    /// Prefill a batch (<= largest compiled batch bucket) and return
+    /// the decode session holding its KV state.
+    fn start(&self, batch: &[EngineInput]) -> Result<Box<dyn DecodeSession>>;
+
+    /// One-shot batch generation: drive the decode session to
+    /// completion.  Token-identical to stepping the session by hand
+    /// (it IS stepping the session) — asserted by the property tests.
     fn generate(
         &self,
         batch: &[EngineInput],
         sampler: &mut Sampler,
-    ) -> Result<Vec<EngineOutput>>;
+    ) -> Result<Vec<EngineOutput>> {
+        if batch.is_empty() {
+            return Ok(vec![]);
+        }
+        let mut session = self.start(batch)?;
+        let mut out: Vec<Option<EngineOutput>> = vec![None; batch.len()];
+        loop {
+            for f in session.take_finished() {
+                out[f.seq] = Some(f.output);
+            }
+            if session.active() == 0 {
+                break;
+            }
+            session.step(sampler)?;
+        }
+        out.into_iter()
+            .map(|o| {
+                o.ok_or_else(|| {
+                    Error::Other("decode session lost a request".into())
+                })
+            })
+            .collect()
+    }
 }
 
 /// Construct the engine for a ladder row over a shared backend (the

@@ -1,0 +1,225 @@
+//! Shared per-row state machine for decode sessions.
+//!
+//! Both engines drive the same [`Row`] transitions, which is what makes
+//! their token streams identical (the §4 guarantee) and keeps the
+//! finish logic — EOS, generation budget, bucket capacity — in one
+//! place:
+//!
+//! - a row is **active** until it finishes;
+//! - feeding a sampled token via [`Row::push`] either consumes it
+//!   (budget/capacity permitting) or retires the row at EOS;
+//! - consuming the last budgeted token retires the row with
+//!   [`FinishReason::Length`] *after* emitting it, so a request always
+//!   receives exactly `min(budget, tokens-until-EOS)` tokens.
+//!
+//! **Admission model (FT engines).**  The KV caches live at a fixed
+//! compiled bucket shape, so a session cannot splice a new row into an
+//! in-flight cache.  Instead, admission *re-prefills*: one prefill call
+//! over every live row's context (`prompt ++ generated`) re-materializes
+//! the caches at a bucket covering the grown batch.  Prefill and decode
+//! share the same forward math (bitwise on the reference backend), so
+//! the greedy continuation after a re-prefill is token-identical to the
+//! uninterrupted decode — asserted by the admission property test.
+
+use super::{EngineInput, EngineOutput, FinishReason, FinishedRequest};
+use crate::special;
+
+/// One request inside a decode session.
+#[derive(Debug, Clone)]
+pub(crate) struct Row {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub generated: Vec<u32>,
+    pub finished: Option<FinishReason>,
+    /// Session iterations run while this row was live.
+    pub steps: usize,
+    /// 0-based admission order within the session.
+    pub seq: usize,
+    /// Already handed out via `take_finished`.
+    pub drained: bool,
+}
+
+impl Row {
+    pub fn new(input: &EngineInput, seq: usize) -> Self {
+        Self {
+            id: input.request_id,
+            prompt: input.prompt.clone(),
+            max_new: input.max_new_tokens,
+            generated: Vec::new(),
+            // a zero-budget request retires on admission, before any
+            // decode work is spent on it
+            finished: if input.max_new_tokens == 0 {
+                Some(FinishReason::Length)
+            } else {
+                None
+            },
+            steps: 0,
+            seq,
+            drained: false,
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.finished.is_none()
+    }
+
+    /// Feed one sampled/fused token; returns true if it was consumed
+    /// (emitted to the client), false on EOS.  `seq_cap` is the
+    /// session's compiled sequence bucket.
+    pub fn push(&mut self, tok: u32, seq_cap: usize) -> bool {
+        if tok == special::EOS {
+            self.finished = Some(FinishReason::Eos);
+            return false;
+        }
+        self.generated.push(tok);
+        if self.generated.len() >= self.max_new
+            || self.prompt.len() + self.generated.len() >= seq_cap
+        {
+            self.finished = Some(FinishReason::Length);
+        }
+        true
+    }
+
+    /// Tokens the row may still emit.
+    pub fn remaining(&self) -> usize {
+        self.max_new.saturating_sub(self.generated.len())
+    }
+
+    pub fn finished_request(&self) -> FinishedRequest {
+        FinishedRequest {
+            seq: self.seq,
+            reason: self.finished.expect("row not finished"),
+            output: EngineOutput {
+                request_id: self.id,
+                generated: super::trim_at_eos(&self.generated).to_vec(),
+                steps: self.steps,
+            },
+        }
+    }
+}
+
+/// Drain newly-finished rows (plus any `overflow` buffered by a
+/// compaction) — the shared `take_finished` body.
+pub(crate) fn drain_finished(
+    rows: &mut [Row],
+    overflow: &mut Vec<FinishedRequest>,
+) -> Vec<FinishedRequest> {
+    let mut out = std::mem::take(overflow);
+    for row in rows.iter_mut() {
+        if row.finished.is_some() && !row.drained {
+            row.drained = true;
+            out.push(row.finished_request());
+        }
+    }
+    out
+}
+
+/// Compact a lane-aligned row set before (re-)admission: live rows keep
+/// their relative order and become the new lane set; finished rows drop
+/// out (buffering the not-yet-drained ones in `overflow`).
+pub(crate) fn compact(
+    rows: &mut Vec<Row>,
+    overflow: &mut Vec<FinishedRequest>,
+) {
+    let old = std::mem::take(rows);
+    for row in old {
+        if row.finished.is_some() {
+            if !row.drained {
+                overflow.push(row.finished_request());
+            }
+        } else {
+            rows.push(row);
+        }
+    }
+}
+
+/// The bucket a live row set plus admission candidates needs: row count
+/// and the conservative sequence need `max(prompt) + max(max_new)` —
+/// the same formula the pre-redesign engines used, so one-shot bucket
+/// choices are unchanged.
+pub(crate) fn bucket_need<'a>(
+    live: impl Iterator<Item = &'a Row>,
+    extra: &[EngineInput],
+) -> (usize, usize) {
+    let mut n = extra.len();
+    let mut longest =
+        extra.iter().map(|e| e.prompt.len()).max().unwrap_or(0);
+    let mut max_new =
+        extra.iter().map(|e| e.max_new_tokens).max().unwrap_or(0);
+    for row in live {
+        n += 1;
+        longest = longest.max(row.prompt.len());
+        max_new = max_new.max(row.max_new);
+    }
+    (n, longest + max_new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(id: u64, prompt: usize, max_new: usize) -> EngineInput {
+        EngineInput {
+            request_id: id,
+            prompt: vec![5; prompt],
+            max_new_tokens: max_new,
+        }
+    }
+
+    #[test]
+    fn row_finishes_on_eos_without_emitting() {
+        let mut r = Row::new(&input(1, 3, 8), 0);
+        assert!(r.push(7, 64));
+        assert!(!r.push(special::EOS, 64));
+        assert_eq!(r.finished, Some(FinishReason::Eos));
+        assert_eq!(r.generated, vec![7]);
+    }
+
+    #[test]
+    fn row_emits_final_budgeted_token_then_retires() {
+        let mut r = Row::new(&input(1, 3, 2), 0);
+        assert!(r.push(7, 64));
+        assert!(r.active());
+        assert!(r.push(8, 64));
+        assert_eq!(r.finished, Some(FinishReason::Length));
+        assert_eq!(r.generated, vec![7, 8]);
+    }
+
+    #[test]
+    fn row_respects_bucket_capacity() {
+        let mut r = Row::new(&input(1, 6, 100), 0);
+        assert!(r.push(7, 8)); // 6 + 1 < 8
+        assert!(r.active());
+        assert!(r.push(8, 8)); // 6 + 2 == 8: capacity
+        assert_eq!(r.finished, Some(FinishReason::Length));
+    }
+
+    #[test]
+    fn zero_budget_rows_retire_at_admission() {
+        let r = Row::new(&input(1, 3, 0), 0);
+        assert_eq!(r.finished, Some(FinishReason::Length));
+    }
+
+    #[test]
+    fn compact_keeps_live_rows_and_buffers_undrained() {
+        let mut rows = vec![
+            Row::new(&input(1, 3, 4), 0),
+            Row::new(&input(2, 3, 0), 1), // finished, undrained
+            Row::new(&input(3, 3, 4), 2),
+        ];
+        let mut overflow = Vec::new();
+        compact(&mut rows, &mut overflow);
+        assert_eq!(rows.iter().map(|r| r.id).collect::<Vec<_>>(), [1, 3]);
+        assert_eq!(overflow.len(), 1);
+        assert_eq!(overflow[0].output.request_id, 2);
+    }
+
+    #[test]
+    fn bucket_need_uses_pre_redesign_formula() {
+        let rows = vec![Row::new(&input(1, 10, 4), 0)];
+        let (n, need) = bucket_need(rows.iter(), &[input(2, 6, 9)]);
+        assert_eq!(n, 2);
+        assert_eq!(need, 10 + 9);
+    }
+}

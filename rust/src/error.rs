@@ -30,10 +30,33 @@ pub enum Error {
     Manifest(String),
     /// Input exceeded a hard limit (sequence too long for every bucket…).
     Capacity(String),
+    /// Request rejected at the protocol boundary (client error — wire
+    /// code `bad_request`).
+    BadRequest(String),
+    /// Server saturated: the admission queue is full (wire code
+    /// `overloaded`).
+    Overloaded(&'static str),
     /// Request rejected / channel closed during shutdown.
     Shutdown(&'static str),
     /// Anything else worth a message.
     Other(String),
+}
+
+impl Error {
+    /// Structured wire-protocol error code for this failure.  Every
+    /// error reply carries one of: `bad_request` (client's fault:
+    /// malformed/unsatisfiable request), `overloaded` (server
+    /// saturated or shutting down — retry later), `engine_error`
+    /// (inference-side failure).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::BadRequest(_)
+            | Error::NoBucket { .. }
+            | Error::Capacity(_) => "bad_request",
+            Error::Overloaded(_) | Error::Shutdown(_) => "overloaded",
+            _ => "engine_error",
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -55,6 +78,8 @@ impl fmt::Display for Error {
             Error::WeightLayout(m) => write!(f, "weight blob mismatch: {m}"),
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
             Error::Capacity(m) => write!(f, "capacity exceeded: {m}"),
+            Error::BadRequest(m) => write!(f, "bad request: {m}"),
+            Error::Overloaded(w) => write!(f, "overloaded: {w}"),
             Error::Shutdown(w) => write!(f, "shutting down: {w}"),
             Error::Other(m) => write!(f, "{m}"),
         }

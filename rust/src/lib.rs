@@ -5,11 +5,15 @@
 //! three-layer rust + JAX + Pallas serving stack:
 //!
 //! - **L3 (this crate)** — the serving coordinator: request routing,
-//!   dynamic length-bucketed batching, KV-cache state management, the
-//!   paper's four-stage parallel pipeline (§3.3 Fig 4) widened to a
-//!   multi-worker inference pool (`--workers N`), a fast wordpiece
-//!   tokenizer, synthetic-workload substrates, metrics, and a TCP
-//!   serving front-end.  Python is never on the request path.
+//!   dynamic length-bucketed batching, the **step-based generation
+//!   API** ([`engine::DecodeSession`]: incremental decode with
+//!   mid-flight admission), the paper's four-stage parallel pipeline
+//!   (§3.3 Fig 4) widened to a **continuous-batching** multi-worker
+//!   inference pool (`--workers N`), a fast wordpiece tokenizer,
+//!   synthetic-workload substrates, metrics (TTFT, steps-per-retire),
+//!   a token-streaming TCP front-end (wire protocol v2) and the
+//!   embeddable [`Server`] builder API.  Python is never on the
+//!   request path.
 //! - **L2/L1 (python/, optional, build-time only)** — the UNIMO-style
 //!   prefix LM and its fused Pallas kernels, AOT-lowered by `make
 //!   artifacts` into `artifacts/*.hlo.txt`.
@@ -51,6 +55,9 @@ pub mod tokenizer;
 pub mod util;
 
 pub use error::{Error, Result};
+pub use server::{
+    RequestStream, Server, ServerBuilder, ServingEvent, SubmitOptions,
+};
 
 /// Special token ids — MUST match `python/compile/model.py` and the
 /// `special_tokens` block of `artifacts/manifest.json` (checked at load).

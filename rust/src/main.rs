@@ -27,10 +27,13 @@ fn usage() -> ! {
                  --workers N (inference workers in the pipelined/serve\n\
                  paths; default 1)  --row-threads N (reference backend\n\
                  intra-batch parallelism; default 0 = auto)\n\
+                 --no-continuous (static batch-at-a-time scheduling\n\
+                 instead of continuous batching)\n\
          run:    --engine baseline|ft_full|ft_pruned  --n N  --max-new T\n\
                  --no-pipeline  --no-bucketing  --no-multi-step  --seed S\n\
          ladder: --n N\n\
-         serve:  --addr HOST:PORT  --engine E"
+         serve:  --addr HOST:PORT  --engine E  (wire protocol v1 +\n\
+                 v2 token streaming; see README)"
     );
     std::process::exit(2);
 }
@@ -119,6 +122,9 @@ fn build_config(args: &Args) -> ServingConfig {
     if args.has("no-pipeline") {
         cfg.pipelined = false;
     }
+    if args.has("no-continuous") {
+        cfg.continuous = false;
+    }
     if args.has("no-bucketing") {
         cfg.batch.length_bucketing = false;
     }
@@ -192,6 +198,11 @@ fn cmd_run(args: &Args) {
             println!("speed         {:.2} samples/s", s.samples_per_sec);
             println!("tokens        {} generated", s.generated_tokens);
             println!("latency       {}", s.latency.summary());
+            println!("ttft          {}", s.ttft.summary());
+            println!(
+                "decode        {:.1} steps/retired request",
+                s.steps_per_retire
+            );
             println!("accuracy      {:.3}", s.mean_accuracy);
             println!(
                 "backend       {} execs, {} compiles ({:.2}s compile, {:.2}s exec+download {:.2}s)",
@@ -209,9 +220,9 @@ fn cmd_run(args: &Args) {
                 s.stages.overlappable_fraction() * 100.0
             );
             println!(
-                "inference     {} worker(s), batch latency {}",
+                "inference     {} worker(s), session latency {}",
                 s.workers,
-                s.batch_latency.summary()
+                s.session_latency.summary()
             );
         }
         Err(e) => {

@@ -15,13 +15,17 @@
 //! Two executors over the SAME stage code so the Fig 4 / Table 1 row-4
 //! comparison isolates exactly the overlap:
 //! - [`run_sequential`]: stages run one after another on one thread
-//!   (rows 1-3 of Table 1);
+//!   (rows 1-3 of Table 1), driving each batch through the step API
+//!   ([`crate::coordinator::run_batch_stepped`]) so TTFT and
+//!   steps-per-retire are measured here too;
 //! - [`run_pipelined`]: stage-per-thread with bounded handoff (row 4);
-//!   `--workers N` widens the inference stage.  With `workers == 1`
-//!   output tokens are identical to the pre-pool pipelined path (and to
-//!   [`run_sequential`], batch composition aside) — greedy decoding is
+//!   `--workers N` widens the inference stage, each worker running the
+//!   continuous-batching step loop and streaming per-request
+//!   [`crate::coordinator::PoolEvent`]s.  With `workers == 1` and
+//!   greedy sampling, output tokens are identical to
+//!   [`run_sequential`] (batch composition aside) — greedy decoding is
 //!   deterministic and per-request results are independent of batch
-//!   placement.
+//!   placement and admission timing.
 //!
 //! Threading model: backends are `Send + Sync`
 //! (`Arc<dyn Backend>`), and each pool worker constructs its OWN
@@ -36,8 +40,8 @@ use std::time::{Duration, Instant};
 use crate::config::ServingConfig;
 use crate::coordinator::request::summary_accuracy;
 use crate::coordinator::{
-    run_batch, DynamicBatcher, InferencePool, PoolOutput, PreparedRequest,
-    ServingResponse,
+    run_batch_stepped, DynamicBatcher, InferencePool, PoolEvent,
+    PreparedRequest, ServingResponse,
 };
 use crate::data::Request;
 use crate::engine::{build as build_engine, sampler_for};
@@ -67,8 +71,14 @@ pub struct RunSummary {
     pub runtime_stats: RuntimeStats,
     /// Inference workers that served the run (1 for sequential).
     pub workers: usize,
-    /// Per-batch inference latency, merged across workers.
-    pub batch_latency: Histogram,
+    /// Per-decode-session inference latency (one batch driven start to
+    /// last retire), merged across workers.
+    pub session_latency: Histogram,
+    /// Time-to-first-token (enqueue -> first streamed token) across
+    /// requests that emitted at least one token.
+    pub ttft: Histogram,
+    /// Mean decode-session iterations per retired request.
+    pub steps_per_retire: f64,
 }
 
 fn summarize(
@@ -82,15 +92,21 @@ fn summarize(
     // (sums) every worker's counter.
     compile_wall_secs: f64,
     workers: usize,
-    batch_latency: Histogram,
+    session_latency: Histogram,
 ) -> RunSummary {
     let mut latency = Histogram::new();
+    let mut ttft = Histogram::new();
     let mut generated_tokens = 0u64;
+    let mut steps_sum = 0u64;
     let mut acc_sum = 0.0;
     let mut acc_n = 0usize;
     for r in &responses {
         latency.record(r.latency);
+        if let Some(t) = r.ttft {
+            ttft.record(t);
+        }
         generated_tokens += r.summary_ids.len() as u64;
+        steps_sum += r.steps as u64;
         if let Some(a) = r.accuracy {
             acc_sum += a;
             acc_n += 1;
@@ -109,20 +125,47 @@ fn summarize(
         samples_per_sec: responses.len() as f64 / steady,
         runtime_stats,
         mean_accuracy: if acc_n > 0 { acc_sum / acc_n as f64 } else { 0.0 },
+        steps_per_retire: if responses.is_empty() {
+            0.0
+        } else {
+            steps_sum as f64 / responses.len() as f64
+        },
         generated_tokens,
         latency,
+        ttft,
         stages,
         wall,
         responses,
         workers,
-        batch_latency,
+        session_latency,
     }
 }
 
 // ---------------------------------------------------------------- stages
 
+fn frame(
+    ids: &[u32],
+    req: &Request,
+    enqueued: Instant,
+) -> PreparedRequest {
+    let mut prompt = Vec::with_capacity(ids.len() + 2);
+    prompt.push(special::BOS);
+    prompt.extend_from_slice(ids);
+    prompt.push(special::SEP);
+    PreparedRequest {
+        id: req.id,
+        prompt,
+        max_new_tokens: req.max_new_tokens,
+        reference_summary: req.reference_summary.clone(),
+        enqueued,
+        deadline: None,
+        cancel: None,
+    }
+}
+
 /// Preprocess: normalize + tokenize + frame as `[BOS] doc [SEP]`,
-/// truncating so prompt + generation budget fits `max_seq`.
+/// truncating so prompt + generation budget fits `max_seq` — the
+/// offline-workload policy (summarize the head of an oversized doc).
 pub fn preprocess(
     tok: &FastTokenizer,
     vocab_limit: u32,
@@ -135,17 +178,31 @@ pub fn preprocess(
         .saturating_sub(2 + req.max_new_tokens)
         .max(1);
     ids.truncate(budget);
-    let mut prompt = Vec::with_capacity(ids.len() + 2);
-    prompt.push(special::BOS);
-    prompt.extend_from_slice(&ids);
-    prompt.push(special::SEP);
-    PreparedRequest {
-        id: req.id,
-        prompt,
-        max_new_tokens: req.max_new_tokens,
-        reference_summary: req.reference_summary.clone(),
-        enqueued,
+    frame(&ids, req, enqueued)
+}
+
+/// Strict preprocess for the serving boundary: instead of silently
+/// truncating, REJECT a request whose tokenized prompt + generation
+/// budget cannot fit the engine's largest compiled bucket — the typed
+/// `bad_request` path of the wire protocol.
+pub fn preprocess_strict(
+    tok: &FastTokenizer,
+    vocab_limit: u32,
+    max_seq: usize,
+    req: &Request,
+    enqueued: Instant,
+) -> std::result::Result<PreparedRequest, String> {
+    let ids = tok.encode(&req.text, vocab_limit);
+    let need = (ids.len() + 2).saturating_add(req.max_new_tokens);
+    if need > max_seq {
+        return Err(format!(
+            "prompt ({} tokens + BOS/SEP) + max_new_tokens ({}) needs \
+             {need} sequence slots, over the engine's max_seq {max_seq}",
+            ids.len(),
+            req.max_new_tokens,
+        ));
     }
+    Ok(frame(&ids, req, enqueued))
 }
 
 /// Postprocess: detokenize + score + stamp latency.
@@ -164,8 +221,11 @@ pub fn postprocess(
         latency: req.enqueued.elapsed(),
         summary_ids: generated,
         summary_text,
+        ttft: None,
+        steps: 0,
         accuracy,
         error: None,
+        code: None,
     }
 }
 
@@ -202,7 +262,7 @@ pub fn run_sequential(
     let mut batcher = DynamicBatcher::new(cfg.batch.clone(), seq_lens);
 
     let mut stages = StageTimer::default();
-    let mut batch_latency = Histogram::new();
+    let mut session_latency = Histogram::new();
     let mut responses = Vec::with_capacity(requests.len());
     let wall_start = Instant::now();
     // only compilation INSIDE the measured window counts against steady
@@ -229,15 +289,25 @@ pub fn run_sequential(
     }
     for force in [false, true] {
         while let Some(batch) = batcher.pop_full_or(force) {
+            // drive the batch through the step API so TTFT and
+            // steps-per-retire are observable here too
             let t = Instant::now();
-            let outs = run_batch(engine.as_ref(), &mut sampler, &batch)?;
+            let outs =
+                run_batch_stepped(engine.as_ref(), &mut sampler, &batch)?;
             let dt = t.elapsed();
             stages.inference += dt;
-            batch_latency.record(dt);
+            session_latency.record(dt);
 
             let t = Instant::now();
-            for (req, generated) in outs {
-                responses.push(postprocess(tok.vocab(), &req, generated));
+            for stepped in outs {
+                let mut resp = postprocess(
+                    tok.vocab(),
+                    &stepped.request,
+                    stepped.output.generated,
+                );
+                resp.ttft = stepped.ttft;
+                resp.steps = stepped.output.steps;
+                responses.push(resp);
             }
             stages.postprocess += t.elapsed();
         }
@@ -253,7 +323,7 @@ pub fn run_sequential(
         rt_stats,
         compile_wall,
         1,
-        batch_latency,
+        session_latency,
     ))
 }
 
@@ -286,14 +356,22 @@ pub fn run_pipelined(
     let (pre_tx, pre_rx) = mpsc::sync_channel::<(Request, Instant)>(
         cfg.stage_queue * cfg.batch.max_batch,
     );
-    let (out_tx, out_rx) =
-        mpsc::sync_channel::<PoolOutput>(cfg.stage_queue.max(cfg.workers));
+    // sized for per-token event traffic, not just per-batch results
+    let (out_tx, out_rx) = mpsc::sync_channel::<PoolEvent>(
+        (cfg.stage_queue * cfg.batch.max_batch).max(cfg.workers * 4),
+    );
 
     // --- model inference: the worker pool ------------------------------
     // start() blocks until every worker is ready (engines built, optional
     // precompile done), keeping startup compilation out of the wall clock
-    // — same role as the old single-thread ready gate.
-    let pool = InferencePool::start(cfg, out_tx)?;
+    // — same role as the old single-thread ready gate.  No live client
+    // reads per-token events offline, so don't pay to stream them.
+    let pool_cfg = {
+        let mut c = cfg.clone();
+        c.stream_tokens = false;
+        c
+    };
+    let pool = InferencePool::start(&pool_cfg, out_tx)?;
     let n_workers = pool.workers();
     let batch_tx = pool.input();
 
@@ -351,26 +429,37 @@ pub fn run_pipelined(
             let mut busy = Duration::ZERO;
             let mut responses = Vec::new();
             let mut first_err = None;
-            for out in out_rx.iter() {
-                match out.generated {
-                    Ok(generated) => {
+            for ev in out_rx.iter() {
+                match ev {
+                    // offline runs have no streaming client; per-token
+                    // events are consumed by server::streaming instead
+                    PoolEvent::Tokens { .. } => {}
+                    PoolEvent::Finished {
+                        request,
+                        generated,
+                        steps,
+                        ttft,
+                        ..
+                    } => {
                         let t = Instant::now();
-                        for (req, gen) in
-                            out.batch.requests.iter().zip(generated)
-                        {
-                            responses
-                                .push(postprocess(post_tok.vocab(), req, gen));
-                        }
+                        let mut resp =
+                            postprocess(post_tok.vocab(), &request, generated);
+                        resp.ttft = ttft;
+                        resp.steps = steps;
+                        responses.push(resp);
                         busy += t.elapsed();
                     }
-                    Err(e) => {
+                    PoolEvent::Failed { request, message, .. } => {
                         // offline runs are all-or-nothing: remember the
                         // failure (the run will return Err) but keep
                         // draining so upstream stages can exit cleanly.
                         // Per-request error REPLIES are a streaming
                         // concern — see server::streaming.
                         if first_err.is_none() {
-                            first_err = Some(e);
+                            first_err = Some(Error::Other(format!(
+                                "request {}: {message}",
+                                request.id
+                            )));
                         }
                     }
                 }
@@ -419,7 +508,7 @@ pub fn run_pipelined(
         report.runtime_stats(),
         compile_wall,
         n_workers,
-        report.batch_latency(),
+        report.session_latency(),
     ))
 }
 

@@ -1,0 +1,172 @@
+//! Embeddable serving handle — the library-first front door.
+//!
+//! [`Server`] wraps the streaming pipeline (continuous batcher + reply
+//! router) behind a builder, so applications embed the engine without
+//! touching sockets or wire framing:
+//!
+//! ```no_run
+//! use aigc_infer::{Server, ServingEvent};
+//!
+//! let server = Server::builder()
+//!     .workers(2)
+//!     .max_new_tokens(16)
+//!     .start()
+//!     .unwrap();
+//! let stream = server.submit("ba gedu fi", 8).unwrap();
+//! for ev in stream.iter() {
+//!     match ev {
+//!         ServingEvent::Token { text, .. } => print!("{text} "),
+//!         ServingEvent::Done(resp) => println!("\n[{}]", resp.id),
+//!     }
+//! }
+//! ```
+//!
+//! `submit` returns a per-request [`RequestStream`]: token events while
+//! the request decodes, then exactly one terminal `Done`.  Dropping the
+//! `Server` drains and joins every stage.
+
+use std::time::Duration;
+
+use super::streaming::{
+    RequestStream, StreamingPipeline, SubmitHandle, SubmitOptions,
+};
+use crate::config::{BackendKind, EngineKind, ServingConfig};
+use crate::coordinator::ServingResponse;
+use crate::data::Request;
+use crate::Result;
+
+/// Builder for an embedded [`Server`] (defaults =
+/// [`ServingConfig::default`]: reference backend, FT-pruned engine,
+/// one worker, continuous batching on).
+#[derive(Debug, Clone, Default)]
+pub struct ServerBuilder {
+    cfg: ServingConfig,
+}
+
+impl ServerBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start from an explicit config (CLI / JSON-file paths).
+    pub fn from_config(cfg: ServingConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Inference workers (each with its own backend + engine).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    /// Default generation budget for [`Server::submit`].
+    pub fn max_new_tokens(mut self, n: usize) -> Self {
+        self.cfg.gen.max_new_tokens = n;
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.batch.max_batch = n;
+        self
+    }
+
+    /// Toggle continuous batching (on by default); off = static
+    /// batch-at-a-time scheduling, kept for A/B comparison.
+    pub fn continuous(mut self, on: bool) -> Self {
+        self.cfg.continuous = on;
+        self
+    }
+
+    /// Compile every bucket at startup for clean first-request latency.
+    pub fn precompile(mut self, on: bool) -> Self {
+        self.cfg.precompile = on;
+        self
+    }
+
+    /// Stand the pipeline up (blocks until every worker is ready).
+    pub fn start(self) -> Result<Server> {
+        let pipeline = StreamingPipeline::start(self.cfg.clone())?;
+        let handle = pipeline.handle();
+        Ok(Server { cfg: self.cfg, pipeline, handle })
+    }
+}
+
+/// A running embedded server; see the module docs for the lifecycle.
+pub struct Server {
+    cfg: ServingConfig,
+    // field order matters: the handle (a pipeline-input sender) must
+    // drop BEFORE the pipeline, whose Drop joins the stage threads
+    handle: SubmitHandle,
+    pipeline: StreamingPipeline,
+}
+
+impl Server {
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::new()
+    }
+
+    /// The config the server is running.
+    pub fn config(&self) -> &ServingConfig {
+        &self.cfg
+    }
+
+    /// A cloneable submission handle that can outlive `&self` borrows
+    /// (hand it to other threads).  Drop every clone before dropping
+    /// the `Server` — its shutdown waits for the input channel to
+    /// close.
+    pub fn handle(&self) -> SubmitHandle {
+        self.pipeline.handle()
+    }
+
+    /// Submit a text for summarization; `max_new` caps the generated
+    /// tokens.  Returns the request's event stream.
+    pub fn submit(
+        &self,
+        text: impl Into<String>,
+        max_new: usize,
+    ) -> Result<RequestStream> {
+        self.submit_request(
+            Request {
+                id: 0, // assigned server-side
+                text: text.into(),
+                max_new_tokens: max_new,
+                arrival: Duration::ZERO,
+                reference_summary: None,
+            },
+            SubmitOptions::default(),
+        )
+    }
+
+    /// Submit a full [`Request`] with per-request options (deadline…).
+    pub fn submit_request(
+        &self,
+        req: Request,
+        opts: SubmitOptions,
+    ) -> Result<RequestStream> {
+        self.handle.submit(req, opts)
+    }
+
+    /// One-shot convenience: submit and block for the final response.
+    pub fn generate(
+        &self,
+        text: impl Into<String>,
+        max_new: usize,
+    ) -> Result<ServingResponse> {
+        self.submit(text, max_new)?.wait()
+    }
+}

@@ -1,27 +1,45 @@
-//! TCP serving front-end: newline-delimited JSON over a streaming
-//! instance of the Fig-4 pipeline.
+//! TCP serving front-end: newline-delimited JSON over the streaming
+//! pipeline (continuous batcher + per-request event streams).
 //!
-//! Wire protocol (one JSON object per line):
-//!   -> {"id": 7, "text": "ba gedu …", "max_new_tokens": 16}
-//!   <- {"id": 7, "summary": "ba gedu", "latency_ms": 12.3}
-//!   <- {"id": 7, "error": "…"}            (on failure)
+//! Protocol (see [`protocol`] docs for the full line formats):
+//!   v1 (default)   -> request line, <- ONE reply line (summary/error)
+//!   v2 ("v": 2)    -> request line, <- token event lines, then one
+//!                     done/error line
+//!
+//! Requests are validated AT THE BOUNDARY: `max_new_tokens == 0`,
+//! generation budgets beyond the engine's `max_seq`, or oversized
+//! prompts get an immediate `{"id", "error", "code": "bad_request"}`
+//! reply instead of poisoning a batch; a saturated admission queue
+//! replies `"code": "overloaded"` (the front-end uses the non-blocking
+//! submit).  Client-supplied ids are echoed verbatim; requests without
+//! one get the server-assigned unique id echoed back, so replies never
+//! collide on a defaulted id.
 //!
 //! Threads: acceptor + one reader/writer pair per connection + the
-//! pre/post stage threads + `cfg.workers` inference workers (each with
-//! its own backend — `--workers N` scales the model stage).  A batch
-//! that fails inference yields `error` replies for its requests; no
-//! client is left hanging on a dropped reply channel.
+//! pre/router stage threads + `cfg.workers` step-scheduled inference
+//! workers (each with its own backend — `--workers N` scales the model
+//! stage; continuous batching admits new requests into running decode
+//! sessions between steps).
 
+mod embed;
 mod protocol;
-mod streaming;
+pub(crate) mod streaming;
 
-pub use protocol::{parse_request_line, response_to_json};
-pub use streaming::{StreamingPipeline, SubmitHandle};
+pub use embed::{Server, ServerBuilder};
+pub use protocol::{
+    error_event_to_json, error_to_json, event_to_json, parse_request_line,
+    response_to_json, WireRequest,
+};
+pub use streaming::{
+    RequestStream, ServingEvent, StreamingPipeline, SubmitHandle,
+    SubmitOptions,
+};
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::ServingConfig;
 use crate::Result;
@@ -34,16 +52,14 @@ pub fn serve(cfg: ServingConfig, addr: &str,
     eprintln!("aigc-infer serving on {addr} (engine={})",
               cfg.engine.label());
     let pipeline = StreamingPipeline::start(cfg)?;
-    let next_internal_id = Arc::new(AtomicU64::new(1));
 
     let mut conn_handles = Vec::new();
     while !shutdown.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, peer)) => {
                 let submit = pipeline.handle();
-                let ids = next_internal_id.clone();
                 conn_handles.push(std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, submit, ids) {
+                    if let Err(e) = handle_conn(stream, submit) {
                         eprintln!("connection {peer}: {e}");
                     }
                 }));
@@ -61,8 +77,7 @@ pub fn serve(cfg: ServingConfig, addr: &str,
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, submit: SubmitHandle,
-               ids: Arc<AtomicU64>) -> Result<()> {
+fn handle_conn(stream: TcpStream, submit: SubmitHandle) -> Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     for line in reader.lines() {
@@ -70,25 +85,67 @@ fn handle_conn(stream: TcpStream, submit: SubmitHandle,
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request_line(&line) {
-            Ok(mut req) => {
-                // client ids are echoed; internal routing uses unique ids
-                let client_id = req.id;
-                req.id = ids.fetch_add(1, Ordering::Relaxed);
-                let (tx, rx) = mpsc::channel();
-                submit.submit(req, tx)?;
-                let mut resp = rx
-                    .recv()
-                    .map_err(|_| crate::Error::Shutdown("pipeline closed"))?;
-                resp.id = client_id;
-                writeln!(writer, "{}", response_to_json(&resp))?;
-            }
+        let wire = match parse_request_line(&line) {
+            Ok(w) => w,
             Err(e) => {
                 writeln!(
                     writer,
-                    "{{\"error\":{}}}",
-                    crate::util::json::Value::str(e.to_string()).to_json()
+                    "{}",
+                    error_to_json(None, e.code(), &e.to_string())
                 )?;
+                continue;
+            }
+        };
+        let opts = SubmitOptions {
+            deadline: wire.deadline_ms.map(Duration::from_millis),
+        };
+        // non-blocking submit: a saturated server sheds load with a
+        // typed `overloaded` reply instead of stalling the socket
+        let request_stream = match submit.try_submit(wire.request, opts) {
+            Ok(s) => s,
+            Err(e) => {
+                // v2 clients expect every line to be event-framed
+                let line = if wire.v >= 2 {
+                    error_event_to_json(
+                        wire.client_id,
+                        e.code(),
+                        &e.to_string(),
+                    )
+                } else {
+                    error_to_json(wire.client_id, e.code(), &e.to_string())
+                };
+                writeln!(writer, "{line}")?;
+                continue;
+            }
+        };
+        // echo the client's id; fall back to the server-assigned one
+        let wire_id = wire.client_id.unwrap_or(request_stream.id());
+        if wire.v >= 2 {
+            // v2: stream token events, then the terminal line
+            for ev in request_stream.iter() {
+                writeln!(writer, "{}", event_to_json(wire_id, &ev))?;
+                if matches!(ev, ServingEvent::Done(_)) {
+                    break;
+                }
+            }
+        } else {
+            // v1: single reply line
+            match request_stream.wait() {
+                Ok(mut resp) => {
+                    resp.id = wire_id;
+                    writeln!(writer, "{}", response_to_json(&resp))?;
+                }
+                Err(e) => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        error_to_json(
+                            Some(wire_id),
+                            e.code(),
+                            &e.to_string()
+                        )
+                    )?;
+                }
             }
         }
     }

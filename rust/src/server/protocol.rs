@@ -1,59 +1,186 @@
-//! Wire protocol: newline-JSON encode/decode.
+//! Wire protocol: newline-JSON encode/decode, versions 1 and 2.
+//!
+//! ## v1 (default): one reply line per request
+//!
+//! ```text
+//! -> {"id": 7, "text": "ba gedu …", "max_new_tokens": 16}
+//! <- {"id": 7, "summary": "ba gedu", "latency_ms": 12.3, ...}
+//! <- {"id": 7, "error": "…", "code": "bad_request", ...}   (on failure)
+//! ```
+//!
+//! ## v2 (negotiated with `"v": 2`): token streaming
+//!
+//! ```text
+//! -> {"v": 2, "id": 7, "text": "…", "max_new_tokens": 16,
+//!     "deadline_ms": 500}
+//! <- {"id": 7, "event": "token", "token_text": "ba", "tokens": [5]}
+//! <- {"id": 7, "event": "token", "token_text": "gedu", "tokens": [9]}
+//! <- {"id": 7, "event": "done", "summary": "ba gedu", "n_tokens": 2,
+//!     "latency_ms": 12.3, "ttft_ms": 1.9}
+//! <- {"id": 7, "event": "error", "error": "…", "code": "deadline"}
+//! ```
+//!
+//! Every error reply (both versions) carries a structured `code`:
+//! `bad_request` | `overloaded` | `engine_error` | `cancelled` |
+//! `deadline`.  The `id` a client supplies is echoed back verbatim;
+//! requests WITHOUT an id get the server-assigned unique id echoed
+//! instead (so replies are always attributable — ids never silently
+//! collide on a default).
 
 use crate::coordinator::ServingResponse;
 use crate::data::Request;
+use crate::server::streaming::ServingEvent;
 use crate::util::json::{self, Value};
 use crate::{Error, Result};
 
-/// Decode one request line.
-pub fn parse_request_line(line: &str) -> Result<Request> {
-    let v = json::parse(line)?;
+/// A decoded request line: the request plus wire-level envelope fields.
+#[derive(Debug)]
+pub struct WireRequest {
+    pub request: Request,
+    /// The id the client supplied, if any — echoed on every reply.
+    /// None: the server-assigned id is echoed instead.
+    pub client_id: Option<u64>,
+    /// Protocol version: 1 = single-line reply, 2 = event stream.
+    pub v: u64,
+    /// Optional per-request deadline, relative to arrival.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Decode one request line.  All failures are `bad_request`-coded.
+pub fn parse_request_line(line: &str) -> Result<WireRequest> {
+    let v = json::parse(line)
+        .map_err(|e| Error::BadRequest(format!("malformed JSON: {e}")))?;
     let text = v
         .get("text")
         .as_str()
-        .ok_or_else(|| Error::Other("request missing 'text'".into()))?
+        .ok_or_else(|| Error::BadRequest("request missing 'text'".into()))?
         .to_string();
-    Ok(Request {
-        id: v.get("id").as_u64().unwrap_or(0),
-        text,
-        max_new_tokens: v.get("max_new_tokens").as_usize().unwrap_or(16),
-        arrival: std::time::Duration::ZERO,
-        reference_summary: None,
+    let version = v.get("v").as_u64().unwrap_or(1);
+    if !(1..=2).contains(&version) {
+        return Err(Error::BadRequest(format!(
+            "unsupported protocol version {version} (this server speaks \
+             v1 and v2)"
+        )));
+    }
+    Ok(WireRequest {
+        request: Request {
+            id: 0, // assigned server-side; client_id carries the echo
+            text,
+            max_new_tokens: v.get("max_new_tokens").as_usize().unwrap_or(16),
+            arrival: std::time::Duration::ZERO,
+            reference_summary: None,
+        },
+        client_id: v.get("id").as_u64(),
+        v: version,
+        deadline_ms: v.get("deadline_ms").as_u64(),
     })
 }
 
-/// Encode one response line.  Failed requests encode as
-/// `{"id": .., "error": ".."}` (plus latency) so clients can tell an
+fn ms(d: std::time::Duration) -> Value {
+    Value::num((d.as_secs_f64() * 1e3 * 100.0).round() / 100.0)
+}
+
+/// Encode one v1 response line.  Failed requests encode as
+/// `{"id", "error", "code"}` (plus latency) so clients can tell an
 /// inference failure from an empty summary.
 pub fn response_to_json(r: &ServingResponse) -> String {
     if let Some(err) = &r.error {
         return Value::obj(vec![
             ("id", Value::num(r.id as f64)),
             ("error", Value::str(err.clone())),
-            (
-                "latency_ms",
-                Value::num(
-                    (r.latency.as_secs_f64() * 1e3 * 100.0).round() / 100.0,
-                ),
-            ),
+            ("code", Value::str(r.code.unwrap_or("engine_error"))),
+            ("latency_ms", ms(r.latency)),
         ])
         .to_json();
     }
     let mut pairs = vec![
         ("id", Value::num(r.id as f64)),
         ("summary", Value::str(r.summary_text.clone())),
-        (
-            "latency_ms",
-            Value::num((r.latency.as_secs_f64() * 1e3 * 100.0).round() / 100.0),
-        ),
-        (
-            "n_tokens",
-            Value::num(r.summary_ids.len() as f64),
-        ),
+        ("latency_ms", ms(r.latency)),
+        ("n_tokens", Value::num(r.summary_ids.len() as f64)),
     ];
+    if let Some(t) = r.ttft {
+        pairs.push(("ttft_ms", ms(t)));
+    }
     if let Some(a) = r.accuracy {
         pairs.push(("accuracy", Value::num(a)));
     }
+    Value::obj(pairs).to_json()
+}
+
+/// Encode one v2 event line for request `id` (the wire-visible id —
+/// the client's own when it sent one).
+pub fn event_to_json(id: u64, ev: &ServingEvent) -> String {
+    match ev {
+        ServingEvent::Token { tokens, text } => Value::obj(vec![
+            ("id", Value::num(id as f64)),
+            ("event", Value::str("token")),
+            ("token_text", Value::str(text.clone())),
+            (
+                "tokens",
+                Value::Array(
+                    tokens.iter().map(|&t| Value::num(t as f64)).collect(),
+                ),
+            ),
+        ])
+        .to_json(),
+        ServingEvent::Done(r) => {
+            if let Some(err) = &r.error {
+                return Value::obj(vec![
+                    ("id", Value::num(id as f64)),
+                    ("event", Value::str("error")),
+                    ("error", Value::str(err.clone())),
+                    ("code", Value::str(r.code.unwrap_or("engine_error"))),
+                    ("latency_ms", ms(r.latency)),
+                ])
+                .to_json();
+            }
+            let mut pairs = vec![
+                ("id", Value::num(id as f64)),
+                ("event", Value::str("done")),
+                ("summary", Value::str(r.summary_text.clone())),
+                ("n_tokens", Value::num(r.summary_ids.len() as f64)),
+                ("latency_ms", ms(r.latency)),
+            ];
+            if let Some(t) = r.ttft {
+                pairs.push(("ttft_ms", ms(t)));
+            }
+            if let Some(a) = r.accuracy {
+                pairs.push(("accuracy", Value::num(a)));
+            }
+            Value::obj(pairs).to_json()
+        }
+    }
+}
+
+/// Encode a request-level error reply (validation / parse failures that
+/// never reached the pipeline).  `id` is echoed when the line carried
+/// one.
+pub fn error_to_json(id: Option<u64>, code: &str, message: &str) -> String {
+    let mut pairs = Vec::new();
+    if let Some(id) = id {
+        pairs.push(("id", Value::num(id as f64)));
+    }
+    pairs.push(("error", Value::str(message)));
+    pairs.push(("code", Value::str(code)));
+    Value::obj(pairs).to_json()
+}
+
+/// The v2 framing of the same boundary errors: every v2 server line is
+/// an event, so rejections carry `"event": "error"` and a v2 client's
+/// event dispatcher never sees an unframed line.
+pub fn error_event_to_json(
+    id: Option<u64>,
+    code: &str,
+    message: &str,
+) -> String {
+    let mut pairs = Vec::new();
+    if let Some(id) = id {
+        pairs.push(("id", Value::num(id as f64)));
+    }
+    pairs.push(("event", Value::str("error")));
+    pairs.push(("error", Value::str(message)));
+    pairs.push(("code", Value::str(code)));
     Value::obj(pairs).to_json()
 }
 
@@ -62,55 +189,138 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
-    #[test]
-    fn parse_minimal_and_full() {
-        let r = parse_request_line(r#"{"text": "ba be"}"#).unwrap();
-        assert_eq!(r.text, "ba be");
-        assert_eq!(r.max_new_tokens, 16);
-        let r = parse_request_line(
-            r#"{"id": 9, "text": "ba", "max_new_tokens": 4}"#,
-        )
-        .unwrap();
-        assert_eq!(r.id, 9);
-        assert_eq!(r.max_new_tokens, 4);
+    fn ok_response(id: u64) -> ServingResponse {
+        ServingResponse {
+            id,
+            summary_ids: vec![5, 6],
+            summary_text: "ba be".into(),
+            latency: Duration::from_millis(12),
+            ttft: Some(Duration::from_millis(3)),
+            steps: 4,
+            accuracy: Some(0.5),
+            error: None,
+            code: None,
+        }
     }
 
     #[test]
-    fn parse_rejects_missing_text() {
-        assert!(parse_request_line(r#"{"id": 1}"#).is_err());
-        assert!(parse_request_line("not json").is_err());
+    fn parse_minimal_and_full() {
+        let w = parse_request_line(r#"{"text": "ba be"}"#).unwrap();
+        assert_eq!(w.request.text, "ba be");
+        assert_eq!(w.request.max_new_tokens, 16);
+        assert_eq!(w.client_id, None, "absent id is NOT defaulted to 0");
+        assert_eq!(w.v, 1);
+        assert_eq!(w.deadline_ms, None);
+        let w = parse_request_line(
+            r#"{"v": 2, "id": 9, "text": "ba", "max_new_tokens": 4,
+                "deadline_ms": 250}"#,
+        )
+        .unwrap();
+        assert_eq!(w.client_id, Some(9));
+        assert_eq!(w.v, 2);
+        assert_eq!(w.request.max_new_tokens, 4);
+        assert_eq!(w.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines_with_bad_request_code() {
+        for line in [
+            r#"{"id": 1}"#,
+            "not json",
+            r#"{"v": 3, "text": "ba"}"#,
+        ] {
+            let err = parse_request_line(line).unwrap_err();
+            assert_eq!(err.code(), "bad_request", "{line}");
+        }
     }
 
     #[test]
     fn response_roundtrips_through_parser() {
-        let resp = ServingResponse {
-            id: 3,
-            summary_ids: vec![5, 6],
-            summary_text: "ba be".into(),
-            latency: Duration::from_millis(12),
-            accuracy: Some(0.5),
-            error: None,
-        };
-        let v = json::parse(&response_to_json(&resp)).unwrap();
+        let v = json::parse(&response_to_json(&ok_response(3))).unwrap();
         assert_eq!(v.get("id").as_u64(), Some(3));
         assert_eq!(v.get("summary").as_str(), Some("ba be"));
         assert_eq!(v.get("n_tokens").as_usize(), Some(2));
         assert!(v.get("latency_ms").as_f64().unwrap() >= 12.0);
+        assert!(v.get("ttft_ms").as_f64().unwrap() >= 3.0);
         assert_eq!(v.get("accuracy").as_f64(), Some(0.5));
+        assert!(v.get("code").is_null());
     }
 
     #[test]
-    fn failed_response_encodes_error_not_summary() {
+    fn failed_response_encodes_error_code_not_summary() {
         let resp = ServingResponse::failed(
             9,
             Duration::from_millis(5),
             "no compiled bucket".into(),
+            "bad_request",
         );
         let line = response_to_json(&resp);
         let v = json::parse(&line).unwrap();
         assert_eq!(v.get("id").as_u64(), Some(9));
         assert_eq!(v.get("error").as_str(), Some("no compiled bucket"));
+        assert_eq!(v.get("code").as_str(), Some("bad_request"));
         assert!(v.get("summary").is_null(), "{line}");
         assert!(v.get("latency_ms").as_f64().is_some());
+    }
+
+    #[test]
+    fn v2_token_and_done_events_encode() {
+        let ev = ServingEvent::Token {
+            tokens: vec![5, 9],
+            text: "ba gedu".into(),
+        };
+        let v = json::parse(&event_to_json(7, &ev)).unwrap();
+        assert_eq!(v.get("id").as_u64(), Some(7));
+        assert_eq!(v.get("event").as_str(), Some("token"));
+        assert_eq!(v.get("token_text").as_str(), Some("ba gedu"));
+        assert_eq!(v.get("tokens").as_array().unwrap().len(), 2);
+
+        let v = json::parse(&event_to_json(
+            7,
+            &ServingEvent::Done(ok_response(99)),
+        ))
+        .unwrap();
+        // the WIRE id wins over the response's internal id
+        assert_eq!(v.get("id").as_u64(), Some(7));
+        assert_eq!(v.get("event").as_str(), Some("done"));
+        assert_eq!(v.get("summary").as_str(), Some("ba be"));
+        assert_eq!(v.get("n_tokens").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn v2_terminal_error_event_encodes_code() {
+        let resp = ServingResponse::failed(
+            4,
+            Duration::from_millis(1),
+            "request cancelled by client".into(),
+            "cancelled",
+        );
+        let v = json::parse(&event_to_json(4, &ServingEvent::Done(resp)))
+            .unwrap();
+        assert_eq!(v.get("event").as_str(), Some("error"));
+        assert_eq!(v.get("code").as_str(), Some("cancelled"));
+        assert!(v.get("summary").is_null());
+    }
+
+    #[test]
+    fn request_level_error_lines() {
+        let v = json::parse(&error_to_json(Some(3), "bad_request", "nope"))
+            .unwrap();
+        assert_eq!(v.get("id").as_u64(), Some(3));
+        assert_eq!(v.get("code").as_str(), Some("bad_request"));
+        let v = json::parse(&error_to_json(None, "overloaded", "later"))
+            .unwrap();
+        assert!(v.get("id").is_null());
+        assert_eq!(v.get("code").as_str(), Some("overloaded"));
+        // the v2 framing of the same rejection is event-shaped
+        let v = json::parse(&error_event_to_json(
+            Some(3),
+            "bad_request",
+            "nope",
+        ))
+        .unwrap();
+        assert_eq!(v.get("event").as_str(), Some("error"));
+        assert_eq!(v.get("id").as_u64(), Some(3));
+        assert_eq!(v.get("code").as_str(), Some("bad_request"));
     }
 }

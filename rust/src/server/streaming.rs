@@ -1,42 +1,210 @@
 //! Streaming instance of the Fig-4 pipeline for live traffic: the same
-//! preprocessing/postprocessing stage threads as
-//! `pipeline::run_pipelined` around the multi-worker
-//! [`InferencePool`], but requests arrive one at a time with a
-//! per-request reply channel instead of a fixed workload.
+//! preprocessing stage thread as `pipeline::run_pipelined` around the
+//! continuous-batching [`InferencePool`], but requests arrive one at a
+//! time and every submission returns a **per-request event stream**
+//! ([`RequestStream`]) instead of a single reply.
 //!
-//! Failure semantics: every submitted request gets EXACTLY ONE reply.
-//! Worker startup failures surface as a typed error from
-//! [`StreamingPipeline::start`]; a batch that fails inference produces
-//! `ServingResponse { error: Some(..) }` replies for its requests —
-//! never an `eprintln!` + silently dropped reply channel.
+//! Event contract: a stream yields zero or more
+//! [`ServingEvent::Token`]s (emitted live, step by step, while the
+//! request decodes) followed by EXACTLY ONE [`ServingEvent::Done`] —
+//! success or a typed failure (`bad_request`, `overloaded`,
+//! `engine_error`, `cancelled`, `deadline`).  Never a silent drop:
+//! worker startup failures surface as a typed error from
+//! [`StreamingPipeline::start`]; requests rejected at the boundary
+//! fail the [`SubmitHandle::submit`] call itself.
+//!
+//! Cancellation: [`RequestStream::cancel`] flips a flag the continuous
+//! batcher checks at step boundaries; the stream then terminates with a
+//! `cancelled` error event.  An abandoned stream (receiver dropped) is
+//! auto-cancelled by the reply router on the first undeliverable token,
+//! so the pool stops decoding for clients that went away.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::ServingConfig;
 use crate::coordinator::{
-    DynamicBatcher, InferencePool, PoolOutput, ServingResponse,
+    DynamicBatcher, InferencePool, PoolEvent, ServingResponse,
 };
 use crate::data::Request;
-use crate::pipeline::{postprocess, preprocess};
+use crate::pipeline::preprocess_strict;
 use crate::runtime::manifest_for;
-use crate::tokenizer::{FastTokenizer, Vocab};
+use crate::tokenizer::{decode as detokenize, FastTokenizer, Vocab};
 use crate::{Error, Result};
 
-type ReplyTx = mpsc::Sender<ServingResponse>;
+/// One event on a request's reply stream.
+#[derive(Debug, Clone)]
+pub enum ServingEvent {
+    /// Tokens emitted by one decode step, detokenized incrementally.
+    Token { tokens: Vec<u32>, text: String },
+    /// Terminal: the full response (success, or `error`+`code` set).
+    Done(ServingResponse),
+}
+
+/// Per-request options at submission time.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOptions {
+    /// Relative deadline; past it the request is retired at the next
+    /// step boundary with a `deadline` error event.
+    pub deadline: Option<Duration>,
+}
+
+/// The client's half of one submitted request: an event receiver plus
+/// the cancellation handle.
+pub struct RequestStream {
+    id: u64,
+    rx: mpsc::Receiver<ServingEvent>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RequestStream {
+    /// The server-assigned unique request id (echoed on wire replies).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the pool to stop decoding this request; the stream then
+    /// terminates with a `cancelled` error event.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Blocking receive; None once the stream is exhausted.
+    pub fn recv(&self) -> Option<ServingEvent> {
+        self.rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<ServingEvent> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Iterate events until the stream closes (the terminal `Done` is
+    /// the last event).
+    pub fn iter(&self) -> impl Iterator<Item = ServingEvent> + '_ {
+        std::iter::from_fn(move || self.recv())
+    }
+
+    /// Drain the stream to its terminal response (one-shot clients).
+    pub fn wait(self) -> Result<ServingResponse> {
+        for ev in self.iter() {
+            if let ServingEvent::Done(resp) = ev {
+                return Ok(resp);
+            }
+        }
+        Err(Error::Shutdown("reply stream closed without a terminal event"))
+    }
+}
+
+/// Reply-router state for one in-flight request.
+struct Route {
+    tx: mpsc::Sender<ServingEvent>,
+    cancel: Arc<AtomicBool>,
+}
+
+type Routes = Arc<Mutex<HashMap<u64, Route>>>;
+
+/// What submit hands the preprocessing stage.
+struct Inbound {
+    req: Request,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    cancel: Arc<AtomicBool>,
+}
 
 /// Cloneable submission handle.
 #[derive(Clone)]
 pub struct SubmitHandle {
-    tx: mpsc::SyncSender<(Request, ReplyTx, Instant)>,
+    tx: mpsc::SyncSender<Inbound>,
+    routes: Routes,
+    next_id: Arc<AtomicU64>,
+    /// Engine's largest compiled sequence bucket (boundary validation).
+    max_seq: usize,
 }
 
 impl SubmitHandle {
-    pub fn submit(&self, req: Request, reply: ReplyTx) -> Result<()> {
-        self.tx
-            .send((req, reply, Instant::now()))
-            .map_err(|_| Error::Shutdown("pipeline input closed"))
+    /// Submit with backpressure: blocks while the admission queue is
+    /// full.  Returns the request's event stream, or a typed
+    /// `bad_request` error when the request can never be served.
+    pub fn submit(
+        &self,
+        req: Request,
+        opts: SubmitOptions,
+    ) -> Result<RequestStream> {
+        self.submit_inner(req, opts, true)
+    }
+
+    /// Non-blocking submit: a full admission queue returns a typed
+    /// `overloaded` error instead of waiting (the wire front-end uses
+    /// this so saturated servers shed load visibly).
+    pub fn try_submit(
+        &self,
+        req: Request,
+        opts: SubmitOptions,
+    ) -> Result<RequestStream> {
+        self.submit_inner(req, opts, false)
+    }
+
+    fn submit_inner(
+        &self,
+        mut req: Request,
+        opts: SubmitOptions,
+        block: bool,
+    ) -> Result<RequestStream> {
+        // Boundary validation: reject requests that can NEVER be
+        // served, before they poison a batch (satellite: typed
+        // bad_request instead of a late in-batch failure).
+        if req.max_new_tokens == 0 {
+            return Err(Error::BadRequest(
+                "max_new_tokens must be >= 1".into(),
+            ));
+        }
+        if req.max_new_tokens.saturating_add(2) > self.max_seq {
+            return Err(Error::BadRequest(format!(
+                "max_new_tokens {} leaves no room for a prompt inside the \
+                 engine's max_seq {}",
+                req.max_new_tokens, self.max_seq
+            )));
+        }
+        // server-side unique id (echoed back); client ids are the wire
+        // layer's business
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        let enqueued = Instant::now();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel();
+        self.routes
+            .lock()
+            .unwrap()
+            .insert(id, Route { tx, cancel: cancel.clone() });
+        let inbound = Inbound {
+            req,
+            enqueued,
+            // checked: an absurd client deadline saturates to "none"
+            // instead of panicking on Instant overflow
+            deadline: opts.deadline.and_then(|d| enqueued.checked_add(d)),
+            cancel: cancel.clone(),
+        };
+        let sent = if block {
+            self.tx.send(inbound).map_err(|_| {
+                Error::Shutdown("pipeline input closed")
+            })
+        } else {
+            self.tx.try_send(inbound).map_err(|e| match e {
+                mpsc::TrySendError::Full(_) => {
+                    Error::Overloaded("admission queue full")
+                }
+                mpsc::TrySendError::Disconnected(_) => {
+                    Error::Shutdown("pipeline input closed")
+                }
+            })
+        };
+        if let Err(e) = sent {
+            self.routes.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        Ok(RequestStream { id, rx, cancel })
     }
 }
 
@@ -70,14 +238,14 @@ impl StreamingPipeline {
         drop(manifest);
 
         let tok = Arc::new(FastTokenizer::new(Vocab::synthetic(full_vocab)));
-        let replies: Arc<Mutex<HashMap<u64, ReplyTx>>> =
-            Arc::new(Mutex::new(HashMap::new()));
+        let routes: Routes = Arc::new(Mutex::new(HashMap::new()));
 
-        let (in_tx, in_rx) = mpsc::sync_channel::<(Request, ReplyTx, Instant)>(
+        let (in_tx, in_rx) = mpsc::sync_channel::<Inbound>(
             cfg.stage_queue * cfg.batch.max_batch,
         );
-        let (out_tx, out_rx) = mpsc::sync_channel::<PoolOutput>(
-            cfg.stage_queue.max(cfg.workers),
+        // sized for per-token event traffic, not just per-batch results
+        let (out_tx, out_rx) = mpsc::sync_channel::<PoolEvent>(
+            (cfg.stage_queue * cfg.batch.max_batch).max(cfg.workers * 4),
         );
 
         // inference worker pool: each worker owns its backend + engine.
@@ -88,7 +256,7 @@ impl StreamingPipeline {
 
         // preprocess + dynamic batching
         let pre_tok = tok.clone();
-        let pre_replies = replies.clone();
+        let pre_routes = routes.clone();
         let pre_policy = cfg.batch.clone();
         let pre = std::thread::Builder::new()
             .name("srv-preprocess".into())
@@ -99,17 +267,35 @@ impl StreamingPipeline {
                     match in_rx.recv_timeout(Duration::from_millis(
                         pre_policy.max_wait_ms.max(1),
                     )) {
-                        Ok((req, reply, enq)) => {
-                            let prepared = preprocess(
-                                &pre_tok, vocab_limit, max_seq, &req, enq,
-                            );
-                            pre_replies
-                                .lock()
-                                .unwrap()
-                                .insert(prepared.id, reply);
+                        Ok(inbound) => {
+                            let Inbound { req, enqueued, deadline, cancel } =
+                                inbound;
+                            let mut prepared = match preprocess_strict(
+                                &pre_tok, vocab_limit, max_seq, &req,
+                                enqueued,
+                            ) {
+                                Ok(p) => p,
+                                Err(msg) => {
+                                    // typed rejection at the boundary:
+                                    // the oversized prompt never
+                                    // reaches a batch
+                                    reply_failed(
+                                        &pre_routes,
+                                        req.id,
+                                        enqueued.elapsed(),
+                                        msg,
+                                        "bad_request",
+                                    );
+                                    continue;
+                                }
+                            };
+                            prepared.deadline = deadline;
+                            prepared.cancel = Some(cancel);
                             batcher.push(prepared);
                             // arrivals flush on SIZE only; partial batches
-                            // wait for the idle timeout below
+                            // wait for the idle timeout below (the
+                            // continuous batcher admits them into
+                            // running sessions either way)
                             while let Some(b) = batcher.pop_full_or(false) {
                                 if batch_tx.send(b).is_err() {
                                     return;
@@ -136,46 +322,70 @@ impl StreamingPipeline {
             })
             .expect("spawn");
 
-        // postprocess + reply routing (successes AND failures)
+        // reply router: streams token events + exactly one terminal per
+        // request (successes AND failures)
         let post_tok = tok;
-        let post_replies = replies;
+        let post_routes = routes.clone();
         let post = std::thread::Builder::new()
             .name("srv-postprocess".into())
             .spawn(move || {
-                for out in out_rx.iter() {
-                    match out.generated {
-                        Ok(generated) => {
-                            for (req, gen) in
-                                out.batch.requests.iter().zip(generated)
-                            {
-                                let resp =
-                                    postprocess(post_tok.vocab(), req, gen);
-                                if let Some(tx) = post_replies
+                for ev in out_rx.iter() {
+                    match ev {
+                        PoolEvent::Tokens { id, tokens, .. } => {
+                            let text = detokenize(post_tok.vocab(), &tokens);
+                            let undeliverable = {
+                                let routes = post_routes.lock().unwrap();
+                                match routes.get(&id) {
+                                    Some(route) => route
+                                        .tx
+                                        .send(ServingEvent::Token {
+                                            tokens,
+                                            text,
+                                        })
+                                        .is_err(),
+                                    None => false,
+                                }
+                            };
+                            if undeliverable {
+                                // client went away: auto-cancel so the
+                                // pool stops decoding for it
+                                if let Some(route) = post_routes
                                     .lock()
                                     .unwrap()
-                                    .remove(&req.id)
+                                    .get(&id)
                                 {
-                                    let _ = tx.send(resp);
+                                    route
+                                        .cancel
+                                        .store(true, Ordering::Relaxed);
                                 }
                             }
                         }
-                        Err(e) => {
-                            // the batch failed: every request in it gets
-                            // an error reply, so no client hangs
-                            let msg = e.to_string();
-                            for req in &out.batch.requests {
-                                if let Some(tx) = post_replies
-                                    .lock()
-                                    .unwrap()
-                                    .remove(&req.id)
-                                {
-                                    let _ = tx.send(ServingResponse::failed(
-                                        req.id,
-                                        req.enqueued.elapsed(),
-                                        msg.clone(),
-                                    ));
-                                }
-                            }
+                        PoolEvent::Finished {
+                            request,
+                            generated,
+                            steps,
+                            ttft,
+                            ..
+                        } => {
+                            let mut resp = crate::pipeline::postprocess(
+                                post_tok.vocab(),
+                                &request,
+                                generated,
+                            );
+                            resp.ttft = ttft;
+                            resp.steps = steps;
+                            reply_done(&post_routes, request.id, resp);
+                        }
+                        PoolEvent::Failed {
+                            request, message, code, ..
+                        } => {
+                            reply_failed(
+                                &post_routes,
+                                request.id,
+                                request.enqueued.elapsed(),
+                                message,
+                                code,
+                            );
                         }
                     }
                 }
@@ -183,12 +393,38 @@ impl StreamingPipeline {
             .expect("spawn");
 
         Ok(Self {
-            handle: SubmitHandle { tx: in_tx },
+            handle: SubmitHandle {
+                tx: in_tx,
+                routes,
+                next_id: Arc::new(AtomicU64::new(1)),
+                max_seq,
+            },
             pool: Some(pool),
             pre: Some(pre),
             post: Some(post),
         })
     }
+}
+
+/// Send the terminal event and drop the route (exactly-once contract).
+fn reply_done(routes: &Routes, id: u64, resp: ServingResponse) {
+    if let Some(route) = routes.lock().unwrap().remove(&id) {
+        let _ = route.tx.send(ServingEvent::Done(resp));
+    }
+}
+
+fn reply_failed(
+    routes: &Routes,
+    id: u64,
+    latency: Duration,
+    message: String,
+    code: &'static str,
+) {
+    reply_done(
+        routes,
+        id,
+        ServingResponse::failed(id, latency, message, code),
+    );
 }
 
 impl Drop for StreamingPipeline {
@@ -198,7 +434,12 @@ impl Drop for StreamingPipeline {
         // joins its workers, the output channel closes, postprocess
         // exits.
         let (dead_tx, _) = mpsc::sync_channel(1);
-        self.handle = SubmitHandle { tx: dead_tx };
+        self.handle = SubmitHandle {
+            tx: dead_tx,
+            routes: Arc::new(Mutex::new(HashMap::new())),
+            next_id: Arc::new(AtomicU64::new(1)),
+            max_seq: self.handle.max_seq,
+        };
         if let Some(pre) = self.pre.take() {
             let _ = pre.join();
         }

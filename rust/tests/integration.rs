@@ -15,10 +15,13 @@ use std::time::Instant;
 
 use aigc_infer::config::{EngineKind, ServingConfig};
 use aigc_infer::data::{CorpusConfig, Generator, TraceConfig, TraceGenerator};
-use aigc_infer::engine::{build as build_engine, Engine, EngineInput, Sampler};
+use aigc_infer::engine::{
+    build as build_engine, DecodeSession, Engine, EngineInput, Sampler,
+};
 use aigc_infer::pipeline;
 use aigc_infer::runtime::{backend_for, Backend, DataArg, RefBackend};
 use aigc_infer::special;
+use aigc_infer::{Server, ServingEvent, SubmitOptions};
 
 fn backend() -> Arc<dyn Backend> {
     Arc::new(RefBackend::synthetic())
@@ -326,71 +329,241 @@ fn two_worker_pool_matches_one_worker_token_sets() {
     assert_eq!(b.responses.len(), reqs.len());
     assert_eq!(response_set(&a), response_set(&b));
     assert_eq!(b.workers, 2);
-    // per-worker metrics merged back into one summary: every batch is
-    // at least one backend execution (prefill), usually more (decode)
-    assert!(b.batch_latency.count() > 0);
+    // per-worker metrics merged back into one summary: every decode
+    // session is at least one backend execution (prefill), usually
+    // more (decode steps)
+    assert!(b.session_latency.count() > 0);
     assert!(
-        b.runtime_stats.executions as u64 >= b.batch_latency.count(),
-        "executions {} < batches {}",
+        b.runtime_stats.executions as u64 >= b.session_latency.count(),
+        "executions {} < sessions {}",
         b.runtime_stats.executions,
-        b.batch_latency.count()
+        b.session_latency.count()
     );
 }
 
 #[test]
-fn failing_batch_yields_error_reply_not_deadlock() {
+fn unservable_request_rejected_at_boundary_not_deadlock() {
     use aigc_infer::server::StreamingPipeline;
-    use std::sync::mpsc;
     use std::time::Duration;
 
     let mut scfg = cfg(EngineKind::FtPruned, true);
     scfg.batch.max_wait_ms = 5;
     let pipeline = StreamingPipeline::start(scfg).unwrap();
     let handle = pipeline.handle();
+    let request = |id: u64, max_new: usize| aigc_infer::data::Request {
+        id,
+        text: "ba gedu".into(),
+        max_new_tokens: max_new,
+        arrival: Duration::ZERO,
+        reference_summary: None,
+    };
 
-    // max_new_tokens far beyond every compiled bucket -> NoBucket in the
-    // inference stage; the reply channel must get an ERROR, not be
-    // silently dropped.
-    let (tx, rx) = mpsc::channel();
-    handle
+    // max_new_tokens far beyond every compiled bucket: rejected AT THE
+    // BOUNDARY with a typed bad_request — it never poisons a batch.
+    let err = handle
+        .submit(request(1, 100_000), SubmitOptions::default())
+        .expect_err("unservable budget must be rejected at submit");
+    assert_eq!(err.code(), "bad_request");
+    assert!(err.to_string().contains("max_seq"), "{err}");
+    let err = handle
+        .submit(request(1, 0), SubmitOptions::default())
+        .expect_err("zero budget must be rejected at submit");
+    assert_eq!(err.code(), "bad_request");
+
+    // an oversized PROMPT passes submit (tokenization happens in the
+    // pre stage) but gets a typed terminal error event, not a hang
+    let words: Vec<String> = (0..300)
+        .map(|i| aigc_infer::tokenizer::vocab::render_rank(i % 2000))
+        .collect();
+    let stream = handle
         .submit(
             aigc_infer::data::Request {
-                id: 1,
-                text: "ba gedu".into(),
-                max_new_tokens: 100_000,
+                id: 0,
+                text: words.join(" "),
+                max_new_tokens: 16,
                 arrival: Duration::ZERO,
                 reference_summary: None,
             },
-            tx,
+            SubmitOptions::default(),
         )
-        .unwrap();
-    let resp = rx
-        .recv_timeout(Duration::from_secs(30))
-        .expect("failing batch must produce a reply, not a hang");
-    assert_eq!(resp.id, 1);
-    let err = resp.error.expect("reply must carry the inference error");
-    assert!(err.contains("bucket"), "unexpected error: {err}");
-    assert!(resp.summary_ids.is_empty());
+        .expect("prompt-length rejection is asynchronous");
+    let resp = stream.wait().expect("terminal event, not a hang");
+    let err = resp.error.expect("oversized prompt must error");
+    assert!(err.contains("max_seq"), "{err}");
+    assert_eq!(resp.code, Some("bad_request"));
 
-    // the pipeline keeps serving after a failed batch
-    let (tx, rx) = mpsc::channel();
-    handle
-        .submit(
-            aigc_infer::data::Request {
-                id: 2,
-                text: "ba gedu".into(),
-                max_new_tokens: 4,
-                arrival: Duration::ZERO,
-                reference_summary: None,
-            },
-            tx,
-        )
-        .unwrap();
-    let resp = rx
-        .recv_timeout(Duration::from_secs(30))
-        .expect("pipeline must survive a failed batch");
-    assert_eq!(resp.id, 2);
+    // the pipeline keeps serving after rejections
+    let resp = handle
+        .submit(request(2, 4), SubmitOptions::default())
+        .unwrap()
+        .wait()
+        .expect("pipeline must survive rejected requests");
     assert!(resp.error.is_none(), "{:?}", resp.error);
+}
+
+#[test]
+fn embed_server_streams_tokens_before_done() {
+    let server = Server::builder()
+        .engine(EngineKind::FtPruned)
+        .max_new_tokens(12)
+        .start()
+        .unwrap();
+    let mut gen = Generator::new(CorpusConfig::default(), 21);
+    let d = gen.generate_capped(16);
+    let stream = server.submit(d.text, 12).unwrap();
+    let mut streamed_ids: Vec<u32> = Vec::new();
+    let mut streamed_text: Vec<String> = Vec::new();
+    let mut done: Option<aigc_infer::coordinator::ServingResponse> = None;
+    for ev in stream.iter() {
+        match ev {
+            ServingEvent::Token { tokens, text } => {
+                assert!(done.is_none(), "token event after done");
+                streamed_ids.extend(tokens);
+                streamed_text.push(text);
+            }
+            ServingEvent::Done(resp) => done = Some(resp),
+        }
+    }
+    let resp = done.expect("terminal event");
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(
+        streamed_ids, resp.summary_ids,
+        "streamed tokens must equal the final summary ids"
+    );
+    if !resp.summary_ids.is_empty() {
+        assert!(
+            !streamed_text.is_empty(),
+            "tokens must stream before done"
+        );
+        // specials render as "": the summary is the non-empty chunks
+        let joined = streamed_text
+            .iter()
+            .filter(|t| !t.is_empty())
+            .cloned()
+            .collect::<Vec<_>>()
+            .join(" ");
+        assert_eq!(joined, resp.summary_text);
+        assert!(resp.ttft.is_some(), "ttft measured for streamed request");
+        assert!(resp.ttft.unwrap() <= resp.latency);
+    }
+    assert!(resp.steps > 0, "steps-per-retire must be threaded through");
+}
+
+#[test]
+fn deadline_expired_request_gets_terminal_error_event() {
+    use std::time::Duration;
+    let server = Server::builder()
+        .engine(EngineKind::FtPruned)
+        .max_new_tokens(16)
+        .start()
+        .unwrap();
+    let stream = server
+        .submit_request(
+            aigc_infer::data::Request {
+                id: 0,
+                text: "ba gedu fi".into(),
+                max_new_tokens: 16,
+                arrival: Duration::ZERO,
+                reference_summary: None,
+            },
+            SubmitOptions { deadline: Some(Duration::ZERO) },
+        )
+        .unwrap();
+    // an already-expired deadline is caught at the FIRST step boundary:
+    // terminal error event, zero tokens, no hang
+    let resp = stream.wait().expect("terminal event, not a hang");
+    assert_eq!(resp.code, Some("deadline"), "{:?}", resp.error);
+    assert!(resp.summary_ids.is_empty());
+}
+
+#[test]
+fn cancelled_request_gets_terminal_error_event() {
+    let server = Server::builder()
+        .engine(EngineKind::FtPruned)
+        .max_new_tokens(64)
+        .start()
+        .unwrap();
+    // cancel before the batcher's 20ms flush window elapses, so the
+    // flag is observed at the session's first step boundary
+    let stream = server.submit("ba gedu fi do", 64).unwrap();
+    stream.cancel();
+    let mut terminal = None;
+    for ev in stream.iter() {
+        if let ServingEvent::Done(resp) = ev {
+            terminal = Some(resp);
+        }
+    }
+    let resp = terminal.expect("terminal event, not a hang");
+    assert_eq!(resp.code, Some("cancelled"), "{:?}", resp.error);
+}
+
+#[test]
+fn admission_split_matches_one_shot_generate() {
+    // Continuous-batching token identity at the engine level: starting
+    // half the batch, stepping, then admitting the rest produces the
+    // same per-request greedy tokens as one-shot generation.
+    let b = backend();
+    for kind in
+        [EngineKind::Baseline, EngineKind::FtFull, EngineKind::FtPruned]
+    {
+        let engine =
+            build_engine(kind, b.clone(), Default::default()).unwrap();
+        let inputs = seeded_prompts(6, 77, 8, None);
+        let one_shot: Vec<Vec<u32>> = engine
+            .generate(&inputs, &mut Sampler::greedy())
+            .unwrap()
+            .into_iter()
+            .map(|o| o.generated)
+            .collect();
+
+        let (first, rest) = inputs.split_at(3);
+        let mut sampler = Sampler::greedy();
+        let mut session = engine.start(first).unwrap();
+        session.step(&mut sampler).unwrap();
+        session.step(&mut sampler).unwrap();
+        assert!(session.can_admit(rest), "{kind:?}: bucket must fit");
+        session.admit(rest).unwrap();
+        let mut outs: Vec<Option<Vec<u32>>> = vec![None; inputs.len()];
+        loop {
+            for f in session.take_finished() {
+                outs[f.seq] = Some(f.output.generated);
+            }
+            if session.active() == 0 {
+                break;
+            }
+            session.step(&mut sampler).unwrap();
+        }
+        let split: Vec<Vec<u32>> =
+            outs.into_iter().map(|o| o.unwrap()).collect();
+        assert_eq!(
+            one_shot, split,
+            "{kind:?}: admission changed greedy token streams"
+        );
+    }
+}
+
+#[test]
+fn run_summary_threads_ttft_and_steps() {
+    let reqs = workload(8, 13);
+    for pipelined in [false, true] {
+        let s = pipeline::run(&cfg(EngineKind::FtPruned, pipelined), &reqs)
+            .unwrap();
+        assert_eq!(s.responses.len(), reqs.len());
+        let with_tokens = s
+            .responses
+            .iter()
+            .filter(|r| !r.summary_ids.is_empty())
+            .count() as u64;
+        assert_eq!(s.ttft.count(), with_tokens, "pipelined={pipelined}");
+        assert!(s.steps_per_retire >= 1.0, "pipelined={pipelined}");
+        for r in &s.responses {
+            assert!(r.steps > 0);
+            if !r.summary_ids.is_empty() {
+                let t = r.ttft.expect("response with tokens has a ttft");
+                assert!(t <= r.latency);
+            }
+        }
+    }
 }
 
 #[test]
@@ -452,11 +625,95 @@ fn server_round_trip() {
         assert!(v.get("summary").as_str().is_some());
         assert!(v.get("latency_ms").as_f64().unwrap() > 0.0);
     }
-    // malformed line gets an error object, not a hang
+    // malformed line gets a coded error object, not a hang
     writeln!(writer, "{{\"nope\": 1}}").unwrap();
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("error"));
+    assert!(line.contains("bad_request"), "{line}");
+
+    // a request WITHOUT a client id gets the server-assigned id echoed
+    writeln!(writer, "{{\"text\": \"ba\", \"max_new_tokens\": 4}}")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = aigc_infer::util::json::parse(&line).unwrap();
+    assert!(
+        v.get("id").as_u64().is_some(),
+        "absent client id must still be echoed uniquely: {line}"
+    );
+
+    shutdown.store(true, Ordering::Relaxed);
+    drop(writer);
+    drop(reader);
+    let _ = server.join();
+}
+
+#[test]
+fn server_v2_streams_token_events_then_done() {
+    let addr = "127.0.0.1:17175";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = shutdown.clone();
+    let mut scfg = cfg(EngineKind::FtPruned, true);
+    scfg.batch.max_wait_ms = 5;
+    scfg.gen.max_new_tokens = 12;
+    let server = std::thread::spawn(move || {
+        let _ = aigc_infer::server::serve(scfg, addr, sd);
+    });
+    let deadline = Instant::now() + std::time::Duration::from_secs(30);
+    let stream = loop {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) if Instant::now() >= deadline => {
+                panic!("server did not come up: {e}")
+            }
+            Err(_) => {
+                std::thread::sleep(std::time::Duration::from_millis(50))
+            }
+        }
+    };
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    let mut gen = Generator::new(CorpusConfig::default(), 55);
+    let d = gen.generate_capped(16);
+    writeln!(
+        writer,
+        "{{\"v\": 2, \"id\": 42, \"text\": \"{}\", \"max_new_tokens\": 12}}",
+        d.text
+    )
+    .unwrap();
+    let mut token_lines = 0usize;
+    let mut streamed: Vec<String> = Vec::new();
+    let terminal = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = aigc_infer::util::json::parse(&line).unwrap();
+        assert_eq!(v.get("id").as_u64(), Some(42), "{line}");
+        match v.get("event").as_str() {
+            Some("token") => {
+                token_lines += 1;
+                if let Some(t) = v.get("token_text").as_str() {
+                    if !t.is_empty() {
+                        streamed.push(t.to_string());
+                    }
+                }
+            }
+            Some("done") | Some("error") => break v,
+            other => panic!("unexpected event {other:?}: {line}"),
+        }
+    };
+    assert_eq!(terminal.get("event").as_str(), Some("done"));
+    let summary = terminal.get("summary").as_str().unwrap().to_string();
+    let n_tokens = terminal.get("n_tokens").as_usize().unwrap();
+    if n_tokens > 0 {
+        assert!(token_lines > 0, "token events must precede done");
+        assert_eq!(streamed.join(" "), summary);
+        assert!(
+            terminal.get("ttft_ms").as_f64().is_some(),
+            "v2 done line reports ttft"
+        );
+    }
 
     shutdown.store(true, Ordering::Relaxed);
     drop(writer);
@@ -521,7 +778,8 @@ fn server_round_trip_multi_worker() {
                     assert_eq!(v.get("id").as_u64(), Some(i), "{line}");
                     assert!(v.get("summary").as_str().is_some(), "{line}");
                 }
-                // unservable request: error reply, correct id, no hang
+                // unservable request: typed error reply on the right
+                // id — rejected at the boundary, no hang
                 writeln!(
                     writer,
                     "{{\"id\": 77, \"text\": \"ba\", \
@@ -533,6 +791,11 @@ fn server_round_trip_multi_worker() {
                 let v = aigc_infer::util::json::parse(&line).unwrap();
                 assert_eq!(v.get("id").as_u64(), Some(77), "{line}");
                 assert!(v.get("error").as_str().is_some(), "{line}");
+                assert_eq!(
+                    v.get("code").as_str(),
+                    Some("bad_request"),
+                    "{line}"
+                );
             })
         })
         .collect();

@@ -2,10 +2,14 @@
 //! the offline vendor set has no proptest).  Each property runs a few
 //! hundred randomized cases with a fixed seed, so failures reproduce.
 
-use std::time::Instant;
+use std::sync::Arc;
 
-use aigc_infer::config::BatchPolicy;
+use aigc_infer::config::{BatchPolicy, EngineKind};
 use aigc_infer::coordinator::{DynamicBatcher, PreparedRequest};
+use aigc_infer::engine::{
+    build as build_engine, DecodeSession, Engine, EngineInput, Sampler,
+};
+use aigc_infer::runtime::{Backend, RefBackend};
 use aigc_infer::tokenizer::vocab::{parse_rank, render_rank};
 use aigc_infer::tokenizer::{
     decode, Encode, FastTokenizer, SlowTokenizer, Vocab,
@@ -110,13 +114,11 @@ fn prop_batcher_conserves_requests() {
         let n = rng.gen_range(1, 100);
         let mut seen = vec![false; n];
         for id in 0..n {
-            b.push(PreparedRequest {
-                id: id as u64,
-                prompt: vec![5; rng.gen_range(1, 140)],
-                max_new_tokens: 4,
-                reference_summary: None,
-                enqueued: Instant::now(),
-            });
+            b.push(PreparedRequest::new(
+                id as u64,
+                vec![5; rng.gen_range(1, 140)],
+                4,
+            ));
         }
         let mut batches = Vec::new();
         while let Some(batch) = b.pop_full_or(false) {
@@ -167,13 +169,11 @@ fn prop_batcher_never_exceeds_token_or_size_caps() {
         let mut b = DynamicBatcher::new(policy, vec![32, 64, 128]);
         let n = rng.gen_range(1, 80);
         for id in 0..n {
-            b.push(PreparedRequest {
-                id: id as u64,
-                prompt: vec![5; rng.gen_range(1, 140)],
-                max_new_tokens: 4,
-                reference_summary: None,
-                enqueued: Instant::now(),
-            });
+            b.push(PreparedRequest::new(
+                id as u64,
+                vec![5; rng.gen_range(1, 140)],
+                4,
+            ));
         }
         let mut emitted = 0usize;
         while let Some(batch) = b.pop_full_or(true) {
@@ -263,6 +263,86 @@ fn prop_histogram_quantiles_monotone() {
         }
         assert!(h.quantile(1.0) <= h.max() + Duration::from_micros(1));
         assert!(h.mean() >= h.min() && h.mean() <= h.max());
+    }
+}
+
+/// Random in-vocab prompts `[BOS] w… [SEP]` for engine-level properties.
+fn random_inputs(rng: &mut Rng, n: usize, vocab: u32) -> Vec<EngineInput> {
+    (0..n)
+        .map(|i| {
+            let len = rng.gen_range(1, 20);
+            let mut prompt = vec![aigc_infer::special::BOS];
+            for _ in 0..len {
+                prompt.push(
+                    aigc_infer::special::FIRST_WORD
+                        + rng.gen_range(0, (vocab - 4) as usize) as u32,
+                );
+            }
+            prompt.push(aigc_infer::special::SEP);
+            EngineInput {
+                request_id: i as u64,
+                prompt,
+                max_new_tokens: rng.gen_range(1, 10),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_stepped_session_equals_one_shot_generate() {
+    // THE step-API acceptance property: driving DecodeSession::step()
+    // by hand to completion is token-identical to the one-shot
+    // `generate` driver, across the full Table-1 engine ladder.
+    let backend = Arc::new(RefBackend::synthetic());
+    let pruned_vocab =
+        backend.manifest().config_for("pruned").vocab_size as u32;
+    let mut rng = Rng::seed_from_u64(0x57E9);
+    for kind in
+        [EngineKind::Baseline, EngineKind::FtFull, EngineKind::FtPruned]
+    {
+        let engine =
+            build_engine(kind, backend.clone(), Default::default()).unwrap();
+        for case in 0..8 {
+            let inputs =
+                random_inputs(&mut rng, rng.gen_range(1, 7), pruned_vocab);
+            let one_shot: Vec<Vec<u32>> = engine
+                .generate(&inputs, &mut Sampler::greedy())
+                .unwrap()
+                .into_iter()
+                .map(|o| o.generated)
+                .collect();
+            let mut sampler = Sampler::greedy();
+            let mut session = engine.start(&inputs).unwrap();
+            let mut stepped: Vec<Option<Vec<u32>>> =
+                vec![None; inputs.len()];
+            let mut streamed: Vec<Vec<u32>> =
+                vec![Vec::new(); inputs.len()];
+            let mut guard = 0;
+            loop {
+                for f in session.take_finished() {
+                    stepped[f.seq] = Some(f.output.generated);
+                }
+                if session.active() == 0 {
+                    break;
+                }
+                for ev in session.step(&mut sampler).unwrap() {
+                    streamed[ev.request_id as usize].extend(ev.tokens);
+                }
+                guard += 1;
+                assert!(guard < 1000, "{kind:?} case {case}: no progress");
+            }
+            let stepped: Vec<Vec<u32>> =
+                stepped.into_iter().map(|o| o.unwrap()).collect();
+            assert_eq!(
+                one_shot, stepped,
+                "{kind:?} case {case}: stepped != one-shot"
+            );
+            // the TokenEvent stream is the summary, token for token
+            assert_eq!(
+                streamed, stepped,
+                "{kind:?} case {case}: events diverge from outputs"
+            );
+        }
     }
 }
 
