@@ -55,6 +55,7 @@ fn main() -> aigc_infer::Result<()> {
         report.push(LadderRow {
             step,
             method: name.to_string(),
+            dtype: s.dtype.label().to_string(),
             speed: s.samples_per_sec,
             latency_ms: s.latency.mean().as_secs_f64() * 1e3,
             accuracy: s.mean_accuracy,

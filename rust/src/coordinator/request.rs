@@ -92,6 +92,13 @@ pub struct ServingResponse {
     /// Structured error code (`bad_request` | `overloaded` |
     /// `engine_error` | `cancelled` | `deadline`) when `error` is set.
     pub code: Option<&'static str>,
+    /// Storage precision that produced this response (`"fp32"` /
+    /// `"fp16"`), stamped by the executor on SUCCESSFUL replies and
+    /// echoed on the wire so clients can tell reduced-precision output
+    /// apart.  None on every failed reply (boundary rejections and
+    /// mid-decode failures alike) — error events carry a `code`, not a
+    /// precision claim.
+    pub dtype: Option<&'static str>,
 }
 
 impl ServingResponse {
@@ -113,6 +120,7 @@ impl ServingResponse {
             accuracy: None,
             error: Some(message),
             code: Some(code),
+            dtype: None,
         }
     }
 }

@@ -15,7 +15,7 @@ use super::{
     DecodeSession, Engine, EngineInput, FinishReason, FinishedRequest,
     Sampler, TokenEvent,
 };
-use crate::runtime::{Backend, DataArg, SharedBackend};
+use crate::runtime::{Backend, DType, DataArg, SharedBackend};
 use crate::{special, Error, Result};
 
 pub struct BaselineEngine {
@@ -44,6 +44,10 @@ impl BaselineEngine {
 impl Engine for BaselineEngine {
     fn label(&self) -> &'static str {
         "baseline"
+    }
+
+    fn dtype(&self) -> DType {
+        self.backend.dtype()
     }
 
     fn max_seq(&self) -> usize {

@@ -4,8 +4,8 @@
 //! KV cache; each subsequent **decode** call attends against the cache
 //! in O(S) — the Fig 2 mechanism.  The caches round-trip between calls
 //! as backend-opaque tensors (never decoded here), so their storage —
-//! fp16 literals on PJRT, flat f32 on the reference backend — stays a
-//! backend detail.
+//! fp16 literals on PJRT, flat f32 or quantized binary16 on the
+//! reference backend (`--dtype fp16`) — stays a backend detail.
 //!
 //! With greedy sampling the engine prefers the fused **multi-step**
 //! executable: N decode steps + argmax run inside ONE graph call,
@@ -29,7 +29,7 @@ use super::{
     DecodeSession, Engine, EngineInput, FinishReason, FinishedRequest,
     Sampler, TokenEvent,
 };
-use crate::runtime::{Backend, DataArg, OpaqueTensor, SharedBackend};
+use crate::runtime::{Backend, DType, DataArg, OpaqueTensor, SharedBackend};
 use crate::{special, Error, Result};
 
 pub struct FtEngine {
@@ -76,6 +76,10 @@ impl Engine for FtEngine {
             "pruned" => "ft_pruned",
             _ => "ft_full",
         }
+    }
+
+    fn dtype(&self) -> DType {
+        self.backend.dtype()
     }
 
     fn max_seq(&self) -> usize {
@@ -280,8 +284,24 @@ impl FtSession {
             }
             _ => None,
         };
-        let k = self.k_cache.take().expect("session has no k cache");
-        let vc = self.v_cache.take().expect("session has no v cache");
+        // A missing cache means an earlier execute/admit failed after
+        // taking the handles: the session is poisoned.  Return a typed
+        // error — the pool fails the live requests and keeps the worker
+        // thread alive — instead of panicking the thread.
+        let k = self.k_cache.take().ok_or_else(|| {
+            Error::Session(
+                "decode session has no k cache (poisoned by an earlier \
+                 failure); resubmit the request"
+                    .into(),
+            )
+        })?;
+        let vc = self.v_cache.take().ok_or_else(|| {
+            Error::Session(
+                "decode session has no v cache (poisoned by an earlier \
+                 failure); resubmit the request"
+                    .into(),
+            )
+        })?;
         let mut events = Vec::new();
         if let Some((m_name, m_steps)) = fused {
             // fused multi-step greedy decode: m_steps tokens per call

@@ -27,9 +27,14 @@
 //!   does.
 //! - [`FtEngine`]: rows 2-3.  Faster-Transformer-style split into one
 //!   fused prefill (which also materializes the KV cache) + O(1)-context
-//!   decode steps; fp16 activations/caches; optionally the fused
-//!   multi-step decode executable (8 greedy tokens per PJRT call).
-//!   Row 3 is the same engine over the pruned-embedding artifacts.
+//!   decode steps; optionally the fused multi-step decode executable
+//!   (8 greedy tokens per call).  Row 3 is the same engine over the
+//!   pruned-embedding artifacts.
+//!
+//! Precision is a backend dimension, not an engine one: `--dtype fp16`
+//! makes the reference backend store weights/activations/KV caches in
+//! binary16 with f32 accumulation (PJRT artifacts carry their own
+//! compiled dtype).  Engines report it via [`Engine::dtype`].
 
 mod baseline;
 mod ft;
@@ -41,7 +46,7 @@ pub use ft::FtEngine;
 pub use sampling::Sampler;
 
 use crate::config::{EngineKind, GenConfig, Sampling};
-use crate::runtime::{Backend, SharedBackend};
+use crate::runtime::{Backend, DType, SharedBackend};
 use crate::util::rng::derive_seed;
 use crate::{special, Error, Result};
 
@@ -145,6 +150,10 @@ pub trait DecodeSession: Send {
 /// backends they hold are `Send + Sync` by contract.
 pub trait Engine: Send {
     fn label(&self) -> &'static str;
+    /// Storage precision the engine's backend executes with — reported
+    /// per run (`RunSummary::dtype`, wire replies) so fp16 numbers are
+    /// never mistaken for fp32 ones.
+    fn dtype(&self) -> DType;
     /// Largest compiled sequence bucket (prompt + generation must fit).
     fn max_seq(&self) -> usize;
     /// Vocabulary visible to this engine (pruned engines see a prefix);

@@ -38,6 +38,11 @@ pub enum Error {
     Overloaded(&'static str),
     /// Request rejected / channel closed during shutdown.
     Shutdown(&'static str),
+    /// A decode session is in an unusable state (an earlier graph call
+    /// failed mid-step and poisoned its KV handles).  Fails the
+    /// session's requests with wire code `engine_error`; the worker
+    /// thread survives and seeds a fresh session.
+    Session(String),
     /// Anything else worth a message.
     Other(String),
 }
@@ -81,6 +86,7 @@ impl fmt::Display for Error {
             Error::BadRequest(m) => write!(f, "bad request: {m}"),
             Error::Overloaded(w) => write!(f, "overloaded: {w}"),
             Error::Shutdown(w) => write!(f, "shutting down: {w}"),
+            Error::Session(m) => write!(f, "decode session error: {m}"),
             Error::Other(m) => write!(f, "{m}"),
         }
     }

@@ -36,10 +36,17 @@
 //!
 //! | step | paper | here |
 //! |------|-------|------|
-//! | 1 | Paddle baseline | [`engine::BaselineEngine`] — fp32, full-sequence recompute per token |
-//! | 2 | + Faster Transformer | [`engine::FtEngine`] (full) — fused kernels, fp16, KV cache |
+//! | 1 | Paddle baseline | [`engine::BaselineEngine`] — full-sequence recompute per token |
+//! | 2 | + Faster Transformer | [`engine::FtEngine`] (full) — fused prefill/decode, KV cache |
 //! | 3 | + embedding pruning | [`engine::FtEngine`] (pruned) — vocab 8000→4000, positions 512→128 |
 //! | 4 | + multi-process parallel | [`pipeline::run_pipelined`] over [`coordinator::InferencePool`] — overlapped pre/infer/post stages, N inference workers (`--workers`) |
+//!
+//! The paper's remaining lever — **fp16 half-precision inference** —
+//! is a runtime dimension rather than a ladder row: `--dtype fp16`
+//! makes every engine execute with binary16 storage (weights,
+//! activations, KV caches; f32 accumulation) on the reference backend
+//! via the software [`runtime::F16`] type, and the [`precision`]
+//! accuracy harness gates greedy agreement with the fp32 reference.
 
 pub mod config;
 pub mod coordinator;
@@ -48,6 +55,7 @@ pub mod engine;
 pub mod error;
 pub mod metrics;
 pub mod pipeline;
+pub mod precision;
 pub mod pruning;
 pub mod runtime;
 pub mod server;

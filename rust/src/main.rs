@@ -16,7 +16,7 @@ use aigc_infer::config::{BackendKind, EngineKind, ServingConfig};
 use aigc_infer::data::{TraceConfig, TraceGenerator};
 use aigc_infer::metrics::{LadderRow, Report};
 use aigc_infer::pipeline;
-use aigc_infer::runtime::manifest_for;
+use aigc_infer::runtime::{manifest_for, DType};
 
 fn usage() -> ! {
     eprintln!(
@@ -24,6 +24,8 @@ fn usage() -> ! {
          common: --artifacts DIR (default: artifacts)  --config FILE.json\n\
                  --backend reference|pjrt (default: reference; a synthetic\n\
                  model is served when DIR has no manifest.json)\n\
+                 --dtype fp32|fp16 (default: fp32; fp16 = binary16\n\
+                 weights/activations/KV caches, f32 accumulation)\n\
                  --workers N (inference workers in the pipelined/serve\n\
                  paths; default 1)  --row-threads N (reference backend\n\
                  intra-batch parallelism; default 0 = auto)\n\
@@ -94,6 +96,12 @@ fn build_config(args: &Args) -> ServingConfig {
     }
     if let Some(b) = args.get("backend") {
         cfg.backend = BackendKind::parse(b).unwrap_or_else(|err| {
+            eprintln!("{err}");
+            usage()
+        });
+    }
+    if let Some(d) = args.get("dtype") {
+        cfg.dtype = DType::parse(d).unwrap_or_else(|err| {
             eprintln!("{err}");
             usage()
         });
@@ -184,8 +192,10 @@ fn cmd_run(args: &Args) {
     let cfg = build_config(args);
     let reqs = workload(args, &cfg);
     println!(
-        "backend={} engine={} pipelined={} workers={} bucketing={} requests={}",
+        "backend={} dtype={} engine={} pipelined={} workers={} \
+         bucketing={} requests={}",
         cfg.backend.label(),
+        cfg.dtype.label(),
         cfg.engine.label(),
         cfg.pipelined,
         cfg.workers,
@@ -204,6 +214,7 @@ fn cmd_run(args: &Args) {
                 s.steps_per_retire
             );
             println!("accuracy      {:.3}", s.mean_accuracy);
+            println!("dtype         {}", s.dtype.label());
             println!(
                 "backend       {} execs, {} compiles ({:.2}s compile, {:.2}s exec+download {:.2}s)",
                 s.runtime_stats.executions,
@@ -256,6 +267,7 @@ fn cmd_ladder(args: &Args) {
                 report.push(LadderRow {
                     step,
                     method: name.to_string(),
+                    dtype: s.dtype.label().to_string(),
                     speed: s.samples_per_sec,
                     latency_ms: s.latency.mean().as_secs_f64() * 1e3,
                     accuracy: s.mean_accuracy,

@@ -8,6 +8,8 @@ use std::fmt::Write as _;
 pub struct LadderRow {
     pub step: usize,
     pub method: String,
+    /// Storage precision the row ran with ("fp32" / "fp16").
+    pub dtype: String,
     /// Samples per second ("Speed" in the paper).
     pub speed: f64,
     /// Mean per-request latency (ms) — extra visibility vs. the paper.
@@ -31,24 +33,25 @@ impl Report {
         self.rows.first().map(|r| r.speed)
     }
 
-    /// Render the table (paper Table 1 layout + speedup column).
+    /// Render the table (paper Table 1 layout + dtype/speedup columns).
     pub fn render(&self) -> String {
         let base = self.baseline_speed().unwrap_or(1.0).max(1e-9);
         let mut s = String::new();
         let _ = writeln!(
             s,
-            "| # | Method                            | Speed (samples/s) | Speedup | Latency (ms) | Summary acc |"
+            "| # | Method                            | dtype | Speed (samples/s) | Speedup | Latency (ms) | Summary acc |"
         );
         let _ = writeln!(
             s,
-            "|---|-----------------------------------|-------------------|---------|--------------|-------------|"
+            "|---|-----------------------------------|-------|-------------------|---------|--------------|-------------|"
         );
         for r in &self.rows {
             let _ = writeln!(
                 s,
-                "| {} | {:<33} | {:>17.2} | {:>6.2}x | {:>12.2} | {:>11.3} |",
+                "| {} | {:<33} | {:<5} | {:>17.2} | {:>6.2}x | {:>12.2} | {:>11.3} |",
                 r.step,
                 r.method,
+                r.dtype,
                 r.speed,
                 r.speed / base,
                 r.latency_ms,
@@ -69,6 +72,7 @@ mod tests {
         rep.push(LadderRow {
             step: 1,
             method: "Baseline".into(),
+            dtype: "fp32".into(),
             speed: 10.0,
             latency_ms: 100.0,
             accuracy: 0.9,
@@ -76,6 +80,7 @@ mod tests {
         rep.push(LadderRow {
             step: 2,
             method: "Fast transformer".into(),
+            dtype: "fp16".into(),
             speed: 60.0,
             latency_ms: 16.0,
             accuracy: 0.9,
@@ -83,5 +88,6 @@ mod tests {
         let out = rep.render();
         assert!(out.contains("6.00x"));
         assert!(out.contains("Baseline"));
+        assert!(out.contains("fp16"), "dtype column missing:\n{out}");
     }
 }

@@ -46,7 +46,7 @@ use crate::coordinator::{
 use crate::data::Request;
 use crate::engine::{build as build_engine, sampler_for};
 use crate::metrics::{Histogram, StageTimer};
-use crate::runtime::{backend_for, manifest_for, Backend, RuntimeStats};
+use crate::runtime::{backend_for, manifest_for, Backend, DType, RuntimeStats};
 use crate::tokenizer::{decode as detokenize, Encode, FastTokenizer, Vocab};
 use crate::{special, Error, Result};
 
@@ -71,6 +71,9 @@ pub struct RunSummary {
     pub runtime_stats: RuntimeStats,
     /// Inference workers that served the run (1 for sequential).
     pub workers: usize,
+    /// Storage precision the run executed with (every worker backend
+    /// shares the config's dtype).
+    pub dtype: DType,
     /// Per-decode-session inference latency (one batch driven start to
     /// last retire), merged across workers.
     pub session_latency: Histogram,
@@ -92,6 +95,7 @@ fn summarize(
     // (sums) every worker's counter.
     compile_wall_secs: f64,
     workers: usize,
+    dtype: DType,
     session_latency: Histogram,
 ) -> RunSummary {
     let mut latency = Histogram::new();
@@ -137,6 +141,7 @@ fn summarize(
         wall,
         responses,
         workers,
+        dtype,
         session_latency,
     }
 }
@@ -226,6 +231,7 @@ pub fn postprocess(
         accuracy,
         error: None,
         code: None,
+        dtype: None,
     }
 }
 
@@ -255,6 +261,9 @@ pub fn run_sequential(
     let seq_lens = backend.manifest().seq_lens.clone();
     let tok = make_tokenizer(full_vocab);
     let engine = build_engine(cfg.engine, backend.clone(), cfg.gen)?;
+    // report the precision the backend ACTUALLY executes with (on the
+    // pjrt backend the artifacts' compiled dtype rules, not the config)
+    let run_dtype = engine.dtype();
     if cfg.precompile {
         crate::engine::precompile(cfg.engine, backend.as_ref())?;
     }
@@ -307,6 +316,7 @@ pub fn run_sequential(
                 );
                 resp.ttft = stepped.ttft;
                 resp.steps = stepped.output.steps;
+                resp.dtype = Some(run_dtype.label());
                 responses.push(resp);
             }
             stages.postprocess += t.elapsed();
@@ -323,6 +333,7 @@ pub fn run_sequential(
         rt_stats,
         compile_wall,
         1,
+        run_dtype,
         session_latency,
     ))
 }
@@ -423,6 +434,7 @@ pub fn run_pipelined(
     // --- post-processing stage -----------------------------------------
     type PostResult = (Vec<ServingResponse>, Duration, Option<Error>);
     let post_tok = tok.clone();
+    let dtype_label = cfg.dtype.label();
     let post_handle = std::thread::Builder::new()
         .name("postprocess".into())
         .spawn(move || -> PostResult {
@@ -446,6 +458,7 @@ pub fn run_pipelined(
                             postprocess(post_tok.vocab(), &request, generated);
                         resp.ttft = ttft;
                         resp.steps = steps;
+                        resp.dtype = Some(dtype_label);
                         responses.push(resp);
                         busy += t.elapsed();
                     }
@@ -508,6 +521,7 @@ pub fn run_pipelined(
         report.runtime_stats(),
         compile_wall,
         n_workers,
+        cfg.dtype,
         report.session_latency(),
     ))
 }

@@ -5,9 +5,10 @@
 //! per-variant weights, host tensors in ([`DataArg`]), typed tensors out
 //! ([`ExecOut`]), with KV caches round-tripping as backend-opaque
 //! handles ([`OpaqueTensor`]) so their storage (fp16 device literals on
-//! PJRT, flat f32 on the reference backend) never leaks into engine
-//! code.  This mirrors how EnergonAI-style serving stacks isolate the
-//! device runtime behind a narrow execution interface.
+//! PJRT, flat f32 or quantized binary16 on the reference backend —
+//! see [`Backend::dtype`]) never leaks into engine code.  This mirrors
+//! how EnergonAI-style serving stacks isolate the device runtime
+//! behind a narrow execution interface.
 //!
 //! Two implementations ship:
 //! - [`crate::runtime::RefBackend`] — pure-Rust reference execution of
@@ -28,6 +29,7 @@ use std::any::Any;
 use std::sync::Arc;
 
 use crate::config::{BackendKind, ServingConfig};
+use crate::runtime::dtype::DType;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::reference::RefBackend;
 use crate::runtime::weights::HostWeights;
@@ -149,6 +151,15 @@ pub trait Backend: Send + Sync {
     /// Short human label ("reference" / "pjrt").
     fn name(&self) -> &'static str;
 
+    /// Storage precision this backend executes with — weights,
+    /// activations and KV caches under [`DType::F16`] live in binary16
+    /// with f32 accumulation.  Defaults to f32; the reference backend
+    /// reports what `ServingConfig::dtype` selected, the PJRT client
+    /// reports f32 (its artifacts carry their own compiled dtype).
+    fn dtype(&self) -> DType {
+        DType::F32
+    }
+
     /// The graph/weight inventory this backend serves.
     fn manifest(&self) -> &Manifest;
 
@@ -194,9 +205,20 @@ pub fn backend_for(cfg: &ServingConfig) -> Result<SharedBackend> {
         BackendKind::Reference => {
             let mut b = RefBackend::open(&cfg.artifacts_dir)?;
             b.set_row_threads(resolve_row_threads(cfg));
+            b.set_dtype(cfg.dtype);
             Ok(Arc::new(b))
         }
-        BackendKind::Pjrt => pjrt_backend(cfg),
+        BackendKind::Pjrt => {
+            if cfg.dtype != DType::F32 {
+                return Err(Error::Other(
+                    "the pjrt backend executes the dtype its artifacts \
+                     were compiled with; re-run `make artifacts` for a \
+                     different precision instead of passing --dtype"
+                        .into(),
+                ));
+            }
+            pjrt_backend(cfg)
+        }
     }
 }
 

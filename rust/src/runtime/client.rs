@@ -145,6 +145,18 @@ impl Backend for Runtime {
         "pjrt"
     }
 
+    /// The artifacts' compiled precision: f16 when any FT graph was
+    /// lowered with f16 activations/caches, f32 otherwise — so ladder
+    /// rows and wire replies report what actually executed, not the
+    /// config default.
+    fn dtype(&self) -> crate::runtime::DType {
+        if self.manifest.artifacts.iter().any(|a| a.dtype == "f16") {
+            crate::runtime::DType::F16
+        } else {
+            crate::runtime::DType::F32
+        }
+    }
+
     fn manifest(&self) -> &Manifest {
         &self.manifest
     }

@@ -1,0 +1,328 @@
+//! Numeric precision as a first-class runtime dimension.
+//!
+//! [`DType`] selects the storage precision a backend executes with —
+//! the paper's half-precision lever (Table 1 rows 2-3 run fp16 on the
+//! competition hardware).  [`F16`] is the dependency-free software
+//! IEEE 754 binary16 type that makes fp16 executable on the hermetic
+//! reference backend: values are STORED in half precision (weights,
+//! activations at block boundaries, KV caches) while every
+//! accumulation runs in f32 — the standard mixed-precision inference
+//! contract, matching what the PJRT artifacts do on real accelerators.
+//!
+//! Conversions are exact IEEE 754 round-to-nearest-even, including
+//! subnormals, infinities and NaN, and are property-tested
+//! (round-trip exactness for representable values, tie-to-even
+//! rounding, ordering consistency with f32).
+
+use crate::{Error, Result};
+
+/// Storage precision for weights, activations and KV caches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DType {
+    /// Full single precision — the reference default.
+    #[default]
+    F32,
+    /// IEEE 754 binary16 storage with f32 accumulation.
+    F16,
+}
+
+impl DType {
+    pub fn label(self) -> &'static str {
+        match self {
+            DType::F32 => "fp32",
+            DType::F16 => "fp16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fp32" | "f32" | "float32" => Ok(DType::F32),
+            "fp16" | "f16" | "half" => Ok(DType::F16),
+            _ => Err(Error::Other(format!(
+                "unknown dtype '{s}' (fp32|fp16)"
+            ))),
+        }
+    }
+
+    /// Does this dtype store fewer bits than f32?
+    pub fn is_reduced(self) -> bool {
+        matches!(self, DType::F16)
+    }
+}
+
+/// A software IEEE 754 binary16 value (1 sign, 5 exponent, 10 mantissa
+/// bits).  The reference backend never computes IN half — it stores in
+/// half and accumulates in f32 — so the only operations this type needs
+/// are the two conversions plus bit-level accessors.
+///
+/// Equality and ordering follow IEEE float semantics of the denoted
+/// value (`-0 == +0`, NaN unordered and not equal to itself); compare
+/// [`F16::to_bits`] for representation identity.
+#[derive(Debug, Clone, Copy)]
+pub struct F16(u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0x0000);
+    pub const ONE: F16 = F16(0x3c00);
+    pub const INFINITY: F16 = F16(0x7c00);
+    pub const NEG_INFINITY: F16 = F16(0xfc00);
+    pub const NAN: F16 = F16(0x7e00);
+    /// Largest finite binary16 value (65504).
+    pub const MAX: F16 = F16(0x7bff);
+    /// Smallest positive subnormal (2^-24).
+    pub const MIN_POSITIVE_SUBNORMAL: F16 = F16(0x0001);
+
+    /// Convert with IEEE 754 round-to-nearest-even.  Overflow saturates
+    /// to the same-signed infinity; values below half the smallest
+    /// subnormal flush to the same-signed zero; NaN stays NaN.
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xff) as i32;
+        let mant = bits & 0x007f_ffff;
+        if exp == 0xff {
+            // inf / NaN (any NaN maps to the canonical quiet NaN)
+            let payload = if mant != 0 { 0x0200 } else { 0 };
+            return F16(sign | 0x7c00 | payload);
+        }
+        // candidate binary16 biased exponent
+        let e = exp - 127 + 15;
+        if e >= 0x1f {
+            // |x| >= 2^16: past the largest half (65504) + its ulp
+            return F16(sign | 0x7c00);
+        }
+        if e <= 0 {
+            if e < -10 {
+                // |x| < 2^-25: below half the smallest subnormal
+                return F16(sign);
+            }
+            // subnormal half: shift the (implicit-1) mantissa into the
+            // 10-bit field, rounding to nearest even on the remainder
+            let m = mant | 0x0080_0000;
+            let shift = (14 - e) as u32; // 14..=24
+            let half = m >> shift;
+            let rem = m & ((1u32 << shift) - 1);
+            let midpoint = 1u32 << (shift - 1);
+            let rounded = if rem > midpoint
+                || (rem == midpoint && (half & 1) == 1)
+            {
+                half + 1
+            } else {
+                half
+            };
+            return F16(sign | rounded as u16);
+        }
+        let half = ((e as u32) << 10) | (mant >> 13);
+        let rem = mant & 0x1fff;
+        let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1)
+        {
+            // the carry may ripple into the exponent — still a valid
+            // encoding (including overflow to infinity at 0x7c00)
+            half + 1
+        } else {
+            half
+        };
+        F16(sign | rounded as u16)
+    }
+
+    /// Exact widening conversion (every binary16 value is representable
+    /// in f32).
+    pub fn to_f32(self) -> f32 {
+        let h = self.0 as u32;
+        let sign = (h >> 15) & 1;
+        let he = ((h >> 10) & 0x1f) as i32;
+        let hm = h & 0x3ff;
+        let mag = if he == 0 {
+            // subnormal: hm * 2^-24 (exact in f32)
+            (hm as f32) * (2f32).powi(-24)
+        } else if he == 0x1f {
+            if hm == 0 {
+                f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        } else {
+            (1.0 + (hm as f32) / 1024.0) * (2f32).powi(he - 15)
+        };
+        if sign == 1 {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    pub fn from_bits(bits: u16) -> F16 {
+        F16(bits)
+    }
+
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7c00) == 0x7c00 && (self.0 & 0x3ff) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7fff) == 0x7c00
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7c00) != 0x7c00
+    }
+}
+
+impl PartialEq for F16 {
+    /// IEEE value equality (`-0 == +0`, NaN != NaN).
+    fn eq(&self, other: &F16) -> bool {
+        self.to_f32() == other.to_f32()
+    }
+}
+
+impl PartialOrd for F16 {
+    /// Orders like the f32 values it denotes (NaN unordered).
+    fn partial_cmp(&self, other: &F16) -> Option<std::cmp::Ordering> {
+        self.to_f32().partial_cmp(&other.to_f32())
+    }
+}
+
+/// One fp16 storage round-trip: the value a binary16 tensor cell would
+/// hold.  THE primitive the reference backend quantizes through.
+#[inline]
+pub fn quantize_f16(x: f32) -> f32 {
+    F16::from_f32(x).to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dtype_parse_and_label() {
+        assert_eq!(DType::parse("fp16").unwrap(), DType::F16);
+        assert_eq!(DType::parse("f16").unwrap(), DType::F16);
+        assert_eq!(DType::parse("half").unwrap(), DType::F16);
+        assert_eq!(DType::parse("fp32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert!(DType::parse("bf16").is_err());
+        assert_eq!(DType::F16.label(), "fp16");
+        assert_eq!(DType::F32.label(), "fp32");
+        assert_eq!(DType::default(), DType::F32);
+        assert!(DType::F16.is_reduced() && !DType::F32.is_reduced());
+    }
+
+    #[test]
+    fn prop_roundtrip_exact_for_representable_values() {
+        // every binary16 bit pattern widens to f32 and narrows back to
+        // the identical bits (NaN payloads canonicalize, so skip them)
+        for bits in 0..=u16::MAX {
+            let h = F16::from_bits(bits);
+            if h.is_nan() {
+                assert!(F16::from_f32(h.to_f32()).is_nan());
+                continue;
+            }
+            assert_eq!(
+                F16::from_f32(h.to_f32()).to_bits(),
+                bits,
+                "bits {bits:#06x} ({}) did not round-trip",
+                h.to_f32()
+            );
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and 1 + 2^-10: ties go to
+        // the even mantissa (1.0)
+        assert_eq!(quantize_f16(1.0 + 4.882_812_5e-4), 1.0);
+        // 1 + 3*2^-11 ties between 1+2^-10 and 1+2^-9: even is 1+2^-9
+        let above = 1.0 + 3.0 * 4.882_812_5e-4;
+        assert_eq!(quantize_f16(above), 1.0 + 2.0 * 9.765_625e-4);
+        // anything past the midpoint rounds up
+        assert_eq!(quantize_f16(1.0 + 4.9e-4), 1.0 + 9.765_625e-4);
+        // and below it rounds down
+        assert_eq!(quantize_f16(1.0 + 4.8e-4), 1.0);
+    }
+
+    #[test]
+    fn subnormal_inf_nan_handling() {
+        // overflow saturates to inf, preserving sign
+        assert_eq!(quantize_f16(1e6), f32::INFINITY);
+        assert_eq!(quantize_f16(-1e6), f32::NEG_INFINITY);
+        assert_eq!(quantize_f16(65504.0), 65504.0); // largest finite
+        assert_eq!(quantize_f16(65519.0), 65504.0); // below the midpoint
+        assert_eq!(quantize_f16(65520.0), f32::INFINITY); // at it: even=inf
+        // infinities pass through
+        assert_eq!(quantize_f16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize_f16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // NaN stays NaN
+        assert!(quantize_f16(f32::NAN).is_nan());
+        assert!(F16::NAN.is_nan() && !F16::NAN.is_finite());
+        assert!(F16::INFINITY.is_infinite());
+        // subnormal range is exact where representable
+        let tiny = (2f32).powi(-24); // smallest positive subnormal
+        assert_eq!(quantize_f16(tiny), tiny);
+        assert_eq!(F16::MIN_POSITIVE_SUBNORMAL.to_f32(), tiny);
+        assert_eq!(quantize_f16(3.0 * tiny), 3.0 * tiny);
+        // below half the smallest subnormal flushes to signed zero
+        assert_eq!(quantize_f16((2f32).powi(-26)), 0.0);
+        assert_eq!(quantize_f16(-(2f32).powi(-26)).to_bits(), (-0.0f32).to_bits());
+        // exactly half the smallest subnormal ties to even (zero)
+        assert_eq!(quantize_f16((2f32).powi(-25)), 0.0);
+        // just above it rounds up to the smallest subnormal
+        assert_eq!(quantize_f16(1.5 * (2f32).powi(-25)), tiny);
+        // normal/subnormal boundary
+        let min_normal = (2f32).powi(-14);
+        assert_eq!(quantize_f16(min_normal), min_normal);
+    }
+
+    #[test]
+    fn prop_rounding_error_is_within_half_ulp() {
+        // |q(x) - x| <= 2^-11 * |x| for normal-range values — the
+        // round-to-NEAREST guarantee, seeded-random sweep
+        let mut rng = Rng::seed_from_u64(0xF16);
+        for _ in 0..10_000 {
+            let mag = (rng.gen_f64() * 30.0 - 14.0).exp2();
+            let sign = if rng.gen_f64() < 0.5 { -1.0 } else { 1.0 };
+            let x = (sign * mag) as f32;
+            if x.abs() < (2f32).powi(-14) || x.abs() > 65504.0 {
+                continue;
+            }
+            let q = quantize_f16(x);
+            assert!(
+                ((q - x) / x).abs() <= 4.882_812_5e-4,
+                "{x} -> {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_conversion_is_monotone_and_order_consistent_with_f32() {
+        // a <= b  =>  q(a) <= q(b), and F16's own ordering agrees with
+        // the f32 ordering of the decoded values
+        let mut rng = Rng::seed_from_u64(0x0D0E);
+        let mut vals: Vec<f32> = (0..4000)
+            .map(|_| ((rng.gen_f64() - 0.5) * 2e5) as f32)
+            .collect();
+        vals.extend([0.0, -0.0, 1e-30, -1e-30, 65504.0, -65504.0]);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev: Option<(f32, F16)> = None;
+        for &v in &vals {
+            let h = F16::from_f32(v);
+            if let Some((pv, ph)) = prev {
+                assert!(pv <= v);
+                assert!(
+                    ph.to_f32() <= h.to_f32(),
+                    "monotonicity broke at {pv} -> {v}"
+                );
+                assert!(
+                    ph.partial_cmp(&h)
+                        != Some(std::cmp::Ordering::Greater),
+                    "F16 ordering disagrees with f32 at {pv} -> {v}"
+                );
+            }
+            prev = Some((v, h));
+        }
+    }
+}

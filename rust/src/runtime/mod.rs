@@ -1,9 +1,11 @@
 //! Execution runtimes behind the [`Backend`] abstraction.
 //!
 //! - [`reference`] — the hermetic pure-Rust backend (always compiled,
-//!   the default): interprets the manifest graphs with scalar f32 math,
-//!   so the whole serving stack builds, tests and benches from a clean
-//!   checkout with no Python and no AOT artifacts.
+//!   the default): interprets the manifest graphs with scalar math in
+//!   a runtime-selected storage precision ([`DType`]: f32, or binary16
+//!   with f32 accumulation via the software [`F16`] type), so the whole
+//!   serving stack builds, tests and benches from a clean checkout with
+//!   no Python and no AOT artifacts.
 //! - `client` (`--features pjrt`) — the PJRT client over `make
 //!   artifacts` output (`*.hlo.txt` + weight blobs), compiled through
 //!   the vendored `xla` crate.
@@ -23,6 +25,7 @@
 pub mod backend;
 #[cfg(feature = "pjrt")]
 mod client;
+pub mod dtype;
 pub mod manifest;
 pub mod reference;
 mod weights;
@@ -31,6 +34,7 @@ pub use backend::{
     backend_for, manifest_for, Backend, DataArg, ExecOut, OpaqueTensor,
     RuntimeStats, SharedBackend,
 };
+pub use dtype::{quantize_f16, DType, F16};
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;
 pub use manifest::{ArtifactEntry, Manifest, ModelConfig};

@@ -23,6 +23,15 @@
 //! cache in O(context) — the Table 1 ladder keeps its shape on this
 //! backend.
 //!
+//! **Precision.**  [`RefBackend::set_dtype`] selects the storage dtype
+//! for the whole backend: under [`DType::F16`] the weights are
+//! quantized to binary16 once at construction and every graph call
+//! stores activations and KV caches in binary16 with f32 accumulation
+//! (see [`model`] docs) — the paper's half-precision lever, previously
+//! only reachable through fp16 PJRT artifacts, now reproduced
+//! hermetically.  The accuracy harness (`crate::precision`) measures
+//! fp16-vs-fp32 greedy agreement and logit divergence.
+//!
 //! **Threading.**  `RefBackend` is `Send + Sync` (stats behind a
 //! `Mutex`; everything else immutable after construction), so one
 //! instance can serve many inference workers.  It additionally supports
@@ -44,6 +53,7 @@ use std::time::Instant;
 use crate::runtime::backend::{
     Backend, DataArg, ExecOut, OpaqueTensor, RuntimeStats,
 };
+use crate::runtime::dtype::{quantize_f16, DType};
 use crate::runtime::manifest::{
     ArtifactEntry, IoEntry, Manifest, ModelConfig, ParamEntry, SpecialTokens,
     WeightsEntry,
@@ -403,6 +413,10 @@ pub struct RefBackend {
     /// Direct constructors default to 1; `backend_for` sizes it from
     /// `ServingConfig` (cores ÷ workers).
     row_threads: usize,
+    /// Storage precision for weights/activations/KV caches.  Direct
+    /// constructors default to [`DType::F32`]; `backend_for` applies
+    /// `ServingConfig::dtype` via [`RefBackend::set_dtype`].
+    dtype: DType,
 }
 
 impl RefBackend {
@@ -424,6 +438,7 @@ impl RefBackend {
             weights,
             stats: Mutex::new(RuntimeStats::default()),
             row_threads: 1,
+            dtype: DType::F32,
         }
     }
 
@@ -440,6 +455,7 @@ impl RefBackend {
             weights,
             stats: Mutex::new(RuntimeStats::default()),
             row_threads: 1,
+            dtype: DType::F32,
         })
     }
 
@@ -447,6 +463,35 @@ impl RefBackend {
     /// Results are bitwise-identical for every value of `n`.
     pub fn set_row_threads(&mut self, n: usize) {
         self.row_threads = n.max(1);
+    }
+
+    /// Select the runtime storage precision.  [`DType::F16`] quantizes
+    /// every weight tensor to binary16 IN PLACE and makes subsequent
+    /// graph calls store activations and KV caches in binary16 too,
+    /// accumulating in f32.  Quantization is one-way (the dropped
+    /// mantissa bits are gone), so once F16 has been selected the
+    /// backend stays — and keeps reporting — F16: a later
+    /// `set_dtype(F32)` is a no-op rather than a lie about the storage.
+    /// Call right after construction — `backend_for` does.
+    pub fn set_dtype(&mut self, dtype: DType) {
+        if self.dtype == DType::F16 {
+            return; // weights already quantized; cannot go back up
+        }
+        self.dtype = dtype;
+        if dtype == DType::F16 {
+            for weights in self.weights.values_mut() {
+                for p in weights.params.iter_mut() {
+                    for v in p.data.iter_mut() {
+                        *v = quantize_f16(*v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The storage precision graph calls execute with.
+    pub fn dtype(&self) -> DType {
+        self.dtype
     }
 
     /// Decide the row-team size for one graph call: only split when the
@@ -510,7 +555,11 @@ impl RefBackend {
         let weights = self.weights.get(wkey).ok_or_else(|| {
             Error::Manifest(format!("no weights variant '{wkey}'"))
         })?;
-        Model::new(weights, self.manifest.config_for(&entry.variant))
+        Model::with_dtype(
+            weights,
+            self.manifest.config_for(&entry.variant),
+            self.dtype,
+        )
     }
 }
 
@@ -790,6 +839,10 @@ fn run_decode(
 impl Backend for RefBackend {
     fn name(&self) -> &'static str {
         "reference"
+    }
+
+    fn dtype(&self) -> DType {
+        self.dtype
     }
 
     fn manifest(&self) -> &Manifest {
@@ -1114,6 +1167,71 @@ mod tests {
         assert_eq!(a.2, c.2, "v cache diverged");
         assert_eq!(a.3, c.3, "fused decode tokens diverged");
         assert_eq!(a.4, c.4, "post-decode k cache diverged");
+    }
+
+    #[test]
+    fn fp16_backend_quantizes_weights_and_reports_dtype() {
+        let mut b = RefBackend::with_preset(&tiny_preset());
+        assert_eq!(b.dtype(), DType::F32);
+        b.set_dtype(DType::F16);
+        assert_eq!(b.dtype(), DType::F16);
+        // quantization is one-way: asking for F32 afterwards must not
+        // relabel the (already lossy) storage
+        b.set_dtype(DType::F32);
+        assert_eq!(b.dtype(), DType::F16);
+        // every weight cell is exactly binary16-representable now
+        for key in ["full", "pruned"] {
+            let w = b.host_weights(key).unwrap();
+            for p in &w.params {
+                for &v in &p.data {
+                    assert_eq!(
+                        v,
+                        quantize_f16(v),
+                        "{key}/{}: weight not binary16",
+                        p.name
+                    );
+                }
+            }
+        }
+        // and the backend still executes end-to-end
+        let prompt = [special::BOS as i32, 5, 9, special::SEP as i32];
+        let outs = b
+            .execute("ft_prefill_full_b1_s8", prompt_args(1, 8, &prompt))
+            .unwrap();
+        let logits = outs.into_iter().next().unwrap().into_f32().unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fp16_keeps_prefill_baseline_identity_but_diverges_from_fp32() {
+        let f32_b = RefBackend::with_preset(&tiny_preset());
+        let mut f16_b = RefBackend::with_preset(&tiny_preset());
+        f16_b.set_dtype(DType::F16);
+        let prompt =
+            [special::BOS as i32, 5, 9, 6, 11, special::SEP as i32];
+        let run = |b: &RefBackend, name: &str| {
+            b.execute(name, prompt_args(1, 8, &prompt))
+                .unwrap()
+                .into_iter()
+                .next()
+                .unwrap()
+                .into_f32()
+                .unwrap()
+        };
+        // the ladder identity (prefill == full forward, bitwise) holds
+        // PER dtype: both graphs run the same quantized scalar sequence
+        let base16 = run(&f16_b, "baseline_fwd_b1_s8");
+        let pre16 = run(&f16_b, "ft_prefill_full_b1_s8");
+        assert_eq!(base16, pre16, "fp16 broke the prefill identity");
+        // while fp16 logits measurably differ from the fp32 reference
+        let pre32 = run(&f32_b, "ft_prefill_full_b1_s8");
+        assert_ne!(pre32, pre16, "set_dtype(F16) changed nothing");
+        let max_div = pre32
+            .iter()
+            .zip(&pre16)
+            .map(|(a, q)| (a - q).abs() as f64)
+            .fold(0.0, f64::max);
+        assert!(max_div < 0.1, "fp16 divergence too large: {max_div}");
     }
 
     #[test]

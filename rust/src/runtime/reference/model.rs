@@ -3,14 +3,26 @@
 //! layernorm, multi-head attention against a KV cache, gelu FFN and
 //! tied-embedding logits.
 //!
-//! Everything is computed **row-wise in f32 with a fixed accumulation
-//! order**, and the SAME routine ([`Model::forward_row`]) serves the
-//! baseline full-forward, the fused prefill and the decode step.  That
-//! makes the three graphs bitwise-consistent: decoding with the KV cache
+//! Everything is **accumulated row-wise in f32 with a fixed order**,
+//! and the SAME routine ([`Model::forward_row`]) serves the baseline
+//! full-forward, the fused prefill and the decode step.  That makes
+//! the three graphs bitwise-consistent: decoding with the KV cache
 //! reproduces exactly what a full recompute would produce, so the
 //! FT-vs-baseline equivalence in the Table 1 ladder can be asserted as
 //! token identity rather than fuzzy agreement.
+//!
+//! **Precision.**  Storage dtype is a [`DType`] parameter
+//! ([`Model::with_dtype`]): under [`DType::F16`] the model keeps its
+//! weights (quantized once at backend construction), the activations
+//! at block boundaries (embedding output, both residual streams, the
+//! final hidden state) and the KV caches in binary16 while every dot
+//! product still accumulates in f32 — the mixed-precision contract of
+//! the PJRT fp16 artifacts, now executable hermetically.  The fixed
+//! accumulation order is shared by both dtypes, so the fp32/fp16
+//! identity properties above hold per dtype.
 
+use crate::runtime::dtype::DType;
+pub use crate::runtime::dtype::quantize_f16;
 use crate::runtime::manifest::ModelConfig;
 use crate::runtime::weights::{HostParam, HostWeights};
 use crate::{Error, Result};
@@ -134,71 +146,6 @@ fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
-/// Round-trip f32 -> IEEE binary16 -> f32 (round-to-nearest-even),
-/// simulating the fp16 KV-cache storage of the PJRT artifacts.
-pub fn quantize_f16(x: f32) -> f32 {
-    let bits = x.to_bits();
-    let sign = (bits >> 16) & 0x8000;
-    let exp = ((bits >> 23) & 0xff) as i32;
-    let mant = bits & 0x007f_ffff;
-    let h: u32 = if exp == 0xff {
-        // inf / nan
-        sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 }
-    } else {
-        let e = exp - 127 + 15;
-        if e >= 0x1f {
-            sign | 0x7c00 // overflow -> inf
-        } else if e <= 0 {
-            if e < -10 {
-                sign // underflow -> signed zero
-            } else {
-                // subnormal half
-                let m = mant | 0x0080_0000;
-                let shift = (14 - e) as u32;
-                let half = m >> shift;
-                let rem = m & ((1 << shift) - 1);
-                let midpoint = 1u32 << (shift - 1);
-                let rounded = if rem > midpoint
-                    || (rem == midpoint && (half & 1) == 1)
-                {
-                    half + 1
-                } else {
-                    half
-                };
-                sign | rounded
-            }
-        } else {
-            let half = ((e as u32) << 10) | (mant >> 13);
-            let rem = mant & 0x1fff;
-            if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
-                sign | (half + 1) // may carry into the exponent: still valid
-            } else {
-                sign | half
-            }
-        }
-    };
-    // decode binary16 back to f32
-    let s = (h >> 15) & 1;
-    let he = ((h >> 10) & 0x1f) as i32;
-    let hm = h & 0x3ff;
-    let f = if he == 0 {
-        (hm as f32) * (2f32).powi(-24)
-    } else if he == 0x1f {
-        if hm == 0 {
-            f32::INFINITY
-        } else {
-            f32::NAN
-        }
-    } else {
-        (1.0 + (hm as f32) / 1024.0) * (2f32).powi(he - 15)
-    };
-    if s == 1 {
-        -f
-    } else {
-        f
-    }
-}
-
 /// First-index argmax, matching `Sampler::greedy` and `jnp.argmax`.
 pub fn argmax(logits: &[f32]) -> u32 {
     let mut best = 0usize;
@@ -267,8 +214,11 @@ pub struct Model<'a> {
     lnf_g: &'a [f32],
     lnf_b: &'a [f32],
     layers: Vec<LayerRefs<'a>>,
-    /// Simulate fp16 KV-cache storage (cfg.dtype == "f16").
+    /// Store KV-cache cells in binary16 (runtime dtype F16, or a
+    /// manifest whose artifacts declare f16 caches).
     quantize_cache: bool,
+    /// Store block-boundary activations in binary16 (runtime dtype F16).
+    quantize_activations: bool,
 }
 
 fn param<'a>(w: &'a HostWeights, name: &str) -> Result<&'a HostParam> {
@@ -278,7 +228,19 @@ fn param<'a>(w: &'a HostWeights, name: &str) -> Result<&'a HostParam> {
 }
 
 impl<'a> Model<'a> {
+    /// Bind weights at the default (f32) runtime dtype.
     pub fn new(w: &'a HostWeights, cfg: &'a ModelConfig) -> Result<Self> {
+        Self::with_dtype(w, cfg, DType::F32)
+    }
+
+    /// Bind weights at an explicit runtime storage dtype.  The weights
+    /// themselves are quantized by the backend (once, at construction);
+    /// this flag controls activation/KV-cache storage per call.
+    pub fn with_dtype(
+        w: &'a HostWeights,
+        cfg: &'a ModelConfig,
+        dtype: DType,
+    ) -> Result<Self> {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let g = |n: &str| -> Result<&'a [f32]> {
@@ -310,7 +272,8 @@ impl<'a> Model<'a> {
             lnf_g: &param(w, "lnf_g")?.data,
             lnf_b: &param(w, "lnf_b")?.data,
             layers,
-            quantize_cache: cfg.dtype == "f16",
+            quantize_cache: dtype == DType::F16 || cfg.dtype == "f16",
+            quantize_activations: dtype == DType::F16,
         })
     }
 
@@ -320,6 +283,19 @@ impl<'a> Model<'a> {
             quantize_f16(x)
         } else {
             x
+        }
+    }
+
+    /// Quantize one block-boundary activation row in place (no-op at
+    /// f32).  Applied where a fused-block implementation would
+    /// materialize a half-precision tensor: the embedding output, each
+    /// residual stream after its block, and the final hidden state.
+    #[inline]
+    fn store_row(&self, x: &mut [f32]) {
+        if self.quantize_activations {
+            for v in x.iter_mut() {
+                *v = quantize_f16(*v);
+            }
         }
     }
 
@@ -334,6 +310,7 @@ impl<'a> Model<'a> {
         for j in 0..d {
             out[j] = te[j] + pe[j];
         }
+        self.store_row(out);
     }
 
     /// Run all transformer layers + the final LayerNorm for ONE token at
@@ -420,6 +397,7 @@ impl<'a> Model<'a> {
             for j in 0..d {
                 x[j] += proj[j];
             }
+            self.store_row(x);
 
             // FFN block (pre-LN)
             layernorm(x, lp.ln2_g, lp.ln2_b, h);
@@ -431,10 +409,12 @@ impl<'a> Model<'a> {
             for j in 0..d {
                 x[j] += proj[j];
             }
+            self.store_row(x);
         }
 
         layernorm(x, self.lnf_g, self.lnf_b, h);
         x.copy_from_slice(h);
+        self.store_row(x);
     }
 
     /// Tied-embedding logits for one final hidden row: `h @ tok_emb.T`.

@@ -33,6 +33,7 @@ use super::streaming::{
 use crate::config::{BackendKind, EngineKind, ServingConfig};
 use crate::coordinator::ServingResponse;
 use crate::data::Request;
+use crate::runtime::DType;
 use crate::Result;
 
 /// Builder for an embedded [`Server`] (defaults =
@@ -60,6 +61,13 @@ impl ServerBuilder {
 
     pub fn backend(mut self, backend: BackendKind) -> Self {
         self.cfg.backend = backend;
+        self
+    }
+
+    /// Storage precision (fp32 default; [`DType::F16`] = binary16
+    /// weights/activations/KV caches with f32 accumulation).
+    pub fn dtype(mut self, dtype: DType) -> Self {
+        self.cfg.dtype = dtype;
         self
     }
 

@@ -16,9 +16,14 @@
 //! <- {"id": 7, "event": "token", "token_text": "ba", "tokens": [5]}
 //! <- {"id": 7, "event": "token", "token_text": "gedu", "tokens": [9]}
 //! <- {"id": 7, "event": "done", "summary": "ba gedu", "n_tokens": 2,
-//!     "latency_ms": 12.3, "ttft_ms": 1.9}
+//!     "latency_ms": 12.3, "ttft_ms": 1.9, "dtype": "fp32"}
 //! <- {"id": 7, "event": "error", "error": "…", "code": "deadline"}
 //! ```
+//!
+//! Successful replies (v1 lines and v2 `done` events) carry the
+//! storage precision that produced them (`"dtype": "fp32" | "fp16"`,
+//! the server's `--dtype`), so clients can tell reduced-precision
+//! output apart.
 //!
 //! Every error reply (both versions) carries a structured `code`:
 //! `bad_request` | `overloaded` | `engine_error` | `cancelled` |
@@ -105,6 +110,9 @@ pub fn response_to_json(r: &ServingResponse) -> String {
     if let Some(a) = r.accuracy {
         pairs.push(("accuracy", Value::num(a)));
     }
+    if let Some(d) = r.dtype {
+        pairs.push(("dtype", Value::str(d)));
+    }
     Value::obj(pairs).to_json()
 }
 
@@ -147,6 +155,9 @@ pub fn event_to_json(id: u64, ev: &ServingEvent) -> String {
             }
             if let Some(a) = r.accuracy {
                 pairs.push(("accuracy", Value::num(a)));
+            }
+            if let Some(d) = r.dtype {
+                pairs.push(("dtype", Value::str(d)));
             }
             Value::obj(pairs).to_json()
         }
@@ -200,6 +211,7 @@ mod tests {
             accuracy: Some(0.5),
             error: None,
             code: None,
+            dtype: Some("fp16"),
         }
     }
 
@@ -243,6 +255,7 @@ mod tests {
         assert!(v.get("latency_ms").as_f64().unwrap() >= 12.0);
         assert!(v.get("ttft_ms").as_f64().unwrap() >= 3.0);
         assert_eq!(v.get("accuracy").as_f64(), Some(0.5));
+        assert_eq!(v.get("dtype").as_str(), Some("fp16"));
         assert!(v.get("code").is_null());
     }
 
@@ -285,6 +298,7 @@ mod tests {
         assert_eq!(v.get("event").as_str(), Some("done"));
         assert_eq!(v.get("summary").as_str(), Some("ba be"));
         assert_eq!(v.get("n_tokens").as_usize(), Some(2));
+        assert_eq!(v.get("dtype").as_str(), Some("fp16"));
     }
 
     #[test]

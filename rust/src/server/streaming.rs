@@ -326,6 +326,7 @@ impl StreamingPipeline {
         // request (successes AND failures)
         let post_tok = tok;
         let post_routes = routes.clone();
+        let dtype_label = cfg.dtype.label();
         let post = std::thread::Builder::new()
             .name("srv-postprocess".into())
             .spawn(move || {
@@ -374,6 +375,7 @@ impl StreamingPipeline {
                             );
                             resp.ttft = ttft;
                             resp.steps = steps;
+                            resp.dtype = Some(dtype_label);
                             reply_done(&post_routes, request.id, resp);
                         }
                         PoolEvent::Failed {

@@ -19,7 +19,10 @@ use aigc_infer::engine::{
     build as build_engine, DecodeSession, Engine, EngineInput, Sampler,
 };
 use aigc_infer::pipeline;
-use aigc_infer::runtime::{backend_for, Backend, DataArg, RefBackend};
+use aigc_infer::precision;
+use aigc_infer::runtime::{
+    backend_for, Backend, DType, DataArg, ExecOut, RefBackend,
+};
 use aigc_infer::special;
 use aigc_infer::{Server, ServingEvent, SubmitOptions};
 
@@ -804,6 +807,261 @@ fn server_round_trip_multi_worker() {
     }
     shutdown.store(true, Ordering::Relaxed);
     let _ = server.join();
+}
+
+// ------------------------------------------------------- fp16 precision
+
+#[test]
+fn fp16_ladder_runs_end_to_end_and_reports_dtype() {
+    // --dtype fp16 across every Table-1 rung (offline executors): all
+    // requests complete, and the precision is reported per run AND per
+    // response so fp16 numbers are never mistaken for fp32 ones.
+    let reqs = workload(6, 77);
+    for (engine, pipelined) in [
+        (EngineKind::Baseline, false),
+        (EngineKind::FtFull, false),
+        (EngineKind::FtPruned, false),
+        (EngineKind::FtPruned, true),
+    ] {
+        let mut c = cfg(engine, pipelined);
+        c.dtype = DType::F16;
+        let s = pipeline::run(&c, &reqs)
+            .unwrap_or_else(|e| panic!("{engine:?}/{pipelined}: {e}"));
+        assert_eq!(s.responses.len(), reqs.len(), "{engine:?}");
+        assert_eq!(s.dtype, DType::F16);
+        for r in &s.responses {
+            assert_eq!(r.dtype, Some("fp16"), "{engine:?}");
+        }
+    }
+    // and the fp32 path reports fp32
+    let s = pipeline::run(&cfg(EngineKind::FtPruned, false), &reqs)
+        .unwrap();
+    assert_eq!(s.dtype, DType::F32);
+    assert!(s.responses.iter().all(|r| r.dtype == Some("fp32")));
+}
+
+#[test]
+fn fp16_greedy_streams_match_fp32_on_probe_prompts() {
+    // THE accuracy gate (paper §4 "maintaining high levels of
+    // performance"): on the synthetic model, fp16 greedy decoding must
+    // agree with the fp32 reference token-for-token, with logit
+    // divergence at binary16 rounding scale.  Probe shape (6 prompts,
+    // max_new 8, seed 2) is shared with bench_snapshot's gate.
+    let cfg = ServingConfig::default();
+    for kind in
+        [EngineKind::Baseline, EngineKind::FtFull, EngineKind::FtPruned]
+    {
+        let rep = precision::compare(&cfg, kind, 6, 8, 2)
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        assert!(rep.compared_tokens > 0, "{kind:?}: nothing compared");
+        assert_eq!(
+            rep.match_rate, 1.0,
+            "{kind:?}: fp16 flipped {} of {} greedy tokens",
+            rep.compared_tokens - rep.matched_tokens,
+            rep.compared_tokens
+        );
+        assert!(
+            rep.max_abs_logit_div > 0.0,
+            "{kind:?}: fp16 ran bitwise-identical to fp32 — \
+             quantization cannot be active"
+        );
+        assert!(
+            rep.max_abs_logit_div < 0.05,
+            "{kind:?}: logit divergence {} over budget",
+            rep.max_abs_logit_div
+        );
+    }
+}
+
+#[test]
+fn fp16_server_streams_match_fp32_server() {
+    // End-to-end across the serving stack: the same texts through an
+    // fp32 and an fp16 embedded server produce identical greedy
+    // streams on the synthetic model, and fp16 replies say so.
+    let max_new = 8;
+    let texts: Vec<String> = precision::probe_inputs(6, max_new, 2)
+        .iter()
+        .map(|input| {
+            input.prompt[1..input.prompt.len() - 1]
+                .iter()
+                .map(|&id| {
+                    aigc_infer::tokenizer::vocab::render_rank(
+                        (id - special::FIRST_WORD) as usize,
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .collect();
+    let run = |dtype: DType| -> Vec<(u64, Vec<u32>, Option<&'static str>)> {
+        let server = Server::builder()
+            .engine(EngineKind::FtPruned)
+            .dtype(dtype)
+            .max_new_tokens(max_new)
+            .start()
+            .unwrap();
+        let streams: Vec<_> = texts
+            .iter()
+            .map(|t| server.submit(t.clone(), max_new).unwrap())
+            .collect();
+        let mut out: Vec<(u64, Vec<u32>, Option<&'static str>)> = streams
+            .into_iter()
+            .map(|s| {
+                let resp = s.wait().expect("terminal");
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                (resp.id, resp.summary_ids, resp.dtype)
+            })
+            .collect();
+        out.sort();
+        out
+    };
+    let fp32 = run(DType::F32);
+    let fp16 = run(DType::F16);
+    assert!(fp32.iter().all(|(_, _, d)| *d == Some("fp32")));
+    assert!(fp16.iter().all(|(_, _, d)| *d == Some("fp16")));
+    let ids32: Vec<&Vec<u32>> = fp32.iter().map(|(_, s, _)| s).collect();
+    let ids16: Vec<&Vec<u32>> = fp16.iter().map(|(_, s, _)| s).collect();
+    assert_eq!(ids32, ids16, "fp16 serving diverged from fp32");
+    assert!(
+        ids32.iter().map(|s| s.len()).sum::<usize>() > 0,
+        "comparison was vacuous"
+    );
+}
+
+#[test]
+fn server_v2_fp16_done_line_reports_dtype() {
+    let addr = "127.0.0.1:17177";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = shutdown.clone();
+    let mut scfg = cfg(EngineKind::FtPruned, true);
+    scfg.dtype = DType::F16;
+    scfg.batch.max_wait_ms = 5;
+    let server = std::thread::spawn(move || {
+        let _ = aigc_infer::server::serve(scfg, addr, sd);
+    });
+    let deadline = Instant::now() + std::time::Duration::from_secs(30);
+    let stream = loop {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) if Instant::now() >= deadline => {
+                panic!("server did not come up: {e}")
+            }
+            Err(_) => {
+                std::thread::sleep(std::time::Duration::from_millis(50))
+            }
+        }
+    };
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(
+        writer,
+        "{{\"v\": 2, \"id\": 5, \"text\": \"ba gedu fi\", \
+         \"max_new_tokens\": 6}}"
+    )
+    .unwrap();
+    let terminal = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = aigc_infer::util::json::parse(&line).unwrap();
+        match v.get("event").as_str() {
+            Some("token") => continue,
+            Some("done") | Some("error") => break v,
+            other => panic!("unexpected event {other:?}: {line}"),
+        }
+    };
+    assert_eq!(terminal.get("event").as_str(), Some("done"));
+    assert_eq!(
+        terminal.get("dtype").as_str(),
+        Some("fp16"),
+        "v2 done line must report the serving precision"
+    );
+    shutdown.store(true, Ordering::Relaxed);
+    drop(writer);
+    drop(reader);
+    let _ = server.join();
+}
+
+// --------------------------------------------- poisoned-session contract
+
+/// A backend that injects a failure on the Nth execute — drives the
+/// decode session into the poisoned state (KV handles consumed, no
+/// replacement) that used to panic the worker thread.
+struct FailingBackend {
+    inner: RefBackend,
+    calls: std::sync::atomic::AtomicUsize,
+    fail_on: usize,
+}
+
+impl Backend for FailingBackend {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+
+    fn manifest(&self) -> &aigc_infer::runtime::Manifest {
+        self.inner.manifest()
+    }
+
+    fn stats(&self) -> aigc_infer::runtime::RuntimeStats {
+        self.inner.stats()
+    }
+
+    fn prepare(&self, name: &str) -> aigc_infer::Result<()> {
+        self.inner.prepare(name)
+    }
+
+    fn execute(
+        &self,
+        name: &str,
+        data: Vec<DataArg>,
+    ) -> aigc_infer::Result<Vec<ExecOut>> {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if call == self.fail_on {
+            return Err(aigc_infer::Error::Other(
+                "injected backend failure".into(),
+            ));
+        }
+        self.inner.execute(name, data)
+    }
+
+    fn host_weights(
+        &self,
+        key: &str,
+    ) -> Option<&aigc_infer::runtime::HostWeights> {
+        self.inner.host_weights(key)
+    }
+}
+
+#[test]
+fn poisoned_ft_session_returns_typed_errors_not_panics() {
+    let backend: Arc<dyn Backend> = Arc::new(FailingBackend {
+        inner: RefBackend::synthetic(),
+        calls: std::sync::atomic::AtomicUsize::new(0),
+        fail_on: 2, // call 1 = prefill (ok), call 2 = first decode
+    });
+    let engine = aigc_infer::engine::FtEngine::new(
+        backend,
+        "full",
+        false, // single-step decode: the failing call is deterministic
+    )
+    .unwrap();
+    let inputs = seeded_prompts(2, 5, 6, None);
+    let mut sampler = Sampler::greedy();
+    let mut session = engine.start(&inputs).unwrap();
+    // step 1 samples the parked prefill logits (no graph call)
+    session.step(&mut sampler).expect("pending-logits step");
+    // step 2 hits the injected decode failure: typed error, session dead
+    let err = session.step(&mut sampler).unwrap_err();
+    assert_eq!(err.code(), "engine_error");
+    assert!(err.to_string().contains("injected"), "{err}");
+    // the poisoned session keeps failing REQUESTS with a typed error —
+    // this used to be `expect("session has no k cache")`, a panic that
+    // took the whole inference worker thread down
+    let err = session.step(&mut sampler).unwrap_err();
+    assert_eq!(err.code(), "engine_error");
+    assert!(
+        err.to_string().contains("poisoned"),
+        "expected the poisoned-session error, got: {err}"
+    );
 }
 
 /// Real-artifact tests.  The `pjrt` feature only compiles after the

@@ -2,14 +2,18 @@
 //! the offline vendor set has no proptest).  Each property runs a few
 //! hundred randomized cases with a fixed seed, so failures reproduce.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
 
-use aigc_infer::config::{BatchPolicy, EngineKind};
-use aigc_infer::coordinator::{DynamicBatcher, PreparedRequest};
-use aigc_infer::engine::{
-    build as build_engine, DecodeSession, Engine, EngineInput, Sampler,
+use aigc_infer::config::{BatchPolicy, EngineKind, ServingConfig};
+use aigc_infer::coordinator::{
+    Batch, DynamicBatcher, InferencePool, PoolEvent, PreparedRequest,
 };
-use aigc_infer::runtime::{Backend, RefBackend};
+use aigc_infer::engine::{
+    build as build_engine, DecodeSession, Engine, EngineInput,
+    FinishReason, Sampler,
+};
+use aigc_infer::runtime::{quantize_f16, Backend, RefBackend, F16};
 use aigc_infer::tokenizer::vocab::{parse_rank, render_rank};
 use aigc_infer::tokenizer::{
     decode, Encode, FastTokenizer, SlowTokenizer, Vocab,
@@ -344,6 +348,282 @@ fn prop_stepped_session_equals_one_shot_generate() {
             );
         }
     }
+}
+
+#[test]
+fn prop_f16_roundtrip_rne_and_ordering() {
+    // crate-boundary property sweep over the software binary16 type:
+    // quantization is idempotent, error-bounded, and order-preserving
+    let mut rng = Rng::seed_from_u64(0xF166);
+    let mut prev: Option<f32> = None;
+    let mut vals: Vec<f32> = (0..3000)
+        .map(|_| ((rng.gen_f64() - 0.5) * 1e3) as f32)
+        .collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for &v in &vals {
+        let q = quantize_f16(v);
+        // idempotent: a quantized value is exactly representable
+        assert_eq!(quantize_f16(q), q, "{v}");
+        // round-to-NEAREST error bound for normal-range values
+        if v.abs() >= (2f32).powi(-14) {
+            assert!(((q - v) / v).abs() <= 4.882_812_5e-4, "{v} -> {q}");
+        }
+        // monotone, so argmax over quantized logits never inverts a
+        // pair that binary16 can still distinguish
+        if let Some(p) = prev {
+            assert!(quantize_f16(p) <= q, "order inverted at {p} -> {v}");
+        }
+        prev = Some(v);
+        // F16's own comparison agrees with the f32 view
+        assert_eq!(
+            F16::from_f32(v).partial_cmp(&F16::from_f32(v + 1.0)),
+            q.partial_cmp(&quantize_f16(v + 1.0))
+        );
+    }
+}
+
+#[test]
+fn prop_session_fuzz_every_request_terminates_exactly_once() {
+    // Seeded fuzz of the continuous-batching session contract: random
+    // interleavings of admit / cancel / deadline-retire / step over a
+    // few hundred decode steps.  Every admitted request must surface
+    // EXACTLY ONE FinishedRequest, with a coherent reason.
+    let backend = Arc::new(RefBackend::synthetic());
+    let mut rng = Rng::seed_from_u64(0xFA22);
+    for kind in
+        [EngineKind::Baseline, EngineKind::FtFull, EngineKind::FtPruned]
+    {
+        let engine =
+            build_engine(kind, backend.clone(), Default::default())
+                .unwrap();
+        // fresh fuzz inputs: short prompts, budgets 1..=6 with an
+        // occasional zero-budget request (must retire at admission
+        // with Length, before any decode work is spent on it)
+        fn fresh(
+            rng: &mut Rng,
+            next_id: &mut u64,
+            n: usize,
+        ) -> Vec<EngineInput> {
+            (0..n)
+                .map(|_| {
+                    let id = *next_id;
+                    *next_id += 1;
+                    let len = rng.gen_range(1, 8);
+                    let mut prompt = vec![aigc_infer::special::BOS];
+                    for _ in 0..len {
+                        prompt.push(
+                            aigc_infer::special::FIRST_WORD
+                                + rng.gen_range(0, 80) as u32,
+                        );
+                    }
+                    prompt.push(aigc_infer::special::SEP);
+                    let max_new = if rng.gen_range(0, 10) == 0 {
+                        0
+                    } else {
+                        rng.gen_range(1, 7)
+                    };
+                    EngineInput {
+                        request_id: id,
+                        prompt,
+                        max_new_tokens: max_new,
+                    }
+                })
+                .collect()
+        }
+        for case in 0..2 {
+            let mut sampler = Sampler::greedy();
+            let mut next_id = 0u64;
+            let seed_batch =
+                fresh(&mut rng, &mut next_id, 1 + rng.gen_range(0, 3));
+            let mut live: Vec<u64> =
+                seed_batch.iter().map(|i| i.request_id).collect();
+            let mut session = engine.start(&seed_batch).unwrap();
+            let mut outcomes: HashMap<u64, FinishReason> = HashMap::new();
+            let mut drain =
+                |session: &mut Box<dyn DecodeSession>,
+                 live: &mut Vec<u64>,
+                 outcomes: &mut HashMap<u64, FinishReason>| {
+                    for f in session.take_finished() {
+                        let id = f.output.request_id;
+                        assert!(
+                            outcomes.insert(id, f.reason).is_none(),
+                            "{kind:?} case {case}: request {id} \
+                             terminated twice"
+                        );
+                        live.retain(|&l| l != id);
+                    }
+                };
+            let target = 24usize; // requests per fuzz case
+            let mut steps = 0usize;
+            loop {
+                steps += 1;
+                assert!(
+                    steps < 500,
+                    "{kind:?} case {case}: fuzz made no progress"
+                );
+                // random op between steps, like the pool's step loop
+                match rng.gen_range(0, 6) {
+                    0 | 1 if (next_id as usize) < target => {
+                        let extra = fresh(
+                            &mut rng,
+                            &mut next_id,
+                            1 + rng.gen_range(0, 2),
+                        );
+                        if session.can_admit(&extra) {
+                            live.extend(
+                                extra.iter().map(|i| i.request_id),
+                            );
+                            session.admit(&extra).unwrap();
+                        } else {
+                            // candidates never entered the session; the
+                            // ids are simply never spent
+                            next_id -= extra.len() as u64;
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let id = live[rng.gen_range(0, live.len())];
+                        let reason = if rng.gen_range(0, 2) == 0 {
+                            FinishReason::Cancelled
+                        } else {
+                            FinishReason::DeadlineExpired
+                        };
+                        // false only when the row already finished but
+                        // has not been drained yet (e.g. zero-budget
+                        // admissions) — exactly the pool's semantics
+                        let _ = session.retire(id, reason);
+                    }
+                    _ => {}
+                }
+                session.step(&mut sampler).unwrap();
+                drain(&mut session, &mut live, &mut outcomes);
+                if session.active() == 0 {
+                    if (next_id as usize) >= target {
+                        break;
+                    }
+                    // keep the session alive until the target is spent
+                    let extra = fresh(&mut rng, &mut next_id, 1);
+                    assert!(session.can_admit(&extra), "{kind:?}: empty \
+                             session must admit a small request");
+                    live.extend(extra.iter().map(|i| i.request_id));
+                    session.admit(&extra).unwrap();
+                }
+            }
+            drain(&mut session, &mut live, &mut outcomes);
+            assert!(live.is_empty(), "{kind:?} case {case}: {live:?} \
+                     never terminated");
+            assert_eq!(
+                outcomes.len(),
+                next_id as usize,
+                "{kind:?} case {case}: terminal count != submitted"
+            );
+            for (id, reason) in &outcomes {
+                assert!(
+                    matches!(
+                        reason,
+                        FinishReason::Eos
+                            | FinishReason::Length
+                            | FinishReason::Cancelled
+                            | FinishReason::DeadlineExpired
+                    ),
+                    "request {id}: incoherent reason {reason:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pool_fuzz_exactly_one_terminal_event_per_id() {
+    // The same lifecycle contract at the pool level, with real worker
+    // threads: randomized budgets, pre-cancelled requests and expired
+    // deadlines interleave; every id gets exactly one terminal event
+    // and never a token event after it.
+    let mut cfg = ServingConfig::default();
+    cfg.workers = 2;
+    cfg.row_threads = 1;
+    cfg.gen.max_new_tokens = 6;
+    let (out_tx, out_rx) = mpsc::sync_channel(4096);
+    let pool = InferencePool::start(&cfg, out_tx).unwrap();
+    let input = pool.input();
+    let collector =
+        std::thread::spawn(move || -> Vec<PoolEvent> { out_rx.iter().collect() });
+
+    let mut rng = Rng::seed_from_u64(0x9001);
+    let mut submitted: Vec<u64> = Vec::new();
+    let mut id = 0u64;
+    for _ in 0..10 {
+        let n = 1 + rng.gen_range(0, 4);
+        let mut requests = Vec::new();
+        for _ in 0..n {
+            let len = 1 + rng.gen_range(0, 6);
+            let mut prompt = vec![aigc_infer::special::BOS];
+            for _ in 0..len {
+                prompt.push(
+                    aigc_infer::special::FIRST_WORD
+                        + rng.gen_range(0, 60) as u32,
+                );
+            }
+            prompt.push(aigc_infer::special::SEP);
+            let mut req = PreparedRequest::new(
+                id,
+                prompt,
+                1 + rng.gen_range(0, 6),
+            );
+            match rng.gen_range(0, 8) {
+                0 => {
+                    // pre-cancelled
+                    req.cancel = Some(Arc::new(
+                        std::sync::atomic::AtomicBool::new(true),
+                    ));
+                }
+                1 => {
+                    // already-expired deadline
+                    req.deadline = Some(std::time::Instant::now());
+                }
+                _ => {}
+            }
+            submitted.push(id);
+            id += 1;
+            requests.push(req);
+        }
+        input.send(Batch { requests, seq_bucket: 32 }).unwrap();
+    }
+    drop(input);
+    pool.join();
+    let events = collector.join().unwrap();
+
+    let mut terminals: HashMap<u64, usize> = HashMap::new();
+    for ev in &events {
+        match ev {
+            PoolEvent::Tokens { id, .. } => {
+                assert!(
+                    !terminals.contains_key(id),
+                    "request {id}: token event after its terminal"
+                );
+            }
+            PoolEvent::Finished { request, .. } => {
+                *terminals.entry(request.id).or_insert(0) += 1;
+            }
+            PoolEvent::Failed { request, code, .. } => {
+                assert!(
+                    ["engine_error", "bad_request", "cancelled",
+                     "deadline", "overloaded"]
+                        .contains(code),
+                    "request {}: unknown code {code}",
+                    request.id
+                );
+                *terminals.entry(request.id).or_insert(0) += 1;
+            }
+        }
+    }
+    for rid in &submitted {
+        assert_eq!(
+            terminals.get(rid),
+            Some(&1),
+            "request {rid}: expected exactly one terminal event"
+        );
+    }
+    assert_eq!(terminals.len(), submitted.len());
 }
 
 #[test]
