@@ -1,13 +1,17 @@
 //! `bench_snapshot` — the perf-trajectory recorder.
 //!
 //! Runs the Table-1 ladder (hermetic reference backend, synthetic
-//! seeded model) at BOTH precisions (`fp32` and `fp16` — schema 3),
-//! the fp16-vs-fp32 accuracy harness per ladder rung (greedy match
-//! rate + max-abs logit divergence, gated at match rate == 1.0 on the
+//! seeded model) at BOTH precisions (`fp32` and `fp16`), the
+//! fp16-vs-fp32 accuracy harness per ladder rung (greedy match rate +
+//! max-abs logit divergence, gated at match rate == 1.0 on the
 //! synthetic model), a worker-pool sweep of the pipelined row at
-//! `--workers 1` and `--workers 4`, and a **continuous-vs-static
+//! `--workers 1` and `--workers 4`, a **continuous-vs-static
 //! batching** serving comparison through the embedded `Server` (same
-//! trace, admission between decode steps ON vs OFF), then writes one
+//! trace, admission between decode steps ON vs OFF), and — schema 4 —
+//! a **paged-vs-legacy KV cache** admission-cost comparison
+//! (continuous batching at batch 4: the paged path must prefill
+//! strictly fewer tokens per admission than the legacy batch-wide
+//! re-prefill; hard-gated by the self-validation), then writes one
 //! machine-readable `BENCH_<n>.json` datapoint (samples/sec, p50/p99
 //! latency, TTFT, tokens/sec per configuration).  Successive PRs
 //! append `BENCH_2.json`, `BENCH_3.json`, … so the speed trajectory of
@@ -177,6 +181,63 @@ fn run_serving(continuous: bool, n: usize, max_new: usize) -> Value {
     ])
 }
 
+/// The schema-4 `kv_admission` A/B: the same trace through the
+/// continuous batcher (1 worker, max_batch 4) with paged block-pool
+/// caches vs the legacy contiguous caches.  A fixed, larger-than-smoke
+/// workload so mid-session admissions reliably happen — the quantity
+/// under comparison.
+fn run_kv_admission(paged: bool, n: usize, max_new: usize) -> Value {
+    let mut cfg = ServingConfig::default();
+    cfg.engine = EngineKind::FtPruned;
+    cfg.pipelined = true;
+    cfg.workers = 1;
+    cfg.row_threads = 1;
+    cfg.batch.max_batch = 4;
+    cfg.kv.paged = paged;
+    cfg.gen.max_new_tokens = max_new;
+    cfg.precompile = true;
+    let mut trace = TraceGenerator::new(
+        TraceConfig { max_new_tokens: max_new, ..Default::default() },
+        3,
+    );
+    let reqs = trace.take(n);
+    let s = pipeline::run(&cfg, &reqs).expect("kv admission bench failed");
+    let mode = if paged { "paged" } else { "legacy" };
+    eprintln!(
+        "  kv[{mode}]: {} admission prefill tokens, {} mid-session \
+         admissions, peak {}/{} blocks, {:.1}ms blocked",
+        s.kv.admission_prefill_tokens,
+        s.kv.admitted_mid_session,
+        s.kv.kv_peak_blocks_in_use,
+        s.kv.kv_total_blocks,
+        s.kv.blocked_on_capacity.as_secs_f64() * 1e3,
+    );
+    Value::obj(vec![
+        ("mode", Value::str(mode)),
+        ("requests", Value::num(n as f64)),
+        ("max_batch", Value::num(4.0)),
+        (
+            "admission_prefill_tokens",
+            Value::num(s.kv.admission_prefill_tokens as f64),
+        ),
+        (
+            "admitted_mid_session",
+            Value::num(s.kv.admitted_mid_session as f64),
+        ),
+        (
+            "kv_peak_blocks_in_use",
+            Value::num(s.kv.kv_peak_blocks_in_use as f64),
+        ),
+        ("kv_total_blocks", Value::num(s.kv.kv_total_blocks as f64)),
+        (
+            "blocked_on_capacity_ms",
+            Value::num(s.kv.blocked_on_capacity.as_secs_f64() * 1e3),
+        ),
+        ("samples_per_sec", Value::num(s.samples_per_sec)),
+        ("generated_tokens", Value::num(s.generated_tokens as f64)),
+    ])
+}
+
 fn run_one(
     engine: EngineKind,
     pipelined: bool,
@@ -309,12 +370,21 @@ fn main() {
         run_serving(false, n, max_new),
     ];
 
+    // --- paged vs legacy KV admission cost (schema 4) ------------------
+    // fixed floor so mid-session admissions happen even in smoke runs
+    let kv_n = n.max(24);
+    let kv_max_new = max_new.max(12);
+    let kv_admission = vec![
+        run_kv_admission(true, kv_n, kv_max_new),
+        run_kv_admission(false, kv_n, kv_max_new),
+    ];
+
     let created = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let doc = Value::obj(vec![
-        ("schema", Value::num(3.0)),
+        ("schema", Value::num(4.0)),
         ("created_unix", Value::num(created as f64)),
         ("preset", Value::str("synthetic-reference-default")),
         ("requests", Value::num(n as f64)),
@@ -323,13 +393,14 @@ fn main() {
         ("precision", Value::Array(precision_rows)),
         ("workers_sweep", Value::Array(sweep)),
         ("serving", Value::Array(serving)),
+        ("kv_admission", Value::Array(kv_admission)),
     ]);
     std::fs::write(&out, doc.to_json()).expect("write snapshot");
 
     // --- self-validation (this is the CI smoke assertion) --------------
     let text = std::fs::read_to_string(&out).expect("re-read snapshot");
     let v = json::parse(&text).expect("snapshot must be valid JSON");
-    assert_eq!(v.get("schema").as_usize(), Some(3), "schema");
+    assert_eq!(v.get("schema").as_usize(), Some(4), "schema");
     let ladder = v.get("ladder").as_array().expect("ladder array");
     assert_eq!(ladder.len(), 8, "4 ladder rows x {{fp32, fp16}}");
     for dtype in ["fp32", "fp16"] {
@@ -419,5 +490,51 @@ fn main() {
         .filter_map(|r| r.get("mode").as_str())
         .collect();
     assert_eq!(modes, ["continuous", "static"], "both modes recorded");
+
+    // THE schema-4 gate: at batch >= 4 with mid-session admissions
+    // actually happening, the paged path must prefill strictly fewer
+    // tokens per admission than the legacy batch-wide re-prefill.
+    let kv = v.get("kv_admission").as_array().expect("kv_admission array");
+    assert_eq!(kv.len(), 2, "paged + legacy modes");
+    let field = |row: &json::Value, key: &str| -> f64 {
+        row.get(key)
+            .as_f64()
+            .unwrap_or_else(|| panic!("kv row missing {key}: {}", row.to_json()))
+    };
+    let paged = kv
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("paged"))
+        .expect("paged row");
+    let legacy = kv
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("legacy"))
+        .expect("legacy row");
+    for row in [paged, legacy] {
+        assert!(
+            field(row, "admitted_mid_session") >= 1.0,
+            "the comparison is vacuous without mid-session admissions: {}",
+            row.to_json()
+        );
+        assert!(field(row, "admission_prefill_tokens") > 0.0);
+        assert!(field(row, "generated_tokens") > 0.0);
+    }
+    assert!(field(paged, "kv_total_blocks") > 0.0, "paged pool missing");
+    assert!(
+        field(paged, "kv_peak_blocks_in_use")
+            <= field(paged, "kv_total_blocks"),
+        "paged pool overcommitted"
+    );
+    assert_eq!(
+        field(legacy, "kv_total_blocks"),
+        0.0,
+        "legacy mode must not report a block pool"
+    );
+    assert!(
+        field(paged, "admission_prefill_tokens")
+            < field(legacy, "admission_prefill_tokens"),
+        "paged admission cost ({}) must be strictly below legacy ({})",
+        field(paged, "admission_prefill_tokens"),
+        field(legacy, "admission_prefill_tokens"),
+    );
     println!("bench snapshot OK: {out}");
 }

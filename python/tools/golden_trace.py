@@ -428,21 +428,56 @@ def main():
             "ft_pruned": pruned_streams,
         },
     }
-    text = json.dumps(fixture, indent=1) + "\n"
-    if args.bless:
-        os.makedirs(os.path.dirname(fixture_path), exist_ok=True)
-        with open(fixture_path, "w") as f:
-            f.write(text)
-        print(f"blessed {fixture_path}")
-    elif os.path.exists(fixture_path):
-        committed = open(fixture_path).read()
-        if committed == text:
-            print("fixture matches the committed golden trace")
+
+    # --- fp16 fixture: same prompts, binary16 storage per rung --------
+    full16_streams, pruned16_streams = [], []
+    for p in prompts:
+        s, _, mg = rollout(m_full16, p, MAX_NEW, slots=32)
+        full16_streams.append(s)
+        print(f"  full16 prompt len {len(p)}: {s} (margin {mg:.4g})")
+    for p in prompts:
+        s, _, mg = rollout(m_pruned16, p, MAX_NEW, slots=32)
+        pruned16_streams.append(s)
+        print(f"  prun16 prompt len {len(p)}: {s} (margin {mg:.4g})")
+    fixture16 = {
+        "schema": 1,
+        "preset": "synthetic-reference-default",
+        "dtype": "fp16",
+        "seed": SEED,
+        "max_new_tokens": MAX_NEW,
+        "prompts": prompts,
+        "streams": {
+            "baseline": full16_streams,
+            "ft_full": full16_streams,
+            "ft_pruned": pruned16_streams,
+        },
+    }
+
+    fixture16_path = os.path.join(
+        repo, "rust", "tests", "fixtures", "golden_fp16.json"
+    )
+    for path, fix, label in [
+        (fixture_path, fixture, "fp32"),
+        (fixture16_path, fixture16, "fp16"),
+    ]:
+        text = json.dumps(fix, indent=1) + "\n"
+        if args.bless:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"blessed {path}")
+        elif os.path.exists(path):
+            committed = open(path).read()
+            if committed == text:
+                print(f"{label} fixture matches the committed golden trace")
+            else:
+                print(
+                    f"{label} FIXTURE MISMATCH — rerun with --bless "
+                    "if intentional"
+                )
+                sys.exit(1)
         else:
-            print("FIXTURE MISMATCH — rerun with --bless if intentional")
-            sys.exit(1)
-    else:
-        print("no committed fixture (run with --bless)")
+            print(f"no committed {label} fixture (run with --bless)")
 
     # --- fp16 gate pre-validation --------------------------------------
     # seed 2 chosen by sweeping 0..6 for the largest worst-case argmax

@@ -121,6 +121,34 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Paged KV-cache geometry for the FT engines (`--kv-block-size`,
+/// `--kv-blocks`, `--no-paged-kv`).
+///
+/// With `paged` on (the default, on paged-capable backends) each FT
+/// decode session owns a block pool: every request's KV slots live in
+/// fixed-size blocks addressed through a per-request block table, so
+/// **admission prefills only the new row** and retirement frees its
+/// blocks immediately.  With `paged` off the engines use the legacy
+/// contiguous bucket caches, where every admission re-prefills the
+/// whole batch (kept for A/B benching; also the automatic fallback on
+/// backends without paged support, e.g. the PJRT client).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Use block-paged KV caches where the backend supports them.
+    pub paged: bool,
+    /// Sequence slots per block.
+    pub block_size: usize,
+    /// Blocks in each session's pool; 0 = auto-size so the largest
+    /// compiled batch bucket fits at the engine's max sequence.
+    pub blocks: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        Self { paged: true, block_size: 16, blocks: 0 }
+    }
+}
+
 /// Generation limits for a serving run.
 #[derive(Debug, Clone, Copy)]
 pub struct GenConfig {
@@ -154,6 +182,8 @@ pub struct ServingConfig {
     pub sampling: Sampling,
     pub batch: BatchPolicy,
     pub gen: GenConfig,
+    /// Paged KV-cache geometry (block pool per FT decode session).
+    pub kv: KvConfig,
     /// Run the 4-stage parallel pipeline (paper §3.3 Fig 4) instead of the
     /// sequential reference executor.
     pub pipelined: bool,
@@ -196,6 +226,7 @@ impl Default for ServingConfig {
             sampling: Sampling::Greedy,
             batch: BatchPolicy::default(),
             gen: GenConfig::default(),
+            kv: KvConfig::default(),
             pipelined: true,
             workers: 1,
             row_threads: 0,
@@ -275,6 +306,18 @@ impl ServingConfig {
                 cfg.gen.use_multi_step = x;
             }
         }
+        let kv = v.get("kv");
+        if !kv.is_null() {
+            if let Some(x) = kv.get("paged").as_bool() {
+                cfg.kv.paged = x;
+            }
+            if let Some(n) = kv.get("block_size").as_usize() {
+                cfg.kv.block_size = n;
+            }
+            if let Some(n) = kv.get("blocks").as_usize() {
+                cfg.kv.blocks = n;
+            }
+        }
         if let Some(x) = v.get("pipelined").as_bool() {
             cfg.pipelined = x;
         }
@@ -341,6 +384,14 @@ impl ServingConfig {
                     ("use_multi_step", Value::Bool(self.gen.use_multi_step)),
                 ]),
             ),
+            (
+                "kv",
+                Value::obj(vec![
+                    ("paged", Value::Bool(self.kv.paged)),
+                    ("block_size", Value::num(self.kv.block_size as f64)),
+                    ("blocks", Value::num(self.kv.blocks as f64)),
+                ]),
+            ),
             ("pipelined", Value::Bool(self.pipelined)),
             ("workers", Value::num(self.workers as f64)),
             ("row_threads", Value::num(self.row_threads as f64)),
@@ -364,6 +415,9 @@ impl ServingConfig {
         }
         if self.stage_queue == 0 {
             return Err(Error::Other("stage_queue must be > 0".into()));
+        }
+        if self.kv.block_size == 0 {
+            return Err(Error::Other("kv block_size must be > 0".into()));
         }
         if let Sampling::TopK { k, temperature, .. } = self.sampling {
             if k == 0 {
@@ -445,6 +499,30 @@ mod tests {
         assert_eq!(c.workers, 1);
         assert_eq!(c.row_threads, 0);
         assert!(c.continuous, "continuous batching is the default");
+    }
+
+    #[test]
+    fn kv_config_defaults_roundtrip_and_validate() {
+        let c = ServingConfig::default();
+        assert!(c.kv.paged, "paged KV is the default");
+        assert_eq!(c.kv.block_size, 16);
+        assert_eq!(c.kv.blocks, 0, "0 = auto-size");
+        let mut c = ServingConfig::default();
+        c.kv.paged = false;
+        c.kv.block_size = 8;
+        c.kv.blocks = 40;
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.kv, c.kv);
+        let c = ServingConfig::from_json(
+            r#"{"kv": {"paged": false, "block_size": 4, "blocks": 12}}"#,
+        )
+        .unwrap();
+        assert!(!c.kv.paged);
+        assert_eq!(c.kv.block_size, 4);
+        assert_eq!(c.kv.blocks, 12);
+        let mut bad = ServingConfig::default();
+        bad.kv.block_size = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -25,18 +25,25 @@
 //! - **token cap**: summed `need_seq` (prompt + generation budget) of
 //!   live rows + candidates stays within `batch.max_batch_tokens`
 //!   (when nonzero);
-//! - **bucket feasibility** ([`crate::engine::DecodeSession::can_admit`]):
-//!   some compiled (batch, seq) bucket covers the grown batch — the FT
-//!   engines re-prefill at the bigger bucket, the baseline regrows its
-//!   token matrix.
+//! - **engine feasibility**
+//!   ([`crate::engine::DecodeSession::can_admit`]): with the paged KV
+//!   path (the default), the session's block pool must hold free
+//!   blocks for the candidate's prompt PLUS its full generation
+//!   budget (the decode reservation) — **capacity-aware scheduling**:
+//!   a candidate that does not fit queues until retirements free
+//!   blocks, and the time the queue head spends blocked this way is
+//!   metered as `blocked_on_capacity`.  With contiguous caches the
+//!   check is bucket feasibility instead: some compiled (batch, seq)
+//!   bucket covers the grown batch.
 //!
 //! Candidates are considered strictly in arrival (FIFO) order; the
 //! first inadmissible candidate stops the round, so admission never
 //! reorders requests past each other (no starvation).  A candidate that
 //! could not be admitted stays in the worker's small carry buffer and
 //! seeds that worker's next session.  Greedy token streams are
-//! unaffected by admission timing — rows are independent and the
-//! re-prefill reproduces decode logits exactly (property-tested).
+//! unaffected by admission timing — rows are independent, and both the
+//! paged new-row prefill and the legacy batch-wide re-prefill
+//! reproduce decode logits exactly (property-tested).
 //! `cfg.continuous = false` disables between-step admission (static
 //! batching, the pre-redesign behavior) for A/B benches.
 //!
@@ -61,10 +68,11 @@ use super::engine_input;
 use super::request::PreparedRequest;
 use crate::config::ServingConfig;
 use crate::engine::{
-    build as build_engine, sampler_for_worker, DecodeSession, Engine,
-    FinishReason,
+    build_with_kv as build_engine, sampler_for_worker, DecodeSession,
+    Engine, FinishReason,
 };
 use crate::metrics::{Histogram, Throughput};
+use crate::runtime::kv::KvStats;
 use crate::runtime::{backend_for, Backend, RuntimeStats};
 use crate::{Error, Result};
 
@@ -81,6 +89,10 @@ pub enum PoolEvent {
         steps: usize,
         /// Enqueue -> first streamed token.
         ttft: Option<Duration>,
+        /// Paged-KV pool occupancy observed as the request retired
+        /// (None when the engine runs contiguous caches) — echoed on
+        /// wire replies so clients see cache pressure.
+        kv: Option<KvStats>,
         worker: usize,
     },
     /// Terminal failure: engine error, cancellation, or deadline.
@@ -123,6 +135,18 @@ pub struct WorkerReport {
     /// This worker's backend counters, with startup compilation that
     /// happened before the ready gate subtracted out.
     pub runtime_stats: RuntimeStats,
+    /// Context tokens run through prefill across session seeds AND
+    /// mid-session admissions — the admission-cost counter (the paged
+    /// path prefills only new rows; the legacy path re-prefills the
+    /// whole batch per admission).
+    pub admission_prefill_tokens: u64,
+    /// Wall time the queue head spent blocked on paged-KV capacity
+    /// (free blocks short of its prompt + decode reservation).
+    pub blocked_on_capacity: Duration,
+    /// Peak paged-KV blocks in use across this worker's sessions.
+    pub kv_peak_blocks_in_use: u64,
+    /// Paged-KV pool size per session (0 = contiguous caches).
+    pub kv_total_blocks: u64,
 }
 
 impl WorkerReport {
@@ -141,8 +165,29 @@ impl WorkerReport {
             ttft: Histogram::new(),
             throughput: Throughput::new(),
             runtime_stats: RuntimeStats::default(),
+            admission_prefill_tokens: 0,
+            blocked_on_capacity: Duration::ZERO,
+            kv_peak_blocks_in_use: 0,
+            kv_total_blocks: 0,
         }
     }
+}
+
+/// Paged-KV serving metrics merged across workers (all zero when the
+/// engine runs contiguous caches; `admission_prefill_tokens` and
+/// `admitted_mid_session` are meaningful on both cache disciplines).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvMetrics {
+    /// Σ context tokens prefilled at admissions (seeds included).
+    pub admission_prefill_tokens: u64,
+    /// Requests admitted into already-running sessions.
+    pub admitted_mid_session: u64,
+    /// Σ wall time queue heads spent blocked on KV capacity.
+    pub blocked_on_capacity: Duration,
+    /// Peak blocks in use in any one session pool.
+    pub kv_peak_blocks_in_use: u64,
+    /// Per-session pool size (max across workers; 0 = contiguous).
+    pub kv_total_blocks: u64,
 }
 
 /// Per-worker reports plus their merged view.
@@ -207,6 +252,20 @@ impl PoolReport {
             s.merge(&w.runtime_stats);
         }
         s
+    }
+
+    /// Paged-KV cache metrics merged across workers.
+    pub fn kv_metrics(&self) -> KvMetrics {
+        let mut m = KvMetrics::default();
+        for w in &self.workers {
+            m.admission_prefill_tokens += w.admission_prefill_tokens;
+            m.admitted_mid_session += w.admitted_mid_session;
+            m.blocked_on_capacity += w.blocked_on_capacity;
+            m.kv_peak_blocks_in_use =
+                m.kv_peak_blocks_in_use.max(w.kv_peak_blocks_in_use);
+            m.kv_total_blocks = m.kv_total_blocks.max(w.kv_total_blocks);
+        }
+        m
     }
 }
 
@@ -331,6 +390,9 @@ fn drain_finished(
     report: &mut WorkerReport,
     worker: usize,
 ) -> bool {
+    // occupancy AFTER the step that retired these rows — what the
+    // pool looked like when capacity came back
+    let kv = session.kv_stats();
     for fin in session.take_finished() {
         let id = fin.output.request_id;
         let Some(m) = meta.remove(&id) else { continue };
@@ -351,6 +413,7 @@ fn drain_finished(
                     generated: fin.output.generated,
                     steps: fin.output.steps,
                     ttft,
+                    kv,
                     worker,
                 })
                 .is_ok()
@@ -390,7 +453,7 @@ fn worker_main(
 
     // Per-worker backend + engine, constructed on this thread.
     let setup = backend_for(&cfg).and_then(|backend| {
-        build_engine(cfg.engine, backend.clone(), cfg.gen)
+        build_engine(cfg.engine, backend.clone(), cfg.gen, cfg.kv)
             .map(|engine| (backend, engine))
     });
     let (backend, engine) = match setup {
@@ -416,6 +479,9 @@ fn worker_main(
 
     let mut sampler = sampler_for_worker(cfg.sampling, worker as u64);
     let policy = cfg.batch.clone();
+    // Paged-KV geometry of a fresh session, for capacity-aware seeding
+    // (None = contiguous caches; bucket selection is the only bound).
+    let kv_geom = engine.kv_geometry();
     // Carry buffer: arrivals pulled off the queue but not yet admitted
     // (bounded by roughly one batch — we only pull when slots are free).
     let mut pending: VecDeque<PreparedRequest> = VecDeque::new();
@@ -441,6 +507,7 @@ fn worker_main(
         let mut seed_tokens = 0usize;
         let mut seed_prompt = 0usize; // longest prompt so far
         let mut seed_new = 0usize; // largest generation budget so far
+        let mut seed_blocks = 0usize; // paged-KV blocks reserved so far
         while let Some(r) = pending.front() {
             if !seed.is_empty() {
                 if seed.len() >= policy.max_batch {
@@ -460,6 +527,14 @@ fn worker_main(
                     > engine.max_seq()
                 {
                     break;
+                }
+                // paged-KV capacity: the fresh session's pool must hold
+                // every member's prompt + decode reservation; the rest
+                // of the queue waits for between-step admission
+                if let Some((total, bs)) = kv_geom {
+                    if seed_blocks + r.need_seq().div_ceil(bs) > total {
+                        break;
+                    }
                 }
             }
             let r = pending.pop_front().unwrap();
@@ -482,6 +557,9 @@ fn worker_main(
             seed_tokens += r.need_seq();
             seed_prompt = seed_prompt.max(r.prompt.len());
             seed_new = seed_new.max(r.max_new_tokens);
+            if let Some((_, bs)) = kv_geom {
+                seed_blocks += r.need_seq().div_ceil(bs);
+            }
             seed.push(r);
         }
         let inputs: Vec<_> = seed.iter().map(engine_input).collect();
@@ -508,6 +586,18 @@ fn worker_main(
         report.busy += t_session.elapsed(); // prefill cost
         report.sessions += 1;
         report.admitted += seed.len() as u64;
+        let mut session_prefill = session.prefill_tokens();
+        report.admission_prefill_tokens += session_prefill;
+        if let Some(st) = session.kv_stats() {
+            report.kv_total_blocks =
+                report.kv_total_blocks.max(st.total_blocks as u64);
+            report.kv_peak_blocks_in_use = report
+                .kv_peak_blocks_in_use
+                .max(st.used_blocks() as u64);
+        }
+        // while the queue head is blocked on KV capacity, this holds
+        // the instant the blocking was first observed
+        let mut blocked_since: Option<Instant> = None;
         let mut meta: HashMap<u64, RowMeta> = seed
             .into_iter()
             .map(|r| (r.id, RowMeta { req: r, first_token: None }))
@@ -607,6 +697,7 @@ fn worker_main(
             }
             let mut accepted: Vec<PreparedRequest> = Vec::new();
             let mut accepted_inputs = Vec::new();
+            let mut capacity_blocked = false;
             let mut live_tokens: usize =
                 meta.values().map(|m| m.req.need_seq()).sum();
             loop {
@@ -649,11 +740,65 @@ fn worker_main(
                 accepted_inputs.push(engine_input(cand));
                 if !session.can_admit(&accepted_inputs) {
                     accepted_inputs.pop();
+                    // tell paged-capacity blocking (transient: the
+                    // candidate waits for retirements to free blocks;
+                    // metered as blocked_on_capacity) apart from
+                    // PERMANENT infeasibility — over max_seq, or a
+                    // reservation bigger than the whole pool.  The
+                    // permanent case can never admit no matter how
+                    // long it waits, so fail it NOW instead of
+                    // head-blocking the queue for a session lifetime.
+                    if let Some(st) = session.kv_stats() {
+                        let need =
+                            cand.need_seq().div_ceil(st.block_size);
+                        if cand.need_seq() > engine.max_seq()
+                            || need > st.total_blocks
+                        {
+                            // message built before the pop ends the
+                            // candidate borrow
+                            let msg = format!(
+                                "request needs {} sequence slots \
+                                 ({need} kv blocks); the engine \
+                                 serves at most max_seq {} with a \
+                                 {}-block pool — it can never be \
+                                 admitted",
+                                cand.need_seq(),
+                                engine.max_seq(),
+                                st.total_blocks
+                            );
+                            let bad = pending.pop_front().unwrap();
+                            if !send_failed(
+                                &out,
+                                &mut report,
+                                worker,
+                                bad,
+                                msg,
+                                "bad_request",
+                            ) {
+                                break 'pool;
+                            }
+                            continue;
+                        }
+                        if st.free_blocks < need {
+                            capacity_blocked = true;
+                        }
+                    }
                     break;
                 }
                 let cand = pending.pop_front().unwrap();
                 live_tokens += cand.need_seq();
                 accepted.push(cand);
+            }
+            // meter how long the queue head stays FULLY stalled on
+            // capacity (window: first round that admitted nothing for
+            // lack of free blocks -> first round that admitted
+            // something or wasn't capacity-bound).  A round that
+            // admits candidates before hitting the shortfall still
+            // makes progress, so it closes the window.
+            if capacity_blocked && accepted.is_empty() {
+                blocked_since.get_or_insert_with(Instant::now);
+            } else if let Some(t0) = blocked_since.take() {
+                report.blocked_on_capacity += t0.elapsed();
             }
             if accepted.is_empty() {
                 continue;
@@ -661,9 +806,18 @@ fn worker_main(
             let t = Instant::now();
             match session.admit(&accepted_inputs) {
                 Ok(()) => {
-                    report.busy += t.elapsed(); // re-prefill cost
+                    report.busy += t.elapsed(); // admission prefill cost
                     report.admitted += accepted.len() as u64;
                     report.admitted_mid_session += accepted.len() as u64;
+                    let pft = session.prefill_tokens();
+                    report.admission_prefill_tokens +=
+                        pft.saturating_sub(session_prefill);
+                    session_prefill = pft;
+                    if let Some(st) = session.kv_stats() {
+                        report.kv_peak_blocks_in_use = report
+                            .kv_peak_blocks_in_use
+                            .max(st.used_blocks() as u64);
+                    }
                     for r in accepted {
                         meta.insert(
                             r.id,
@@ -693,6 +847,9 @@ fn worker_main(
                     break;
                 }
             }
+        }
+        if let Some(t0) = blocked_since.take() {
+            report.blocked_on_capacity += t0.elapsed();
         }
         report.session_latency.record(t_session.elapsed());
     }
@@ -850,7 +1007,12 @@ mod tests {
             .collect();
         assert_eq!(failed.len(), 1);
         assert_eq!(failed[0].0, 7);
-        assert!(failed[0].1.contains("bucket"), "{}", failed[0].1);
+        // paged engines reject on max_seq, contiguous ones on buckets
+        assert!(
+            failed[0].1.contains("max_seq") || failed[0].1.contains("bucket"),
+            "{}",
+            failed[0].1
+        );
         assert_eq!(failed[0].2, "bad_request");
         assert_eq!(finished_ids(&events), vec![8]);
         assert_eq!(report.workers[0].failed_requests, 1);
@@ -886,6 +1048,51 @@ mod tests {
             "late batch was not admitted into the running session"
         );
         assert_eq!(report.workers[0].sessions, 1, "one continuous session");
+    }
+
+    #[test]
+    fn cache_pressure_queues_admissions_and_serves_everyone() {
+        // Capacity-aware scheduling under a starved pool: 6 blocks of 4
+        // slots hold ~2 requests (prompt 3 + budget 8 = 11 slots = 3
+        // blocks each), so the remaining 8 queue on KV capacity and are
+        // admitted as retirements free blocks.  Every request must
+        // still reach exactly one terminal event.
+        let mut cfg = small_cfg(1);
+        cfg.gen.max_new_tokens = 8;
+        cfg.kv.block_size = 4;
+        cfg.kv.blocks = 6;
+        let (out_tx, out_rx) = mpsc::sync_channel(1024);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        let ids: Vec<u64> = (0..10).collect();
+        let mut b = batch_of(&ids);
+        for r in &mut b.requests {
+            r.max_new_tokens = 8;
+        }
+        input.send(b).unwrap();
+        drop(input);
+        let report = pool.join();
+        let events = events.join().unwrap();
+        assert_eq!(finished_ids(&events), ids, "requests lost under pressure");
+        assert!(
+            events.iter().all(|e| !matches!(e, PoolEvent::Failed { .. })),
+            "cache pressure must queue, not fail"
+        );
+        let kv = report.kv_metrics();
+        assert_eq!(kv.kv_total_blocks, 6);
+        assert!(kv.kv_peak_blocks_in_use > 0);
+        assert!(kv.kv_peak_blocks_in_use <= 6, "pool overcommitted");
+        assert!(
+            kv.admitted_mid_session >= 1,
+            "a starved pool must admit later arrivals mid-session"
+        );
+        assert!(kv.admission_prefill_tokens > 0);
+        // Finished events carry the occupancy snapshot for the wire
+        assert!(events.iter().any(|e| matches!(
+            e,
+            PoolEvent::Finished { kv: Some(st), .. } if st.total_blocks == 6
+        )));
     }
 
     #[test]

@@ -9,12 +9,15 @@ pub mod dispatch;
 pub mod request;
 
 pub use batcher::{Batch, DynamicBatcher};
-pub use dispatch::{InferencePool, PoolEvent, PoolReport, WorkerReport};
+pub use dispatch::{
+    InferencePool, KvMetrics, PoolEvent, PoolReport, WorkerReport,
+};
 pub use request::{PreparedRequest, ServingResponse, StageTimes};
 
 use std::time::{Duration, Instant};
 
 use crate::engine::{DecodeSession, Engine, EngineInput, EngineOutput, Sampler};
+use crate::runtime::kv::KvStats;
 use crate::{Error, Result};
 
 /// Engine-side view of a prepared request.
@@ -52,6 +55,17 @@ pub struct SteppedOutput {
     pub ttft: Option<Duration>,
 }
 
+/// Session-level cache counters observed by one
+/// [`run_batch_stepped_stats`] drive.
+pub struct BatchSessionStats {
+    /// Context tokens the session ran through prefill (its seed — the
+    /// sequential executor never admits mid-session).
+    pub prefill_tokens: u64,
+    /// Paged-KV occupancy right after the seed prefill, i.e. the
+    /// session's peak (None = contiguous caches).
+    pub kv: Option<KvStats>,
+}
+
 /// Like [`run_batch`], but drives the batch through the step API so
 /// per-request TTFT and steps-per-retire are observable — the driver
 /// the sequential executor uses.  Token-identical to [`run_batch`].
@@ -60,12 +74,26 @@ pub fn run_batch_stepped(
     sampler: &mut Sampler,
     batch: &Batch,
 ) -> Result<Vec<SteppedOutput>> {
+    run_batch_stepped_stats(engine, sampler, batch).map(|(outs, _)| outs)
+}
+
+/// [`run_batch_stepped`] plus the session's cache counters (for the
+/// `RunSummary` KV metrics of sequential runs).
+pub fn run_batch_stepped_stats(
+    engine: &dyn Engine,
+    sampler: &mut Sampler,
+    batch: &Batch,
+) -> Result<(Vec<SteppedOutput>, BatchSessionStats)> {
     if batch.requests.is_empty() {
-        return Ok(vec![]);
+        return Ok((
+            vec![],
+            BatchSessionStats { prefill_tokens: 0, kv: None },
+        ));
     }
     let inputs: Vec<EngineInput> =
         batch.requests.iter().map(engine_input).collect();
     let mut session = engine.start(&inputs)?;
+    let kv = session.kv_stats(); // right after the seed: peak occupancy
     // admission order == batch order, so `seq` indexes the batch
     let mut outputs: Vec<Option<EngineOutput>> =
         vec![None; batch.requests.len()];
@@ -93,7 +121,11 @@ pub fn run_batch_stepped(
             }
         }
     }
-    batch
+    let stats = BatchSessionStats {
+        prefill_tokens: session.prefill_tokens(),
+        kv,
+    };
+    let outs: Result<Vec<SteppedOutput>> = batch
         .requests
         .iter()
         .zip(outputs)
@@ -107,5 +139,6 @@ pub fn run_batch_stepped(
                 ttft: first.map(|t| t.duration_since(req.enqueued)),
             })
         })
-        .collect()
+        .collect();
+    Ok((outs?, stats))
 }

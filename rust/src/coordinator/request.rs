@@ -99,6 +99,11 @@ pub struct ServingResponse {
     /// mid-decode failures alike) — error events carry a `code`, not a
     /// precision claim.
     pub dtype: Option<&'static str>,
+    /// Paged-KV pool occupancy `(blocks_in_use, total_blocks)`
+    /// observed as the request retired — the per-reply cache-pressure
+    /// signal, echoed on the wire (`kv_blocks_in_use` /
+    /// `kv_blocks_total`).  None on contiguous caches and on failures.
+    pub kv_blocks: Option<(u64, u64)>,
 }
 
 impl ServingResponse {
@@ -121,6 +126,7 @@ impl ServingResponse {
             error: Some(message),
             code: Some(code),
             dtype: None,
+            kv_blocks: None,
         }
     }
 }

@@ -10,7 +10,7 @@
 //! re-selects the bucket), and retired rows are skipped by passing them
 //! a zero length — the reference prompt walk ignores zero-length rows.
 
-use super::session::{bucket_need, compact, drain_finished, Row};
+use super::session::{bucket_need, compact, drain_finished, next_out, Row};
 use super::{
     DecodeSession, Engine, EngineInput, FinishReason, FinishedRequest,
     Sampler, TokenEvent,
@@ -163,7 +163,8 @@ impl DecodeSession for BaselineSession {
                 DataArg::I32(lens, vec![b]),
             ],
         )?;
-        let logits = outs.into_iter().next().unwrap().into_f32()?; // [b, V]
+        let logits = next_out(&mut outs.into_iter(), &self.exe_name, "logits")?
+            .into_f32()?; // [b, V]
         let v = self.vocab_size;
         let mut events = Vec::new();
         for (lane, row) in self.rows.iter_mut().enumerate() {

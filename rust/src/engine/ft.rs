@@ -19,16 +19,34 @@
 //! **Session model.**  [`FtEngine::start`] runs the prefill and parks
 //! its last-position logits; the first [`DecodeSession::step`] samples
 //! them (each row's first token), subsequent steps run decode graphs.
-//! Admission re-prefills every live row's `prompt ++ generated` context
-//! at a bucket covering the grown batch (see `engine::session` docs) —
-//! prefill and decode share the same math, so greedy streams are
-//! unchanged by when admissions happen.
+//!
+//! Two cache disciplines, selected by `ServingConfig::kv`:
+//!
+//! - **paged** (default, on paged-capable backends): the session owns a
+//!   block pool; every row's KV slots live in fixed-size blocks behind
+//!   a per-row block table, so admission prefills ONLY the new rows and
+//!   retirement frees blocks immediately — see `engine::paged`;
+//! - **contiguous** (legacy, `--no-paged-kv`, and the automatic
+//!   fallback for backends without paged support): the caches live at a
+//!   compiled bucket shape, so admission re-prefills every live row's
+//!   `prompt ++ generated` context at a bucket covering the grown batch
+//!   (see `engine::session` docs).
+//!
+//! Prefill and decode share the same math on both disciplines —
+//! bitwise on the reference backend — so greedy streams are unchanged
+//! by when admissions happen and by which discipline runs them
+//! (property-tested).  The fused multi-step decode executable is a
+//! contiguous-path feature: the paged session decodes one step per
+//! call (batching every active row into that call) since block-table
+//! growth lives with the session, not inside a fused graph.
 
-use super::session::{bucket_need, compact, drain_finished, Row};
+use super::paged::PagedFtSession;
+use super::session::{bucket_need, compact, drain_finished, next_out, Row};
 use super::{
     DecodeSession, Engine, EngineInput, FinishReason, FinishedRequest,
     Sampler, TokenEvent,
 };
+use crate::config::KvConfig;
 use crate::runtime::{Backend, DType, DataArg, OpaqueTensor, SharedBackend};
 use crate::{special, Error, Result};
 
@@ -39,13 +57,31 @@ pub struct FtEngine {
     max_seq: usize,
     vocab_size: usize,
     multi_steps: usize,
+    /// Resolved paged-KV geometry; None = contiguous bucket caches.
+    paged: Option<(usize, usize)>,
 }
 
 impl FtEngine {
+    /// An FT engine with the default KV discipline (paged, auto-sized).
     pub fn new(
         backend: SharedBackend,
         variant: &'static str,
         use_multi_step: bool,
+    ) -> Result<Self> {
+        Self::with_kv(backend, variant, use_multi_step, KvConfig::default())
+    }
+
+    /// An FT engine with an explicit KV-cache config.  `kv.blocks == 0`
+    /// auto-sizes the pool so the largest compiled batch bucket fits at
+    /// the engine's max sequence.  Paged mode silently falls back to
+    /// the contiguous discipline on backends without paged support
+    /// (the PJRT client — its artifacts are compiled for contiguous
+    /// caches).
+    pub fn with_kv(
+        backend: SharedBackend,
+        variant: &'static str,
+        use_multi_step: bool,
+        kv: KvConfig,
     ) -> Result<Self> {
         let max_seq = backend
             .manifest()
@@ -59,6 +95,29 @@ impl FtEngine {
             })?;
         let vocab_size = backend.manifest().config_for(variant).vocab_size;
         let multi_steps = backend.manifest().multi_steps;
+        let paged = if kv.paged && backend.supports_paged_kv() {
+            if kv.block_size == 0 {
+                return Err(Error::Other(
+                    "kv block_size must be > 0".into(),
+                ));
+            }
+            let blocks = if kv.blocks > 0 {
+                kv.blocks
+            } else {
+                let max_batch = backend
+                    .manifest()
+                    .artifacts
+                    .iter()
+                    .filter(|a| a.kind == "ft_prefill" && a.variant == variant)
+                    .map(|a| a.batch)
+                    .max()
+                    .unwrap_or(1);
+                max_batch * max_seq.div_ceil(kv.block_size)
+            };
+            Some((blocks, kv.block_size))
+        } else {
+            None
+        };
         Ok(Self {
             backend,
             variant,
@@ -66,6 +125,7 @@ impl FtEngine {
             max_seq,
             vocab_size,
             multi_steps,
+            paged,
         })
     }
 }
@@ -90,7 +150,22 @@ impl Engine for FtEngine {
         self.vocab_size as u32
     }
 
+    fn kv_geometry(&self) -> Option<(usize, usize)> {
+        self.paged
+    }
+
     fn start(&self, batch: &[EngineInput]) -> Result<Box<dyn DecodeSession>> {
+        if let Some((blocks, block_size)) = self.paged {
+            return PagedFtSession::start(
+                self.backend.clone(),
+                self.variant,
+                self.vocab_size,
+                self.max_seq,
+                blocks,
+                block_size,
+                batch,
+            );
+        }
         let mut session = FtSession {
             backend: self.backend.clone(),
             variant: self.variant,
@@ -110,6 +185,7 @@ impl Engine for FtEngine {
             rows: Vec::new(),
             done_buf: Vec::new(),
             admit_seq: 0,
+            prefill_tokens: 0,
         };
         session.admit(batch)?;
         Ok(Box::new(session))
@@ -155,6 +231,10 @@ struct FtSession {
     rows: Vec<Row>,
     done_buf: Vec<FinishedRequest>,
     admit_seq: usize,
+    /// Cumulative context tokens run through prefill (the
+    /// admission-cost counter — every (re-)prefill pays for EVERY live
+    /// row's full context on this contiguous path).
+    prefill_tokens: u64,
 }
 
 impl FtSession {
@@ -209,6 +289,7 @@ impl FtSession {
             lens[lane] = (row.prompt.len() + row.generated.len()) as i32;
             self.positions[lane] = row.prompt.len() as i32;
         }
+        self.prefill_tokens += lens.iter().map(|&l| l as u64).sum::<u64>();
         let outs = self.backend.execute(
             &self.prefill_name,
             vec![
@@ -216,10 +297,13 @@ impl FtSession {
                 DataArg::I32(lens, vec![b]),
             ],
         )?;
+        let graph = self.prefill_name.clone();
         let mut outs = outs.into_iter();
-        let logits = outs.next().unwrap().into_f32()?; // [b, V]
-        self.k_cache = Some(outs.next().unwrap().into_opaque()?);
-        self.v_cache = Some(outs.next().unwrap().into_opaque()?);
+        let logits = next_out(&mut outs, &graph, "logits")?.into_f32()?; // [b, V]
+        self.k_cache =
+            Some(next_out(&mut outs, &graph, "k_cache")?.into_opaque()?);
+        self.v_cache =
+            Some(next_out(&mut outs, &graph, "v_cache")?.into_opaque()?);
         self.pending_logits = Some(logits);
         self.last_tok = vec![special::PAD as i32; b];
         Ok(())
@@ -315,9 +399,12 @@ impl FtSession {
                 ],
             )?;
             let mut it = outs.into_iter();
-            let toks = it.next().unwrap().into_i32()?; // [b, m_steps]
-            self.k_cache = Some(it.next().unwrap().into_opaque()?);
-            self.v_cache = Some(it.next().unwrap().into_opaque()?);
+            let toks =
+                next_out(&mut it, &m_name, "tokens")?.into_i32()?; // [b, m_steps]
+            self.k_cache =
+                Some(next_out(&mut it, &m_name, "k_cache")?.into_opaque()?);
+            self.v_cache =
+                Some(next_out(&mut it, &m_name, "v_cache")?.into_opaque()?);
             for (lane, row) in self.rows.iter_mut().enumerate() {
                 if !row.active() {
                     continue;
@@ -351,10 +438,13 @@ impl FtSession {
                     DataArg::Opaque(vc),
                 ],
             )?;
+            let graph = self.decode_name.clone();
             let mut it = outs.into_iter();
-            let logits = it.next().unwrap().into_f32()?;
-            self.k_cache = Some(it.next().unwrap().into_opaque()?);
-            self.v_cache = Some(it.next().unwrap().into_opaque()?);
+            let logits = next_out(&mut it, &graph, "logits")?.into_f32()?;
+            self.k_cache =
+                Some(next_out(&mut it, &graph, "k_cache")?.into_opaque()?);
+            self.v_cache =
+                Some(next_out(&mut it, &graph, "v_cache")?.into_opaque()?);
             for (lane, row) in self.rows.iter_mut().enumerate() {
                 if !row.active() {
                     continue;
@@ -431,5 +521,9 @@ impl DecodeSession for FtSession {
 
     fn take_finished(&mut self) -> Vec<FinishedRequest> {
         drain_finished(&mut self.rows, &mut self.done_buf)
+    }
+
+    fn prefill_tokens(&self) -> u64 {
+        self.prefill_tokens
     }
 }

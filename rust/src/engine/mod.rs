@@ -38,6 +38,7 @@
 
 mod baseline;
 mod ft;
+mod paged;
 mod sampling;
 mod session;
 
@@ -45,7 +46,8 @@ pub use baseline::BaselineEngine;
 pub use ft::FtEngine;
 pub use sampling::Sampler;
 
-use crate::config::{EngineKind, GenConfig, Sampling};
+use crate::config::{EngineKind, GenConfig, KvConfig, Sampling};
+use crate::runtime::kv::KvStats;
 use crate::runtime::{Backend, DType, SharedBackend};
 use crate::util::rng::derive_seed;
 use crate::{special, Error, Result};
@@ -118,16 +120,20 @@ pub trait DecodeSession: Send {
     /// Requests still decoding.
     fn active(&self) -> usize;
 
-    /// Could `extra` join the running batch — i.e. does a compiled
-    /// bucket cover the grown batch?  Policy caps (`max_batch`,
-    /// `max_batch_tokens`) are the caller's business.
+    /// Could `extra` join the running batch?  Paged FT sessions check
+    /// block-pool capacity (free blocks for each candidate's prompt +
+    /// generation reservation); contiguous sessions check that a
+    /// compiled bucket covers the grown batch.  Policy caps
+    /// (`max_batch`, `max_batch_tokens`) are the caller's business.
     fn can_admit(&self, extra: &[EngineInput]) -> bool;
 
-    /// Admit requests into the running batch.  The FT engines
-    /// re-materialize the KV cache with one prefill over every live
-    /// row's context (see `engine::session` docs); the baseline engine
-    /// just grows its token matrix.  Emits no tokens itself — admitted
-    /// rows produce their first [`TokenEvent`] on the next [`step`].
+    /// Admit requests into the running batch.  Paged FT sessions
+    /// allocate block tables for the new rows and prefill ONLY them;
+    /// contiguous FT sessions re-materialize the whole KV cache with
+    /// one prefill over every live row's context (see `engine::session`
+    /// docs); the baseline engine just grows its token matrix.  Emits
+    /// no tokens itself — admitted rows produce their first
+    /// [`TokenEvent`] on the next [`step`].
     ///
     /// [`step`]: DecodeSession::step
     fn admit(&mut self, extra: &[EngineInput]) -> Result<()>;
@@ -143,6 +149,24 @@ pub trait DecodeSession: Send {
 
     /// Drain every request that retired since the last call.
     fn take_finished(&mut self) -> Vec<FinishedRequest>;
+
+    /// Paged-KV pool occupancy, when this session manages a block pool
+    /// (the paged FT sessions).  None for contiguous-cache sessions —
+    /// the scheduler then falls back to bucket-feasibility-only
+    /// admission.
+    fn kv_stats(&self) -> Option<KvStats> {
+        None
+    }
+
+    /// Cumulative context tokens run through prefill by this session
+    /// (its `start` seed plus every later [`DecodeSession::admit`]) —
+    /// THE admission-cost counter: the legacy contiguous path
+    /// re-prefills every live row's full context per admission, the
+    /// paged path only the new rows' prompts.  0 for engines without a
+    /// prefill (the baseline recomputes everything every step instead).
+    fn prefill_tokens(&self) -> u64 {
+        0
+    }
 }
 
 /// A batched autoregressive generator.  `Send` so a worker pool can
@@ -162,6 +186,14 @@ pub trait Engine: Send {
     /// Prefill a batch (<= largest compiled batch bucket) and return
     /// the decode session holding its KV state.
     fn start(&self, batch: &[EngineInput]) -> Result<Box<dyn DecodeSession>>;
+
+    /// Paged-KV pool geometry `(total_blocks, block_size)` a fresh
+    /// session of this engine would own, when it runs the paged path.
+    /// The capacity-aware scheduler uses this to size session seeds
+    /// before any session exists.
+    fn kv_geometry(&self) -> Option<(usize, usize)> {
+        None
+    }
 
     /// One-shot batch generation: drive the decode session to
     /// completion.  Token-identical to stepping the session by hand
@@ -196,20 +228,39 @@ pub trait Engine: Send {
 }
 
 /// Construct the engine for a ladder row over a shared backend (the
-/// reference backend by default; PJRT behind `--features pjrt`).
+/// reference backend by default; PJRT behind `--features pjrt`) with
+/// the default paged-KV geometry.
 pub fn build(
     kind: EngineKind,
     backend: SharedBackend,
     gen: GenConfig,
 ) -> Result<Box<dyn Engine>> {
+    build_with_kv(kind, backend, gen, KvConfig::default())
+}
+
+/// [`build`] with an explicit KV-cache config (`ServingConfig::kv`):
+/// paged block-pool caches (the default) or the legacy contiguous
+/// bucket caches.  The baseline engine has no KV cache either way.
+pub fn build_with_kv(
+    kind: EngineKind,
+    backend: SharedBackend,
+    gen: GenConfig,
+    kv: KvConfig,
+) -> Result<Box<dyn Engine>> {
     Ok(match kind {
         EngineKind::Baseline => Box::new(BaselineEngine::new(backend)?),
-        EngineKind::FtFull => {
-            Box::new(FtEngine::new(backend, "full", gen.use_multi_step)?)
-        }
-        EngineKind::FtPruned => {
-            Box::new(FtEngine::new(backend, "pruned", gen.use_multi_step)?)
-        }
+        EngineKind::FtFull => Box::new(FtEngine::with_kv(
+            backend,
+            "full",
+            gen.use_multi_step,
+            kv,
+        )?),
+        EngineKind::FtPruned => Box::new(FtEngine::with_kv(
+            backend,
+            "pruned",
+            gen.use_multi_step,
+            kv,
+        )?),
     })
 }
 

@@ -1,0 +1,408 @@
+//! The **paged** FT decode session: block-pool KV caches with
+//! per-request block tables (the vLLM-style answer to the admission
+//! problem, cf. EnergonAI §serving).
+//!
+//! The contiguous FT session (`engine::ft`) keeps its caches at a
+//! compiled bucket shape, so growing the row set forces one prefill
+//! over EVERY live row's `prompt ++ generated` context — O(batch × seq)
+//! recompute per admission, worst exactly when load is highest.  Here
+//! the session owns a [`BlockPool`]: each row's KV slots live in
+//! fixed-size pool blocks addressed through the row's [`BlockTable`],
+//! and the backend's paged entry points
+//! ([`crate::runtime::Backend::paged_prefill`] /
+//! [`crate::runtime::Backend::paged_decode`]) scatter/gather through
+//! those tables.  Consequences:
+//!
+//! - **admission prefills only the new rows** — live caches are never
+//!   touched (asserted by `prefill_tokens` accounting in the tests);
+//! - **retirement frees the row's blocks immediately**, so capacity
+//!   returns to the pool at EOS, not at session end;
+//! - **admission is capacity-gated**: a row is admitted only when the
+//!   pool can cover its prompt PLUS its full generation budget (the
+//!   decode reservation), so a mid-decode allocation failure is
+//!   impossible by construction.
+//!
+//! Step semantics: a freshly admitted row's first step samples the
+//! last-position logits its prefill parked (no graph call — the
+//! prefill already paid for them); every other active row runs one
+//! paged decode iteration.  Prefill and decode share the same forward
+//! math, bitwise on the reference backend, so greedy streams are
+//! identical to the contiguous path and independent of admission
+//! timing (property-tested for fp32 and fp16).
+
+use super::session::{drain_finished, Row};
+use super::{
+    DecodeSession, EngineInput, FinishReason, FinishedRequest, Sampler,
+    TokenEvent,
+};
+use crate::runtime::kv::{BlockPool, BlockTable, KvStats};
+use crate::runtime::{
+    Backend, OpaqueTensor, PagedDecodeRow, PagedPrefillRow, SharedBackend,
+};
+use crate::{special, Error, Result};
+
+/// In-flight paged FT batch: lane-aligned rows, each owning a block
+/// table into the session's pool, plus the pool-level opaque K/V
+/// stores.
+pub(super) struct PagedFtSession {
+    backend: SharedBackend,
+    variant: &'static str,
+    vocab_size: usize,
+    max_seq: usize,
+    pool: BlockPool,
+    k: Option<OpaqueTensor>,
+    v: Option<OpaqueTensor>,
+    rows: Vec<Row>,
+    /// Block table per lane; None once the row retired (blocks freed)
+    /// or for rows that never decoded (zero-budget admissions).
+    tables: Vec<Option<BlockTable>>,
+    /// `[V]` last-position logits parked by the lane's admission
+    /// prefill, sampled (and cleared) by its first step.
+    pending: Vec<Option<Vec<f32>>>,
+    /// Prompt length per lane — `positions[l] + generated.len() - 1` is
+    /// the virtual slot of `last_tok[l]`.
+    positions: Vec<i32>,
+    /// Last consumed token per lane (decode input).
+    last_tok: Vec<i32>,
+    done_buf: Vec<FinishedRequest>,
+    admit_seq: usize,
+    prefill_tokens: u64,
+}
+
+impl PagedFtSession {
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn start(
+        backend: SharedBackend,
+        variant: &'static str,
+        vocab_size: usize,
+        max_seq: usize,
+        blocks: usize,
+        block_size: usize,
+        batch: &[EngineInput],
+    ) -> Result<Box<dyn DecodeSession>> {
+        let (k, v) = backend.paged_kv_alloc(variant, blocks, block_size)?;
+        let mut session = Self {
+            backend,
+            variant,
+            vocab_size,
+            max_seq,
+            pool: BlockPool::new(blocks, block_size),
+            k: Some(k),
+            v: Some(v),
+            rows: Vec::new(),
+            tables: Vec::new(),
+            pending: Vec::new(),
+            positions: Vec::new(),
+            last_tok: Vec::new(),
+            done_buf: Vec::new(),
+            admit_seq: 0,
+            prefill_tokens: 0,
+        };
+        session.admit(batch)?;
+        Ok(Box::new(session))
+    }
+
+    /// Pool blocks an input needs: its full `prompt + max_new`
+    /// reservation.  Zero-budget inputs retire at admission and never
+    /// touch the pool.
+    fn blocks_needed(&self, input: &EngineInput) -> usize {
+        if input.max_new_tokens == 0 {
+            0
+        } else {
+            self.pool
+                .blocks_for(input.prompt.len() + input.max_new_tokens)
+        }
+    }
+
+    /// Per-request sequence bound (the position table is finite even
+    /// without compiled buckets).
+    fn check_fit(&self, input: &EngineInput) -> Result<()> {
+        let need = input.prompt.len() + input.max_new_tokens;
+        if need > self.max_seq {
+            return Err(Error::Capacity(format!(
+                "request needs {need} sequence slots, over the engine's \
+                 max_seq {}",
+                self.max_seq
+            )));
+        }
+        Ok(())
+    }
+
+    /// Recover the cache handles for a graph call; a missing handle
+    /// means an earlier call failed after consuming them — the session
+    /// is poisoned, fail the REQUESTS (typed), not the worker thread.
+    fn take_caches(&mut self) -> Result<(OpaqueTensor, OpaqueTensor)> {
+        let poisoned = || {
+            Error::Session(
+                "paged decode session has no KV store (poisoned by an \
+                 earlier failure); resubmit the request"
+                    .into(),
+            )
+        };
+        let k = self.k.take().ok_or_else(poisoned)?;
+        let v = self.v.take().ok_or_else(poisoned)?;
+        Ok((k, v))
+    }
+
+    /// Free the block tables of rows that finished since the last scan
+    /// — retirement returns capacity to the pool immediately.
+    fn free_finished(&mut self) {
+        for (lane, row) in self.rows.iter().enumerate() {
+            if !row.active() {
+                if let Some(t) = self.tables[lane].take() {
+                    self.pool.free(t);
+                }
+            }
+        }
+    }
+
+    /// Drop finished rows, keeping every lane-parallel array aligned —
+    /// the paged sibling of `session::compact` (tables of finished rows
+    /// were already freed at finish time; this just tidies the lanes).
+    fn compact(&mut self) {
+        let rows = std::mem::take(&mut self.rows);
+        let tables = std::mem::take(&mut self.tables);
+        let pending = std::mem::take(&mut self.pending);
+        let positions = std::mem::take(&mut self.positions);
+        let last_tok = std::mem::take(&mut self.last_tok);
+        for ((((row, table), pend), pos), tok) in rows
+            .into_iter()
+            .zip(tables)
+            .zip(pending)
+            .zip(positions)
+            .zip(last_tok)
+        {
+            if row.finished.is_some() {
+                if let Some(t) = table {
+                    self.pool.free(t);
+                }
+                if !row.drained {
+                    self.done_buf.push(row.finished_request());
+                }
+            } else {
+                self.rows.push(row);
+                self.tables.push(table);
+                self.pending.push(pend);
+                self.positions.push(pos);
+                self.last_tok.push(tok);
+            }
+        }
+    }
+
+    /// Sample one row's next token from `logits` and record the event —
+    /// the shared tail of both step phases.
+    fn consume(
+        &mut self,
+        lane: usize,
+        logits: &[f32],
+        sampler: &mut Sampler,
+        events: &mut Vec<TokenEvent>,
+    ) {
+        let max_seq = self.max_seq;
+        let row = &mut self.rows[lane];
+        row.steps += 1;
+        let next = sampler.sample(logits);
+        let mut ev = TokenEvent {
+            request_id: row.id,
+            tokens: Vec::new(),
+            finished: None,
+        };
+        if row.push(next, max_seq) {
+            self.last_tok[lane] = next as i32;
+            ev.tokens.push(next);
+        }
+        ev.finished = row.finished;
+        events.push(ev);
+    }
+}
+
+impl DecodeSession for PagedFtSession {
+    fn active(&self) -> usize {
+        self.rows.iter().filter(|r| r.active()).count()
+    }
+
+    fn can_admit(&self, extra: &[EngineInput]) -> bool {
+        let need: usize =
+            extra.iter().map(|i| self.blocks_needed(i)).sum();
+        extra.iter().all(|i| self.check_fit(i).is_ok())
+            && need <= self.pool.free_blocks()
+    }
+
+    /// Admit new rows: allocate their block reservations and prefill
+    /// ONLY them — live rows' caches are untouched (the whole point of
+    /// the paged refactor).
+    fn admit(&mut self, extra: &[EngineInput]) -> Result<()> {
+        if extra.is_empty() {
+            return Ok(());
+        }
+        for input in extra {
+            self.check_fit(input)?;
+        }
+        let need: usize =
+            extra.iter().map(|i| self.blocks_needed(i)).sum();
+        if need > self.pool.free_blocks() {
+            return Err(Error::Capacity(format!(
+                "kv pool cannot admit {} request(s) needing {need} \
+                 blocks ({} of {} free)",
+                extra.len(),
+                self.pool.free_blocks(),
+                self.pool.total_blocks()
+            )));
+        }
+        self.compact();
+        let mut prefill_rows: Vec<PagedPrefillRow> = Vec::new();
+        let mut new_lanes: Vec<usize> = Vec::new();
+        for input in extra {
+            let row = Row::new(input, self.admit_seq);
+            self.admit_seq += 1;
+            let lane = self.rows.len();
+            self.positions.push(input.prompt.len() as i32);
+            self.last_tok.push(special::PAD as i32);
+            if row.active() {
+                let table = self.pool.alloc(
+                    input.prompt.len() + input.max_new_tokens,
+                )?;
+                prefill_rows.push(PagedPrefillRow {
+                    tokens: input
+                        .prompt
+                        .iter()
+                        .map(|&t| t as i32)
+                        .collect(),
+                    blocks: table.blocks().to_vec(),
+                });
+                new_lanes.push(lane);
+                self.tables.push(Some(table));
+            } else {
+                // zero-budget: retired at admission, no cache footprint
+                self.tables.push(None);
+            }
+            self.pending.push(None);
+            self.rows.push(row);
+        }
+        if prefill_rows.is_empty() {
+            return Ok(());
+        }
+        self.prefill_tokens += prefill_rows
+            .iter()
+            .map(|r| r.tokens.len() as u64)
+            .sum::<u64>();
+        let (k, v) = self.take_caches()?;
+        let (logits, k, v) =
+            self.backend.paged_prefill(self.variant, k, v, &prefill_rows)?;
+        self.k = Some(k);
+        self.v = Some(v);
+        let vsz = self.vocab_size;
+        if logits.len() != new_lanes.len() * vsz {
+            return Err(Error::Backend(format!(
+                "paged_prefill returned {} logit values for {} rows of \
+                 vocab {vsz}",
+                logits.len(),
+                new_lanes.len()
+            )));
+        }
+        for (i, &lane) in new_lanes.iter().enumerate() {
+            self.pending[lane] =
+                Some(logits[i * vsz..(i + 1) * vsz].to_vec());
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, sampler: &mut Sampler) -> Result<Vec<TokenEvent>> {
+        if self.active() == 0 {
+            return Ok(vec![]);
+        }
+        let vsz = self.vocab_size;
+        let mut events = Vec::new();
+        // Phase A: freshly admitted rows sample their parked prefill
+        // logits (no graph call — the admission prefill paid for them).
+        let mut decode_lanes: Vec<usize> = Vec::new();
+        for lane in 0..self.rows.len() {
+            if !self.rows[lane].active() {
+                continue;
+            }
+            match self.pending[lane].take() {
+                Some(logits) => {
+                    self.consume(lane, &logits, sampler, &mut events)
+                }
+                None => decode_lanes.push(lane),
+            }
+        }
+        // Phase B: one paged decode iteration over everyone else.
+        if !decode_lanes.is_empty() {
+            let mut decode_rows = Vec::with_capacity(decode_lanes.len());
+            for &lane in &decode_lanes {
+                let row = &self.rows[lane];
+                let table =
+                    self.tables[lane].as_ref().ok_or_else(|| {
+                        Error::Session(
+                            "paged decode row lost its block table \
+                             (poisoned session); resubmit the request"
+                                .into(),
+                        )
+                    })?;
+                decode_rows.push(PagedDecodeRow {
+                    token: self.last_tok[lane],
+                    position: self.positions[lane]
+                        + row.generated.len() as i32
+                        - 1,
+                    blocks: table.blocks().to_vec(),
+                });
+            }
+            let (k, v) = self.take_caches()?;
+            let (logits, k, v) =
+                self.backend.paged_decode(self.variant, k, v, &decode_rows)?;
+            self.k = Some(k);
+            self.v = Some(v);
+            if logits.len() != decode_lanes.len() * vsz {
+                return Err(Error::Backend(format!(
+                    "paged_decode returned {} logit values for {} rows \
+                     of vocab {vsz}",
+                    logits.len(),
+                    decode_lanes.len()
+                )));
+            }
+            for (i, &lane) in decode_lanes.iter().enumerate() {
+                // `logits` is a local buffer (not borrowed from self),
+                // so each row samples its slice in place — no per-step
+                // clone on the decode hot path
+                self.consume(
+                    lane,
+                    &logits[i * vsz..(i + 1) * vsz],
+                    sampler,
+                    &mut events,
+                );
+            }
+        }
+        // retirement frees blocks immediately
+        self.free_finished();
+        Ok(events)
+    }
+
+    fn retire(&mut self, request_id: u64, reason: FinishReason) -> bool {
+        let Some(lane) = self
+            .rows
+            .iter()
+            .position(|r| r.id == request_id && r.active())
+        else {
+            return false;
+        };
+        self.rows[lane].finished = Some(reason);
+        self.pending[lane] = None;
+        if let Some(t) = self.tables[lane].take() {
+            self.pool.free(t);
+        }
+        true
+    }
+
+    fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        drain_finished(&mut self.rows, &mut self.done_buf)
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        Some(self.pool.stats())
+    }
+
+    fn prefill_tokens(&self) -> u64 {
+        self.prefill_tokens
+    }
+}

@@ -12,17 +12,47 @@
 //!   [`FinishReason::Length`] *after* emitting it, so a request always
 //!   receives exactly `min(budget, tokens-until-EOS)` tokens.
 //!
-//! **Admission model (FT engines).**  The KV caches live at a fixed
-//! compiled bucket shape, so a session cannot splice a new row into an
-//! in-flight cache.  Instead, admission *re-prefills*: one prefill call
-//! over every live row's context (`prompt ++ generated`) re-materializes
-//! the caches at a bucket covering the grown batch.  Prefill and decode
-//! share the same forward math (bitwise on the reference backend), so
-//! the greedy continuation after a re-prefill is token-identical to the
-//! uninterrupted decode — asserted by the admission property test.
+//! **Admission model (FT engines).**  Two cache disciplines share this
+//! row machinery:
+//!
+//! - **paged** (default; `engine::paged`): KV slots live in pool
+//!   blocks behind per-row block tables, so admission allocates blocks
+//!   for the new rows and prefills ONLY them — live rows' caches are
+//!   untouched, and retirement frees a row's blocks immediately;
+//! - **contiguous** (legacy; `--no-paged-kv` or a non-paged backend):
+//!   the caches live at a fixed compiled bucket shape, so a session
+//!   cannot splice a new row into an in-flight cache — admission
+//!   *re-prefills* every live row's context (`prompt ++ generated`) at
+//!   a bucket covering the grown batch, O(batch × seq) recompute per
+//!   admission.
+//!
+//! Prefill and decode share the same forward math (bitwise on the
+//! reference backend), so the greedy continuation after an admission is
+//! token-identical to the uninterrupted decode on BOTH disciplines —
+//! asserted by the admission property test, which runs paged and
+//! contiguous.
 
 use super::{EngineInput, EngineOutput, FinishReason, FinishedRequest};
+use crate::runtime::ExecOut;
 use crate::special;
+use crate::{Error, Result};
+
+/// Pull the next output of a graph call, or fail with a typed
+/// [`Error::Backend`] — a backend returning too few outputs must fail
+/// the session's REQUESTS (the pool keeps the worker thread alive and
+/// seeds a fresh session), never panic the thread.  Mirrors the PR-4
+/// `Error::Session` treatment of consumed KV handles.
+pub(crate) fn next_out(
+    it: &mut std::vec::IntoIter<ExecOut>,
+    graph: &str,
+    what: &str,
+) -> Result<ExecOut> {
+    it.next().ok_or_else(|| {
+        Error::Backend(format!(
+            "{graph}: backend returned too few outputs (missing '{what}')"
+        ))
+    })
+}
 
 /// One request inside a decode session.
 #[derive(Debug, Clone)]

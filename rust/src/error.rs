@@ -43,6 +43,11 @@ pub enum Error {
     /// session's requests with wire code `engine_error`; the worker
     /// thread survives and seeds a fresh session.
     Session(String),
+    /// A backend broke its execution contract (wrong output count or
+    /// type for a graph call).  Like [`Error::Session`] this fails the
+    /// REQUESTS with wire code `engine_error` instead of panicking the
+    /// worker thread that observed it.
+    Backend(String),
     /// Anything else worth a message.
     Other(String),
 }
@@ -87,6 +92,7 @@ impl fmt::Display for Error {
             Error::Overloaded(w) => write!(f, "overloaded: {w}"),
             Error::Shutdown(w) => write!(f, "shutting down: {w}"),
             Error::Session(m) => write!(f, "decode session error: {m}"),
+            Error::Backend(m) => write!(f, "backend contract error: {m}"),
             Error::Other(m) => write!(f, "{m}"),
         }
     }

@@ -7,7 +7,10 @@
 //! - **L3 (this crate)** — the serving coordinator: request routing,
 //!   dynamic length-bucketed batching, the **step-based generation
 //!   API** ([`engine::DecodeSession`]: incremental decode with
-//!   mid-flight admission), the paper's four-stage parallel pipeline
+//!   mid-flight admission), **block-paged KV caches**
+//!   ([`runtime::kv`]: per-request block tables over a session block
+//!   pool, so admission prefills only the new row and scheduling is
+//!   capacity-aware), the paper's four-stage parallel pipeline
 //!   (§3.3 Fig 4) widened to a **continuous-batching** multi-worker
 //!   inference pool (`--workers N`), a fast wordpiece tokenizer,
 //!   synthetic-workload substrates, metrics (TTFT, steps-per-retire),

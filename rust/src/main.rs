@@ -31,6 +31,12 @@ fn usage() -> ! {
                  intra-batch parallelism; default 0 = auto)\n\
                  --no-continuous (static batch-at-a-time scheduling\n\
                  instead of continuous batching)\n\
+                 --kv-block-size N (paged KV: sequence slots per block;\n\
+                 default 16)  --kv-blocks N (paged KV: pool blocks per\n\
+                 decode session; default 0 = auto-size to the largest\n\
+                 compiled batch bucket)  --no-paged-kv (legacy\n\
+                 contiguous bucket caches: admission re-prefills the\n\
+                 whole batch)\n\
          run:    --engine baseline|ft_full|ft_pruned  --n N  --max-new T\n\
                  --no-pipeline  --no-bucketing  --no-multi-step  --seed S\n\
          ladder: --n N\n\
@@ -126,6 +132,21 @@ fn build_config(args: &Args) -> ServingConfig {
             eprintln!("--row-threads expects an integer (0 = auto)");
             usage()
         });
+    }
+    if let Some(n) = args.get("kv-block-size") {
+        cfg.kv.block_size = n.parse().unwrap_or_else(|_| {
+            eprintln!("--kv-block-size expects a positive integer");
+            usage()
+        });
+    }
+    if let Some(n) = args.get("kv-blocks") {
+        cfg.kv.blocks = n.parse().unwrap_or_else(|_| {
+            eprintln!("--kv-blocks expects an integer (0 = auto)");
+            usage()
+        });
+    }
+    if args.has("no-paged-kv") {
+        cfg.kv.paged = false;
     }
     if args.has("no-pipeline") {
         cfg.pipelined = false;
@@ -235,6 +256,21 @@ fn cmd_run(args: &Args) {
                 s.workers,
                 s.session_latency.summary()
             );
+            if s.kv.kv_total_blocks > 0 {
+                println!(
+                    "kv cache      paged: peak {}/{} blocks, {} admission \
+                     prefill tokens, {:.3}s blocked on capacity",
+                    s.kv.kv_peak_blocks_in_use,
+                    s.kv.kv_total_blocks,
+                    s.kv.admission_prefill_tokens,
+                    s.kv.blocked_on_capacity.as_secs_f64()
+                );
+            } else {
+                println!(
+                    "kv cache      contiguous ({} admission prefill tokens)",
+                    s.kv.admission_prefill_tokens
+                );
+            }
         }
         Err(e) => {
             eprintln!("run failed: {e}");

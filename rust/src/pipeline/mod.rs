@@ -40,11 +40,11 @@ use std::time::{Duration, Instant};
 use crate::config::ServingConfig;
 use crate::coordinator::request::summary_accuracy;
 use crate::coordinator::{
-    run_batch_stepped, DynamicBatcher, InferencePool, PoolEvent,
-    PreparedRequest, ServingResponse,
+    run_batch_stepped_stats, DynamicBatcher, InferencePool, KvMetrics,
+    PoolEvent, PreparedRequest, ServingResponse,
 };
 use crate::data::Request;
-use crate::engine::{build as build_engine, sampler_for};
+use crate::engine::{build_with_kv as build_engine, sampler_for};
 use crate::metrics::{Histogram, StageTimer};
 use crate::runtime::{backend_for, manifest_for, Backend, DType, RuntimeStats};
 use crate::tokenizer::{decode as detokenize, Encode, FastTokenizer, Vocab};
@@ -82,8 +82,16 @@ pub struct RunSummary {
     pub ttft: Histogram,
     /// Mean decode-session iterations per retired request.
     pub steps_per_retire: f64,
+    /// Paged-KV cache metrics: admission prefill tokens, mid-session
+    /// admissions, blocked-on-capacity time, block occupancy.  The
+    /// occupancy fields are zero when the engine runs contiguous
+    /// caches; `admission_prefill_tokens` is meaningful on both cache
+    /// disciplines (it is THE paged-vs-legacy admission-cost
+    /// comparison `bench_snapshot` schema 4 records).
+    pub kv: KvMetrics,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn summarize(
     responses: Vec<ServingResponse>,
     stages: StageTimer,
@@ -97,6 +105,7 @@ fn summarize(
     workers: usize,
     dtype: DType,
     session_latency: Histogram,
+    kv: KvMetrics,
 ) -> RunSummary {
     let mut latency = Histogram::new();
     let mut ttft = Histogram::new();
@@ -143,6 +152,7 @@ fn summarize(
         workers,
         dtype,
         session_latency,
+        kv,
     }
 }
 
@@ -232,6 +242,7 @@ pub fn postprocess(
         error: None,
         code: None,
         dtype: None,
+        kv_blocks: None,
     }
 }
 
@@ -260,7 +271,8 @@ pub fn run_sequential(
     let full_vocab = backend.manifest().config_for("baseline").vocab_size;
     let seq_lens = backend.manifest().seq_lens.clone();
     let tok = make_tokenizer(full_vocab);
-    let engine = build_engine(cfg.engine, backend.clone(), cfg.gen)?;
+    let engine =
+        build_engine(cfg.engine, backend.clone(), cfg.gen, cfg.kv)?;
     // report the precision the backend ACTUALLY executes with (on the
     // pjrt backend the artifacts' compiled dtype rules, not the config)
     let run_dtype = engine.dtype();
@@ -272,6 +284,7 @@ pub fn run_sequential(
 
     let mut stages = StageTimer::default();
     let mut session_latency = Histogram::new();
+    let mut kv = KvMetrics::default();
     let mut responses = Vec::with_capacity(requests.len());
     let wall_start = Instant::now();
     // only compilation INSIDE the measured window counts against steady
@@ -301,11 +314,22 @@ pub fn run_sequential(
             // drive the batch through the step API so TTFT and
             // steps-per-retire are observable here too
             let t = Instant::now();
-            let outs =
-                run_batch_stepped(engine.as_ref(), &mut sampler, &batch)?;
+            let (outs, batch_stats) = run_batch_stepped_stats(
+                engine.as_ref(),
+                &mut sampler,
+                &batch,
+            )?;
             let dt = t.elapsed();
             stages.inference += dt;
             session_latency.record(dt);
+            kv.admission_prefill_tokens += batch_stats.prefill_tokens;
+            if let Some(st) = batch_stats.kv {
+                kv.kv_total_blocks =
+                    kv.kv_total_blocks.max(st.total_blocks as u64);
+                kv.kv_peak_blocks_in_use = kv
+                    .kv_peak_blocks_in_use
+                    .max(st.used_blocks() as u64);
+            }
 
             let t = Instant::now();
             for stepped in outs {
@@ -335,6 +359,7 @@ pub fn run_sequential(
         1,
         run_dtype,
         session_latency,
+        kv,
     ))
 }
 
@@ -451,6 +476,7 @@ pub fn run_pipelined(
                         generated,
                         steps,
                         ttft,
+                        kv,
                         ..
                     } => {
                         let t = Instant::now();
@@ -459,6 +485,9 @@ pub fn run_pipelined(
                         resp.ttft = ttft;
                         resp.steps = steps;
                         resp.dtype = Some(dtype_label);
+                        resp.kv_blocks = kv.map(|st| {
+                            (st.used_blocks() as u64, st.total_blocks as u64)
+                        });
                         responses.push(resp);
                         busy += t.elapsed();
                     }
@@ -523,6 +552,7 @@ pub fn run_pipelined(
         n_workers,
         cfg.dtype,
         report.session_latency(),
+        report.kv_metrics(),
     ))
 }
 

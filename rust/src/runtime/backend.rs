@@ -84,6 +84,28 @@ pub enum DataArg {
     Opaque(OpaqueTensor),
 }
 
+/// One row of a **paged prefill** call: the context tokens to run and
+/// the block table receiving their K/V.  `blocks` must cover at least
+/// `tokens.len()` virtual slots (`blocks.len() * block_size`); extra
+/// blocks (the decode reservation) are untouched.
+pub struct PagedPrefillRow {
+    /// Context tokens (`prompt`, or `prompt ++ generated` for a row
+    /// re-entering a cache), unpadded.
+    pub tokens: Vec<i32>,
+    /// Pool block ids in virtual-slot order (see
+    /// [`crate::runtime::kv::BlockTable`]).
+    pub blocks: Vec<u32>,
+}
+
+/// One row of a **paged decode** step: consume `token` at virtual slot
+/// `position`, attend over slots `[0, position]` through the block
+/// table.  `blocks` must cover slot `position`.
+pub struct PagedDecodeRow {
+    pub token: i32,
+    pub position: i32,
+    pub blocks: Vec<u32>,
+}
+
 /// One output of a graph call, typed per the manifest entry.
 pub enum ExecOut {
     I32(Vec<i32>, Vec<usize>),
@@ -182,6 +204,74 @@ pub trait Backend: Send + Sync {
 
     /// Host-side weights for a variant key (reporting / analysis).
     fn host_weights(&self, key: &str) -> Option<&HostWeights>;
+
+    // ---- paged KV cache (block tables) --------------------------------
+    //
+    // The block-table-aware execution path: K/V storage is one
+    // pool-level paged tensor per cache; every row addresses its slots
+    // through a block table, so rows can enter and leave a live cache
+    // without the batch-wide re-prefill the bucket-shaped contiguous
+    // caches force.  Pool *bookkeeping* (which blocks belong to which
+    // request) stays in `runtime::kv::BlockPool` on the session side;
+    // the backend only stores and gathers.  Backends that cannot
+    // execute this path (the PJRT client: its artifacts are compiled
+    // for contiguous caches) keep the defaults and engines fall back
+    // to the contiguous path.
+
+    /// True when the paged entry points below are implemented.
+    fn supports_paged_kv(&self) -> bool {
+        false
+    }
+
+    /// Allocate the pool-level paged K and V stores for `variant`:
+    /// `blocks` blocks of `block_size` slots each, zeroed.  Returned as
+    /// opaque handles that round-trip through
+    /// [`Backend::paged_prefill`] / [`Backend::paged_decode`] exactly
+    /// like the contiguous caches do through [`Backend::execute`].
+    fn paged_kv_alloc(
+        &self,
+        _variant: &str,
+        _blocks: usize,
+        _block_size: usize,
+    ) -> Result<(OpaqueTensor, OpaqueTensor)> {
+        Err(Error::Other(format!(
+            "backend '{}' has no paged KV support",
+            self.name()
+        )))
+    }
+
+    /// Prefill ONLY the given rows into their block tables (other
+    /// blocks of the pool are untouched — that is the whole point:
+    /// admitting a request costs its own prompt, not the batch).
+    /// Returns the rows' last-position logits, flattened `[rows, V]`,
+    /// plus the updated cache handles.
+    fn paged_prefill(
+        &self,
+        _variant: &str,
+        _k: OpaqueTensor,
+        _v: OpaqueTensor,
+        _rows: &[PagedPrefillRow],
+    ) -> Result<(Vec<f32>, OpaqueTensor, OpaqueTensor)> {
+        Err(Error::Other(format!(
+            "backend '{}' has no paged KV support",
+            self.name()
+        )))
+    }
+
+    /// One decode iteration for the given rows, each attending over its
+    /// own block table.  Returns logits `[rows, V]` + updated handles.
+    fn paged_decode(
+        &self,
+        _variant: &str,
+        _k: OpaqueTensor,
+        _v: OpaqueTensor,
+        _rows: &[PagedDecodeRow],
+    ) -> Result<(Vec<f32>, OpaqueTensor, OpaqueTensor)> {
+        Err(Error::Other(format!(
+            "backend '{}' has no paged KV support",
+            self.name()
+        )))
+    }
 }
 
 /// How many threads the reference backend may use to split the rows of
@@ -303,6 +393,7 @@ mod tests {
         let cfg = ServingConfig::default();
         let b = backend_for(&cfg).unwrap();
         assert_eq!(b.name(), "reference");
+        assert!(b.supports_paged_kv(), "reference backend is paged-capable");
     }
 
     #[test]

@@ -1,0 +1,349 @@
+//! Paged KV-cache block allocation — the vLLM/EnergonAI-style answer
+//! to the admission problem: instead of one contiguous cache at a
+//! compiled bucket shape (which forces a batch-wide re-prefill whenever
+//! the row set changes), the KV store is a **pool of fixed-size
+//! blocks** and every request owns a **block table** mapping its
+//! virtual sequence slots onto pool blocks.
+//!
+//! This module is pure bookkeeping: block ids in, block ids out.  The
+//! actual K/V storage lives behind the backend (see
+//! [`crate::runtime::Backend::paged_kv_alloc`] and the paged
+//! prefill/decode entry points); decode sessions hold one [`BlockPool`]
+//! per paged cache and thread the resulting tables into every graph
+//! call.
+//!
+//! Invariants (fuzz-tested below):
+//! - a block is owned by at most one live [`BlockTable`] at a time;
+//! - [`BlockPool::free`] takes the table **by value**, so double-free
+//!   is unrepresentable in safe code (and still asserted internally);
+//! - `used_blocks == Σ blocks over live tables` at every point.
+//!
+//! Admission policy built on top (see `engine::paged` and
+//! `coordinator::dispatch`): a request is admitted only when the pool
+//! can cover its **prompt plus its full generation budget** (the
+//! "decode reservation"), so a mid-decode allocation failure is
+//! impossible by construction and retirement can free the whole table
+//! at once.
+
+use crate::{Error, Result};
+
+/// A point-in-time view of a paged KV pool, surfaced through
+/// `DecodeSession::kv_stats` for capacity-aware scheduling and the
+/// serving metrics (block occupancy on wire replies, peak occupancy in
+/// `RunSummary`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvStats {
+    /// Blocks the pool was created with.
+    pub total_blocks: usize,
+    /// Blocks currently on the free list.
+    pub free_blocks: usize,
+    /// Sequence slots per block.
+    pub block_size: usize,
+}
+
+impl KvStats {
+    /// Blocks currently owned by live tables.
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free_blocks
+    }
+}
+
+/// One request's view into the block pool: pool block ids in sequence
+/// order.  Virtual slot `t` of the request's context lives in block
+/// `blocks[t / block_size]` at offset `t % block_size`.
+#[derive(Debug)]
+pub struct BlockTable {
+    blocks: Vec<u32>,
+    /// Sequence slots this table is good for (`blocks.len() *
+    /// block_size`), kept so capacity checks need no pool reference.
+    capacity: usize,
+}
+
+impl BlockTable {
+    /// The pool block ids, in virtual-slot order.
+    pub fn blocks(&self) -> &[u32] {
+        &self.blocks
+    }
+
+    /// Sequence slots the table covers.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Fixed-size block allocator for one paged KV cache (see module docs).
+#[derive(Debug)]
+pub struct BlockPool {
+    block_size: usize,
+    total: usize,
+    /// LIFO free list — recently-freed blocks are reused first, which
+    /// keeps the touched working set small.
+    free: Vec<u32>,
+    /// Allocation bitmap, the double-free / foreign-free guard.
+    live: Vec<bool>,
+}
+
+impl BlockPool {
+    /// A pool of `total_blocks` blocks of `block_size` sequence slots.
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "kv block size must be > 0");
+        Self {
+            block_size,
+            total: total_blocks,
+            // popping from the tail hands out low ids first
+            free: (0..total_blocks as u32).rev().collect(),
+            live: vec![false; total_blocks],
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    /// Blocks needed to cover `tokens` sequence slots.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn stats(&self) -> KvStats {
+        KvStats {
+            total_blocks: self.total,
+            free_blocks: self.free.len(),
+            block_size: self.block_size,
+        }
+    }
+
+    /// Allocate a table covering `tokens` slots, or a typed capacity
+    /// error when the pool cannot (callers gate on
+    /// [`BlockPool::free_blocks`] first — see `can_admit`).
+    pub fn alloc(&mut self, tokens: usize) -> Result<BlockTable> {
+        let need = self.blocks_for(tokens);
+        if need > self.free.len() {
+            return Err(Error::Capacity(format!(
+                "kv pool exhausted: need {need} blocks ({tokens} slots \
+                 at block size {}), {} of {} free",
+                self.block_size,
+                self.free.len(),
+                self.total
+            )));
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().expect("checked above");
+            debug_assert!(!self.live[b as usize], "free list corrupt");
+            self.live[b as usize] = true;
+            blocks.push(b);
+        }
+        Ok(BlockTable { blocks, capacity: need * self.block_size })
+    }
+
+    /// Grow `table` to cover `tokens` slots (no-op when it already
+    /// does).  Same capacity error as [`BlockPool::alloc`] on
+    /// exhaustion; the table is untouched then.
+    pub fn extend(&mut self, table: &mut BlockTable, tokens: usize) -> Result<()> {
+        let need = self.blocks_for(tokens);
+        if need <= table.blocks.len() {
+            return Ok(());
+        }
+        let extra = need - table.blocks.len();
+        if extra > self.free.len() {
+            return Err(Error::Capacity(format!(
+                "kv pool exhausted: extension needs {extra} more blocks, \
+                 {} of {} free",
+                self.free.len(),
+                self.total
+            )));
+        }
+        for _ in 0..extra {
+            let b = self.free.pop().expect("checked above");
+            debug_assert!(!self.live[b as usize], "free list corrupt");
+            self.live[b as usize] = true;
+            table.blocks.push(b);
+        }
+        table.capacity = table.blocks.len() * self.block_size;
+        Ok(())
+    }
+
+    /// Return every block of a retired table to the pool.  Takes the
+    /// table by value: a freed table cannot be freed (or used) again.
+    pub fn free(&mut self, table: BlockTable) {
+        for b in table.blocks {
+            assert!(
+                self.live[b as usize],
+                "block {b} freed twice or foreign to this pool"
+            );
+            self.live[b as usize] = false;
+            self.free.push(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn alloc_free_roundtrip_and_occupancy() {
+        let mut p = BlockPool::new(8, 16);
+        assert_eq!(p.free_blocks(), 8);
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(16), 1);
+        assert_eq!(p.blocks_for(17), 2);
+        assert_eq!(p.blocks_for(0), 0);
+        let t = p.alloc(40).unwrap(); // 3 blocks
+        assert_eq!(t.blocks().len(), 3);
+        assert_eq!(t.capacity(), 48);
+        assert_eq!(p.used_blocks(), 3);
+        assert_eq!(p.stats().used_blocks(), 3);
+        p.free(t);
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn alloc_past_capacity_is_a_typed_error_and_leaks_nothing() {
+        let mut p = BlockPool::new(4, 16);
+        let t = p.alloc(33).unwrap(); // 3 of 4 blocks
+        let err = p.alloc(32).unwrap_err(); // needs 2, only 1 free
+        assert_eq!(err.code(), "bad_request", "capacity maps to bad_request");
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        assert_eq!(p.free_blocks(), 1, "failed alloc must not leak");
+        p.free(t);
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn extend_grows_in_place_and_fails_clean() {
+        let mut p = BlockPool::new(4, 8);
+        let mut t = p.alloc(8).unwrap();
+        p.extend(&mut t, 8).unwrap(); // covered: no-op
+        assert_eq!(t.blocks().len(), 1);
+        p.extend(&mut t, 20).unwrap(); // 3 blocks
+        assert_eq!(t.blocks().len(), 3);
+        assert_eq!(t.capacity(), 24);
+        assert!(p.extend(&mut t, 100).is_err());
+        assert_eq!(t.blocks().len(), 3, "failed extend must not mutate");
+        assert_eq!(p.free_blocks(), 1);
+        p.free(t);
+    }
+
+    #[test]
+    fn blocks_are_never_shared_between_live_tables() {
+        let mut p = BlockPool::new(16, 4);
+        let a = p.alloc(20).unwrap();
+        let b = p.alloc(30).unwrap();
+        for x in a.blocks() {
+            assert!(!b.blocks().contains(x), "block {x} double-owned");
+        }
+        p.free(a);
+        p.free(b);
+    }
+
+    #[test]
+    fn fuzz_random_alloc_extend_free_under_pressure() {
+        // Satellite: seeded fuzz of the allocator.  Random interleaved
+        // alloc/extend/free ops against a small pool (so exhaustion is
+        // routine); after every op: no double-ownership and occupancy
+        // == Σ blocks over live tables; after draining: zero leaked
+        // blocks.
+        let mut rng = Rng::seed_from_u64(0xB10C);
+        for case in 0..40 {
+            let total = 1 + rng.gen_range(0, 24);
+            let bs = 1 + rng.gen_range(0, 32);
+            let mut pool = BlockPool::new(total, bs);
+            let mut live: Vec<BlockTable> = Vec::new();
+            for op in 0..400 {
+                match rng.gen_range(0, 3) {
+                    0 => {
+                        let tokens = rng.gen_range(0, 4 * bs + 2);
+                        let fits =
+                            pool.blocks_for(tokens) <= pool.free_blocks();
+                        match pool.alloc(tokens) {
+                            Ok(t) => {
+                                assert!(
+                                    fits,
+                                    "case {case} op {op}: alloc succeeded \
+                                     past capacity"
+                                );
+                                assert!(t.capacity() >= tokens);
+                                live.push(t);
+                            }
+                            Err(e) => {
+                                assert!(!fits, "case {case} op {op}: {e}");
+                            }
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.gen_range(0, live.len());
+                        let tokens = rng.gen_range(0, 6 * bs + 2);
+                        let before = live[i].blocks().len();
+                        let extra = pool
+                            .blocks_for(tokens)
+                            .saturating_sub(before);
+                        let fits = extra <= pool.free_blocks();
+                        match pool.extend(&mut live[i], tokens) {
+                            Ok(()) => {
+                                assert!(fits);
+                                assert!(live[i].capacity() >= tokens);
+                            }
+                            Err(_) => {
+                                assert!(!fits);
+                                assert_eq!(
+                                    live[i].blocks().len(),
+                                    before,
+                                    "failed extend mutated the table"
+                                );
+                            }
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let i = rng.gen_range(0, live.len());
+                        pool.free(live.swap_remove(i));
+                    }
+                    _ => {}
+                }
+                // occupancy == sum of live tables, no double-ownership
+                let live_sum: usize =
+                    live.iter().map(|t| t.blocks().len()).sum();
+                assert_eq!(
+                    pool.used_blocks(),
+                    live_sum,
+                    "case {case} op {op}: occupancy drifted"
+                );
+                let mut seen = vec![false; total];
+                for t in &live {
+                    for &b in t.blocks() {
+                        assert!(
+                            !seen[b as usize],
+                            "case {case} op {op}: block {b} double-owned"
+                        );
+                        seen[b as usize] = true;
+                    }
+                }
+            }
+            // all sessions retire: every block must come home
+            for t in live.drain(..) {
+                pool.free(t);
+            }
+            assert_eq!(
+                pool.free_blocks(),
+                total,
+                "case {case}: blocks leaked after full retirement"
+            );
+            assert_eq!(pool.used_blocks(), 0);
+        }
+    }
+}

@@ -26,14 +26,16 @@ pub mod backend;
 #[cfg(feature = "pjrt")]
 mod client;
 pub mod dtype;
+pub mod kv;
 pub mod manifest;
 pub mod reference;
 mod weights;
 
 pub use backend::{
     backend_for, manifest_for, Backend, DataArg, ExecOut, OpaqueTensor,
-    RuntimeStats, SharedBackend,
+    PagedDecodeRow, PagedPrefillRow, RuntimeStats, SharedBackend,
 };
+pub use kv::{BlockPool, BlockTable, KvStats};
 pub use dtype::{quantize_f16, DType, F16};
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;

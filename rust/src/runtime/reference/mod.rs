@@ -51,7 +51,8 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::runtime::backend::{
-    Backend, DataArg, ExecOut, OpaqueTensor, RuntimeStats,
+    Backend, DataArg, ExecOut, OpaqueTensor, PagedDecodeRow,
+    PagedPrefillRow, RuntimeStats,
 };
 use crate::runtime::dtype::{quantize_f16, DType};
 use crate::runtime::manifest::{
@@ -62,7 +63,7 @@ use crate::runtime::weights::{HostParam, HostWeights};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
-use model::{argmax, KvCache, Model, Scratch};
+use model::{argmax, KvCache, Model, PagedKvCache, Scratch};
 
 /// Shape of the synthetic reference model + its compiled-bucket grid.
 /// Mirrors the seed semantics (vocab 8000 -> 4000, positions 512 -> 128)
@@ -551,13 +552,20 @@ impl RefBackend {
     }
 
     fn model_for(&self, entry: &ArtifactEntry) -> Result<Model<'_>> {
-        let wkey = self.manifest.weights_key_for(&entry.variant);
+        self.model_for_variant(&entry.variant)
+    }
+
+    /// Bind the weights of a graph variant at the backend dtype — the
+    /// manifest-entry-free lookup the paged entry points use (paged
+    /// calls have no compiled bucket, hence no artifact entry).
+    fn model_for_variant(&self, variant: &str) -> Result<Model<'_>> {
+        let wkey = self.manifest.weights_key_for(variant);
         let weights = self.weights.get(wkey).ok_or_else(|| {
             Error::Manifest(format!("no weights variant '{wkey}'"))
         })?;
         Model::with_dtype(
             weights,
-            self.manifest.config_for(&entry.variant),
+            self.manifest.config_for(variant),
             self.dtype,
         )
     }
@@ -585,6 +593,55 @@ fn take_cache(arg: Option<DataArg>, what: &str) -> Result<KvCache> {
         }),
         _ => Err(Error::Other(format!("{what}: expected an opaque KV cache"))),
     }
+}
+
+/// Recover a paged cache from its opaque handle (zero-copy when the
+/// session moved its only handle in) and check it belongs to `cfg`.
+fn take_paged(
+    o: OpaqueTensor,
+    cfg: &ModelConfig,
+    what: &str,
+) -> Result<PagedKvCache> {
+    let c = o.take::<PagedKvCache>().ok_or_else(|| {
+        Error::Other(format!("{what}: opaque tensor is not a paged KV cache"))
+    })?;
+    if c.layers != cfg.n_layers
+        || c.heads != cfg.n_heads
+        || c.d_head != cfg.d_head
+    {
+        return Err(Error::Other(format!(
+            "{what}: paged cache shaped [{}, {}, ., ., {}], model wants \
+             [{}, {}, ., ., {}]",
+            c.layers, c.heads, c.d_head, cfg.n_layers, cfg.n_heads,
+            cfg.d_head
+        )));
+    }
+    Ok(c)
+}
+
+/// Validate one block table against the pool dimensions: every id in
+/// bounds, capacity covering `need` virtual slots.
+fn check_table(
+    table: &[u32],
+    need: usize,
+    cache: &PagedKvCache,
+    what: &str,
+) -> Result<()> {
+    if table.len() * cache.block_size < need {
+        return Err(Error::Other(format!(
+            "{what}: block table covers {} slots, row needs {need}",
+            table.len() * cache.block_size
+        )));
+    }
+    for &b in table {
+        if b as usize >= cache.blocks {
+            return Err(Error::Other(format!(
+                "{what}: block id {b} out of range (pool has {} blocks)",
+                cache.blocks
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Split `(bi, row)` pairs round-robin over `team` groups, run `work`
@@ -901,6 +958,134 @@ impl Backend for RefBackend {
 
     fn host_weights(&self, key: &str) -> Option<&HostWeights> {
         self.weights.get(key)
+    }
+
+    // ---- paged KV cache ----------------------------------------------
+
+    fn supports_paged_kv(&self) -> bool {
+        true
+    }
+
+    fn paged_kv_alloc(
+        &self,
+        variant: &str,
+        blocks: usize,
+        block_size: usize,
+    ) -> Result<(OpaqueTensor, OpaqueTensor)> {
+        if blocks == 0 || block_size == 0 {
+            return Err(Error::Other(
+                "paged KV pool needs blocks > 0 and block_size > 0".into(),
+            ));
+        }
+        let cfg = self.manifest.config_for(variant);
+        let k = PagedKvCache::zeros(
+            cfg.n_layers,
+            cfg.n_heads,
+            blocks,
+            block_size,
+            cfg.d_head,
+        );
+        let v = k.clone();
+        Ok((OpaqueTensor::new(k), OpaqueTensor::new(v)))
+    }
+
+    /// Paged prefill: walk ONLY the given rows' contexts, scattering
+    /// K/V into their block tables.  Rows run sequentially (each writes
+    /// only its own blocks); the scalar sequence per row is exactly
+    /// `prompt_walk`'s, so paged prefill logits are bitwise-equal to
+    /// the contiguous `ft_prefill` logits for the same context.
+    ///
+    /// NOTE: the `row_threads` intra-batch team currently applies to
+    /// the contiguous [`Backend::execute`] path only — paged rows share
+    /// one flat pool tensor, so splitting them safely needs per-row
+    /// gather/scatter buffers (future work; the admission savings are
+    /// what this path is for).
+    fn paged_prefill(
+        &self,
+        variant: &str,
+        k: OpaqueTensor,
+        v: OpaqueTensor,
+        rows: &[PagedPrefillRow],
+    ) -> Result<(Vec<f32>, OpaqueTensor, OpaqueTensor)> {
+        let model = self.model_for_variant(variant)?;
+        let cfg = model.cfg;
+        let vsize = cfg.vocab_size;
+        let mut k = take_paged(k, cfg, "paged_prefill k_cache")?;
+        let mut v = take_paged(v, cfg, "paged_prefill v_cache")?;
+        let mut logits = vec![0.0f32; rows.len() * vsize];
+        let t0 = Instant::now();
+        let max_ctx = rows.iter().map(|r| r.tokens.len()).max().unwrap_or(0);
+        let mut scratch = Scratch::new(cfg, max_ctx.max(1));
+        let mut x = vec![0.0f32; cfg.d_model];
+        for (i, row) in rows.iter().enumerate() {
+            check_table(&row.blocks, row.tokens.len(), &k, "paged_prefill")?;
+            if row.tokens.is_empty() {
+                continue; // zero-length row: logits stay zero, never read
+            }
+            for (j, &tok) in row.tokens.iter().enumerate() {
+                model.embed_row(tok, j, &mut x);
+                model.forward_row_paged(
+                    &row.blocks,
+                    j,
+                    j + 1,
+                    &mut x,
+                    &mut k,
+                    &mut v,
+                    &mut scratch,
+                );
+            }
+            model.logits_row(&x, &mut logits[i * vsize..(i + 1) * vsize]);
+        }
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        drop(st);
+        Ok((logits, OpaqueTensor::new(k), OpaqueTensor::new(v)))
+    }
+
+    /// Paged decode: one iteration per row, gathering K/V through the
+    /// block table — the Fig-2 mechanism over scattered storage.
+    fn paged_decode(
+        &self,
+        variant: &str,
+        k: OpaqueTensor,
+        v: OpaqueTensor,
+        rows: &[PagedDecodeRow],
+    ) -> Result<(Vec<f32>, OpaqueTensor, OpaqueTensor)> {
+        let model = self.model_for_variant(variant)?;
+        let cfg = model.cfg;
+        let vsize = cfg.vocab_size;
+        let mut k = take_paged(k, cfg, "paged_decode k_cache")?;
+        let mut v = take_paged(v, cfg, "paged_decode v_cache")?;
+        let mut logits = vec![0.0f32; rows.len() * vsize];
+        let t0 = Instant::now();
+        let max_ctx = rows
+            .iter()
+            .map(|r| r.position.max(0) as usize + 1)
+            .max()
+            .unwrap_or(0);
+        let mut scratch = Scratch::new(cfg, max_ctx.max(1));
+        let mut x = vec![0.0f32; cfg.d_model];
+        for (i, row) in rows.iter().enumerate() {
+            let at = row.position.max(0) as usize;
+            check_table(&row.blocks, at + 1, &k, "paged_decode")?;
+            model.embed_row(row.token.max(0), at, &mut x);
+            model.forward_row_paged(
+                &row.blocks,
+                at,
+                at + 1,
+                &mut x,
+                &mut k,
+                &mut v,
+                &mut scratch,
+            );
+            model.logits_row(&x, &mut logits[i * vsize..(i + 1) * vsize]);
+        }
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        drop(st);
+        Ok((logits, OpaqueTensor::new(k), OpaqueTensor::new(v)))
     }
 }
 
@@ -1232,6 +1417,141 @@ mod tests {
             .map(|(a, q)| (a - q).abs() as f64)
             .fold(0.0, f64::max);
         assert!(max_div < 0.1, "fp16 divergence too large: {max_div}");
+    }
+
+    /// Contiguous prefill+decode logits for one prompt on `backend`.
+    fn contiguous_roundtrip(
+        b: &RefBackend,
+        prompt: &[i32],
+    ) -> (Vec<f32>, i32, Vec<f32>) {
+        let pre = b
+            .execute("ft_prefill_full_b1_s8", prompt_args(1, 8, prompt))
+            .unwrap();
+        let mut it = pre.into_iter();
+        let logits = it.next().unwrap().into_f32().unwrap();
+        let k = it.next().unwrap().into_opaque().unwrap();
+        let v = it.next().unwrap().into_opaque().unwrap();
+        let next = argmax(&logits) as i32;
+        let dec = b
+            .execute(
+                "ft_decode_full_b1_s8",
+                vec![
+                    DataArg::I32(vec![next], vec![1]),
+                    DataArg::I32(vec![prompt.len() as i32], vec![1]),
+                    DataArg::Opaque(k),
+                    DataArg::Opaque(v),
+                ],
+            )
+            .unwrap();
+        let dec_logits =
+            dec.into_iter().next().unwrap().into_f32().unwrap();
+        (logits, next, dec_logits)
+    }
+
+    #[test]
+    fn paged_prefill_and_decode_match_contiguous_bitwise() {
+        // THE paged-identity guarantee, at the backend layer: prefill
+        // and decode through a SCRAMBLED block table produce logits
+        // bitwise-equal to the contiguous bucket path, for both
+        // storage dtypes.
+        let prompt =
+            [special::BOS as i32, 5, 9, 6, 11, special::SEP as i32];
+        for f16 in [false, true] {
+            let mut b = RefBackend::with_preset(&tiny_preset());
+            if f16 {
+                b.set_dtype(DType::F16);
+            }
+            let (c_pre, next, c_dec) = contiguous_roundtrip(&b, &prompt);
+
+            // non-contiguous, out-of-order blocks: slot t of the row
+            // lives at block [5, 2][t / 4] — the gather must not care
+            let table = vec![5u32, 2];
+            let (pk, pv) = b.paged_kv_alloc("full", 6, 4).unwrap();
+            let rows = vec![PagedPrefillRow {
+                tokens: prompt.to_vec(),
+                blocks: table.clone(),
+            }];
+            let (p_pre, pk, pv) =
+                b.paged_prefill("full", pk, pv, &rows).unwrap();
+            assert_eq!(
+                p_pre, c_pre,
+                "paged prefill diverged (fp16={f16})"
+            );
+            let drows = vec![PagedDecodeRow {
+                token: next,
+                position: prompt.len() as i32,
+                blocks: table,
+            }];
+            let (p_dec, _, _) =
+                b.paged_decode("full", pk, pv, &drows).unwrap();
+            assert_eq!(p_dec, c_dec, "paged decode diverged (fp16={f16})");
+        }
+    }
+
+    #[test]
+    fn paged_rows_are_isolated_from_each_other() {
+        // Two rows prefilled into one pool produce exactly the logits
+        // each would produce alone — block tables never alias.
+        let b = RefBackend::with_preset(&tiny_preset());
+        let p1 = [special::BOS as i32, 7, 12, special::SEP as i32];
+        let p2 =
+            [special::BOS as i32, 3, 8, 4, 9, special::SEP as i32];
+        let solo = |p: &[i32]| {
+            let (pk, pv) = b.paged_kv_alloc("full", 4, 4).unwrap();
+            let rows = vec![PagedPrefillRow {
+                tokens: p.to_vec(),
+                blocks: vec![0, 1],
+            }];
+            let (l, _, _) = b.paged_prefill("full", pk, pv, &rows).unwrap();
+            l
+        };
+        let (a_solo, b_solo) = (solo(&p1), solo(&p2));
+        let (pk, pv) = b.paged_kv_alloc("full", 8, 4).unwrap();
+        let rows = vec![
+            PagedPrefillRow { tokens: p1.to_vec(), blocks: vec![3, 6] },
+            PagedPrefillRow { tokens: p2.to_vec(), blocks: vec![1, 4] },
+        ];
+        let (l, _, _) = b.paged_prefill("full", pk, pv, &rows).unwrap();
+        let vsize = b.manifest.config_for("full").vocab_size;
+        assert_eq!(&l[..vsize], a_solo.as_slice());
+        assert_eq!(&l[vsize..], b_solo.as_slice());
+    }
+
+    #[test]
+    fn paged_calls_validate_tables_and_handles() {
+        let b = RefBackend::with_preset(&tiny_preset());
+        assert!(b.supports_paged_kv());
+        assert!(b.paged_kv_alloc("full", 0, 4).is_err());
+        assert!(b.paged_kv_alloc("full", 4, 0).is_err());
+        let (pk, pv) = b.paged_kv_alloc("full", 4, 4).unwrap();
+        // block id out of range
+        let rows = vec![PagedPrefillRow {
+            tokens: vec![special::BOS as i32, special::SEP as i32],
+            blocks: vec![9],
+        }];
+        assert!(b
+            .paged_prefill("full", pk.clone(), pv.clone(), &rows)
+            .is_err());
+        // table too small for the context
+        let rows = vec![PagedPrefillRow {
+            tokens: vec![1i32; 9],
+            blocks: vec![0, 1],
+        }];
+        assert!(b
+            .paged_prefill("full", pk.clone(), pv.clone(), &rows)
+            .is_err());
+        // not a paged cache handle
+        let bogus = OpaqueTensor::new(7u32);
+        assert!(b
+            .paged_prefill("full", bogus, pv.clone(), &[])
+            .is_err());
+        // decode position outside the table
+        let rows = vec![PagedDecodeRow {
+            token: 5,
+            position: 8,
+            blocks: vec![0, 1],
+        }];
+        assert!(b.paged_decode("full", pk, pv, &rows).is_err());
     }
 
     #[test]

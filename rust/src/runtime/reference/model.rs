@@ -105,6 +105,70 @@ impl KvCache {
     }
 }
 
+/// A **paged** KV cache: one pool-level tensor
+/// `[layers, heads, blocks, block_size, d_head]` (flat f32) whose
+/// sequence slots are addressed through per-request block tables
+/// instead of a per-bucket batch axis.  The reference twin of what a
+/// paged-attention kernel reads on a real accelerator.
+///
+/// For a fixed (layer, head), virtual slot `t` of a request with block
+/// table `blocks` lives at block `blocks[t / block_size]`, offset
+/// `t % block_size` — the gather [`Model::forward_row_paged`] performs.
+#[derive(Debug, Clone)]
+pub struct PagedKvCache {
+    pub layers: usize,
+    pub heads: usize,
+    pub blocks: usize,
+    pub block_size: usize,
+    pub d_head: usize,
+    pub data: Vec<f32>,
+}
+
+impl PagedKvCache {
+    pub fn zeros(
+        layers: usize,
+        heads: usize,
+        blocks: usize,
+        block_size: usize,
+        d_head: usize,
+    ) -> Self {
+        Self {
+            layers,
+            heads,
+            blocks,
+            block_size,
+            d_head,
+            data: vec![0.0; layers * heads * blocks * block_size * d_head],
+        }
+    }
+
+    /// Offset of the `[d_head]` run at (layer, head, block, offset).
+    #[inline]
+    fn at(&self, l: usize, h: usize, block: usize, offset: usize) -> usize {
+        (((l * self.heads + h) * self.blocks + block) * self.block_size
+            + offset)
+            * self.d_head
+    }
+
+    /// Offset of the `[d_head]` run for virtual slot `t` of a request
+    /// with block table `table` at (layer, head).
+    #[inline]
+    pub fn slot_at(
+        &self,
+        table: &[u32],
+        l: usize,
+        h: usize,
+        t: usize,
+    ) -> usize {
+        self.at(
+            l,
+            h,
+            table[t / self.block_size] as usize,
+            t % self.block_size,
+        )
+    }
+}
+
 /// LayerNorm over one row: `(x - mean) * rsqrt(var + eps) * g + b`.
 fn layernorm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
     let d = x.len();
@@ -417,6 +481,110 @@ impl<'a> Model<'a> {
         self.store_row(x);
     }
 
+    /// [`Model::forward_row`] over a **paged** cache: identical math in
+    /// the identical order, with the token's K/V scattered to — and
+    /// attention gathered from — the request's block table instead of a
+    /// contiguous bucket row.  Because the stored values and the f32
+    /// accumulation sequence are the same, paged execution is
+    /// bitwise-equal to the contiguous path (property-tested in
+    /// `runtime::reference` and at the engine level).
+    ///
+    /// `slot` is the token's virtual sequence slot; `attend_len` the
+    /// number of virtual slots to attend over.  `table` must cover
+    /// `max(slot + 1, attend_len)` slots.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_row_paged(
+        &self,
+        table: &[u32],
+        slot: usize,
+        attend_len: usize,
+        x: &mut [f32],
+        k: &mut PagedKvCache,
+        v: &mut PagedKvCache,
+        scratch: &mut Scratch,
+    ) {
+        let d = self.cfg.d_model;
+        let dh = self.cfg.d_head;
+        let nh = self.cfg.n_heads;
+        let f = self.cfg.d_ff;
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let Scratch { h, q, attn, proj, ff, scores } = scratch;
+        let scores = &mut scores[..attend_len];
+
+        for (li, lp) in self.layers.iter().enumerate() {
+            // attention block (pre-LN)
+            layernorm(x, lp.ln1_g, lp.ln1_b, h);
+            linear(h, lp.wq, lp.bq, d, d, q);
+            linear(h, lp.wk, lp.bk, d, d, proj);
+            for hh in 0..nh {
+                let off = k.slot_at(table, li, hh, slot);
+                for j in 0..dh {
+                    k.data[off + j] = self.store(proj[hh * dh + j]);
+                }
+            }
+            linear(h, lp.wv, lp.bv, d, d, proj);
+            for hh in 0..nh {
+                let off = v.slot_at(table, li, hh, slot);
+                for j in 0..dh {
+                    v.data[off + j] = self.store(proj[hh * dh + j]);
+                }
+            }
+            for hh in 0..nh {
+                let qh = &q[hh * dh..(hh + 1) * dh];
+                let mut maxs = f32::NEG_INFINITY;
+                for (t, slot_score) in scores.iter_mut().enumerate() {
+                    let off = k.slot_at(table, li, hh, t);
+                    let mut s = 0.0f32;
+                    for j in 0..dh {
+                        s += qh[j] * k.data[off + j];
+                    }
+                    s *= scale;
+                    *slot_score = s;
+                    if s > maxs {
+                        maxs = s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - maxs).exp();
+                    denom += *s;
+                }
+                let inv = 1.0 / denom;
+                let out = &mut attn[hh * dh..(hh + 1) * dh];
+                out.fill(0.0);
+                for (t, &p) in scores.iter().enumerate() {
+                    let w = p * inv;
+                    let off = v.slot_at(table, li, hh, t);
+                    for j in 0..dh {
+                        out[j] += w * v.data[off + j];
+                    }
+                }
+            }
+            linear(attn, lp.wo, lp.bo, d, d, proj);
+            for j in 0..d {
+                x[j] += proj[j];
+            }
+            self.store_row(x);
+
+            // FFN block (pre-LN)
+            layernorm(x, lp.ln2_g, lp.ln2_b, h);
+            linear(h, lp.w1, lp.b1, d, f, ff);
+            for vff in ff.iter_mut() {
+                *vff = gelu(*vff);
+            }
+            linear(ff, lp.w2, lp.b2, f, d, proj);
+            for j in 0..d {
+                x[j] += proj[j];
+            }
+            self.store_row(x);
+        }
+
+        layernorm(x, self.lnf_g, self.lnf_b, h);
+        x.copy_from_slice(h);
+        self.store_row(x);
+    }
+
     /// Tied-embedding logits for one final hidden row: `h @ tok_emb.T`.
     pub fn logits_row(&self, h: &[f32], out: &mut [f32]) {
         let d = self.cfg.d_model;
@@ -512,6 +680,29 @@ mod tests {
         c.inject_row(2, &r1);
         assert_eq!(c.data[c.at(0, 2, 0, 0)], before[c.at(0, 1, 0, 0)]);
         assert_eq!(c.data[c.at(0, 0, 1, 2)], before[c.at(0, 0, 1, 2)]);
+    }
+
+    #[test]
+    fn paged_kv_cache_indexing_is_dense_and_disjoint() {
+        let c = PagedKvCache::zeros(2, 3, 4, 5, 6);
+        assert_eq!(c.data.len(), 2 * 3 * 4 * 5 * 6);
+        let mut seen = std::collections::HashSet::new();
+        for l in 0..2 {
+            for h in 0..3 {
+                for b in 0..4 {
+                    for o in 0..5 {
+                        let off = c.at(l, h, b, o);
+                        assert!(off + 6 <= c.data.len());
+                        assert!(seen.insert(off), "overlap at {off}");
+                    }
+                }
+            }
+        }
+        // slot_at maps virtual slots through the table: slot 7 with
+        // table [2, 0] and block_size 5 is block 0, offset 2
+        let table = [2u32, 0];
+        assert_eq!(c.slot_at(&table, 1, 2, 7), c.at(1, 2, 0, 2));
+        assert_eq!(c.slot_at(&table, 0, 0, 3), c.at(0, 0, 2, 3));
     }
 
     #[test]

@@ -100,6 +100,29 @@ impl ServerBuilder {
         self
     }
 
+    /// Toggle paged KV caches (on by default where the backend
+    /// supports them); off = the legacy contiguous bucket caches,
+    /// where every admission re-prefills the whole batch.
+    pub fn paged_kv(mut self, on: bool) -> Self {
+        self.cfg.kv.paged = on;
+        self
+    }
+
+    /// Sequence slots per paged-KV block (`--kv-block-size`).
+    pub fn kv_block_size(mut self, n: usize) -> Self {
+        self.cfg.kv.block_size = n;
+        self
+    }
+
+    /// Blocks per decode-session pool (`--kv-blocks`); 0 auto-sizes so
+    /// the largest compiled batch bucket fits at the engine's max
+    /// sequence.  Small pools make admission queue on capacity — the
+    /// cache-pressure smoke in CI runs exactly that.
+    pub fn kv_blocks(mut self, n: usize) -> Self {
+        self.cfg.kv.blocks = n;
+        self
+    }
+
     /// Compile every bucket at startup for clean first-request latency.
     pub fn precompile(mut self, on: bool) -> Self {
         self.cfg.precompile = on;

@@ -23,7 +23,10 @@
 //! Successful replies (v1 lines and v2 `done` events) carry the
 //! storage precision that produced them (`"dtype": "fp32" | "fp16"`,
 //! the server's `--dtype`), so clients can tell reduced-precision
-//! output apart.
+//! output apart, and — when the engine runs paged KV caches — the
+//! pool occupancy observed as the request retired
+//! (`"kv_blocks_in_use"` / `"kv_blocks_total"`), the per-reply
+//! cache-pressure signal.
 //!
 //! Every error reply (both versions) carries a structured `code`:
 //! `bad_request` | `overloaded` | `engine_error` | `cancelled` |
@@ -113,6 +116,10 @@ pub fn response_to_json(r: &ServingResponse) -> String {
     if let Some(d) = r.dtype {
         pairs.push(("dtype", Value::str(d)));
     }
+    if let Some((used, total)) = r.kv_blocks {
+        pairs.push(("kv_blocks_in_use", Value::num(used as f64)));
+        pairs.push(("kv_blocks_total", Value::num(total as f64)));
+    }
     Value::obj(pairs).to_json()
 }
 
@@ -158,6 +165,10 @@ pub fn event_to_json(id: u64, ev: &ServingEvent) -> String {
             }
             if let Some(d) = r.dtype {
                 pairs.push(("dtype", Value::str(d)));
+            }
+            if let Some((used, total)) = r.kv_blocks {
+                pairs.push(("kv_blocks_in_use", Value::num(used as f64)));
+                pairs.push(("kv_blocks_total", Value::num(total as f64)));
             }
             Value::obj(pairs).to_json()
         }
@@ -212,6 +223,7 @@ mod tests {
             error: None,
             code: None,
             dtype: Some("fp16"),
+            kv_blocks: Some((3, 64)),
         }
     }
 
@@ -256,6 +268,8 @@ mod tests {
         assert!(v.get("ttft_ms").as_f64().unwrap() >= 3.0);
         assert_eq!(v.get("accuracy").as_f64(), Some(0.5));
         assert_eq!(v.get("dtype").as_str(), Some("fp16"));
+        assert_eq!(v.get("kv_blocks_in_use").as_u64(), Some(3));
+        assert_eq!(v.get("kv_blocks_total").as_u64(), Some(64));
         assert!(v.get("code").is_null());
     }
 
@@ -299,6 +313,8 @@ mod tests {
         assert_eq!(v.get("summary").as_str(), Some("ba be"));
         assert_eq!(v.get("n_tokens").as_usize(), Some(2));
         assert_eq!(v.get("dtype").as_str(), Some("fp16"));
+        assert_eq!(v.get("kv_blocks_in_use").as_u64(), Some(3));
+        assert_eq!(v.get("kv_blocks_total").as_u64(), Some(64));
     }
 
     #[test]

@@ -366,6 +366,7 @@ impl StreamingPipeline {
                             generated,
                             steps,
                             ttft,
+                            kv,
                             ..
                         } => {
                             let mut resp = crate::pipeline::postprocess(
@@ -376,6 +377,12 @@ impl StreamingPipeline {
                             resp.ttft = ttft;
                             resp.steps = steps;
                             resp.dtype = Some(dtype_label);
+                            resp.kv_blocks = kv.map(|st| {
+                                (
+                                    st.used_blocks() as u64,
+                                    st.total_blocks as u64,
+                                )
+                            });
                             reply_done(&post_routes, request.id, resp);
                         }
                         PoolEvent::Failed {

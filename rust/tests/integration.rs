@@ -13,10 +13,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use aigc_infer::config::{EngineKind, ServingConfig};
+use aigc_infer::config::{EngineKind, KvConfig, ServingConfig};
 use aigc_infer::data::{CorpusConfig, Generator, TraceConfig, TraceGenerator};
 use aigc_infer::engine::{
-    build as build_engine, DecodeSession, Engine, EngineInput, Sampler,
+    build as build_engine, build_with_kv, DecodeSession, Engine,
+    EngineInput, Sampler,
 };
 use aigc_infer::pipeline;
 use aigc_infer::precision;
@@ -213,21 +214,27 @@ fn pruned_engine_matches_full_on_pruned_vocab_prompts() {
 
 #[test]
 fn multi_step_equals_single_step() {
-    // Same graphs, same dtype, both greedy: identical tokens.
+    // Same graphs, same dtype, both greedy: identical tokens.  Runs on
+    // the contiguous cache discipline — the fused multi-step decode
+    // executable is a contiguous-path feature (the paged session
+    // decodes one step per call, batching rows per call instead).
     let b = backend();
-    let multi = build_engine(
+    let legacy = KvConfig { paged: false, ..KvConfig::default() };
+    let multi = build_with_kv(
         EngineKind::FtPruned,
         b.clone(),
         aigc_infer::config::GenConfig { max_new_tokens: 12, use_multi_step: true },
+        legacy,
     )
     .unwrap();
-    let single = build_engine(
+    let single = build_with_kv(
         EngineKind::FtPruned,
         b.clone(),
         aigc_infer::config::GenConfig {
             max_new_tokens: 12,
             use_multi_step: false,
         },
+        legacy,
     )
     .unwrap();
     let inputs = seeded_prompts(3, 22, 12, None);
@@ -501,48 +508,172 @@ fn cancelled_request_gets_terminal_error_event() {
 }
 
 #[test]
+fn server_under_cache_pressure_serves_every_request() {
+    // End-to-end cache-pressure: a starved paged pool forces requests
+    // to queue on KV capacity inside the continuous batcher; every
+    // submission still gets exactly one successful terminal event, and
+    // replies carry the pool occupancy snapshot.
+    let server = Server::builder()
+        .engine(EngineKind::FtPruned)
+        .max_new_tokens(6)
+        .kv_block_size(4)
+        .kv_blocks(16) // 64 slots: any one request fits, the batch can't
+        .start()
+        .unwrap();
+    let mut gen = Generator::new(CorpusConfig::default(), 33);
+    let streams: Vec<_> = (0..8)
+        .map(|_| {
+            let d = gen.generate_capped(8);
+            server.submit(d.text, 6).unwrap()
+        })
+        .collect();
+    for s in streams {
+        let resp = s.wait().expect("terminal event");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let (used, total) =
+            resp.kv_blocks.expect("paged server reports occupancy");
+        assert_eq!(total, 16);
+        assert!(used <= total, "pool overcommitted: {used}/{total}");
+    }
+}
+
+#[test]
 fn admission_split_matches_one_shot_generate() {
     // Continuous-batching token identity at the engine level: starting
     // half the batch, stepping, then admitting the rest produces the
-    // same per-request greedy tokens as one-shot generation.
+    // same per-request greedy tokens as one-shot generation — on BOTH
+    // cache disciplines (paged block pools and legacy contiguous
+    // buckets; the baseline engine has no cache either way).
     let b = backend();
-    for kind in
-        [EngineKind::Baseline, EngineKind::FtFull, EngineKind::FtPruned]
-    {
-        let engine =
-            build_engine(kind, b.clone(), Default::default()).unwrap();
-        let inputs = seeded_prompts(6, 77, 8, None);
-        let one_shot: Vec<Vec<u32>> = engine
-            .generate(&inputs, &mut Sampler::greedy())
-            .unwrap()
-            .into_iter()
-            .map(|o| o.generated)
-            .collect();
+    for paged in [true, false] {
+        let kv = KvConfig { paged, ..KvConfig::default() };
+        for kind in
+            [EngineKind::Baseline, EngineKind::FtFull, EngineKind::FtPruned]
+        {
+            let engine =
+                build_with_kv(kind, b.clone(), Default::default(), kv)
+                    .unwrap();
+            let inputs = seeded_prompts(6, 77, 8, None);
+            let one_shot: Vec<Vec<u32>> = engine
+                .generate(&inputs, &mut Sampler::greedy())
+                .unwrap()
+                .into_iter()
+                .map(|o| o.generated)
+                .collect();
 
-        let (first, rest) = inputs.split_at(3);
-        let mut sampler = Sampler::greedy();
-        let mut session = engine.start(first).unwrap();
-        session.step(&mut sampler).unwrap();
-        session.step(&mut sampler).unwrap();
-        assert!(session.can_admit(rest), "{kind:?}: bucket must fit");
-        session.admit(rest).unwrap();
-        let mut outs: Vec<Option<Vec<u32>>> = vec![None; inputs.len()];
-        loop {
-            for f in session.take_finished() {
-                outs[f.seq] = Some(f.output.generated);
-            }
-            if session.active() == 0 {
-                break;
-            }
+            let (first, rest) = inputs.split_at(3);
+            let mut sampler = Sampler::greedy();
+            let mut session = engine.start(first).unwrap();
             session.step(&mut sampler).unwrap();
+            session.step(&mut sampler).unwrap();
+            assert!(
+                session.can_admit(rest),
+                "{kind:?} paged={paged}: admission must fit"
+            );
+            session.admit(rest).unwrap();
+            let mut outs: Vec<Option<Vec<u32>>> = vec![None; inputs.len()];
+            loop {
+                for f in session.take_finished() {
+                    outs[f.seq] = Some(f.output.generated);
+                }
+                if session.active() == 0 {
+                    break;
+                }
+                session.step(&mut sampler).unwrap();
+            }
+            let split: Vec<Vec<u32>> =
+                outs.into_iter().map(|o| o.unwrap()).collect();
+            assert_eq!(
+                one_shot, split,
+                "{kind:?} paged={paged}: admission changed greedy streams"
+            );
         }
-        let split: Vec<Vec<u32>> =
-            outs.into_iter().map(|o| o.unwrap()).collect();
-        assert_eq!(
-            one_shot, split,
-            "{kind:?}: admission changed greedy token streams"
-        );
     }
+}
+
+#[test]
+fn paged_admission_prefills_only_the_new_row() {
+    // THE acceptance criterion of the paged refactor: admitting into a
+    // live session costs the NEW row's prompt, while the legacy
+    // contiguous path re-prefills every live row's grown context.
+    let b = backend();
+    let inputs = seeded_prompts(4, 31, 8, None);
+    let (first, rest) = inputs.split_at(3);
+    let run = |paged: bool| -> (u64, u64) {
+        let engine = build_with_kv(
+            EngineKind::FtPruned,
+            b.clone(),
+            Default::default(),
+            KvConfig { paged, ..KvConfig::default() },
+        )
+        .unwrap();
+        let mut session = engine.start(first).unwrap();
+        let seed_cost = session.prefill_tokens();
+        // admit before any step: every seed row is deterministically
+        // still live, so the legacy re-prefill cost is exact
+        session.admit(rest).unwrap();
+        (seed_cost, session.prefill_tokens() - seed_cost)
+    };
+    let seed_prompts: u64 =
+        first.iter().map(|i| i.prompt.len() as u64).sum();
+    let new_prompt = rest[0].prompt.len() as u64;
+
+    let (paged_seed, paged_admit) = run(true);
+    assert_eq!(paged_seed, seed_prompts, "paged seed = its prompts");
+    assert_eq!(
+        paged_admit, new_prompt,
+        "paged admission must prefill ONLY the new row"
+    );
+
+    let (legacy_seed, legacy_admit) = run(false);
+    assert_eq!(legacy_seed, seed_prompts);
+    assert_eq!(
+        legacy_admit,
+        seed_prompts + new_prompt,
+        "legacy admission re-prefills the whole batch"
+    );
+    assert!(legacy_admit > paged_admit);
+}
+
+#[test]
+fn paged_session_frees_blocks_at_retirement() {
+    // Retirement returns capacity immediately: cancel one of two live
+    // rows and the pool's free-block count rises before the session
+    // ends.
+    let b = backend();
+    let engine = build_with_kv(
+        EngineKind::FtPruned,
+        b,
+        Default::default(),
+        KvConfig { paged: true, block_size: 4, blocks: 32 },
+    )
+    .unwrap();
+    let inputs = seeded_prompts(2, 91, 8, None);
+    let mut sampler = Sampler::greedy();
+    let mut session = engine.start(&inputs).unwrap();
+    session.step(&mut sampler).unwrap();
+    let before = session.kv_stats().expect("paged session reports stats");
+    assert!(before.used_blocks() > 0);
+    // cancel whichever row is still live (a first-step EOS would have
+    // retired — and freed — a row already)
+    let retired = inputs.iter().any(|i| {
+        session.retire(
+            i.request_id,
+            aigc_infer::engine::FinishReason::Cancelled,
+        )
+    });
+    assert!(retired, "no live row left to cancel");
+    let after = session.kv_stats().unwrap();
+    assert!(
+        after.free_blocks > before.free_blocks,
+        "retirement must free the row's blocks immediately \
+         ({} -> {} free)",
+        before.free_blocks,
+        after.free_blocks
+    );
+    // the freed capacity is immediately admissible again
+    let extra = seeded_prompts(1, 92, 8, None);
+    assert!(session.can_admit(&extra));
 }
 
 #[test]
@@ -1062,6 +1193,95 @@ fn poisoned_ft_session_returns_typed_errors_not_panics() {
         err.to_string().contains("poisoned"),
         "expected the poisoned-session error, got: {err}"
     );
+}
+
+/// A backend that silently drops all but the first output of the Nth
+/// execute — the "too few outputs" contract breach that used to panic
+/// the worker thread in `outs.next().unwrap()`.
+struct TruncatingBackend {
+    inner: RefBackend,
+    calls: std::sync::atomic::AtomicUsize,
+    truncate_on: usize,
+}
+
+impl Backend for TruncatingBackend {
+    fn name(&self) -> &'static str {
+        "truncating"
+    }
+
+    fn manifest(&self) -> &aigc_infer::runtime::Manifest {
+        self.inner.manifest()
+    }
+
+    fn stats(&self) -> aigc_infer::runtime::RuntimeStats {
+        self.inner.stats()
+    }
+
+    fn prepare(&self, name: &str) -> aigc_infer::Result<()> {
+        self.inner.prepare(name)
+    }
+
+    fn execute(
+        &self,
+        name: &str,
+        data: Vec<DataArg>,
+    ) -> aigc_infer::Result<Vec<ExecOut>> {
+        let outs = self.inner.execute(name, data)?;
+        let call = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if call == self.truncate_on {
+            Ok(outs.into_iter().take(1).collect())
+        } else {
+            Ok(outs)
+        }
+    }
+
+    fn host_weights(
+        &self,
+        key: &str,
+    ) -> Option<&aigc_infer::runtime::HostWeights> {
+        self.inner.host_weights(key)
+    }
+}
+
+#[test]
+fn missing_backend_outputs_fail_typed_not_panic() {
+    // Satellite: the FT engine's output unpacking must turn a backend
+    // that breaks its contract into typed `engine_error` failures for
+    // the REQUESTS, never a worker-thread panic.  (This wrapper has no
+    // paged support, so the engine exercises the contiguous path whose
+    // unpacking used to be `outs.next().unwrap()`.)
+    let inputs = seeded_prompts(2, 5, 6, None);
+
+    // case 1: the PREFILL call comes back truncated -> start() fails
+    let backend: Arc<dyn Backend> = Arc::new(TruncatingBackend {
+        inner: RefBackend::synthetic(),
+        calls: std::sync::atomic::AtomicUsize::new(0),
+        truncate_on: 1,
+    });
+    let engine =
+        aigc_infer::engine::FtEngine::new(backend, "full", false).unwrap();
+    let err = engine.start(&inputs).unwrap_err();
+    assert_eq!(err.code(), "engine_error");
+    assert!(err.to_string().contains("too few outputs"), "{err}");
+
+    // case 2: the first DECODE call comes back truncated -> that step
+    // fails typed, and the session is poisoned (typed) afterwards
+    let backend: Arc<dyn Backend> = Arc::new(TruncatingBackend {
+        inner: RefBackend::synthetic(),
+        calls: std::sync::atomic::AtomicUsize::new(0),
+        truncate_on: 2, // call 1 = prefill (intact), call 2 = decode
+    });
+    let engine =
+        aigc_infer::engine::FtEngine::new(backend, "full", false).unwrap();
+    let mut sampler = Sampler::greedy();
+    let mut session = engine.start(&inputs).unwrap();
+    session.step(&mut sampler).expect("pending-logits step");
+    let err = session.step(&mut sampler).unwrap_err();
+    assert_eq!(err.code(), "engine_error");
+    assert!(err.to_string().contains("too few outputs"), "{err}");
+    let err = session.step(&mut sampler).unwrap_err();
+    assert_eq!(err.code(), "engine_error");
+    assert!(err.to_string().contains("poisoned"), "{err}");
 }
 
 /// Real-artifact tests.  The `pjrt` feature only compiles after the
