@@ -7,15 +7,22 @@
 //! synthetic model), a worker-pool sweep of the pipelined row at
 //! `--workers 1` and `--workers 4`, a **continuous-vs-static
 //! batching** serving comparison through the embedded `Server` (same
-//! trace, admission between decode steps ON vs OFF), and — schema 4 —
-//! a **paged-vs-legacy KV cache** admission-cost comparison
+//! trace, admission between decode steps ON vs OFF), a schema-4
+//! **paged-vs-legacy KV cache** admission-cost comparison
 //! (continuous batching at batch 4: the paged path must prefill
 //! strictly fewer tokens per admission than the legacy batch-wide
-//! re-prefill; hard-gated by the self-validation), then writes one
-//! machine-readable `BENCH_<n>.json` datapoint (samples/sec, p50/p99
-//! latency, TTFT, tokens/sec per configuration).  Successive PRs
-//! append `BENCH_2.json`, `BENCH_3.json`, … so the speed trajectory of
-//! the repo is diffable.
+//! re-prefill; hard-gated by the self-validation), and — schema 5 —
+//! a **scheduling/QoS** section: chunked-vs-monolithic admission
+//! prefill (the p99 per-iteration service latency with `--prefill-chunk`
+//! must land strictly below monolithic on the same trace, with
+//! bitwise-identical token streams) plus a preempt-vs-block A/B (an
+//! interactive arrival under a deliberately full block pool must be
+//! admitted by evicting a batch-priority row, with every stream —
+//! evicted and resumed included — identical to an uncontended solo
+//! run).  The tool then writes one machine-readable `BENCH_<n>.json`
+//! datapoint (samples/sec, p50/p99 latency, TTFT, tokens/sec per
+//! configuration).  Successive PRs append `BENCH_2.json`,
+//! `BENCH_3.json`, … so the speed trajectory of the repo is diffable.
 //!
 //! The sweep pins `row_threads = 1` so it isolates pool scaling from
 //! the reference backend's intra-batch row parallelism.
@@ -29,16 +36,16 @@
 //! The tool re-reads and validates what it wrote and exits non-zero on
 //! any failure, so CI can use it as a smoke step as-is.
 
-use std::time::{Instant, SystemTime, UNIX_EPOCH};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use aigc_infer::config::{EngineKind, ServingConfig};
-use aigc_infer::data::{TraceConfig, TraceGenerator};
+use aigc_infer::data::{Request, TraceConfig, TraceGenerator};
 use aigc_infer::metrics::Histogram;
 use aigc_infer::pipeline::{self, RunSummary};
 use aigc_infer::precision;
 use aigc_infer::runtime::DType;
 use aigc_infer::util::json::{self, Value};
-use aigc_infer::Server;
+use aigc_infer::{Priority, Server, ServingEvent, SubmitOptions};
 
 /// Probe-prompt shape for the precision harness (shared with the
 /// integration tests so every gate measures the same workload).
@@ -238,6 +245,204 @@ fn run_kv_admission(paged: bool, n: usize, max_new: usize) -> Value {
     ])
 }
 
+/// The schema-5 chunked-prefill A/B: the same offline trace through
+/// the continuous batcher (1 worker, max_batch 4, paged KV), admission
+/// prefill monolithic (`chunk == 0`) vs spread over decode steps in
+/// `chunk`-token slices.  Returns the full summary so the caller can
+/// compare BOTH the per-iteration latency tail (the SLO quantity) and
+/// the token streams (chunking must not change a single token).
+fn run_sched_chunk(chunk: usize, n: usize, max_new: usize) -> RunSummary {
+    let mut cfg = ServingConfig::default();
+    cfg.engine = EngineKind::FtPruned;
+    cfg.pipelined = true;
+    cfg.workers = 1;
+    cfg.row_threads = 1;
+    cfg.batch.max_batch = 4;
+    cfg.gen.max_new_tokens = max_new;
+    cfg.gen.prefill_chunk = chunk;
+    cfg.precompile = true;
+    let mut trace = TraceGenerator::new(
+        TraceConfig { max_new_tokens: max_new, ..Default::default() },
+        11,
+    );
+    let reqs = trace.take(n);
+    let s = pipeline::run(&cfg, &reqs).expect("scheduling bench failed");
+    eprintln!(
+        "  sched[chunk={chunk}]: step p50 {:.2}ms p99 {:.2}ms over {} \
+         iterations, {} preemption(s)",
+        s.step_latency.quantile(0.50).as_secs_f64() * 1e3,
+        s.step_latency.quantile(0.99).as_secs_f64() * 1e3,
+        s.step_latency.count(),
+        s.kv.preemptions,
+    );
+    s
+}
+
+/// `(id, token stream)` pairs in id order — the stream-identity view
+/// of a run (admission/chunking order must not leak into tokens).
+fn sorted_streams(s: &RunSummary) -> Vec<(u64, Vec<u32>)> {
+    let mut v: Vec<_> = s
+        .responses
+        .iter()
+        .map(|r| (r.id, r.summary_ids.clone()))
+        .collect();
+    v.sort();
+    v
+}
+
+fn sched_row(
+    mode: &str,
+    chunk: usize,
+    s: &RunSummary,
+    streams_match: bool,
+) -> Value {
+    Value::obj(vec![
+        ("mode", Value::str(mode)),
+        ("prefill_chunk", Value::num(chunk as f64)),
+        (
+            "step_p50_ms",
+            Value::num(s.step_latency.quantile(0.50).as_secs_f64() * 1e3),
+        ),
+        (
+            "step_p99_ms",
+            Value::num(s.step_latency.quantile(0.99).as_secs_f64() * 1e3),
+        ),
+        ("steps_observed", Value::num(s.step_latency.count() as f64)),
+        ("samples_per_sec", Value::num(s.samples_per_sec)),
+        ("preemptions", Value::num(s.kv.preemptions as f64)),
+        ("generated_tokens", Value::num(s.generated_tokens as f64)),
+        (
+            "streams_match_monolithic",
+            Value::num(streams_match as u64 as f64),
+        ),
+    ])
+}
+
+// Preempt-vs-block A/B sizing (kv_block_size 4): each hog needs
+// ceil((10 words + BOS/SEP + 52 new) / 4) = 16 blocks, so two hogs
+// fill a 32-block pool EXACTLY; the probe needs ceil((2 + 2 + 8) / 4)
+// = 3.  Single-syllable words ("ba") always encode 1:1, so the token
+// arithmetic is stable under the pruned vocabulary.
+const HOG_WORDS: usize = 10;
+const HOG_MAX_NEW: usize = 52;
+const PROBE_WORDS: usize = 2;
+const PROBE_MAX_NEW: usize = 8;
+
+fn hog_text() -> String {
+    vec!["ba"; HOG_WORDS].join(" ")
+}
+
+fn probe_text() -> String {
+    vec!["ba"; PROBE_WORDS].join(" ")
+}
+
+/// Uncontended greedy stream for `text` (fresh server, auto-sized
+/// pool) — the identity baseline both preemption arms compare to.
+fn solo_stream(text: &str, max_new: usize) -> Vec<u32> {
+    let server = Server::builder()
+        .engine(EngineKind::FtPruned)
+        .precompile(true)
+        .start()
+        .expect("solo server");
+    let resp = server.generate(text, max_new).expect("solo generate");
+    assert!(resp.error.is_none(), "solo run failed: {resp:?}");
+    resp.summary_ids
+}
+
+/// One preemption arm: two hogs of `hog_priority` fill the block pool
+/// exactly, then an interactive probe arrives mid-decode.  With batch
+/// hogs the scheduler must evict one (`preempt`); with interactive
+/// hogs nobody is eligible and the probe waits for capacity (`block`).
+/// Either way every stream must match its uncontended solo run.
+fn run_preemption(
+    hog_priority: Priority,
+    solo_hog: &[u32],
+    solo_probe: &[u32],
+) -> Value {
+    let server = Server::builder()
+        .engine(EngineKind::FtPruned)
+        .kv_block_size(4)
+        .kv_blocks(32)
+        .precompile(true)
+        .start()
+        .expect("preemption server");
+    let make = |text: String, max_new: usize| Request {
+        id: 0, // assigned server-side
+        text,
+        max_new_tokens: max_new,
+        arrival: Duration::ZERO,
+        reference_summary: None,
+    };
+    let hogs: Vec<_> = (0..2)
+        .map(|_| {
+            server
+                .submit_request(
+                    make(hog_text(), HOG_MAX_NEW),
+                    SubmitOptions { deadline: None, priority: hog_priority },
+                )
+                .expect("submit hog")
+        })
+        .collect();
+    // both hogs must be live (pool exactly full) before the probe
+    for h in &hogs {
+        loop {
+            match h.recv_timeout(Duration::from_secs(60)) {
+                Some(ServingEvent::Token { .. }) => break,
+                Some(ServingEvent::Done(r)) => {
+                    panic!("hog finished before the probe arrived: {r:?}")
+                }
+                None => panic!("hog stream stalled"),
+            }
+        }
+    }
+    let probe = server
+        .submit(probe_text(), PROBE_MAX_NEW)
+        .expect("submit probe");
+    let probe_resp = probe.wait().expect("probe terminal");
+    let hog_resps: Vec<_> = hogs
+        .into_iter()
+        .map(|h| h.wait().expect("hog terminal"))
+        .collect();
+    drop(server);
+    for r in hog_resps.iter().chain(std::iter::once(&probe_resp)) {
+        assert!(r.error.is_none(), "preemption-arm request failed: {r:?}");
+    }
+    let preemptions: u64 = hog_resps
+        .iter()
+        .chain(std::iter::once(&probe_resp))
+        .map(|r| r.preemptions as u64)
+        .sum();
+    let streams_match = probe_resp.summary_ids == solo_probe
+        && hog_resps.iter().all(|r| r.summary_ids == solo_hog);
+    let mode = match hog_priority {
+        Priority::Batch => "preempt",
+        Priority::Interactive => "block",
+    };
+    let probe_ttft_ms = probe_resp
+        .ttft
+        .map(|t| t.as_secs_f64() * 1e3)
+        .unwrap_or(-1.0);
+    eprintln!(
+        "  sched[{mode}]: {preemptions} preemption(s), probe ttft \
+         {probe_ttft_ms:.2}ms, streams match solo: {streams_match}"
+    );
+    Value::obj(vec![
+        ("mode", Value::str(mode)),
+        ("hog_priority", Value::str(hog_priority.label())),
+        ("preemptions", Value::num(preemptions as f64)),
+        ("probe_ttft_ms", Value::num(probe_ttft_ms)),
+        (
+            "probe_latency_ms",
+            Value::num(probe_resp.latency.as_secs_f64() * 1e3),
+        ),
+        ("replies", Value::num(1.0 + hog_resps.len() as f64)),
+        (
+            "streams_match_solo",
+            Value::num(streams_match as u64 as f64),
+        ),
+    ])
+}
+
 fn run_one(
     engine: EngineKind,
     pipelined: bool,
@@ -379,12 +584,32 @@ fn main() {
         run_kv_admission(false, kv_n, kv_max_new),
     ];
 
+    // --- scheduling/QoS: chunked prefill + preemption (schema 5) -------
+    // same fixed floor as the kv section so admissions actually happen
+    let mono = run_sched_chunk(0, kv_n, kv_max_new);
+    let chunked = run_sched_chunk(16, kv_n, kv_max_new);
+    let streams_equal = sorted_streams(&mono) == sorted_streams(&chunked);
+    let chunked_prefill = vec![
+        sched_row("monolithic", 0, &mono, streams_equal),
+        sched_row("chunked", 16, &chunked, streams_equal),
+    ];
+    let solo_hog = solo_stream(&hog_text(), HOG_MAX_NEW);
+    let solo_probe = solo_stream(&probe_text(), PROBE_MAX_NEW);
+    let preemption = vec![
+        run_preemption(Priority::Batch, &solo_hog, &solo_probe),
+        run_preemption(Priority::Interactive, &solo_hog, &solo_probe),
+    ];
+    let scheduling = Value::obj(vec![
+        ("chunked_prefill", Value::Array(chunked_prefill)),
+        ("preemption", Value::Array(preemption)),
+    ]);
+
     let created = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let doc = Value::obj(vec![
-        ("schema", Value::num(4.0)),
+        ("schema", Value::num(5.0)),
         ("created_unix", Value::num(created as f64)),
         ("preset", Value::str("synthetic-reference-default")),
         ("requests", Value::num(n as f64)),
@@ -394,13 +619,14 @@ fn main() {
         ("workers_sweep", Value::Array(sweep)),
         ("serving", Value::Array(serving)),
         ("kv_admission", Value::Array(kv_admission)),
+        ("scheduling", scheduling),
     ]);
     std::fs::write(&out, doc.to_json()).expect("write snapshot");
 
     // --- self-validation (this is the CI smoke assertion) --------------
     let text = std::fs::read_to_string(&out).expect("re-read snapshot");
     let v = json::parse(&text).expect("snapshot must be valid JSON");
-    assert_eq!(v.get("schema").as_usize(), Some(4), "schema");
+    assert_eq!(v.get("schema").as_usize(), Some(5), "schema");
     let ladder = v.get("ladder").as_array().expect("ladder array");
     assert_eq!(ladder.len(), 8, "4 ladder rows x {{fp32, fp16}}");
     for dtype in ["fp32", "fp16"] {
@@ -535,6 +761,77 @@ fn main() {
         "paged admission cost ({}) must be strictly below legacy ({})",
         field(paged, "admission_prefill_tokens"),
         field(legacy, "admission_prefill_tokens"),
+    );
+
+    // THE schema-5 gates.  (1) Chunked admission prefill must bound
+    // the per-iteration latency tail: its p99 lands strictly below
+    // monolithic on the same trace, without changing a single token.
+    let sched = v.get("scheduling");
+    let chunk_rows = sched
+        .get("chunked_prefill")
+        .as_array()
+        .expect("chunked_prefill array");
+    assert_eq!(chunk_rows.len(), 2, "monolithic + chunked arms");
+    let mono = chunk_rows
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("monolithic"))
+        .expect("monolithic row");
+    let chunked = chunk_rows
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("chunked"))
+        .expect("chunked row");
+    for row in [mono, chunked] {
+        assert!(
+            field(row, "steps_observed") > 0.0,
+            "no step-latency samples: {}",
+            row.to_json()
+        );
+        assert_eq!(
+            field(row, "streams_match_monolithic"),
+            1.0,
+            "chunked prefill changed the token streams"
+        );
+        assert!(field(row, "generated_tokens") > 0.0);
+    }
+    assert!(
+        field(chunked, "step_p99_ms") < field(mono, "step_p99_ms"),
+        "chunked p99 step latency ({:.3}ms) must be strictly below \
+         monolithic ({:.3}ms)",
+        field(chunked, "step_p99_ms"),
+        field(mono, "step_p99_ms"),
+    );
+    // (2) Under a deliberately full pool, an interactive arrival must
+    // be admitted by evicting a batch row — and the evicted/resumed
+    // streams must be identical to uncontended solo runs.  The control
+    // arm (all-interactive hogs) must see ZERO preemptions: equal
+    // priority never evicts.
+    let arms = sched.get("preemption").as_array().expect("preemption arms");
+    assert_eq!(arms.len(), 2, "preempt + block arms");
+    let preempt = arms
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("preempt"))
+        .expect("preempt row");
+    let block = arms
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("block"))
+        .expect("block row");
+    for row in [preempt, block] {
+        assert_eq!(field(row, "replies"), 3.0, "a reply went missing");
+        assert_eq!(
+            field(row, "streams_match_solo"),
+            1.0,
+            "scheduling changed a token stream: {}",
+            row.to_json()
+        );
+    }
+    assert!(
+        field(preempt, "preemptions") >= 1.0,
+        "interactive probe was not admitted via preemption"
+    );
+    assert_eq!(
+        field(block, "preemptions"),
+        0.0,
+        "equal-priority rows must never preempt each other"
     );
     println!("bench snapshot OK: {out}");
 }

@@ -156,11 +156,20 @@ pub struct GenConfig {
     pub max_new_tokens: usize,
     /// Use the fused multi-step decode executable when sampling is greedy.
     pub use_multi_step: bool,
+    /// Chunked prefill budget for the paged decode path
+    /// (`--prefill-chunk`): admission prefill runs at most this many
+    /// prompt tokens per decode step, interleaved with live decoding,
+    /// so one long prompt cannot stall every running request for a
+    /// whole monolithic prefill.  0 (the default) = monolithic
+    /// prefill at admission.  Greedy outputs are bitwise-identical
+    /// either way — chunking changes *when* prompt positions run, not
+    /// what they compute.
+    pub prefill_chunk: usize,
 }
 
 impl Default for GenConfig {
     fn default() -> Self {
-        Self { max_new_tokens: 16, use_multi_step: true }
+        Self { max_new_tokens: 16, use_multi_step: true, prefill_chunk: 0 }
     }
 }
 
@@ -305,6 +314,9 @@ impl ServingConfig {
             if let Some(x) = g.get("use_multi_step").as_bool() {
                 cfg.gen.use_multi_step = x;
             }
+            if let Some(n) = g.get("prefill_chunk").as_usize() {
+                cfg.gen.prefill_chunk = n;
+            }
         }
         let kv = v.get("kv");
         if !kv.is_null() {
@@ -382,6 +394,10 @@ impl ServingConfig {
                         Value::num(self.gen.max_new_tokens as f64),
                     ),
                     ("use_multi_step", Value::Bool(self.gen.use_multi_step)),
+                    (
+                        "prefill_chunk",
+                        Value::num(self.gen.prefill_chunk as f64),
+                    ),
                 ]),
             ),
             (
@@ -523,6 +539,22 @@ mod tests {
         let mut bad = ServingConfig::default();
         bad.kv.block_size = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn prefill_chunk_defaults_and_roundtrips() {
+        let c = ServingConfig::default();
+        assert_eq!(c.gen.prefill_chunk, 0, "monolithic prefill by default");
+        let mut c = ServingConfig::default();
+        c.gen.prefill_chunk = 32;
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.gen.prefill_chunk, 32);
+        let c = ServingConfig::from_json(
+            r#"{"gen": {"prefill_chunk": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.gen.prefill_chunk, 8);
+        assert_eq!(c.gen.max_new_tokens, 16, "other gen keys stay default");
     }
 
     #[test]

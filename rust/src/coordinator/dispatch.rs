@@ -36,22 +36,44 @@
 //!   check is bucket feasibility instead: some compiled (batch, seq)
 //!   bucket covers the grown batch.
 //!
-//! Candidates are considered strictly in arrival (FIFO) order; the
-//! first inadmissible candidate stops the round, so admission never
-//! reorders requests past each other (no starvation).  A candidate that
-//! could not be admitted stays in the worker's small carry buffer and
-//! seeds that worker's next session.  Greedy token streams are
-//! unaffected by admission timing — rows are independent, and both the
-//! paged new-row prefill and the legacy batch-wide re-prefill
-//! reproduce decode logits exactly (property-tested).
-//! `cfg.continuous = false` disables between-step admission (static
-//! batching, the pre-redesign behavior) for A/B benches.
+//! ## Scheduling order, priorities, preemption
+//!
+//! Candidates wait in an ordered [`PendingQueue`]: **(priority desc,
+//! deadline asc — EDF, arrival asc)**.  All-default workloads (every
+//! request `Interactive`, no deadlines) drain exactly FIFO, the
+//! pre-priority behavior.  Both the seed loop and between-step
+//! admission scan that order with SKIP semantics — a candidate that
+//! does not fit right now is stepped over, not a round-stopper, so a
+//! small request never starves behind a large head the pool cannot
+//! place yet (skipped candidates keep their queue rank).
+//!
+//! Under paged-KV capacity pressure, an arrival may **preempt** live
+//! rows of *strictly lower* priority: the victim is retired with
+//! [`FinishReason::Preempted`] (its blocks return through the normal
+//! retirement path), its tokens-so-far are folded into its prompt, and
+//! it is requeued to resume via one admission prefill — greedy token
+//! streams are bitwise-identical across evict/resume because the
+//! resumed prefill replays the exact same context.  Equal priorities
+//! never preempt each other, so default workloads never preempt at
+//! all.  Preemption is NOT terminal: the client stream just pauses.
+//!
+//! Greedy token streams are unaffected by admission timing — rows are
+//! independent, and both the paged new-row prefill and the legacy
+//! batch-wide re-prefill reproduce decode logits exactly
+//! (property-tested).  `cfg.continuous = false` disables between-step
+//! admission (static batching, the pre-redesign behavior) for A/B
+//! benches.
 //!
 //! Every request yields EXACTLY ONE terminal event —
 //! [`PoolEvent::Finished`] or [`PoolEvent::Failed`] (engine errors,
 //! cancellation, deadline expiry) — so downstream reply channels never
-//! observe a silent drop.  With `workers == 1` and greedy sampling, pooled output
-//! tokens are identical to the sequential executor's.
+//! observe a silent drop.  The contract survives a worker crash: every
+//! request a worker owns sits in a shared in-flight registry from pull
+//! to terminal event, and [`InferencePool::join`] catches a panicked
+//! worker at join and drains its registry entries into typed
+//! `engine_error` failures instead of propagating the panic.  With
+//! `workers == 1` and greedy sampling, pooled output tokens are
+//! identical to the sequential executor's.
 //!
 //! Shutdown: the pool input disconnects when every
 //! [`InferencePool::input`] clone AND the pool's own handle are
@@ -59,17 +81,18 @@
 //! [`InferencePool::join`] merges the per-worker reports into one
 //! [`PoolReport`].
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use super::batcher::Batch;
 use super::engine_input;
-use super::request::PreparedRequest;
+use super::queue::PendingQueue;
+use super::request::{PreparedRequest, Priority};
 use crate::config::ServingConfig;
 use crate::engine::{
     build_with_kv as build_engine, sampler_for_worker, DecodeSession,
-    Engine, FinishReason,
+    Engine, EngineInput, FinishReason,
 };
 use crate::metrics::{Histogram, Throughput};
 use crate::runtime::kv::KvStats;
@@ -147,6 +170,15 @@ pub struct WorkerReport {
     pub kv_peak_blocks_in_use: u64,
     /// Paged-KV pool size per session (0 = contiguous caches).
     pub kv_total_blocks: u64,
+    /// Live rows this worker evicted to make room for higher-priority
+    /// arrivals (each eviction is one resume-later requeue, not a
+    /// failure).
+    pub preemptions: u64,
+    /// Per-iteration service latency: one decode step PLUS the same
+    /// iteration's admission prefill.  This is the SLO quantity chunked
+    /// prefill bounds — a monolithic admission prefill lands entirely
+    /// inside one iteration, a chunked one is spread across many.
+    pub step_latency: Histogram,
 }
 
 impl WorkerReport {
@@ -169,6 +201,8 @@ impl WorkerReport {
             blocked_on_capacity: Duration::ZERO,
             kv_peak_blocks_in_use: 0,
             kv_total_blocks: 0,
+            preemptions: 0,
+            step_latency: Histogram::new(),
         }
     }
 }
@@ -188,6 +222,8 @@ pub struct KvMetrics {
     pub kv_peak_blocks_in_use: u64,
     /// Per-session pool size (max across workers; 0 = contiguous).
     pub kv_total_blocks: u64,
+    /// Σ priority preemptions (evict + resume-later) across workers.
+    pub preemptions: u64,
 }
 
 /// Per-worker reports plus their merged view.
@@ -216,6 +252,17 @@ impl PoolReport {
         let mut h = Histogram::new();
         for w in &self.workers {
             h.merge(&w.ttft);
+        }
+        h
+    }
+
+    /// Per-iteration (step + same-iteration admission) latency merged
+    /// across workers — p99 of this is the SLO bound chunked prefill
+    /// exists to shrink.
+    pub fn step_latency(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for w in &self.workers {
+            h.merge(&w.step_latency);
         }
         h
     }
@@ -261,6 +308,7 @@ impl PoolReport {
             m.admission_prefill_tokens += w.admission_prefill_tokens;
             m.admitted_mid_session += w.admitted_mid_session;
             m.blocked_on_capacity += w.blocked_on_capacity;
+            m.preemptions += w.preemptions;
             m.kv_peak_blocks_in_use =
                 m.kv_peak_blocks_in_use.max(w.kv_peak_blocks_in_use);
             m.kv_total_blocks = m.kv_total_blocks.max(w.kv_total_blocks);
@@ -269,11 +317,22 @@ impl PoolReport {
     }
 }
 
+/// Requests currently owned by a worker — pulled off the shared queue
+/// but with no terminal event sent yet — keyed by request id and
+/// tagged with the owning worker index.  [`InferencePool::join`]
+/// drains a panicked worker's entries into typed `Failed` events so
+/// the exactly-one-terminal contract survives the crash.
+type InFlight = Arc<Mutex<HashMap<u64, (usize, PreparedRequest)>>>;
+
 /// A pool of step-scheduled inference workers consuming [`Batch`]es
 /// from a shared queue (see module docs).
 pub struct InferencePool {
     input: mpsc::SyncSender<Batch>,
     handles: Vec<std::thread::JoinHandle<WorkerReport>>,
+    /// Failsafe clone of the event stream: `join()` emits terminal
+    /// failures through it for requests a panicked worker abandoned.
+    failsafe: mpsc::SyncSender<PoolEvent>,
+    inflight: InFlight,
 }
 
 impl InferencePool {
@@ -292,19 +351,35 @@ impl InferencePool {
         let rx = Arc::new(Mutex::new(rx));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
+        let inflight: InFlight = Arc::new(Mutex::new(HashMap::new()));
         let mut handles = Vec::with_capacity(n);
         for worker in 0..n {
             let cfg = cfg.clone();
             let rx = rx.clone();
             let out = out.clone();
             let ready_tx = ready_tx.clone();
-            let handle = std::thread::Builder::new()
+            let inflight = inflight.clone();
+            let spawned = std::thread::Builder::new()
                 .name(format!("inference-{worker}"))
-                .spawn(move || worker_main(worker, cfg, rx, out, ready_tx))
-                .expect("spawn inference worker");
-            handles.push(handle);
+                .spawn(move || {
+                    worker_main(worker, cfg, rx, out, ready_tx, inflight)
+                });
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // OS refused the thread: unwind instead of
+                    // panicking — close the queue so the workers that
+                    // DID spawn drain and exit, reap them, and hand
+                    // the caller a typed error
+                    drop(input);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Io(e));
+                }
+            }
         }
-        drop(out);
+        let failsafe = out;
         drop(ready_tx);
 
         // Ready gate: fail fast (typed) if any worker cannot stand up
@@ -334,7 +409,7 @@ impl InferencePool {
             }
             return Err(e);
         }
-        Ok(Self { input, handles })
+        Ok(Self { input, handles, failsafe, inflight })
     }
 
     /// A clonable submission handle.  The pool drains and shuts down
@@ -349,14 +424,53 @@ impl InferencePool {
     }
 
     /// Close the pool's own input handle, wait for the workers to
-    /// drain, and merge their reports.
+    /// drain, and merge their reports.  A panicked worker does NOT
+    /// propagate: its in-flight requests are drained into typed
+    /// `engine_error` failures (exactly-one-terminal survives the
+    /// crash) and it contributes an empty report; surviving workers
+    /// merge normally.
     pub fn join(self) -> PoolReport {
-        let Self { input, handles } = self;
+        let Self { input, handles, failsafe, inflight } = self;
         drop(input);
-        let mut workers: Vec<WorkerReport> = handles
-            .into_iter()
-            .map(|h| h.join().expect("inference worker panicked"))
-            .collect();
+        let mut workers: Vec<WorkerReport> = Vec::with_capacity(handles.len());
+        for (idx, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(r) => workers.push(r),
+                Err(_) => {
+                    // handle order == spawn order, so `idx` is the
+                    // dead worker's index; its report is gone, but the
+                    // requests it owned must still see one terminal
+                    // event each
+                    let mut report = WorkerReport::new(idx);
+                    let dead: Vec<PreparedRequest> = {
+                        let mut g = inflight
+                            .lock()
+                            .unwrap_or_else(PoisonError::into_inner);
+                        let ids: Vec<u64> = g
+                            .iter()
+                            .filter(|(_, (w, _))| *w == idx)
+                            .map(|(id, _)| *id)
+                            .collect();
+                        ids.into_iter()
+                            .filter_map(|id| g.remove(&id).map(|(_, r)| r))
+                            .collect()
+                    };
+                    for r in dead {
+                        // downstream may itself be gone — best effort
+                        let _ = send_failed(
+                            &failsafe,
+                            &mut report,
+                            idx,
+                            &inflight,
+                            r,
+                            "inference worker panicked".into(),
+                            "engine_error",
+                        );
+                    }
+                    workers.push(report);
+                }
+            }
+        }
         workers.sort_by_key(|w| w.worker);
         PoolReport { workers }
     }
@@ -369,26 +483,114 @@ struct RowMeta {
 }
 
 /// Emit a terminal `Failed` event; false when downstream disconnected.
+/// Terminal means the request leaves the crash-recovery registry too.
 fn send_failed(
     out: &mpsc::SyncSender<PoolEvent>,
     report: &mut WorkerReport,
     worker: usize,
+    inflight: &InFlight,
     request: PreparedRequest,
     message: String,
     code: &'static str,
 ) -> bool {
+    inflight
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .remove(&request.id);
     report.failed_requests += 1;
     out.send(PoolEvent::Failed { request, message, code, worker }).is_ok()
 }
 
-/// Drain retired rows out of the session into terminal events; false
-/// when downstream disconnected.
+/// Take ownership of freshly pulled arrivals: register each in the
+/// crash-recovery registry, then rank it into the pending queue.
+fn take_arrivals(
+    pending: &mut PendingQueue,
+    inflight: &InFlight,
+    worker: usize,
+    requests: Vec<PreparedRequest>,
+) {
+    let mut g = inflight.lock().unwrap_or_else(PoisonError::into_inner);
+    for r in requests {
+        g.insert(r.id, (worker, r.clone()));
+        pending.push(r);
+    }
+}
+
+/// Evict live rows of strictly lower priority than `cand_priority`
+/// until `session.can_admit(want)` holds; returns whether admission is
+/// now possible.  Victims go lowest-priority first, youngest
+/// (latest-enqueued) first — the least progress to replay.  Each
+/// eviction surfaces as [`FinishReason::Preempted`] at the next drain,
+/// where it is REQUEUED (never failed), so the victim resumes once
+/// capacity returns.
+///
+/// A feasibility gate runs first: unless evicting EVERY eligible
+/// victim would free enough blocks, nobody is evicted at all — an
+/// oversized candidate must not thrash the pool (evict, still not
+/// fit, watch the victims re-admit, evict again …).
+fn preempt_until_admittable(
+    session: &mut dyn DecodeSession,
+    meta: &HashMap<u64, RowMeta>,
+    cand_priority: Priority,
+    want: &[EngineInput],
+    report: &mut WorkerReport,
+) -> bool {
+    let Some(st) = session.kv_stats() else {
+        return false; // contiguous caches: blocks never come back early
+    };
+    // a live row's block footprint is its full admission reservation
+    // (prompt + decode budget), which requeues preserve
+    let mut victims: Vec<(Priority, Instant, u64, usize)> = meta
+        .values()
+        .filter(|m| m.req.priority < cand_priority)
+        .map(|m| {
+            (
+                m.req.priority,
+                m.req.enqueued,
+                m.req.id,
+                m.req.need_seq().div_ceil(st.block_size),
+            )
+        })
+        .collect();
+    if victims.is_empty() {
+        return false;
+    }
+    let needed: usize = want
+        .iter()
+        .map(|w| {
+            (w.prompt.len() + w.max_new_tokens).div_ceil(st.block_size)
+        })
+        .sum();
+    let reclaimable: usize = victims.iter().map(|v| v.3).sum();
+    if st.free_blocks + reclaimable < needed {
+        return false;
+    }
+    victims.sort_by(|a, b| {
+        a.0.cmp(&b.0).then(b.1.cmp(&a.1)).then(b.2.cmp(&a.2))
+    });
+    for (_, _, id, _) in victims {
+        if !session.retire(id, FinishReason::Preempted) {
+            continue; // already retired this step (EOS / deadline / …)
+        }
+        report.preemptions += 1;
+        if session.can_admit(want) {
+            return true;
+        }
+    }
+    session.can_admit(want)
+}
+
+/// Drain retired rows out of the session into terminal events — or,
+/// for [`FinishReason::Preempted`] rows, back into the pending queue
+/// (preemption is not terminal).  False when downstream disconnected.
 fn drain_finished(
     session: &mut dyn DecodeSession,
     meta: &mut HashMap<u64, RowMeta>,
+    pending: &mut PendingQueue,
     out: &mpsc::SyncSender<PoolEvent>,
     report: &mut WorkerReport,
     worker: usize,
+    inflight: &InFlight,
 ) -> bool {
     // occupancy AFTER the step that retired these rows — what the
     // pool looked like when capacity came back
@@ -398,19 +600,32 @@ fn drain_finished(
         let Some(m) = meta.remove(&id) else { continue };
         let ok = match fin.reason {
             FinishReason::Eos | FinishReason::Length => {
-                let ttft =
-                    m.first_token.map(|t| t.duration_since(m.req.enqueued));
+                let mut req = m.req;
+                // undo the requeue bookkeeping of any preemptions on
+                // the way here: the reply carries the ORIGINAL prompt
+                // and the stitched pre-eviction + post-resume stream
+                let pre = std::mem::take(&mut req.preempted_generated);
+                req.prompt.truncate(req.prompt.len() - pre.len());
+                req.max_new_tokens += pre.len();
+                let mut generated = pre;
+                generated.extend(fin.output.generated);
+                // TTFT anchors on the FIRST emission ever, which may
+                // predate the last eviction
+                let first = req.first_emit.or(m.first_token);
+                let ttft = first.map(|t| t.duration_since(req.enqueued));
                 if let Some(d) = ttft {
                     report.ttft.record(d);
                 }
                 report.retired += 1;
                 report.retired_steps += fin.output.steps as u64;
-                report
-                    .throughput
-                    .record(1, fin.output.generated.len() as u64);
+                report.throughput.record(1, generated.len() as u64);
+                inflight
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .remove(&id);
                 out.send(PoolEvent::Finished {
-                    request: m.req,
-                    generated: fin.output.generated,
+                    request: req,
+                    generated,
                     steps: fin.output.steps,
                     ttft,
                     kv,
@@ -418,10 +633,28 @@ fn drain_finished(
                 })
                 .is_ok()
             }
+            FinishReason::Preempted => {
+                // NOT terminal: fold the progress into the prompt so
+                // the resumed admission prefill replays the identical
+                // context (greedy continuations stay bitwise-equal to
+                // the uninterrupted stream) and rank it back into the
+                // queue.  It keeps its in-flight registry entry — the
+                // request is still this pool's to finish.
+                let mut req = m.req;
+                let done = fin.output.generated.len();
+                req.prompt.extend(fin.output.generated.iter().copied());
+                req.preempted_generated.extend(fin.output.generated);
+                req.max_new_tokens = req.max_new_tokens.saturating_sub(done);
+                req.preemptions += 1;
+                req.first_emit = req.first_emit.or(m.first_token);
+                pending.push(req);
+                true
+            }
             FinishReason::Cancelled => send_failed(
                 out,
                 report,
                 worker,
+                inflight,
                 m.req,
                 "request cancelled by client".into(),
                 "cancelled",
@@ -430,6 +663,7 @@ fn drain_finished(
                 out,
                 report,
                 worker,
+                inflight,
                 m.req,
                 "request deadline expired".into(),
                 "deadline",
@@ -442,12 +676,27 @@ fn drain_finished(
     true
 }
 
+/// Test hook: panic the worker while the hooked request id is live —
+/// exercises the panicked-worker failsafe in [`InferencePool::join`].
+#[cfg(test)]
+static PANIC_ON_REQUEST: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(u64::MAX);
+
+#[cfg(test)]
+fn panic_if_hooked(meta: &HashMap<u64, RowMeta>) {
+    let id = PANIC_ON_REQUEST.load(std::sync::atomic::Ordering::Relaxed);
+    if meta.contains_key(&id) {
+        panic!("test hook: worker panicked with request {id} in flight");
+    }
+}
+
 fn worker_main(
     worker: usize,
     cfg: ServingConfig,
     rx: Arc<Mutex<mpsc::Receiver<Batch>>>,
     out: mpsc::SyncSender<PoolEvent>,
     ready_tx: mpsc::Sender<Result<()>>,
+    inflight: InFlight,
 ) -> WorkerReport {
     let mut report = WorkerReport::new(worker);
 
@@ -483,8 +732,9 @@ fn worker_main(
     // (None = contiguous caches; bucket selection is the only bound).
     let kv_geom = engine.kv_geometry();
     // Carry buffer: arrivals pulled off the queue but not yet admitted
-    // (bounded by roughly one batch — we only pull when slots are free).
-    let mut pending: VecDeque<PreparedRequest> = VecDeque::new();
+    // (bounded by roughly one batch — we only pull when slots are
+    // free), kept in (priority, deadline, arrival) order.
+    let mut pending = PendingQueue::new();
 
     'pool: loop {
         // ---- seed the next session from ONE queued batch -------------
@@ -493,9 +743,13 @@ fn worker_main(
         // worker's between-step admission on the lock.  Poll + sleep
         // instead (1ms idle granularity, lock held only for the pop).
         if pending.is_empty() {
-            let next = { rx.lock().unwrap().try_recv() };
+            let next = {
+                rx.lock().unwrap_or_else(PoisonError::into_inner).try_recv()
+            };
             match next {
-                Ok(b) => pending.extend(b.requests),
+                Ok(b) => {
+                    take_arrivals(&mut pending, &inflight, worker, b.requests)
+                }
                 Err(mpsc::TryRecvError::Empty) => {
                     std::thread::sleep(Duration::from_millis(1));
                     continue;
@@ -508,36 +762,36 @@ fn worker_main(
         let mut seed_prompt = 0usize; // longest prompt so far
         let mut seed_new = 0usize; // largest generation budget so far
         let mut seed_blocks = 0usize; // paged-KV blocks reserved so far
-        while let Some(r) = pending.front() {
+        let mut scan = 0; // skip-scan cursor over the ordered queue
+        while scan < pending.len() {
+            let r = pending.get(scan);
             if !seed.is_empty() {
                 if seed.len() >= policy.max_batch {
                     break;
                 }
-                if policy.max_batch_tokens > 0
-                    && seed_tokens + r.need_seq() > policy.max_batch_tokens
-                {
-                    break;
-                }
+                let over_tokens = policy.max_batch_tokens > 0
+                    && seed_tokens + r.need_seq() > policy.max_batch_tokens;
                 // joint bucket feasibility: the session's conservative
-                // need is max(prompt) + max(max_new); stop before one
-                // more member pushes it past every compiled bucket —
-                // mixed carry-over requests must not fail each other
-                if seed_prompt.max(r.prompt.len())
+                // need is max(prompt) + max(max_new) — mixed carry-over
+                // requests must not fail each other.  Paged-KV: the
+                // fresh session's pool must hold every member's prompt
+                // + decode reservation.
+                let over_bucket = seed_prompt.max(r.prompt.len())
                     + seed_new.max(r.max_new_tokens)
-                    > engine.max_seq()
-                {
-                    break;
-                }
-                // paged-KV capacity: the fresh session's pool must hold
-                // every member's prompt + decode reservation; the rest
-                // of the queue waits for between-step admission
-                if let Some((total, bs)) = kv_geom {
-                    if seed_blocks + r.need_seq().div_ceil(bs) > total {
-                        break;
-                    }
+                    > engine.max_seq();
+                let over_kv = kv_geom.is_some_and(|(total, bs)| {
+                    seed_blocks + r.need_seq().div_ceil(bs) > total
+                });
+                if over_tokens || over_bucket || over_kv {
+                    // skip, don't stop: a later (smaller) candidate may
+                    // still fit this seed.  The skipped one keeps its
+                    // rank and waits for between-step admission or the
+                    // next session.
+                    scan += 1;
+                    continue;
                 }
             }
-            let r = pending.pop_front().unwrap();
+            let r = pending.remove(scan);
             // worker bookkeeping is keyed by request id; a duplicate
             // would shadow its twin's terminal event, so reject it
             // (server-side ids are unique — this guards direct users)
@@ -546,6 +800,7 @@ fn worker_main(
                     &out,
                     &mut report,
                     worker,
+                    &inflight,
                     r,
                     "duplicate request id in flight".into(),
                     "bad_request",
@@ -573,6 +828,7 @@ fn worker_main(
                         &out,
                         &mut report,
                         worker,
+                        &inflight,
                         r,
                         msg.clone(),
                         code,
@@ -605,6 +861,8 @@ fn worker_main(
 
         // ---- the step loop -------------------------------------------
         loop {
+            #[cfg(test)]
+            panic_if_hooked(&meta);
             // deadline / cancellation checks at the step boundary
             let now = Instant::now();
             for (id, m) in meta.iter() {
@@ -617,9 +875,11 @@ fn worker_main(
             if !drain_finished(
                 session.as_mut(),
                 &mut meta,
+                &mut pending,
                 &out,
                 &mut report,
                 worker,
+                &inflight,
             ) {
                 break 'pool;
             }
@@ -640,6 +900,7 @@ fn worker_main(
                             &out,
                             &mut report,
                             worker,
+                            &inflight,
                             m.req,
                             msg.clone(),
                             code,
@@ -650,8 +911,16 @@ fn worker_main(
                     break;
                 }
             };
-            report.busy += t.elapsed();
+            let step_cost = t.elapsed();
+            report.busy += step_cost;
             report.steps += 1;
+            // chunked prefill spends its prompt budget INSIDE step() —
+            // fold freshly prefilled tokens into the admission counter
+            // here as well as after admit()
+            let pft = session.prefill_tokens();
+            report.admission_prefill_tokens +=
+                pft.saturating_sub(session_prefill);
+            session_prefill = pft;
             let now = Instant::now();
             for ev in events {
                 if ev.tokens.is_empty() {
@@ -681,18 +950,22 @@ fn worker_main(
             if !drain_finished(
                 session.as_mut(),
                 &mut meta,
+                &mut pending,
                 &out,
                 &mut report,
                 worker,
+                &inflight,
             ) {
                 break 'pool;
             }
             if session.active() == 0 {
+                report.step_latency.record(step_cost);
                 break;
             }
 
             // ---- admission between steps (continuous batching) -------
             if !cfg.continuous {
+                report.step_latency.record(step_cost);
                 continue;
             }
             let mut accepted: Vec<PreparedRequest> = Vec::new();
@@ -700,35 +973,55 @@ fn worker_main(
             let mut capacity_blocked = false;
             let mut live_tokens: usize =
                 meta.values().map(|m| m.req.need_seq()).sum();
+            let mut scan = 0; // skip-scan cursor over the ordered queue
             loop {
                 if session.active() + accepted.len() >= policy.max_batch {
                     break;
                 }
-                if pending.is_empty() {
-                    // pull fresh arrivals only while slots are free
-                    let next = { rx.lock().unwrap().try_recv() };
+                if scan >= pending.len() {
+                    // every queued candidate was considered — pull
+                    // fresh arrivals while slots are free, rescanning
+                    // from the top (new arrivals may outrank skipped
+                    // ones)
+                    let next = {
+                        rx.lock()
+                            .unwrap_or_else(PoisonError::into_inner)
+                            .try_recv()
+                    };
                     match next {
-                        Ok(b) => pending.extend(b.requests),
+                        Ok(b) => {
+                            take_arrivals(
+                                &mut pending,
+                                &inflight,
+                                worker,
+                                b.requests,
+                            );
+                            scan = 0;
+                            continue;
+                        }
                         Err(_) => break,
                     }
-                    continue;
                 }
-                let cand = pending.front().unwrap();
+                let cand = pending.get(scan);
                 if policy.max_batch_tokens > 0
                     && live_tokens + cand.need_seq() > policy.max_batch_tokens
                 {
-                    break; // FIFO: an inadmissible head stops the round
+                    // skip, don't stop: a smaller lower-ranked
+                    // candidate may still fit this round
+                    scan += 1;
+                    continue;
                 }
                 // duplicate of an in-flight id: reject it (see the
                 // seed loop) rather than shadow the live request
                 if meta.contains_key(&cand.id)
                     || accepted.iter().any(|a| a.id == cand.id)
                 {
-                    let dup = pending.pop_front().unwrap();
+                    let dup = pending.remove(scan);
                     if !send_failed(
                         &out,
                         &mut report,
                         worker,
+                        &inflight,
                         dup,
                         "duplicate request id in flight".into(),
                         "bad_request",
@@ -739,7 +1032,6 @@ fn worker_main(
                 }
                 accepted_inputs.push(engine_input(cand));
                 if !session.can_admit(&accepted_inputs) {
-                    accepted_inputs.pop();
                     // tell paged-capacity blocking (transient: the
                     // candidate waits for retirements to free blocks;
                     // metered as blocked_on_capacity) apart from
@@ -754,6 +1046,7 @@ fn worker_main(
                         if cand.need_seq() > engine.max_seq()
                             || need > st.total_blocks
                         {
+                            accepted_inputs.pop();
                             // message built before the pop ends the
                             // candidate borrow
                             let msg = format!(
@@ -766,11 +1059,12 @@ fn worker_main(
                                 engine.max_seq(),
                                 st.total_blocks
                             );
-                            let bad = pending.pop_front().unwrap();
+                            let bad = pending.remove(scan);
                             if !send_failed(
                                 &out,
                                 &mut report,
                                 worker,
+                                &inflight,
                                 bad,
                                 msg,
                                 "bad_request",
@@ -779,13 +1073,36 @@ fn worker_main(
                             }
                             continue;
                         }
-                        if st.free_blocks < need {
-                            capacity_blocked = true;
+                        // transient KV shortage: a higher-priority
+                        // candidate may evict strictly-lower-priority
+                        // live rows instead of waiting behind them
+                        if !preempt_until_admittable(
+                            session.as_mut(),
+                            &meta,
+                            cand.priority,
+                            &accepted_inputs,
+                            &mut report,
+                        ) {
+                            accepted_inputs.pop();
+                            let free = session
+                                .kv_stats()
+                                .map_or(0, |s| s.free_blocks);
+                            if free < need {
+                                capacity_blocked = true;
+                            }
+                            scan += 1;
+                            continue;
                         }
+                        // fall through: the victims' blocks made room
+                    } else {
+                        // contiguous caches: bucket infeasibility —
+                        // skip and let a smaller candidate try
+                        accepted_inputs.pop();
+                        scan += 1;
+                        continue;
                     }
-                    break;
                 }
-                let cand = pending.pop_front().unwrap();
+                let cand = pending.remove(scan);
                 live_tokens += cand.need_seq();
                 accepted.push(cand);
             }
@@ -801,12 +1118,19 @@ fn worker_main(
                 report.blocked_on_capacity += t0.elapsed();
             }
             if accepted.is_empty() {
+                report.step_latency.record(step_cost);
                 continue;
             }
             let t = Instant::now();
             match session.admit(&accepted_inputs) {
                 Ok(()) => {
-                    report.busy += t.elapsed(); // admission prefill cost
+                    // admission prefill cost: with monolithic prefill
+                    // it all lands in THIS iteration's latency; with
+                    // chunked prefill admit() only allocates tables and
+                    // the prompt cost spreads over later steps
+                    let admit_cost = t.elapsed();
+                    report.busy += admit_cost;
+                    report.step_latency.record(step_cost + admit_cost);
                     report.admitted += accepted.len() as u64;
                     report.admitted_mid_session += accepted.len() as u64;
                     let pft = session.prefill_tokens();
@@ -828,6 +1152,7 @@ fn worker_main(
                 Err(e) => {
                     // admission failure kills the session (contract):
                     // fail the live rows AND the candidates
+                    report.step_latency.record(step_cost + t.elapsed());
                     let (msg, code) = (e.to_string(), e.code());
                     for r in accepted
                         .into_iter()
@@ -837,6 +1162,7 @@ fn worker_main(
                             &out,
                             &mut report,
                             worker,
+                            &inflight,
                             r,
                             msg.clone(),
                             code,
@@ -1161,6 +1487,277 @@ mod tests {
             PoolEvent::Failed { request, code: "deadline", .. }
                 if request.id == 9
         )));
+    }
+
+    /// Greedy reference stream: the request served alone in a roomy
+    /// pool (rows are independent, so every scheduling interleaving
+    /// must reproduce exactly this).
+    fn solo_generated(id: u64, max_new: usize) -> Vec<u32> {
+        let mut cfg = small_cfg(1);
+        cfg.gen.max_new_tokens = max_new;
+        let (out_tx, out_rx) = mpsc::sync_channel(4096);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        let mut b = batch_of(&[id]);
+        b.requests[0].max_new_tokens = max_new;
+        input.send(b).unwrap();
+        drop(input);
+        pool.join();
+        let events = events.join().unwrap();
+        events
+            .into_iter()
+            .find_map(|e| match e {
+                PoolEvent::Finished { generated, .. } => Some(generated),
+                _ => None,
+            })
+            .expect("solo run lost its request")
+    }
+
+    #[test]
+    fn worker_panic_fails_inflight_requests_typed() {
+        // A worker that panics mid-decode must not take its in-flight
+        // requests down silently: join() catches the panic and emits a
+        // typed engine_error terminal for each owned request.
+        const HOOK: u64 = 0xDEAD_BEEF_u64;
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let pool = InferencePool::start(&small_cfg(1), out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        PANIC_ON_REQUEST
+            .store(HOOK, std::sync::atomic::Ordering::Relaxed);
+        input.send(batch_of(&[HOOK])).unwrap();
+        drop(input);
+        let report = pool.join();
+        PANIC_ON_REQUEST
+            .store(u64::MAX, std::sync::atomic::Ordering::Relaxed);
+        let events = events.join().unwrap();
+        let failed: Vec<_> = events
+            .iter()
+            .filter_map(|e| match e {
+                PoolEvent::Failed { request, code, .. } => {
+                    Some((request.id, *code))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(failed, vec![(HOOK, "engine_error")]);
+        assert!(finished_ids(&events).is_empty());
+        assert_eq!(report.workers.len(), 1, "dead worker still reported");
+        assert_eq!(report.workers[0].failed_requests, 1);
+    }
+
+    #[test]
+    fn interactive_overtakes_queued_batch_head() {
+        // One-row sessions: the queued Interactive request must be
+        // served before the Batch request that arrived first.
+        let mut cfg = small_cfg(1);
+        cfg.batch.max_batch = 1;
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        let mut b = batch_of(&[1, 2]);
+        b.requests[0].priority = Priority::Batch;
+        input.send(b).unwrap();
+        drop(input);
+        pool.join();
+        let events = events.join().unwrap();
+        let order: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                PoolEvent::Finished { request, .. } => Some(request.id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(order, vec![2, 1], "interactive must run first");
+    }
+
+    #[test]
+    fn mixed_priority_burst_exactly_one_terminal_each() {
+        // Bursty overload on a starved pool with mixed priorities and
+        // deadlines: every request still gets EXACTLY one terminal
+        // event, and nothing fails (deadlines are generous).
+        let mut cfg = small_cfg(1);
+        cfg.gen.max_new_tokens = 6;
+        cfg.kv.block_size = 4;
+        cfg.kv.blocks = 8;
+        let (out_tx, out_rx) = mpsc::sync_channel(4096);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        let ids: Vec<u64> = (0..24).collect();
+        let mut b = batch_of(&ids);
+        for (i, r) in b.requests.iter_mut().enumerate() {
+            r.max_new_tokens = 6;
+            if i % 3 == 0 {
+                r.priority = Priority::Batch;
+            }
+            if i % 5 == 0 {
+                r.deadline =
+                    Some(Instant::now() + Duration::from_secs(3600));
+            }
+        }
+        input.send(b).unwrap();
+        drop(input);
+        pool.join();
+        let events = events.join().unwrap();
+        let mut terminals: HashMap<u64, usize> = HashMap::new();
+        for e in &events {
+            let id = match e {
+                PoolEvent::Finished { request, .. } => request.id,
+                PoolEvent::Failed { request, .. } => request.id,
+                PoolEvent::Tokens { .. } => continue,
+            };
+            *terminals.entry(id).or_insert(0) += 1;
+        }
+        assert_eq!(terminals.len(), 24, "requests lost: {terminals:?}");
+        assert!(
+            terminals.values().all(|&c| c == 1),
+            "duplicate terminals: {terminals:?}"
+        );
+        assert!(
+            events.iter().all(|e| !matches!(e, PoolEvent::Failed { .. })),
+            "healthy overload must queue/preempt, never fail"
+        );
+    }
+
+    #[test]
+    fn interactive_preempts_batch_and_streams_are_identical() {
+        // Two Batch-priority hogs reserve the whole block pool; an
+        // Interactive probe arriving mid-decode cannot fit, so the
+        // scheduler must evict a hog (Preempted -> requeue), admit the
+        // probe, and resume the hog when blocks free up.  Greedy
+        // streams must be bitwise-identical to uninterrupted solo runs
+        // for every participant.
+        let mut cfg = small_cfg(1);
+        cfg.gen.max_new_tokens = 64;
+        cfg.kv.block_size = 4;
+        cfg.kv.blocks = 34; // 2 hogs x ceil((3+64)/4)=17 -> pool full
+        let (out_tx, out_rx) = mpsc::sync_channel(4096);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let mut hogs = batch_of(&[1, 2]);
+        for r in &mut hogs.requests {
+            r.max_new_tokens = 64;
+            r.priority = Priority::Batch;
+        }
+        input.send(hogs).unwrap();
+        // wait until the hogs actually stream, so the probe can only
+        // enter through between-step admission (and thus preemption)
+        let mut events: Vec<PoolEvent> = Vec::new();
+        while !events
+            .iter()
+            .any(|e| matches!(e, PoolEvent::Tokens { .. }))
+        {
+            events.push(out_rx.recv().expect("pool died before streaming"));
+        }
+        let mut probe = batch_of(&[3]);
+        probe.requests[0].max_new_tokens = 8; // Interactive by default
+        input.send(probe).unwrap();
+        drop(input);
+        let report = pool.join();
+        events.extend(out_rx.try_iter());
+        assert_eq!(finished_ids(&events), vec![1, 2, 3]);
+        assert!(
+            report.kv_metrics().preemptions >= 1,
+            "full pool + interactive arrival must preempt"
+        );
+        let mut preempted_replies = 0u32;
+        for ev in &events {
+            if let PoolEvent::Finished { request, generated, .. } = ev {
+                let max_new = if request.id == 3 { 8 } else { 64 };
+                assert_eq!(
+                    generated,
+                    &solo_generated(request.id, max_new),
+                    "request {} diverged across evict/resume",
+                    request.id
+                );
+                // the reply carries the ORIGINAL request shape, not
+                // the internal resume shape
+                assert_eq!(request.prompt.len(), 3);
+                assert_eq!(request.max_new_tokens, max_new);
+                preempted_replies += request.preemptions;
+            }
+        }
+        assert!(
+            preempted_replies >= 1,
+            "no Finished reply recorded its preemption count"
+        );
+        // the live stream (pre-eviction + post-resume) must equal the
+        // stitched summary, in order, for every request
+        for id in [1u64, 2, 3] {
+            let streamed: Vec<u32> = events
+                .iter()
+                .filter_map(|e| match e {
+                    PoolEvent::Tokens { id: i, tokens, .. } if *i == id => {
+                        Some(tokens.clone())
+                    }
+                    _ => None,
+                })
+                .flatten()
+                .collect();
+            let generated = events
+                .iter()
+                .find_map(|e| match e {
+                    PoolEvent::Finished { request, generated, .. }
+                        if request.id == id =>
+                    {
+                        Some(generated.clone())
+                    }
+                    _ => None,
+                })
+                .unwrap();
+            assert_eq!(streamed, generated, "stream mismatch for {id}");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_tokens() {
+        // Chunk sizes that split the 22-token prompts unevenly must
+        // all produce bitwise-identical greedy streams: a chunked
+        // continuation attends over exactly the slots the monolithic
+        // prefill would.
+        let run = |chunk: usize| -> Vec<(u64, Vec<u32>)> {
+            let mut cfg = small_cfg(1);
+            cfg.gen.max_new_tokens = 6;
+            cfg.gen.prefill_chunk = chunk;
+            let (out_tx, out_rx) = mpsc::sync_channel(1024);
+            let pool = InferencePool::start(&cfg, out_tx).unwrap();
+            let input = pool.input();
+            let events = collector(out_rx);
+            let mut b = Batch { requests: Vec::new(), seq_bucket: 32 };
+            for id in 0..4u64 {
+                let mut prompt = vec![special::BOS];
+                for k in 0..20u64 {
+                    prompt.push(
+                        special::FIRST_WORD + ((id * 7 + k) % 40) as u32,
+                    );
+                }
+                prompt.push(special::SEP);
+                b.requests.push(PreparedRequest::new(id, prompt, 6));
+            }
+            input.send(b).unwrap();
+            drop(input);
+            pool.join();
+            let events = events.join().unwrap();
+            let mut outs: Vec<(u64, Vec<u32>)> = events
+                .into_iter()
+                .filter_map(|e| match e {
+                    PoolEvent::Finished { request, generated, .. } => {
+                        Some((request.id, generated))
+                    }
+                    _ => None,
+                })
+                .collect();
+            outs.sort_by_key(|(id, _)| *id);
+            outs
+        };
+        let mono = run(0);
+        assert_eq!(mono.len(), 4, "monolithic run lost requests");
+        for chunk in [1usize, 4, 7, 64] {
+            assert_eq!(run(chunk), mono, "chunk={chunk} diverged");
+        }
     }
 
     #[cfg(not(feature = "pjrt"))]

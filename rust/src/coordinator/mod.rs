@@ -6,13 +6,14 @@
 
 mod batcher;
 pub mod dispatch;
+mod queue;
 pub mod request;
 
 pub use batcher::{Batch, DynamicBatcher};
 pub use dispatch::{
     InferencePool, KvMetrics, PoolEvent, PoolReport, WorkerReport,
 };
-pub use request::{PreparedRequest, ServingResponse, StageTimes};
+pub use request::{Priority, PreparedRequest, ServingResponse, StageTimes};
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,187 @@
+//! The worker's pending queue, ordered for SLO scheduling.
+//!
+//! Replaces the strict-FIFO carry buffer: entries are kept sorted by
+//! **(priority desc, deadline asc, arrival asc)** — `Interactive`
+//! outranks `Batch`, within a class the earliest deadline goes first
+//! (EDF; deadline-free requests sort after deadline-bearing ones), and
+//! arrival order breaks the remaining ties, so an all-default workload
+//! still drains exactly FIFO.  The scheduler scans this order with
+//! skip-semantics (an unadmittable candidate is stepped over, not a
+//! round-stopper), which is what stops small interactive requests from
+//! starving behind a large batch head the pool cannot place yet.
+
+use std::cmp::Ordering;
+use std::time::Instant;
+
+use super::request::PreparedRequest;
+
+pub(crate) struct PendingQueue {
+    entries: Vec<Entry>,
+    next_seq: u64,
+}
+
+struct Entry {
+    req: PreparedRequest,
+    /// Insertion counter: the final tiebreak, so `enqueued` collisions
+    /// (same-batch arrivals can share an `Instant`) stay stable.
+    seq: u64,
+}
+
+/// Scheduling order: most-urgent first.
+fn cmp(a: &Entry, b: &Entry) -> Ordering {
+    b.req
+        .priority
+        .cmp(&a.req.priority)
+        .then_with(|| cmp_deadline(a.req.deadline, b.req.deadline))
+        .then_with(|| a.req.enqueued.cmp(&b.req.enqueued))
+        .then_with(|| a.seq.cmp(&b.seq))
+}
+
+/// Earliest deadline first; no deadline sorts last.
+fn cmp_deadline(a: Option<Instant>, b: Option<Instant>) -> Ordering {
+    match (a, b) {
+        (Some(x), Some(y)) => x.cmp(&y),
+        (Some(_), None) => Ordering::Less,
+        (None, Some(_)) => Ordering::Greater,
+        (None, None) => Ordering::Equal,
+    }
+}
+
+impl PendingQueue {
+    pub(crate) fn new() -> Self {
+        Self { entries: Vec::new(), next_seq: 0 }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert in scheduling order.  A requeued (preempted) request
+    /// keeps its original `enqueued` stamp, so it re-sorts ahead of
+    /// everything that arrived after it — resumption is not a trip to
+    /// the back of the line.
+    pub(crate) fn push(&mut self, req: PreparedRequest) {
+        let e = Entry { req, seq: self.next_seq };
+        self.next_seq += 1;
+        let at = self
+            .entries
+            .partition_point(|x| cmp(x, &e) != Ordering::Greater);
+        self.entries.insert(at, e);
+    }
+
+    /// The candidate at scan position `i` (0 = most urgent).
+    pub(crate) fn get(&self, i: usize) -> &PreparedRequest {
+        &self.entries[i].req
+    }
+
+    /// Remove and return the candidate at scan position `i`.
+    pub(crate) fn remove(&mut self, i: usize) -> PreparedRequest {
+        self.entries.remove(i).req
+    }
+}
+
+impl Default for PendingQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::request::Priority;
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64) -> PreparedRequest {
+        PreparedRequest::new(id, vec![1, 2, 3], 4)
+    }
+
+    fn drain_ids(q: &mut PendingQueue) -> Vec<u64> {
+        let mut ids = Vec::new();
+        while !q.is_empty() {
+            ids.push(q.remove(0).id);
+        }
+        ids
+    }
+
+    #[test]
+    fn default_workload_is_fifo() {
+        let mut q = PendingQueue::new();
+        for id in [3, 1, 4, 1, 5] {
+            q.push(req(id));
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(drain_ids(&mut q), vec![3, 1, 4, 1, 5]);
+    }
+
+    #[test]
+    fn interactive_outranks_batch() {
+        let mut q = PendingQueue::new();
+        let mut hog = req(1);
+        hog.priority = Priority::Batch;
+        q.push(hog);
+        q.push(req(2)); // Interactive by default, arrives later
+        let mut hog2 = req(3);
+        hog2.priority = Priority::Batch;
+        q.push(hog2);
+        assert_eq!(drain_ids(&mut q), vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn earliest_deadline_first_within_a_class() {
+        let now = Instant::now();
+        let mut q = PendingQueue::new();
+        let mut relaxed = req(1);
+        relaxed.deadline = Some(now + Duration::from_secs(60));
+        let mut urgent = req(2);
+        urgent.deadline = Some(now + Duration::from_secs(1));
+        let unbounded = req(3); // no deadline: last within the class
+        q.push(unbounded);
+        q.push(relaxed);
+        q.push(urgent);
+        assert_eq!(drain_ids(&mut q), vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn priority_trumps_deadline() {
+        let now = Instant::now();
+        let mut q = PendingQueue::new();
+        let mut batch = req(1);
+        batch.priority = Priority::Batch;
+        batch.deadline = Some(now + Duration::from_millis(1));
+        let interactive = req(2); // later, no deadline — still first
+        q.push(batch);
+        q.push(interactive);
+        assert_eq!(drain_ids(&mut q), vec![2, 1]);
+    }
+
+    #[test]
+    fn requeued_request_keeps_its_arrival_rank() {
+        let mut q = PendingQueue::new();
+        let early = req(1); // oldest arrival
+        std::thread::sleep(Duration::from_millis(2));
+        q.push(req(2));
+        q.push(req(3));
+        // id 1 was admitted before 2 and 3 arrived, then preempted and
+        // requeued: its original `enqueued` puts it back at the front
+        q.push(early);
+        assert_eq!(drain_ids(&mut q), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn indexed_scan_sees_scheduling_order() {
+        let mut q = PendingQueue::new();
+        let mut b = req(7);
+        b.priority = Priority::Batch;
+        q.push(b);
+        q.push(req(9));
+        assert_eq!(q.get(0).id, 9);
+        assert_eq!(q.get(1).id, 7);
+        assert_eq!(q.remove(1).id, 7);
+        assert_eq!(q.get(0).id, 9);
+    }
+}

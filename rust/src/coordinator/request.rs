@@ -4,12 +4,53 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::{Error, Result};
+
+/// Scheduling class of a request.  Ordered: `Batch < Interactive`, so
+/// `Ord` compares urgency directly.
+///
+/// The pending queue orders by (priority desc, deadline asc, arrival),
+/// and under KV-capacity pressure an `Interactive` arrival may preempt
+/// a live `Batch` row (strictly-lower priority only — equal-priority
+/// rows never preempt each other, so all-default workloads behave
+/// exactly as before this field existed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Throughput-oriented background work; first to be preempted.
+    Batch,
+    /// Latency-sensitive traffic (the default).
+    #[default]
+    Interactive,
+}
+
+impl Priority {
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Interactive => "interactive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "batch" => Ok(Priority::Batch),
+            "interactive" => Ok(Priority::Interactive),
+            _ => Err(Error::Other(format!(
+                "unknown priority '{s}' (interactive|batch)"
+            ))),
+        }
+    }
+}
+
 /// A request after preprocessing (tokenization) — what the batcher and
 /// engine operate on.
 #[derive(Debug, Clone)]
 pub struct PreparedRequest {
     pub id: u64,
-    /// `[BOS] doc… [SEP]`.
+    /// `[BOS] doc… [SEP]`.  After a preemption this is the ORIGINAL
+    /// prompt plus every token generated before eviction, so resuming
+    /// is one admission prefill away and greedy continuations are
+    /// bitwise-identical to the uninterrupted stream.
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
     /// Ground-truth summary ids for quality scoring (synthetic workloads).
@@ -23,6 +64,20 @@ pub struct PreparedRequest {
     /// Cooperative cancellation flag, shared with the client's
     /// [`crate::server::RequestStream`].  Clones share the flag.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Scheduling class (Interactive by default).
+    pub priority: Priority,
+    /// Tokens generated before the request was last preempted — a
+    /// suffix of `prompt`.  The dispatcher stitches these ahead of the
+    /// post-resume generation when the request finally finishes, so
+    /// the client-visible stream is complete.  Empty for requests that
+    /// were never preempted.
+    pub preempted_generated: Vec<u32>,
+    /// How many times this request has been preempted so far.
+    pub preemptions: u32,
+    /// True TTFT anchor across preemptions: when the request streamed
+    /// its first token before an eviction, the original emission time
+    /// survives the requeue here.
+    pub first_emit: Option<Instant>,
 }
 
 impl PreparedRequest {
@@ -37,6 +92,10 @@ impl PreparedRequest {
             enqueued: Instant::now(),
             deadline: None,
             cancel: None,
+            priority: Priority::default(),
+            preempted_generated: Vec::new(),
+            preemptions: 0,
+            first_emit: None,
         }
     }
 
@@ -104,6 +163,10 @@ pub struct ServingResponse {
     /// signal, echoed on the wire (`kv_blocks_in_use` /
     /// `kv_blocks_total`).  None on contiguous caches and on failures.
     pub kv_blocks: Option<(u64, u64)>,
+    /// Times the request was preempted (evicted + resumed) on its way
+    /// to this reply — the per-request QoS cost of the SLO scheduler,
+    /// echoed on the wire.
+    pub preemptions: u32,
 }
 
 impl ServingResponse {
@@ -127,6 +190,7 @@ impl ServingResponse {
             code: Some(code),
             dtype: None,
             kv_blocks: None,
+            preemptions: 0,
         }
     }
 }
@@ -175,6 +239,25 @@ mod tests {
         let clone = r.clone();
         flag.store(true, Ordering::Relaxed);
         assert!(r.cancelled() && clone.cancelled());
+    }
+
+    #[test]
+    fn priority_orders_parses_and_defaults() {
+        assert!(Priority::Interactive > Priority::Batch);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert_eq!(Priority::parse("batch").unwrap(), Priority::Batch);
+        assert_eq!(
+            Priority::parse("interactive").unwrap(),
+            Priority::Interactive
+        );
+        assert!(Priority::parse("urgent").is_err());
+        assert_eq!(Priority::Batch.label(), "batch");
+        assert_eq!(Priority::Interactive.label(), "interactive");
+        let r = PreparedRequest::new(1, vec![1], 4);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert!(r.preempted_generated.is_empty());
+        assert_eq!(r.preemptions, 0);
+        assert!(r.first_emit.is_none());
     }
 
     #[test]

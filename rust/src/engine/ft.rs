@@ -46,7 +46,7 @@ use super::{
     DecodeSession, Engine, EngineInput, FinishReason, FinishedRequest,
     Sampler, TokenEvent,
 };
-use crate::config::KvConfig;
+use crate::config::{GenConfig, KvConfig};
 use crate::runtime::{Backend, DType, DataArg, OpaqueTensor, SharedBackend};
 use crate::{special, Error, Result};
 
@@ -59,6 +59,8 @@ pub struct FtEngine {
     multi_steps: usize,
     /// Resolved paged-KV geometry; None = contiguous bucket caches.
     paged: Option<(usize, usize)>,
+    /// Chunked-prefill budget for paged sessions (0 = monolithic).
+    prefill_chunk: usize,
 }
 
 impl FtEngine {
@@ -68,21 +70,25 @@ impl FtEngine {
         variant: &'static str,
         use_multi_step: bool,
     ) -> Result<Self> {
-        Self::with_kv(backend, variant, use_multi_step, KvConfig::default())
+        let gen = GenConfig { use_multi_step, ..GenConfig::default() };
+        Self::with_kv(backend, variant, &gen, KvConfig::default())
     }
 
-    /// An FT engine with an explicit KV-cache config.  `kv.blocks == 0`
-    /// auto-sizes the pool so the largest compiled batch bucket fits at
-    /// the engine's max sequence.  Paged mode silently falls back to
-    /// the contiguous discipline on backends without paged support
-    /// (the PJRT client — its artifacts are compiled for contiguous
-    /// caches).
+    /// An FT engine with explicit generation + KV-cache configs.
+    /// `kv.blocks == 0` auto-sizes the pool so the largest compiled
+    /// batch bucket fits at the engine's max sequence.  Paged mode
+    /// silently falls back to the contiguous discipline on backends
+    /// without paged support (the PJRT client — its artifacts are
+    /// compiled for contiguous caches); `gen.prefill_chunk` only
+    /// applies to paged sessions (a contiguous re-prefill is
+    /// all-or-nothing by construction).
     pub fn with_kv(
         backend: SharedBackend,
         variant: &'static str,
-        use_multi_step: bool,
+        gen: &GenConfig,
         kv: KvConfig,
     ) -> Result<Self> {
+        let use_multi_step = gen.use_multi_step;
         let max_seq = backend
             .manifest()
             .artifacts
@@ -126,6 +132,7 @@ impl FtEngine {
             vocab_size,
             multi_steps,
             paged,
+            prefill_chunk: gen.prefill_chunk,
         })
     }
 }
@@ -163,6 +170,7 @@ impl Engine for FtEngine {
                 self.max_seq,
                 blocks,
                 block_size,
+                self.prefill_chunk,
                 batch,
             );
         }

@@ -83,6 +83,12 @@ pub enum FinishReason {
     Cancelled,
     /// The caller retired the request past its deadline.
     DeadlineExpired,
+    /// The scheduler evicted the request to free KV capacity for a
+    /// higher-priority arrival.  NOT terminal at the serving layer: the
+    /// dispatcher requeues the request with its tokens-so-far
+    /// (`prompt ++ generated`) and it resumes — greedy streams are
+    /// bitwise-unchanged across the round trip.
+    Preempted,
 }
 
 /// One request's progress in one decode-session iteration.
@@ -249,18 +255,12 @@ pub fn build_with_kv(
 ) -> Result<Box<dyn Engine>> {
     Ok(match kind {
         EngineKind::Baseline => Box::new(BaselineEngine::new(backend)?),
-        EngineKind::FtFull => Box::new(FtEngine::with_kv(
-            backend,
-            "full",
-            gen.use_multi_step,
-            kv,
-        )?),
-        EngineKind::FtPruned => Box::new(FtEngine::with_kv(
-            backend,
-            "pruned",
-            gen.use_multi_step,
-            kv,
-        )?),
+        EngineKind::FtFull => {
+            Box::new(FtEngine::with_kv(backend, "full", &gen, kv)?)
+        }
+        EngineKind::FtPruned => {
+            Box::new(FtEngine::with_kv(backend, "pruned", &gen, kv)?)
+        }
     })
 }
 

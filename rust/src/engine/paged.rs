@@ -67,6 +67,16 @@ pub(super) struct PagedFtSession {
     done_buf: Vec<FinishedRequest>,
     admit_seq: usize,
     prefill_tokens: u64,
+    /// Chunked-prefill budget: at most this many deferred prompt
+    /// tokens run per [`DecodeSession::step`], interleaved with the
+    /// step's decoding.  0 = monolithic prefill at admission (the
+    /// default, and the pre-chunking behavior).
+    prefill_chunk: usize,
+    /// Prompt tokens already written to the lane's KV blocks.  Equals
+    /// `rows[l].prompt.len()` once the lane is fully prefilled (always
+    /// true in monolithic mode); smaller while a chunked admission is
+    /// still streaming its prompt in.
+    prefilled: Vec<usize>,
 }
 
 impl PagedFtSession {
@@ -78,6 +88,7 @@ impl PagedFtSession {
         max_seq: usize,
         blocks: usize,
         block_size: usize,
+        prefill_chunk: usize,
         batch: &[EngineInput],
     ) -> Result<Box<dyn DecodeSession>> {
         let (k, v) = backend.paged_kv_alloc(variant, blocks, block_size)?;
@@ -97,6 +108,8 @@ impl PagedFtSession {
             done_buf: Vec::new(),
             admit_seq: 0,
             prefill_tokens: 0,
+            prefill_chunk,
+            prefilled: Vec::new(),
         };
         session.admit(batch)?;
         Ok(Box::new(session))
@@ -165,12 +178,14 @@ impl PagedFtSession {
         let pending = std::mem::take(&mut self.pending);
         let positions = std::mem::take(&mut self.positions);
         let last_tok = std::mem::take(&mut self.last_tok);
-        for ((((row, table), pend), pos), tok) in rows
+        let prefilled = std::mem::take(&mut self.prefilled);
+        for (((((row, table), pend), pos), tok), pre) in rows
             .into_iter()
             .zip(tables)
             .zip(pending)
             .zip(positions)
             .zip(last_tok)
+            .zip(prefilled)
         {
             if row.finished.is_some() {
                 if let Some(t) = table {
@@ -185,6 +200,7 @@ impl PagedFtSession {
                 self.pending.push(pend);
                 self.positions.push(pos);
                 self.last_tok.push(tok);
+                self.prefilled.push(pre);
             }
         }
     }
@@ -250,6 +266,7 @@ impl DecodeSession for PagedFtSession {
             )));
         }
         self.compact();
+        let chunked = self.prefill_chunk > 0;
         let mut prefill_rows: Vec<PagedPrefillRow> = Vec::new();
         let mut new_lanes: Vec<usize> = Vec::new();
         for input in extra {
@@ -262,19 +279,30 @@ impl DecodeSession for PagedFtSession {
                 let table = self.pool.alloc(
                     input.prompt.len() + input.max_new_tokens,
                 )?;
-                prefill_rows.push(PagedPrefillRow {
-                    tokens: input
-                        .prompt
-                        .iter()
-                        .map(|&t| t as i32)
-                        .collect(),
-                    blocks: table.blocks().to_vec(),
-                });
-                new_lanes.push(lane);
+                if chunked {
+                    // defer the prompt: step() streams it in
+                    // `prefill_chunk`-token slices interleaved with
+                    // decoding, so this admission cannot stall the
+                    // step it lands in
+                    self.prefilled.push(0);
+                } else {
+                    prefill_rows.push(PagedPrefillRow {
+                        tokens: input
+                            .prompt
+                            .iter()
+                            .map(|&t| t as i32)
+                            .collect(),
+                        start: 0,
+                        blocks: table.blocks().to_vec(),
+                    });
+                    new_lanes.push(lane);
+                    self.prefilled.push(input.prompt.len());
+                }
                 self.tables.push(Some(table));
             } else {
                 // zero-budget: retired at admission, no cache footprint
                 self.tables.push(None);
+                self.prefilled.push(input.prompt.len());
             }
             self.pending.push(None);
             self.rows.push(row);
@@ -313,12 +341,89 @@ impl DecodeSession for PagedFtSession {
         }
         let vsz = self.vocab_size;
         let mut events = Vec::new();
+        // Phase 0: chunked admission prefill.  Spend at most
+        // `prefill_chunk` deferred prompt tokens (admission order)
+        // before this step's decoding, so the worst-case step cost is
+        // bounded by `chunk + active rows` positions instead of the
+        // longest pending prompt.  A lane whose chunk reaches the
+        // prompt's last position parks those last-position logits —
+        // exactly what a monolithic admission prefill would have
+        // parked, so the greedy stream is bitwise-unchanged.
+        if self.prefill_chunk > 0 {
+            let mut budget = self.prefill_chunk;
+            let mut chunk_rows: Vec<PagedPrefillRow> = Vec::new();
+            // (lane, completes-its-prompt-this-chunk)
+            let mut chunk_lanes: Vec<(usize, bool)> = Vec::new();
+            for lane in 0..self.rows.len() {
+                if budget == 0 {
+                    break;
+                }
+                let row = &self.rows[lane];
+                let done = self.prefilled[lane];
+                if !row.active() || done >= row.prompt.len() {
+                    continue;
+                }
+                let take = budget.min(row.prompt.len() - done);
+                let table =
+                    self.tables[lane].as_ref().ok_or_else(|| {
+                        Error::Session(
+                            "paged prefill row lost its block table \
+                             (poisoned session); resubmit the request"
+                                .into(),
+                        )
+                    })?;
+                chunk_rows.push(PagedPrefillRow {
+                    tokens: row.prompt[done..done + take]
+                        .iter()
+                        .map(|&t| t as i32)
+                        .collect(),
+                    start: done,
+                    blocks: table.blocks().to_vec(),
+                });
+                chunk_lanes.push((lane, done + take >= row.prompt.len()));
+                budget -= take;
+            }
+            if !chunk_rows.is_empty() {
+                self.prefill_tokens += chunk_rows
+                    .iter()
+                    .map(|r| r.tokens.len() as u64)
+                    .sum::<u64>();
+                let (k, v) = self.take_caches()?;
+                let (logits, k, v) = self
+                    .backend
+                    .paged_prefill(self.variant, k, v, &chunk_rows)?;
+                self.k = Some(k);
+                self.v = Some(v);
+                if logits.len() != chunk_lanes.len() * vsz {
+                    return Err(Error::Backend(format!(
+                        "paged_prefill returned {} logit values for {} \
+                         rows of vocab {vsz}",
+                        logits.len(),
+                        chunk_lanes.len()
+                    )));
+                }
+                for (i, &(lane, completes)) in
+                    chunk_lanes.iter().enumerate()
+                {
+                    self.prefilled[lane] += chunk_rows[i].tokens.len();
+                    if completes {
+                        self.pending[lane] =
+                            Some(logits[i * vsz..(i + 1) * vsz].to_vec());
+                    }
+                    // mid-prompt logits are discarded — the monolithic
+                    // path never samples them either
+                }
+            }
+        }
         // Phase A: freshly admitted rows sample their parked prefill
         // logits (no graph call — the admission prefill paid for them).
         let mut decode_lanes: Vec<usize> = Vec::new();
         for lane in 0..self.rows.len() {
             if !self.rows[lane].active() {
                 continue;
+            }
+            if self.prefilled[lane] < self.rows[lane].prompt.len() {
+                continue; // still streaming its prompt in: no event yet
             }
             match self.pending[lane].take() {
                 Some(logits) => {

@@ -31,6 +31,15 @@
 //! token-identical to the uninterrupted decode on BOTH disciplines —
 //! asserted by the admission property test, which runs paged and
 //! contiguous.
+//!
+//! **Preemption.**  The dispatcher may retire a live row early with
+//! [`FinishReason::Preempted`] (paged engines only: `retire` frees the
+//! row's blocks immediately, which is the point).  The row machinery
+//! treats the reason as opaque data — a preempted row drains through
+//! `take_finished` like any other, carrying the tokens generated so
+//! far; the dispatcher re-admits it later with `prompt ++ generated`
+//! as the new prompt, and the shared prefill/decode math above is what
+//! makes the resumed stream bitwise-identical to an uninterrupted one.
 
 use super::{EngineInput, EngineOutput, FinishReason, FinishedRequest};
 use crate::runtime::ExecOut;

@@ -65,6 +65,7 @@ pub mod server;
 pub mod tokenizer;
 pub mod util;
 
+pub use coordinator::Priority;
 pub use error::{Error, Result};
 pub use server::{
     RequestStream, Server, ServerBuilder, ServingEvent, SubmitOptions,

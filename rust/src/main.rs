@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use aigc_infer::config::{BackendKind, EngineKind, ServingConfig};
 use aigc_infer::data::{TraceConfig, TraceGenerator};
-use aigc_infer::metrics::{LadderRow, Report};
+use aigc_infer::metrics::{LadderRow, QosDigest, Report};
 use aigc_infer::pipeline;
 use aigc_infer::runtime::{manifest_for, DType};
 
@@ -37,6 +37,9 @@ fn usage() -> ! {
                  compiled batch bucket)  --no-paged-kv (legacy\n\
                  contiguous bucket caches: admission re-prefills the\n\
                  whole batch)\n\
+                 --prefill-chunk N (paged KV: spread each admission's\n\
+                 prompt prefill over decode steps in N-token chunks,\n\
+                 bounding per-step latency; default 0 = monolithic)\n\
          run:    --engine baseline|ft_full|ft_pruned  --n N  --max-new T\n\
                  --no-pipeline  --no-bucketing  --no-multi-step  --seed S\n\
          ladder: --n N\n\
@@ -142,6 +145,12 @@ fn build_config(args: &Args) -> ServingConfig {
     if let Some(n) = args.get("kv-blocks") {
         cfg.kv.blocks = n.parse().unwrap_or_else(|_| {
             eprintln!("--kv-blocks expects an integer (0 = auto)");
+            usage()
+        });
+    }
+    if let Some(n) = args.get("prefill-chunk") {
+        cfg.gen.prefill_chunk = n.parse().unwrap_or_else(|_| {
+            eprintln!("--prefill-chunk expects an integer (0 = monolithic)");
             usage()
         });
     }
@@ -256,14 +265,27 @@ fn cmd_run(args: &Args) {
                 s.workers,
                 s.session_latency.summary()
             );
+            if s.step_latency.count() > 0 {
+                let qos = QosDigest {
+                    step_p50_ms: s.step_latency.quantile(0.50).as_secs_f64()
+                        * 1e3,
+                    step_p99_ms: s.step_latency.quantile(0.99).as_secs_f64()
+                        * 1e3,
+                    ttft_p99_ms: s.ttft.quantile(0.99).as_secs_f64() * 1e3,
+                    preemptions: s.kv.preemptions,
+                };
+                println!("scheduling    {}", qos.render());
+            }
             if s.kv.kv_total_blocks > 0 {
                 println!(
                     "kv cache      paged: peak {}/{} blocks, {} admission \
-                     prefill tokens, {:.3}s blocked on capacity",
+                     prefill tokens, {:.3}s blocked on capacity, \
+                     {} preemption(s)",
                     s.kv.kv_peak_blocks_in_use,
                     s.kv.kv_total_blocks,
                     s.kv.admission_prefill_tokens,
-                    s.kv.blocked_on_capacity.as_secs_f64()
+                    s.kv.blocked_on_capacity.as_secs_f64(),
+                    s.kv.preemptions
                 );
             } else {
                 println!(

@@ -7,4 +7,4 @@ mod report;
 
 pub use histogram::Histogram;
 pub use meter::{StageTimer, Throughput};
-pub use report::{LadderRow, Report};
+pub use report::{LadderRow, QosDigest, Report};

@@ -62,9 +62,53 @@ impl Report {
     }
 }
 
+/// Scheduling/QoS digest for a serving run: the SLO quantities the
+/// iteration-level scheduler moves (chunked prefill bounds the step
+/// tail, priorities+preemption bound interactive TTFT).  Built from a
+/// run's merged histograms; renders as one aligned line for CLI and
+/// bench output.
+#[derive(Debug, Clone, Default)]
+pub struct QosDigest {
+    /// Median per-iteration service latency (decode step + that
+    /// iteration's admission prefill), milliseconds.
+    pub step_p50_ms: f64,
+    /// p99 of the same — what a latency SLO actually gates on.
+    pub step_p99_ms: f64,
+    /// p99 time-to-first-token, milliseconds.
+    pub ttft_p99_ms: f64,
+    /// Rows evicted (and later resumed) to admit higher-priority work.
+    pub preemptions: u64,
+}
+
+impl QosDigest {
+    pub fn render(&self) -> String {
+        format!(
+            "step p50 {:.2}ms p99 {:.2}ms | ttft p99 {:.2}ms | \
+             {} preemption(s)",
+            self.step_p50_ms,
+            self.step_p99_ms,
+            self.ttft_p99_ms,
+            self.preemptions
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn qos_digest_renders_the_slo_line() {
+        let d = QosDigest {
+            step_p50_ms: 1.25,
+            step_p99_ms: 9.5,
+            ttft_p99_ms: 30.0,
+            preemptions: 2,
+        };
+        let line = d.render();
+        assert!(line.contains("p99 9.50ms"), "{line}");
+        assert!(line.contains("2 preemption(s)"), "{line}");
+    }
 
     #[test]
     fn render_contains_speedup() {

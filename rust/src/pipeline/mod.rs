@@ -41,7 +41,7 @@ use crate::config::ServingConfig;
 use crate::coordinator::request::summary_accuracy;
 use crate::coordinator::{
     run_batch_stepped_stats, DynamicBatcher, InferencePool, KvMetrics,
-    PoolEvent, PreparedRequest, ServingResponse,
+    PoolEvent, PreparedRequest, Priority, ServingResponse,
 };
 use crate::data::Request;
 use crate::engine::{build_with_kv as build_engine, sampler_for};
@@ -83,12 +83,18 @@ pub struct RunSummary {
     /// Mean decode-session iterations per retired request.
     pub steps_per_retire: f64,
     /// Paged-KV cache metrics: admission prefill tokens, mid-session
-    /// admissions, blocked-on-capacity time, block occupancy.  The
-    /// occupancy fields are zero when the engine runs contiguous
-    /// caches; `admission_prefill_tokens` is meaningful on both cache
-    /// disciplines (it is THE paged-vs-legacy admission-cost
-    /// comparison `bench_snapshot` schema 4 records).
+    /// admissions, blocked-on-capacity time, block occupancy, and
+    /// preemption count.  The occupancy fields are zero when the
+    /// engine runs contiguous caches; `admission_prefill_tokens` is
+    /// meaningful on both cache disciplines (it is THE
+    /// paged-vs-legacy admission-cost comparison `bench_snapshot`
+    /// schema 4 records).
     pub kv: KvMetrics,
+    /// Per-iteration service latency (one decode step plus the same
+    /// iteration's admission prefill), merged across pool workers —
+    /// the p99 of this is the SLO quantity chunked prefill bounds.
+    /// Empty for sequential runs (no iteration-level scheduler there).
+    pub step_latency: Histogram,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -106,6 +112,7 @@ fn summarize(
     dtype: DType,
     session_latency: Histogram,
     kv: KvMetrics,
+    step_latency: Histogram,
 ) -> RunSummary {
     let mut latency = Histogram::new();
     let mut ttft = Histogram::new();
@@ -153,6 +160,7 @@ fn summarize(
         dtype,
         session_latency,
         kv,
+        step_latency,
     }
 }
 
@@ -175,6 +183,10 @@ fn frame(
         enqueued,
         deadline: None,
         cancel: None,
+        priority: Priority::default(),
+        preempted_generated: Vec::new(),
+        preemptions: 0,
+        first_emit: None,
     }
 }
 
@@ -243,6 +255,7 @@ pub fn postprocess(
         code: None,
         dtype: None,
         kv_blocks: None,
+        preemptions: req.preemptions,
     }
 }
 
@@ -360,6 +373,7 @@ pub fn run_sequential(
         run_dtype,
         session_latency,
         kv,
+        Histogram::new(),
     ))
 }
 
@@ -553,6 +567,7 @@ pub fn run_pipelined(
         cfg.dtype,
         report.session_latency(),
         report.kv_metrics(),
+        report.step_latency(),
     ))
 }
 

@@ -86,12 +86,17 @@ pub enum DataArg {
 
 /// One row of a **paged prefill** call: the context tokens to run and
 /// the block table receiving their K/V.  `blocks` must cover at least
-/// `tokens.len()` virtual slots (`blocks.len() * block_size`); extra
-/// blocks (the decode reservation) are untouched.
+/// `start + tokens.len()` virtual slots (`blocks.len() * block_size`);
+/// extra blocks (the decode reservation) are untouched.
 pub struct PagedPrefillRow {
     /// Context tokens (`prompt`, or `prompt ++ generated` for a row
     /// re-entering a cache), unpadded.
     pub tokens: Vec<i32>,
+    /// Virtual slot the first token of `tokens` occupies.  0 for a
+    /// monolithic prefill; a chunked prefill resumes at the slot after
+    /// the previously-prefilled prefix, attending over `[0, start + j]`
+    /// for token `j` exactly as the monolithic call would.
+    pub start: usize,
     /// Pool block ids in virtual-slot order (see
     /// [`crate::runtime::kv::BlockTable`]).
     pub blocks: Vec<u32>,

@@ -1014,20 +1014,35 @@ impl Backend for RefBackend {
         let mut v = take_paged(v, cfg, "paged_prefill v_cache")?;
         let mut logits = vec![0.0f32; rows.len() * vsize];
         let t0 = Instant::now();
-        let max_ctx = rows.iter().map(|r| r.tokens.len()).max().unwrap_or(0);
+        let max_ctx = rows
+            .iter()
+            .map(|r| r.start + r.tokens.len())
+            .max()
+            .unwrap_or(0);
         let mut scratch = Scratch::new(cfg, max_ctx.max(1));
         let mut x = vec![0.0f32; cfg.d_model];
         for (i, row) in rows.iter().enumerate() {
-            check_table(&row.blocks, row.tokens.len(), &k, "paged_prefill")?;
+            check_table(
+                &row.blocks,
+                row.start + row.tokens.len(),
+                &k,
+                "paged_prefill",
+            )?;
             if row.tokens.is_empty() {
                 continue; // zero-length row: logits stay zero, never read
             }
+            // a chunked continuation resumes at `start`: token j of the
+            // chunk occupies slot start + j and attends over everything
+            // before it through the table — the same scalar walk the
+            // monolithic (start = 0) call runs, so chunking is bitwise
+            // invisible in the logits
             for (j, &tok) in row.tokens.iter().enumerate() {
-                model.embed_row(tok, j, &mut x);
+                let at = row.start + j;
+                model.embed_row(tok, at, &mut x);
                 model.forward_row_paged(
                     &row.blocks,
-                    j,
-                    j + 1,
+                    at,
+                    at + 1,
                     &mut x,
                     &mut k,
                     &mut v,
@@ -1469,6 +1484,7 @@ mod tests {
             let (pk, pv) = b.paged_kv_alloc("full", 6, 4).unwrap();
             let rows = vec![PagedPrefillRow {
                 tokens: prompt.to_vec(),
+                start: 0,
                 blocks: table.clone(),
             }];
             let (p_pre, pk, pv) =
@@ -1500,6 +1516,7 @@ mod tests {
             let (pk, pv) = b.paged_kv_alloc("full", 4, 4).unwrap();
             let rows = vec![PagedPrefillRow {
                 tokens: p.to_vec(),
+                start: 0,
                 blocks: vec![0, 1],
             }];
             let (l, _, _) = b.paged_prefill("full", pk, pv, &rows).unwrap();
@@ -1508,8 +1525,8 @@ mod tests {
         let (a_solo, b_solo) = (solo(&p1), solo(&p2));
         let (pk, pv) = b.paged_kv_alloc("full", 8, 4).unwrap();
         let rows = vec![
-            PagedPrefillRow { tokens: p1.to_vec(), blocks: vec![3, 6] },
-            PagedPrefillRow { tokens: p2.to_vec(), blocks: vec![1, 4] },
+            PagedPrefillRow { tokens: p1.to_vec(), start: 0, blocks: vec![3, 6] },
+            PagedPrefillRow { tokens: p2.to_vec(), start: 0, blocks: vec![1, 4] },
         ];
         let (l, _, _) = b.paged_prefill("full", pk, pv, &rows).unwrap();
         let vsize = b.manifest.config_for("full").vocab_size;
@@ -1527,6 +1544,7 @@ mod tests {
         // block id out of range
         let rows = vec![PagedPrefillRow {
             tokens: vec![special::BOS as i32, special::SEP as i32],
+            start: 0,
             blocks: vec![9],
         }];
         assert!(b
@@ -1535,6 +1553,7 @@ mod tests {
         // table too small for the context
         let rows = vec![PagedPrefillRow {
             tokens: vec![1i32; 9],
+            start: 0,
             blocks: vec![0, 1],
         }];
         assert!(b

@@ -123,6 +123,17 @@ impl ServerBuilder {
         self
     }
 
+    /// Admission prefill chunk size in tokens (`--prefill-chunk`); 0 =
+    /// monolithic prefill.  With a chunk set, the paged engine spreads
+    /// each admission's prompt over successive decode steps, bounding
+    /// the per-step latency hit live requests see when a long prompt
+    /// joins their batch.  Greedy outputs are bitwise-identical either
+    /// way.
+    pub fn prefill_chunk(mut self, tokens: usize) -> Self {
+        self.cfg.gen.prefill_chunk = tokens;
+        self
+    }
+
     /// Compile every bucket at startup for clean first-request latency.
     pub fn precompile(mut self, on: bool) -> Self {
         self.cfg.precompile = on;

@@ -98,6 +98,7 @@ fn handle_conn(stream: TcpStream, submit: SubmitHandle) -> Result<()> {
         };
         let opts = SubmitOptions {
             deadline: wire.deadline_ms.map(Duration::from_millis),
+            priority: wire.priority,
         };
         // non-blocking submit: a saturated server sheds load with a
         // typed `overloaded` reply instead of stalling the socket

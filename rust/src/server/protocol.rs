@@ -28,6 +28,13 @@
 //! (`"kv_blocks_in_use"` / `"kv_blocks_total"`), the per-reply
 //! cache-pressure signal.
 //!
+//! Requests may carry `"priority": "interactive" | "batch"`
+//! (interactive when absent): batch requests yield queue position to
+//! interactive traffic and are the only ones the scheduler may evict
+//! under KV-capacity pressure.  Replies for requests that WERE evicted
+//! and resumed carry `"preemptions": N` (omitted when zero) — the
+//! token stream is unaffected, only latency pays.
+//!
 //! Every error reply (both versions) carries a structured `code`:
 //! `bad_request` | `overloaded` | `engine_error` | `cancelled` |
 //! `deadline`.  The `id` a client supplies is echoed back verbatim;
@@ -35,7 +42,7 @@
 //! instead (so replies are always attributable — ids never silently
 //! collide on a default).
 
-use crate::coordinator::ServingResponse;
+use crate::coordinator::{Priority, ServingResponse};
 use crate::data::Request;
 use crate::server::streaming::ServingEvent;
 use crate::util::json::{self, Value};
@@ -52,6 +59,9 @@ pub struct WireRequest {
     pub v: u64,
     /// Optional per-request deadline, relative to arrival.
     pub deadline_ms: Option<u64>,
+    /// Scheduling class (`"priority": "interactive" | "batch"`;
+    /// interactive when absent).
+    pub priority: Priority,
 }
 
 /// Decode one request line.  All failures are `bad_request`-coded.
@@ -70,6 +80,11 @@ pub fn parse_request_line(line: &str) -> Result<WireRequest> {
              v1 and v2)"
         )));
     }
+    let priority = match v.get("priority").as_str() {
+        Some(s) => Priority::parse(s)
+            .map_err(|e| Error::BadRequest(e.to_string()))?,
+        None => Priority::default(),
+    };
     Ok(WireRequest {
         request: Request {
             id: 0, // assigned server-side; client_id carries the echo
@@ -81,6 +96,7 @@ pub fn parse_request_line(line: &str) -> Result<WireRequest> {
         client_id: v.get("id").as_u64(),
         v: version,
         deadline_ms: v.get("deadline_ms").as_u64(),
+        priority,
     })
 }
 
@@ -119,6 +135,9 @@ pub fn response_to_json(r: &ServingResponse) -> String {
     if let Some((used, total)) = r.kv_blocks {
         pairs.push(("kv_blocks_in_use", Value::num(used as f64)));
         pairs.push(("kv_blocks_total", Value::num(total as f64)));
+    }
+    if r.preemptions > 0 {
+        pairs.push(("preemptions", Value::num(r.preemptions as f64)));
     }
     Value::obj(pairs).to_json()
 }
@@ -169,6 +188,9 @@ pub fn event_to_json(id: u64, ev: &ServingEvent) -> String {
             if let Some((used, total)) = r.kv_blocks {
                 pairs.push(("kv_blocks_in_use", Value::num(used as f64)));
                 pairs.push(("kv_blocks_total", Value::num(total as f64)));
+            }
+            if r.preemptions > 0 {
+                pairs.push(("preemptions", Value::num(r.preemptions as f64)));
             }
             Value::obj(pairs).to_json()
         }
@@ -224,6 +246,7 @@ mod tests {
             code: None,
             dtype: Some("fp16"),
             kv_blocks: Some((3, 64)),
+            preemptions: 1,
         }
     }
 
@@ -244,6 +267,26 @@ mod tests {
         assert_eq!(w.v, 2);
         assert_eq!(w.request.max_new_tokens, 4);
         assert_eq!(w.deadline_ms, Some(250));
+        assert_eq!(w.priority, Priority::Interactive, "default class");
+    }
+
+    #[test]
+    fn parse_priority_classes() {
+        let w = parse_request_line(
+            r#"{"text": "ba", "priority": "batch"}"#,
+        )
+        .unwrap();
+        assert_eq!(w.priority, Priority::Batch);
+        let w = parse_request_line(
+            r#"{"text": "ba", "priority": "interactive"}"#,
+        )
+        .unwrap();
+        assert_eq!(w.priority, Priority::Interactive);
+        let err = parse_request_line(
+            r#"{"text": "ba", "priority": "urgent"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code(), "bad_request");
     }
 
     #[test]
@@ -270,7 +313,13 @@ mod tests {
         assert_eq!(v.get("dtype").as_str(), Some("fp16"));
         assert_eq!(v.get("kv_blocks_in_use").as_u64(), Some(3));
         assert_eq!(v.get("kv_blocks_total").as_u64(), Some(64));
+        assert_eq!(v.get("preemptions").as_u64(), Some(1));
         assert!(v.get("code").is_null());
+        // never-preempted replies omit the field entirely
+        let mut clean = ok_response(3);
+        clean.preemptions = 0;
+        let v = json::parse(&response_to_json(&clean)).unwrap();
+        assert!(v.get("preemptions").is_null());
     }
 
     #[test]
@@ -315,6 +364,7 @@ mod tests {
         assert_eq!(v.get("dtype").as_str(), Some("fp16"));
         assert_eq!(v.get("kv_blocks_in_use").as_u64(), Some(3));
         assert_eq!(v.get("kv_blocks_total").as_u64(), Some(64));
+        assert_eq!(v.get("preemptions").as_u64(), Some(1));
     }
 
     #[test]

@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::ServingConfig;
 use crate::coordinator::{
-    DynamicBatcher, InferencePool, PoolEvent, ServingResponse,
+    DynamicBatcher, InferencePool, PoolEvent, Priority, ServingResponse,
 };
 use crate::data::Request;
 use crate::pipeline::preprocess_strict;
@@ -49,6 +49,11 @@ pub struct SubmitOptions {
     /// Relative deadline; past it the request is retired at the next
     /// step boundary with a `deadline` error event.
     pub deadline: Option<Duration>,
+    /// Scheduling class (`Interactive` by default).  `Batch` requests
+    /// yield queue position to interactive traffic and are the ONLY
+    /// rows eligible for preemption when an interactive arrival finds
+    /// the KV pool full.
+    pub priority: Priority,
 }
 
 /// The client's half of one submitted request: an event receiver plus
@@ -111,6 +116,7 @@ struct Inbound {
     enqueued: Instant,
     deadline: Option<Instant>,
     cancel: Arc<AtomicBool>,
+    priority: Priority,
 }
 
 /// Cloneable submission handle.
@@ -185,6 +191,7 @@ impl SubmitHandle {
             // instead of panicking on Instant overflow
             deadline: opts.deadline.and_then(|d| enqueued.checked_add(d)),
             cancel: cancel.clone(),
+            priority: opts.priority,
         };
         let sent = if block {
             self.tx.send(inbound).map_err(|_| {
@@ -268,8 +275,13 @@ impl StreamingPipeline {
                         pre_policy.max_wait_ms.max(1),
                     )) {
                         Ok(inbound) => {
-                            let Inbound { req, enqueued, deadline, cancel } =
-                                inbound;
+                            let Inbound {
+                                req,
+                                enqueued,
+                                deadline,
+                                cancel,
+                                priority,
+                            } = inbound;
                             let mut prepared = match preprocess_strict(
                                 &pre_tok, vocab_limit, max_seq, &req,
                                 enqueued,
@@ -291,6 +303,7 @@ impl StreamingPipeline {
                             };
                             prepared.deadline = deadline;
                             prepared.cancel = Some(cancel);
+                            prepared.priority = priority;
                             batcher.push(prepared);
                             // arrivals flush on SIZE only; partial batches
                             // wait for the idle timeout below (the
