@@ -19,7 +19,15 @@
 //! interactive arrival under a deliberately full block pool must be
 //! admitted by evicting a batch-priority row, with every stream —
 //! evicted and resumed included — identical to an uncontended solo
-//! run).  The tool then writes one machine-readable `BENCH_<n>.json`
+//! run).  Schema 6 adds a **kernels** section: a scalar-vs-blocked
+//! reference-GEMM A/B at every ladder variant's (d_model, vocab) shape
+//! (hard-gated: blocked strictly faster), the binary16 weight-storage
+//! gate (switching the backend to fp16 must exactly halve the host
+//! weight bytes — true `Vec<u16>` storage, not widened f32), and a
+//! fused-vs-per-step paged greedy decode A/B on a dispatch-bound
+//! shape (hard-gated: fused multi-step wins on tokens/sec with
+//! token-identical streams).  The tool then writes one
+//! machine-readable `BENCH_<n>.json`
 //! datapoint (samples/sec, p50/p99 latency, TTFT, tokens/sec per
 //! configuration).  Successive PRs append `BENCH_2.json`,
 //! `BENCH_3.json`, … so the speed trajectory of the repo is diffable.
@@ -36,15 +44,21 @@
 //! The tool re-reads and validates what it wrote and exits non-zero on
 //! any failure, so CI can use it as a smoke step as-is.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
-use aigc_infer::config::{EngineKind, ServingConfig};
+use aigc_infer::config::{EngineKind, GenConfig, KvConfig, ServingConfig};
 use aigc_infer::data::{Request, TraceConfig, TraceGenerator};
+use aigc_infer::engine::{build_with_kv, EngineInput, Sampler};
 use aigc_infer::metrics::Histogram;
 use aigc_infer::pipeline::{self, RunSummary};
 use aigc_infer::precision;
-use aigc_infer::runtime::DType;
+use aigc_infer::runtime::reference::model::{linear, logits_matvec};
+use aigc_infer::runtime::{
+    Backend, DType, Kernel, RefBackend, RefPreset, WSlice,
+};
 use aigc_infer::util::json::{self, Value};
+use aigc_infer::util::rng::Rng;
 use aigc_infer::{Priority, Server, ServingEvent, SubmitOptions};
 
 /// Probe-prompt shape for the precision harness (shared with the
@@ -443,6 +457,214 @@ fn run_preemption(
     ])
 }
 
+/// One timed composite of the reference kernels at a ladder variant's
+/// shapes: the MLP pair (`d -> d_ff -> d`) plus the tied-embedding
+/// logits GEMV (`vocab x d`), min-of-reps with an untimed warm-up rep.
+#[allow(clippy::too_many_arguments)]
+fn kernel_composite_ns(
+    kernel: Kernel,
+    d: usize,
+    dff: usize,
+    vocab: usize,
+    x: &[f32],
+    w_up: &[f32],
+    b_up: &[f32],
+    w_dn: &[f32],
+    b_dn: &[f32],
+    emb: &[f32],
+) -> f64 {
+    const INNER: usize = 4;
+    let mut mid = vec![0.0f32; dff];
+    let mut back = vec![0.0f32; d];
+    let mut logits = vec![0.0f32; vocab];
+    let mut best = f64::INFINITY;
+    for rep in 0..6 {
+        let t = Instant::now();
+        for _ in 0..INNER {
+            linear(x, WSlice::F32(w_up), WSlice::F32(b_up), d, dff,
+                   &mut mid, kernel);
+            linear(&mid, WSlice::F32(w_dn), WSlice::F32(b_dn), dff, d,
+                   &mut back, kernel);
+            logits_matvec(&back, WSlice::F32(emb), d, vocab,
+                          &mut logits, kernel);
+        }
+        let ns = t.elapsed().as_secs_f64() * 1e9 / INNER as f64;
+        if rep > 0 {
+            // rep 0 warms caches and page-faults the buffers
+            best = best.min(ns);
+        }
+    }
+    // consume the output so the timed calls cannot be elided
+    assert!(
+        logits.iter().map(|&v| v as f64).sum::<f64>().is_finite(),
+        "kernel composite produced non-finite logits"
+    );
+    best
+}
+
+/// The schema-6 `kernels.gemm` A/B: scalar vs blocked reference
+/// kernels at every ladder variant's `(d_model, vocab)` shape, same
+/// operands both arms.  Operands are nowhere exactly zero, so the
+/// sparsity skip cannot shortcut either kernel.  The gate — blocked
+/// strictly faster at every shape — is enforced by self-validation.
+fn run_kernel_gemm() -> Vec<Value> {
+    let backend = RefBackend::synthetic();
+    let mut rng = Rng::seed_from_u64(0xAB17);
+    let mut nz = |n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|_| (rng.gen_f64() - 0.5) as f32 * 2.0 + 1e-3)
+            .collect()
+    };
+    ["baseline", "full", "pruned"]
+        .iter()
+        .map(|&variant| {
+            let cfg = backend.manifest().config_for(variant);
+            let (d, dff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+            let x = nz(d);
+            let w_up = nz(d * dff);
+            let b_up = nz(dff);
+            let w_dn = nz(dff * d);
+            let b_dn = nz(d);
+            let emb = nz(vocab * d);
+            let scalar_ns = kernel_composite_ns(
+                Kernel::Scalar, d, dff, vocab, &x, &w_up, &b_up, &w_dn,
+                &b_dn, &emb,
+            );
+            let blocked_ns = kernel_composite_ns(
+                Kernel::Blocked, d, dff, vocab, &x, &w_up, &b_up, &w_dn,
+                &b_dn, &emb,
+            );
+            eprintln!(
+                "  kernels[gemm {variant}]: scalar {scalar_ns:.0}ns, \
+                 blocked {blocked_ns:.0}ns ({:.2}x)",
+                scalar_ns / blocked_ns.max(1.0),
+            );
+            Value::obj(vec![
+                ("variant", Value::str(variant)),
+                ("d_model", Value::num(d as f64)),
+                ("vocab", Value::num(vocab as f64)),
+                ("scalar_ns", Value::num(scalar_ns)),
+                ("blocked_ns", Value::num(blocked_ns)),
+                ("speedup", Value::num(scalar_ns / blocked_ns.max(1.0))),
+            ])
+        })
+        .collect()
+}
+
+/// The schema-6 `kernels.f16_weights` gate: switching the reference
+/// backend to binary16 must exactly halve the host weight bytes of
+/// every weight set — true `Vec<u16>` storage, not widened f32.
+fn run_f16_storage() -> Vec<Value> {
+    let fp32 = RefBackend::synthetic();
+    let mut f16 = RefBackend::synthetic();
+    f16.set_dtype(DType::F16);
+    ["full", "pruned"]
+        .iter()
+        .map(|&key| {
+            let a = fp32
+                .host_weights(key)
+                .expect("fp32 weights")
+                .storage_bytes();
+            let b = f16
+                .host_weights(key)
+                .expect("f16 weights")
+                .storage_bytes();
+            eprintln!("  kernels[f16 {key}]: {a} -> {b} weight bytes");
+            Value::obj(vec![
+                ("weights", Value::str(key)),
+                ("fp32_bytes", Value::num(a as f64)),
+                ("f16_bytes", Value::num(b as f64)),
+            ])
+        })
+        .collect()
+}
+
+/// The schema-6 `kernels.fused_paged_decode` A/B: the same prompts
+/// through the paged FT engine with fused multi-step greedy dispatch
+/// ON vs OFF (one backend call per token).  The preset is deliberately
+/// dispatch-bound — tiny model, long generation — so the quantity
+/// under test (per-dispatch overhead amortized by fusion) dominates
+/// the signal.  Best-of-reps; the gate (fused wins on tokens/sec with
+/// token-identical streams) is enforced by the self-validation.
+fn run_fused_decode() -> Vec<Value> {
+    let preset = RefPreset {
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        vocab_full: 512,
+        vocab_pruned: 256,
+        ..RefPreset::default()
+    };
+    let backend: Arc<dyn Backend> =
+        Arc::new(RefBackend::with_preset(&preset));
+    let vocab = backend.manifest().config_for("pruned").vocab_size as u32;
+    let mut rng = Rng::seed_from_u64(0xF5ED);
+    let max_new = 24usize;
+    let inputs: Vec<EngineInput> = (0..8u64)
+        .map(|id| {
+            let len = 6 + rng.gen_range(0, 8);
+            let mut prompt = vec![aigc_infer::special::BOS];
+            for _ in 0..len {
+                prompt.push(
+                    aigc_infer::special::FIRST_WORD
+                        + rng.gen_range(0, (vocab - 4) as usize) as u32,
+                );
+            }
+            prompt.push(aigc_infer::special::SEP);
+            EngineInput { request_id: id, prompt, max_new_tokens: max_new }
+        })
+        .collect();
+    let mut arms: Vec<(&str, f64, usize, Vec<Vec<u32>>)> = Vec::new();
+    for fused in [true, false] {
+        let engine = build_with_kv(
+            EngineKind::FtPruned,
+            backend.clone(),
+            GenConfig {
+                max_new_tokens: max_new,
+                use_multi_step: fused,
+                ..GenConfig::default()
+            },
+            KvConfig::default(),
+        )
+        .expect("paged engine");
+        let mut best = f64::INFINITY;
+        let mut tokens = 0usize;
+        let mut streams: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..5 {
+            let t = Instant::now();
+            let out = engine
+                .generate(&inputs, &mut Sampler::greedy())
+                .expect("fused-decode bench run");
+            let secs = t.elapsed().as_secs_f64();
+            streams = out.into_iter().map(|o| o.generated).collect();
+            tokens = streams.iter().map(|s| s.len()).sum();
+            best = best.min(secs);
+        }
+        let mode = if fused { "fused" } else { "per_step" };
+        let tps = tokens as f64 / best.max(1e-9);
+        eprintln!(
+            "  kernels[paged {mode}]: {tokens} tokens, {tps:.0} tok/s \
+             (best of 5)"
+        );
+        arms.push((mode, tps, tokens, streams));
+    }
+    let identical = arms[0].3 == arms[1].3;
+    arms.iter()
+        .map(|(mode, tps, tokens, _)| {
+            Value::obj(vec![
+                ("mode", Value::str(*mode)),
+                ("tokens_per_sec", Value::num(*tps)),
+                ("generated_tokens", Value::num(*tokens as f64)),
+                (
+                    "streams_match",
+                    Value::num(identical as u64 as f64),
+                ),
+            ])
+        })
+        .collect()
+}
+
 fn run_one(
     engine: EngineKind,
     pipelined: bool,
@@ -604,12 +826,19 @@ fn main() {
         ("preemption", Value::Array(preemption)),
     ]);
 
+    // --- kernels: GEMM A/B, f16 storage, fused paged decode (schema 6)
+    let kernels = Value::obj(vec![
+        ("gemm", Value::Array(run_kernel_gemm())),
+        ("f16_weights", Value::Array(run_f16_storage())),
+        ("fused_paged_decode", Value::Array(run_fused_decode())),
+    ]);
+
     let created = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let doc = Value::obj(vec![
-        ("schema", Value::num(5.0)),
+        ("schema", Value::num(6.0)),
         ("created_unix", Value::num(created as f64)),
         ("preset", Value::str("synthetic-reference-default")),
         ("requests", Value::num(n as f64)),
@@ -620,13 +849,14 @@ fn main() {
         ("serving", Value::Array(serving)),
         ("kv_admission", Value::Array(kv_admission)),
         ("scheduling", scheduling),
+        ("kernels", kernels),
     ]);
     std::fs::write(&out, doc.to_json()).expect("write snapshot");
 
     // --- self-validation (this is the CI smoke assertion) --------------
     let text = std::fs::read_to_string(&out).expect("re-read snapshot");
     let v = json::parse(&text).expect("snapshot must be valid JSON");
-    assert_eq!(v.get("schema").as_usize(), Some(5), "schema");
+    assert_eq!(v.get("schema").as_usize(), Some(6), "schema");
     let ladder = v.get("ladder").as_array().expect("ladder array");
     assert_eq!(ladder.len(), 8, "4 ladder rows x {{fp32, fp16}}");
     for dtype in ["fp32", "fp16"] {
@@ -832,6 +1062,70 @@ fn main() {
         field(block, "preemptions"),
         0.0,
         "equal-priority rows must never preempt each other"
+    );
+
+    // THE schema-6 gates.  (1) The blocked kernels must be strictly
+    // faster than the scalar loop nests at every ladder shape.
+    let kernels = v.get("kernels");
+    let gemm = kernels.get("gemm").as_array().expect("kernels.gemm");
+    assert_eq!(gemm.len(), 3, "one gemm row per ladder variant");
+    for row in gemm {
+        let variant = row.get("variant").as_str().expect("variant");
+        let s = field(row, "scalar_ns");
+        let b = field(row, "blocked_ns");
+        assert!(s > 0.0 && b > 0.0, "{variant}: vacuous kernel timing");
+        assert!(
+            b < s,
+            "{variant}: blocked kernel ({b:.0}ns) must be strictly \
+             faster than scalar ({s:.0}ns)"
+        );
+    }
+    // (2) Binary16 storage must exactly halve the host weight bytes.
+    let f16w = kernels
+        .get("f16_weights")
+        .as_array()
+        .expect("kernels.f16_weights");
+    assert_eq!(f16w.len(), 2, "full + pruned weight sets");
+    for row in f16w {
+        let a = field(row, "fp32_bytes");
+        let b = field(row, "f16_bytes");
+        assert!(a > 0.0, "empty weight set: {}", row.to_json());
+        assert_eq!(
+            b * 2.0,
+            a,
+            "binary16 storage must exactly halve the weight bytes: {}",
+            row.to_json()
+        );
+    }
+    // (3) Fused multi-step paged decode must beat per-step dispatch
+    // on tokens/sec without changing a single token.
+    let fused_rows = kernels
+        .get("fused_paged_decode")
+        .as_array()
+        .expect("kernels.fused_paged_decode");
+    assert_eq!(fused_rows.len(), 2, "fused + per_step arms");
+    let fused = fused_rows
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("fused"))
+        .expect("fused row");
+    let per_step = fused_rows
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("per_step"))
+        .expect("per_step row");
+    for row in [fused, per_step] {
+        assert!(field(row, "generated_tokens") > 0.0);
+        assert_eq!(
+            field(row, "streams_match"),
+            1.0,
+            "fused paged decode changed the token streams"
+        );
+    }
+    assert!(
+        field(fused, "tokens_per_sec") > field(per_step, "tokens_per_sec"),
+        "fused paged decode ({:.0} tok/s) must beat per-step dispatch \
+         ({:.0} tok/s)",
+        field(fused, "tokens_per_sec"),
+        field(per_step, "tokens_per_sec"),
     );
     println!("bench snapshot OK: {out}");
 }

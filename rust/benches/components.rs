@@ -6,6 +6,8 @@ use aigc_infer::config::BatchPolicy;
 use aigc_infer::coordinator::{DynamicBatcher, PreparedRequest};
 use aigc_infer::data::{CorpusConfig, Generator, ZipfSampler};
 use aigc_infer::metrics::Histogram;
+use aigc_infer::runtime::reference::model::{linear, logits_matvec};
+use aigc_infer::runtime::{Kernel, WSlice};
 use aigc_infer::tokenizer::{Encode, FastTokenizer, SlowTokenizer, Vocab};
 use aigc_infer::util::bench::{self, Sample};
 use aigc_infer::util::rng::Rng;
@@ -50,6 +52,53 @@ fn main() {
         n
     });
     samples.push(s);
+
+    // --- reference GEMM kernels (scalar vs blocked A/B) ------------------
+    // the default synthetic preset's shapes: d_model 32, d_ff 64,
+    // vocab 8000 (full) — the logits GEMV dominates per-token cost
+    let (d, dff, vocab) = (32usize, 64usize, 8000usize);
+    let mut krng = Rng::seed_from_u64(0x6E77);
+    let mut nz = |n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|_| (krng.gen_f64() - 0.5) as f32 * 2.0 + 1e-3)
+            .collect()
+    };
+    let x = nz(d);
+    let w = nz(d * dff);
+    let wb = nz(dff);
+    let emb = nz(vocab * d);
+    let mut out = vec![0.0f32; dff];
+    let mut logits = vec![0.0f32; vocab];
+    for kernel in [Kernel::Scalar, Kernel::Blocked] {
+        let label = format!("linear {d}x{dff}: {} kernel", kernel.label());
+        samples.push(bench::time(&label, 2, 10, || {
+            for _ in 0..64 {
+                linear(
+                    &x,
+                    WSlice::F32(&w),
+                    WSlice::F32(&wb),
+                    d,
+                    dff,
+                    &mut out,
+                    kernel,
+                );
+            }
+            std::hint::black_box(out[0]);
+        }));
+        let label =
+            format!("logits gemv {vocab}x{d}: {} kernel", kernel.label());
+        samples.push(bench::time(&label, 2, 10, || {
+            logits_matvec(
+                &x,
+                WSlice::F32(&emb),
+                d,
+                vocab,
+                &mut logits,
+                kernel,
+            );
+            std::hint::black_box(logits[0]);
+        }));
+    }
 
     // --- batcher ---------------------------------------------------------
     let policy = BatchPolicy {

@@ -4,7 +4,7 @@
 
 use std::path::Path;
 
-use crate::runtime::dtype::DType;
+use crate::runtime::dtype::{DType, Kernel};
 use crate::util::json::{self, Value};
 use crate::{Error, Result};
 
@@ -187,6 +187,11 @@ pub struct ServingConfig {
     /// accumulation, or full f32 (the default).  Reference backend
     /// only; the pjrt backend runs its artifacts' compiled dtype.
     pub dtype: DType,
+    /// Reference-backend GEMM kernel family (`--kernel scalar|blocked`):
+    /// `blocked` (the default) runs the tiled, panel-reusing kernels,
+    /// `scalar` the straight-line loops.  Both are bitwise-identical by
+    /// construction — the knob exists for A/B benching and bisection.
+    pub kernel: Kernel,
     pub engine: EngineKind,
     pub sampling: Sampling,
     pub batch: BatchPolicy,
@@ -231,6 +236,7 @@ impl Default for ServingConfig {
             artifacts_dir: "artifacts".into(),
             backend: BackendKind::default(),
             dtype: DType::default(),
+            kernel: Kernel::default(),
             engine: EngineKind::FtPruned,
             sampling: Sampling::Greedy,
             batch: BatchPolicy::default(),
@@ -268,6 +274,9 @@ impl ServingConfig {
         }
         if let Some(s) = v.get("dtype").as_str() {
             cfg.dtype = DType::parse(s)?;
+        }
+        if let Some(s) = v.get("kernel").as_str() {
+            cfg.kernel = Kernel::parse(s)?;
         }
         if let Some(s) = v.get("engine").as_str() {
             cfg.engine = EngineKind::parse(s)?;
@@ -369,6 +378,7 @@ impl ServingConfig {
             ("artifacts_dir", Value::str(self.artifacts_dir.clone())),
             ("backend", Value::str(self.backend.label())),
             ("dtype", Value::str(self.dtype.label())),
+            ("kernel", Value::str(self.kernel.label())),
             ("engine", Value::str(self.engine.label())),
             ("sampling", sampling),
             (
@@ -500,6 +510,23 @@ mod tests {
         assert_eq!(back.dtype, DType::F16);
         assert!(
             ServingConfig::from_json(r#"{"dtype": "int8"}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn kernel_parses_and_roundtrips() {
+        let c = ServingConfig::default();
+        assert_eq!(c.kernel, Kernel::Blocked, "blocked is the default");
+        let c =
+            ServingConfig::from_json(r#"{"kernel": "scalar"}"#).unwrap();
+        assert_eq!(c.kernel, Kernel::Scalar);
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.kernel, Kernel::Scalar);
+        let c =
+            ServingConfig::from_json(r#"{"kernel": "tiled"}"#).unwrap();
+        assert_eq!(c.kernel, Kernel::Blocked, "'tiled' is an alias");
+        assert!(
+            ServingConfig::from_json(r#"{"kernel": "simd"}"#).is_err()
         );
     }
 

@@ -172,7 +172,7 @@ impl DecodeSession for BaselineSession {
                 continue;
             }
             row.steps += 1;
-            let next = sampler.sample(&logits[lane * v..(lane + 1) * v]);
+            let next = sampler.sample(&logits[lane * v..(lane + 1) * v])?;
             let mut ev = TokenEvent {
                 request_id: row.id,
                 tokens: Vec::new(),

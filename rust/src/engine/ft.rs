@@ -35,10 +35,12 @@
 //! Prefill and decode share the same math on both disciplines —
 //! bitwise on the reference backend — so greedy streams are unchanged
 //! by when admissions happen and by which discipline runs them
-//! (property-tested).  The fused multi-step decode executable is a
-//! contiguous-path feature: the paged session decodes one step per
-//! call (batching every active row into that call) since block-table
-//! growth lives with the session, not inside a fused graph.
+//! (property-tested).  Both disciplines fuse multi-step greedy decode:
+//! the contiguous session through the compiled `ft_decode_multi`
+//! bucket executable, the paged session through the backend's
+//! `paged_decode_multi` entry point (steps capped so every lane's KV
+//! writes stay inside its block reservation) — in each case N decode
+//! steps + argmax run per dispatch instead of one.
 
 use super::paged::PagedFtSession;
 use super::session::{bucket_need, compact, drain_finished, next_out, Row};
@@ -163,6 +165,10 @@ impl Engine for FtEngine {
 
     fn start(&self, batch: &[EngineInput]) -> Result<Box<dyn DecodeSession>> {
         if let Some((blocks, block_size)) = self.paged {
+            let multi_steps = self
+                .use_multi_step
+                .then_some(self.multi_steps)
+                .filter(|&n| n > 1);
             return PagedFtSession::start(
                 self.backend.clone(),
                 self.variant,
@@ -171,6 +177,7 @@ impl Engine for FtEngine {
                 blocks,
                 block_size,
                 self.prefill_chunk,
+                multi_steps,
                 batch,
             );
         }
@@ -324,7 +331,7 @@ impl FtSession {
         &mut self,
         logits: Vec<f32>,
         sampler: &mut Sampler,
-    ) -> Vec<TokenEvent> {
+    ) -> Result<Vec<TokenEvent>> {
         let v = self.vocab_size;
         let s = self.s;
         let mut events = Vec::new();
@@ -333,7 +340,7 @@ impl FtSession {
                 continue;
             }
             row.steps += 1;
-            let next = sampler.sample(&logits[lane * v..(lane + 1) * v]);
+            let next = sampler.sample(&logits[lane * v..(lane + 1) * v])?;
             let mut ev = TokenEvent {
                 request_id: row.id,
                 tokens: Vec::new(),
@@ -346,7 +353,7 @@ impl FtSession {
             ev.finished = row.finished;
             events.push(ev);
         }
-        events
+        Ok(events)
     }
 
     /// One decode graph call (fused multi-step when eligible).
@@ -458,7 +465,8 @@ impl FtSession {
                     continue;
                 }
                 row.steps += 1;
-                let next = sampler.sample(&logits[lane * v..(lane + 1) * v]);
+                let next =
+                    sampler.sample(&logits[lane * v..(lane + 1) * v])?;
                 let mut ev = TokenEvent {
                     request_id: row.id,
                     tokens: Vec::new(),
@@ -508,7 +516,7 @@ impl DecodeSession for FtSession {
             return Ok(vec![]);
         }
         match self.pending_logits.take() {
-            Some(logits) => Ok(self.step_pending(logits, sampler)),
+            Some(logits) => self.step_pending(logits, sampler),
             None => self.step_decode(sampler),
         }
     }

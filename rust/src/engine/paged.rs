@@ -25,10 +25,18 @@
 //! Step semantics: a freshly admitted row's first step samples the
 //! last-position logits its prefill parked (no graph call — the
 //! prefill already paid for them); every other active row runs one
-//! paged decode iteration.  Prefill and decode share the same forward
-//! math, bitwise on the reference backend, so greedy streams are
-//! identical to the contiguous path and independent of admission
-//! timing (property-tested for fp32 and fp16).
+//! paged decode dispatch.  With greedy sampling and multi-step enabled
+//! that dispatch is **fused**
+//! ([`crate::runtime::Backend::paged_decode_multi`]): up to
+//! `multi_steps` decode+argmax iterations run inside one backend call,
+//! capped at the smallest `remaining()` across the decoding lanes so
+//! every lane's KV writes stay inside its block reservation.  The
+//! fused token stream is bitwise-identical to per-step dispatch
+//! (greedy chaining is the same math either way — property-tested).
+//! Prefill and decode share the same forward math, bitwise on the
+//! reference backend, so greedy streams are identical to the
+//! contiguous path and independent of admission timing
+//! (property-tested for fp32 and fp16).
 
 use super::session::{drain_finished, Row};
 use super::{
@@ -77,6 +85,9 @@ pub(super) struct PagedFtSession {
     /// true in monolithic mode); smaller while a chunked admission is
     /// still streaming its prompt in.
     prefilled: Vec<usize>,
+    /// Fused greedy decode: run up to this many decode+argmax steps per
+    /// backend dispatch (see module docs).  None = one step per call.
+    multi_steps: Option<usize>,
 }
 
 impl PagedFtSession {
@@ -89,6 +100,7 @@ impl PagedFtSession {
         blocks: usize,
         block_size: usize,
         prefill_chunk: usize,
+        multi_steps: Option<usize>,
         batch: &[EngineInput],
     ) -> Result<Box<dyn DecodeSession>> {
         let (k, v) = backend.paged_kv_alloc(variant, blocks, block_size)?;
@@ -110,6 +122,7 @@ impl PagedFtSession {
             prefill_tokens: 0,
             prefill_chunk,
             prefilled: Vec::new(),
+            multi_steps: multi_steps.filter(|&n| n > 1),
         };
         session.admit(batch)?;
         Ok(Box::new(session))
@@ -213,11 +226,11 @@ impl PagedFtSession {
         logits: &[f32],
         sampler: &mut Sampler,
         events: &mut Vec<TokenEvent>,
-    ) {
+    ) -> Result<()> {
         let max_seq = self.max_seq;
         let row = &mut self.rows[lane];
         row.steps += 1;
-        let next = sampler.sample(logits);
+        let next = sampler.sample(logits)?;
         let mut ev = TokenEvent {
             request_id: row.id,
             tokens: Vec::new(),
@@ -229,6 +242,7 @@ impl PagedFtSession {
         }
         ev.finished = row.finished;
         events.push(ev);
+        Ok(())
     }
 }
 
@@ -427,12 +441,13 @@ impl DecodeSession for PagedFtSession {
             }
             match self.pending[lane].take() {
                 Some(logits) => {
-                    self.consume(lane, &logits, sampler, &mut events)
+                    self.consume(lane, &logits, sampler, &mut events)?
                 }
                 None => decode_lanes.push(lane),
             }
         }
-        // Phase B: one paged decode iteration over everyone else.
+        // Phase B: one paged decode dispatch over everyone else —
+        // fused to multiple greedy steps when eligible.
         if !decode_lanes.is_empty() {
             let mut decode_rows = Vec::with_capacity(decode_lanes.len());
             for &lane in &decode_lanes {
@@ -453,29 +468,93 @@ impl DecodeSession for PagedFtSession {
                     blocks: table.blocks().to_vec(),
                 });
             }
+            // Fused step count: capped at the smallest remaining budget
+            // among the decoding lanes, so every lane's KV writes stay
+            // inside its `prompt + max_new` block reservation (a lane
+            // that EOSes mid-fusion keeps decoding — same as the
+            // contiguous fused graph — and its extra tokens are
+            // discarded by the push loop below).
+            let fused = match (self.multi_steps, sampler.is_greedy()) {
+                (Some(n), true) => {
+                    let cap = decode_lanes
+                        .iter()
+                        .map(|&l| self.rows[l].remaining())
+                        .min()
+                        .unwrap_or(0);
+                    let steps = n.min(cap);
+                    (steps > 1).then_some(steps)
+                }
+                _ => None,
+            };
             let (k, v) = self.take_caches()?;
-            let (logits, k, v) =
-                self.backend.paged_decode(self.variant, k, v, &decode_rows)?;
-            self.k = Some(k);
-            self.v = Some(v);
-            if logits.len() != decode_lanes.len() * vsz {
-                return Err(Error::Backend(format!(
-                    "paged_decode returned {} logit values for {} rows \
-                     of vocab {vsz}",
-                    logits.len(),
-                    decode_lanes.len()
-                )));
-            }
-            for (i, &lane) in decode_lanes.iter().enumerate() {
-                // `logits` is a local buffer (not borrowed from self),
-                // so each row samples its slice in place — no per-step
-                // clone on the decode hot path
-                self.consume(
-                    lane,
-                    &logits[i * vsz..(i + 1) * vsz],
-                    sampler,
-                    &mut events,
-                );
+            if let Some(steps) = fused {
+                let (toks, k, v) = self.backend.paged_decode_multi(
+                    self.variant,
+                    k,
+                    v,
+                    &decode_rows,
+                    steps,
+                )?;
+                self.k = Some(k);
+                self.v = Some(v);
+                if toks.len() != decode_lanes.len() * steps {
+                    return Err(Error::Backend(format!(
+                        "paged_decode_multi returned {} tokens for {} \
+                         rows of {steps} steps",
+                        toks.len(),
+                        decode_lanes.len()
+                    )));
+                }
+                let max_seq = self.max_seq;
+                for (i, &lane) in decode_lanes.iter().enumerate() {
+                    let row = &mut self.rows[lane];
+                    row.steps += 1;
+                    let mut ev = TokenEvent {
+                        request_id: row.id,
+                        tokens: Vec::new(),
+                        finished: None,
+                    };
+                    for step in 0..steps {
+                        if !row.active() {
+                            break;
+                        }
+                        let t = toks[i * steps + step] as u32;
+                        if row.push(t, max_seq) {
+                            self.last_tok[lane] = t as i32;
+                            ev.tokens.push(t);
+                        }
+                    }
+                    ev.finished = row.finished;
+                    events.push(ev);
+                }
+            } else {
+                let (logits, k, v) = self.backend.paged_decode(
+                    self.variant,
+                    k,
+                    v,
+                    &decode_rows,
+                )?;
+                self.k = Some(k);
+                self.v = Some(v);
+                if logits.len() != decode_lanes.len() * vsz {
+                    return Err(Error::Backend(format!(
+                        "paged_decode returned {} logit values for {} \
+                         rows of vocab {vsz}",
+                        logits.len(),
+                        decode_lanes.len()
+                    )));
+                }
+                for (i, &lane) in decode_lanes.iter().enumerate() {
+                    // `logits` is a local buffer (not borrowed from
+                    // self), so each row samples its slice in place —
+                    // no per-step clone on the decode hot path
+                    self.consume(
+                        lane,
+                        &logits[i * vsz..(i + 1) * vsz],
+                        sampler,
+                        &mut events,
+                    )?;
+                }
             }
         }
         // retirement frees blocks immediately

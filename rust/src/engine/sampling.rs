@@ -1,6 +1,14 @@
 //! Logits → token sampling (runs in rust, on host logits).
+//!
+//! This is the **sampling boundary**: the one place where a numerically
+//! broken logits row (empty, or all-NaN — every comparison false, so a
+//! plain argmax would silently emit token 0) is turned into a typed
+//! [`Error::Backend`] instead of a corrupt-but-plausible token stream.
+//! The check is cold-path only: a healthy row always produces a finite
+//! best value, so the scan costs nothing extra.
 
 use crate::util::rng::Rng;
+use crate::{Error, Result};
 
 /// Sampling state (owns the RNG for top-k).
 pub enum Sampler {
@@ -23,12 +31,16 @@ impl Sampler {
         matches!(self, Sampler::Greedy)
     }
 
-    /// Draw one token id from a logits row.
-    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+    /// Draw one token id from a logits row.  Empty or all-NaN rows are
+    /// a backend fault, surfaced as [`Error::Backend`].
+    pub fn sample(&mut self, logits: &[f32]) -> Result<u32> {
         match self {
-            Sampler::Greedy => argmax(logits),
+            Sampler::Greedy => try_argmax(logits),
             Sampler::TopK { k, temperature, rng } => {
-                top_k_sample(logits, *k, *temperature, rng)
+                // the argmax check doubles as the NaN gate for top-k:
+                // a row that cannot argmax cannot be softmaxed either
+                try_argmax(logits)?;
+                Ok(top_k_sample(logits, *k, *temperature, rng))
             }
         }
     }
@@ -44,6 +56,38 @@ pub fn argmax(logits: &[f32]) -> u32 {
         }
     }
     best as u32
+}
+
+/// [`argmax`] with the degenerate cases surfaced as errors: an empty
+/// row, or a row where no element compared greater than `-inf` (all
+/// NaN).  The happy path is the identical single scan; the validation
+/// branch only runs when the scan found nothing.
+pub fn try_argmax(logits: &[f32]) -> Result<u32> {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    if best_v == f32::NEG_INFINITY {
+        // cold path: either genuinely all -inf (fine: token 0 wins the
+        // tie, matching `argmax`) or empty/all-NaN (backend fault)
+        if logits.is_empty() {
+            return Err(Error::Backend(
+                "sampling over an empty logits row".into(),
+            ));
+        }
+        if logits.iter().all(|v| v.is_nan()) {
+            return Err(Error::Backend(
+                "sampling over an all-NaN logits row (numerical fault \
+                 in the backend)"
+                    .into(),
+            ));
+        }
+    }
+    Ok(best as u32)
 }
 
 fn top_k_sample(logits: &[f32], k: usize, temperature: f32,
@@ -88,11 +132,39 @@ mod tests {
     }
 
     #[test]
+    fn try_argmax_matches_argmax_on_healthy_rows() {
+        for logits in [
+            vec![0.1, 3.0, -1.0, 2.9],
+            vec![-5.0],
+            vec![f32::NEG_INFINITY, f32::NEG_INFINITY], // tie: token 0
+            vec![f32::NAN, 1.0, f32::NAN],              // partial NaN ok
+        ] {
+            assert_eq!(try_argmax(&logits).unwrap(), argmax(&logits));
+        }
+    }
+
+    #[test]
+    fn all_nan_or_empty_logits_are_a_typed_backend_error() {
+        for bad in [vec![], vec![f32::NAN], vec![f32::NAN; 8]] {
+            let err = try_argmax(&bad).unwrap_err();
+            assert!(
+                matches!(err, Error::Backend(_)),
+                "expected Error::Backend, got {err:?}"
+            );
+            let err = Sampler::greedy().sample(&bad).unwrap_err();
+            assert!(matches!(err, Error::Backend(_)));
+            let err =
+                Sampler::top_k(2, 1.0, 1).sample(&bad).unwrap_err();
+            assert!(matches!(err, Error::Backend(_)));
+        }
+    }
+
+    #[test]
     fn greedy_sampler_deterministic() {
         let mut s = Sampler::greedy();
         assert!(s.is_greedy());
-        assert_eq!(s.sample(&[0.0, 1.0, 0.5]), 1);
-        assert_eq!(s.sample(&[0.0, 1.0, 0.5]), 1);
+        assert_eq!(s.sample(&[0.0, 1.0, 0.5]).unwrap(), 1);
+        assert_eq!(s.sample(&[0.0, 1.0, 0.5]).unwrap(), 1);
     }
 
     #[test]
@@ -100,7 +172,7 @@ mod tests {
         let mut s = Sampler::top_k(2, 1.0, 42);
         let logits = vec![0.0, 5.0, 4.9, -3.0, 1.0];
         for _ in 0..200 {
-            let t = s.sample(&logits);
+            let t = s.sample(&logits).unwrap();
             assert!(t == 1 || t == 2, "sampled {t}");
         }
     }
@@ -111,13 +183,13 @@ mod tests {
         let mut s = Sampler::top_k(5, 1e-4, 7);
         let logits = vec![0.0, 2.0, 1.0];
         for _ in 0..50 {
-            assert_eq!(s.sample(&logits), 1);
+            assert_eq!(s.sample(&logits).unwrap(), 1);
         }
     }
 
     #[test]
     fn top_k_1_is_greedy() {
         let mut s = Sampler::top_k(1, 1.0, 0);
-        assert_eq!(s.sample(&[0.3, 0.9, 0.1]), 1);
+        assert_eq!(s.sample(&[0.3, 0.9, 0.1]).unwrap(), 1);
     }
 }

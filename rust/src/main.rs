@@ -16,7 +16,7 @@ use aigc_infer::config::{BackendKind, EngineKind, ServingConfig};
 use aigc_infer::data::{TraceConfig, TraceGenerator};
 use aigc_infer::metrics::{LadderRow, QosDigest, Report};
 use aigc_infer::pipeline;
-use aigc_infer::runtime::{manifest_for, DType};
+use aigc_infer::runtime::{manifest_for, DType, Kernel};
 
 fn usage() -> ! {
     eprintln!(
@@ -26,6 +26,8 @@ fn usage() -> ! {
                  model is served when DIR has no manifest.json)\n\
                  --dtype fp32|fp16 (default: fp32; fp16 = binary16\n\
                  weights/activations/KV caches, f32 accumulation)\n\
+                 --kernel scalar|blocked (reference GEMM kernels;\n\
+                 default blocked, bitwise-identical either way)\n\
                  --workers N (inference workers in the pipelined/serve\n\
                  paths; default 1)  --row-threads N (reference backend\n\
                  intra-batch parallelism; default 0 = auto)\n\
@@ -111,6 +113,12 @@ fn build_config(args: &Args) -> ServingConfig {
     }
     if let Some(d) = args.get("dtype") {
         cfg.dtype = DType::parse(d).unwrap_or_else(|err| {
+            eprintln!("{err}");
+            usage()
+        });
+    }
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = Kernel::parse(k).unwrap_or_else(|err| {
             eprintln!("{err}");
             usage()
         });

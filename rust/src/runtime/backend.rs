@@ -277,6 +277,28 @@ pub trait Backend: Send + Sync {
             self.name()
         )))
     }
+
+    /// `steps` fused greedy decode iterations for the given rows — the
+    /// paged twin of the contiguous `ft_decode_multi` graph.  Each
+    /// row's argmax feeds its own next token; KV lands in the row's
+    /// block table at `position .. position + steps`, which the tables
+    /// must cover.  Returns tokens flattened lane-major
+    /// (`out[lane * steps + s]`) as [`ExecOut::I32`] plus the updated
+    /// cache handles.  The token sequence is bitwise-identical to
+    /// `steps` repeated [`Backend::paged_decode`] + argmax round trips.
+    fn paged_decode_multi(
+        &self,
+        _variant: &str,
+        _k: OpaqueTensor,
+        _v: OpaqueTensor,
+        _rows: &[PagedDecodeRow],
+        _steps: usize,
+    ) -> Result<(Vec<i32>, OpaqueTensor, OpaqueTensor)> {
+        Err(Error::Other(format!(
+            "backend '{}' has no paged KV support",
+            self.name()
+        )))
+    }
 }
 
 /// How many threads the reference backend may use to split the rows of
@@ -301,6 +323,7 @@ pub fn backend_for(cfg: &ServingConfig) -> Result<SharedBackend> {
             let mut b = RefBackend::open(&cfg.artifacts_dir)?;
             b.set_row_threads(resolve_row_threads(cfg));
             b.set_dtype(cfg.dtype);
+            b.set_kernel(cfg.kernel);
             Ok(Arc::new(b))
         }
         BackendKind::Pjrt => {

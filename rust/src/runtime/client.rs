@@ -128,7 +128,7 @@ impl Runtime {
         let mut bufs = Vec::with_capacity(host.params.len());
         for p in &host.params {
             bufs.push(self.client.buffer_from_host_buffer::<f32>(
-                &p.data,
+                p.data.as_f32(),
                 &p.shape,
                 None,
             )?);

@@ -36,9 +36,9 @@ pub use backend::{
     PagedDecodeRow, PagedPrefillRow, RuntimeStats, SharedBackend,
 };
 pub use kv::{BlockPool, BlockTable, KvStats};
-pub use dtype::{quantize_f16, DType, F16};
+pub use dtype::{quantize_f16, DType, Kernel, F16};
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;
 pub use manifest::{ArtifactEntry, Manifest, ModelConfig};
 pub use reference::{RefBackend, RefPreset};
-pub use weights::{HostParam, HostWeights};
+pub use weights::{HostParam, HostWeights, ParamData, WSlice};

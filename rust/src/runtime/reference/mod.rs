@@ -54,7 +54,7 @@ use crate::runtime::backend::{
     Backend, DataArg, ExecOut, OpaqueTensor, PagedDecodeRow,
     PagedPrefillRow, RuntimeStats,
 };
-use crate::runtime::dtype::{quantize_f16, DType};
+use crate::runtime::dtype::{DType, Kernel};
 use crate::runtime::manifest::{
     ArtifactEntry, IoEntry, Manifest, ModelConfig, ParamEntry, SpecialTokens,
     WeightsEntry,
@@ -193,7 +193,7 @@ fn synth_weights(cfg: &ModelConfig, seed: u64) -> HostWeights {
             let scale = 1.0 / (shape[0] as f64).sqrt();
             (0..n).map(|_| (rng.gen_normal() * scale) as f32).collect()
         };
-        params.push(HostParam { name, shape, data });
+        params.push(HostParam::f32(name, shape, data));
     }
     HostWeights { params }
 }
@@ -207,16 +207,16 @@ fn prune_weights(full: &HostWeights, pruned_cfg: &ModelConfig) -> HostWeights {
         .params
         .iter()
         .map(|p| match p.name.as_str() {
-            "tok_emb" => HostParam {
-                name: p.name.clone(),
-                shape: vec![pruned_cfg.vocab_size, d],
-                data: p.data[..pruned_cfg.vocab_size * d].to_vec(),
-            },
-            "pos_emb" => HostParam {
-                name: p.name.clone(),
-                shape: vec![pruned_cfg.max_position, d],
-                data: p.data[..pruned_cfg.max_position * d].to_vec(),
-            },
+            "tok_emb" => HostParam::f32(
+                p.name.clone(),
+                vec![pruned_cfg.vocab_size, d],
+                p.data.as_f32()[..pruned_cfg.vocab_size * d].to_vec(),
+            ),
+            "pos_emb" => HostParam::f32(
+                p.name.clone(),
+                vec![pruned_cfg.max_position, d],
+                p.data.as_f32()[..pruned_cfg.max_position * d].to_vec(),
+            ),
             _ => p.clone(),
         })
         .collect();
@@ -405,6 +405,27 @@ pub fn synthetic_manifest(p: &RefPreset) -> Manifest {
 /// thread spawn/join would cost more than the split saves.
 const MIN_PAR_ROW_OPS: usize = 200_000;
 
+/// Working buffers the paged entry points reuse across calls instead
+/// of allocating per call (the decode loop calls `paged_decode` once
+/// per emitted token, so per-call `Vec` allocation is pure overhead).
+/// Guarded by a `Mutex` because the paged entries take `&self`; a
+/// session drives them from one thread, so the lock is uncontended.
+#[derive(Default)]
+struct PagedScratch {
+    scratch: Scratch,
+    x: Vec<f32>,
+}
+
+impl PagedScratch {
+    /// Re-fit for this call's config and context length.  Buffers are
+    /// fully overwritten before being read, so reuse cannot change
+    /// results.
+    fn fit(&mut self, cfg: &ModelConfig, slots: usize) {
+        self.scratch.ensure(cfg, slots);
+        self.x.resize(cfg.d_model, 0.0);
+    }
+}
+
 /// Pure-Rust reference backend (see module docs).
 pub struct RefBackend {
     manifest: Manifest,
@@ -418,6 +439,12 @@ pub struct RefBackend {
     /// constructors default to [`DType::F32`]; `backend_for` applies
     /// `ServingConfig::dtype` via [`RefBackend::set_dtype`].
     dtype: DType,
+    /// GEMM kernel selection (see [`model`] docs) — every kernel
+    /// produces bitwise-identical results, so this is a pure
+    /// performance knob.  Defaults to [`Kernel::Blocked`].
+    kernel: Kernel,
+    /// Reused working buffers for the paged entry points.
+    paged_scratch: Mutex<PagedScratch>,
 }
 
 impl RefBackend {
@@ -440,6 +467,8 @@ impl RefBackend {
             stats: Mutex::new(RuntimeStats::default()),
             row_threads: 1,
             dtype: DType::F32,
+            kernel: Kernel::default(),
+            paged_scratch: Mutex::new(PagedScratch::default()),
         }
     }
 
@@ -457,6 +486,8 @@ impl RefBackend {
             stats: Mutex::new(RuntimeStats::default()),
             row_threads: 1,
             dtype: DType::F32,
+            kernel: Kernel::default(),
+            paged_scratch: Mutex::new(PagedScratch::default()),
         })
     }
 
@@ -466,14 +497,18 @@ impl RefBackend {
         self.row_threads = n.max(1);
     }
 
-    /// Select the runtime storage precision.  [`DType::F16`] quantizes
-    /// every weight tensor to binary16 IN PLACE and makes subsequent
-    /// graph calls store activations and KV caches in binary16 too,
-    /// accumulating in f32.  Quantization is one-way (the dropped
-    /// mantissa bits are gone), so once F16 has been selected the
-    /// backend stays — and keeps reporting — F16: a later
-    /// `set_dtype(F32)` is a no-op rather than a lie about the storage.
-    /// Call right after construction — `backend_for` does.
+    /// Select the runtime storage precision.  [`DType::F16`] converts
+    /// every weight tensor to TRUE binary16 storage (`Vec<u16>` of bit
+    /// patterns — half the resident bytes) and makes subsequent graph
+    /// calls store activations and KV caches in binary16 too,
+    /// accumulating in f32; the kernels dequantize weight elements
+    /// exactly inside their inner loops, so results are bitwise-equal
+    /// to the old quantize-then-store-as-f32 representation.
+    /// Quantization is one-way (the dropped mantissa bits are gone), so
+    /// once F16 has been selected the backend stays — and keeps
+    /// reporting — F16: a later `set_dtype(F32)` is a no-op rather than
+    /// a lie about the storage.  Call right after construction —
+    /// `backend_for` does.
     pub fn set_dtype(&mut self, dtype: DType) {
         if self.dtype == DType::F16 {
             return; // weights already quantized; cannot go back up
@@ -481,11 +516,7 @@ impl RefBackend {
         self.dtype = dtype;
         if dtype == DType::F16 {
             for weights in self.weights.values_mut() {
-                for p in weights.params.iter_mut() {
-                    for v in p.data.iter_mut() {
-                        *v = quantize_f16(*v);
-                    }
-                }
+                weights.quantize_to_f16();
             }
         }
     }
@@ -493,6 +524,19 @@ impl RefBackend {
     /// The storage precision graph calls execute with.
     pub fn dtype(&self) -> DType {
         self.dtype
+    }
+
+    /// Select the GEMM kernel ([`Kernel::Blocked`] by default).  Every
+    /// kernel computes the identical f32 add chain per output element,
+    /// so this never changes results — it is the `--kernel` A/B and
+    /// debugging escape hatch.
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.kernel = kernel;
+    }
+
+    /// The GEMM kernel graph calls execute with.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// Decide the row-team size for one graph call: only split when the
@@ -563,10 +607,11 @@ impl RefBackend {
         let weights = self.weights.get(wkey).ok_or_else(|| {
             Error::Manifest(format!("no weights variant '{wkey}'"))
         })?;
-        Model::with_dtype(
+        Model::with_options(
             weights,
             self.manifest.config_for(variant),
             self.dtype,
+            self.kernel,
         )
     }
 }
@@ -1019,8 +1064,12 @@ impl Backend for RefBackend {
             .map(|r| r.start + r.tokens.len())
             .max()
             .unwrap_or(0);
-        let mut scratch = Scratch::new(cfg, max_ctx.max(1));
-        let mut x = vec![0.0f32; cfg.d_model];
+        let mut ps = self
+            .paged_scratch
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        ps.fit(cfg, max_ctx.max(1));
+        let PagedScratch { scratch, x } = &mut *ps;
         for (i, row) in rows.iter().enumerate() {
             check_table(
                 &row.blocks,
@@ -1038,19 +1087,20 @@ impl Backend for RefBackend {
             // invisible in the logits
             for (j, &tok) in row.tokens.iter().enumerate() {
                 let at = row.start + j;
-                model.embed_row(tok, at, &mut x);
+                model.embed_row(tok, at, x);
                 model.forward_row_paged(
                     &row.blocks,
                     at,
                     at + 1,
-                    &mut x,
+                    x,
                     &mut k,
                     &mut v,
-                    &mut scratch,
+                    scratch,
                 );
             }
-            model.logits_row(&x, &mut logits[i * vsize..(i + 1) * vsize]);
+            model.logits_row(x, &mut logits[i * vsize..(i + 1) * vsize]);
         }
+        drop(ps);
         let mut st = self.stats.lock().unwrap();
         st.executions += 1;
         st.execute_secs += t0.elapsed().as_secs_f64();
@@ -1079,34 +1129,117 @@ impl Backend for RefBackend {
             .map(|r| r.position.max(0) as usize + 1)
             .max()
             .unwrap_or(0);
-        let mut scratch = Scratch::new(cfg, max_ctx.max(1));
-        let mut x = vec![0.0f32; cfg.d_model];
+        let mut ps = self
+            .paged_scratch
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        ps.fit(cfg, max_ctx.max(1));
+        let PagedScratch { scratch, x } = &mut *ps;
         for (i, row) in rows.iter().enumerate() {
             let at = row.position.max(0) as usize;
             check_table(&row.blocks, at + 1, &k, "paged_decode")?;
-            model.embed_row(row.token.max(0), at, &mut x);
+            model.embed_row(row.token.max(0), at, x);
             model.forward_row_paged(
                 &row.blocks,
                 at,
                 at + 1,
-                &mut x,
+                x,
                 &mut k,
                 &mut v,
-                &mut scratch,
+                scratch,
             );
-            model.logits_row(&x, &mut logits[i * vsize..(i + 1) * vsize]);
+            model.logits_row(x, &mut logits[i * vsize..(i + 1) * vsize]);
         }
+        drop(ps);
         let mut st = self.stats.lock().unwrap();
         st.executions += 1;
         st.execute_secs += t0.elapsed().as_secs_f64();
         drop(st);
         Ok((logits, OpaqueTensor::new(k), OpaqueTensor::new(v)))
     }
+
+    /// Fused multi-step paged decode: `steps` greedy iterations without
+    /// returning to the session between tokens — the paged twin of the
+    /// contiguous `ft_decode_multi` graph.  Rows are independent (each
+    /// row's argmax feeds only its own next token, and each row writes
+    /// only its own blocks), so the step-major loop below emits exactly
+    /// the tokens `steps` repeated [`Backend::paged_decode`] + argmax
+    /// round trips would — bitwise, asserted by
+    /// `paged_fused_multi_step_matches_repeated_single_steps`.
+    fn paged_decode_multi(
+        &self,
+        variant: &str,
+        k: OpaqueTensor,
+        v: OpaqueTensor,
+        rows: &[PagedDecodeRow],
+        steps: usize,
+    ) -> Result<(Vec<i32>, OpaqueTensor, OpaqueTensor)> {
+        if steps == 0 {
+            return Err(Error::Other(
+                "paged_decode_multi: steps must be > 0".into(),
+            ));
+        }
+        let model = self.model_for_variant(variant)?;
+        let cfg = model.cfg;
+        let vsize = cfg.vocab_size;
+        let mut k = take_paged(k, cfg, "paged_decode_multi k_cache")?;
+        let mut v = take_paged(v, cfg, "paged_decode_multi v_cache")?;
+        let t0 = Instant::now();
+        let max_ctx = rows
+            .iter()
+            .map(|r| r.position.max(0) as usize + steps)
+            .max()
+            .unwrap_or(0);
+        // validate every row's table against its FINAL slot up front so
+        // no KV writes land before an error surfaces
+        for row in rows {
+            let at = row.position.max(0) as usize;
+            check_table(&row.blocks, at + steps, &k, "paged_decode_multi")?;
+        }
+        let mut toks = vec![0i32; rows.len() * steps];
+        let mut last: Vec<i32> = rows.iter().map(|r| r.token).collect();
+        let mut pos: Vec<usize> =
+            rows.iter().map(|r| r.position.max(0) as usize).collect();
+        let mut ps = self
+            .paged_scratch
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        ps.fit(cfg, max_ctx.max(1));
+        let PagedScratch { scratch, x } = &mut *ps;
+        let mut logits = vec![0.0f32; vsize];
+        for step in 0..steps {
+            for (i, row) in rows.iter().enumerate() {
+                let at = pos[i];
+                model.embed_row(last[i].max(0), at, x);
+                model.forward_row_paged(
+                    &row.blocks,
+                    at,
+                    at + 1,
+                    x,
+                    &mut k,
+                    &mut v,
+                    scratch,
+                );
+                model.logits_row(x, &mut logits);
+                let t = argmax(&logits) as i32;
+                toks[i * steps + step] = t;
+                last[i] = t;
+                pos[i] += 1;
+            }
+        }
+        drop(ps);
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        drop(st);
+        Ok((toks, OpaqueTensor::new(k), OpaqueTensor::new(v)))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::dtype::quantize_f16;
     use crate::special;
 
     fn tiny_preset() -> RefPreset {
@@ -1164,10 +1297,13 @@ mod tests {
         let ft = full.get("tok_emb").unwrap();
         let pt = pruned.get("tok_emb").unwrap();
         assert_eq!(pt.data.len(), p.vocab_pruned * p.d_model);
-        assert_eq!(&ft.data[..pt.data.len()], pt.data.as_slice());
         assert_eq!(
-            full.get("layer0.wq").unwrap().data,
-            pruned.get("layer0.wq").unwrap().data
+            &ft.data.as_f32()[..pt.data.len()],
+            pt.data.as_f32()
+        );
+        assert_eq!(
+            full.get("layer0.wq").unwrap().data.as_f32(),
+            pruned.get("layer0.wq").unwrap().data.as_f32()
         );
     }
 
@@ -1371,6 +1507,15 @@ mod tests {
 
     #[test]
     fn fp16_backend_quantizes_weights_and_reports_dtype() {
+        let fp32_bytes: usize = ["full", "pruned"]
+            .iter()
+            .map(|key| {
+                RefBackend::with_preset(&tiny_preset())
+                    .host_weights(key)
+                    .unwrap()
+                    .storage_bytes()
+            })
+            .sum();
         let mut b = RefBackend::with_preset(&tiny_preset());
         assert_eq!(b.dtype(), DType::F32);
         b.set_dtype(DType::F16);
@@ -1379,11 +1524,16 @@ mod tests {
         // relabel the (already lossy) storage
         b.set_dtype(DType::F32);
         assert_eq!(b.dtype(), DType::F16);
-        // every weight cell is exactly binary16-representable now
+        // storage is TRUE binary16 now: exactly half the resident bytes,
+        // and every cell decodes to a binary16-representable value
+        let mut f16_bytes = 0usize;
         for key in ["full", "pruned"] {
             let w = b.host_weights(key).unwrap();
+            f16_bytes += w.storage_bytes();
             for p in &w.params {
-                for &v in &p.data {
+                let view = p.data.view();
+                for i in 0..view.len() {
+                    let v = view.at(i);
                     assert_eq!(
                         v,
                         quantize_f16(v),
@@ -1393,6 +1543,11 @@ mod tests {
                 }
             }
         }
+        assert_eq!(
+            f16_bytes * 2,
+            fp32_bytes,
+            "true-f16 storage must halve resident weight bytes"
+        );
         // and the backend still executes end-to-end
         let prompt = [special::BOS as i32, 5, 9, special::SEP as i32];
         let outs = b
@@ -1502,6 +1657,139 @@ mod tests {
                 b.paged_decode("full", pk, pv, &drows).unwrap();
             assert_eq!(p_dec, c_dec, "paged decode diverged (fp16={f16})");
         }
+    }
+
+    #[test]
+    fn paged_fused_multi_step_matches_repeated_single_steps() {
+        // The paged twin of `multi_step_decode_equals_repeated_single_
+        // steps`: one fused paged_decode_multi call must emit exactly
+        // the tokens of `steps` paged_decode + argmax round trips, for
+        // both storage dtypes and both kernels.
+        let prompt = [special::BOS as i32, 3, 8, 4, special::SEP as i32];
+        let steps = 4usize;
+        for f16 in [false, true] {
+            for kernel in [Kernel::Scalar, Kernel::Blocked] {
+                let mut b = RefBackend::with_preset(&tiny_preset());
+                if f16 {
+                    b.set_dtype(DType::F16);
+                }
+                b.set_kernel(kernel);
+                let table = vec![4u32, 1, 6];
+                let prefill = |b: &RefBackend| {
+                    let (pk, pv) = b.paged_kv_alloc("full", 8, 4).unwrap();
+                    let rows = vec![PagedPrefillRow {
+                        tokens: prompt.to_vec(),
+                        start: 0,
+                        blocks: table.clone(),
+                    }];
+                    let (l, pk, pv) =
+                        b.paged_prefill("full", pk, pv, &rows).unwrap();
+                    (argmax(&l) as i32, pk, pv)
+                };
+
+                // fused path
+                let (first, pk, pv) = prefill(&b);
+                let rows = vec![PagedDecodeRow {
+                    token: first,
+                    position: prompt.len() as i32,
+                    blocks: table.clone(),
+                }];
+                let (fused, fk, _) = b
+                    .paged_decode_multi("full", pk, pv, &rows, steps)
+                    .unwrap();
+
+                // single-step path from a fresh pool
+                let (first2, mut pk, mut pv) = prefill(&b);
+                assert_eq!(first, first2);
+                let (mut tok, mut at) = (first, prompt.len() as i32);
+                let mut singles = Vec::new();
+                for _ in 0..steps {
+                    let rows = vec![PagedDecodeRow {
+                        token: tok,
+                        position: at,
+                        blocks: table.clone(),
+                    }];
+                    let (l, k2, v2) =
+                        b.paged_decode("full", pk, pv, &rows).unwrap();
+                    pk = k2;
+                    pv = v2;
+                    tok = argmax(&l) as i32;
+                    at += 1;
+                    singles.push(tok);
+                }
+                assert_eq!(
+                    fused, singles,
+                    "fused paged decode diverged (fp16={f16}, \
+                     kernel={kernel:?})"
+                );
+                // the fused call's KV writes land identically
+                let fkc = fk.downcast::<PagedKvCache>().unwrap();
+                let skc = pk.downcast::<PagedKvCache>().unwrap();
+                assert_eq!(fkc.data, skc.data, "fused k cache diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn paged_decode_multi_validates_steps_and_tables() {
+        let b = RefBackend::with_preset(&tiny_preset());
+        let (pk, pv) = b.paged_kv_alloc("full", 4, 4).unwrap();
+        let rows = vec![PagedDecodeRow {
+            token: 5,
+            position: 6,
+            blocks: vec![0, 1],
+        }];
+        // steps == 0 is a usage error
+        assert!(b
+            .paged_decode_multi("full", pk.clone(), pv.clone(), &rows, 0)
+            .is_err());
+        // the table covers slot 6 but not slots 7..9 the fused steps
+        // would write — the call must refuse up front
+        assert!(b
+            .paged_decode_multi("full", pk.clone(), pv.clone(), &rows, 3)
+            .is_err());
+        assert!(b
+            .paged_decode_multi("full", pk, pv, &rows, 2)
+            .is_ok());
+    }
+
+    #[test]
+    fn scalar_and_blocked_kernels_agree_end_to_end() {
+        // The kernel knob is a pure performance lever: full prefill +
+        // fused decode output is bitwise-identical under both kernels.
+        let prompt =
+            [special::BOS as i32, 5, 9, 6, 11, special::SEP as i32];
+        let run = |kernel: Kernel| {
+            let mut b = RefBackend::with_preset(&tiny_preset());
+            b.set_kernel(kernel);
+            assert_eq!(b.kernel(), kernel);
+            let pre = b
+                .execute("ft_prefill_full_b1_s8", prompt_args(1, 8, &prompt))
+                .unwrap();
+            let mut it = pre.into_iter();
+            let logits = it.next().unwrap().into_f32().unwrap();
+            let k = it.next().unwrap().into_opaque().unwrap();
+            let v = it.next().unwrap().into_opaque().unwrap();
+            let next = argmax(&logits) as i32;
+            let multi = b
+                .execute(
+                    "ft_decode_multi_full_b1_s8",
+                    vec![
+                        DataArg::I32(vec![next], vec![1]),
+                        DataArg::I32(vec![prompt.len() as i32], vec![1]),
+                        DataArg::Opaque(k),
+                        DataArg::Opaque(v),
+                    ],
+                )
+                .unwrap();
+            let toks =
+                multi.into_iter().next().unwrap().into_i32().unwrap();
+            (logits, toks)
+        };
+        let (sl, st) = run(Kernel::Scalar);
+        let (bl, bt) = run(Kernel::Blocked);
+        assert_eq!(sl, bl, "kernel choice changed prefill logits");
+        assert_eq!(st, bt, "kernel choice changed fused decode tokens");
     }
 
     #[test]

@@ -13,18 +13,35 @@
 //!
 //! **Precision.**  Storage dtype is a [`DType`] parameter
 //! ([`Model::with_dtype`]): under [`DType::F16`] the model keeps its
-//! weights (quantized once at backend construction), the activations
-//! at block boundaries (embedding output, both residual streams, the
-//! final hidden state) and the KV caches in binary16 while every dot
+//! weights (quantized once at backend construction, as TRUE binary16
+//! bit patterns — half the resident bytes), the activations at block
+//! boundaries (embedding output, both residual streams, the final
+//! hidden state) and the KV caches in binary16 while every dot
 //! product still accumulates in f32 — the mixed-precision contract of
 //! the PJRT fp16 artifacts, now executable hermetically.  The fixed
 //! accumulation order is shared by both dtypes, so the fp32/fp16
 //! identity properties above hold per dtype.
+//!
+//! **Kernels.**  The matmul inner loops come in two [`Kernel`]
+//! flavors.  `Scalar` is the original loop nest.  `Blocked` re-tiles
+//! the *independent-output* loops — column panels of [`NB`] outputs
+//! for [`linear`], row panels of [`RB`] vocab rows for
+//! [`logits_matvec`] — holding panel accumulators in registers so the
+//! output vector is written once instead of read-modified-written per
+//! input row, and so the autovectorizer sees `NB`/`RB` independent
+//! f32 chains instead of one latency-bound chain.  Each individual
+//! output's accumulation ORDER is untouched (only loops over
+//! independent outputs are re-tiled, never a reduction), which makes
+//! the two kernels bitwise-identical by construction: golden traces
+//! and every cross-path identity gate hold under either selection.
+//! Both kernels are generic over the weight storage element and fuse
+//! the exact f16→f32 dequant into the inner loop — no widened f32
+//! copy of a binary16 parameter ever materializes.
 
-use crate::runtime::dtype::DType;
 pub use crate::runtime::dtype::quantize_f16;
+use crate::runtime::dtype::{DType, Kernel, F16};
 use crate::runtime::manifest::ModelConfig;
-use crate::runtime::weights::{HostParam, HostWeights};
+use crate::runtime::weights::{HostParam, HostWeights, WSlice};
 use crate::{Error, Result};
 
 /// A KV cache for one graph bucket: `[layers, batch, heads, slots, d_head]`
@@ -169,8 +186,46 @@ impl PagedKvCache {
     }
 }
 
+/// A weight-storage element the kernels can widen to f32 exactly.
+/// `f32` widens for free; `u16` is a raw binary16 bit pattern widened
+/// by the branch-light [`F16::to_f32`] — the fused dequant.
+trait WElem: Copy {
+    fn widen(self) -> f32;
+}
+
+impl WElem for f32 {
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        self
+    }
+}
+
+impl WElem for u16 {
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        F16::from_bits(self).to_f32()
+    }
+}
+
+/// Column-panel width of the blocked [`linear`] kernel: 16 f32
+/// accumulators (one 64-byte line of output) held in registers per
+/// panel.
+pub const NB: usize = 16;
+
+/// Row-panel height of the blocked [`logits_matvec`] kernel: 8
+/// independent dot-product chains per panel.
+pub const RB: usize = 8;
+
 /// LayerNorm over one row: `(x - mean) * rsqrt(var + eps) * g + b`.
-fn layernorm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+fn layernorm(x: &[f32], g: WSlice, b: WSlice, out: &mut [f32]) {
+    match (g, b) {
+        (WSlice::F32(g), WSlice::F32(b)) => layernorm_impl(x, g, b, out),
+        (WSlice::F16(g), WSlice::F16(b)) => layernorm_impl(x, g, b, out),
+        _ => unreachable!("gain/bias always share one storage dtype"),
+    }
+}
+
+fn layernorm_impl<W: WElem>(x: &[f32], g: &[W], b: &[W], out: &mut [f32]) {
     let d = x.len();
     let mut mean = 0.0f32;
     for &v in x {
@@ -185,20 +240,180 @@ fn layernorm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
     var /= d as f32;
     let inv = 1.0 / (var + 1e-5).sqrt();
     for j in 0..d {
-        out[j] = (x[j] - mean) * inv * g[j] + b[j];
+        out[j] = (x[j] - mean) * inv * g[j].widen() + b[j].widen();
     }
 }
 
-/// Dense row: `out = x @ w + b`, `w` row-major `[din, dout]`.
-fn linear(x: &[f32], w: &[f32], b: &[f32], din: usize, dout: usize, out: &mut [f32]) {
-    out[..dout].copy_from_slice(&b[..dout]);
+/// Dense row: `out = x @ w + b`, `w` row-major `[din, dout]`, storage
+/// dtype-tagged, inner loops selected by `kernel`.
+///
+/// Both kernels produce bitwise-identical output: see the module doc.
+pub fn linear(
+    x: &[f32],
+    w: WSlice,
+    b: WSlice,
+    din: usize,
+    dout: usize,
+    out: &mut [f32],
+    kernel: Kernel,
+) {
+    match (w, b) {
+        (WSlice::F32(w), WSlice::F32(b)) => match kernel {
+            Kernel::Scalar => linear_scalar(x, w, b, din, dout, out),
+            Kernel::Blocked => linear_blocked(x, w, b, din, dout, out),
+        },
+        (WSlice::F16(w), WSlice::F16(b)) => match kernel {
+            Kernel::Scalar => linear_scalar(x, w, b, din, dout, out),
+            Kernel::Blocked => linear_blocked(x, w, b, din, dout, out),
+        },
+        _ => unreachable!("weights/bias always share one storage dtype"),
+    }
+}
+
+/// The original scalar loop nest: seed the output with the bias, then
+/// stream input rows with a read-modify-write over the whole output
+/// vector per nonzero input.
+fn linear_scalar<W: WElem>(
+    x: &[f32],
+    w: &[W],
+    b: &[W],
+    din: usize,
+    dout: usize,
+    out: &mut [f32],
+) {
+    for (o, &bv) in out[..dout].iter_mut().zip(b[..dout].iter()) {
+        *o = bv.widen();
+    }
     for (i, &xi) in x.iter().enumerate().take(din) {
         if xi == 0.0 {
             continue;
         }
         let row = &w[i * dout..(i + 1) * dout];
-        for j in 0..dout {
-            out[j] += xi * row[j];
+        for (o, &wv) in out[..dout].iter_mut().zip(row.iter()) {
+            *o += xi * wv.widen();
+        }
+    }
+}
+
+/// Column-panel blocked GEMM: for each panel of `NB` output columns,
+/// seed `NB` register accumulators from the bias and stream the input
+/// once, so output traffic drops from `din` read-modify-write passes
+/// to a single store and the accumulators form `NB` independent f32
+/// chains the autovectorizer can lift.  Per output column the add
+/// sequence is exactly the scalar kernel's (inputs in ascending order,
+/// zero inputs skipped), hence bitwise identity.
+fn linear_blocked<W: WElem>(
+    x: &[f32],
+    w: &[W],
+    b: &[W],
+    din: usize,
+    dout: usize,
+    out: &mut [f32],
+) {
+    let x = &x[..din.min(x.len())];
+    let main = dout - dout % NB;
+    let mut j0 = 0;
+    while j0 < main {
+        // full panel: NB is a compile-time constant here
+        let mut acc = [0.0f32; NB];
+        for (a, &bv) in acc.iter_mut().zip(b[j0..j0 + NB].iter()) {
+            *a = bv.widen();
+        }
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let start = i * dout + j0;
+            let row = &w[start..start + NB];
+            for (a, &wv) in acc.iter_mut().zip(row.iter()) {
+                *a += xi * wv.widen();
+            }
+        }
+        out[j0..j0 + NB].copy_from_slice(&acc);
+        j0 += NB;
+    }
+    if main < dout {
+        // ragged tail panel (dout not a multiple of NB)
+        let nt = dout - main;
+        let mut acc = [0.0f32; NB];
+        for (a, &bv) in acc[..nt].iter_mut().zip(b[main..dout].iter()) {
+            *a = bv.widen();
+        }
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let start = i * dout + main;
+            let row = &w[start..start + nt];
+            for (a, &wv) in acc[..nt].iter_mut().zip(row.iter()) {
+                *a += xi * wv.widen();
+            }
+        }
+        out[main..dout].copy_from_slice(&acc[..nt]);
+    }
+}
+
+/// Tied-embedding logits GEMV: `out[r] = h · emb[r]` for `vocab` rows
+/// of a row-major `[vocab, d]` embedding, storage dtype-tagged.
+///
+/// The scalar kernel is one latency-bound dot chain per vocab row; the
+/// blocked kernel walks `RB` rows simultaneously (each row's own chain
+/// still strictly `j`-ascending — bitwise identity again), turning the
+/// dominant per-token cost (vocab × d_model) from FP-add latency into
+/// throughput.
+pub fn logits_matvec(
+    h: &[f32],
+    emb: WSlice,
+    d: usize,
+    vocab: usize,
+    out: &mut [f32],
+    kernel: Kernel,
+) {
+    match emb {
+        WSlice::F32(w) => logits_impl(h, w, d, vocab, out, kernel),
+        WSlice::F16(w) => logits_impl(h, w, d, vocab, out, kernel),
+    }
+}
+
+fn logits_impl<W: WElem>(
+    h: &[f32],
+    w: &[W],
+    d: usize,
+    vocab: usize,
+    out: &mut [f32],
+    kernel: Kernel,
+) {
+    let h = &h[..d];
+    let scalar_rows = |lo: usize, hi: usize, out: &mut [f32]| {
+        for (i, o) in out.iter_mut().enumerate().take(hi - lo) {
+            let row = &w[(lo + i) * d..(lo + i + 1) * d];
+            let mut s = 0.0f32;
+            for (j, &wv) in row.iter().enumerate() {
+                s += h[j] * wv.widen();
+            }
+            *o = s;
+        }
+    };
+    match kernel {
+        Kernel::Scalar => scalar_rows(0, vocab, &mut out[..vocab]),
+        Kernel::Blocked => {
+            let main = vocab - vocab % RB;
+            let mut r0 = 0;
+            while r0 < main {
+                let mut acc = [0.0f32; RB];
+                let rows: [&[W]; RB] = std::array::from_fn(|k| {
+                    &w[(r0 + k) * d..(r0 + k + 1) * d]
+                });
+                for (j, &hj) in h.iter().enumerate() {
+                    for (a, row) in acc.iter_mut().zip(rows.iter()) {
+                        *a += hj * row[j].widen();
+                    }
+                }
+                out[r0..r0 + RB].copy_from_slice(&acc);
+                r0 += RB;
+            }
+            // ragged tail (vocab not a multiple of RB)
+            scalar_rows(main, vocab, &mut out[main..vocab]);
         }
     }
 }
@@ -211,6 +426,11 @@ fn gelu(x: f32) -> f32 {
 }
 
 /// First-index argmax, matching `Sampler::greedy` and `jnp.argmax`.
+///
+/// All-NaN (or empty) logits would silently select index 0 — that is a
+/// numerics bug upstream, debug-asserted here on the hot path and
+/// surfaced as a typed `Error::Backend` by the checked twin at the
+/// sampling boundary (`engine::sampling::try_argmax`).
 pub fn argmax(logits: &[f32]) -> u32 {
     let mut best = 0usize;
     let mut best_v = f32::NEG_INFINITY;
@@ -220,6 +440,10 @@ pub fn argmax(logits: &[f32]) -> u32 {
             best = i;
         }
     }
+    debug_assert!(
+        logits.iter().any(|v| !v.is_nan()),
+        "argmax over empty or all-NaN logits"
+    );
     best as u32
 }
 
@@ -227,6 +451,7 @@ pub fn argmax(logits: &[f32]) -> u32 {
 /// inner loop ([`Model::forward_row`]) performs no heap allocation.
 /// Every buffer is fully overwritten before it is read, so reuse
 /// across rows/steps cannot change results.
+#[derive(Default)]
 pub struct Scratch {
     h: Vec<f32>,
     q: Vec<f32>,
@@ -239,50 +464,75 @@ pub struct Scratch {
 impl Scratch {
     /// Sized for a model config and a bucket with `slots` cache slots.
     pub fn new(cfg: &ModelConfig, slots: usize) -> Self {
-        Self {
-            h: vec![0.0; cfg.d_model],
-            q: vec![0.0; cfg.d_model],
-            attn: vec![0.0; cfg.d_model],
-            proj: vec![0.0; cfg.d_model],
-            ff: vec![0.0; cfg.d_ff],
-            scores: vec![0.0; slots],
+        let mut s = Self {
+            h: Vec::new(),
+            q: Vec::new(),
+            attn: Vec::new(),
+            proj: Vec::new(),
+            ff: Vec::new(),
+            scores: Vec::new(),
+        };
+        s.ensure(cfg, slots);
+        s
+    }
+
+    /// Re-fit the buffers for a (possibly different) config/slot count,
+    /// retaining allocations where capacity suffices.  This is what
+    /// lets a backend keep ONE cached `Scratch` across paged
+    /// prefill/decode calls instead of allocating per call: every
+    /// buffer is still fully overwritten before it is read, and the
+    /// lengths end up exactly as `Scratch::new` would produce them
+    /// (forward rows `copy_from_slice` out of `h`, so exact lengths
+    /// matter, not just lower bounds).
+    pub fn ensure(&mut self, cfg: &ModelConfig, slots: usize) {
+        fn fit(v: &mut Vec<f32>, n: usize) {
+            v.resize(n, 0.0);
         }
+        fit(&mut self.h, cfg.d_model);
+        fit(&mut self.q, cfg.d_model);
+        fit(&mut self.attn, cfg.d_model);
+        fit(&mut self.proj, cfg.d_model);
+        fit(&mut self.ff, cfg.d_ff);
+        fit(&mut self.scores, slots);
     }
 }
 
-/// Per-layer parameter views resolved once per graph call.
+/// Per-layer parameter views resolved once per graph call (dtype-
+/// tagged: binary16 weights are dequantized inside the kernels).
 struct LayerRefs<'a> {
-    ln1_g: &'a [f32],
-    ln1_b: &'a [f32],
-    wq: &'a [f32],
-    bq: &'a [f32],
-    wk: &'a [f32],
-    bk: &'a [f32],
-    wv: &'a [f32],
-    bv: &'a [f32],
-    wo: &'a [f32],
-    bo: &'a [f32],
-    ln2_g: &'a [f32],
-    ln2_b: &'a [f32],
-    w1: &'a [f32],
-    b1: &'a [f32],
-    w2: &'a [f32],
-    b2: &'a [f32],
+    ln1_g: WSlice<'a>,
+    ln1_b: WSlice<'a>,
+    wq: WSlice<'a>,
+    bq: WSlice<'a>,
+    wk: WSlice<'a>,
+    bk: WSlice<'a>,
+    wv: WSlice<'a>,
+    bv: WSlice<'a>,
+    wo: WSlice<'a>,
+    bo: WSlice<'a>,
+    ln2_g: WSlice<'a>,
+    ln2_b: WSlice<'a>,
+    w1: WSlice<'a>,
+    b1: WSlice<'a>,
+    w2: WSlice<'a>,
+    b2: WSlice<'a>,
 }
 
 /// One model variant bound to its weights — the reference "executable".
 pub struct Model<'a> {
     pub cfg: &'a ModelConfig,
-    tok_emb: &'a [f32],
-    pos_emb: &'a [f32],
-    lnf_g: &'a [f32],
-    lnf_b: &'a [f32],
+    tok_emb: WSlice<'a>,
+    pos_emb: WSlice<'a>,
+    lnf_g: WSlice<'a>,
+    lnf_b: WSlice<'a>,
     layers: Vec<LayerRefs<'a>>,
     /// Store KV-cache cells in binary16 (runtime dtype F16, or a
     /// manifest whose artifacts declare f16 caches).
     quantize_cache: bool,
     /// Store block-boundary activations in binary16 (runtime dtype F16).
     quantize_activations: bool,
+    /// Which matmul kernel family the forward passes run with.
+    kernel: Kernel,
 }
 
 fn param<'a>(w: &'a HostWeights, name: &str) -> Result<&'a HostParam> {
@@ -297,18 +547,30 @@ impl<'a> Model<'a> {
         Self::with_dtype(w, cfg, DType::F32)
     }
 
-    /// Bind weights at an explicit runtime storage dtype.  The weights
-    /// themselves are quantized by the backend (once, at construction);
-    /// this flag controls activation/KV-cache storage per call.
+    /// Bind weights at an explicit runtime storage dtype, with the
+    /// default (blocked) kernel selection.
     pub fn with_dtype(
         w: &'a HostWeights,
         cfg: &'a ModelConfig,
         dtype: DType,
     ) -> Result<Self> {
+        Self::with_options(w, cfg, dtype, Kernel::default())
+    }
+
+    /// Bind weights at an explicit runtime storage dtype and kernel
+    /// selection.  The weights themselves are quantized by the backend
+    /// (once, at construction); the dtype flag controls activation/
+    /// KV-cache storage per call.
+    pub fn with_options(
+        w: &'a HostWeights,
+        cfg: &'a ModelConfig,
+        dtype: DType,
+        kernel: Kernel,
+    ) -> Result<Self> {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
-            let g = |n: &str| -> Result<&'a [f32]> {
-                Ok(&param(w, &format!("layer{i}.{n}"))?.data)
+            let g = |n: &str| -> Result<WSlice<'a>> {
+                Ok(param(w, &format!("layer{i}.{n}"))?.data.view())
             };
             layers.push(LayerRefs {
                 ln1_g: g("ln1_g")?,
@@ -331,13 +593,14 @@ impl<'a> Model<'a> {
         }
         Ok(Self {
             cfg,
-            tok_emb: &param(w, "tok_emb")?.data,
-            pos_emb: &param(w, "pos_emb")?.data,
-            lnf_g: &param(w, "lnf_g")?.data,
-            lnf_b: &param(w, "lnf_b")?.data,
+            tok_emb: param(w, "tok_emb")?.data.view(),
+            pos_emb: param(w, "pos_emb")?.data.view(),
+            lnf_g: param(w, "lnf_g")?.data.view(),
+            lnf_b: param(w, "lnf_b")?.data.view(),
             layers,
             quantize_cache: dtype == DType::F16 || cfg.dtype == "f16",
             quantize_activations: dtype == DType::F16,
+            kernel,
         })
     }
 
@@ -369,10 +632,19 @@ impl<'a> Model<'a> {
         let d = self.cfg.d_model;
         let t = (token.max(0) as usize).min(self.cfg.vocab_size - 1);
         let p = pos.min(self.cfg.max_position - 1);
-        let te = &self.tok_emb[t * d..(t + 1) * d];
-        let pe = &self.pos_emb[p * d..(p + 1) * d];
-        for j in 0..d {
-            out[j] = te[j] + pe[j];
+        let out = &mut out[..d];
+        self.tok_emb.decode_into(t * d, out);
+        match self.pos_emb {
+            WSlice::F32(pe) => {
+                for (o, &v) in out.iter_mut().zip(pe[p * d..].iter()) {
+                    *o += v;
+                }
+            }
+            WSlice::F16(pe) => {
+                for (o, &bits) in out.iter_mut().zip(pe[p * d..].iter()) {
+                    *o += F16::from_bits(bits).to_f32();
+                }
+            }
         }
         self.store_row(out);
     }
@@ -411,15 +683,15 @@ impl<'a> Model<'a> {
         for (li, lp) in self.layers.iter().enumerate() {
             // attention block (pre-LN)
             layernorm(x, lp.ln1_g, lp.ln1_b, h);
-            linear(h, lp.wq, lp.bq, d, d, q);
-            linear(h, lp.wk, lp.bk, d, d, proj);
+            linear(h, lp.wq, lp.bq, d, d, q, self.kernel);
+            linear(h, lp.wk, lp.bk, d, d, proj, self.kernel);
             for hh in 0..nh {
                 let off = k.at(li, bi, hh, slot);
                 for j in 0..dh {
                     k.data[off + j] = self.store(proj[hh * dh + j]);
                 }
             }
-            linear(h, lp.wv, lp.bv, d, d, proj);
+            linear(h, lp.wv, lp.bv, d, d, proj, self.kernel);
             for hh in 0..nh {
                 let off = v.at(li, bi, hh, slot);
                 for j in 0..dh {
@@ -457,7 +729,7 @@ impl<'a> Model<'a> {
                     }
                 }
             }
-            linear(attn, lp.wo, lp.bo, d, d, proj);
+            linear(attn, lp.wo, lp.bo, d, d, proj, self.kernel);
             for j in 0..d {
                 x[j] += proj[j];
             }
@@ -465,11 +737,11 @@ impl<'a> Model<'a> {
 
             // FFN block (pre-LN)
             layernorm(x, lp.ln2_g, lp.ln2_b, h);
-            linear(h, lp.w1, lp.b1, d, f, ff);
+            linear(h, lp.w1, lp.b1, d, f, ff, self.kernel);
             for vff in ff.iter_mut() {
                 *vff = gelu(*vff);
             }
-            linear(ff, lp.w2, lp.b2, f, d, proj);
+            linear(ff, lp.w2, lp.b2, f, d, proj, self.kernel);
             for j in 0..d {
                 x[j] += proj[j];
             }
@@ -515,15 +787,15 @@ impl<'a> Model<'a> {
         for (li, lp) in self.layers.iter().enumerate() {
             // attention block (pre-LN)
             layernorm(x, lp.ln1_g, lp.ln1_b, h);
-            linear(h, lp.wq, lp.bq, d, d, q);
-            linear(h, lp.wk, lp.bk, d, d, proj);
+            linear(h, lp.wq, lp.bq, d, d, q, self.kernel);
+            linear(h, lp.wk, lp.bk, d, d, proj, self.kernel);
             for hh in 0..nh {
                 let off = k.slot_at(table, li, hh, slot);
                 for j in 0..dh {
                     k.data[off + j] = self.store(proj[hh * dh + j]);
                 }
             }
-            linear(h, lp.wv, lp.bv, d, d, proj);
+            linear(h, lp.wv, lp.bv, d, d, proj, self.kernel);
             for hh in 0..nh {
                 let off = v.slot_at(table, li, hh, slot);
                 for j in 0..dh {
@@ -561,7 +833,7 @@ impl<'a> Model<'a> {
                     }
                 }
             }
-            linear(attn, lp.wo, lp.bo, d, d, proj);
+            linear(attn, lp.wo, lp.bo, d, d, proj, self.kernel);
             for j in 0..d {
                 x[j] += proj[j];
             }
@@ -569,11 +841,11 @@ impl<'a> Model<'a> {
 
             // FFN block (pre-LN)
             layernorm(x, lp.ln2_g, lp.ln2_b, h);
-            linear(h, lp.w1, lp.b1, d, f, ff);
+            linear(h, lp.w1, lp.b1, d, f, ff, self.kernel);
             for vff in ff.iter_mut() {
                 *vff = gelu(*vff);
             }
-            linear(ff, lp.w2, lp.b2, f, d, proj);
+            linear(ff, lp.w2, lp.b2, f, d, proj, self.kernel);
             for j in 0..d {
                 x[j] += proj[j];
             }
@@ -587,15 +859,14 @@ impl<'a> Model<'a> {
 
     /// Tied-embedding logits for one final hidden row: `h @ tok_emb.T`.
     pub fn logits_row(&self, h: &[f32], out: &mut [f32]) {
-        let d = self.cfg.d_model;
-        for (i, o) in out.iter_mut().enumerate().take(self.cfg.vocab_size) {
-            let row = &self.tok_emb[i * d..(i + 1) * d];
-            let mut s = 0.0f32;
-            for j in 0..d {
-                s += h[j] * row[j];
-            }
-            *o = s;
-        }
+        logits_matvec(
+            h,
+            self.tok_emb,
+            self.cfg.d_model,
+            self.cfg.vocab_size,
+            out,
+            self.kernel,
+        );
     }
 }
 
@@ -609,7 +880,7 @@ mod tests {
         let g = [1.0f32; 4];
         let b = [0.0f32; 4];
         let mut out = [0.0f32; 4];
-        layernorm(&x, &g, &b, &mut out);
+        layernorm(&x, WSlice::F32(&g), WSlice::F32(&b), &mut out);
         let mean: f32 = out.iter().sum::<f32>() / 4.0;
         let var: f32 =
             out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
@@ -619,13 +890,135 @@ mod tests {
 
     #[test]
     fn linear_matches_manual_matmul() {
-        // x [2] @ w [2,3] + b [3]
+        // x [2] @ w [2,3] + b [3], under both kernels
         let x = [1.0f32, 2.0];
         let w = [1.0f32, 0.0, 2.0, 0.0, 1.0, 3.0];
         let b = [0.5f32, 0.5, 0.5];
-        let mut out = [0.0f32; 3];
-        linear(&x, &w, &b, 2, 3, &mut out);
-        assert_eq!(out, [1.5, 2.5, 8.5]);
+        for kernel in [Kernel::Scalar, Kernel::Blocked] {
+            let mut out = [0.0f32; 3];
+            linear(
+                &x,
+                WSlice::F32(&w),
+                WSlice::F32(&b),
+                2,
+                3,
+                &mut out,
+                kernel,
+            );
+            assert_eq!(out, [1.5, 2.5, 8.5], "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_match_scalar_bitwise_on_ragged_shapes() {
+        // deterministic pseudo-random fill; din/dout straddle the NB/RB
+        // panel boundaries (full panels + ragged tails + sub-panel)
+        fn fill(v: &mut [f32], seed: u32) {
+            let mut s = seed.wrapping_mul(0x9E37_79B9) | 1;
+            for x in v.iter_mut() {
+                s = s.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+                // mix in exact zeros to exercise the skip path
+                *x = if s % 7 == 0 {
+                    0.0
+                } else {
+                    ((s >> 8) as f32 / (1u32 << 24) as f32) - 0.5
+                };
+            }
+        }
+        for &(din, dout) in
+            &[(1usize, 1usize), (2, 3), (7, 16), (16, 17), (33, 47), (40, 64)]
+        {
+            let mut x = vec![0.0f32; din];
+            let mut w = vec![0.0f32; din * dout];
+            let mut b = vec![0.0f32; dout];
+            fill(&mut x, 1 + din as u32);
+            fill(&mut w, 2 + dout as u32);
+            fill(&mut b, 3);
+            let mut scalar = vec![0.0f32; dout];
+            let mut blocked = vec![0.0f32; dout];
+            linear(
+                &x,
+                WSlice::F32(&w),
+                WSlice::F32(&b),
+                din,
+                dout,
+                &mut scalar,
+                Kernel::Scalar,
+            );
+            linear(
+                &x,
+                WSlice::F32(&w),
+                WSlice::F32(&b),
+                din,
+                dout,
+                &mut blocked,
+                Kernel::Blocked,
+            );
+            let sb: Vec<u32> = scalar.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = blocked.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, bb, "linear {din}x{dout}");
+
+            // GEMV twin: treat w as [dout, din] vocab rows
+            let h = &x[..din.min(x.len())];
+            let mut s2 = vec![0.0f32; dout];
+            let mut b2 = vec![0.0f32; dout];
+            logits_matvec(h, WSlice::F32(&w), din, dout, &mut s2, Kernel::Scalar);
+            logits_matvec(h, WSlice::F32(&w), din, dout, &mut b2, Kernel::Blocked);
+            let sb: Vec<u32> = s2.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b2.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, bb, "logits {dout}x{din}");
+        }
+    }
+
+    #[test]
+    fn f16_storage_kernels_match_widened_f32_storage_bitwise() {
+        // running the kernels over TRUE binary16 storage (fused
+        // dequant) must equal running them over the old representation:
+        // quantized values materialized as f32
+        let din = 19;
+        let dout = 23;
+        let mk = |seed: u32, n: usize| -> Vec<f32> {
+            (0..n)
+                .map(|i| {
+                    let s = (seed + i as u32).wrapping_mul(0x45D9_F3B5);
+                    (s >> 16) as f32 / 65536.0 - 0.5
+                })
+                .collect()
+        };
+        let x = mk(11, din);
+        let w = mk(7, din * dout);
+        let b = mk(5, dout);
+        let wq: Vec<f32> = w.iter().map(|&v| quantize_f16(v)).collect();
+        let bq: Vec<f32> = b.iter().map(|&v| quantize_f16(v)).collect();
+        let wh: Vec<u16> =
+            w.iter().map(|&v| F16::from_f32(v).to_bits()).collect();
+        let bh: Vec<u16> =
+            b.iter().map(|&v| F16::from_f32(v).to_bits()).collect();
+        for kernel in [Kernel::Scalar, Kernel::Blocked] {
+            let mut widened = vec![0.0f32; dout];
+            let mut fused = vec![0.0f32; dout];
+            linear(
+                &x,
+                WSlice::F32(&wq),
+                WSlice::F32(&bq),
+                din,
+                dout,
+                &mut widened,
+                kernel,
+            );
+            linear(
+                &x,
+                WSlice::F16(&wh),
+                WSlice::F16(&bh),
+                din,
+                dout,
+                &mut fused,
+                kernel,
+            );
+            let a: Vec<u32> = widened.iter().map(|v| v.to_bits()).collect();
+            let c: Vec<u32> = fused.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, c, "{kernel:?}");
+        }
     }
 
     #[test]

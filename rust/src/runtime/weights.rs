@@ -1,22 +1,159 @@
 //! Weight loading: flat little-endian f32 blobs → host tensors → device
 //! buffers, driven entirely by the manifest index (no numpy/pickle).
+//!
+//! Host parameters are stored dtype-tagged: `f32` as loaded, or TRUE
+//! binary16 (`Vec<u16>` of IEEE 754 half bit patterns) once a backend
+//! quantizes — half the resident bytes, dequantized exactly (and hence
+//! bitwise-identically to the old widened-`f32` storage) inside the
+//! kernel inner loops via [`WSlice`].
 
 use std::path::Path;
 
+use crate::runtime::dtype::F16;
 use crate::runtime::manifest::{ParamEntry, WeightsEntry};
 use crate::{Error, Result};
 
-/// One named host-side parameter tensor (row-major f32).
+/// Dtype-tagged storage of one parameter tensor.
+///
+/// `F32` holds the values as loaded; `F16` holds raw binary16 bit
+/// patterns (2 bytes per element).  Quantization is one-way and
+/// uniform across a [`HostWeights`] set, so kernels may assume every
+/// parameter of a model shares one storage dtype.
+#[derive(Debug, Clone)]
+pub enum ParamData {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl ParamData {
+    pub fn len(&self) -> usize {
+        match self {
+            ParamData::F32(v) => v.len(),
+            ParamData::F16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of the backing store.
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            ParamData::F32(v) => v.len() * 4,
+            ParamData::F16(v) => v.len() * 2,
+        }
+    }
+
+    /// Borrow as `&[f32]`; panics if already quantized.  For the
+    /// pre-quantization phases (pruning, synthesis) that are defined
+    /// to run on full-precision storage.
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            ParamData::F32(v) => v,
+            ParamData::F16(_) => {
+                panic!("parameter already quantized to binary16 storage")
+            }
+        }
+    }
+
+    /// The kernel-facing dequantizing view.
+    pub fn view(&self) -> WSlice<'_> {
+        match self {
+            ParamData::F32(v) => WSlice::F32(v),
+            ParamData::F16(v) => WSlice::F16(v),
+        }
+    }
+}
+
+/// A borrowed dtype-tagged weight slice — what the compute kernels
+/// consume.  `at` dequantizes one element exactly; the hot loops
+/// instead match on the variant once and fuse [`F16::to_f32`] into
+/// their inner loops.
+#[derive(Debug, Clone, Copy)]
+pub enum WSlice<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+}
+
+impl<'a> WSlice<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            WSlice::F32(v) => v.len(),
+            WSlice::F16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dequantize element `i` (exact for both storages).
+    #[inline(always)]
+    pub fn at(&self, i: usize) -> f32 {
+        match self {
+            WSlice::F32(v) => v[i],
+            WSlice::F16(v) => F16::from_bits(v[i]).to_f32(),
+        }
+    }
+
+    /// Sub-slice `[lo, hi)`, preserving the storage tag.
+    #[inline]
+    pub fn slice(&self, lo: usize, hi: usize) -> WSlice<'a> {
+        match self {
+            WSlice::F32(v) => WSlice::F32(&v[lo..hi]),
+            WSlice::F16(v) => WSlice::F16(&v[lo..hi]),
+        }
+    }
+
+    /// Dequantize `len` elements starting at `lo` into `out`.
+    #[inline]
+    pub fn decode_into(&self, lo: usize, out: &mut [f32]) {
+        match self {
+            WSlice::F32(v) => out.copy_from_slice(&v[lo..lo + out.len()]),
+            WSlice::F16(v) => {
+                for (o, &bits) in out.iter_mut().zip(&v[lo..lo + out.len()])
+                {
+                    *o = F16::from_bits(bits).to_f32();
+                }
+            }
+        }
+    }
+}
+
+/// One named host-side parameter tensor (row-major, dtype-tagged).
 #[derive(Debug, Clone)]
 pub struct HostParam {
     pub name: String,
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    pub data: ParamData,
 }
 
 impl HostParam {
+    /// Full-precision constructor — the storage every loader and
+    /// synthesizer starts from.
+    pub fn f32(
+        name: impl Into<String>,
+        shape: Vec<usize>,
+        data: Vec<f32>,
+    ) -> Self {
+        Self { name: name.into(), shape, data: ParamData::F32(data) }
+    }
+
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
+    }
+
+    /// Convert the backing store to true binary16 (idempotent).  The
+    /// decoded values equal `quantize_f16` of the originals, so any
+    /// math over the [`WSlice`] view is bitwise-identical to the old
+    /// quantize-then-store-as-f32 representation at half the bytes.
+    pub fn quantize_to_f16(&mut self) {
+        if let ParamData::F32(v) = &self.data {
+            let bits =
+                v.iter().map(|&x| F16::from_f32(x).to_bits()).collect();
+            self.data = ParamData::F16(bits);
+        }
     }
 }
 
@@ -54,6 +191,19 @@ impl HostWeights {
     pub fn total_elements(&self) -> usize {
         self.params.iter().map(|p| p.element_count()).sum()
     }
+
+    /// Resident weight bytes across all parameters — the quantity the
+    /// true-f16 storage halves (gated in `bench_snapshot`).
+    pub fn storage_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.data.storage_bytes()).sum()
+    }
+
+    /// Quantize every parameter's backing store to binary16.
+    pub fn quantize_to_f16(&mut self) {
+        for p in self.params.iter_mut() {
+            p.quantize_to_f16();
+        }
+    }
 }
 
 fn decode_param(blob: &[u8], p: &ParamEntry) -> Result<HostParam> {
@@ -78,11 +228,7 @@ fn decode_param(blob: &[u8], p: &ParamEntry) -> Result<HostParam> {
     for (i, chunk) in bytes.chunks_exact(4).enumerate() {
         data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
     }
-    Ok(HostParam {
-        name: p.name.clone(),
-        shape: p.shape.clone(),
-        data,
-    })
+    Ok(HostParam::f32(p.name.clone(), p.shape.clone(), data))
 }
 
 #[cfg(test)]
@@ -109,9 +255,43 @@ mod tests {
         ]);
         let w = HostWeights::load(dir.path(), &e).unwrap();
         assert_eq!(w.params.len(), 2);
-        assert_eq!(w.get("a").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
-        assert_eq!(w.get("b").unwrap().data, vec![5.0, 6.0]);
+        assert_eq!(
+            w.get("a").unwrap().data.as_f32(),
+            &[1.0, 2.0, 3.0, 4.0]
+        );
+        assert_eq!(w.get("b").unwrap().data.as_f32(), &[5.0, 6.0]);
         assert_eq!(w.total_elements(), 6);
+        assert_eq!(w.storage_bytes(), 6 * 4);
+    }
+
+    #[test]
+    fn f16_quantization_halves_storage_and_decodes_exactly() {
+        use crate::runtime::dtype::quantize_f16;
+        let vals = vec![0.0f32, -1.5, 3.141_592_7, 1e-5, -65504.0, 0.1];
+        let mut p = HostParam::f32("t", vec![2, 3], vals.clone());
+        assert_eq!(p.data.storage_bytes(), vals.len() * 4);
+        p.quantize_to_f16();
+        assert_eq!(p.data.storage_bytes(), vals.len() * 2);
+        assert!(matches!(p.data, ParamData::F16(_)));
+        let view = p.data.view();
+        assert_eq!(view.len(), vals.len());
+        for (i, &v) in vals.iter().enumerate() {
+            // decode == the old quantize-then-store-as-f32 value
+            assert_eq!(view.at(i).to_bits(), quantize_f16(v).to_bits());
+        }
+        // decode_into agrees element for element, including offsets
+        let mut out = vec![0f32; 3];
+        view.decode_into(2, &mut out);
+        for (j, o) in out.iter().enumerate() {
+            assert_eq!(o.to_bits(), quantize_f16(vals[2 + j]).to_bits());
+        }
+        // sub-slicing keeps the tag and the values
+        let sub = view.slice(1, 4);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.at(0).to_bits(), quantize_f16(vals[1]).to_bits());
+        // idempotent
+        p.quantize_to_f16();
+        assert_eq!(p.data.storage_bytes(), vals.len() * 2);
     }
 
     #[test]

@@ -33,7 +33,7 @@ use super::streaming::{
 use crate::config::{BackendKind, EngineKind, ServingConfig};
 use crate::coordinator::ServingResponse;
 use crate::data::Request;
-use crate::runtime::DType;
+use crate::runtime::{DType, Kernel};
 use crate::Result;
 
 /// Builder for an embedded [`Server`] (defaults =
@@ -68,6 +68,14 @@ impl ServerBuilder {
     /// weights/activations/KV caches with f32 accumulation).
     pub fn dtype(mut self, dtype: DType) -> Self {
         self.cfg.dtype = dtype;
+        self
+    }
+
+    /// Reference-backend GEMM kernel family ([`Kernel::Blocked`] tiled
+    /// kernels by default; [`Kernel::Scalar`] for A/B benching — both
+    /// are bitwise-identical by construction).
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.cfg.kernel = kernel;
         self
     }
 

@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use std::sync::{mpsc, Arc};
 
 use aigc_infer::config::{
-    BatchPolicy, EngineKind, KvConfig, ServingConfig,
+    BatchPolicy, EngineKind, GenConfig, KvConfig, ServingConfig,
 };
 use aigc_infer::coordinator::{
     Batch, DynamicBatcher, InferencePool, PoolEvent, PreparedRequest,
@@ -15,7 +15,10 @@ use aigc_infer::engine::{
     build as build_engine, build_with_kv, DecodeSession, Engine,
     EngineInput, FinishReason, Sampler,
 };
-use aigc_infer::runtime::{quantize_f16, Backend, DType, RefBackend, F16};
+use aigc_infer::runtime::reference::model::{linear, logits_matvec};
+use aigc_infer::runtime::{
+    quantize_f16, Backend, DType, Kernel, RefBackend, WSlice, F16,
+};
 use aigc_infer::tokenizer::vocab::{parse_rank, render_rank};
 use aigc_infer::tokenizer::{
     decode, Encode, FastTokenizer, SlowTokenizer, Vocab,
@@ -309,8 +312,8 @@ fn prop_stepped_session_equals_one_shot_generate() {
         let engine =
             build_engine(kind, backend.clone(), Default::default()).unwrap();
         for case in 0..8 {
-            let inputs =
-                random_inputs(&mut rng, rng.gen_range(1, 7), pruned_vocab);
+            let n = rng.gen_range(1, 7);
+            let inputs = random_inputs(&mut rng, n, pruned_vocab);
             let one_shot: Vec<Vec<u32>> = engine
                 .generate(&inputs, &mut Sampler::greedy())
                 .unwrap()
@@ -397,11 +400,8 @@ fn prop_paged_and_contiguous_paths_are_bitwise_identical() {
                     "paged engine must report its pool geometry"
                 );
                 assert!(legacy.kv_geometry().is_none());
-                let inputs = random_inputs(
-                    &mut rng,
-                    rng.gen_range(1, 6),
-                    pruned_vocab,
-                );
+                let n = rng.gen_range(1, 6);
+                let inputs = random_inputs(&mut rng, n, pruned_vocab);
                 let a: Vec<Vec<u32>> = legacy
                     .generate(&inputs, &mut Sampler::greedy())
                     .unwrap()
@@ -702,6 +702,145 @@ fn prop_pool_fuzz_exactly_one_terminal_event_per_id() {
         );
     }
     assert_eq!(terminals.len(), submitted.len());
+}
+
+#[test]
+fn prop_blocked_kernels_equal_scalar_bitwise() {
+    // THE kernel-refactor acceptance property: the blocked/tiled GEMM
+    // kernels are bitwise-identical to the scalar loop nests across
+    // random ragged shapes (panel remainders of every size), both
+    // weight storage dtypes, and inputs salted with exact zeros (the
+    // sparsity skip) and signed zeros.
+    let mut rng = Rng::seed_from_u64(0xB10C);
+    fn salted(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| match rng.gen_range(0, 6) {
+                0 => 0.0,
+                1 => -0.0,
+                _ => ((rng.gen_f64() - 0.5) * 8.0) as f32,
+            })
+            .collect()
+    }
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+    for case in 0..80 {
+        let din = rng.gen_range(1, 70);
+        let dout = rng.gen_range(1, 70);
+        let x = salted(&mut rng, din);
+        let w = salted(&mut rng, din * dout);
+        let b = salted(&mut rng, dout);
+        let w16: Vec<u16> =
+            w.iter().map(|&v| F16::from_f32(v).to_bits()).collect();
+        let b16: Vec<u16> =
+            b.iter().map(|&v| F16::from_f32(v).to_bits()).collect();
+        let mut s = vec![0.0f32; dout];
+        let mut bl = vec![0.0f32; dout];
+        for (wsl, bsl, dl) in [
+            (WSlice::F32(&w), WSlice::F32(&b), "fp32"),
+            (WSlice::F16(&w16), WSlice::F16(&b16), "fp16"),
+        ] {
+            linear(&x, wsl, bsl, din, dout, &mut s, Kernel::Scalar);
+            linear(&x, wsl, bsl, din, dout, &mut bl, Kernel::Blocked);
+            assert_eq!(
+                bits(&s),
+                bits(&bl),
+                "case {case}/{dl}: linear {din}x{dout} diverged"
+            );
+        }
+        // tied-embedding logits GEMV over its own ragged shapes
+        let d = rng.gen_range(1, 40);
+        let vocab = rng.gen_range(1, 70);
+        let h = salted(&mut rng, d);
+        let emb = salted(&mut rng, vocab * d);
+        let emb16: Vec<u16> =
+            emb.iter().map(|&v| F16::from_f32(v).to_bits()).collect();
+        let mut s = vec![0.0f32; vocab];
+        let mut bl = vec![0.0f32; vocab];
+        for (esl, dl) in
+            [(WSlice::F32(&emb), "fp32"), (WSlice::F16(&emb16), "fp16")]
+        {
+            logits_matvec(&h, esl, d, vocab, &mut s, Kernel::Scalar);
+            logits_matvec(&h, esl, d, vocab, &mut bl, Kernel::Blocked);
+            assert_eq!(
+                bits(&s),
+                bits(&bl),
+                "case {case}/{dl}: logits {vocab}x{d} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_paged_fused_decode_equals_single_step() {
+    // Fused multi-step greedy decode on the paged path is token-
+    // identical to per-step dispatch across the FT rungs, both storage
+    // dtypes, both kernel families and odd block geometries (the fused
+    // step cap must always respect the block reservations).
+    let mut rng = Rng::seed_from_u64(0xFD5E);
+    for (dtype, kernel) in [
+        (DType::F32, Kernel::Blocked),
+        (DType::F16, Kernel::Blocked),
+        (DType::F32, Kernel::Scalar),
+    ] {
+        let backend: Arc<dyn Backend> = {
+            let mut b = RefBackend::synthetic();
+            b.set_dtype(dtype);
+            b.set_kernel(kernel);
+            Arc::new(b)
+        };
+        let pruned_vocab =
+            backend.manifest().config_for("pruned").vocab_size as u32;
+        for kind in [EngineKind::FtFull, EngineKind::FtPruned] {
+            for case in 0..4 {
+                let kv = KvConfig {
+                    paged: true,
+                    block_size: [2, 16, 5, 3][case % 4],
+                    blocks: 0,
+                };
+                let fused = build_with_kv(
+                    kind,
+                    backend.clone(),
+                    GenConfig::default(),
+                    kv,
+                )
+                .unwrap();
+                let single = build_with_kv(
+                    kind,
+                    backend.clone(),
+                    GenConfig {
+                        use_multi_step: false,
+                        ..GenConfig::default()
+                    },
+                    kv,
+                )
+                .unwrap();
+                let n = rng.gen_range(1, 6);
+                let inputs = random_inputs(&mut rng, n, pruned_vocab);
+                let a: Vec<Vec<u32>> = fused
+                    .generate(&inputs, &mut Sampler::greedy())
+                    .unwrap()
+                    .into_iter()
+                    .map(|o| o.generated)
+                    .collect();
+                let b: Vec<Vec<u32>> = single
+                    .generate(&inputs, &mut Sampler::greedy())
+                    .unwrap()
+                    .into_iter()
+                    .map(|o| o.generated)
+                    .collect();
+                assert_eq!(
+                    a, b,
+                    "{kind:?}/{dtype:?}/{kernel:?} case {case}: fused \
+                     decode diverged from per-step"
+                );
+                assert!(
+                    a.iter().map(|s| s.len()).sum::<usize>() > 0,
+                    "{kind:?} case {case}: vacuous comparison"
+                );
+            }
+        }
+    }
 }
 
 #[test]
