@@ -26,7 +26,13 @@
 //! weight bytes — true `Vec<u16>` storage, not widened f32), and a
 //! fused-vs-per-step paged greedy decode A/B on a dispatch-bound
 //! shape (hard-gated: fused multi-step wins on tokens/sec with
-//! token-identical streams).  The tool then writes one
+//! token-identical streams).  Schema 7 adds a **prefix_cache**
+//! section: a Zipf shared-prefix trace (a few popular prompt
+//! templates, unique tails) served with prefix sharing ON vs OFF
+//! (hard-gated: the share arm must report prefix hits and strictly
+//! fewer admission prefill tokens, with ≥ 1 mid-session admission in
+//! both arms and every stream token-identical between arms AND to a
+//! solo one-request-per-session baseline).  The tool then writes one
 //! machine-readable `BENCH_<n>.json`
 //! datapoint (samples/sec, p50/p99 latency, TTFT, tokens/sec per
 //! configuration).  Successive PRs append `BENCH_2.json`,
@@ -48,7 +54,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use aigc_infer::config::{EngineKind, GenConfig, KvConfig, ServingConfig};
-use aigc_infer::data::{Request, TraceConfig, TraceGenerator};
+use aigc_infer::data::{Request, TraceConfig, TraceGenerator, ZipfSampler};
 use aigc_infer::engine::{build_with_kv, EngineInput, Sampler};
 use aigc_infer::metrics::Histogram;
 use aigc_infer::pipeline::{self, RunSummary};
@@ -665,6 +671,125 @@ fn run_fused_decode() -> Vec<Value> {
         .collect()
 }
 
+// Prefix-cache A/B sizing: 33 template words + BOS put two FULL
+// 16-slot blocks (positions 0..31) inside the shared region of every
+// prompt drawn from the same template — the per-hit reuse is 32
+// tokens.  The unique tail word and SEP land past the second block
+// boundary so they never poison the shared blocks.  Template ranks
+// stay < 40, single-token under the pruned vocabulary.
+const PREFIX_TEMPLATES: usize = 4;
+const PREFIX_WORDS: usize = 33;
+const PREFIX_MAX_NEW: usize = 8;
+
+/// Zipf shared-prefix trace: each request draws one of a few popular
+/// prompt templates (Zipf-ranked, so the head template repeats a lot)
+/// and appends a unique tail word.  Requests from the same template
+/// share their leading full KV blocks — the workload prefix sharing
+/// exists for (few-shot prefixes, system prompts, repeated contexts).
+fn prefix_trace(n: usize) -> Vec<Request> {
+    use aigc_infer::tokenizer::vocab::render_rank;
+    let zipf = ZipfSampler::new(PREFIX_TEMPLATES, 1.2);
+    let mut rng = Rng::seed_from_u64(0x5AFE);
+    let templates: Vec<String> = (0..PREFIX_TEMPLATES)
+        .map(|t| {
+            (0..PREFIX_WORDS)
+                .map(|i| render_rank((t * 7 + i) % 40))
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .collect();
+    (0..n as u64)
+        .map(|id| {
+            let t = zipf.sample(&mut rng);
+            let tail = render_rank((id % 7) as usize + 1);
+            Request {
+                id,
+                text: format!("{} {}", templates[t], tail),
+                max_new_tokens: PREFIX_MAX_NEW,
+                arrival: Duration::ZERO,
+                reference_summary: None,
+            }
+        })
+        .collect()
+}
+
+/// One prefix-cache arm: the Zipf shared-prefix trace through the
+/// continuous batcher (1 worker, max_batch 4, paged KV) with prefix
+/// sharing on or off.  The returned summary carries both the counters
+/// under comparison (`kv.prefix_*`, `admission_prefill_tokens`) and
+/// the streams for the identity gate.
+fn run_prefix_arm(share: bool, reqs: &[Request]) -> RunSummary {
+    let mut cfg = ServingConfig::default();
+    cfg.engine = EngineKind::FtPruned;
+    cfg.pipelined = true;
+    cfg.workers = 1;
+    cfg.row_threads = 1;
+    cfg.batch.max_batch = 4;
+    cfg.kv.prefix_share = share;
+    cfg.gen.max_new_tokens = PREFIX_MAX_NEW;
+    cfg.precompile = true;
+    pipeline::run(&cfg, reqs).expect("prefix-cache bench failed")
+}
+
+/// Solo baseline for the same trace: static scheduling at max_batch 1
+/// puts every request alone in its own decode session — no sharing, no
+/// batching, no admission interplay.  Both A/B arms must reproduce
+/// these streams bitwise.
+fn run_prefix_solo(reqs: &[Request]) -> RunSummary {
+    let mut cfg = ServingConfig::default();
+    cfg.engine = EngineKind::FtPruned;
+    cfg.pipelined = true;
+    cfg.workers = 1;
+    cfg.row_threads = 1;
+    cfg.continuous = false;
+    cfg.batch.max_batch = 1;
+    cfg.gen.max_new_tokens = PREFIX_MAX_NEW;
+    cfg.precompile = true;
+    pipeline::run(&cfg, reqs).expect("prefix solo baseline failed")
+}
+
+fn prefix_row(mode: &str, s: &RunSummary, streams_match: bool) -> Value {
+    eprintln!(
+        "  prefix[{mode}]: {} hits / {} lookups, {} tokens reused, \
+         {} admission prefill tokens, {} mid-session admission(s)",
+        s.kv.prefix_hits,
+        s.kv.prefix_lookups,
+        s.kv.prefix_tokens_reused,
+        s.kv.admission_prefill_tokens,
+        s.kv.admitted_mid_session,
+    );
+    Value::obj(vec![
+        ("mode", Value::str(mode)),
+        ("requests", Value::num(s.responses.len() as f64)),
+        (
+            "admission_prefill_tokens",
+            Value::num(s.kv.admission_prefill_tokens as f64),
+        ),
+        (
+            "admitted_mid_session",
+            Value::num(s.kv.admitted_mid_session as f64),
+        ),
+        ("prefix_lookups", Value::num(s.kv.prefix_lookups as f64)),
+        ("prefix_hits", Value::num(s.kv.prefix_hits as f64)),
+        (
+            "prefix_tokens_reused",
+            Value::num(s.kv.prefix_tokens_reused as f64),
+        ),
+        ("prefix_hit_rate", Value::num(s.kv.prefix_hit_rate())),
+        (
+            "kv_peak_blocks_in_use",
+            Value::num(s.kv.kv_peak_blocks_in_use as f64),
+        ),
+        ("kv_total_blocks", Value::num(s.kv.kv_total_blocks as f64)),
+        ("samples_per_sec", Value::num(s.samples_per_sec)),
+        ("generated_tokens", Value::num(s.generated_tokens as f64)),
+        (
+            "streams_match_solo",
+            Value::num(streams_match as u64 as f64),
+        ),
+    ])
+}
+
 fn run_one(
     engine: EngineKind,
     pipelined: bool,
@@ -833,12 +958,27 @@ fn main() {
         ("fused_paged_decode", Value::Array(run_fused_decode())),
     ]);
 
+    // --- prefix-sharing KV cache A/B (schema 7) ------------------------
+    // fixed floor so the Zipf trace repeats templates and the batcher
+    // admits mid-session even in smoke runs
+    let prefix_reqs = prefix_trace(kv_n.max(16));
+    let solo = run_prefix_solo(&prefix_reqs);
+    let share = run_prefix_arm(true, &prefix_reqs);
+    let no_share = run_prefix_arm(false, &prefix_reqs);
+    let solo_streams = sorted_streams(&solo);
+    let share_match = sorted_streams(&share) == solo_streams;
+    let no_share_match = sorted_streams(&no_share) == solo_streams;
+    let prefix_cache = vec![
+        prefix_row("share", &share, share_match),
+        prefix_row("no_share", &no_share, no_share_match),
+    ];
+
     let created = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let doc = Value::obj(vec![
-        ("schema", Value::num(6.0)),
+        ("schema", Value::num(7.0)),
         ("created_unix", Value::num(created as f64)),
         ("preset", Value::str("synthetic-reference-default")),
         ("requests", Value::num(n as f64)),
@@ -850,13 +990,14 @@ fn main() {
         ("kv_admission", Value::Array(kv_admission)),
         ("scheduling", scheduling),
         ("kernels", kernels),
+        ("prefix_cache", Value::Array(prefix_cache)),
     ]);
     std::fs::write(&out, doc.to_json()).expect("write snapshot");
 
     // --- self-validation (this is the CI smoke assertion) --------------
     let text = std::fs::read_to_string(&out).expect("re-read snapshot");
     let v = json::parse(&text).expect("snapshot must be valid JSON");
-    assert_eq!(v.get("schema").as_usize(), Some(6), "schema");
+    assert_eq!(v.get("schema").as_usize(), Some(7), "schema");
     let ladder = v.get("ladder").as_array().expect("ladder array");
     assert_eq!(ladder.len(), 8, "4 ladder rows x {{fp32, fp16}}");
     for dtype in ["fp32", "fp16"] {
@@ -1126,6 +1267,58 @@ fn main() {
          ({:.0} tok/s)",
         field(fused, "tokens_per_sec"),
         field(per_step, "tokens_per_sec"),
+    );
+
+    // THE schema-7 gate: on a Zipf shared-prefix trace with mid-session
+    // admissions actually happening, the share arm must reuse cached
+    // prefix blocks (hits > 0, hit rate > 0) and prefill strictly fewer
+    // tokens than the no-share arm — with every stream token-identical
+    // between arms AND to the solo one-request-per-session baseline.
+    let pc = v.get("prefix_cache").as_array().expect("prefix_cache array");
+    assert_eq!(pc.len(), 2, "share + no_share arms");
+    let share = pc
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("share"))
+        .expect("share row");
+    let no_share = pc
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("no_share"))
+        .expect("no_share row");
+    for row in [share, no_share] {
+        assert!(
+            field(row, "admitted_mid_session") >= 1.0,
+            "the prefix A/B is vacuous without mid-session admissions: {}",
+            row.to_json()
+        );
+        assert!(field(row, "admission_prefill_tokens") > 0.0);
+        assert!(field(row, "generated_tokens") > 0.0);
+        assert!(field(row, "kv_total_blocks") > 0.0, "paged pool missing");
+        assert_eq!(
+            field(row, "streams_match_solo"),
+            1.0,
+            "prefix sharing changed a token stream: {}",
+            row.to_json()
+        );
+    }
+    assert!(
+        field(share, "prefix_hits") >= 1.0
+            && field(share, "prefix_hit_rate") > 0.0
+            && field(share, "prefix_tokens_reused") >= 1.0,
+        "the Zipf trace produced no prefix reuse: {}",
+        share.to_json()
+    );
+    assert_eq!(
+        field(no_share, "prefix_lookups"),
+        0.0,
+        "--no-prefix-share must not probe the index"
+    );
+    assert!(
+        field(share, "admission_prefill_tokens")
+            < field(no_share, "admission_prefill_tokens"),
+        "share-arm admission prefill ({}) must be strictly below the \
+         no-share arm ({})",
+        field(share, "admission_prefill_tokens"),
+        field(no_share, "admission_prefill_tokens"),
     );
     println!("bench snapshot OK: {out}");
 }

@@ -6,16 +6,113 @@
 //!
 //!     cargo run --release --example serve_workload [-- N_REQUESTS [ENGINE]]
 //!
+//! With `--cache-reuse` it instead runs the prefix-sharing smoke: a
+//! Zipf shared-prefix trace served twice through the embedded
+//! `Server` — prefix sharing ON (default) vs OFF (the
+//! `--no-prefix-share` configuration) — asserting the share run
+//! reports prefix-cache hits on the wire and that both runs produce
+//! bitwise-identical token streams.  CI runs exactly this.
+//!
 //! Also prints the training loss curve recorded by `make artifacts`
 //! (artifacts/train_loss.json), tying the served model back to its
 //! training run.  Results are recorded in EXPERIMENTS.md §E2E.
 
 use aigc_infer::config::{EngineKind, ServingConfig};
-use aigc_infer::data::{TraceConfig, TraceGenerator};
+use aigc_infer::data::{TraceConfig, TraceGenerator, ZipfSampler};
 use aigc_infer::pipeline;
+use aigc_infer::tokenizer::vocab::render_rank;
 use aigc_infer::util::json;
+use aigc_infer::util::rng::Rng;
+use aigc_infer::Server;
+
+/// The `--cache-reuse` smoke: a Zipf shared-prefix trace (4 popular
+/// 33-word templates, unique tail words) through the embedded server
+/// with prefix sharing on vs off.  The share arm must report prefix
+/// hits on its replies; both arms must stream identical tokens.
+fn cache_reuse() -> aigc_infer::Result<()> {
+    const N: usize = 16;
+    const MAX_NEW: usize = 8;
+    let zipf = ZipfSampler::new(4, 1.2);
+    let mut rng = Rng::seed_from_u64(0x5AFE);
+    let templates: Vec<String> = (0..4)
+        .map(|t| {
+            (0..33)
+                .map(|i| render_rank((t * 7 + i) % 40))
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .collect();
+    let texts: Vec<String> = (0..N)
+        .map(|j| {
+            let t = zipf.sample(&mut rng);
+            format!("{} {}", templates[t], render_rank(j % 7 + 1))
+        })
+        .collect();
+
+    println!("## Cache-reuse smoke: {N} shared-prefix requests, A/B");
+    let mut arm_streams: Vec<Vec<Vec<u32>>> = Vec::new();
+    for share in [true, false] {
+        let server = Server::builder()
+            .engine(EngineKind::FtPruned)
+            .max_new_tokens(MAX_NEW)
+            .prefix_share(share)
+            .precompile(true)
+            .start()?;
+        let pending: Vec<_> = texts
+            .iter()
+            .map(|t| server.submit(t.clone(), MAX_NEW).expect("submit"))
+            .collect();
+        let mut outs = Vec::with_capacity(N);
+        let mut hits = 0u64;
+        let mut reused = 0u64;
+        for stream in pending {
+            let resp = stream.wait().expect("terminal event");
+            assert!(
+                resp.error.is_none(),
+                "cache-reuse request failed: {resp:?}"
+            );
+            match (share, resp.prefix) {
+                // session-cumulative counters: the max over replies is
+                // the busiest session's total
+                (true, Some((h, r))) => {
+                    hits = hits.max(h);
+                    reused = reused.max(r);
+                }
+                (true, None) => {}
+                (false, p) => assert!(
+                    p.is_none(),
+                    "no-share replies must omit prefix counters: {resp:?}"
+                ),
+            }
+            outs.push(resp.summary_ids);
+        }
+        drop(server);
+        let mode = if share { "share" } else { "no-share" };
+        println!(
+            "   [{mode}] {} requests served, {hits} prefix hit(s), \
+             {reused} prompt token(s) reused",
+            outs.len()
+        );
+        if share {
+            assert!(
+                hits > 0,
+                "shared-prefix trace produced no prefix hits"
+            );
+        }
+        arm_streams.push(outs);
+    }
+    assert_eq!(
+        arm_streams[0], arm_streams[1],
+        "prefix sharing changed a token stream"
+    );
+    println!("   streams identical across arms: OK");
+    Ok(())
+}
 
 fn main() -> aigc_infer::Result<()> {
+    if std::env::args().any(|a| a == "--cache-reuse") {
+        return cache_reuse();
+    }
     let n: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())

@@ -141,11 +141,18 @@ pub struct KvConfig {
     /// Blocks in each session's pool; 0 = auto-size so the largest
     /// compiled batch bucket fits at the engine's max sequence.
     pub blocks: usize,
+    /// Prefix sharing on the paged path (`--no-prefix-share` to turn
+    /// off): sessions index already-filled blocks by token ids per
+    /// block, so an admission whose prompt starts with an indexed
+    /// prefix adopts those blocks (refcounted, copy-on-write at the
+    /// divergence) and prefills only the suffix.  Ignored on the
+    /// contiguous path.
+    pub prefix_share: bool,
 }
 
 impl Default for KvConfig {
     fn default() -> Self {
-        Self { paged: true, block_size: 16, blocks: 0 }
+        Self { paged: true, block_size: 16, blocks: 0, prefix_share: true }
     }
 }
 
@@ -338,6 +345,9 @@ impl ServingConfig {
             if let Some(n) = kv.get("blocks").as_usize() {
                 cfg.kv.blocks = n;
             }
+            if let Some(x) = kv.get("prefix_share").as_bool() {
+                cfg.kv.prefix_share = x;
+            }
         }
         if let Some(x) = v.get("pipelined").as_bool() {
             cfg.pipelined = x;
@@ -416,6 +426,7 @@ impl ServingConfig {
                     ("paged", Value::Bool(self.kv.paged)),
                     ("block_size", Value::num(self.kv.block_size as f64)),
                     ("blocks", Value::num(self.kv.blocks as f64)),
+                    ("prefix_share", Value::Bool(self.kv.prefix_share)),
                 ]),
             ),
             ("pipelined", Value::Bool(self.pipelined)),
@@ -550,19 +561,26 @@ mod tests {
         assert!(c.kv.paged, "paged KV is the default");
         assert_eq!(c.kv.block_size, 16);
         assert_eq!(c.kv.blocks, 0, "0 = auto-size");
+        assert!(c.kv.prefix_share, "prefix sharing is the default");
         let mut c = ServingConfig::default();
         c.kv.paged = false;
         c.kv.block_size = 8;
         c.kv.blocks = 40;
+        c.kv.prefix_share = false;
         let back = ServingConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.kv, c.kv);
         let c = ServingConfig::from_json(
-            r#"{"kv": {"paged": false, "block_size": 4, "blocks": 12}}"#,
+            r#"{"kv": {"paged": false, "block_size": 4, "blocks": 12,
+                       "prefix_share": false}}"#,
         )
         .unwrap();
         assert!(!c.kv.paged);
         assert_eq!(c.kv.block_size, 4);
         assert_eq!(c.kv.blocks, 12);
+        assert!(!c.kv.prefix_share);
+        let c = ServingConfig::from_json(r#"{"kv": {"blocks": 9}}"#)
+            .unwrap();
+        assert!(c.kv.prefix_share, "omitted key keeps the default");
         let mut bad = ServingConfig::default();
         bad.kv.block_size = 0;
         assert!(bad.validate().is_err());

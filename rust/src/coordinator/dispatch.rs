@@ -96,6 +96,7 @@ use crate::engine::{
 };
 use crate::metrics::{Histogram, Throughput};
 use crate::runtime::kv::KvStats;
+use crate::runtime::prefix::PrefixStats;
 use crate::runtime::{backend_for, Backend, RuntimeStats};
 use crate::{Error, Result};
 
@@ -116,6 +117,10 @@ pub enum PoolEvent {
         /// (None when the engine runs contiguous caches) — echoed on
         /// wire replies so clients see cache pressure.
         kv: Option<KvStats>,
+        /// Session-cumulative prefix-cache counters observed as the
+        /// request retired (None when prefix sharing is off or the
+        /// cache discipline is contiguous).
+        prefix: Option<PrefixStats>,
         worker: usize,
     },
     /// Terminal failure: engine error, cancellation, or deadline.
@@ -179,6 +184,15 @@ pub struct WorkerReport {
     /// prefill bounds — a monolithic admission prefill lands entirely
     /// inside one iteration, a chunked one is spread across many.
     pub step_latency: Histogram,
+    /// Prefix-cache probes at admissions (one per admitted prompt when
+    /// sharing is on; 0 when off or contiguous).
+    pub prefix_lookups: u64,
+    /// Admissions that reused at least one cached prefix token.
+    pub prefix_hits: u64,
+    /// Σ prompt tokens served from cached blocks instead of prefill —
+    /// the saved-work counter (`admission_prefill_tokens` shrinks by
+    /// exactly this much relative to a no-sharing run).
+    pub prefix_tokens_reused: u64,
 }
 
 impl WorkerReport {
@@ -203,6 +217,9 @@ impl WorkerReport {
             kv_total_blocks: 0,
             preemptions: 0,
             step_latency: Histogram::new(),
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_tokens_reused: 0,
         }
     }
 }
@@ -224,6 +241,24 @@ pub struct KvMetrics {
     pub kv_total_blocks: u64,
     /// Σ priority preemptions (evict + resume-later) across workers.
     pub preemptions: u64,
+    /// Prefix-cache probes at admissions across workers.
+    pub prefix_lookups: u64,
+    /// Admissions that reused at least one cached prefix token.
+    pub prefix_hits: u64,
+    /// Σ prompt tokens served from cached blocks instead of prefill.
+    pub prefix_tokens_reused: u64,
+}
+
+impl KvMetrics {
+    /// Fraction of admission probes that reused cached prefix blocks
+    /// (0.0 when sharing is off or nothing was admitted).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
 }
 
 /// Per-worker reports plus their merged view.
@@ -312,6 +347,9 @@ impl PoolReport {
             m.kv_peak_blocks_in_use =
                 m.kv_peak_blocks_in_use.max(w.kv_peak_blocks_in_use);
             m.kv_total_blocks = m.kv_total_blocks.max(w.kv_total_blocks);
+            m.prefix_lookups += w.prefix_lookups;
+            m.prefix_hits += w.prefix_hits;
+            m.prefix_tokens_reused += w.prefix_tokens_reused;
         }
         m
     }
@@ -595,6 +633,7 @@ fn drain_finished(
     // occupancy AFTER the step that retired these rows — what the
     // pool looked like when capacity came back
     let kv = session.kv_stats();
+    let prefix = session.prefix_stats();
     for fin in session.take_finished() {
         let id = fin.output.request_id;
         let Some(m) = meta.remove(&id) else { continue };
@@ -629,6 +668,7 @@ fn drain_finished(
                     steps: fin.output.steps,
                     ttft,
                     kv,
+                    prefix,
                     worker,
                 })
                 .is_ok()
@@ -844,6 +884,13 @@ fn worker_main(
         report.admitted += seed.len() as u64;
         let mut session_prefill = session.prefill_tokens();
         report.admission_prefill_tokens += session_prefill;
+        // prefix-cache counters are session-cumulative too: fold deltas
+        // into the report the same way as the prefill counter
+        let mut session_prefix =
+            session.prefix_stats().unwrap_or_default();
+        report.prefix_lookups += session_prefix.lookups;
+        report.prefix_hits += session_prefix.hits;
+        report.prefix_tokens_reused += session_prefix.tokens_reused;
         if let Some(st) = session.kv_stats() {
             report.kv_total_blocks =
                 report.kv_total_blocks.max(st.total_blocks as u64);
@@ -1137,6 +1184,14 @@ fn worker_main(
                     report.admission_prefill_tokens +=
                         pft.saturating_sub(session_prefill);
                     session_prefill = pft;
+                    if let Some(p) = session.prefix_stats() {
+                        report.prefix_lookups +=
+                            p.lookups - session_prefix.lookups;
+                        report.prefix_hits += p.hits - session_prefix.hits;
+                        report.prefix_tokens_reused +=
+                            p.tokens_reused - session_prefix.tokens_reused;
+                        session_prefix = p;
+                    }
                     if let Some(st) = session.kv_stats() {
                         report.kv_peak_blocks_in_use = report
                             .kv_peak_blocks_in_use
@@ -1757,6 +1812,199 @@ mod tests {
         assert_eq!(mono.len(), 4, "monolithic run lost requests");
         for chunk in [1usize, 4, 7, 64] {
             assert_eq!(run(chunk), mono, "chunk={chunk} diverged");
+        }
+    }
+
+    /// Shared-prefix prompt: a fixed 19-word stem behind BOS (five
+    /// full blocks at block_size 4), then a per-request tail word and
+    /// SEP — divergence lands in the open partial block, so admissions
+    /// after the first can adopt every full stem block.
+    fn stem_prompt(id: u64) -> Vec<u32> {
+        let mut p = vec![special::BOS];
+        for k in 0..19u32 {
+            p.push(special::FIRST_WORD + (k * 3) % 40);
+        }
+        p.push(special::FIRST_WORD + 20 + (id as u32 % 16));
+        p.push(special::SEP);
+        p
+    }
+
+    /// The request served alone with sharing disabled — the reference
+    /// stream every sharing interleaving must reproduce bitwise.
+    fn solo_noshare(prompt: Vec<u32>, max_new: usize) -> Vec<u32> {
+        let mut cfg = small_cfg(1);
+        cfg.gen.max_new_tokens = max_new;
+        cfg.kv.prefix_share = false;
+        let (out_tx, out_rx) = mpsc::sync_channel(4096);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let events = collector(out_rx);
+        input
+            .send(Batch {
+                requests: vec![PreparedRequest::new(0, prompt, max_new)],
+                seq_bucket: 32,
+            })
+            .unwrap();
+        drop(input);
+        pool.join();
+        events
+            .join()
+            .unwrap()
+            .into_iter()
+            .find_map(|e| match e {
+                PoolEvent::Finished { generated, .. } => Some(generated),
+                _ => None,
+            })
+            .expect("solo run lost its request")
+    }
+
+    #[test]
+    fn prefix_hits_compose_with_chunked_prefill() {
+        // Composition with chunked prefill: a second wave whose
+        // prompts share the stem with the already-indexed first wave
+        // must hit the prefix cache whether admission prefill is
+        // monolithic or chunked, and every stream must equal a solo
+        // no-sharing run.
+        let run = |chunk: usize| -> Vec<(u64, Vec<u32>)> {
+            let mut cfg = small_cfg(1);
+            cfg.gen.max_new_tokens = 24;
+            cfg.gen.prefill_chunk = chunk;
+            cfg.kv.block_size = 4;
+            let (out_tx, out_rx) = mpsc::sync_channel(4096);
+            let pool = InferencePool::start(&cfg, out_tx).unwrap();
+            let input = pool.input();
+            let mut wave1 = Batch { requests: Vec::new(), seq_bucket: 32 };
+            for id in 0..2u64 {
+                wave1
+                    .requests
+                    .push(PreparedRequest::new(id, stem_prompt(id), 24));
+            }
+            input.send(wave1).unwrap();
+            // wait for a token: the emitting row finished its (maybe
+            // chunked) prefill, so its stem is in the prefix index
+            let mut events: Vec<PoolEvent> = Vec::new();
+            while !events
+                .iter()
+                .any(|e| matches!(e, PoolEvent::Tokens { .. }))
+            {
+                events
+                    .push(out_rx.recv().expect("pool died before streaming"));
+            }
+            let mut wave2 = Batch { requests: Vec::new(), seq_bucket: 32 };
+            for id in 2..4u64 {
+                wave2
+                    .requests
+                    .push(PreparedRequest::new(id, stem_prompt(id), 6));
+            }
+            input.send(wave2).unwrap();
+            drop(input);
+            let report = pool.join();
+            events.extend(out_rx.try_iter());
+            assert_eq!(
+                finished_ids(&events),
+                vec![0, 1, 2, 3],
+                "chunk={chunk}: requests lost"
+            );
+            let kv = report.kv_metrics();
+            assert!(
+                kv.admitted_mid_session >= 1,
+                "chunk={chunk}: second wave missed the running session"
+            );
+            assert!(
+                kv.prefix_hits >= 1,
+                "chunk={chunk}: shared-stem wave produced no prefix hit"
+            );
+            assert!(
+                kv.prefix_tokens_reused >= 4,
+                "chunk={chunk}: a hit must reuse at least a full block"
+            );
+            assert!(kv.prefix_hit_rate() > 0.0);
+            let mut outs: Vec<(u64, Vec<u32>)> = events
+                .into_iter()
+                .filter_map(|e| match e {
+                    PoolEvent::Finished { request, generated, .. } => {
+                        Some((request.id, generated))
+                    }
+                    _ => None,
+                })
+                .collect();
+            outs.sort_by_key(|(id, _)| *id);
+            outs
+        };
+        let solos: Vec<(u64, Vec<u32>)> = (0..4u64)
+            .map(|id| {
+                let max_new = if id < 2 { 24 } else { 6 };
+                (id, solo_noshare(stem_prompt(id), max_new))
+            })
+            .collect();
+        for chunk in [0usize, 1, 5] {
+            assert_eq!(
+                run(chunk),
+                solos,
+                "chunk={chunk}: sharing changed a stream"
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_hits_compose_with_preemption_resume() {
+        // Composition with preemption: an Interactive probe that
+        // shares its stem with two pool-filling Batch hogs adopts
+        // their indexed prefix blocks AND still forces a preemption
+        // for its fresh tail blocks; every stream — the evicted and
+        // resumed hog included — must equal a solo no-sharing run.
+        let mut cfg = small_cfg(1);
+        cfg.gen.max_new_tokens = 64;
+        cfg.kv.block_size = 4;
+        cfg.kv.blocks = 44; // 2 hogs x ceil((22+64)/4)=22 -> pool full
+        let (out_tx, out_rx) = mpsc::sync_channel(4096);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let mut hogs = Batch { requests: Vec::new(), seq_bucket: 32 };
+        for id in 1..3u64 {
+            let mut r = PreparedRequest::new(id, stem_prompt(id), 64);
+            r.priority = Priority::Batch;
+            hogs.requests.push(r);
+        }
+        input.send(hogs).unwrap();
+        // wait until the hogs stream, so the probe can only enter
+        // through between-step admission (and thus preemption)
+        let mut events: Vec<PoolEvent> = Vec::new();
+        while !events
+            .iter()
+            .any(|e| matches!(e, PoolEvent::Tokens { .. }))
+        {
+            events.push(out_rx.recv().expect("pool died before streaming"));
+        }
+        let probe = Batch {
+            requests: vec![PreparedRequest::new(3, stem_prompt(3), 8)],
+            seq_bucket: 32,
+        };
+        input.send(probe).unwrap();
+        drop(input);
+        let report = pool.join();
+        events.extend(out_rx.try_iter());
+        assert_eq!(finished_ids(&events), vec![1, 2, 3]);
+        let kv = report.kv_metrics();
+        assert!(
+            kv.preemptions >= 1,
+            "full pool + interactive arrival must preempt"
+        );
+        assert!(
+            kv.prefix_hits >= 1,
+            "probe shares the stem: it must hit the prefix index"
+        );
+        assert!(kv.prefix_tokens_reused >= 4);
+        for ev in &events {
+            if let PoolEvent::Finished { request, generated, .. } = ev {
+                let max_new = if request.id == 3 { 8 } else { 64 };
+                assert_eq!(
+                    generated,
+                    &solo_noshare(stem_prompt(request.id), max_new),
+                    "request {} diverged across share/evict/resume",
+                    request.id
+                );
+            }
         }
     }
 

@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 
 use crate::engine::{DecodeSession, Engine, EngineInput, EngineOutput, Sampler};
 use crate::runtime::kv::KvStats;
+use crate::runtime::prefix::PrefixStats;
 use crate::{Error, Result};
 
 /// Engine-side view of a prepared request.
@@ -65,6 +66,9 @@ pub struct BatchSessionStats {
     /// Paged-KV occupancy right after the seed prefill, i.e. the
     /// session's peak (None = contiguous caches).
     pub kv: Option<KvStats>,
+    /// Prefix-cache counters at session end (None = sharing off or
+    /// contiguous caches).
+    pub prefix: Option<PrefixStats>,
 }
 
 /// Like [`run_batch`], but drives the batch through the step API so
@@ -88,7 +92,7 @@ pub fn run_batch_stepped_stats(
     if batch.requests.is_empty() {
         return Ok((
             vec![],
-            BatchSessionStats { prefill_tokens: 0, kv: None },
+            BatchSessionStats { prefill_tokens: 0, kv: None, prefix: None },
         ));
     }
     let inputs: Vec<EngineInput> =
@@ -125,6 +129,7 @@ pub fn run_batch_stepped_stats(
     let stats = BatchSessionStats {
         prefill_tokens: session.prefill_tokens(),
         kv,
+        prefix: session.prefix_stats(),
     };
     let outs: Result<Vec<SteppedOutput>> = batch
         .requests

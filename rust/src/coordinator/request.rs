@@ -167,6 +167,11 @@ pub struct ServingResponse {
     /// to this reply — the per-request QoS cost of the SLO scheduler,
     /// echoed on the wire.
     pub preemptions: u32,
+    /// Prefix-cache counters `(hits, tokens_reused)` of the session
+    /// that retired this request, echoed on the wire (`prefix_hits` /
+    /// `prefix_tokens_reused`).  None when sharing is off, the cache
+    /// discipline is contiguous, or the request failed.
+    pub prefix: Option<(u64, u64)>,
 }
 
 impl ServingResponse {
@@ -191,6 +196,7 @@ impl ServingResponse {
             dtype: None,
             kv_blocks: None,
             preemptions: 0,
+            prefix: None,
         }
     }
 }

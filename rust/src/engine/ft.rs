@@ -63,6 +63,10 @@ pub struct FtEngine {
     paged: Option<(usize, usize)>,
     /// Chunked-prefill budget for paged sessions (0 = monolithic).
     prefill_chunk: usize,
+    /// Prefix sharing for paged sessions (`KvConfig::prefix_share`):
+    /// admissions adopt already-filled same-prefix blocks instead of
+    /// re-prefilling them.  Irrelevant on the contiguous path.
+    prefix_share: bool,
 }
 
 impl FtEngine {
@@ -135,6 +139,7 @@ impl FtEngine {
             multi_steps,
             paged,
             prefill_chunk: gen.prefill_chunk,
+            prefix_share: kv.prefix_share,
         })
     }
 }
@@ -178,6 +183,7 @@ impl Engine for FtEngine {
                 block_size,
                 self.prefill_chunk,
                 multi_steps,
+                self.prefix_share,
                 batch,
             );
         }

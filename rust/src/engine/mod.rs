@@ -48,6 +48,7 @@ pub use sampling::Sampler;
 
 use crate::config::{EngineKind, GenConfig, KvConfig, Sampling};
 use crate::runtime::kv::KvStats;
+use crate::runtime::prefix::PrefixStats;
 use crate::runtime::{Backend, DType, SharedBackend};
 use crate::util::rng::derive_seed;
 use crate::{special, Error, Result};
@@ -172,6 +173,15 @@ pub trait DecodeSession: Send {
     /// prefill (the baseline recomputes everything every step instead).
     fn prefill_tokens(&self) -> u64 {
         0
+    }
+
+    /// Prefix-cache counters (lookups / hits / prompt tokens adopted
+    /// instead of prefilled), when this session runs the paged path
+    /// with prefix sharing enabled.  None elsewhere — including paged
+    /// sessions started under `--no-prefix-share`, so a zero hit rate
+    /// is distinguishable from "sharing was off".
+    fn prefix_stats(&self) -> Option<PrefixStats> {
+        None
     }
 }
 

@@ -20,7 +20,26 @@
 //! - **admission is capacity-gated**: a row is admitted only when the
 //!   pool can cover its prompt PLUS its full generation budget (the
 //!   decode reservation), so a mid-decode allocation failure is
-//!   impossible by construction.
+//!   impossible by construction;
+//! - **prompt prefixes are shared** (default on; `--no-prefix-share`):
+//!   the session keeps a [`PrefixIndex`] of already-filled blocks
+//!   keyed by token ids per full block.  An admission whose prompt
+//!   starts with an indexed prefix ADOPTS those blocks — refcounted
+//!   via [`BlockPool::alloc_with_prefix`] — and prefills ONLY the
+//!   suffix (`prefill_tokens` counts just what actually ran); a
+//!   partially-matching block is adopted through copy-on-write
+//!   ([`BlockPool::cow_block`] + the backend's
+//!   [`crate::runtime::Backend::paged_kv_copy_block`]), so a shared
+//!   block is never written.  Retirement ADVERTISES the retired row's
+//!   written blocks in the index instead of dropping them — which is
+//!   also what makes a preempted row's resume a prefix hit — and the
+//!   capacity gate counts the index's exclusively-held blocks as
+//!   reclaimable: an admission that needs them evicts
+//!   least-recently-used prefixes back to the free list (matched
+//!   blocks are protected from the admission's own eviction pass).
+//!   Adoption is bitwise-safe because prefill and decode write
+//!   identical K/V for identical (token, position) pairs — shared
+//!   streams are property-tested identical to unshared solo runs.
 //!
 //! Step semantics: a freshly admitted row's first step samples the
 //! last-position logits its prefill parked (no graph call — the
@@ -38,12 +57,15 @@
 //! contiguous path and independent of admission timing
 //! (property-tested for fp32 and fp16).
 
+use std::collections::HashSet;
+
 use super::session::{drain_finished, Row};
 use super::{
     DecodeSession, EngineInput, FinishReason, FinishedRequest, Sampler,
     TokenEvent,
 };
 use crate::runtime::kv::{BlockPool, BlockTable, KvStats};
+use crate::runtime::prefix::{PrefixHit, PrefixIndex, PrefixStats};
 use crate::runtime::{
     Backend, OpaqueTensor, PagedDecodeRow, PagedPrefillRow, SharedBackend,
 };
@@ -88,6 +110,12 @@ pub(super) struct PagedFtSession {
     /// Fused greedy decode: run up to this many decode+argmax steps per
     /// backend dispatch (see module docs).  None = one step per call.
     multi_steps: Option<usize>,
+    /// Radix index of already-filled blocks (None = sharing disabled,
+    /// `--no-prefix-share`): admissions adopt matched blocks instead of
+    /// re-prefilling them, retirements advertise theirs (module docs).
+    index: Option<PrefixIndex>,
+    /// Prefix-cache counters (lookups / hits / tokens adopted).
+    prefix: PrefixStats,
 }
 
 impl PagedFtSession {
@@ -101,6 +129,7 @@ impl PagedFtSession {
         block_size: usize,
         prefill_chunk: usize,
         multi_steps: Option<usize>,
+        prefix_share: bool,
         batch: &[EngineInput],
     ) -> Result<Box<dyn DecodeSession>> {
         let (k, v) = backend.paged_kv_alloc(variant, blocks, block_size)?;
@@ -123,6 +152,8 @@ impl PagedFtSession {
             prefill_chunk,
             prefilled: Vec::new(),
             multi_steps: multi_steps.filter(|&n| n > 1),
+            index: prefix_share.then(|| PrefixIndex::new(block_size)),
+            prefix: PrefixStats::default(),
         };
         session.admit(batch)?;
         Ok(Box::new(session))
@@ -138,6 +169,33 @@ impl PagedFtSession {
             self.pool
                 .blocks_for(input.prompt.len() + input.max_new_tokens)
         }
+    }
+
+    /// Plan an admission's pool cost: the FRESH blocks it needs after
+    /// prefix adoption, and the matched blocks to protect from the
+    /// admission's own eviction pass.  Uses [`PrefixIndex::peek`] so
+    /// planning (`can_admit`) never perturbs the LRU order the real
+    /// admission will see.  A tail adoption is capacity-neutral — its
+    /// copy-on-write destination comes out of the same fresh budget the
+    /// match saves — so only full-block hits reduce the need.
+    fn plan_need(&self, extra: &[EngineInput]) -> (usize, HashSet<u32>) {
+        let mut protected = HashSet::new();
+        let mut fresh = 0usize;
+        for input in extra {
+            let need = self.blocks_needed(input);
+            if need == 0 {
+                continue;
+            }
+            match &self.index {
+                Some(ix) => {
+                    let hit = ix.peek(&input.prompt);
+                    fresh += need.saturating_sub(hit.full.len());
+                    protected.extend(hit.blocks());
+                }
+                None => fresh += need,
+            }
+        }
+        (fresh, protected)
     }
 
     /// Per-request sequence bound (the position table is finite even
@@ -170,13 +228,58 @@ impl PagedFtSession {
         Ok((k, v))
     }
 
-    /// Free the block tables of rows that finished since the last scan
-    /// — retirement returns capacity to the pool immediately.
+    /// Retire one lane's block table: advertise its written context in
+    /// the prefix index (so later same-prefix admissions adopt the
+    /// blocks, and a preempted row's resume is a prefix hit), then drop
+    /// the row's references.  Blocks the index did not pin return to
+    /// the free list immediately — retirement still frees capacity.
+    ///
+    /// The advertised frontier is conservative: a mid-prefill row
+    /// (chunked admission preempted early) has written exactly
+    /// `prefilled` prompt slots; a decoded row has written its prompt
+    /// plus every generated token it CONSUMED — the final sampled token
+    /// was never fed back through decode, so its slot is unwritten.
+    fn index_and_release(
+        index: &mut Option<PrefixIndex>,
+        pool: &mut BlockPool,
+        row: &Row,
+        prefilled: usize,
+        table: BlockTable,
+    ) {
+        if let Some(ix) = index.as_mut() {
+            let written = if prefilled < row.prompt.len() {
+                prefilled
+            } else {
+                row.prompt.len() + row.generated.len().saturating_sub(1)
+            };
+            if written > 0 {
+                let ctx: Vec<u32> = row
+                    .prompt
+                    .iter()
+                    .chain(row.generated.iter())
+                    .take(written)
+                    .copied()
+                    .collect();
+                ix.insert(&ctx, table.blocks(), pool);
+            }
+        }
+        pool.release(table);
+    }
+
+    /// Retire the block tables of rows that finished since the last
+    /// scan — capacity (minus what the index retains) returns to the
+    /// pool immediately.
     fn free_finished(&mut self) {
-        for (lane, row) in self.rows.iter().enumerate() {
-            if !row.active() {
+        for lane in 0..self.rows.len() {
+            if !self.rows[lane].active() {
                 if let Some(t) = self.tables[lane].take() {
-                    self.pool.free(t);
+                    Self::index_and_release(
+                        &mut self.index,
+                        &mut self.pool,
+                        &self.rows[lane],
+                        self.prefilled[lane],
+                        t,
+                    );
                 }
             }
         }
@@ -202,7 +305,13 @@ impl PagedFtSession {
         {
             if row.finished.is_some() {
                 if let Some(t) = table {
-                    self.pool.free(t);
+                    Self::index_and_release(
+                        &mut self.index,
+                        &mut self.pool,
+                        &row,
+                        pre,
+                        t,
+                    );
                 }
                 if !row.drained {
                     self.done_buf.push(row.finished_request());
@@ -252,15 +361,24 @@ impl DecodeSession for PagedFtSession {
     }
 
     fn can_admit(&self, extra: &[EngineInput]) -> bool {
-        let need: usize =
-            extra.iter().map(|i| self.blocks_needed(i)).sum();
-        extra.iter().all(|i| self.check_fit(i).is_ok())
-            && need <= self.pool.free_blocks()
+        if !extra.iter().all(|i| self.check_fit(i).is_ok()) {
+            return false;
+        }
+        // blocks only the index holds (and nothing protects) count as
+        // available: admit() evicts them on demand
+        let (fresh, protected) = self.plan_need(extra);
+        let budget = self.pool.free_blocks()
+            + self
+                .index
+                .as_ref()
+                .map_or(0, |ix| ix.reclaimable(&self.pool, &protected));
+        fresh <= budget
     }
 
-    /// Admit new rows: allocate their block reservations and prefill
-    /// ONLY them — live rows' caches are untouched (the whole point of
-    /// the paged refactor).
+    /// Admit new rows: allocate their block reservations — adopting
+    /// every indexed prefix block the prompt matches — and prefill
+    /// ONLY the new rows' unmatched suffixes; live rows' caches are
+    /// untouched (the whole point of the paged refactor).
     fn admit(&mut self, extra: &[EngineInput]) -> Result<()> {
         if extra.is_empty() {
             return Ok(());
@@ -268,21 +386,36 @@ impl DecodeSession for PagedFtSession {
         for input in extra {
             self.check_fit(input)?;
         }
-        let need: usize =
-            extra.iter().map(|i| self.blocks_needed(i)).sum();
-        if need > self.pool.free_blocks() {
+        // compact first: newly retired rows advertise their blocks
+        // before the prefix planning looks for them
+        self.compact();
+        let (fresh_need, protected) = self.plan_need(extra);
+        if fresh_need > self.pool.free_blocks() {
+            let short = fresh_need - self.pool.free_blocks();
+            if let Some(ix) = self.index.as_mut() {
+                // LRU-evict unreferenced prefixes; the blocks this very
+                // admission matched are shielded
+                ix.evict(&mut self.pool, short, &protected);
+            }
+        }
+        if fresh_need > self.pool.free_blocks() {
             return Err(Error::Capacity(format!(
-                "kv pool cannot admit {} request(s) needing {need} \
-                 blocks ({} of {} free)",
+                "kv pool cannot admit {} request(s) needing {fresh_need} \
+                 fresh blocks ({} of {} free)",
                 extra.len(),
                 self.pool.free_blocks(),
                 self.pool.total_blocks()
             )));
         }
-        self.compact();
         let chunked = self.prefill_chunk > 0;
+        let bs = self.pool.block_size();
         let mut prefill_rows: Vec<PagedPrefillRow> = Vec::new();
         let mut new_lanes: Vec<usize> = Vec::new();
+        // copy-on-write sources/destinations to materialize in the
+        // backend BEFORE any prefill of this admission runs (a suffix
+        // prefill overwrites its tail block from the divergence point;
+        // the adopted slots before it must be in place first)
+        let mut cow_ops: Vec<(u32, u32)> = Vec::new();
         for input in extra {
             let row = Row::new(input, self.admit_seq);
             self.admit_seq += 1;
@@ -290,23 +423,54 @@ impl DecodeSession for PagedFtSession {
             self.positions.push(input.prompt.len() as i32);
             self.last_tok.push(special::PAD as i32);
             if row.active() {
-                let table = self.pool.alloc(
+                // prefix adoption: matched blocks stand in for the
+                // leading prompt tokens, only the suffix prefills.
+                // lookup() (vs the planning peek) marks the match as
+                // recently used.
+                let hit = match self.index.as_mut() {
+                    Some(ix) => {
+                        self.prefix.lookups += 1;
+                        ix.lookup(&input.prompt)
+                    }
+                    None => PrefixHit::default(),
+                };
+                let mut shared = hit.full.clone();
+                if let Some((b, _)) = hit.tail {
+                    shared.push(b);
+                }
+                let mut table = self.pool.alloc_with_prefix(
+                    &shared,
                     input.prompt.len() + input.max_new_tokens,
                 )?;
+                let mut reused = hit.full.len() * bs;
+                if let Some((_, m)) = hit.tail {
+                    // the tail source stays shared (the index pins it);
+                    // detach our copy so the suffix prefill may write
+                    // the block's remaining slots
+                    if let Some(op) =
+                        self.pool.cow_block(&mut table, hit.full.len())?
+                    {
+                        cow_ops.push(op);
+                    }
+                    reused += m;
+                }
+                if reused > 0 {
+                    self.prefix.hits += 1;
+                    self.prefix.tokens_reused += reused as u64;
+                }
                 if chunked {
-                    // defer the prompt: step() streams it in
+                    // defer the suffix: step() streams it in
                     // `prefill_chunk`-token slices interleaved with
                     // decoding, so this admission cannot stall the
                     // step it lands in
-                    self.prefilled.push(0);
+                    self.prefilled.push(reused);
                 } else {
                     prefill_rows.push(PagedPrefillRow {
-                        tokens: input
-                            .prompt
+                        tokens: input.prompt[reused..]
                             .iter()
                             .map(|&t| t as i32)
                             .collect(),
-                        start: 0,
+                        start: reused,
                         blocks: table.blocks().to_vec(),
                     });
                     new_lanes.push(lane);
@@ -320,6 +484,19 @@ impl DecodeSession for PagedFtSession {
             }
             self.pending.push(None);
             self.rows.push(row);
+        }
+        if !cow_ops.is_empty() {
+            let (k, v) = self.take_caches()?;
+            let (mut k, mut v) = (k, v);
+            for &(src, dst) in &cow_ops {
+                let (nk, nv) = self
+                    .backend
+                    .paged_kv_copy_block(self.variant, k, v, src, dst)?;
+                k = nk;
+                v = nv;
+            }
+            self.k = Some(k);
+            self.v = Some(v);
         }
         if prefill_rows.is_empty() {
             return Ok(());
@@ -345,6 +522,20 @@ impl DecodeSession for PagedFtSession {
         for (i, &lane) in new_lanes.iter().enumerate() {
             self.pending[lane] =
                 Some(logits[i * vsz..(i + 1) * vsz].to_vec());
+        }
+        // advertise the freshly prefilled prompts: their blocks now
+        // hold exactly what any later same-prefix admission would
+        // re-compute
+        if let Some(ix) = self.index.as_mut() {
+            for &lane in &new_lanes {
+                if let Some(t) = &self.tables[lane] {
+                    ix.insert(
+                        &self.rows[lane].prompt,
+                        t.blocks(),
+                        &mut self.pool,
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -423,6 +614,18 @@ impl DecodeSession for PagedFtSession {
                     if completes {
                         self.pending[lane] =
                             Some(logits[i * vsz..(i + 1) * vsz].to_vec());
+                        // the prompt's blocks are fully written now:
+                        // advertise them, same as a monolithic
+                        // admission does at prefill time
+                        if let Some(ix) = self.index.as_mut() {
+                            if let Some(t) = &self.tables[lane] {
+                                ix.insert(
+                                    &self.rows[lane].prompt,
+                                    t.blocks(),
+                                    &mut self.pool,
+                                );
+                            }
+                        }
                     }
                     // mid-prompt logits are discarded — the monolithic
                     // path never samples them either
@@ -573,7 +776,13 @@ impl DecodeSession for PagedFtSession {
         self.rows[lane].finished = Some(reason);
         self.pending[lane] = None;
         if let Some(t) = self.tables[lane].take() {
-            self.pool.free(t);
+            Self::index_and_release(
+                &mut self.index,
+                &mut self.pool,
+                &self.rows[lane],
+                self.prefilled[lane],
+                t,
+            );
         }
         true
     }
@@ -588,5 +797,9 @@ impl DecodeSession for PagedFtSession {
 
     fn prefill_tokens(&self) -> u64 {
         self.prefill_tokens
+    }
+
+    fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.index.as_ref().map(|_| self.prefix)
     }
 }

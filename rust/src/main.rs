@@ -38,7 +38,9 @@ fn usage() -> ! {
                  decode session; default 0 = auto-size to the largest\n\
                  compiled batch bucket)  --no-paged-kv (legacy\n\
                  contiguous bucket caches: admission re-prefills the\n\
-                 whole batch)\n\
+                 whole batch)  --no-prefix-share (disable prefix\n\
+                 sharing on the paged KV cache: every admission\n\
+                 prefills its full prompt)\n\
                  --prefill-chunk N (paged KV: spread each admission's\n\
                  prompt prefill over decode steps in N-token chunks,\n\
                  bounding per-step latency; default 0 = monolithic)\n\
@@ -164,6 +166,9 @@ fn build_config(args: &Args) -> ServingConfig {
     }
     if args.has("no-paged-kv") {
         cfg.kv.paged = false;
+    }
+    if args.has("no-prefix-share") {
+        cfg.kv.prefix_share = false;
     }
     if args.has("no-pipeline") {
         cfg.pipelined = false;
@@ -295,6 +300,16 @@ fn cmd_run(args: &Args) {
                     s.kv.blocked_on_capacity.as_secs_f64(),
                     s.kv.preemptions
                 );
+                if s.kv.prefix_lookups > 0 {
+                    println!(
+                        "prefix cache  {} hits / {} lookups ({:.0}% hit \
+                         rate), {} prompt tokens reused",
+                        s.kv.prefix_hits,
+                        s.kv.prefix_lookups,
+                        s.kv.prefix_hit_rate() * 100.0,
+                        s.kv.prefix_tokens_reused
+                    );
+                }
             } else {
                 println!(
                     "kv cache      contiguous ({} admission prefill tokens)",

@@ -256,6 +256,7 @@ pub fn postprocess(
         dtype: None,
         kv_blocks: None,
         preemptions: req.preemptions,
+        prefix: None,
     }
 }
 
@@ -336,6 +337,11 @@ pub fn run_sequential(
             stages.inference += dt;
             session_latency.record(dt);
             kv.admission_prefill_tokens += batch_stats.prefill_tokens;
+            if let Some(p) = batch_stats.prefix {
+                kv.prefix_lookups += p.lookups;
+                kv.prefix_hits += p.hits;
+                kv.prefix_tokens_reused += p.tokens_reused;
+            }
             if let Some(st) = batch_stats.kv {
                 kv.kv_total_blocks =
                     kv.kv_total_blocks.max(st.total_blocks as u64);
@@ -491,6 +497,7 @@ pub fn run_pipelined(
                         steps,
                         ttft,
                         kv,
+                        prefix,
                         ..
                     } => {
                         let t = Instant::now();
@@ -502,6 +509,8 @@ pub fn run_pipelined(
                         resp.kv_blocks = kv.map(|st| {
                             (st.used_blocks() as u64, st.total_blocks as u64)
                         });
+                        resp.prefix =
+                            prefix.map(|p| (p.hits, p.tokens_reused));
                         responses.push(resp);
                         busy += t.elapsed();
                     }

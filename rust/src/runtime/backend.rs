@@ -299,6 +299,26 @@ pub trait Backend: Send + Sync {
             self.name()
         )))
     }
+
+    /// Copy every K/V slot of pool block `src` into pool block `dst`
+    /// (all layers/heads) — the storage half of copy-on-write prefix
+    /// adoption: the session detaches a shared block via
+    /// `BlockPool::cow_block`, then duplicates its payload here before
+    /// the adopter writes its divergent suffix.  Returns the updated
+    /// cache handles.
+    fn paged_kv_copy_block(
+        &self,
+        _variant: &str,
+        _k: OpaqueTensor,
+        _v: OpaqueTensor,
+        _src: u32,
+        _dst: u32,
+    ) -> Result<(OpaqueTensor, OpaqueTensor)> {
+        Err(Error::Other(format!(
+            "backend '{}' has no paged KV support",
+            self.name()
+        )))
+    }
 }
 
 /// How many threads the reference backend may use to split the rows of

@@ -5,6 +5,15 @@
 //! blocks** and every request owns a **block table** mapping its
 //! virtual sequence slots onto pool blocks.
 //!
+//! Since the prefix-sharing PR the blocks are **refcounted**: a block
+//! filled by one request's prefill can be adopted by later requests
+//! with the same prompt prefix ([`BlockPool::share`] /
+//! [`BlockPool::alloc_with_prefix`]), and the radix index in
+//! [`crate::runtime::prefix`] holds its own reference on every block it
+//! advertises.  Writes require exclusive ownership: a table that must
+//! mutate a shared block first detaches via [`BlockPool::cow_block`]
+//! (copy-on-write), so sharing can never corrupt a sibling's cache.
+//!
 //! This module is pure bookkeeping: block ids in, block ids out.  The
 //! actual K/V storage lives behind the backend (see
 //! [`crate::runtime::Backend::paged_kv_alloc`] and the paged
@@ -13,17 +22,23 @@
 //! call.
 //!
 //! Invariants (fuzz-tested below):
-//! - a block is owned by at most one live [`BlockTable`] at a time;
-//! - [`BlockPool::free`] takes the table **by value**, so double-free
-//!   is unrepresentable in safe code (and still asserted internally);
-//! - `used_blocks == Σ blocks over live tables` at every point.
+//! - `refcount(b)` == number of live owners (tables + index entries)
+//!   holding block `b`;
+//! - [`BlockPool::release`] takes the table **by value**, so
+//!   double-release is unrepresentable in safe code (and still
+//!   asserted internally);
+//! - `used_blocks` counts **distinct** live blocks (a block shared by
+//!   ten tables occupies one block), and equals the number of blocks
+//!   off the free list at every point;
+//! - [`BlockPool::cow_block`] never hands out a writable block with
+//!   `refcount > 1`.
 //!
 //! Admission policy built on top (see `engine::paged` and
 //! `coordinator::dispatch`): a request is admitted only when the pool
 //! can cover its **prompt plus its full generation budget** (the
-//! "decode reservation"), so a mid-decode allocation failure is
-//! impossible by construction and retirement can free the whole table
-//! at once.
+//! "decode reservation") minus whatever full blocks a prefix hit lets
+//! it adopt, so a mid-decode allocation failure is impossible by
+//! construction and retirement can release the whole table at once.
 
 use crate::{Error, Result};
 
@@ -42,7 +57,7 @@ pub struct KvStats {
 }
 
 impl KvStats {
-    /// Blocks currently owned by live tables.
+    /// Distinct blocks currently owned by at least one live reference.
     pub fn used_blocks(&self) -> usize {
         self.total_blocks - self.free_blocks
     }
@@ -50,7 +65,9 @@ impl KvStats {
 
 /// One request's view into the block pool: pool block ids in sequence
 /// order.  Virtual slot `t` of the request's context lives in block
-/// `blocks[t / block_size]` at offset `t % block_size`.
+/// `blocks[t / block_size]` at offset `t % block_size`.  Entries may be
+/// shared with other tables (refcounted); writes to a shared entry must
+/// go through [`BlockPool::cow_block`] first.
 #[derive(Debug)]
 pub struct BlockTable {
     blocks: Vec<u32>,
@@ -71,7 +88,8 @@ impl BlockTable {
     }
 }
 
-/// Fixed-size block allocator for one paged KV cache (see module docs).
+/// Fixed-size refcounted block allocator for one paged KV cache (see
+/// module docs).
 #[derive(Debug)]
 pub struct BlockPool {
     block_size: usize,
@@ -79,8 +97,9 @@ pub struct BlockPool {
     /// LIFO free list — recently-freed blocks are reused first, which
     /// keeps the touched working set small.
     free: Vec<u32>,
-    /// Allocation bitmap, the double-free / foreign-free guard.
-    live: Vec<bool>,
+    /// Live references per block (0 = on the free list).  The
+    /// double-release / foreign-release guard, and the sharing ledger.
+    refs: Vec<u32>,
 }
 
 impl BlockPool {
@@ -92,7 +111,7 @@ impl BlockPool {
             total: total_blocks,
             // popping from the tail hands out low ids first
             free: (0..total_blocks as u32).rev().collect(),
-            live: vec![false; total_blocks],
+            refs: vec![0; total_blocks],
         }
     }
 
@@ -108,6 +127,8 @@ impl BlockPool {
         self.free.len()
     }
 
+    /// Distinct blocks off the free list — sharing does not inflate
+    /// occupancy, which is exactly why prefix reuse saves capacity.
     pub fn used_blocks(&self) -> usize {
         self.total - self.free.len()
     }
@@ -115,6 +136,11 @@ impl BlockPool {
     /// Blocks needed to cover `tokens` sequence slots.
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_size)
+    }
+
+    /// Live references on `block` (0 = free).
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refs[block as usize]
     }
 
     pub fn stats(&self) -> KvStats {
@@ -129,29 +155,63 @@ impl BlockPool {
     /// error when the pool cannot (callers gate on
     /// [`BlockPool::free_blocks`] first — see `can_admit`).
     pub fn alloc(&mut self, tokens: usize) -> Result<BlockTable> {
+        self.alloc_with_prefix(&[], tokens)
+    }
+
+    /// Allocate a table covering `tokens` slots whose leading entries
+    /// ADOPT the already-live `shared` blocks (one reference added to
+    /// each) and whose remainder comes fresh off the free list.  The
+    /// call is atomic: on a capacity error no reference is taken and
+    /// nothing is popped.
+    pub fn alloc_with_prefix(
+        &mut self,
+        shared: &[u32],
+        tokens: usize,
+    ) -> Result<BlockTable> {
         let need = self.blocks_for(tokens);
-        if need > self.free.len() {
+        assert!(
+            shared.len() <= need,
+            "prefix of {} shared blocks exceeds the {need}-block table",
+            shared.len()
+        );
+        let fresh = need - shared.len();
+        if fresh > self.free.len() {
             return Err(Error::Capacity(format!(
-                "kv pool exhausted: need {need} blocks ({tokens} slots \
-                 at block size {}), {} of {} free",
+                "kv pool exhausted: need {fresh} fresh blocks ({tokens} \
+                 slots at block size {}, {} shared), {} of {} free",
                 self.block_size,
+                shared.len(),
                 self.free.len(),
                 self.total
             )));
         }
         let mut blocks = Vec::with_capacity(need);
-        for _ in 0..need {
+        for &b in shared {
+            self.share(b);
+            blocks.push(b);
+        }
+        for _ in 0..fresh {
             let b = self.free.pop().expect("checked above");
-            debug_assert!(!self.live[b as usize], "free list corrupt");
-            self.live[b as usize] = true;
+            debug_assert_eq!(self.refs[b as usize], 0, "free list corrupt");
+            self.refs[b as usize] = 1;
             blocks.push(b);
         }
         Ok(BlockTable { blocks, capacity: need * self.block_size })
     }
 
-    /// Grow `table` to cover `tokens` slots (no-op when it already
-    /// does).  Same capacity error as [`BlockPool::alloc`] on
-    /// exhaustion; the table is untouched then.
+    /// Add one reference to an already-live block (prefix adoption; the
+    /// radix index pins its advertised blocks this way too).
+    pub fn share(&mut self, block: u32) {
+        assert!(
+            self.refs[block as usize] > 0,
+            "block {block} shared while free or foreign to this pool"
+        );
+        self.refs[block as usize] += 1;
+    }
+
+    /// Grow `table` to cover `tokens` slots with fresh blocks (no-op
+    /// when it already does).  Same capacity error as
+    /// [`BlockPool::alloc`] on exhaustion; the table is untouched then.
     pub fn extend(&mut self, table: &mut BlockTable, tokens: usize) -> Result<()> {
         let need = self.blocks_for(tokens);
         if need <= table.blocks.len() {
@@ -168,25 +228,68 @@ impl BlockPool {
         }
         for _ in 0..extra {
             let b = self.free.pop().expect("checked above");
-            debug_assert!(!self.live[b as usize], "free list corrupt");
-            self.live[b as usize] = true;
+            debug_assert_eq!(self.refs[b as usize], 0, "free list corrupt");
+            self.refs[b as usize] = 1;
             table.blocks.push(b);
         }
         table.capacity = table.blocks.len() * self.block_size;
         Ok(())
     }
 
-    /// Return every block of a retired table to the pool.  Takes the
-    /// table by value: a freed table cannot be freed (or used) again.
-    pub fn free(&mut self, table: BlockTable) {
-        for b in table.blocks {
-            assert!(
-                self.live[b as usize],
-                "block {b} freed twice or foreign to this pool"
-            );
-            self.live[b as usize] = false;
-            self.free.push(b);
+    /// Drop one reference from `block`; it returns to the free list
+    /// when the last reference goes.
+    pub fn release_block(&mut self, block: u32) {
+        assert!(
+            self.refs[block as usize] > 0,
+            "block {block} released twice or foreign to this pool"
+        );
+        self.refs[block as usize] -= 1;
+        if self.refs[block as usize] == 0 {
+            self.free.push(block);
         }
+    }
+
+    /// Drop a retired table's reference on every one of its blocks.
+    /// Takes the table by value: a released table cannot be released
+    /// (or used) again.  Blocks still shared with siblings or pinned by
+    /// the prefix index survive; exclusively-owned ones come home.
+    pub fn release(&mut self, table: BlockTable) {
+        for b in table.blocks {
+            self.release_block(b);
+        }
+    }
+
+    /// Copy-on-write: make `table.blocks[idx]` exclusively owned so the
+    /// caller may write to it.  Already-exclusive entries are a no-op
+    /// (`None`).  Shared entries swap in a fresh block and drop the
+    /// shared reference; the caller gets `Some((src, dst))` and MUST
+    /// copy the backend payload `src -> dst` before writing.  A shared
+    /// block is therefore never mutated — fuzz-asserted below.
+    pub fn cow_block(
+        &mut self,
+        table: &mut BlockTable,
+        idx: usize,
+    ) -> Result<Option<(u32, u32)>> {
+        let src = table.blocks[idx];
+        assert!(
+            self.refs[src as usize] > 0,
+            "block {src} in a live table but free in the pool"
+        );
+        if self.refs[src as usize] == 1 {
+            return Ok(None);
+        }
+        let Some(dst) = self.free.pop() else {
+            return Err(Error::Capacity(format!(
+                "kv pool exhausted: copy-on-write of block {src} needs a \
+                 fresh block, 0 of {} free",
+                self.total
+            )));
+        };
+        debug_assert_eq!(self.refs[dst as usize], 0, "free list corrupt");
+        self.refs[dst as usize] = 1;
+        self.refs[src as usize] -= 1;
+        table.blocks[idx] = dst;
+        Ok(Some((src, dst)))
     }
 }
 
@@ -196,7 +299,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     #[test]
-    fn alloc_free_roundtrip_and_occupancy() {
+    fn alloc_release_roundtrip_and_occupancy() {
         let mut p = BlockPool::new(8, 16);
         assert_eq!(p.free_blocks(), 8);
         assert_eq!(p.blocks_for(1), 1);
@@ -208,7 +311,10 @@ mod tests {
         assert_eq!(t.capacity(), 48);
         assert_eq!(p.used_blocks(), 3);
         assert_eq!(p.stats().used_blocks(), 3);
-        p.free(t);
+        for &b in t.blocks() {
+            assert_eq!(p.refcount(b), 1);
+        }
+        p.release(t);
         assert_eq!(p.used_blocks(), 0);
         assert_eq!(p.free_blocks(), 8);
     }
@@ -221,7 +327,7 @@ mod tests {
         assert_eq!(err.code(), "bad_request", "capacity maps to bad_request");
         assert!(err.to_string().contains("exhausted"), "{err}");
         assert_eq!(p.free_blocks(), 1, "failed alloc must not leak");
-        p.free(t);
+        p.release(t);
         assert_eq!(p.free_blocks(), 4);
     }
 
@@ -237,28 +343,88 @@ mod tests {
         assert!(p.extend(&mut t, 100).is_err());
         assert_eq!(t.blocks().len(), 3, "failed extend must not mutate");
         assert_eq!(p.free_blocks(), 1);
-        p.free(t);
+        p.release(t);
     }
 
     #[test]
-    fn blocks_are_never_shared_between_live_tables() {
+    fn fresh_allocations_never_share_blocks() {
         let mut p = BlockPool::new(16, 4);
         let a = p.alloc(20).unwrap();
         let b = p.alloc(30).unwrap();
         for x in a.blocks() {
             assert!(!b.blocks().contains(x), "block {x} double-owned");
         }
-        p.free(a);
-        p.free(b);
+        p.release(a);
+        p.release(b);
     }
 
     #[test]
-    fn fuzz_random_alloc_extend_free_under_pressure() {
-        // Satellite: seeded fuzz of the allocator.  Random interleaved
-        // alloc/extend/free ops against a small pool (so exhaustion is
-        // routine); after every op: no double-ownership and occupancy
-        // == Σ blocks over live tables; after draining: zero leaked
-        // blocks.
+    fn shared_prefix_counts_once_and_survives_first_release() {
+        let mut p = BlockPool::new(8, 4);
+        let a = p.alloc(12).unwrap(); // 3 blocks
+        let shared = a.blocks()[..2].to_vec();
+        let b = p.alloc_with_prefix(&shared, 16).unwrap(); // 2 shared + 2 fresh
+        assert_eq!(&b.blocks()[..2], &shared[..]);
+        // 3 (a) + 2 fresh (b) distinct blocks — shared ones count once
+        assert_eq!(p.used_blocks(), 5);
+        assert_eq!(p.refcount(shared[0]), 2);
+        p.release(a);
+        // the shared prefix is still pinned by b
+        assert_eq!(p.used_blocks(), 4);
+        assert_eq!(p.refcount(shared[0]), 1);
+        p.release(b);
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn alloc_with_prefix_is_atomic_on_capacity_error() {
+        let mut p = BlockPool::new(4, 4);
+        let a = p.alloc(12).unwrap(); // 3 of 4 blocks
+        let shared = a.blocks()[..1].to_vec();
+        // 1 shared + needs 3 fresh, only 1 free
+        let err = p.alloc_with_prefix(&shared, 16).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+        assert_eq!(p.refcount(shared[0]), 1, "failed alloc must not pin");
+        assert_eq!(p.free_blocks(), 1);
+        p.release(a);
+    }
+
+    #[test]
+    fn cow_detaches_shared_blocks_and_skips_exclusive_ones() {
+        let mut p = BlockPool::new(8, 4);
+        let a = p.alloc(8).unwrap();
+        let shared = a.blocks().to_vec();
+        let mut b = p.alloc_with_prefix(&shared, 8).unwrap();
+        // shared entry: COW swaps in a fresh block and reports the copy
+        let (src, dst) = p.cow_block(&mut b, 1).unwrap().expect("shared");
+        assert_eq!(src, shared[1]);
+        assert_ne!(dst, src);
+        assert_eq!(b.blocks()[1], dst);
+        assert_eq!(p.refcount(src), 1, "a's reference survives");
+        assert_eq!(p.refcount(dst), 1, "b owns the copy exclusively");
+        // exclusive entry: no-op
+        assert!(p.cow_block(&mut b, 1).unwrap().is_none());
+        // exhaust the pool: COW of a still-shared entry is a typed error
+        let hog = p.alloc(p.free_blocks() * 4).unwrap();
+        let err = p.cow_block(&mut b, 0).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+        assert_eq!(b.blocks()[0], shared[0], "failed COW must not mutate");
+        p.release(hog);
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn fuzz_random_share_release_cow_under_pressure() {
+        // Satellite: seeded fuzz of the refcounted allocator.  Random
+        // interleaved alloc / prefix-share / extend / COW / release ops
+        // against a small pool (so exhaustion is routine); after every
+        // op: occupancy == distinct blocks over live tables, refcounts
+        // == per-block owner counts, and COW only ever hands the caller
+        // a block with refcount 1 (a shared block is never writable);
+        // after draining: zero leaked blocks.
         let mut rng = Rng::seed_from_u64(0xB10C);
         for case in 0..40 {
             let total = 1 + rng.gen_range(0, 24);
@@ -266,7 +432,7 @@ mod tests {
             let mut pool = BlockPool::new(total, bs);
             let mut live: Vec<BlockTable> = Vec::new();
             for op in 0..400 {
-                match rng.gen_range(0, 3) {
+                match rng.gen_range(0, 5) {
                     0 => {
                         let tokens = rng.gen_range(0, 4 * bs + 2);
                         let fits =
@@ -287,6 +453,26 @@ mod tests {
                         }
                     }
                     1 if !live.is_empty() => {
+                        // adopt a random prefix of a random live table
+                        let i = rng.gen_range(0, live.len());
+                        let take =
+                            rng.gen_range(0, live[i].blocks().len() + 1);
+                        let shared = live[i].blocks()[..take].to_vec();
+                        let tokens = take * bs + rng.gen_range(0, 2 * bs + 1);
+                        let fresh = pool
+                            .blocks_for(tokens)
+                            .saturating_sub(take);
+                        let fits = fresh <= pool.free_blocks();
+                        match pool.alloc_with_prefix(&shared, tokens) {
+                            Ok(t) => {
+                                assert!(fits);
+                                assert_eq!(&t.blocks()[..take], &shared[..]);
+                                live.push(t);
+                            }
+                            Err(_) => assert!(!fits),
+                        }
+                    }
+                    2 if !live.is_empty() => {
                         let i = rng.gen_range(0, live.len());
                         let tokens = rng.gen_range(0, 6 * bs + 2);
                         let before = live[i].blocks().len();
@@ -309,34 +495,78 @@ mod tests {
                             }
                         }
                     }
-                    2 if !live.is_empty() => {
+                    3 if !live.is_empty() => {
+                        // COW a random entry of a random table
                         let i = rng.gen_range(0, live.len());
-                        pool.free(live.swap_remove(i));
+                        if live[i].blocks().is_empty() {
+                            continue;
+                        }
+                        let idx =
+                            rng.gen_range(0, live[i].blocks().len());
+                        let src = live[i].blocks()[idx];
+                        let was_shared = pool.refcount(src) > 1;
+                        let had_free = pool.free_blocks() > 0;
+                        let mut t = live.swap_remove(i);
+                        match pool.cow_block(&mut t, idx) {
+                            Ok(None) => assert!(
+                                !was_shared,
+                                "case {case} op {op}: COW no-op handed out \
+                                 a shared block"
+                            ),
+                            Ok(Some((s, d))) => {
+                                assert!(was_shared && had_free);
+                                assert_eq!(s, src);
+                                assert_eq!(t.blocks()[idx], d);
+                                assert_eq!(
+                                    pool.refcount(d),
+                                    1,
+                                    "case {case} op {op}: COW result is \
+                                     not exclusively owned"
+                                );
+                            }
+                            Err(_) => {
+                                assert!(was_shared && !had_free);
+                                assert_eq!(
+                                    t.blocks()[idx],
+                                    src,
+                                    "failed COW mutated the table"
+                                );
+                            }
+                        }
+                        live.push(t);
+                    }
+                    4 if !live.is_empty() => {
+                        let i = rng.gen_range(0, live.len());
+                        pool.release(live.swap_remove(i));
                     }
                     _ => {}
                 }
-                // occupancy == sum of live tables, no double-ownership
-                let live_sum: usize =
-                    live.iter().map(|t| t.blocks().len()).sum();
-                assert_eq!(
-                    pool.used_blocks(),
-                    live_sum,
-                    "case {case} op {op}: occupancy drifted"
-                );
-                let mut seen = vec![false; total];
+                // occupancy == distinct blocks across live tables, and
+                // refcounts == per-block owner counts (no double-release
+                // can hide: a drifted count would trip here)
+                let mut owners = vec![0u32; total];
                 for t in &live {
                     for &b in t.blocks() {
-                        assert!(
-                            !seen[b as usize],
-                            "case {case} op {op}: block {b} double-owned"
-                        );
-                        seen[b as usize] = true;
+                        owners[b as usize] += 1;
                     }
+                }
+                let distinct = owners.iter().filter(|&&c| c > 0).count();
+                assert_eq!(
+                    pool.used_blocks(),
+                    distinct,
+                    "case {case} op {op}: occupancy drifted"
+                );
+                for (b, &c) in owners.iter().enumerate() {
+                    assert_eq!(
+                        pool.refcount(b as u32),
+                        c,
+                        "case {case} op {op}: refcount of block {b} drifted"
+                    );
                 }
             }
             // all sessions retire: every block must come home
             for t in live.drain(..) {
-                pool.free(t);
+                pool.release(t);
             }
             assert_eq!(
                 pool.free_blocks(),

@@ -28,6 +28,7 @@ mod client;
 pub mod dtype;
 pub mod kv;
 pub mod manifest;
+pub mod prefix;
 pub mod reference;
 mod weights;
 
@@ -36,6 +37,7 @@ pub use backend::{
     PagedDecodeRow, PagedPrefillRow, RuntimeStats, SharedBackend,
 };
 pub use kv::{BlockPool, BlockTable, KvStats};
+pub use prefix::{PrefixHit, PrefixIndex, PrefixStats};
 pub use dtype::{quantize_f16, DType, Kernel, F16};
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;

@@ -1,0 +1,546 @@
+//! Radix prefix index over paged KV blocks — the cache-reuse half of
+//! the prefix-sharing subsystem (the refcounting half lives in
+//! [`crate::runtime::kv`]).
+//!
+//! At millions-of-users scale most traffic shares prompt prefixes
+//! (system prompts, few-shot templates — the Zipf skew `data/zipf.rs`
+//! models), so re-prefilling a shared prefix on every admission is pure
+//! waste.  This index maps **token ids per full block** to the pool
+//! block already holding that span's K/V: a trie node at depth `d`
+//! whose edge key is `tokens[d*bs..(d+1)*bs]` pins (via
+//! [`crate::runtime::kv::BlockPool::share`]) the block covering exactly
+//! those sequence slots.  Depth encodes position, so a matched block is
+//! valid for ANY request whose prompt starts with the same tokens —
+//! prefill and decode write identical K/V for identical (token,
+//! position) pairs on the reference backend, which is what makes
+//! adoption bitwise-safe.
+//!
+//! Partially-filled **tail** blocks (a retired row's last block, or a
+//! chunk boundary) hang off their deepest full-block node as `(tokens,
+//! block)` candidates; an admission that extends past its full-block
+//! match can adopt a tail via copy-on-write
+//! ([`crate::runtime::kv::BlockPool::cow_block`]) and prefill only the
+//! divergent remainder.
+//!
+//! Lifecycle: the index holds its own pool reference per indexed
+//! block, so advertised prefixes survive the retirement of the row
+//! that filled them.  Under capacity pressure
+//! [`PrefixIndex::evict`] drops least-recently-used leaves first,
+//! releasing index references until enough blocks actually return to
+//! the free list; blocks still shared with live rows are skipped by
+//! the accounting ([`PrefixIndex::reclaimable`]) but can still be
+//! un-advertised.  A `protected` set shields the blocks a pending
+//! admission just matched from being evicted by its own eviction pass.
+//!
+//! Determinism: LRU uses a logical clock (a `u64` bumped per
+//! lookup/insert), never wall time.
+
+use std::collections::{HashMap, HashSet};
+
+use super::kv::BlockPool;
+
+/// Prefix-cache counters for one decode session, surfaced through
+/// `DecodeSession::prefix_stats` into the serving metrics
+/// (`KvMetrics`, wire replies, `bench_snapshot`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Admissions that consulted the index (active rows only).
+    pub lookups: u64,
+    /// Lookups that adopted at least one token.
+    pub hits: u64,
+    /// Σ prompt tokens adopted instead of prefilled.
+    pub tokens_reused: u64,
+}
+
+impl PrefixStats {
+    /// Hits per lookup (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+/// What a prompt lookup matched: whole shared blocks plus an optional
+/// partially-matching copy-on-write source.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixHit {
+    /// Fully matched blocks, in sequence order — adopted as-is (one
+    /// shared reference each, never written by the adopter).
+    pub full: Vec<u32>,
+    /// A block matching `m` further tokens past the full blocks, and
+    /// that `m`: the adopter must copy-on-write it before prefilling
+    /// the remainder of the block.
+    pub tail: Option<(u32, usize)>,
+}
+
+impl PrefixHit {
+    /// Prompt tokens this hit lets the adopter skip.
+    pub fn tokens(&self, block_size: usize) -> usize {
+        self.full.len() * block_size + self.tail.map_or(0, |(_, m)| m)
+    }
+
+    /// The matched pool blocks (full + tail source), for protecting
+    /// them from a same-admission eviction pass.
+    pub fn blocks(&self) -> impl Iterator<Item = u32> + '_ {
+        self.full.iter().copied().chain(self.tail.map(|(b, _)| b))
+    }
+}
+
+/// One trie node: the block it pins, its children keyed by the next
+/// block's token span, and partial-tail candidates hanging below it.
+#[derive(Debug)]
+struct Node {
+    parent: usize,
+    /// Pool block whose K/V this node advertises (`None` only for the
+    /// root, which covers zero tokens).
+    block: Option<u32>,
+    children: HashMap<Vec<u32>, usize>,
+    /// Partially-filled candidates below this node: `(tokens, block,
+    /// last_use)` with `tokens.len() < block_size`.
+    tails: Vec<(Vec<u32>, u32, u64)>,
+    last_use: u64,
+}
+
+/// Radix index of already-filled KV blocks keyed by token ids per full
+/// block (see module docs).  Owns one pool reference per indexed
+/// block.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    block_size: usize,
+    /// Arena; `nodes[0]` is the root.  Removed nodes are tombstoned
+    /// (unlinked from their parent) and their slots never reused — the
+    /// arena only grows within one session's lifetime, which is fine
+    /// at session scale and keeps ids stable.
+    nodes: Vec<Node>,
+    /// Logical LRU clock (bumped per lookup/insert — never wall time,
+    /// so eviction order is deterministic).
+    clock: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(block_size: usize) -> Self {
+        assert!(block_size > 0, "kv block size must be > 0");
+        Self {
+            block_size,
+            nodes: vec![Node {
+                parent: 0,
+                block: None,
+                children: HashMap::new(),
+                tails: Vec::new(),
+                last_use: 0,
+            }],
+            clock: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Distinct blocks currently pinned by the index (each holds one
+    /// pool reference).
+    pub fn indexed_blocks(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                usize::from(n.block.is_some() && !Self::unlinked(n))
+                    + n.tails.len()
+            })
+            .sum()
+    }
+
+    /// A tombstoned (evicted) non-root node: unlinked by pointing its
+    /// parent at itself.
+    fn unlinked(node: &Node) -> bool {
+        node.parent == usize::MAX
+    }
+
+    /// Walk the prompt's full blocks down the trie WITHOUT touching the
+    /// LRU clock — the `can_admit` twin of [`PrefixIndex::lookup`].
+    /// Adoption is capped at `prompt.len() - 1` tokens so at least one
+    /// suffix token always prefills (the admission needs last-position
+    /// logits to sample from).
+    pub fn peek(&self, prompt: &[u32]) -> PrefixHit {
+        self.walk(prompt).0
+    }
+
+    /// Like [`PrefixIndex::peek`] but marks every matched node and
+    /// tail as recently used.
+    pub fn lookup(&mut self, prompt: &[u32]) -> PrefixHit {
+        let (hit, path, tail_at) = self.walk(prompt);
+        let now = self.tick();
+        for id in path {
+            self.nodes[id].last_use = now;
+        }
+        if let Some((node, t)) = tail_at {
+            self.nodes[node].tails[t].2 = now;
+        }
+        hit
+    }
+
+    /// Shared walk: the hit, the matched node path, and the matched
+    /// tail's `(node, index)` if any.
+    #[allow(clippy::type_complexity)]
+    fn walk(
+        &self,
+        prompt: &[u32],
+    ) -> (PrefixHit, Vec<usize>, Option<(usize, usize)>) {
+        let bs = self.block_size;
+        // never adopt the whole prompt: the last token must prefill
+        let max_tokens = prompt.len().saturating_sub(1);
+        let mut hit = PrefixHit::default();
+        let mut path = Vec::new();
+        let mut node = 0usize;
+        let mut depth = 0usize;
+        while (depth + 1) * bs <= max_tokens {
+            let key = &prompt[depth * bs..(depth + 1) * bs];
+            let Some(&child) = self.nodes[node].children.get(key) else {
+                break;
+            };
+            let block = self.nodes[child]
+                .block
+                .expect("non-root trie node always pins a block");
+            hit.full.push(block);
+            path.push(child);
+            node = child;
+            depth += 1;
+        }
+        // Tail phase: the best partially-matching block past the full
+        // match — a stored tail, or a full child adopted partially
+        // (both via COW).  `m >= 1` or it is not worth a block copy.
+        let rest = &prompt[depth * bs..max_tokens.max(depth * bs)];
+        let mut best: Option<(u32, usize, Option<usize>)> = None;
+        for (t, (tokens, block, _)) in
+            self.nodes[node].tails.iter().enumerate()
+        {
+            let m = lcp(tokens, rest);
+            if m >= 1 && best.as_ref().is_none_or(|b| m > b.1) {
+                best = Some((*block, m, Some(t)));
+            }
+        }
+        for (key, &child) in &self.nodes[node].children {
+            let m = lcp(key, rest);
+            if m >= 1 && best.as_ref().is_none_or(|b| m > b.1) {
+                let block = self.nodes[child]
+                    .block
+                    .expect("non-root trie node always pins a block");
+                best = Some((block, m, None));
+            }
+        }
+        let mut tail_at = None;
+        if let Some((block, m, t)) = best {
+            hit.tail = Some((block, m));
+            tail_at = t.map(|t| (node, t));
+        }
+        (hit, path, tail_at)
+    }
+
+    /// Advertise a finished context: `ctx` are the tokens whose K/V
+    /// slots `blocks` verifiably hold (callers slice to the written
+    /// frontier).  Full blocks become trie nodes (one shared pool
+    /// reference each; spans already indexed deduplicate against the
+    /// existing node and pin nothing new), a trailing partial block
+    /// becomes a tail candidate.
+    pub fn insert(&mut self, ctx: &[u32], blocks: &[u32], pool: &mut BlockPool) {
+        let bs = self.block_size;
+        let full = ctx.len() / bs;
+        debug_assert!(
+            blocks.len() * bs >= ctx.len(),
+            "block table too short for the advertised context"
+        );
+        let now = self.tick();
+        let mut node = 0usize;
+        self.nodes[node].last_use = now;
+        for d in 0..full {
+            let key = &ctx[d * bs..(d + 1) * bs];
+            if let Some(&child) = self.nodes[node].children.get(key) {
+                // same token span at the same depth: identical K/V by
+                // determinism — keep the incumbent block
+                node = child;
+            } else {
+                let id = self.nodes.len();
+                pool.share(blocks[d]);
+                self.nodes.push(Node {
+                    parent: node,
+                    block: Some(blocks[d]),
+                    children: HashMap::new(),
+                    tails: Vec::new(),
+                    last_use: now,
+                });
+                self.nodes[node].children.insert(key.to_vec(), id);
+                node = id;
+            }
+            self.nodes[node].last_use = now;
+        }
+        let rem = ctx.len() - full * bs;
+        if rem == 0 {
+            return;
+        }
+        let tail_tokens = &ctx[full * bs..];
+        // drop dominated tails (a prefix of the new one); skip the
+        // insert when an existing tail already covers it
+        let covered = self.nodes[node].tails.iter().any(|(tokens, _, _)| {
+            tokens.len() >= rem && tokens[..rem] == *tail_tokens
+        });
+        if covered {
+            return;
+        }
+        let dominated: Vec<usize> = self.nodes[node]
+            .tails
+            .iter()
+            .enumerate()
+            .filter(|(_, (tokens, _, _))| {
+                tokens.len() < rem && *tokens == tail_tokens[..tokens.len()]
+            })
+            .map(|(t, _)| t)
+            .collect();
+        for t in dominated.into_iter().rev() {
+            let (_, block, _) = self.nodes[node].tails.swap_remove(t);
+            pool.release_block(block);
+        }
+        pool.share(blocks[full]);
+        self.nodes[node]
+            .tails
+            .push((tail_tokens.to_vec(), blocks[full], now));
+    }
+
+    /// Blocks an eviction pass could actually return to the free list:
+    /// indexed, not `protected`, and referenced by nobody but the index
+    /// (pool refcount 1).  Capacity checks add this to `free_blocks`.
+    pub fn reclaimable(
+        &self,
+        pool: &BlockPool,
+        protected: &HashSet<u32>,
+    ) -> usize {
+        let mut n = 0;
+        for node in &self.nodes {
+            if let Some(b) = node.block {
+                if !Self::unlinked(node)
+                    && !protected.contains(&b)
+                    && pool.refcount(b) == 1
+                {
+                    n += 1;
+                }
+            }
+            for &(_, b, _) in &node.tails {
+                if !protected.contains(&b) && pool.refcount(b) == 1 {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Evict least-recently-used leaves (tails, then childless nodes)
+    /// until `need` blocks have actually RETURNED to the free list or
+    /// nothing unprotected is left.  Dropping an entry whose block is
+    /// still shared with a live row frees nothing but un-advertises the
+    /// prefix and unblocks its ancestors.  Returns blocks freed.
+    pub fn evict(
+        &mut self,
+        pool: &mut BlockPool,
+        need: usize,
+        protected: &HashSet<u32>,
+    ) -> usize {
+        let mut freed = 0;
+        while freed < need {
+            // victim: the least-recently-used evictable leaf entry
+            let mut victim: Option<(u64, usize, Option<usize>)> = None;
+            for (id, node) in self.nodes.iter().enumerate() {
+                if id != 0 && Self::unlinked(node) {
+                    continue;
+                }
+                for (t, &(_, b, used)) in node.tails.iter().enumerate() {
+                    if protected.contains(&b) {
+                        continue;
+                    }
+                    if victim.as_ref().is_none_or(|v| used < v.0) {
+                        victim = Some((used, id, Some(t)));
+                    }
+                }
+                if id != 0
+                    && node.children.is_empty()
+                    && node.tails.is_empty()
+                    && node
+                        .block
+                        .is_some_and(|b| !protected.contains(&b))
+                    && victim.as_ref().is_none_or(|v| node.last_use < v.0)
+                {
+                    victim = Some((node.last_use, id, None));
+                }
+            }
+            let Some((_, id, tail)) = victim else { break };
+            let block = match tail {
+                Some(t) => self.nodes[id].tails.swap_remove(t).1,
+                None => {
+                    let parent = self.nodes[id].parent;
+                    self.nodes[parent]
+                        .children
+                        .retain(|_, &mut c| c != id);
+                    self.nodes[id].parent = usize::MAX; // tombstone
+                    self.nodes[id].block.take().expect("leaf pins a block")
+                }
+            };
+            let last = pool.refcount(block) == 1;
+            pool.release_block(block);
+            if last {
+                freed += 1;
+            }
+        }
+        freed
+    }
+}
+
+/// Longest common prefix of two token runs.
+fn lcp(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> BlockPool {
+        BlockPool::new(32, 4)
+    }
+
+    /// Fill a table for `ctx` and advertise its written slots.
+    fn fill(
+        ix: &mut PrefixIndex,
+        pool: &mut BlockPool,
+        ctx: &[u32],
+    ) -> Vec<u32> {
+        let t = pool.alloc(ctx.len()).unwrap();
+        let blocks = t.blocks().to_vec();
+        ix.insert(ctx, &blocks, pool);
+        pool.release(t); // the index reference keeps them alive
+        blocks
+    }
+
+    #[test]
+    fn lookup_matches_full_blocks_and_caps_before_the_last_token() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(4);
+        let ctx: Vec<u32> = (100..112).collect(); // 3 full blocks
+        let blocks = fill(&mut ix, &mut p, &ctx);
+        assert_eq!(ix.indexed_blocks(), 3);
+        assert_eq!(p.used_blocks(), 3, "index pins its advertised blocks");
+
+        // identical 12-token prompt: at most 11 tokens adoptable -> 2
+        // full blocks + a 3-token COW tail out of the third block
+        let hit = ix.lookup(&ctx);
+        assert_eq!(hit.full, &blocks[..2]);
+        assert_eq!(hit.tail, Some((blocks[2], 3)));
+        assert_eq!(hit.tokens(4), 11);
+
+        // longer prompt sharing the prefix: all 3 full blocks match
+        let mut longer = ctx.clone();
+        longer.extend([900, 901, 902]);
+        let hit = ix.lookup(&longer);
+        assert_eq!(hit.full, blocks);
+        assert_eq!(hit.tail, None, "divergent suffix matches nothing");
+
+        // divergent first block: clean miss
+        let miss = ix.lookup(&[1, 2, 3, 4, 5, 6]);
+        assert!(miss.full.is_empty() && miss.tail.is_none());
+        // 1-token prompt: nothing adoptable ever
+        let one = ix.lookup(&[100]);
+        assert_eq!(one.tokens(4), 0);
+    }
+
+    #[test]
+    fn partial_tails_match_via_lcp_and_dominated_tails_are_replaced() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(4);
+        fill(&mut ix, &mut p, &[10, 11, 12, 13, 20, 21]); // 1 full + tail(2)
+        assert_eq!(ix.indexed_blocks(), 2);
+
+        let hit = ix.peek(&[10, 11, 12, 13, 20, 21, 22, 23, 30]);
+        assert_eq!(hit.full.len(), 1);
+        let (_, m) = hit.tail.expect("tail candidate must match");
+        assert_eq!(m, 2, "lcp of stored tail vs prompt suffix");
+
+        // a longer tail for the same span supersedes the short one
+        // (same leading tokens -> same K/V; no double-pin)
+        fill(&mut ix, &mut p, &[10, 11, 12, 13, 20, 21, 22]);
+        assert_eq!(ix.indexed_blocks(), 2, "dominated tail released");
+        let hit = ix.peek(&[10, 11, 12, 13, 20, 21, 22, 23, 30]);
+        assert_eq!(hit.tail.map(|(_, m)| m), Some(3));
+
+        // a full child doubles as a COW source for shorter prompts
+        fill(&mut ix, &mut p, &[10, 11, 12, 13, 40, 41, 42, 43, 50]);
+        let hit = ix.peek(&[10, 11, 12, 13, 40, 41, 99, 98]);
+        assert_eq!(hit.full.len(), 1);
+        assert_eq!(hit.tail.map(|(_, m)| m), Some(2));
+    }
+
+    #[test]
+    fn insert_deduplicates_against_existing_spans() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(4);
+        let ctx: Vec<u32> = (0..8).collect();
+        fill(&mut ix, &mut p, &ctx);
+        let used = p.used_blocks();
+        // a second retirement of the same context pins nothing new
+        fill(&mut ix, &mut p, &ctx);
+        assert_eq!(p.used_blocks(), used, "duplicate spans double-pinned");
+        assert_eq!(ix.indexed_blocks(), 2);
+        // shared prefix, divergent second block: only the divergent
+        // span is newly pinned
+        fill(&mut ix, &mut p, &[0, 1, 2, 3, 70, 71, 72, 73]);
+        assert_eq!(ix.indexed_blocks(), 3);
+    }
+
+    #[test]
+    fn evict_drops_lru_leaves_until_enough_blocks_come_home() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(4);
+        let old: Vec<u32> = (200..208).collect();
+        let new: Vec<u32> = (300..308).collect();
+        fill(&mut ix, &mut p, &old);
+        fill(&mut ix, &mut p, &new);
+        assert_eq!(p.used_blocks(), 4);
+        // touch `new` so `old` is the LRU chain
+        ix.lookup(&new);
+        let none = HashSet::new();
+        assert_eq!(ix.reclaimable(&p, &none), 4);
+        let freed = ix.evict(&mut p, 2, &none);
+        assert_eq!(freed, 2);
+        assert_eq!(p.used_blocks(), 2);
+        // the survivor must be the recently-used chain
+        let hit = ix.peek(&[300, 301, 302, 303, 304, 305, 306, 307, 999]);
+        assert_eq!(hit.full.len(), 2, "evicted the wrong (fresh) chain");
+        assert!(ix.peek(&old).full.is_empty(), "LRU chain survived");
+        // protection shields a pending admission's matched blocks
+        let protect: HashSet<u32> = hit.blocks().collect();
+        assert_eq!(ix.reclaimable(&p, &protect), 0);
+        assert_eq!(ix.evict(&mut p, 8, &protect), 0);
+        assert_eq!(p.used_blocks(), 2, "protected blocks were evicted");
+        // unprotected eviction drains the index completely
+        assert_eq!(ix.evict(&mut p, 8, &none), 2);
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(ix.indexed_blocks(), 0);
+    }
+
+    #[test]
+    fn evicting_an_in_use_entry_frees_nothing_but_unadvertises() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(4);
+        let ctx: Vec<u32> = (0..4).collect();
+        let blocks = fill(&mut ix, &mut p, &ctx);
+        // a live row adopts the block: refcount 2
+        let t = p.alloc_with_prefix(&blocks, 8).unwrap();
+        let none = HashSet::new();
+        assert_eq!(ix.reclaimable(&p, &none), 0, "in-use is not reclaimable");
+        assert_eq!(ix.evict(&mut p, 1, &none), 0);
+        // the entry is gone from the index but the row keeps the block
+        assert_eq!(ix.indexed_blocks(), 0);
+        assert_eq!(p.refcount(blocks[0]), 1);
+        p.release(t);
+        assert_eq!(p.used_blocks(), 0);
+    }
+}

@@ -952,14 +952,15 @@ impl Backend for RefBackend {
     }
 
     fn stats(&self) -> RuntimeStats {
-        self.stats.lock().unwrap().clone()
+        self.stats.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     fn prepare(&self, name: &str) -> Result<()> {
         if self.manifest.find(name).is_none() {
             return Err(Error::Manifest(format!("unknown artifact {name}")));
         }
-        self.stats.lock().unwrap().compiles += 1; // interpretation: free
+        // interpretation: free
+        self.stats.lock().unwrap_or_else(|e| e.into_inner()).compiles += 1;
         Ok(())
     }
 
@@ -995,7 +996,7 @@ impl Backend for RefBackend {
             }
         };
         debug_assert_eq!(outs.len(), entry.outputs.len());
-        let mut st = self.stats.lock().unwrap();
+        let mut st = self.stats.lock().unwrap_or_else(|e| e.into_inner());
         st.executions += 1;
         st.execute_secs += t0.elapsed().as_secs_f64();
         Ok(outs)
@@ -1101,7 +1102,7 @@ impl Backend for RefBackend {
             model.logits_row(x, &mut logits[i * vsize..(i + 1) * vsize]);
         }
         drop(ps);
-        let mut st = self.stats.lock().unwrap();
+        let mut st = self.stats.lock().unwrap_or_else(|e| e.into_inner());
         st.executions += 1;
         st.execute_secs += t0.elapsed().as_secs_f64();
         drop(st);
@@ -1151,7 +1152,7 @@ impl Backend for RefBackend {
             model.logits_row(x, &mut logits[i * vsize..(i + 1) * vsize]);
         }
         drop(ps);
-        let mut st = self.stats.lock().unwrap();
+        let mut st = self.stats.lock().unwrap_or_else(|e| e.into_inner());
         st.executions += 1;
         st.execute_secs += t0.elapsed().as_secs_f64();
         drop(st);
@@ -1228,11 +1229,45 @@ impl Backend for RefBackend {
             }
         }
         drop(ps);
-        let mut st = self.stats.lock().unwrap();
+        let mut st = self.stats.lock().unwrap_or_else(|e| e.into_inner());
         st.executions += 1;
         st.execute_secs += t0.elapsed().as_secs_f64();
         drop(st);
         Ok((toks, OpaqueTensor::new(k), OpaqueTensor::new(v)))
+    }
+
+    /// Duplicate pool block `src` into `dst` across both paged stores —
+    /// the storage half of copy-on-write prefix adoption.  Pure
+    /// `memcpy`-shaped work (one contiguous run per (layer, head)
+    /// plane); counted as one execution.
+    fn paged_kv_copy_block(
+        &self,
+        variant: &str,
+        k: OpaqueTensor,
+        v: OpaqueTensor,
+        src: u32,
+        dst: u32,
+    ) -> Result<(OpaqueTensor, OpaqueTensor)> {
+        let cfg = self.manifest.config_for(variant);
+        let mut k = take_paged(k, cfg, "paged_kv_copy_block k_cache")?;
+        let mut v = take_paged(v, cfg, "paged_kv_copy_block v_cache")?;
+        for (b, what) in [(src, "src"), (dst, "dst")] {
+            if b as usize >= k.blocks {
+                return Err(Error::Other(format!(
+                    "paged_kv_copy_block: {what} block {b} out of range \
+                     (pool has {} blocks)",
+                    k.blocks
+                )));
+            }
+        }
+        let t0 = Instant::now();
+        k.copy_block(src as usize, dst as usize);
+        v.copy_block(src as usize, dst as usize);
+        let mut st = self.stats.lock().unwrap_or_else(|e| e.into_inner());
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        drop(st);
+        Ok((OpaqueTensor::new(k), OpaqueTensor::new(v)))
     }
 }
 

@@ -184,6 +184,26 @@ impl PagedKvCache {
             t % self.block_size,
         )
     }
+
+    /// Copy every slot of pool block `src` into pool block `dst` across
+    /// all (layer, head) planes — the storage side of copy-on-write
+    /// prefix adoption.  Within one plane a block's
+    /// `block_size * d_head` values are contiguous, so each plane is
+    /// one `copy_within`.
+    pub fn copy_block(&mut self, src: usize, dst: usize) {
+        assert!(src < self.blocks && dst < self.blocks, "block out of range");
+        if src == dst {
+            return;
+        }
+        let run = self.block_size * self.d_head;
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let s = self.at(l, h, src, 0);
+                let d = self.at(l, h, dst, 0);
+                self.data.copy_within(s..s + run, d);
+            }
+        }
+    }
 }
 
 /// A weight-storage element the kernels can widen to f32 exactly.

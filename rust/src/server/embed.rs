@@ -131,6 +131,17 @@ impl ServerBuilder {
         self
     }
 
+    /// Toggle prefix sharing on the paged KV cache (on by default;
+    /// `--no-prefix-share`).  When on, admissions whose prompt shares
+    /// full blocks with cached context reuse those blocks refcounted
+    /// instead of re-prefilling them, with copy-on-write at the first
+    /// divergent block.  Greedy outputs are bitwise-identical either
+    /// way.  Irrelevant on contiguous caches.
+    pub fn prefix_share(mut self, on: bool) -> Self {
+        self.cfg.kv.prefix_share = on;
+        self
+    }
+
     /// Admission prefill chunk size in tokens (`--prefill-chunk`); 0 =
     /// monolithic prefill.  With a chunk set, the paged engine spreads
     /// each admission's prompt over successive decode steps, bounding

@@ -26,7 +26,9 @@
 //! output apart, and — when the engine runs paged KV caches — the
 //! pool occupancy observed as the request retired
 //! (`"kv_blocks_in_use"` / `"kv_blocks_total"`), the per-reply
-//! cache-pressure signal.
+//! cache-pressure signal.  When prefix sharing is on, replies also
+//! carry the session's cumulative `"prefix_hits"` /
+//! `"prefix_tokens_reused"` counters (omitted when sharing is off).
 //!
 //! Requests may carry `"priority": "interactive" | "batch"`
 //! (interactive when absent): batch requests yield queue position to
@@ -136,6 +138,10 @@ pub fn response_to_json(r: &ServingResponse) -> String {
         pairs.push(("kv_blocks_in_use", Value::num(used as f64)));
         pairs.push(("kv_blocks_total", Value::num(total as f64)));
     }
+    if let Some((hits, reused)) = r.prefix {
+        pairs.push(("prefix_hits", Value::num(hits as f64)));
+        pairs.push(("prefix_tokens_reused", Value::num(reused as f64)));
+    }
     if r.preemptions > 0 {
         pairs.push(("preemptions", Value::num(r.preemptions as f64)));
     }
@@ -188,6 +194,13 @@ pub fn event_to_json(id: u64, ev: &ServingEvent) -> String {
             if let Some((used, total)) = r.kv_blocks {
                 pairs.push(("kv_blocks_in_use", Value::num(used as f64)));
                 pairs.push(("kv_blocks_total", Value::num(total as f64)));
+            }
+            if let Some((hits, reused)) = r.prefix {
+                pairs.push(("prefix_hits", Value::num(hits as f64)));
+                pairs.push((
+                    "prefix_tokens_reused",
+                    Value::num(reused as f64),
+                ));
             }
             if r.preemptions > 0 {
                 pairs.push(("preemptions", Value::num(r.preemptions as f64)));
@@ -247,6 +260,7 @@ mod tests {
             dtype: Some("fp16"),
             kv_blocks: Some((3, 64)),
             preemptions: 1,
+            prefix: Some((2, 32)),
         }
     }
 
@@ -313,13 +327,19 @@ mod tests {
         assert_eq!(v.get("dtype").as_str(), Some("fp16"));
         assert_eq!(v.get("kv_blocks_in_use").as_u64(), Some(3));
         assert_eq!(v.get("kv_blocks_total").as_u64(), Some(64));
+        assert_eq!(v.get("prefix_hits").as_u64(), Some(2));
+        assert_eq!(v.get("prefix_tokens_reused").as_u64(), Some(32));
         assert_eq!(v.get("preemptions").as_u64(), Some(1));
         assert!(v.get("code").is_null());
-        // never-preempted replies omit the field entirely
+        // never-preempted replies omit the field entirely, and so do
+        // replies from sessions without a prefix cache
         let mut clean = ok_response(3);
         clean.preemptions = 0;
+        clean.prefix = None;
         let v = json::parse(&response_to_json(&clean)).unwrap();
         assert!(v.get("preemptions").is_null());
+        assert!(v.get("prefix_hits").is_null());
+        assert!(v.get("prefix_tokens_reused").is_null());
     }
 
     #[test]
@@ -364,6 +384,8 @@ mod tests {
         assert_eq!(v.get("dtype").as_str(), Some("fp16"));
         assert_eq!(v.get("kv_blocks_in_use").as_u64(), Some(3));
         assert_eq!(v.get("kv_blocks_total").as_u64(), Some(64));
+        assert_eq!(v.get("prefix_hits").as_u64(), Some(2));
+        assert_eq!(v.get("prefix_tokens_reused").as_u64(), Some(32));
         assert_eq!(v.get("preemptions").as_u64(), Some(1));
     }
 

@@ -380,6 +380,7 @@ impl StreamingPipeline {
                             steps,
                             ttft,
                             kv,
+                            prefix,
                             ..
                         } => {
                             let mut resp = crate::pipeline::postprocess(
@@ -396,6 +397,8 @@ impl StreamingPipeline {
                                     st.total_blocks as u64,
                                 )
                             });
+                            resp.prefix =
+                                prefix.map(|p| (p.hits, p.tokens_reused));
                             reply_done(&post_routes, request.id, resp);
                         }
                         PoolEvent::Failed {

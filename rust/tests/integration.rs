@@ -604,7 +604,10 @@ fn paged_admission_prefills_only_the_new_row() {
             EngineKind::FtPruned,
             b.clone(),
             Default::default(),
-            KvConfig { paged, ..KvConfig::default() },
+            // sharing off: this test pins the PR-5 accounting (admission
+            // prefills exactly the new prompt); with the prefix index on,
+            // even the shared BOS would shave a token off via a COW tail
+            KvConfig { paged, prefix_share: false, ..KvConfig::default() },
         )
         .unwrap();
         let mut session = engine.start(first).unwrap();
@@ -645,7 +648,7 @@ fn paged_session_frees_blocks_at_retirement() {
         EngineKind::FtPruned,
         b,
         Default::default(),
-        KvConfig { paged: true, block_size: 4, blocks: 32 },
+        KvConfig { paged: true, block_size: 4, blocks: 32, ..KvConfig::default() },
     )
     .unwrap();
     let inputs = seeded_prompts(2, 91, 8, None);

@@ -387,6 +387,7 @@ fn prop_paged_and_contiguous_paths_are_bitwise_identical() {
                     paged: true,
                     block_size: [1, 3, 16, 5][case % 4],
                     blocks: 0,
+                    ..KvConfig::default()
                 };
                 let paged = build_with_kv(
                     kind,
@@ -797,6 +798,7 @@ fn prop_paged_fused_decode_equals_single_step() {
                     paged: true,
                     block_size: [2, 16, 5, 3][case % 4],
                     blocks: 0,
+                    ..KvConfig::default()
                 };
                 let fused = build_with_kv(
                     kind,
@@ -838,6 +840,164 @@ fn prop_paged_fused_decode_equals_single_step() {
                     a.iter().map(|s| s.len()).sum::<usize>() > 0,
                     "{kind:?} case {case}: vacuous comparison"
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_prefix_shared_admissions_equal_solo_runs() {
+    // THE prefix-sharing acceptance property: admissions whose prompts
+    // adopt cached prefix blocks (refcounted, copy-on-write at the
+    // divergence) must generate streams bitwise-identical to solo runs
+    // on an engine with sharing disabled — across storage dtypes, both
+    // kernel families, and odd block geometries.
+    let mut rng = Rng::seed_from_u64(0x5A8E);
+    for (dtype, kernel) in [
+        (DType::F32, Kernel::Blocked),
+        (DType::F16, Kernel::Blocked),
+        (DType::F32, Kernel::Scalar),
+        (DType::F16, Kernel::Scalar),
+    ] {
+        let backend: Arc<dyn Backend> = {
+            let mut b = RefBackend::synthetic();
+            b.set_dtype(dtype);
+            b.set_kernel(kernel);
+            Arc::new(b)
+        };
+        let pruned_vocab =
+            backend.manifest().config_for("pruned").vocab_size as u32;
+        for kind in [EngineKind::FtFull, EngineKind::FtPruned] {
+            for case in 0..3 {
+                let block_size = [3, 16, 5][case % 3];
+                let shared = build_with_kv(
+                    kind,
+                    backend.clone(),
+                    Default::default(),
+                    KvConfig {
+                        paged: true,
+                        block_size,
+                        blocks: 0,
+                        prefix_share: true,
+                    },
+                )
+                .unwrap();
+                let solo = build_with_kv(
+                    kind,
+                    backend.clone(),
+                    Default::default(),
+                    KvConfig {
+                        paged: true,
+                        block_size,
+                        blocks: 0,
+                        prefix_share: false,
+                    },
+                )
+                .unwrap();
+                // one common word run spanning several full blocks,
+                // then a unique tail per request — so every admission
+                // after the first can adopt the shared blocks
+                let stem: Vec<u32> = (0..2 * block_size + 3)
+                    .map(|_| {
+                        aigc_infer::special::FIRST_WORD
+                            + rng.gen_range(0, (pruned_vocab - 4) as usize)
+                                as u32
+                    })
+                    .collect();
+                let mut inputs = Vec::new();
+                for id in 0..4u64 {
+                    let mut prompt = vec![aigc_infer::special::BOS];
+                    prompt.extend_from_slice(&stem);
+                    for _ in 0..rng.gen_range(1, 5) {
+                        prompt.push(
+                            aigc_infer::special::FIRST_WORD
+                                + rng.gen_range(
+                                    0,
+                                    (pruned_vocab - 4) as usize,
+                                ) as u32,
+                        );
+                    }
+                    prompt.push(aigc_infer::special::SEP);
+                    inputs.push(EngineInput {
+                        request_id: id,
+                        prompt,
+                        max_new_tokens: rng.gen_range(2, 8),
+                    });
+                }
+                let (wave1, wave2) = inputs.split_at(2);
+                let mut sampler = Sampler::greedy();
+                let mut session = shared.start(wave1).unwrap();
+                let mut outputs: HashMap<u64, Vec<u32>> = HashMap::new();
+                let mut drain =
+                    |session: &mut Box<dyn DecodeSession>,
+                     outputs: &mut HashMap<u64, Vec<u32>>| {
+                        for f in session.take_finished() {
+                            outputs.insert(
+                                f.output.request_id,
+                                f.output.generated,
+                            );
+                        }
+                    };
+                // decode a little, then a second wave arrives whose
+                // prompts share the stem with the (indexed) first wave
+                if session.active() > 0 {
+                    session.step(&mut sampler).unwrap();
+                }
+                drain(&mut session, &mut outputs);
+                assert!(
+                    session.can_admit(wave2),
+                    "{kind:?}/{dtype:?} case {case}: auto-sized pool \
+                     must admit the second wave"
+                );
+                session.admit(wave2).unwrap();
+                let stats = session
+                    .prefix_stats()
+                    .expect("sharing session must report prefix stats");
+                assert!(
+                    stats.hits >= 1,
+                    "{kind:?}/{dtype:?}/{kernel:?} case {case}: no \
+                     prefix hit on a shared-stem wave"
+                );
+                assert!(
+                    stats.tokens_reused as usize >= block_size,
+                    "{kind:?}/{dtype:?} case {case}: a hit must reuse \
+                     at least one full block"
+                );
+                let mut guard = 0;
+                while session.active() > 0 {
+                    session.step(&mut sampler).unwrap();
+                    drain(&mut session, &mut outputs);
+                    guard += 1;
+                    assert!(
+                        guard < 1000,
+                        "{kind:?} case {case}: no progress"
+                    );
+                }
+                drain(&mut session, &mut outputs);
+                // every stream must match a solo, non-sharing run of
+                // just that request
+                for input in &inputs {
+                    let alone: Vec<u32> = solo
+                        .generate(
+                            std::slice::from_ref(input),
+                            &mut Sampler::greedy(),
+                        )
+                        .unwrap()
+                        .into_iter()
+                        .next()
+                        .unwrap()
+                        .generated;
+                    assert_eq!(
+                        outputs[&input.request_id], alone,
+                        "{kind:?}/{dtype:?}/{kernel:?} case {case}: \
+                         request {} diverged from its solo run",
+                        input.request_id
+                    );
+                    assert!(
+                        !alone.is_empty(),
+                        "{kind:?} case {case}: vacuous comparison"
+                    );
+                }
             }
         }
     }
