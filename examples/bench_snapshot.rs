@@ -32,7 +32,17 @@
 //! (hard-gated: the share arm must report prefix hits and strictly
 //! fewer admission prefill tokens, with ≥ 1 mid-session admission in
 //! both arms and every stream token-identical between arms AND to a
-//! solo one-request-per-session baseline).  The tool then writes one
+//! solo one-request-per-session baseline).  Schema 8 adds a
+//! **pruning** section — runtime vocab pruning as the paper's §3.2
+//! dimension: a pruned-vs-unpruned A/B per ladder stack (ft_full,
+//! ft_pruned, and the combined fp16 × blocked × pruned "paper stack")
+//! on an identity-prefix trace, hard-gated on (a) the logit-matvec
+//! vocab dimension strictly shrinking for every served variant, (b)
+//! host weight bytes strictly shrinking for both weight sets, and (c)
+//! pruned streams token-identical to the unpruned run on kept-token
+//! prefixes (compared up to the first unpruned token that leaves the
+//! kept set — beyond it the two argmaxes legitimately diverge — with
+//! a non-vacuity floor on compared tokens).  The tool then writes one
 //! machine-readable `BENCH_<n>.json`
 //! datapoint (samples/sec, p50/p99 latency, TTFT, tokens/sec per
 //! configuration).  Successive PRs append `BENCH_2.json`,
@@ -53,12 +63,15 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
-use aigc_infer::config::{EngineKind, GenConfig, KvConfig, ServingConfig};
+use aigc_infer::config::{
+    EngineKind, GenConfig, KvConfig, OovPolicy, PruneConfig, ServingConfig,
+};
 use aigc_infer::data::{Request, TraceConfig, TraceGenerator, ZipfSampler};
 use aigc_infer::engine::{build_with_kv, EngineInput, Sampler};
 use aigc_infer::metrics::Histogram;
 use aigc_infer::pipeline::{self, RunSummary};
 use aigc_infer::precision;
+use aigc_infer::pruning::TokenRemap;
 use aigc_infer::runtime::reference::model::{linear, logits_matvec};
 use aigc_infer::runtime::{
     Backend, DType, Kernel, RefBackend, RefPreset, WSlice,
@@ -790,6 +803,178 @@ fn prefix_row(mode: &str, s: &RunSummary, streams_match: bool) -> Value {
     ])
 }
 
+// Pruning A/B: coverage 0.9 shrinks BOTH served variants (0.99 keeps
+// ~6900 of 8000 ids, more than the pruned variant's whole 4000-id
+// vocab, so it would leave ft_pruned untouched and the shrink gate
+// vacuous).  Prompt ranks stay < 90 — inside the always-keep band —
+// so both arms tokenize every prompt to identical ids and the stream
+// comparison measures generation, not tokenization.
+const PRUNE_COVERAGE: f64 = 0.9;
+const PRUNE_PROMPT_RANKS: usize = 90;
+
+/// Seeded identity-prefix trace for the pruning A/B: every word rank
+/// is inside the always-keep band, so the pruned and unpruned arms see
+/// bitwise-identical prompts.
+fn prune_trace(n: usize, max_new: usize) -> Vec<Request> {
+    use aigc_infer::tokenizer::vocab::render_rank;
+    let mut rng = Rng::seed_from_u64(0x9A1E);
+    (0..n as u64)
+        .map(|id| {
+            let len = 6 + rng.gen_range(0, 18);
+            let text = (0..len)
+                .map(|_| render_rank(rng.gen_range(0, PRUNE_PROMPT_RANKS)))
+                .collect::<Vec<_>>()
+                .join(" ");
+            Request {
+                id,
+                text,
+                max_new_tokens: max_new,
+                arrival: Duration::ZERO,
+                reference_summary: None,
+            }
+        })
+        .collect()
+}
+
+/// One pruning arm: the identity-prefix trace through the sequential
+/// pipeline (1 worker) with runtime vocab pruning on or off.
+fn run_prune_arm(
+    engine: EngineKind,
+    dtype: DType,
+    pruned: bool,
+    reqs: &[Request],
+    max_new: usize,
+) -> RunSummary {
+    let mut cfg = ServingConfig::default();
+    cfg.engine = engine;
+    cfg.workers = 1;
+    cfg.row_threads = 1;
+    cfg.dtype = dtype;
+    if pruned {
+        cfg.prune = Some(PruneConfig {
+            coverage: PRUNE_COVERAGE,
+            ..PruneConfig::default()
+        });
+    }
+    cfg.gen.max_new_tokens = max_new;
+    cfg.precompile = true;
+    pipeline::run(&cfg, reqs).expect("pruning bench failed")
+}
+
+/// Stream-identity view of a pruned-vs-unpruned pair.  Dense logits
+/// are bitwise-equal to full logits AT THE KEPT IDS, so the pruned
+/// greedy stream must match the unpruned one exactly up to the first
+/// unpruned token that leaves the kept set (from there the two argmax
+/// domains legitimately differ).  Returns `(all rows matched,
+/// kept-prefix tokens compared)` — the caller gates on both so the
+/// comparison cannot pass vacuously.
+fn kept_prefix_match(
+    remap: &TokenRemap,
+    unpruned: &RunSummary,
+    pruned: &RunSummary,
+) -> (bool, usize) {
+    let a = sorted_streams(unpruned);
+    let b = sorted_streams(pruned);
+    if a.len() != b.len() {
+        return (false, 0);
+    }
+    let mut compared = 0usize;
+    for ((ida, sa), (idb, sb)) in a.iter().zip(&b) {
+        let keep = sa
+            .iter()
+            .take_while(|&&t| remap.to_dense(t).is_some())
+            .count();
+        let ok = ida == idb
+            && if keep == sa.len() {
+                sb == sa
+            } else {
+                sb.len() >= keep && sb[..keep] == sa[..keep]
+            };
+        if !ok {
+            return (false, compared);
+        }
+        compared += keep;
+    }
+    (true, compared)
+}
+
+/// The schema-8 weight-bytes gate: slicing the kept rows out of the
+/// tied embedding must strictly shrink the resident bytes of BOTH
+/// weight sets (the full-vocab and the 4000-id pruned-variant blob).
+fn run_prune_weights(remap: &Arc<TokenRemap>) -> Vec<Value> {
+    let unpruned = RefBackend::synthetic();
+    let mut pruned = RefBackend::synthetic();
+    pruned
+        .set_pruning(remap.clone(), OovPolicy::default())
+        .expect("set_pruning");
+    ["full", "pruned"]
+        .iter()
+        .map(|&key| {
+            let a = unpruned
+                .host_weights(key)
+                .expect("unpruned weights")
+                .storage_bytes();
+            let b = pruned
+                .host_weights(key)
+                .expect("pruned weights")
+                .storage_bytes();
+            eprintln!("  pruning[weights {key}]: {a} -> {b} bytes");
+            Value::obj(vec![
+                ("weights", Value::str(key)),
+                ("unpruned_bytes", Value::num(a as f64)),
+                ("pruned_bytes", Value::num(b as f64)),
+            ])
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn prune_ab_row(
+    stack: &str,
+    variant: &str,
+    dtype: DType,
+    orig_vocab: usize,
+    dense_vocab: usize,
+    base: &RunSummary,
+    pruned: &RunSummary,
+    matched: bool,
+    compared: usize,
+) -> Value {
+    let achieved = pruned
+        .prune
+        .map(|p| p.achieved)
+        .expect("pruned arm must report a prune summary");
+    Value::obj(vec![
+        ("stack", Value::str(stack)),
+        ("variant", Value::str(variant)),
+        ("dtype", Value::str(dtype.label())),
+        ("orig_vocab", Value::num(orig_vocab as f64)),
+        ("pruned_vocab", Value::num(dense_vocab as f64)),
+        ("achieved_coverage", Value::num(achieved)),
+        (
+            "unpruned_samples_per_sec",
+            Value::num(base.samples_per_sec),
+        ),
+        (
+            "pruned_samples_per_sec",
+            Value::num(pruned.samples_per_sec),
+        ),
+        (
+            "unpruned_tokens",
+            Value::num(base.generated_tokens as f64),
+        ),
+        (
+            "pruned_tokens",
+            Value::num(pruned.generated_tokens as f64),
+        ),
+        (
+            "streams_match_kept_prefix",
+            Value::num(matched as u64 as f64),
+        ),
+        ("compared_kept_tokens", Value::num(compared as f64)),
+    ])
+}
+
 fn run_one(
     engine: EngineKind,
     pipelined: bool,
@@ -973,12 +1158,64 @@ fn main() {
         prefix_row("no_share", &no_share, no_share_match),
     ];
 
+    // --- runtime vocab pruning A/B (schema 8) --------------------------
+    // The backend in every pruned arm re-derives this exact remap
+    // (derivation is deterministic in seed/coverage/vocab), so the
+    // snapshot-side copy is a faithful view of the served kept set.
+    let full_vocab = RefBackend::synthetic()
+        .manifest()
+        .config_for("full")
+        .vocab_size;
+    let remap = Arc::new(TokenRemap::derive(
+        &PruneConfig { coverage: PRUNE_COVERAGE, ..PruneConfig::default() },
+        full_vocab,
+    ));
+    let prune_reqs = prune_trace(n.max(16), max_new);
+    let mut prune_ab = Vec::new();
+    for (stack, engine, dtype) in [
+        ("ft_full", EngineKind::FtFull, DType::F32),
+        ("ft_pruned", EngineKind::FtPruned, DType::F32),
+        // the paper's full stack: fp16 x blocked kernels x pruning
+        ("paper_stack", EngineKind::FtPruned, DType::F16),
+    ] {
+        let base = run_prune_arm(engine, dtype, false, &prune_reqs, max_new);
+        let pruned = run_prune_arm(engine, dtype, true, &prune_reqs, max_new);
+        let variant = engine.variant();
+        let orig_vocab = RefBackend::synthetic()
+            .manifest()
+            .config_for(variant)
+            .vocab_size;
+        let dense_vocab = remap.kept_below(orig_vocab);
+        let (matched, compared) =
+            kept_prefix_match(&remap, &base, &pruned);
+        eprintln!(
+            "  pruning[{stack} {}]: vocab {orig_vocab} -> {dense_vocab}, \
+             {:.2} -> {:.2} samples/s, kept-prefix match {matched} \
+             ({compared} tokens)",
+            dtype.label(),
+            base.samples_per_sec,
+            pruned.samples_per_sec,
+        );
+        prune_ab.push(prune_ab_row(
+            stack, variant, dtype, orig_vocab, dense_vocab, &base,
+            &pruned, matched, compared,
+        ));
+    }
+    let pruning = Value::obj(vec![
+        ("coverage", Value::num(PRUNE_COVERAGE)),
+        ("achieved_coverage", Value::num(remap.coverage())),
+        ("kept_vocab", Value::num(remap.dense_vocab() as f64)),
+        ("full_vocab", Value::num(full_vocab as f64)),
+        ("weights", Value::Array(run_prune_weights(&remap))),
+        ("ab", Value::Array(prune_ab)),
+    ]);
+
     let created = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let doc = Value::obj(vec![
-        ("schema", Value::num(7.0)),
+        ("schema", Value::num(8.0)),
         ("created_unix", Value::num(created as f64)),
         ("preset", Value::str("synthetic-reference-default")),
         ("requests", Value::num(n as f64)),
@@ -991,13 +1228,14 @@ fn main() {
         ("scheduling", scheduling),
         ("kernels", kernels),
         ("prefix_cache", Value::Array(prefix_cache)),
+        ("pruning", pruning),
     ]);
     std::fs::write(&out, doc.to_json()).expect("write snapshot");
 
     // --- self-validation (this is the CI smoke assertion) --------------
     let text = std::fs::read_to_string(&out).expect("re-read snapshot");
     let v = json::parse(&text).expect("snapshot must be valid JSON");
-    assert_eq!(v.get("schema").as_usize(), Some(7), "schema");
+    assert_eq!(v.get("schema").as_usize(), Some(8), "schema");
     let ladder = v.get("ladder").as_array().expect("ladder array");
     assert_eq!(ladder.len(), 8, "4 ladder rows x {{fp32, fp16}}");
     for dtype in ["fp32", "fp16"] {
@@ -1319,6 +1557,66 @@ fn main() {
          no-share arm ({})",
         field(share, "admission_prefill_tokens"),
         field(no_share, "admission_prefill_tokens"),
+    );
+
+    // THE schema-8 gates.  Runtime vocab pruning must (1) strictly
+    // shrink the logit-matvec vocab dimension of every served variant,
+    // (2) strictly shrink the resident weight bytes of both weight
+    // sets, and (3) leave the greedy streams token-identical to the
+    // unpruned run on kept-token prefixes, with a non-vacuity floor.
+    let pr = v.get("pruning");
+    let kept = pr.get("kept_vocab").as_f64().expect("kept_vocab");
+    let full = pr.get("full_vocab").as_f64().expect("full_vocab");
+    assert!(
+        kept > 0.0 && kept < full,
+        "pruning must keep a non-empty strict subset ({kept} of {full})"
+    );
+    let target = pr.get("coverage").as_f64().expect("coverage");
+    assert!(
+        pr.get("achieved_coverage").as_f64().expect("achieved") >= target,
+        "kept set missed its coverage target"
+    );
+    let pw = pr.get("weights").as_array().expect("pruning.weights");
+    assert_eq!(pw.len(), 2, "full + pruned weight sets");
+    for row in pw {
+        let a = field(row, "unpruned_bytes");
+        let b = field(row, "pruned_bytes");
+        assert!(b > 0.0, "empty pruned weight set: {}", row.to_json());
+        assert!(
+            b < a,
+            "pruning must strictly shrink the weight bytes: {}",
+            row.to_json()
+        );
+    }
+    let ab = pr.get("ab").as_array().expect("pruning.ab");
+    assert_eq!(ab.len(), 3, "ft_full + ft_pruned + paper_stack arms");
+    for row in ab {
+        let stack = row.get("stack").as_str().expect("stack");
+        assert!(
+            field(row, "pruned_vocab") < field(row, "orig_vocab"),
+            "{stack}: the logit-matvec vocab dimension did not shrink: {}",
+            row.to_json()
+        );
+        assert_eq!(
+            field(row, "streams_match_kept_prefix"),
+            1.0,
+            "{stack}: pruned streams diverged inside the kept prefix"
+        );
+        assert!(
+            field(row, "compared_kept_tokens") > 0.0,
+            "{stack}: the stream comparison was vacuous"
+        );
+        assert!(field(row, "pruned_samples_per_sec") > 0.0);
+        assert!(field(row, "pruned_tokens") > 0.0);
+    }
+    let paper = ab
+        .iter()
+        .find(|r| r.get("stack").as_str() == Some("paper_stack"))
+        .expect("paper_stack row");
+    assert_eq!(
+        paper.get("dtype").as_str(),
+        Some("fp16"),
+        "the paper stack must run at fp16"
     );
     println!("bench snapshot OK: {out}");
 }

@@ -13,9 +13,12 @@ use aigc_infer::pruning::{fit_fraction, length_histogram, PruningAnalysis};
 fn main() {
     let cfg = CorpusConfig::default();
     let n_docs = 2000;
+    // ONE seed for every panel: coverage, histogram and fit fractions
+    // must describe the SAME corpus, not three different ones
+    let seed = 0;
 
     println!("## Vocab coverage (embedding pruning, §3.2)");
-    let a = PruningAnalysis::run(&cfg, n_docs, 0);
+    let a = PruningAnalysis::run(&cfg, n_docs, seed);
     println!("   tokens observed: {}", a.stats.total());
     for p in a.coverage_curve(cfg.vocab_size) {
         let bar_len = (p.coverage * 40.0) as usize;
@@ -35,7 +38,7 @@ fn main() {
     }
 
     println!("\n## Sequence lengths (Fig 3; position table 512 -> 128)");
-    let hist = length_histogram(&cfg, n_docs, 1, 20);
+    let hist = length_histogram(&cfg, n_docs, seed, 20);
     let max_count = hist.iter().map(|(_, c)| *c).max().unwrap_or(1);
     for (edge, count) in &hist {
         if *count == 0 && *edge > 200 {
@@ -48,7 +51,7 @@ fn main() {
     for maxp in [128usize, 256, 512] {
         println!(
             "   fit within {maxp:>3} positions (packed with summary): {:.2}%",
-            fit_fraction(&cfg, n_docs, 2, maxp) * 100.0
+            fit_fraction(&cfg, n_docs, seed, maxp) * 100.0
         );
     }
 }

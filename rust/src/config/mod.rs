@@ -156,6 +156,78 @@ impl Default for KvConfig {
     }
 }
 
+/// What happens to a prompt token whose id fell outside the kept vocab
+/// set when runtime pruning (`--prune-vocab`) is active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OovPolicy {
+    /// Re-encode at the kept prefix: the tokenizer re-segments rare
+    /// words into retained high-frequency pieces (single syllables
+    /// always survive pruning), so out-of-set ids never reach the
+    /// engine.  The serving default — lossless for the workload the
+    /// kept set was derived from.
+    #[default]
+    Resegment,
+    /// Reject the request with a structured `bad_request` instead of
+    /// serving an approximation.
+    Reject,
+    /// Map out-of-set ids to the UNK stand-in (PAD: this vocab has no
+    /// dedicated UNK token, and PAD embeds as the zero-ish row).
+    Unk,
+}
+
+impl OovPolicy {
+    pub fn label(self) -> &'static str {
+        match self {
+            OovPolicy::Resegment => "resegment",
+            OovPolicy::Reject => "reject",
+            OovPolicy::Unk => "unk",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "resegment" => Ok(OovPolicy::Resegment),
+            "reject" => Ok(OovPolicy::Reject),
+            "unk" => Ok(OovPolicy::Unk),
+            _ => Err(Error::Other(format!(
+                "unknown oov policy '{s}' (resegment|reject|unk)"
+            ))),
+        }
+    }
+}
+
+/// Runtime embedding/vocab pruning (`--prune-vocab <coverage>`, JSON
+/// `"prune"`): derive a workload-specific kept-vocab set from a seeded
+/// corpus sample (frequency prefix reaching `coverage`, special and
+/// probe ids always kept), remap token ids at the serving boundary, and
+/// slice the embedding + logit matrices in the reference backend to the
+/// kept rows — the paper's §3.2 lever as a runtime dimension, composing
+/// with `--dtype fp16` and `--kernel blocked`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruneConfig {
+    /// Target fraction of sampled token occurrences the kept set must
+    /// cover, in (0, 1].
+    pub coverage: f64,
+    /// Corpus documents sampled to estimate token frequencies.
+    pub sample_docs: usize,
+    /// Seed for the sampled corpus — same seed + coverage + vocab means
+    /// the same kept set everywhere (pool workers re-derive it).
+    pub seed: u64,
+    /// Out-of-set prompt handling at the serving boundary.
+    pub oov: OovPolicy,
+}
+
+impl Default for PruneConfig {
+    fn default() -> Self {
+        Self {
+            coverage: 0.99,
+            sample_docs: 256,
+            seed: 0,
+            oov: OovPolicy::default(),
+        }
+    }
+}
+
 /// Generation limits for a serving run.
 #[derive(Debug, Clone, Copy)]
 pub struct GenConfig {
@@ -205,6 +277,11 @@ pub struct ServingConfig {
     pub gen: GenConfig,
     /// Paged KV-cache geometry (block pool per FT decode session).
     pub kv: KvConfig,
+    /// Runtime embedding/vocab pruning (`--prune-vocab`); `None` (the
+    /// default) serves the manifest's vocab untouched.  Reference
+    /// backend only — the pjrt client executes whatever vocab its
+    /// artifacts were compiled with.
+    pub prune: Option<PruneConfig>,
     /// Run the 4-stage parallel pipeline (paper §3.3 Fig 4) instead of the
     /// sequential reference executor.
     pub pipelined: bool,
@@ -249,6 +326,7 @@ impl Default for ServingConfig {
             batch: BatchPolicy::default(),
             gen: GenConfig::default(),
             kv: KvConfig::default(),
+            prune: None,
             pipelined: true,
             workers: 1,
             row_threads: 0,
@@ -349,6 +427,23 @@ impl ServingConfig {
                 cfg.kv.prefix_share = x;
             }
         }
+        let pr = v.get("prune");
+        if !pr.is_null() {
+            let mut p = PruneConfig::default();
+            if let Some(x) = pr.get("coverage").as_f64() {
+                p.coverage = x;
+            }
+            if let Some(n) = pr.get("sample_docs").as_usize() {
+                p.sample_docs = n;
+            }
+            if let Some(n) = pr.get("seed").as_u64() {
+                p.seed = n;
+            }
+            if let Some(s) = pr.get("oov").as_str() {
+                p.oov = OovPolicy::parse(s)?;
+            }
+            cfg.prune = Some(p);
+        }
         if let Some(x) = v.get("pipelined").as_bool() {
             cfg.pipelined = x;
         }
@@ -429,6 +524,21 @@ impl ServingConfig {
                     ("prefix_share", Value::Bool(self.kv.prefix_share)),
                 ]),
             ),
+            (
+                "prune",
+                match self.prune {
+                    None => Value::Null,
+                    Some(p) => Value::obj(vec![
+                        ("coverage", Value::num(p.coverage)),
+                        (
+                            "sample_docs",
+                            Value::num(p.sample_docs as f64),
+                        ),
+                        ("seed", Value::num(p.seed as f64)),
+                        ("oov", Value::str(p.oov.label())),
+                    ]),
+                },
+            ),
             ("pipelined", Value::Bool(self.pipelined)),
             ("workers", Value::num(self.workers as f64)),
             ("row_threads", Value::num(self.row_threads as f64)),
@@ -455,6 +565,19 @@ impl ServingConfig {
         }
         if self.kv.block_size == 0 {
             return Err(Error::Other("kv block_size must be > 0".into()));
+        }
+        if let Some(p) = self.prune {
+            if !p.coverage.is_finite() || p.coverage <= 0.0 || p.coverage > 1.0
+            {
+                return Err(Error::Other(
+                    "prune coverage must be finite and in (0, 1]".into(),
+                ));
+            }
+            if p.sample_docs == 0 {
+                return Err(Error::Other(
+                    "prune sample_docs must be > 0".into(),
+                ));
+            }
         }
         if let Sampling::TopK { k, temperature, .. } = self.sampling {
             if k == 0 {
@@ -625,6 +748,51 @@ mod tests {
         assert_eq!(back.row_threads, 2);
         let c = ServingConfig::from_json(r#"{"workers": 0}"#).unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn prune_config_defaults_roundtrip_and_validate() {
+        let c = ServingConfig::default();
+        assert!(c.prune.is_none(), "pruning is off by default");
+        let mut c = ServingConfig::default();
+        c.prune = Some(PruneConfig {
+            coverage: 0.97,
+            sample_docs: 64,
+            seed: 3,
+            oov: OovPolicy::Reject,
+        });
+        c.validate().unwrap();
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.prune, c.prune);
+        let c = ServingConfig::from_json(
+            r#"{"prune": {"coverage": 0.95, "oov": "unk"}}"#,
+        )
+        .unwrap();
+        let p = c.prune.unwrap();
+        assert!((p.coverage - 0.95).abs() < 1e-12);
+        assert_eq!(p.oov, OovPolicy::Unk);
+        assert_eq!(p.sample_docs, 256, "omitted keys keep defaults");
+        let c = ServingConfig::from_json(r#"{"prune": {}}"#).unwrap();
+        assert_eq!(c.prune, Some(PruneConfig::default()));
+        let c = ServingConfig::from_json("{}").unwrap();
+        assert!(c.prune.is_none(), "absent key stays off");
+        for bad_cov in [0.0, -0.5, 1.5, f64::NAN] {
+            let mut bad = ServingConfig::default();
+            bad.prune = Some(PruneConfig {
+                coverage: bad_cov,
+                ..PruneConfig::default()
+            });
+            assert!(bad.validate().is_err(), "coverage {bad_cov}");
+        }
+        let mut bad = ServingConfig::default();
+        bad.prune = Some(PruneConfig {
+            sample_docs: 0,
+            ..PruneConfig::default()
+        });
+        assert!(bad.validate().is_err());
+        assert!(OovPolicy::parse("drop").is_err());
+        assert_eq!(OovPolicy::parse("resegment").unwrap(),
+                   OovPolicy::Resegment);
     }
 
     #[test]

@@ -172,6 +172,13 @@ pub struct ServingResponse {
     /// `prefix_tokens_reused`).  None when sharing is off, the cache
     /// discipline is contiguous, or the request failed.
     pub prefix: Option<(u64, u64)>,
+    /// Runtime vocab pruning `(kept_vocab, full_vocab)` the serving
+    /// stack executed with — the kept-set size of the dense embedding
+    /// the engine decoded over, and the original vocabulary the
+    /// tokenizer (and this reply's `summary_ids`) speak.  Echoed on
+    /// the wire (`pruned_vocab` / `full_vocab`); None when pruning is
+    /// off or the request failed.
+    pub pruned_vocab: Option<(u64, u64)>,
 }
 
 impl ServingResponse {
@@ -197,6 +204,7 @@ impl ServingResponse {
             kv_blocks: None,
             preemptions: 0,
             prefix: None,
+            pruned_vocab: None,
         }
     }
 }

@@ -12,8 +12,17 @@ pub struct ZipfSampler {
 
 impl ZipfSampler {
     /// `n` ranks with P(rank k) ∝ (k+1)^-alpha.
+    ///
+    /// Degenerate inputs are CLAMPED rather than trusted (this sits
+    /// under every synthetic-workload generator, so a bad config must
+    /// not panic deep in the corpus path): `n == 0` becomes a
+    /// single-rank distribution, a non-finite `alpha` falls back to
+    /// uniform (`alpha = 0`), and an `alpha` so extreme the unnormalized
+    /// mass overflows/underflows f64 (leaving a NaN or empty CDF)
+    /// likewise degrades to uniform over the `n` ranks.
     pub fn new(n: usize, alpha: f64) -> Self {
-        assert!(n > 0);
+        let n = n.max(1);
+        let alpha = if alpha.is_finite() { alpha } else { 0.0 };
         let mut cdf = Vec::with_capacity(n);
         let mut acc = 0.0f64;
         for k in 0..n {
@@ -21,11 +30,19 @@ impl ZipfSampler {
             cdf.push(acc);
         }
         let total = acc;
-        for v in &mut cdf {
-            *v /= total;
+        if !(total.is_finite() && total > 0.0) {
+            // overflow (huge negative alpha) or total underflow: every
+            // normalized entry would be NaN/0 — degrade to uniform
+            for (k, v) in cdf.iter_mut().enumerate() {
+                *v = (k + 1) as f64 / n as f64;
+            }
+        } else {
+            for v in &mut cdf {
+                *v /= total;
+            }
         }
-        // guard against fp round-off at the top
-        *cdf.last_mut().unwrap() = 1.0;
+        // guard against fp round-off at the top (cdf is non-empty: n >= 1)
+        *cdf.last_mut().expect("n >= 1 after clamp") = 1.0;
         Self { cdf }
     }
 
@@ -41,14 +58,13 @@ impl ZipfSampler {
         self.cdf[(prefix - 1).min(self.cdf.len() - 1)]
     }
 
-    /// Draw one rank in `[0, n)`.
+    /// Draw one rank in `[0, n)`.  Total: `total_cmp` gives NaN a fixed
+    /// order instead of the `partial_cmp(..).unwrap()` panic, so even a
+    /// CDF corrupted by upstream math cannot bring the sampler down.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u: f64 = rng.gen_f64();
         // first index with cdf[i] >= u
-        match self
-            .cdf
-            .binary_search_by(|v| v.partial_cmp(&u).unwrap())
-        {
+        match self.cdf.binary_search_by(|v| v.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }
@@ -128,6 +144,48 @@ mod tests {
         );
         // head dominance: top 1000 ranks carry most of the mass
         assert!(block[0] as f64 / 40_000.0 > 0.6, "head {:?}", block[0]);
+    }
+
+    #[test]
+    fn zero_support_clamps_instead_of_panicking() {
+        // regression: `new(0, _)` used to hit `last_mut().unwrap()` on
+        // an empty CDF
+        let z = ZipfSampler::new(0, 1.1);
+        assert_eq!(z.support(), 1);
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..10 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+        assert!((z.prefix_mass(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_alpha_degrades_to_uniform() {
+        // regression: NaN alpha used to fill the CDF with NaN, and
+        // `sample`'s `partial_cmp(..).unwrap()` panicked on the first
+        // draw
+        for alpha in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let z = ZipfSampler::new(100, alpha);
+            let mut rng = Rng::seed_from_u64(2);
+            for _ in 0..200 {
+                assert!(z.sample(&mut rng) < 100, "alpha {alpha}");
+            }
+            // uniform: half the ranks carry half the mass
+            assert!((z.prefix_mass(50) - 0.5).abs() < 1e-9, "alpha {alpha}");
+        }
+    }
+
+    #[test]
+    fn overflowing_alpha_degrades_to_uniform() {
+        // (k+1)^600 overflows to +inf for k >= 1, so the unnormalized
+        // total is inf and every normalized entry would be NaN
+        let z = ZipfSampler::new(64, -600.0);
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..200 {
+            assert!(z.sample(&mut rng) < 64);
+        }
+        assert!(z.cdf.iter().all(|v| v.is_finite()));
+        assert!((z.prefix_mass(64) - 1.0).abs() < 1e-12);
     }
 
     #[test]

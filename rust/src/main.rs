@@ -12,7 +12,9 @@
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
-use aigc_infer::config::{BackendKind, EngineKind, ServingConfig};
+use aigc_infer::config::{
+    BackendKind, EngineKind, OovPolicy, ServingConfig,
+};
 use aigc_infer::data::{TraceConfig, TraceGenerator};
 use aigc_infer::metrics::{LadderRow, QosDigest, Report};
 use aigc_infer::pipeline;
@@ -44,6 +46,11 @@ fn usage() -> ! {
                  --prefill-chunk N (paged KV: spread each admission's\n\
                  prompt prefill over decode steps in N-token chunks,\n\
                  bounding per-step latency; default 0 = monolithic)\n\
+                 --prune-vocab C (runtime vocab pruning: serve with the\n\
+                 embedding/logit matrices sliced to a kept set covering\n\
+                 fraction C of corpus token occurrences, e.g. 0.99)\n\
+                 --prune-oov resegment|reject|unk (out-of-vocab policy\n\
+                 under --prune-vocab; default resegment)\n\
          run:    --engine baseline|ft_full|ft_pruned  --n N  --max-new T\n\
                  --no-pipeline  --no-bucketing  --no-multi-step  --seed S\n\
          ladder: --n N\n\
@@ -164,6 +171,24 @@ fn build_config(args: &Args) -> ServingConfig {
             usage()
         });
     }
+    if let Some(c) = args.get("prune-vocab") {
+        let coverage: f64 = c.parse().unwrap_or_else(|_| {
+            eprintln!("--prune-vocab expects a coverage in (0, 1]");
+            usage()
+        });
+        let mut p = cfg.prune.unwrap_or_default();
+        p.coverage = coverage;
+        cfg.prune = Some(p);
+    }
+    if let Some(o) = args.get("prune-oov") {
+        let oov = OovPolicy::parse(o).unwrap_or_else(|err| {
+            eprintln!("{err}");
+            usage()
+        });
+        let mut p = cfg.prune.unwrap_or_default();
+        p.oov = oov;
+        cfg.prune = Some(p);
+    }
     if args.has("no-paged-kv") {
         cfg.kv.paged = false;
     }
@@ -258,6 +283,17 @@ fn cmd_run(args: &Args) {
             );
             println!("accuracy      {:.3}", s.mean_accuracy);
             println!("dtype         {}", s.dtype.label());
+            if let Some(p) = &s.prune {
+                println!(
+                    "pruning       vocab {} -> {} kept ids ({:.1}% of \
+                     occurrences vs {:.0}% target, oov={})",
+                    p.full_vocab,
+                    p.kept_vocab,
+                    p.achieved * 100.0,
+                    p.target * 100.0,
+                    p.oov
+                );
+            }
             println!(
                 "backend       {} execs, {} compiles ({:.2}s compile, {:.2}s exec+download {:.2}s)",
                 s.runtime_stats.executions,

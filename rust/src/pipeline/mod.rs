@@ -37,7 +37,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::config::ServingConfig;
+use crate::config::{OovPolicy, ServingConfig};
 use crate::coordinator::request::summary_accuracy;
 use crate::coordinator::{
     run_batch_stepped_stats, DynamicBatcher, InferencePool, KvMetrics,
@@ -46,9 +46,42 @@ use crate::coordinator::{
 use crate::data::Request;
 use crate::engine::{build_with_kv as build_engine, sampler_for};
 use crate::metrics::{Histogram, StageTimer};
-use crate::runtime::{backend_for, manifest_for, Backend, DType, RuntimeStats};
+use crate::pruning::TokenRemap;
+use crate::runtime::{
+    backend_for, manifest_for, Backend, DType, PruneState, RuntimeStats,
+};
 use crate::tokenizer::{decode as detokenize, Encode, FastTokenizer, Vocab};
 use crate::{special, Error, Result};
+
+/// Runtime vocab-pruning facts of a run (None when pruning is off):
+/// what was asked for, what the seeded corpus sample achieved, and the
+/// embedding shrink the engines actually executed with.
+#[derive(Debug, Clone, Copy)]
+pub struct PruneSummary {
+    /// Requested corpus coverage (`PruneConfig::coverage`).
+    pub target: f64,
+    /// Coverage the derived kept set achieves on the sample.
+    pub achieved: f64,
+    /// Original vocabulary the tokenizer (and all reported token ids)
+    /// speak.
+    pub full_vocab: usize,
+    /// Dense kept-set size replacing it inside the engines.
+    pub kept_vocab: usize,
+    /// Out-of-vocabulary policy label (`resegment`/`reject`/`unk`).
+    pub oov: &'static str,
+}
+
+impl PruneSummary {
+    fn of(state: &PruneState) -> Self {
+        Self {
+            target: state.remap.target(),
+            achieved: state.remap.coverage(),
+            full_vocab: state.remap.full_vocab(),
+            kept_vocab: state.remap.dense_vocab(),
+            oov: state.oov.label(),
+        }
+    }
+}
 
 /// Outcome of a (sequential or pipelined) serving run.
 #[derive(Debug)]
@@ -95,6 +128,8 @@ pub struct RunSummary {
     /// the p99 of this is the SLO quantity chunked prefill bounds.
     /// Empty for sequential runs (no iteration-level scheduler there).
     pub step_latency: Histogram,
+    /// Runtime vocab pruning the run executed with (None = off).
+    pub prune: Option<PruneSummary>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -113,6 +148,7 @@ fn summarize(
     session_latency: Histogram,
     kv: KvMetrics,
     step_latency: Histogram,
+    prune: Option<PruneSummary>,
 ) -> RunSummary {
     let mut latency = Histogram::new();
     let mut ttft = Histogram::new();
@@ -161,6 +197,7 @@ fn summarize(
         session_latency,
         kv,
         step_latency,
+        prune,
     }
 }
 
@@ -190,9 +227,24 @@ fn frame(
     }
 }
 
+/// Frame already-tokenized ids as `[BOS] doc [SEP]`, truncating so
+/// prompt + generation budget fits `max_seq` — the offline-workload
+/// policy (summarize the head of an oversized doc).
+pub fn preprocess_ids(
+    mut ids: Vec<u32>,
+    max_seq: usize,
+    req: &Request,
+    enqueued: Instant,
+) -> PreparedRequest {
+    let budget = max_seq
+        .saturating_sub(2 + req.max_new_tokens)
+        .max(1);
+    ids.truncate(budget);
+    frame(&ids, req, enqueued)
+}
+
 /// Preprocess: normalize + tokenize + frame as `[BOS] doc [SEP]`,
-/// truncating so prompt + generation budget fits `max_seq` — the
-/// offline-workload policy (summarize the head of an oversized doc).
+/// truncating so prompt + generation budget fits `max_seq`.
 pub fn preprocess(
     tok: &FastTokenizer,
     vocab_limit: u32,
@@ -200,12 +252,40 @@ pub fn preprocess(
     req: &Request,
     enqueued: Instant,
 ) -> PreparedRequest {
-    let mut ids = tok.encode(&req.text, vocab_limit);
-    let budget = max_seq
-        .saturating_sub(2 + req.max_new_tokens)
-        .max(1);
-    ids.truncate(budget);
-    frame(&ids, req, enqueued)
+    let ids = tok.encode(&req.text, vocab_limit);
+    preprocess_ids(ids, max_seq, req, enqueued)
+}
+
+/// Tokenize at the serving boundary for an engine whose (original,
+/// pre-pruning) vocab bound is `orig_vocab`, honoring runtime pruning.
+///
+/// - pruning off: plain `encode` at the engine bound;
+/// - `resegment` (default): encode at the remap's identity prefix —
+///   the tokenizer re-segments rare words into kept pieces, so OOV ids
+///   never arise and the returned ids are valid in BOTH id spaces;
+/// - `reject` / `unk`: encode at the engine bound so dropped ids are
+///   observable, then police them per policy (`Err` carries the
+///   offending id for the wire's `bad_request` reply).
+///
+/// The returned ids are DENSE (engine-space); under `resegment` the
+/// identity-prefix invariant makes dense == original for every id.
+pub fn encode_for_engine(
+    tok: &FastTokenizer,
+    prune: Option<&PruneState>,
+    orig_vocab: u32,
+    text: &str,
+) -> std::result::Result<Vec<u32>, String> {
+    match prune {
+        None => Ok(tok.encode(text, orig_vocab)),
+        Some(p) => match p.oov {
+            OovPolicy::Resegment => Ok(tok
+                .encode(text, p.remap.encode_limit(orig_vocab as usize))),
+            OovPolicy::Reject | OovPolicy::Unk => {
+                let ids = tok.encode(text, orig_vocab);
+                p.remap.map_prompt(&ids, p.oov)
+            }
+        },
+    }
 }
 
 /// Strict preprocess for the serving boundary: instead of silently
@@ -220,6 +300,18 @@ pub fn preprocess_strict(
     enqueued: Instant,
 ) -> std::result::Result<PreparedRequest, String> {
     let ids = tok.encode(&req.text, vocab_limit);
+    preprocess_strict_ids(ids, max_seq, req, enqueued)
+}
+
+/// [`preprocess_strict`] over already-tokenized ids — the shape the
+/// pruning-aware serving boundary uses ([`encode_for_engine`] first,
+/// then the fit check).
+pub fn preprocess_strict_ids(
+    ids: Vec<u32>,
+    max_seq: usize,
+    req: &Request,
+    enqueued: Instant,
+) -> std::result::Result<PreparedRequest, String> {
     let need = (ids.len() + 2).saturating_add(req.max_new_tokens);
     if need > max_seq {
         return Err(format!(
@@ -257,6 +349,7 @@ pub fn postprocess(
         kv_blocks: None,
         preemptions: req.preemptions,
         prefix: None,
+        pruned_vocab: None,
     }
 }
 
@@ -280,9 +373,24 @@ pub fn run_sequential(
         one.workers = 1;
         backend_for(&one)?
     };
-    // The tokenizer always speaks the FULL vocabulary; pruned engines see
-    // a prefix via vocab_limit (re-segmentation happens in the encoder).
-    let full_vocab = backend.manifest().config_for("baseline").vocab_size;
+    // The tokenizer always speaks the FULL ORIGINAL vocabulary; pruned
+    // engines (static `pruned` variant or runtime `--prune-vocab`) see
+    // a subset via the encode bound below.  Under runtime pruning the
+    // backend's own manifest is already dense, so the original sizes
+    // come from the remap / a fresh manifest read.
+    let prune = backend.pruning();
+    let full_vocab = match &prune {
+        Some(p) => p.remap.full_vocab(),
+        None => backend.manifest().config_for("baseline").vocab_size,
+    };
+    let engine_vocab = match &prune {
+        Some(_) => {
+            manifest_for(cfg)?.config_for(cfg.engine.variant()).vocab_size
+                as u32
+        }
+        None => backend.manifest().config_for(cfg.engine.variant()).vocab_size
+            as u32,
+    };
     let seq_lens = backend.manifest().seq_lens.clone();
     let tok = make_tokenizer(full_vocab);
     let engine =
@@ -313,13 +421,13 @@ pub fn run_sequential(
     // STREAMING policy — exercised by the pipelined executor and server).
     for req in requests {
         let t = Instant::now();
-        let prepared = preprocess(
-            &tok,
-            engine.vocab_limit(),
-            engine.max_seq(),
-            req,
-            Instant::now(),
-        );
+        let ids =
+            encode_for_engine(&tok, prune.as_ref(), engine_vocab, &req.text)
+                .map_err(|e| {
+                    Error::Other(format!("request {}: {e}", req.id))
+                })?;
+        let prepared =
+            preprocess_ids(ids, engine.max_seq(), req, Instant::now());
         stages.preprocess += t.elapsed();
         batcher.push(prepared);
     }
@@ -352,14 +460,24 @@ pub fn run_sequential(
 
             let t = Instant::now();
             for stepped in outs {
-                let mut resp = postprocess(
-                    tok.vocab(),
-                    &stepped.request,
-                    stepped.output.generated,
-                );
+                // engines emit DENSE ids under pruning; everything
+                // client-visible (text, accuracy, summary_ids) is in
+                // ORIGINAL id space, so map back first
+                let mut generated = stepped.output.generated;
+                if let Some(p) = &prune {
+                    p.remap.map_generated(&mut generated);
+                }
+                let mut resp =
+                    postprocess(tok.vocab(), &stepped.request, generated);
                 resp.ttft = stepped.ttft;
                 resp.steps = stepped.output.steps;
                 resp.dtype = Some(run_dtype.label());
+                resp.pruned_vocab = prune.as_ref().map(|p| {
+                    (
+                        p.remap.dense_vocab() as u64,
+                        p.remap.full_vocab() as u64,
+                    )
+                });
                 responses.push(resp);
             }
             stages.postprocess += t.elapsed();
@@ -380,6 +498,7 @@ pub fn run_sequential(
         session_latency,
         kv,
         Histogram::new(),
+        prune.as_ref().map(PruneSummary::of),
     ))
 }
 
@@ -408,6 +527,15 @@ pub fn run_pipelined(
     let seq_lens = manifest.seq_lens.clone();
     drop(manifest);
 
+    // Runtime pruning: the coordinator owns no backend, so re-derive
+    // the remap each pool worker derives inside `backend_for`.  The
+    // derivation is deterministic in (seed, coverage, full_vocab),
+    // so every thread agrees on the kept set.
+    let prune = cfg.prune.map(|p| PruneState {
+        remap: Arc::new(TokenRemap::derive(&p, full_vocab)),
+        oov: p.oov,
+    });
+
     let tok = Arc::new(make_tokenizer(full_vocab));
     let (pre_tx, pre_rx) = mpsc::sync_channel::<(Request, Instant)>(
         cfg.stage_queue * cfg.batch.max_batch,
@@ -434,6 +562,7 @@ pub fn run_pipelined(
     // --- preprocessing stage (tokenize + dynamic batching) -------------
     let pre_cfg = cfg.batch.clone();
     let pre_tok = tok.clone();
+    let pre_prune = prune.clone();
     let pre_handle = std::thread::Builder::new()
         .name("preprocess".into())
         .spawn(move || -> Result<Duration> {
@@ -445,9 +574,17 @@ pub fn run_pipelined(
                 )) {
                     Ok((req, enq)) => {
                         let t = Instant::now();
-                        let prepared = preprocess(
-                            &pre_tok, vocab_limit, max_seq, &req, enq,
-                        );
+                        let ids = encode_for_engine(
+                            &pre_tok,
+                            pre_prune.as_ref(),
+                            vocab_limit,
+                            &req.text,
+                        )
+                        .map_err(|e| {
+                            Error::Other(format!("request {}: {e}", req.id))
+                        })?;
+                        let prepared =
+                            preprocess_ids(ids, max_seq, &req, enq);
                         busy += t.elapsed();
                         batcher.push(prepared);
                         while let Some(b) = batcher.pop(false) {
@@ -479,6 +616,7 @@ pub fn run_pipelined(
     // --- post-processing stage -----------------------------------------
     type PostResult = (Vec<ServingResponse>, Duration, Option<Error>);
     let post_tok = tok.clone();
+    let post_prune = prune.clone();
     let dtype_label = cfg.dtype.label();
     let post_handle = std::thread::Builder::new()
         .name("postprocess".into())
@@ -493,7 +631,7 @@ pub fn run_pipelined(
                     PoolEvent::Tokens { .. } => {}
                     PoolEvent::Finished {
                         request,
-                        generated,
+                        mut generated,
                         steps,
                         ttft,
                         kv,
@@ -501,11 +639,21 @@ pub fn run_pipelined(
                         ..
                     } => {
                         let t = Instant::now();
+                        // dense engine ids -> original tokenizer ids
+                        if let Some(p) = &post_prune {
+                            p.remap.map_generated(&mut generated);
+                        }
                         let mut resp =
                             postprocess(post_tok.vocab(), &request, generated);
                         resp.ttft = ttft;
                         resp.steps = steps;
                         resp.dtype = Some(dtype_label);
+                        resp.pruned_vocab = post_prune.as_ref().map(|p| {
+                            (
+                                p.remap.dense_vocab() as u64,
+                                p.remap.full_vocab() as u64,
+                            )
+                        });
                         resp.kv_blocks = kv.map(|st| {
                             (st.used_blocks() as u64, st.total_blocks as u64)
                         });
@@ -577,6 +725,7 @@ pub fn run_pipelined(
         report.session_latency(),
         report.kv_metrics(),
         report.step_latency(),
+        prune.as_ref().map(PruneSummary::of),
     ))
 }
 

@@ -1,11 +1,22 @@
-//! Embedding-pruning analysis (§3.2): quantifies WHY the paper's vocab
-//! trim and position-table trim are safe, on the synthetic corpus.
+//! Embedding-layer pruning (§3.2): the analysis side (coverage curves,
+//! the Fig 3 length histogram) AND the runtime side.
 //!
-//! Produces (a) vocab coverage curves — what fraction of token
-//! occurrences a frequency-prefix retains — and (b) the Fig 3
-//! sequence-length histogram that justifies 512→128 positions.
+//! The runtime side makes pruning a serving dimension like `--dtype`:
+//! [`TokenRemap::derive`] samples a seeded corpus, accumulates token
+//! frequencies ([`FreqStats`]) and builds the **kept-vocab set** — the
+//! smallest frequency-ranked set reaching the configured coverage
+//! target, with the special tokens and the precision harness's probe
+//! ids always retained.  The remap is bidirectional: original id →
+//! dense pruned id at the serving boundary in, dense → original on the
+//! way out, so `RefBackend::set_pruning` can slice the embedding table
+//! (and, via weight tying, the `logits_matvec` vocab dimension) down to
+//! the kept rows while the rest of the stack keeps speaking original
+//! ids.  Derivation is deterministic in `(seed, coverage, vocab)`, so
+//! pool workers re-derive the identical remap independently.
 
+use crate::config::{OovPolicy, PruneConfig};
 use crate::data::{CorpusConfig, Generator};
+use crate::special;
 use crate::tokenizer::{CoveragePoint, Encode, FastTokenizer, FreqStats, Vocab};
 
 /// Vocab-pruning study over a freshly generated corpus sample.
@@ -40,13 +51,222 @@ impl PruningAnalysis {
     }
 }
 
+/// Ids `special::FIRST_WORD .. FIRST_WORD + PROBE_RANKS` are the word
+/// ranks `precision::probe_inputs` draws from; [`TokenRemap`] always
+/// keeps them (plus the specials below `FIRST_WORD`) so the accuracy
+/// gate stays valid at any coverage target.
+pub const PROBE_RANKS: u32 = 96;
+
+/// `to_dense` sentinel for an id outside the kept set.
+const DROPPED: u32 = u32::MAX;
+
+/// Bidirectional token remap for runtime vocab pruning: original id →
+/// dense pruned id and back.  The kept set is sorted ascending, so the
+/// specials (`PAD..SEP`) keep their ids under the remap (EOS stays 2 in
+/// dense space — engine stop checks are unchanged) and the kept ids
+/// below any vocab bound form a dense-space *prefix* of the remap.
+#[derive(Debug, Clone)]
+pub struct TokenRemap {
+    /// Original (unpruned) vocab size the remap was derived over.
+    full_vocab: usize,
+    /// Dense id → original id, sorted ascending.
+    kept: Vec<u32>,
+    /// Original id → dense id ([`DROPPED`] outside the kept set).
+    to_dense: Vec<u32>,
+    /// Length of the maximal identity run: every id `< prefix` is kept
+    /// and maps to itself.  Encoding at this bound makes the remap a
+    /// no-op on the prompt path.
+    prefix: u32,
+    /// Coverage target the derivation aimed for.
+    target: f64,
+    /// Coverage the kept set achieved on the sample.
+    achieved: f64,
+}
+
+impl TokenRemap {
+    /// Derive the kept set from a seeded corpus sample — deterministic
+    /// in `(prune.seed, prune.coverage, full_vocab)`, so every layer
+    /// (boundary, pool workers) re-derives the same remap.
+    pub fn derive(prune: &PruneConfig, full_vocab: usize) -> Self {
+        let cfg = CorpusConfig {
+            vocab_size: full_vocab,
+            ..CorpusConfig::default()
+        };
+        let tok = FastTokenizer::new(Vocab::synthetic(full_vocab));
+        let mut gen = Generator::new(cfg, prune.seed);
+        let mut stats = FreqStats::new(full_vocab);
+        for _ in 0..prune.sample_docs {
+            let d = gen.generate();
+            stats.observe(&tok.encode(&d.text, full_vocab as u32));
+        }
+        Self::from_stats(&stats, prune.coverage, full_vocab)
+    }
+
+    /// Build the remap from already-collected frequencies: the
+    /// always-keep band (specials + probe ids), then ids in descending
+    /// frequency order until `coverage` of the observed occurrences is
+    /// retained.
+    pub fn from_stats(
+        stats: &FreqStats,
+        coverage: f64,
+        full_vocab: usize,
+    ) -> Self {
+        let band =
+            full_vocab.min((special::FIRST_WORD + PROBE_RANKS) as usize);
+        let mut in_set = vec![false; full_vocab];
+        let mut covered = 0u64;
+        for (id, slot) in in_set.iter_mut().enumerate().take(band) {
+            *slot = true;
+            covered += stats.count_of(id as u32);
+        }
+        let total = stats.total();
+        if total > 0 {
+            for id in stats.rank_order() {
+                if covered as f64 / total as f64 >= coverage {
+                    break;
+                }
+                let i = id as usize;
+                if i < full_vocab && !in_set[i] {
+                    in_set[i] = true;
+                    covered += stats.count_of(id);
+                }
+            }
+        }
+        let kept: Vec<u32> = (0..full_vocab as u32)
+            .filter(|&i| in_set[i as usize])
+            .collect();
+        let mut to_dense = vec![DROPPED; full_vocab];
+        for (dense, &orig) in kept.iter().enumerate() {
+            to_dense[orig as usize] = dense as u32;
+        }
+        let prefix = kept
+            .iter()
+            .enumerate()
+            .take_while(|(i, &id)| id as usize == *i)
+            .count() as u32;
+        let achieved = if total > 0 {
+            covered as f64 / total as f64
+        } else {
+            1.0
+        };
+        Self { full_vocab, kept, to_dense, prefix, target: coverage, achieved }
+    }
+
+    /// The original vocab size the remap was derived over.
+    pub fn full_vocab(&self) -> usize {
+        self.full_vocab
+    }
+
+    /// Kept-set size == the pruned (dense) vocab of the full variant.
+    pub fn dense_vocab(&self) -> usize {
+        self.kept.len()
+    }
+
+    /// Kept ids, ascending (dense id → original id).
+    pub fn kept_ids(&self) -> &[u32] {
+        &self.kept
+    }
+
+    /// Kept ids whose original id is `< vocab` — the dense vocab of a
+    /// manifest variant whose unpruned vocab is `vocab`.  Because the
+    /// kept set is ascending, these are dense ids `0..kept_below(vocab)`.
+    pub fn kept_below(&self, vocab: usize) -> usize {
+        self.kept.partition_point(|&id| (id as usize) < vocab)
+    }
+
+    /// Every id `< identity_prefix()` is kept and identity-mapped.
+    pub fn identity_prefix(&self) -> u32 {
+        self.prefix
+    }
+
+    /// Tokenizer `max_id` bound for a variant serving `vocab` ids:
+    /// encoding below it guarantees every prompt id is identity-mapped
+    /// into the kept set (the `Resegment` policy).  `vocab` may be the
+    /// variant's ORIGINAL or DENSE size — `min(prefix, orig)` equals
+    /// `min(prefix, dense)` because all of `[0, prefix)` survives.
+    pub fn encode_limit(&self, vocab: usize) -> u32 {
+        self.prefix.min(vocab as u32)
+    }
+
+    /// Coverage the kept set achieved on the derivation sample.
+    pub fn coverage(&self) -> f64 {
+        self.achieved
+    }
+
+    /// The coverage target the derivation aimed for.
+    pub fn target(&self) -> f64 {
+        self.target
+    }
+
+    /// Original id → dense pruned id, `None` outside the kept set.
+    pub fn to_dense(&self, id: u32) -> Option<u32> {
+        match self.to_dense.get(id as usize) {
+            Some(&d) if d != DROPPED => Some(d),
+            _ => None,
+        }
+    }
+
+    /// Dense pruned id → original id, `None` out of range.
+    pub fn to_original(&self, dense: u32) -> Option<u32> {
+        self.kept.get(dense as usize).copied()
+    }
+
+    /// Map a prompt of ORIGINAL ids into dense pruned ids per `oov`
+    /// policy.  `Reject` returns a message for the serving boundary's
+    /// structured `bad_request`; `Resegment`/`Unk` substitute PAD (the
+    /// UNK stand-in — this vocab has no dedicated UNK token, and PAD is
+    /// always kept as dense 0).  Prompts encoded at
+    /// [`TokenRemap::encode_limit`] never hit either branch.
+    pub fn map_prompt(
+        &self,
+        ids: &[u32],
+        oov: OovPolicy,
+    ) -> std::result::Result<Vec<u32>, String> {
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in ids {
+            match self.to_dense(id) {
+                Some(d) => out.push(d),
+                None if oov == OovPolicy::Reject => {
+                    return Err(format!(
+                        "prompt token id {id} is outside the pruned vocab \
+                         (kept {} of {} ids; oov policy 'reject')",
+                        self.kept.len(),
+                        self.full_vocab
+                    ));
+                }
+                None => out.push(special::PAD),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Map generated DENSE ids back to original ids in place.  Total:
+    /// an id out of dense range (impossible for engine output, which is
+    /// argmax over the dense vocab) passes through unchanged.
+    pub fn map_generated(&self, ids: &mut [u32]) {
+        for id in ids.iter_mut() {
+            if let Some(orig) = self.to_original(*id) {
+                *id = orig;
+            }
+        }
+    }
+}
+
 /// Fig 3: histogram of document lengths (tokens), fixed bins.
+///
+/// # Panics
+/// `bin_width == 0` would divide by zero; rejected with a descriptive
+/// panic rather than the bare arithmetic fault.
 pub fn length_histogram(
     cfg: &CorpusConfig,
     n_docs: usize,
     seed: u64,
     bin_width: usize,
 ) -> Vec<(usize, u64)> {
+    assert!(
+        bin_width > 0,
+        "length_histogram: bin_width must be > 0 (got 0)"
+    );
     let mut gen = Generator::new(cfg.clone(), seed);
     let n_bins = cfg.max_doc_len / bin_width + 1;
     let mut bins = vec![0u64; n_bins];
@@ -100,6 +320,121 @@ mod tests {
             .sum();
         assert_eq!(total, 1000);
         assert!(short as f64 / total as f64 > 0.85);
+    }
+
+    #[test]
+    #[should_panic(expected = "bin_width must be > 0")]
+    fn length_histogram_rejects_zero_bin_width() {
+        length_histogram(&CorpusConfig::default(), 1, 0, 0);
+    }
+
+    fn remap_for(coverage: f64) -> TokenRemap {
+        let prune = PruneConfig {
+            coverage,
+            sample_docs: 64,
+            seed: 0,
+            oov: OovPolicy::default(),
+        };
+        TokenRemap::derive(&prune, CorpusConfig::default().vocab_size)
+    }
+
+    #[test]
+    fn remap_keeps_specials_and_probe_band_identity_mapped() {
+        let r = remap_for(0.9);
+        let band = special::FIRST_WORD + PROBE_RANKS;
+        for id in 0..band {
+            assert_eq!(r.to_dense(id), Some(id), "band id {id}");
+            assert_eq!(r.to_original(id), Some(id));
+        }
+        assert!(r.identity_prefix() >= band);
+        assert_eq!(r.to_dense(special::EOS), Some(special::EOS));
+    }
+
+    #[test]
+    fn remap_round_trips_on_kept_set_and_shrinks() {
+        let r = remap_for(0.9);
+        assert!(r.dense_vocab() < r.full_vocab(), "0.9 coverage must prune");
+        assert!(r.coverage() >= 0.9);
+        for (dense, &orig) in r.kept_ids().iter().enumerate() {
+            assert_eq!(r.to_dense(orig), Some(dense as u32));
+            assert_eq!(r.to_original(dense as u32), Some(orig));
+        }
+        // out-of-set and out-of-range ids refuse to map
+        let dropped = (0..r.full_vocab() as u32)
+            .find(|&id| r.to_dense(id).is_none())
+            .expect("a pruned remap has dropped ids");
+        assert!(r.to_dense(dropped).is_none());
+        assert!(r.to_dense(r.full_vocab() as u32 + 5).is_none());
+        assert!(r.to_original(r.dense_vocab() as u32).is_none());
+    }
+
+    #[test]
+    fn remap_is_deterministic_in_seed() {
+        let a = remap_for(0.9);
+        let b = remap_for(0.9);
+        assert_eq!(a.kept_ids(), b.kept_ids());
+        assert_eq!(a.identity_prefix(), b.identity_prefix());
+    }
+
+    #[test]
+    fn encode_limit_same_through_original_and_dense_vocab() {
+        // The invariant the serving boundary relies on: the bound is
+        // identical whether computed from a variant's original vocab or
+        // its pruned dense vocab.
+        let r = remap_for(0.9);
+        for vocab in [64usize, 4000, 8000, 20000] {
+            let dense = r.kept_below(vocab);
+            assert_eq!(r.encode_limit(vocab), r.encode_limit(dense),
+                       "vocab {vocab}");
+            assert!(r.encode_limit(vocab) <= vocab as u32);
+        }
+        assert_eq!(
+            r.encode_limit(r.full_vocab()),
+            r.identity_prefix().min(r.full_vocab() as u32)
+        );
+    }
+
+    #[test]
+    fn map_prompt_policies() {
+        let r = remap_for(0.9);
+        let dropped = (0..r.full_vocab() as u32)
+            .find(|&id| r.to_dense(id).is_none())
+            .unwrap();
+        let in_set = [special::BOS, special::FIRST_WORD + 3, special::SEP];
+        assert_eq!(
+            r.map_prompt(&in_set, OovPolicy::Reject).unwrap(),
+            in_set.to_vec(),
+            "identity-prefix ids map to themselves"
+        );
+        let mixed = [special::BOS, dropped, special::SEP];
+        let err = r.map_prompt(&mixed, OovPolicy::Reject).unwrap_err();
+        assert!(err.contains(&dropped.to_string()), "{err}");
+        assert_eq!(
+            r.map_prompt(&mixed, OovPolicy::Unk).unwrap(),
+            vec![special::BOS, special::PAD, special::SEP]
+        );
+    }
+
+    #[test]
+    fn map_generated_restores_original_ids() {
+        let r = remap_for(0.9);
+        // pick a kept id beyond the identity prefix if one exists; the
+        // round trip must restore it exactly
+        let mut dense: Vec<u32> =
+            (0..r.dense_vocab() as u32).step_by(97).collect();
+        let expect: Vec<u32> = dense
+            .iter()
+            .map(|&d| r.to_original(d).unwrap())
+            .collect();
+        r.map_generated(&mut dense);
+        assert_eq!(dense, expect);
+    }
+
+    #[test]
+    fn full_coverage_keeps_every_observed_id() {
+        let r = remap_for(1.0);
+        // every id the sample observed must survive at coverage 1.0
+        assert!((r.coverage() - 1.0).abs() < 1e-12);
     }
 
     #[test]

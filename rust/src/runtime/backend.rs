@@ -28,7 +28,8 @@
 use std::any::Any;
 use std::sync::Arc;
 
-use crate::config::{BackendKind, ServingConfig};
+use crate::config::{BackendKind, OovPolicy, ServingConfig};
+use crate::pruning::TokenRemap;
 use crate::runtime::dtype::DType;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::reference::RefBackend;
@@ -144,6 +145,21 @@ impl ExecOut {
     }
 }
 
+/// Runtime vocab pruning a backend has applied (`--prune-vocab`): the
+/// token remap the serving boundary must speak, plus the configured
+/// out-of-set policy.  A backend reporting `Some` here serves DENSE
+/// token ids — its embedding and logit matrices hold only the kept
+/// rows — so prompts must be mapped in (or encoded below
+/// [`TokenRemap::encode_limit`]) and generated ids mapped back out.
+#[derive(Clone)]
+pub struct PruneState {
+    /// The derived kept-set remap (shared; derivation is deterministic,
+    /// so independently constructed backends agree on it).
+    pub remap: Arc<TokenRemap>,
+    /// What the boundary does with out-of-set prompt ids.
+    pub oov: OovPolicy,
+}
+
 /// Counters for EXPERIMENTS.md §Perf and the metrics endpoint.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
@@ -189,6 +205,14 @@ pub trait Backend: Send + Sync {
 
     /// The graph/weight inventory this backend serves.
     fn manifest(&self) -> &Manifest;
+
+    /// Runtime vocab pruning in effect, if any.  `Some` means the
+    /// manifest's configs and weights have been sliced to the kept
+    /// vocab (dense ids); the serving boundary fetches the remap here.
+    /// Defaults to `None` (backends serve their manifest untouched).
+    fn pruning(&self) -> Option<PruneState> {
+        None
+    }
 
     /// Execution counters so far.
     fn stats(&self) -> RuntimeStats;
@@ -342,6 +366,15 @@ pub fn backend_for(cfg: &ServingConfig) -> Result<SharedBackend> {
         BackendKind::Reference => {
             let mut b = RefBackend::open(&cfg.artifacts_dir)?;
             b.set_row_threads(resolve_row_threads(cfg));
+            if let Some(prune) = cfg.prune {
+                // derive over the largest (full) vocab, then slice —
+                // BEFORE set_dtype, so the gather runs on f32 storage
+                // (it is dtype-generic, but this keeps one canonical
+                // order: prune -> quantize)
+                let full = b.manifest().config_for("full").vocab_size;
+                let remap = Arc::new(TokenRemap::derive(&prune, full));
+                b.set_pruning(remap, prune.oov)?;
+            }
             b.set_dtype(cfg.dtype);
             b.set_kernel(cfg.kernel);
             Ok(Arc::new(b))
@@ -352,6 +385,14 @@ pub fn backend_for(cfg: &ServingConfig) -> Result<SharedBackend> {
                     "the pjrt backend executes the dtype its artifacts \
                      were compiled with; re-run `make artifacts` for a \
                      different precision instead of passing --dtype"
+                        .into(),
+                ));
+            }
+            if cfg.prune.is_some() {
+                return Err(Error::Other(
+                    "the pjrt backend serves the vocab its artifacts \
+                     were compiled with; re-run `make artifacts` with a \
+                     pruned vocab instead of passing --prune-vocab"
                         .into(),
                 ));
             }

@@ -34,7 +34,8 @@ mod weights;
 
 pub use backend::{
     backend_for, manifest_for, Backend, DataArg, ExecOut, OpaqueTensor,
-    PagedDecodeRow, PagedPrefillRow, RuntimeStats, SharedBackend,
+    PagedDecodeRow, PagedPrefillRow, PruneState, RuntimeStats,
+    SharedBackend,
 };
 pub use kv::{BlockPool, BlockTable, KvStats};
 pub use prefix::{PrefixHit, PrefixIndex, PrefixStats};

@@ -50,9 +50,13 @@ use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use std::sync::Arc;
+
+use crate::config::OovPolicy;
+use crate::pruning::TokenRemap;
 use crate::runtime::backend::{
     Backend, DataArg, ExecOut, OpaqueTensor, PagedDecodeRow,
-    PagedPrefillRow, RuntimeStats,
+    PagedPrefillRow, PruneState, RuntimeStats,
 };
 use crate::runtime::dtype::{DType, Kernel};
 use crate::runtime::manifest::{
@@ -443,8 +447,37 @@ pub struct RefBackend {
     /// produces bitwise-identical results, so this is a pure
     /// performance knob.  Defaults to [`Kernel::Blocked`].
     kernel: Kernel,
+    /// Runtime vocab pruning, once [`RefBackend::set_pruning`] sliced
+    /// the embedding/logit rows ([`None`] = manifest vocab untouched).
+    prune: Option<PruneState>,
     /// Reused working buffers for the paged entry points.
     paged_scratch: Mutex<PagedScratch>,
+}
+
+/// Gather `kept` rows (each `width` wide) of a row-major matrix
+/// parameter, preserving the storage dtype — the embedding-table slice
+/// behind [`RefBackend::set_pruning`].  Works on f32 and on
+/// already-quantized binary16 storage alike, so pruning composes with
+/// `--dtype fp16` in either order.
+fn gather_rows(p: &HostParam, kept: &[u32], width: usize) -> HostParam {
+    fn pick<T: Copy>(v: &[T], kept: &[u32], width: usize) -> Vec<T> {
+        let mut out = Vec::with_capacity(kept.len() * width);
+        for &r in kept {
+            let at = r as usize * width;
+            out.extend_from_slice(&v[at..at + width]);
+        }
+        out
+    }
+    use crate::runtime::weights::ParamData;
+    let data = match &p.data {
+        ParamData::F32(v) => ParamData::F32(pick(v, kept, width)),
+        ParamData::F16(v) => ParamData::F16(pick(v, kept, width)),
+    };
+    HostParam {
+        name: p.name.clone(),
+        shape: vec![kept.len(), width],
+        data,
+    }
 }
 
 impl RefBackend {
@@ -468,6 +501,7 @@ impl RefBackend {
             row_threads: 1,
             dtype: DType::F32,
             kernel: Kernel::default(),
+            prune: None,
             paged_scratch: Mutex::new(PagedScratch::default()),
         }
     }
@@ -487,6 +521,7 @@ impl RefBackend {
             row_threads: 1,
             dtype: DType::F32,
             kernel: Kernel::default(),
+            prune: None,
             paged_scratch: Mutex::new(PagedScratch::default()),
         })
     }
@@ -524,6 +559,73 @@ impl RefBackend {
     /// The storage precision graph calls execute with.
     pub fn dtype(&self) -> DType {
         self.dtype
+    }
+
+    /// Apply runtime vocab pruning (§3.2 as a serving dimension): for
+    /// every manifest variant, gather the remap's kept embedding rows
+    /// below that variant's vocab and shrink the config's `vocab_size`
+    /// to the kept count.  The embeddings are tied to the output head,
+    /// so this slices BOTH the embedding lookup and the
+    /// `logits_matvec` vocab dimension — graph calls now speak DENSE
+    /// ids and return dense-vocab logits; the serving boundary maps ids
+    /// through `remap` (see [`Backend::pruning`]).  Kept ids keep their
+    /// relative order, so for any prompt of kept ids the pruned logits
+    /// over the kept set are bitwise-equal to the unpruned logits at
+    /// the corresponding original ids.  One-shot: slicing discards the
+    /// dropped rows, so a second call is rejected rather than
+    /// compounding.  Call before [`RefBackend::set_dtype`] — the
+    /// gather is dtype-generic, but prune-then-quantize is the
+    /// canonical order `backend_for` uses.
+    pub fn set_pruning(
+        &mut self,
+        remap: Arc<TokenRemap>,
+        oov: OovPolicy,
+    ) -> Result<()> {
+        if self.prune.is_some() {
+            return Err(Error::Other(
+                "vocab pruning already applied to this backend".into(),
+            ));
+        }
+        let full_vocab = self.manifest.config_for("full").vocab_size;
+        if remap.full_vocab() < full_vocab {
+            return Err(Error::Other(format!(
+                "prune remap derived over vocab {}, but the manifest \
+                 serves {full_vocab} ids",
+                remap.full_vocab()
+            )));
+        }
+        for (key, cfg) in self.manifest.configs.iter_mut() {
+            let dense = remap.kept_below(cfg.vocab_size);
+            let weights = self.weights.get_mut(key).ok_or_else(|| {
+                Error::Manifest(format!("no weights variant '{key}'"))
+            })?;
+            for p in weights.params.iter_mut() {
+                if p.name == "tok_emb" {
+                    *p = gather_rows(
+                        p,
+                        &remap.kept_ids()[..dense],
+                        cfg.d_model,
+                    );
+                }
+            }
+            cfg.vocab_size = dense;
+        }
+        // keep the artifact inventory consistent with the new configs
+        for entry in self.manifest.artifacts.iter_mut() {
+            let dense = remap.kept_below(entry.vocab_size);
+            entry.vocab_size = dense;
+            for io in
+                entry.inputs.iter_mut().chain(entry.outputs.iter_mut())
+            {
+                if io.name == "tok_emb" {
+                    io.shape[0] = dense;
+                } else if io.name == "logits" {
+                    io.shape[1] = dense;
+                }
+            }
+        }
+        self.prune = Some(PruneState { remap, oov });
+        Ok(())
     }
 
     /// Select the GEMM kernel ([`Kernel::Blocked`] by default).  Every
@@ -951,6 +1053,10 @@ impl Backend for RefBackend {
         &self.manifest
     }
 
+    fn pruning(&self) -> Option<PruneState> {
+        self.prune.clone()
+    }
+
     fn stats(&self) -> RuntimeStats {
         self.stats.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
@@ -1340,6 +1446,133 @@ mod tests {
             full.get("layer0.wq").unwrap().data.as_f32(),
             pruned.get("layer0.wq").unwrap().data.as_f32()
         );
+    }
+
+    fn test_remap(coverage: f64) -> Arc<TokenRemap> {
+        let prune = crate::config::PruneConfig {
+            coverage,
+            sample_docs: 64,
+            seed: 0,
+            oov: OovPolicy::default(),
+        };
+        Arc::new(TokenRemap::derive(&prune, RefPreset::default().vocab_full))
+    }
+
+    #[test]
+    fn set_pruning_slices_embeddings_configs_and_bytes() {
+        let remap = test_remap(0.9);
+        let mut b = RefBackend::synthetic();
+        let full_bytes_before =
+            b.host_weights("full").unwrap().storage_bytes();
+        b.set_pruning(remap.clone(), OovPolicy::default()).unwrap();
+        for variant in ["full", "pruned"] {
+            let cfg = b.manifest().config_for(variant);
+            let dense = remap.kept_below(match variant {
+                "full" => RefPreset::default().vocab_full,
+                _ => RefPreset::default().vocab_pruned,
+            });
+            assert_eq!(cfg.vocab_size, dense, "{variant} config");
+            let emb = b.host_weights(variant).unwrap().get("tok_emb").unwrap();
+            assert_eq!(emb.shape, vec![dense, cfg.d_model]);
+        }
+        assert!(remap.dense_vocab() < remap.full_vocab(), "0.9 must prune");
+        assert!(
+            b.host_weights("full").unwrap().storage_bytes()
+                < full_bytes_before,
+            "sliced embeddings must shrink resident bytes"
+        );
+        assert!(b.pruning().is_some());
+        // one-shot: re-applying would slice already-sliced weights
+        assert!(b
+            .set_pruning(remap, OovPolicy::default())
+            .is_err());
+    }
+
+    #[test]
+    fn pruned_logits_match_full_logits_at_kept_ids() {
+        // the §3.2 soundness claim, runtime edition: for a prompt of
+        // kept (identity-prefix) ids, dense logit i must be bitwise
+        // equal to the unpruned logit at original id kept[i]
+        let remap = test_remap(0.9);
+        let plain = RefBackend::synthetic();
+        let mut pruned = RefBackend::synthetic();
+        pruned.set_pruning(remap.clone(), OovPolicy::default()).unwrap();
+        let prompt =
+            [special::BOS as i32, 7, 12, 9, special::SEP as i32];
+        let full_logits = plain
+            .execute("ft_prefill_full_b1_s32", prompt_args(1, 32, &prompt))
+            .unwrap()
+            .into_iter()
+            .next()
+            .unwrap()
+            .into_f32()
+            .unwrap();
+        let dense_logits = pruned
+            .execute("ft_prefill_full_b1_s32", prompt_args(1, 32, &prompt))
+            .unwrap()
+            .into_iter()
+            .next()
+            .unwrap()
+            .into_f32()
+            .unwrap();
+        assert_eq!(dense_logits.len(), remap.dense_vocab());
+        for (dense, &orig) in remap.kept_ids().iter().enumerate() {
+            assert_eq!(
+                dense_logits[dense].to_bits(),
+                full_logits[orig as usize].to_bits(),
+                "dense {dense} / orig {orig}"
+            );
+        }
+    }
+
+    #[test]
+    fn pruning_composes_with_f16_quantization_in_either_order() {
+        let remap = test_remap(0.9);
+        let prompt = [special::BOS as i32, 5, 8, special::SEP as i32];
+        let run = |b: &RefBackend| {
+            b.execute("ft_prefill_full_b1_s32", prompt_args(1, 32, &prompt))
+                .unwrap()
+                .into_iter()
+                .next()
+                .unwrap()
+                .into_f32()
+                .unwrap()
+        };
+        let mut prune_then_quant = RefBackend::synthetic();
+        prune_then_quant
+            .set_pruning(remap.clone(), OovPolicy::default())
+            .unwrap();
+        prune_then_quant.set_dtype(DType::F16);
+        let mut quant_then_prune = RefBackend::synthetic();
+        quant_then_prune.set_dtype(DType::F16);
+        quant_then_prune
+            .set_pruning(remap.clone(), OovPolicy::default())
+            .unwrap();
+        let a = run(&prune_then_quant);
+        let b = run(&quant_then_prune);
+        assert_eq!(a.len(), remap.dense_vocab());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "logit {i}");
+        }
+        // and the bytes reflect BOTH levers: dense rows at 2 bytes each
+        let emb = prune_then_quant
+            .host_weights("full")
+            .unwrap()
+            .get("tok_emb")
+            .unwrap();
+        assert_eq!(
+            emb.data.storage_bytes(),
+            remap.dense_vocab() * RefPreset::default().d_model * 2
+        );
+    }
+
+    #[test]
+    fn set_pruning_rejects_undersized_remap() {
+        // remap derived over a smaller vocab than the manifest serves
+        let prune = crate::config::PruneConfig::default();
+        let small = Arc::new(TokenRemap::derive(&prune, 64));
+        let mut b = RefBackend::synthetic();
+        assert!(b.set_pruning(small, OovPolicy::default()).is_err());
     }
 
     #[test]

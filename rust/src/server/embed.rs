@@ -30,7 +30,7 @@ use std::time::Duration;
 use super::streaming::{
     RequestStream, StreamingPipeline, SubmitHandle, SubmitOptions,
 };
-use crate::config::{BackendKind, EngineKind, ServingConfig};
+use crate::config::{BackendKind, EngineKind, OovPolicy, ServingConfig};
 use crate::coordinator::ServingResponse;
 use crate::data::Request;
 use crate::runtime::{DType, Kernel};
@@ -150,6 +150,31 @@ impl ServerBuilder {
     /// way.
     pub fn prefill_chunk(mut self, tokens: usize) -> Self {
         self.cfg.gen.prefill_chunk = tokens;
+        self
+    }
+
+    /// Runtime vocab pruning (`--prune-vocab`): derive a
+    /// workload-specific kept-vocabulary covering `coverage` of token
+    /// occurrences from a seeded corpus sample, and serve with the
+    /// embedding/logit matrices sliced down to it.  Token ids on every
+    /// reply stay in the ORIGINAL vocabulary; replies carry
+    /// `pruned_vocab`/`full_vocab`.  Composes with [`Self::dtype`] and
+    /// [`Self::kernel`].
+    pub fn prune(mut self, coverage: f64) -> Self {
+        let mut p = self.cfg.prune.unwrap_or_default();
+        p.coverage = coverage;
+        self.cfg.prune = Some(p);
+        self
+    }
+
+    /// Out-of-vocabulary policy under pruning ([`OovPolicy::Resegment`]
+    /// by default: the tokenizer re-segments rare words into kept
+    /// pieces so OOV ids never reach the boundary; `Reject` turns them
+    /// into typed `bad_request` replies; `Unk` maps them to PAD).
+    pub fn prune_oov(mut self, oov: OovPolicy) -> Self {
+        let mut p = self.cfg.prune.unwrap_or_default();
+        p.oov = oov;
+        self.cfg.prune = Some(p);
         self
     }
 

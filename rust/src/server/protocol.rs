@@ -29,6 +29,11 @@
 //! cache-pressure signal.  When prefix sharing is on, replies also
 //! carry the session's cumulative `"prefix_hits"` /
 //! `"prefix_tokens_reused"` counters (omitted when sharing is off).
+//! Servers running runtime vocab pruning (`--prune-vocab`) stamp
+//! successful replies with `"pruned_vocab"` / `"full_vocab"` — the
+//! dense kept-set size the engines decoded over and the original
+//! vocabulary every id on the wire speaks (token ids are always mapped
+//! back to original space before they leave the server).
 //!
 //! Requests may carry `"priority": "interactive" | "batch"`
 //! (interactive when absent): batch requests yield queue position to
@@ -142,6 +147,10 @@ pub fn response_to_json(r: &ServingResponse) -> String {
         pairs.push(("prefix_hits", Value::num(hits as f64)));
         pairs.push(("prefix_tokens_reused", Value::num(reused as f64)));
     }
+    if let Some((kept, full)) = r.pruned_vocab {
+        pairs.push(("pruned_vocab", Value::num(kept as f64)));
+        pairs.push(("full_vocab", Value::num(full as f64)));
+    }
     if r.preemptions > 0 {
         pairs.push(("preemptions", Value::num(r.preemptions as f64)));
     }
@@ -202,6 +211,10 @@ pub fn event_to_json(id: u64, ev: &ServingEvent) -> String {
                     Value::num(reused as f64),
                 ));
             }
+            if let Some((kept, full)) = r.pruned_vocab {
+                pairs.push(("pruned_vocab", Value::num(kept as f64)));
+                pairs.push(("full_vocab", Value::num(full as f64)));
+            }
             if r.preemptions > 0 {
                 pairs.push(("preemptions", Value::num(r.preemptions as f64)));
             }
@@ -261,6 +274,7 @@ mod tests {
             kv_blocks: Some((3, 64)),
             preemptions: 1,
             prefix: Some((2, 32)),
+            pruned_vocab: Some((4000, 8000)),
         }
     }
 
@@ -329,17 +343,22 @@ mod tests {
         assert_eq!(v.get("kv_blocks_total").as_u64(), Some(64));
         assert_eq!(v.get("prefix_hits").as_u64(), Some(2));
         assert_eq!(v.get("prefix_tokens_reused").as_u64(), Some(32));
+        assert_eq!(v.get("pruned_vocab").as_u64(), Some(4000));
+        assert_eq!(v.get("full_vocab").as_u64(), Some(8000));
         assert_eq!(v.get("preemptions").as_u64(), Some(1));
         assert!(v.get("code").is_null());
         // never-preempted replies omit the field entirely, and so do
-        // replies from sessions without a prefix cache
+        // replies from sessions without a prefix cache or pruning
         let mut clean = ok_response(3);
         clean.preemptions = 0;
         clean.prefix = None;
+        clean.pruned_vocab = None;
         let v = json::parse(&response_to_json(&clean)).unwrap();
         assert!(v.get("preemptions").is_null());
         assert!(v.get("prefix_hits").is_null());
         assert!(v.get("prefix_tokens_reused").is_null());
+        assert!(v.get("pruned_vocab").is_null());
+        assert!(v.get("full_vocab").is_null());
     }
 
     #[test]
@@ -386,6 +405,8 @@ mod tests {
         assert_eq!(v.get("kv_blocks_total").as_u64(), Some(64));
         assert_eq!(v.get("prefix_hits").as_u64(), Some(2));
         assert_eq!(v.get("prefix_tokens_reused").as_u64(), Some(32));
+        assert_eq!(v.get("pruned_vocab").as_u64(), Some(4000));
+        assert_eq!(v.get("full_vocab").as_u64(), Some(8000));
         assert_eq!(v.get("preemptions").as_u64(), Some(1));
     }
 

@@ -29,8 +29,9 @@ use crate::coordinator::{
     DynamicBatcher, InferencePool, PoolEvent, Priority, ServingResponse,
 };
 use crate::data::Request;
-use crate::pipeline::preprocess_strict;
-use crate::runtime::manifest_for;
+use crate::pipeline::{encode_for_engine, preprocess_strict_ids};
+use crate::pruning::TokenRemap;
+use crate::runtime::{manifest_for, PruneState};
 use crate::tokenizer::{decode as detokenize, FastTokenizer, Vocab};
 use crate::{Error, Result};
 
@@ -180,9 +181,13 @@ impl SubmitHandle {
         let enqueued = Instant::now();
         let cancel = Arc::new(AtomicBool::new(false));
         let (tx, rx) = mpsc::channel();
+        // route-table locks recover from poisoning everywhere (the map
+        // of Senders stays structurally valid even if a holder
+        // panicked): one crashed thread must not turn every later
+        // submit/reply into a panic
         self.routes
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .insert(id, Route { tx, cancel: cancel.clone() });
         let inbound = Inbound {
             req,
@@ -208,7 +213,10 @@ impl SubmitHandle {
             })
         };
         if let Err(e) = sent {
-            self.routes.lock().unwrap().remove(&id);
+            self.routes
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .remove(&id);
             return Err(e);
         }
         Ok(RequestStream { id, rx, cancel })
@@ -244,6 +252,14 @@ impl StreamingPipeline {
         let seq_lens = manifest.seq_lens.clone();
         drop(manifest);
 
+        // Runtime pruning: same deterministic derivation the pool
+        // workers run inside backend_for, so the serving boundary and
+        // every engine agree on the kept set (see pipeline::run_pipelined)
+        let prune = cfg.prune.map(|p| PruneState {
+            remap: Arc::new(TokenRemap::derive(&p, full_vocab)),
+            oov: p.oov,
+        });
+
         let tok = Arc::new(FastTokenizer::new(Vocab::synthetic(full_vocab)));
         let routes: Routes = Arc::new(Mutex::new(HashMap::new()));
 
@@ -265,6 +281,7 @@ impl StreamingPipeline {
         let pre_tok = tok.clone();
         let pre_routes = routes.clone();
         let pre_policy = cfg.batch.clone();
+        let pre_prune = prune.clone();
         let pre = std::thread::Builder::new()
             .name("srv-preprocess".into())
             .spawn(move || {
@@ -282,15 +299,24 @@ impl StreamingPipeline {
                                 cancel,
                                 priority,
                             } = inbound;
-                            let mut prepared = match preprocess_strict(
-                                &pre_tok, vocab_limit, max_seq, &req,
-                                enqueued,
-                            ) {
+                            // tokenize (honoring the pruning OOV
+                            // policy), then fit-check — either failure
+                            // is a typed boundary rejection: the bad
+                            // prompt never reaches a batch
+                            let prepped = encode_for_engine(
+                                &pre_tok,
+                                pre_prune.as_ref(),
+                                vocab_limit,
+                                &req.text,
+                            )
+                            .and_then(|ids| {
+                                preprocess_strict_ids(
+                                    ids, max_seq, &req, enqueued,
+                                )
+                            });
+                            let mut prepared = match prepped {
                                 Ok(p) => p,
                                 Err(msg) => {
-                                    // typed rejection at the boundary:
-                                    // the oversized prompt never
-                                    // reaches a batch
                                     reply_failed(
                                         &pre_routes,
                                         req.id,
@@ -339,16 +365,24 @@ impl StreamingPipeline {
         // request (successes AND failures)
         let post_tok = tok;
         let post_routes = routes.clone();
+        let post_prune = prune;
         let dtype_label = cfg.dtype.label();
         let post = std::thread::Builder::new()
             .name("srv-postprocess".into())
             .spawn(move || {
                 for ev in out_rx.iter() {
                     match ev {
-                        PoolEvent::Tokens { id, tokens, .. } => {
+                        PoolEvent::Tokens { id, mut tokens, .. } => {
+                            // stream ORIGINAL ids to the client, not
+                            // the engine's dense pruned ids
+                            if let Some(p) = &post_prune {
+                                p.remap.map_generated(&mut tokens);
+                            }
                             let text = detokenize(post_tok.vocab(), &tokens);
                             let undeliverable = {
-                                let routes = post_routes.lock().unwrap();
+                                let routes = post_routes
+                                    .lock()
+                                    .unwrap_or_else(|e| e.into_inner());
                                 match routes.get(&id) {
                                     Some(route) => route
                                         .tx
@@ -365,7 +399,7 @@ impl StreamingPipeline {
                                 // pool stops decoding for it
                                 if let Some(route) = post_routes
                                     .lock()
-                                    .unwrap()
+                                    .unwrap_or_else(|e| e.into_inner())
                                     .get(&id)
                                 {
                                     route
@@ -376,13 +410,16 @@ impl StreamingPipeline {
                         }
                         PoolEvent::Finished {
                             request,
-                            generated,
+                            mut generated,
                             steps,
                             ttft,
                             kv,
                             prefix,
                             ..
                         } => {
+                            if let Some(p) = &post_prune {
+                                p.remap.map_generated(&mut generated);
+                            }
                             let mut resp = crate::pipeline::postprocess(
                                 post_tok.vocab(),
                                 &request,
@@ -391,6 +428,13 @@ impl StreamingPipeline {
                             resp.ttft = ttft;
                             resp.steps = steps;
                             resp.dtype = Some(dtype_label);
+                            resp.pruned_vocab =
+                                post_prune.as_ref().map(|p| {
+                                    (
+                                        p.remap.dense_vocab() as u64,
+                                        p.remap.full_vocab() as u64,
+                                    )
+                                });
                             resp.kv_blocks = kv.map(|st| {
                                 (
                                     st.used_blocks() as u64,
@@ -433,7 +477,11 @@ impl StreamingPipeline {
 
 /// Send the terminal event and drop the route (exactly-once contract).
 fn reply_done(routes: &Routes, id: u64, resp: ServingResponse) {
-    if let Some(route) = routes.lock().unwrap().remove(&id) {
+    let route = routes
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .remove(&id);
+    if let Some(route) = route {
         let _ = route.tx.send(ServingEvent::Done(resp));
     }
 }

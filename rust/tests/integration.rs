@@ -1287,6 +1287,75 @@ fn missing_backend_outputs_fail_typed_not_panic() {
     assert!(err.to_string().contains("poisoned"), "{err}");
 }
 
+#[test]
+fn pruned_server_rejects_oov_and_resegments_by_default() {
+    use aigc_infer::config::{OovPolicy, PruneConfig};
+    use aigc_infer::pruning::TokenRemap;
+    use aigc_infer::tokenizer::vocab::render_rank;
+
+    // Mirror the server-side derivation (deterministic in seed,
+    // coverage and full vocab) to find a word the kept set drops but
+    // the ft_pruned engine's ORIGINAL 4000-id vocab still encodes as a
+    // single token.
+    let prune = PruneConfig { coverage: 0.9, ..PruneConfig::default() };
+    let full_vocab = RefBackend::synthetic()
+        .manifest()
+        .config_for("full")
+        .vocab_size;
+    let orig_vocab = RefBackend::synthetic()
+        .manifest()
+        .config_for("pruned")
+        .vocab_size as u32;
+    let remap = TokenRemap::derive(&prune, full_vocab);
+    let dropped = (special::FIRST_WORD..orig_vocab)
+        .rev()
+        .find(|&t| remap.to_dense(t).is_none())
+        .expect("coverage 0.9 must drop ids below the engine vocab");
+    let rare = render_rank((dropped - special::FIRST_WORD) as usize);
+    let text = format!("ba gedu {rare}");
+
+    // reject policy: the OOV id becomes a typed bad_request terminal
+    // event naming the offender, and the pipeline keeps serving
+    let server = Server::builder()
+        .engine(EngineKind::FtPruned)
+        .prune(0.9)
+        .prune_oov(OovPolicy::Reject)
+        .max_new_tokens(8)
+        .start()
+        .unwrap();
+    let resp = server.submit(text.clone(), 8).unwrap().wait().unwrap();
+    assert_eq!(resp.code, Some("bad_request"), "{resp:?}");
+    let msg = resp.error.expect("oov rejection carries a message");
+    assert!(msg.contains(&dropped.to_string()), "{msg}");
+    assert_eq!(resp.pruned_vocab, None, "failed replies omit the pair");
+    let ok = server.submit("ba gedu fi", 8).unwrap().wait().unwrap();
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    assert_eq!(
+        ok.pruned_vocab,
+        Some((remap.dense_vocab() as u64, full_vocab as u64)),
+        "successful replies report kept/full vocab"
+    );
+    drop(server);
+
+    // default policy (resegment): the SAME text succeeds — the
+    // tokenizer splits the rare word into kept pieces — and every
+    // generated id maps back inside the kept set
+    let server = Server::builder()
+        .engine(EngineKind::FtPruned)
+        .prune(0.9)
+        .max_new_tokens(8)
+        .start()
+        .unwrap();
+    let resp = server.submit(text, 8).unwrap().wait().unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    for &t in &resp.summary_ids {
+        assert!(
+            remap.to_dense(t).is_some(),
+            "generated id {t} escaped the kept set"
+        );
+    }
+}
+
 /// Real-artifact tests.  The `pjrt` feature only compiles after the
 /// vendored `xla` crate is added as a dependency (see the note in
 /// rust/Cargo.toml); on such a build these stay `#[ignore]`d until

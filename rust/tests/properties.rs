@@ -1004,6 +1004,122 @@ fn prop_prefix_shared_admissions_equal_solo_runs() {
 }
 
 #[test]
+fn prop_pruned_streams_match_unpruned_on_kept_prefixes() {
+    // THE runtime-pruning acceptance property: slicing the embedding /
+    // logit matrices down to the kept set must be invisible to greedy
+    // decoding wherever the full-vocab argmax lands inside the kept
+    // set.  For every request, the pruned stream (mapped back to
+    // original ids) must equal the unpruned stream up to the FIRST
+    // unpruned token outside the kept set (past it the vocabularies
+    // legitimately diverge — the pruned engine cannot emit a dropped
+    // id).  Holds across storage dtypes, kernel families and both
+    // cache disciplines, because the dense logits are bitwise equal to
+    // the full logits at kept ids.
+    use aigc_infer::config::PruneConfig;
+    use aigc_infer::pruning::TokenRemap;
+
+    let full_vocab = RefBackend::synthetic()
+        .manifest()
+        .config_for("full")
+        .vocab_size;
+    let remap = Arc::new(TokenRemap::derive(
+        &PruneConfig { coverage: 0.9, ..PruneConfig::default() },
+        full_vocab,
+    ));
+    let mut rng = Rng::seed_from_u64(0x9B0E);
+    let mut compared = 0usize;
+    for (dtype, kernel) in [
+        (DType::F32, Kernel::Blocked),
+        (DType::F16, Kernel::Blocked),
+        (DType::F32, Kernel::Scalar),
+    ] {
+        let plain: Arc<dyn Backend> = {
+            let mut b = RefBackend::synthetic();
+            b.set_dtype(dtype);
+            b.set_kernel(kernel);
+            Arc::new(b)
+        };
+        let pruned: Arc<dyn Backend> = {
+            let mut b = RefBackend::synthetic();
+            b.set_pruning(remap.clone(), Default::default()).unwrap();
+            b.set_dtype(dtype);
+            b.set_kernel(kernel);
+            Arc::new(b)
+        };
+        for kind in [EngineKind::FtFull, EngineKind::FtPruned] {
+            let orig_vocab = plain
+                .manifest()
+                .config_for(kind.variant())
+                .vocab_size;
+            // prompts from the identity prefix: valid (and equal) in
+            // BOTH id spaces — exactly what the resegmenting serving
+            // boundary feeds a pruned engine
+            let limit = remap.encode_limit(orig_vocab);
+            for paged in [false, true] {
+                let kv = KvConfig { paged, ..KvConfig::default() };
+                let e_plain = build_with_kv(
+                    kind,
+                    plain.clone(),
+                    Default::default(),
+                    kv,
+                )
+                .unwrap();
+                let e_pruned = build_with_kv(
+                    kind,
+                    pruned.clone(),
+                    Default::default(),
+                    kv,
+                )
+                .unwrap();
+                let n = rng.gen_range(2, 8);
+                let inputs = random_inputs(&mut rng, n, limit);
+                let a: Vec<Vec<u32>> = e_plain
+                    .generate(&inputs, &mut Sampler::greedy())
+                    .unwrap()
+                    .into_iter()
+                    .map(|o| o.generated)
+                    .collect();
+                let b: Vec<Vec<u32>> = e_pruned
+                    .generate(&inputs, &mut Sampler::greedy())
+                    .unwrap()
+                    .into_iter()
+                    .map(|o| o.generated)
+                    .collect();
+                for (x, y) in a.iter().zip(&b) {
+                    let mut mapped = y.clone();
+                    remap.map_generated(&mut mapped);
+                    let keep = x
+                        .iter()
+                        .take_while(|&&t| remap.to_dense(t).is_some())
+                        .count();
+                    if keep == x.len() {
+                        assert_eq!(
+                            &mapped, x,
+                            "{kind:?}/{dtype:?}/{kernel:?} paged={paged}: \
+                             fully-kept stream diverged"
+                        );
+                    } else {
+                        assert!(
+                            mapped.len() >= keep,
+                            "{kind:?}/{dtype:?}/{kernel:?} paged={paged}: \
+                             pruned stream shorter than the kept prefix"
+                        );
+                        assert_eq!(
+                            &mapped[..keep],
+                            &x[..keep],
+                            "{kind:?}/{dtype:?}/{kernel:?} paged={paged}: \
+                             kept prefix diverged"
+                        );
+                    }
+                    compared += keep;
+                }
+            }
+        }
+    }
+    assert!(compared > 0, "vacuous: no kept-prefix tokens compared");
+}
+
+#[test]
 fn prop_zipf_prefix_mass_matches_empirical() {
     use aigc_infer::data::ZipfSampler;
     let z = ZipfSampler::new(2000, 1.1);
