@@ -42,7 +42,15 @@
 //! pruned streams token-identical to the unpruned run on kept-token
 //! prefixes (compared up to the first unpruned token that leaves the
 //! kept set — beyond it the two argmaxes legitimately diverge — with
-//! a non-vacuity floor on compared tokens).  The tool then writes one
+//! a non-vacuity floor on compared tokens).  Schema 9 adds a
+//! **speculation** section — self-speculative decoding as the
+//! dispatch-amortization dimension: a templated/repetitive trace with
+//! n-gram drafting + fused verification ON vs OFF (fused multi-step
+//! pinned off in both arms so the A/B isolates drafting), hard-gated
+//! on accepted drafts > 0, strictly fewer backend dispatches,
+//! strictly higher tokens/sec, and bitwise-identical streams — plus a
+//! speculative `paper_stack_spec` pruning row (fp16 × blocked ×
+//! pruned × speculate).  The tool then writes one
 //! machine-readable `BENCH_<n>.json`
 //! datapoint (samples/sec, p50/p99 latency, TTFT, tokens/sec per
 //! configuration).  Successive PRs append `BENCH_2.json`,
@@ -842,6 +850,7 @@ fn run_prune_arm(
     engine: EngineKind,
     dtype: DType,
     pruned: bool,
+    speculate: usize,
     reqs: &[Request],
     max_new: usize,
 ) -> RunSummary {
@@ -857,6 +866,7 @@ fn run_prune_arm(
         });
     }
     cfg.gen.max_new_tokens = max_new;
+    cfg.gen.speculate = speculate;
     cfg.precompile = true;
     pipeline::run(&cfg, reqs).expect("pruning bench failed")
 }
@@ -933,6 +943,7 @@ fn prune_ab_row(
     stack: &str,
     variant: &str,
     dtype: DType,
+    speculate: usize,
     orig_vocab: usize,
     dense_vocab: usize,
     base: &RunSummary,
@@ -948,6 +959,13 @@ fn prune_ab_row(
         ("stack", Value::str(stack)),
         ("variant", Value::str(variant)),
         ("dtype", Value::str(dtype.label())),
+        ("speculate", Value::num(speculate as f64)),
+        (
+            "spec_accepted",
+            Value::num(
+                pruned.spec.map(|s| s.accepted).unwrap_or(0) as f64,
+            ),
+        ),
         ("orig_vocab", Value::num(orig_vocab as f64)),
         ("pruned_vocab", Value::num(dense_vocab as f64)),
         ("achieved_coverage", Value::num(achieved)),
@@ -973,6 +991,168 @@ fn prune_ab_row(
         ),
         ("compared_kept_tokens", Value::num(compared as f64)),
     ])
+}
+
+/// The schema-9 `speculation` A/B: the same templated/repetitive
+/// prompts through the paged FT engine with self-speculative decoding
+/// ON (`speculate = 4`) vs OFF — fused multi-step pinned OFF in BOTH
+/// arms, so the A/B isolates n-gram drafting from dispatch fusion
+/// (fusion has its own schema-6 section).  Every prompt repeats a
+/// short word motif, so the trailing n-gram always has an earlier
+/// occurrence to extend — the workload prompt-lookup drafting exists
+/// for (templated generation, structured summaries, code).  Sessions
+/// are driven by hand so `spec_stats()` is observable; backend
+/// dispatch counts come from the runtime execution counter.  The gates
+/// — spec-on strictly fewer dispatches AND strictly higher tokens/sec,
+/// bitwise-identical streams, acceptance > 0 — are enforced by the
+/// self-validation.
+fn run_speculation() -> Vec<Value> {
+    let preset = RefPreset {
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        vocab_full: 512,
+        vocab_pruned: 256,
+        ..RefPreset::default()
+    };
+    let backend: Arc<dyn Backend> =
+        Arc::new(RefBackend::with_preset(&preset));
+    let vocab = backend.manifest().config_for("pruned").vocab_size as u32;
+    let mut rng = Rng::seed_from_u64(0x5BEC);
+    let max_new = 24usize;
+    let inputs: Vec<EngineInput> = (0..8u64)
+        .map(|id| {
+            let period = 1 + rng.gen_range(0, 3);
+            let motif: Vec<u32> = (0..period)
+                .map(|_| {
+                    aigc_infer::special::FIRST_WORD
+                        + rng.gen_range(0, (vocab - 4) as usize) as u32
+                })
+                .collect();
+            let mut prompt = vec![aigc_infer::special::BOS];
+            for _ in 0..4 + rng.gen_range(0, 4) {
+                prompt.extend_from_slice(&motif);
+            }
+            prompt.push(aigc_infer::special::SEP);
+            EngineInput { request_id: id, prompt, max_new_tokens: max_new }
+        })
+        .collect();
+    struct Arm {
+        mode: &'static str,
+        speculate: usize,
+        tps: f64,
+        tokens: usize,
+        dispatches: u64,
+        drafted: u64,
+        accepted: u64,
+        saved: u64,
+        streams: Vec<Vec<u32>>,
+    }
+    let mut arms: Vec<Arm> = Vec::new();
+    for speculate in [4usize, 0] {
+        let engine = build_with_kv(
+            EngineKind::FtPruned,
+            backend.clone(),
+            GenConfig {
+                max_new_tokens: max_new,
+                use_multi_step: false,
+                speculate,
+                ..GenConfig::default()
+            },
+            KvConfig::default(),
+        )
+        .expect("paged engine");
+        let mut best = f64::INFINITY;
+        let mut tokens = 0usize;
+        let mut streams: Vec<Vec<u32>> = Vec::new();
+        let mut dispatches = 0u64;
+        let mut drafted = 0u64;
+        let mut accepted = 0u64;
+        let mut saved = 0u64;
+        for _ in 0..5 {
+            let exec0 = backend.stats().executions;
+            let t = Instant::now();
+            let mut sampler = Sampler::greedy();
+            let mut session =
+                engine.start(&inputs).expect("speculation session");
+            let mut outs: Vec<Option<Vec<u32>>> =
+                vec![None; inputs.len()];
+            let mut guard = 0usize;
+            loop {
+                for f in session.take_finished() {
+                    outs[f.seq] = Some(f.output.generated);
+                }
+                if session.active() == 0 {
+                    break;
+                }
+                session.step(&mut sampler).expect("speculation step");
+                guard += 1;
+                assert!(guard < 10_000, "speculation bench stalled");
+            }
+            let secs = t.elapsed().as_secs_f64();
+            dispatches =
+                (backend.stats().executions - exec0) as u64;
+            let s = session.spec_stats().unwrap_or_default();
+            drafted = s.drafted;
+            accepted = s.accepted;
+            saved = s.dispatches_saved;
+            streams = outs
+                .into_iter()
+                .map(|o| o.expect("request never finished"))
+                .collect();
+            tokens = streams.iter().map(|s| s.len()).sum();
+            best = best.min(secs);
+        }
+        let mode = if speculate > 0 { "speculate" } else { "plain" };
+        let tps = tokens as f64 / best.max(1e-9);
+        eprintln!(
+            "  speculation[{mode}]: {tokens} tokens in {dispatches} \
+             dispatches, {accepted}/{drafted} drafts accepted, \
+             {tps:.0} tok/s (best of 5)"
+        );
+        arms.push(Arm {
+            mode,
+            speculate,
+            tps,
+            tokens,
+            dispatches,
+            drafted,
+            accepted,
+            saved,
+            streams,
+        });
+    }
+    let identical = arms[0].streams == arms[1].streams;
+    arms.iter()
+        .map(|a| {
+            Value::obj(vec![
+                ("mode", Value::str(a.mode)),
+                ("speculate", Value::num(a.speculate as f64)),
+                ("tokens_per_sec", Value::num(a.tps)),
+                ("generated_tokens", Value::num(a.tokens as f64)),
+                ("backend_dispatches", Value::num(a.dispatches as f64)),
+                ("drafted", Value::num(a.drafted as f64)),
+                ("accepted", Value::num(a.accepted as f64)),
+                (
+                    "dispatches_saved",
+                    Value::num(a.saved as f64),
+                ),
+                (
+                    "acceptance_rate",
+                    Value::num(if a.drafted > 0 {
+                        a.accepted as f64 / a.drafted as f64
+                    } else {
+                        0.0
+                    }),
+                ),
+                (
+                    "streams_match",
+                    Value::num(identical as u64 as f64),
+                ),
+            ])
+        })
+        .collect()
 }
 
 fn run_one(
@@ -1172,14 +1352,22 @@ fn main() {
     ));
     let prune_reqs = prune_trace(n.max(16), max_new);
     let mut prune_ab = Vec::new();
-    for (stack, engine, dtype) in [
-        ("ft_full", EngineKind::FtFull, DType::F32),
-        ("ft_pruned", EngineKind::FtPruned, DType::F32),
+    for (stack, engine, dtype, speculate) in [
+        ("ft_full", EngineKind::FtFull, DType::F32, 0usize),
+        ("ft_pruned", EngineKind::FtPruned, DType::F32, 0),
         // the paper's full stack: fp16 x blocked kernels x pruning
-        ("paper_stack", EngineKind::FtPruned, DType::F16),
+        ("paper_stack", EngineKind::FtPruned, DType::F16, 0),
+        // schema 9: the full stack with self-speculative decoding on
+        // top (fp16 x blocked x pruned x speculate).  The base arm
+        // stays non-speculative, so the kept-prefix stream gate also
+        // certifies drafting changed nothing under the whole stack.
+        ("paper_stack_spec", EngineKind::FtPruned, DType::F16, 4),
     ] {
-        let base = run_prune_arm(engine, dtype, false, &prune_reqs, max_new);
-        let pruned = run_prune_arm(engine, dtype, true, &prune_reqs, max_new);
+        let base =
+            run_prune_arm(engine, dtype, false, 0, &prune_reqs, max_new);
+        let pruned = run_prune_arm(
+            engine, dtype, true, speculate, &prune_reqs, max_new,
+        );
         let variant = engine.variant();
         let orig_vocab = RefBackend::synthetic()
             .manifest()
@@ -1197,8 +1385,8 @@ fn main() {
             pruned.samples_per_sec,
         );
         prune_ab.push(prune_ab_row(
-            stack, variant, dtype, orig_vocab, dense_vocab, &base,
-            &pruned, matched, compared,
+            stack, variant, dtype, speculate, orig_vocab, dense_vocab,
+            &base, &pruned, matched, compared,
         ));
     }
     let pruning = Value::obj(vec![
@@ -1210,12 +1398,15 @@ fn main() {
         ("ab", Value::Array(prune_ab)),
     ]);
 
+    // --- self-speculative decoding A/B (schema 9) ----------------------
+    let speculation = run_speculation();
+
     let created = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let doc = Value::obj(vec![
-        ("schema", Value::num(8.0)),
+        ("schema", Value::num(9.0)),
         ("created_unix", Value::num(created as f64)),
         ("preset", Value::str("synthetic-reference-default")),
         ("requests", Value::num(n as f64)),
@@ -1229,13 +1420,14 @@ fn main() {
         ("kernels", kernels),
         ("prefix_cache", Value::Array(prefix_cache)),
         ("pruning", pruning),
+        ("speculation", Value::Array(speculation)),
     ]);
     std::fs::write(&out, doc.to_json()).expect("write snapshot");
 
     // --- self-validation (this is the CI smoke assertion) --------------
     let text = std::fs::read_to_string(&out).expect("re-read snapshot");
     let v = json::parse(&text).expect("snapshot must be valid JSON");
-    assert_eq!(v.get("schema").as_usize(), Some(8), "schema");
+    assert_eq!(v.get("schema").as_usize(), Some(9), "schema");
     let ladder = v.get("ladder").as_array().expect("ladder array");
     assert_eq!(ladder.len(), 8, "4 ladder rows x {{fp32, fp16}}");
     for dtype in ["fp32", "fp16"] {
@@ -1589,7 +1781,11 @@ fn main() {
         );
     }
     let ab = pr.get("ab").as_array().expect("pruning.ab");
-    assert_eq!(ab.len(), 3, "ft_full + ft_pruned + paper_stack arms");
+    assert_eq!(
+        ab.len(),
+        4,
+        "ft_full + ft_pruned + paper_stack + paper_stack_spec arms"
+    );
     for row in ab {
         let stack = row.get("stack").as_str().expect("stack");
         assert!(
@@ -1617,6 +1813,83 @@ fn main() {
         paper.get("dtype").as_str(),
         Some("fp16"),
         "the paper stack must run at fp16"
+    );
+    let paper_spec = ab
+        .iter()
+        .find(|r| r.get("stack").as_str() == Some("paper_stack_spec"))
+        .expect("paper_stack_spec row");
+    assert_eq!(
+        paper_spec.get("dtype").as_str(),
+        Some("fp16"),
+        "the speculative paper stack must run at fp16"
+    );
+    assert_eq!(
+        field(paper_spec, "speculate"),
+        4.0,
+        "the speculative paper stack must draft"
+    );
+
+    // THE schema-9 gates: on the templated trace, self-speculative
+    // decoding must (1) accept drafts (non-vacuity), (2) retire
+    // strictly fewer backend dispatches than the plain arm, (3) win
+    // strictly on tokens/sec, and (4) leave every token stream
+    // bitwise-identical.  Both arms pin fused multi-step OFF so the
+    // comparison isolates drafting from dispatch fusion.
+    let spec_rows =
+        v.get("speculation").as_array().expect("speculation array");
+    assert_eq!(spec_rows.len(), 2, "speculate + plain arms");
+    let spec_on = spec_rows
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("speculate"))
+        .expect("speculate row");
+    let spec_off = spec_rows
+        .iter()
+        .find(|r| r.get("mode").as_str() == Some("plain"))
+        .expect("plain row");
+    for row in [spec_on, spec_off] {
+        assert!(field(row, "generated_tokens") > 0.0);
+        assert!(field(row, "backend_dispatches") > 0.0);
+        assert_eq!(
+            field(row, "streams_match"),
+            1.0,
+            "speculative decoding changed a token stream: {}",
+            row.to_json()
+        );
+    }
+    assert!(
+        field(spec_on, "accepted") >= 1.0
+            && field(spec_on, "acceptance_rate") > 0.0,
+        "the templated trace produced no accepted drafts: {}",
+        spec_on.to_json()
+    );
+    assert!(
+        field(spec_on, "accepted") <= field(spec_on, "drafted"),
+        "accepted drafts exceed drafted tokens"
+    );
+    assert_eq!(
+        field(spec_on, "dispatches_saved"),
+        field(spec_on, "accepted"),
+        "every accepted draft token must skip exactly one dispatch"
+    );
+    assert_eq!(
+        field(spec_off, "drafted"),
+        0.0,
+        "the plain arm must not draft"
+    );
+    assert!(
+        field(spec_on, "backend_dispatches")
+            < field(spec_off, "backend_dispatches"),
+        "spec-on dispatches ({}) must be strictly below spec-off ({})",
+        field(spec_on, "backend_dispatches"),
+        field(spec_off, "backend_dispatches"),
+    );
+    assert!(
+        field(spec_on, "tokens_per_sec")
+            > field(spec_off, "tokens_per_sec"),
+        "speculative decoding ({:.0} tok/s) must beat plain greedy \
+         ({:.0} tok/s)",
+        field(spec_on, "tokens_per_sec"),
+        field(spec_off, "tokens_per_sec"),
     );
     println!("bench snapshot OK: {out}");
 }

@@ -13,6 +13,13 @@
 //! reports prefix-cache hits on the wire and that both runs produce
 //! bitwise-identical token streams.  CI runs exactly this.
 //!
+//! With `--speculation` it runs the self-speculative decoding smoke:
+//! a repetitive templated trace served twice — `--speculate 4` vs
+//! `--no-speculate` — asserting the speculative run reports accepted
+//! drafts on the wire (`spec_accepted`), the plain run omits the
+//! counter, and both runs stream bitwise-identical tokens.  CI runs
+//! exactly this too.
+//!
 //! Also prints the training loss curve recorded by `make artifacts`
 //! (artifacts/train_loss.json), tying the served model back to its
 //! training run.  Results are recorded in EXPERIMENTS.md §E2E.
@@ -109,9 +116,97 @@ fn cache_reuse() -> aigc_infer::Result<()> {
     Ok(())
 }
 
+/// The `--speculation` smoke: repetitive templated prompts (a short
+/// word motif repeated many times, so the trailing n-gram always has
+/// an earlier occurrence to extend) through the embedded server with
+/// self-speculative decoding on (`--speculate 4`) vs off
+/// (`--no-speculate`).  The speculative arm must report accepted
+/// drafts on the wire; the plain arm must omit the counter; both arms
+/// must stream identical tokens.
+fn speculation_smoke() -> aigc_infer::Result<()> {
+    const N: usize = 12;
+    const MAX_NEW: usize = 12;
+    let mut rng = Rng::seed_from_u64(0x59EC);
+    let texts: Vec<String> = (0..N)
+        .map(|_| {
+            let period = 1 + rng.gen_range(0, 3);
+            let motif: Vec<String> = (0..period)
+                .map(|_| render_rank(rng.gen_range(0, 40)))
+                .collect();
+            let reps = 4 + rng.gen_range(0, 4);
+            let mut words = Vec::with_capacity(period * reps);
+            for _ in 0..reps {
+                words.extend(motif.iter().cloned());
+            }
+            words.join(" ")
+        })
+        .collect();
+
+    println!("## Speculation smoke: {N} repetitive requests, A/B");
+    let mut arm_streams: Vec<Vec<Vec<u32>>> = Vec::new();
+    for speculate in [4usize, 0] {
+        let server = Server::builder()
+            .engine(EngineKind::FtPruned)
+            .max_new_tokens(MAX_NEW)
+            .speculate(speculate)
+            .precompile(true)
+            .start()?;
+        let pending: Vec<_> = texts
+            .iter()
+            .map(|t| server.submit(t.clone(), MAX_NEW).expect("submit"))
+            .collect();
+        let mut outs = Vec::with_capacity(N);
+        let mut accepted = 0u64;
+        for stream in pending {
+            let resp = stream.wait().expect("terminal event");
+            assert!(
+                resp.error.is_none(),
+                "speculation request failed: {resp:?}"
+            );
+            match (speculate > 0, resp.spec_accepted) {
+                // session-cumulative counter: the max over replies is
+                // the busiest session's total
+                (true, Some(a)) => accepted = accepted.max(a),
+                (true, None) => panic!(
+                    "speculative replies must carry spec_accepted: \
+                     {resp:?}"
+                ),
+                (false, a) => assert!(
+                    a.is_none(),
+                    "plain replies must omit spec_accepted: {resp:?}"
+                ),
+            }
+            outs.push(resp.summary_ids);
+        }
+        drop(server);
+        let mode = if speculate > 0 { "speculate" } else { "plain" };
+        println!(
+            "   [{mode}] {} requests served, {accepted} draft \
+             token(s) accepted",
+            outs.len()
+        );
+        if speculate > 0 {
+            assert!(
+                accepted > 0,
+                "repetitive trace produced no accepted drafts"
+            );
+        }
+        arm_streams.push(outs);
+    }
+    assert_eq!(
+        arm_streams[0], arm_streams[1],
+        "speculative decoding changed a token stream"
+    );
+    println!("   streams identical across arms: OK");
+    Ok(())
+}
+
 fn main() -> aigc_infer::Result<()> {
     if std::env::args().any(|a| a == "--cache-reuse") {
         return cache_reuse();
+    }
+    if std::env::args().any(|a| a == "--speculation") {
+        return speculation_smoke();
     }
     let n: usize = std::env::args()
         .nth(1)

@@ -100,6 +100,107 @@ fn main() {
         }));
     }
 
+    // --- speculative verification (fused vs sequential dispatches) -------
+    // paged_verify scores a k-token draft in ONE dispatch; the A/B arm
+    // feeds the identical token chain through k+1 paged_decode calls.
+    // The delta is the per-dispatch overhead (scratch fit, table checks,
+    // embedding walk setup) that fused verification amortizes.
+    {
+        use aigc_infer::runtime::{
+            Backend, PagedDecodeRow, PagedPrefillRow, RefBackend,
+        };
+        let b = RefBackend::synthetic();
+        let lanes = 4usize;
+        let k = 4usize; // draft length
+        let block_size = 16usize;
+        let mut prompt = vec![aigc_infer::special::BOS as i32];
+        for _ in 0..6 {
+            prompt.extend_from_slice(&[5, 9]);
+        }
+        prompt.push(aigc_infer::special::SEP as i32);
+        let blocks_per =
+            (prompt.len() + k + 1).div_ceil(block_size).max(1);
+        let (pk, pv) = b
+            .paged_kv_alloc("full", lanes * blocks_per, block_size)
+            .unwrap();
+        let tables: Vec<Vec<u32>> = (0..lanes)
+            .map(|l| {
+                ((l * blocks_per) as u32..((l + 1) * blocks_per) as u32)
+                    .collect()
+            })
+            .collect();
+        let prefill_rows: Vec<PagedPrefillRow> = tables
+            .iter()
+            .map(|t| PagedPrefillRow {
+                tokens: prompt.clone(),
+                start: 0,
+                blocks: t.clone(),
+            })
+            .collect();
+        let (logits, pk, pv) =
+            b.paged_prefill("full", pk, pv, &prefill_rows).unwrap();
+        let vocab = logits.len() / lanes;
+        let first: Vec<i32> = (0..lanes)
+            .map(|l| {
+                logits[l * vocab..(l + 1) * vocab]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect();
+        let at = prompt.len() as i32;
+        let verify_rows: Vec<PagedDecodeRow> = (0..lanes)
+            .map(|l| PagedDecodeRow {
+                token: first[l],
+                position: at,
+                blocks: tables[l].clone(),
+            })
+            .collect();
+        let drafts: Vec<Vec<i32>> = vec![vec![5, 9, 13, 7]; lanes];
+        let label =
+            format!("spec verify: {lanes} lanes, k={k}, 1 fused dispatch");
+        samples.push(bench::time(&label, 2, 10, || {
+            let (outs, _, _) = b
+                .paged_verify(
+                    "full",
+                    pk.clone(),
+                    pv.clone(),
+                    &verify_rows,
+                    &drafts,
+                )
+                .unwrap();
+            std::hint::black_box(outs[0]);
+        }));
+        let label = format!(
+            "spec verify: {lanes} lanes, k={k}, {} sequential dispatches",
+            k + 1
+        );
+        samples.push(bench::time(&label, 2, 10, || {
+            let mut kh = pk.clone();
+            let mut vh = pv.clone();
+            for step in 0..=k {
+                let rows: Vec<PagedDecodeRow> = (0..lanes)
+                    .map(|l| PagedDecodeRow {
+                        token: if step == 0 {
+                            first[l]
+                        } else {
+                            drafts[l][step - 1]
+                        },
+                        position: at + step as i32,
+                        blocks: tables[l].clone(),
+                    })
+                    .collect();
+                let (l, k2, v2) =
+                    b.paged_decode("full", kh, vh, &rows).unwrap();
+                kh = k2;
+                vh = v2;
+                std::hint::black_box(l[0]);
+            }
+        }));
+    }
+
     // --- batcher ---------------------------------------------------------
     let policy = BatchPolicy {
         max_batch: 8,

@@ -244,11 +244,26 @@ pub struct GenConfig {
     /// either way — chunking changes *when* prompt positions run, not
     /// what they compute.
     pub prefill_chunk: usize,
+    /// Self-speculative decoding on the paged path (`--speculate <k>`
+    /// / `--no-speculate`): draft up to this many continuation tokens
+    /// per lane per step by prompt lookup (the lane's own repeated
+    /// context, no second model) and verify them in one fused backend
+    /// dispatch, accepting the longest agreeing prefix plus the
+    /// verifier's correction token.  0 (the default) = off.
+    /// Greedy-only: top-k steps silently fall back to per-step
+    /// dispatch.  Accepted-by-argmax-equality, so speculative streams
+    /// are bitwise-identical to plain greedy.
+    pub speculate: usize,
 }
 
 impl Default for GenConfig {
     fn default() -> Self {
-        Self { max_new_tokens: 16, use_multi_step: true, prefill_chunk: 0 }
+        Self {
+            max_new_tokens: 16,
+            use_multi_step: true,
+            prefill_chunk: 0,
+            speculate: 0,
+        }
     }
 }
 
@@ -411,6 +426,9 @@ impl ServingConfig {
             if let Some(n) = g.get("prefill_chunk").as_usize() {
                 cfg.gen.prefill_chunk = n;
             }
+            if let Some(n) = g.get("speculate").as_usize() {
+                cfg.gen.speculate = n;
+            }
         }
         let kv = v.get("kv");
         if !kv.is_null() {
@@ -513,6 +531,7 @@ impl ServingConfig {
                         "prefill_chunk",
                         Value::num(self.gen.prefill_chunk as f64),
                     ),
+                    ("speculate", Value::num(self.gen.speculate as f64)),
                 ]),
             ),
             (
@@ -723,6 +742,22 @@ mod tests {
         .unwrap();
         assert_eq!(c.gen.prefill_chunk, 8);
         assert_eq!(c.gen.max_new_tokens, 16, "other gen keys stay default");
+    }
+
+    #[test]
+    fn speculate_defaults_and_roundtrips() {
+        let c = ServingConfig::default();
+        assert_eq!(c.gen.speculate, 0, "speculation is off by default");
+        let mut c = ServingConfig::default();
+        c.gen.speculate = 4;
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.gen.speculate, 4);
+        let c =
+            ServingConfig::from_json(r#"{"gen": {"speculate": 6}}"#)
+                .unwrap();
+        assert_eq!(c.gen.speculate, 6);
+        assert_eq!(c.gen.prefill_chunk, 0, "other gen keys stay default");
+        c.validate().unwrap();
     }
 
     #[test]

@@ -92,7 +92,7 @@ use super::request::{PreparedRequest, Priority};
 use crate::config::ServingConfig;
 use crate::engine::{
     build_with_kv as build_engine, sampler_for_worker, DecodeSession,
-    Engine, EngineInput, FinishReason,
+    Engine, EngineInput, FinishReason, SpecStats,
 };
 use crate::metrics::{Histogram, Throughput};
 use crate::runtime::kv::KvStats;
@@ -121,6 +121,10 @@ pub enum PoolEvent {
         /// request retired (None when prefix sharing is off or the
         /// cache discipline is contiguous).
         prefix: Option<PrefixStats>,
+        /// Session-cumulative speculative-decoding counters observed
+        /// as the request retired (None when speculation is off or
+        /// the session shape doesn't support it).
+        spec: Option<SpecStats>,
         worker: usize,
     },
     /// Terminal failure: engine error, cancellation, or deadline.
@@ -193,6 +197,13 @@ pub struct WorkerReport {
     /// the saved-work counter (`admission_prefill_tokens` shrinks by
     /// exactly this much relative to a no-sharing run).
     pub prefix_tokens_reused: u64,
+    /// Draft tokens the speculative decoder proposed for verification.
+    pub spec_drafted: u64,
+    /// Draft tokens verified-and-accepted (each one a token emitted
+    /// without its own decode dispatch).
+    pub spec_accepted: u64,
+    /// Decode dispatches the accepted drafts made unnecessary.
+    pub spec_dispatches_saved: u64,
 }
 
 impl WorkerReport {
@@ -220,6 +231,9 @@ impl WorkerReport {
             prefix_lookups: 0,
             prefix_hits: 0,
             prefix_tokens_reused: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_dispatches_saved: 0,
         }
     }
 }
@@ -332,6 +346,18 @@ impl PoolReport {
         let mut s = RuntimeStats::default();
         for w in &self.workers {
             s.merge(&w.runtime_stats);
+        }
+        s
+    }
+
+    /// Speculative-decoding counters merged across workers (all zero
+    /// when speculation is off).
+    pub fn spec_metrics(&self) -> SpecStats {
+        let mut s = SpecStats::default();
+        for w in &self.workers {
+            s.drafted += w.spec_drafted;
+            s.accepted += w.spec_accepted;
+            s.dispatches_saved += w.spec_dispatches_saved;
         }
         s
     }
@@ -634,6 +660,7 @@ fn drain_finished(
     // pool looked like when capacity came back
     let kv = session.kv_stats();
     let prefix = session.prefix_stats();
+    let spec = session.spec_stats();
     for fin in session.take_finished() {
         let id = fin.output.request_id;
         let Some(m) = meta.remove(&id) else { continue };
@@ -669,6 +696,7 @@ fn drain_finished(
                     ttft,
                     kv,
                     prefix,
+                    spec,
                     worker,
                 })
                 .is_ok()
@@ -891,6 +919,10 @@ fn worker_main(
         report.prefix_lookups += session_prefix.lookups;
         report.prefix_hits += session_prefix.hits;
         report.prefix_tokens_reused += session_prefix.tokens_reused;
+        // speculation counters accrue inside step(); track the
+        // session-cumulative value and fold deltas like the prefill
+        // counter (zero at the seed — nothing has decoded yet)
+        let mut session_spec = session.spec_stats().unwrap_or_default();
         if let Some(st) = session.kv_stats() {
             report.kv_total_blocks =
                 report.kv_total_blocks.max(st.total_blocks as u64);
@@ -968,6 +1000,16 @@ fn worker_main(
             report.admission_prefill_tokens +=
                 pft.saturating_sub(session_prefill);
             session_prefill = pft;
+            if let Some(s) = session.spec_stats() {
+                report.spec_drafted +=
+                    s.drafted.saturating_sub(session_spec.drafted);
+                report.spec_accepted +=
+                    s.accepted.saturating_sub(session_spec.accepted);
+                report.spec_dispatches_saved += s
+                    .dispatches_saved
+                    .saturating_sub(session_spec.dispatches_saved);
+                session_spec = s;
+            }
             let now = Instant::now();
             for ev in events {
                 if ev.tokens.is_empty() {
@@ -2002,6 +2044,138 @@ mod tests {
                     generated,
                     &solo_noshare(stem_prompt(request.id), max_new),
                     "request {} diverged across share/evict/resume",
+                    request.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn speculation_composes_with_prefix_sharing() {
+        // Speculative decode under prefix sharing: a second wave
+        // adopts the first wave's indexed stem blocks while every row
+        // drafts + verifies.  Streams must equal solo no-sharing
+        // no-speculation runs, and drafts must ACTUALLY be accepted —
+        // a vacuous pass would hide a broken drafter.
+        let mut cfg = small_cfg(1);
+        cfg.gen.max_new_tokens = 32;
+        cfg.gen.speculate = 4;
+        cfg.kv.block_size = 4;
+        let (out_tx, out_rx) = mpsc::sync_channel(4096);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let mut wave1 = Batch { requests: Vec::new(), seq_bucket: 32 };
+        for id in 0..2u64 {
+            wave1
+                .requests
+                .push(PreparedRequest::new(id, stem_prompt(id), 32));
+        }
+        input.send(wave1).unwrap();
+        // wait for a token so wave 2 can only hit the prefix index of
+        // a running session (the composition under test)
+        let mut events: Vec<PoolEvent> = Vec::new();
+        while !events
+            .iter()
+            .any(|e| matches!(e, PoolEvent::Tokens { .. }))
+        {
+            events.push(out_rx.recv().expect("pool died before streaming"));
+        }
+        let mut wave2 = Batch { requests: Vec::new(), seq_bucket: 32 };
+        for id in 2..4u64 {
+            wave2
+                .requests
+                .push(PreparedRequest::new(id, stem_prompt(id), 8));
+        }
+        input.send(wave2).unwrap();
+        drop(input);
+        let report = pool.join();
+        events.extend(out_rx.try_iter());
+        assert_eq!(finished_ids(&events), vec![0, 1, 2, 3]);
+        assert!(
+            report.kv_metrics().prefix_hits >= 1,
+            "shared-stem wave produced no prefix hit"
+        );
+        let spec = report.spec_metrics();
+        assert!(spec.drafted > 0, "no drafts proposed (vacuous test)");
+        assert!(spec.accepted > 0, "no drafts accepted (vacuous test)");
+        assert!(
+            events.iter().any(|e| matches!(
+                e,
+                PoolEvent::Finished { spec: Some(s), .. } if s.drafted > 0
+            )),
+            "Finished replies must carry the session's spec counters"
+        );
+        for ev in &events {
+            if let PoolEvent::Finished { request, generated, .. } = ev {
+                let max_new = if request.id < 2 { 32 } else { 8 };
+                assert_eq!(
+                    generated,
+                    &solo_noshare(stem_prompt(request.id), max_new),
+                    "request {} diverged under speculation x sharing",
+                    request.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn speculation_composes_with_preemption_resume() {
+        // An Interactive probe preempts a speculating Batch hog; the
+        // evicted hog resumes via a fresh admission prefill (its
+        // generated tokens folded into the prompt — MORE drafter
+        // context) and keeps speculating.  Every stream must equal a
+        // solo no-speculation run, with real acceptance along the way.
+        let mut cfg = small_cfg(1);
+        cfg.gen.max_new_tokens = 64;
+        cfg.gen.speculate = 4;
+        cfg.kv.block_size = 4;
+        cfg.kv.blocks = 44; // 2 hogs x ceil((22+64)/4)=22 -> pool full
+        cfg.kv.prefix_share = false; // isolate the preemption axis
+        let (out_tx, out_rx) = mpsc::sync_channel(4096);
+        let pool = InferencePool::start(&cfg, out_tx).unwrap();
+        let input = pool.input();
+        let mut hogs = Batch { requests: Vec::new(), seq_bucket: 32 };
+        for id in 1..3u64 {
+            let mut r = PreparedRequest::new(id, stem_prompt(id), 64);
+            r.priority = Priority::Batch;
+            hogs.requests.push(r);
+        }
+        input.send(hogs).unwrap();
+        // wait until the hogs stream, so the probe can only enter
+        // through between-step admission (and thus preemption)
+        let mut events: Vec<PoolEvent> = Vec::new();
+        while !events
+            .iter()
+            .any(|e| matches!(e, PoolEvent::Tokens { .. }))
+        {
+            events.push(out_rx.recv().expect("pool died before streaming"));
+        }
+        let probe = Batch {
+            requests: vec![PreparedRequest::new(3, stem_prompt(3), 8)],
+            seq_bucket: 32,
+        };
+        input.send(probe).unwrap();
+        drop(input);
+        let report = pool.join();
+        events.extend(out_rx.try_iter());
+        assert_eq!(finished_ids(&events), vec![1, 2, 3]);
+        assert!(
+            report.kv_metrics().preemptions >= 1,
+            "full pool + interactive arrival must preempt"
+        );
+        let spec = report.spec_metrics();
+        assert!(spec.accepted > 0, "no drafts accepted (vacuous test)");
+        assert_eq!(
+            spec.accepted, spec.dispatches_saved,
+            "every accepted draft is exactly one saved dispatch"
+        );
+        for ev in &events {
+            if let PoolEvent::Finished { request, generated, .. } = ev {
+                let max_new = if request.id == 3 { 8 } else { 64 };
+                assert_eq!(
+                    generated,
+                    &solo_noshare(stem_prompt(request.id), max_new),
+                    "request {} diverged under speculation x preemption",
                     request.id
                 );
             }

@@ -17,7 +17,9 @@ pub use request::{Priority, PreparedRequest, ServingResponse, StageTimes};
 
 use std::time::{Duration, Instant};
 
-use crate::engine::{DecodeSession, Engine, EngineInput, EngineOutput, Sampler};
+use crate::engine::{
+    DecodeSession, Engine, EngineInput, EngineOutput, Sampler, SpecStats,
+};
 use crate::runtime::kv::KvStats;
 use crate::runtime::prefix::PrefixStats;
 use crate::{Error, Result};
@@ -69,6 +71,9 @@ pub struct BatchSessionStats {
     /// Prefix-cache counters at session end (None = sharing off or
     /// contiguous caches).
     pub prefix: Option<PrefixStats>,
+    /// Speculative-decoding counters at session end (None = speculation
+    /// off, or the session shape doesn't support it).
+    pub spec: Option<SpecStats>,
 }
 
 /// Like [`run_batch`], but drives the batch through the step API so
@@ -92,7 +97,12 @@ pub fn run_batch_stepped_stats(
     if batch.requests.is_empty() {
         return Ok((
             vec![],
-            BatchSessionStats { prefill_tokens: 0, kv: None, prefix: None },
+            BatchSessionStats {
+                prefill_tokens: 0,
+                kv: None,
+                prefix: None,
+                spec: None,
+            },
         ));
     }
     let inputs: Vec<EngineInput> =
@@ -130,6 +140,7 @@ pub fn run_batch_stepped_stats(
         prefill_tokens: session.prefill_tokens(),
         kv,
         prefix: session.prefix_stats(),
+        spec: session.spec_stats(),
     };
     let outs: Result<Vec<SteppedOutput>> = batch
         .requests

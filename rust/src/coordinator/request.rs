@@ -179,6 +179,12 @@ pub struct ServingResponse {
     /// the wire (`pruned_vocab` / `full_vocab`); None when pruning is
     /// off or the request failed.
     pub pruned_vocab: Option<(u64, u64)>,
+    /// Draft tokens the speculative decoder verified-and-accepted on
+    /// the way to this reply — each one is a decode dispatch the engine
+    /// did not pay for.  Echoed on the wire (`spec_accepted`); None
+    /// when speculation is off (`--speculate 0`) or the request failed,
+    /// so clients can tell "off" apart from "on but nothing accepted".
+    pub spec_accepted: Option<u64>,
 }
 
 impl ServingResponse {
@@ -205,6 +211,7 @@ impl ServingResponse {
             preemptions: 0,
             prefix: None,
             pruned_vocab: None,
+            spec_accepted: None,
         }
     }
 }

@@ -63,6 +63,10 @@ pub struct FtEngine {
     paged: Option<(usize, usize)>,
     /// Chunked-prefill budget for paged sessions (0 = monolithic).
     prefill_chunk: usize,
+    /// Self-speculative decoding for paged sessions
+    /// (`GenConfig::speculate`): max drafted tokens per lane per step,
+    /// 0 = off.  Greedy-only; the contiguous path ignores it.
+    speculate: usize,
     /// Prefix sharing for paged sessions (`KvConfig::prefix_share`):
     /// admissions adopt already-filled same-prefix blocks instead of
     /// re-prefilling them.  Irrelevant on the contiguous path.
@@ -139,6 +143,7 @@ impl FtEngine {
             multi_steps,
             paged,
             prefill_chunk: gen.prefill_chunk,
+            speculate: gen.speculate,
             prefix_share: kv.prefix_share,
         })
     }
@@ -183,6 +188,7 @@ impl Engine for FtEngine {
                 block_size,
                 self.prefill_chunk,
                 multi_steps,
+                self.speculate,
                 self.prefix_share,
                 batch,
             );

@@ -41,10 +41,12 @@ mod ft;
 mod paged;
 mod sampling;
 mod session;
+pub mod spec;
 
 pub use baseline::BaselineEngine;
 pub use ft::FtEngine;
 pub use sampling::Sampler;
+pub use spec::SpecStats;
 
 use crate::config::{EngineKind, GenConfig, KvConfig, Sampling};
 use crate::runtime::kv::KvStats;
@@ -181,6 +183,15 @@ pub trait DecodeSession: Send {
     /// sessions started under `--no-prefix-share`, so a zero hit rate
     /// is distinguishable from "sharing was off".
     fn prefix_stats(&self) -> Option<PrefixStats> {
+        None
+    }
+
+    /// Speculative-decoding counters (drafted / accepted / dispatches
+    /// saved), when this session runs the paged path with
+    /// `--speculate` enabled.  None elsewhere — including paged
+    /// sessions started with `speculate == 0`, so zero acceptance is
+    /// distinguishable from "speculation was off".
+    fn spec_stats(&self) -> Option<SpecStats> {
         None
     }
 }

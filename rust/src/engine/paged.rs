@@ -56,10 +56,26 @@
 //! reference backend, so greedy streams are identical to the
 //! contiguous path and independent of admission timing
 //! (property-tested for fp32 and fp16).
+//!
+//! With `--speculate k` (greedy only), a decoding lane whose context
+//! tail repeats earlier context drafts up to `k` continuation tokens
+//! by prompt lookup (`engine::spec`) and verifies them in ONE fused
+//! [`crate::runtime::Backend::paged_verify`] dispatch: the longest
+//! agreeing prefix plus the verifier's correction/bonus token is
+//! accepted — 1 to `k + 1` real tokens per dispatch — and rejected
+//! positions roll back virtually (the block reservation keeps their
+//! slots owned, so the next dispatch just overwrites them).
+//! Acceptance is argmax equality against the same forward math, so
+//! speculative streams are bitwise-identical to plain greedy
+//! (property-tested across dtypes, kernels, block geometries, chunked
+//! prefill, prefix sharing, and preemption).  Lanes with no draft —
+//! and every step under top-k sampling — silently fall back to the
+//! fused / per-step path above.
 
 use std::collections::HashSet;
 
 use super::session::{drain_finished, Row};
+use super::spec::{self, SpecStats};
 use super::{
     DecodeSession, EngineInput, FinishReason, FinishedRequest, Sampler,
     TokenEvent,
@@ -110,6 +126,13 @@ pub(super) struct PagedFtSession {
     /// Fused greedy decode: run up to this many decode+argmax steps per
     /// backend dispatch (see module docs).  None = one step per call.
     multi_steps: Option<usize>,
+    /// Self-speculative decoding (`--speculate`): max draft tokens per
+    /// lane per step, 0 = off.  Greedy-only — top-k steps silently
+    /// take the plain path (acceptance is argmax equality, which has
+    /// no meaning under stochastic sampling).
+    speculate: usize,
+    /// Speculation counters (drafted / accepted / dispatches saved).
+    spec: SpecStats,
     /// Radix index of already-filled blocks (None = sharing disabled,
     /// `--no-prefix-share`): admissions adopt matched blocks instead of
     /// re-prefilling them, retirements advertise theirs (module docs).
@@ -129,6 +152,7 @@ impl PagedFtSession {
         block_size: usize,
         prefill_chunk: usize,
         multi_steps: Option<usize>,
+        speculate: usize,
         prefix_share: bool,
         batch: &[EngineInput],
     ) -> Result<Box<dyn DecodeSession>> {
@@ -152,6 +176,8 @@ impl PagedFtSession {
             prefill_chunk,
             prefilled: Vec::new(),
             multi_steps: multi_steps.filter(|&n| n > 1),
+            speculate,
+            spec: SpecStats::default(),
             index: prefix_share.then(|| PrefixIndex::new(block_size)),
             prefix: PrefixStats::default(),
         };
@@ -325,6 +351,24 @@ impl PagedFtSession {
                 self.prefilled.push(pre);
             }
         }
+    }
+
+    /// Build one lane's decode-dispatch row — shared by the plain,
+    /// fused, and speculative-verify paths of Phase B.
+    fn decode_row(&self, lane: usize) -> Result<PagedDecodeRow> {
+        let row = &self.rows[lane];
+        let table = self.tables[lane].as_ref().ok_or_else(|| {
+            Error::Session(
+                "paged decode row lost its block table \
+                 (poisoned session); resubmit the request"
+                    .into(),
+            )
+        })?;
+        Ok(PagedDecodeRow {
+            token: self.last_tok[lane],
+            position: self.positions[lane] + row.generated.len() as i32 - 1,
+            blocks: table.blocks().to_vec(),
+        })
     }
 
     /// Sample one row's next token from `logits` and record the event —
@@ -649,67 +693,82 @@ impl DecodeSession for PagedFtSession {
                 None => decode_lanes.push(lane),
             }
         }
-        // Phase B: one paged decode dispatch over everyone else —
-        // fused to multiple greedy steps when eligible.
+        // Phase B: decode dispatches over everyone else.  With
+        // speculation on (greedy only), every lane whose context tail
+        // repeats earlier context drafts a continuation, and those
+        // lanes share ONE fused verify dispatch that scores all
+        // drafted positions at once (`engine::spec` docs); the rest —
+        // and everything under top-k or `--no-speculate` — takes the
+        // existing fused / per-step path.  Acceptance is argmax
+        // equality against the SAME forward math plain decode runs, so
+        // the emitted stream is bitwise-identical either way.
         if !decode_lanes.is_empty() {
-            let mut decode_rows = Vec::with_capacity(decode_lanes.len());
-            for &lane in &decode_lanes {
-                let row = &self.rows[lane];
-                let table =
-                    self.tables[lane].as_ref().ok_or_else(|| {
-                        Error::Session(
-                            "paged decode row lost its block table \
-                             (poisoned session); resubmit the request"
-                                .into(),
-                        )
-                    })?;
-                decode_rows.push(PagedDecodeRow {
-                    token: self.last_tok[lane],
-                    position: self.positions[lane]
-                        + row.generated.len() as i32
-                        - 1,
-                    blocks: table.blocks().to_vec(),
-                });
-            }
-            // Fused step count: capped at the smallest remaining budget
-            // among the decoding lanes, so every lane's KV writes stay
-            // inside its `prompt + max_new` block reservation (a lane
-            // that EOSes mid-fusion keeps decoding — same as the
-            // contiguous fused graph — and its extra tokens are
-            // discarded by the push loop below).
-            let fused = match (self.multi_steps, sampler.is_greedy()) {
-                (Some(n), true) => {
-                    let cap = decode_lanes
+            let mut verify_lanes: Vec<usize> = Vec::new();
+            let mut verify_drafts: Vec<Vec<u32>> = Vec::new();
+            let mut plain_lanes: Vec<usize> = Vec::new();
+            if self.speculate > 0 && sampler.is_greedy() {
+                for &lane in &decode_lanes {
+                    let row = &self.rows[lane];
+                    // the accepted prefix plus the correction token
+                    // must fit the remaining budget, so drafts cap one
+                    // below it — which also keeps every verify KV
+                    // write inside the `prompt + max_new` reservation
+                    let cap = self
+                        .speculate
+                        .min(row.remaining().saturating_sub(1));
+                    let ctx: Vec<u32> = row
+                        .prompt
                         .iter()
-                        .map(|&l| self.rows[l].remaining())
-                        .min()
-                        .unwrap_or(0);
-                    let steps = n.min(cap);
-                    (steps > 1).then_some(steps)
+                        .chain(row.generated.iter())
+                        .copied()
+                        .collect();
+                    match spec::draft(&ctx, cap) {
+                        Some(d) => {
+                            verify_lanes.push(lane);
+                            verify_drafts.push(d);
+                        }
+                        None => plain_lanes.push(lane),
+                    }
                 }
-                _ => None,
-            };
-            let (k, v) = self.take_caches()?;
-            if let Some(steps) = fused {
-                let (toks, k, v) = self.backend.paged_decode_multi(
+            } else {
+                plain_lanes = decode_lanes;
+            }
+            if !verify_lanes.is_empty() {
+                let mut rows = Vec::with_capacity(verify_lanes.len());
+                for &lane in &verify_lanes {
+                    rows.push(self.decode_row(lane)?);
+                }
+                let drafts: Vec<Vec<i32>> = verify_drafts
+                    .iter()
+                    .map(|d| d.iter().map(|&t| t as i32).collect())
+                    .collect();
+                let (k, v) = self.take_caches()?;
+                let (toks, k, v) = self.backend.paged_verify(
                     self.variant,
                     k,
                     v,
-                    &decode_rows,
-                    steps,
+                    &rows,
+                    &drafts,
                 )?;
                 self.k = Some(k);
                 self.v = Some(v);
-                if toks.len() != decode_lanes.len() * steps {
+                let expect: usize =
+                    verify_drafts.iter().map(|d| d.len() + 1).sum();
+                if toks.len() != expect {
                     return Err(Error::Backend(format!(
-                        "paged_decode_multi returned {} tokens for {} \
-                         rows of {steps} steps",
+                        "paged_verify returned {} tokens for {} rows \
+                         scoring {expect} drafted positions",
                         toks.len(),
-                        decode_lanes.len()
+                        verify_lanes.len()
                     )));
                 }
                 let max_seq = self.max_seq;
-                for (i, &lane) in decode_lanes.iter().enumerate() {
+                let mut off = 0usize;
+                for (i, &lane) in verify_lanes.iter().enumerate() {
+                    let draft = &verify_drafts[i];
+                    let outs = &toks[off..off + draft.len() + 1];
+                    off += draft.len() + 1;
+                    self.spec.drafted += draft.len() as u64;
                     let row = &mut self.rows[lane];
                     row.steps += 1;
                     let mut ev = TokenEvent {
@@ -717,46 +776,130 @@ impl DecodeSession for PagedFtSession {
                         tokens: Vec::new(),
                         finished: None,
                     };
-                    for step in 0..steps {
+                    // accept the drafted prefix the verifier agreed
+                    // with, then one more token: the first
+                    // disagreement (the correction plain decode would
+                    // have produced) or, after a fully-accepted draft,
+                    // the bonus token.  Outputs past a disagreement
+                    // were scored against rejected context — discarded
+                    // here; the rollback is virtual because the lane's
+                    // next dispatch overwrites those reserved slots.
+                    for (j, &t) in outs.iter().enumerate() {
                         if !row.active() {
                             break;
                         }
-                        let t = toks[i * steps + step] as u32;
+                        let t = t as u32;
                         if row.push(t, max_seq) {
                             self.last_tok[lane] = t as i32;
                             ev.tokens.push(t);
+                        }
+                        if j < draft.len() && t == draft[j] {
+                            self.spec.accepted += 1;
+                            self.spec.dispatches_saved += 1;
+                        } else {
+                            break;
                         }
                     }
                     ev.finished = row.finished;
                     events.push(ev);
                 }
-            } else {
-                let (logits, k, v) = self.backend.paged_decode(
-                    self.variant,
-                    k,
-                    v,
-                    &decode_rows,
-                )?;
-                self.k = Some(k);
-                self.v = Some(v);
-                if logits.len() != decode_lanes.len() * vsz {
-                    return Err(Error::Backend(format!(
-                        "paged_decode returned {} logit values for {} \
-                         rows of vocab {vsz}",
-                        logits.len(),
-                        decode_lanes.len()
-                    )));
+            }
+            if !plain_lanes.is_empty() {
+                let mut decode_rows =
+                    Vec::with_capacity(plain_lanes.len());
+                for &lane in &plain_lanes {
+                    decode_rows.push(self.decode_row(lane)?);
                 }
-                for (i, &lane) in decode_lanes.iter().enumerate() {
-                    // `logits` is a local buffer (not borrowed from
-                    // self), so each row samples its slice in place —
-                    // no per-step clone on the decode hot path
-                    self.consume(
-                        lane,
-                        &logits[i * vsz..(i + 1) * vsz],
-                        sampler,
-                        &mut events,
+                // Fused step count: capped at the smallest remaining
+                // budget among the decoding lanes, so every lane's KV
+                // writes stay inside its `prompt + max_new` block
+                // reservation (a lane that EOSes mid-fusion keeps
+                // decoding — same as the contiguous fused graph — and
+                // its extra tokens are discarded by the push loop
+                // below).
+                let fused = match (self.multi_steps, sampler.is_greedy())
+                {
+                    (Some(n), true) => {
+                        let cap = plain_lanes
+                            .iter()
+                            .map(|&l| self.rows[l].remaining())
+                            .min()
+                            .unwrap_or(0);
+                        let steps = n.min(cap);
+                        (steps > 1).then_some(steps)
+                    }
+                    _ => None,
+                };
+                let (k, v) = self.take_caches()?;
+                if let Some(steps) = fused {
+                    let (toks, k, v) = self.backend.paged_decode_multi(
+                        self.variant,
+                        k,
+                        v,
+                        &decode_rows,
+                        steps,
                     )?;
+                    self.k = Some(k);
+                    self.v = Some(v);
+                    if toks.len() != plain_lanes.len() * steps {
+                        return Err(Error::Backend(format!(
+                            "paged_decode_multi returned {} tokens for \
+                             {} rows of {steps} steps",
+                            toks.len(),
+                            plain_lanes.len()
+                        )));
+                    }
+                    let max_seq = self.max_seq;
+                    for (i, &lane) in plain_lanes.iter().enumerate() {
+                        let row = &mut self.rows[lane];
+                        row.steps += 1;
+                        let mut ev = TokenEvent {
+                            request_id: row.id,
+                            tokens: Vec::new(),
+                            finished: None,
+                        };
+                        for step in 0..steps {
+                            if !row.active() {
+                                break;
+                            }
+                            let t = toks[i * steps + step] as u32;
+                            if row.push(t, max_seq) {
+                                self.last_tok[lane] = t as i32;
+                                ev.tokens.push(t);
+                            }
+                        }
+                        ev.finished = row.finished;
+                        events.push(ev);
+                    }
+                } else {
+                    let (logits, k, v) = self.backend.paged_decode(
+                        self.variant,
+                        k,
+                        v,
+                        &decode_rows,
+                    )?;
+                    self.k = Some(k);
+                    self.v = Some(v);
+                    if logits.len() != plain_lanes.len() * vsz {
+                        return Err(Error::Backend(format!(
+                            "paged_decode returned {} logit values for \
+                             {} rows of vocab {vsz}",
+                            logits.len(),
+                            plain_lanes.len()
+                        )));
+                    }
+                    for (i, &lane) in plain_lanes.iter().enumerate() {
+                        // `logits` is a local buffer (not borrowed from
+                        // self), so each row samples its slice in
+                        // place — no per-step clone on the decode hot
+                        // path
+                        self.consume(
+                            lane,
+                            &logits[i * vsz..(i + 1) * vsz],
+                            sampler,
+                            &mut events,
+                        )?;
+                    }
                 }
             }
         }
@@ -801,5 +944,9 @@ impl DecodeSession for PagedFtSession {
 
     fn prefix_stats(&self) -> Option<PrefixStats> {
         self.index.as_ref().map(|_| self.prefix)
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        (self.speculate > 0).then_some(self.spec)
     }
 }

@@ -92,12 +92,24 @@ pub fn try_argmax(logits: &[f32]) -> Result<u32> {
 
 fn top_k_sample(logits: &[f32], k: usize, temperature: f32,
                 rng: &mut Rng) -> u32 {
-    let k = k.min(logits.len()).max(1);
-    // indices of the k largest logits (selection over a small k)
+    // indices of the k largest logits (selection over a small k).
+    // NaNs sink below every finite value AND cap k, so they can never
+    // occupy a selected slot: a PARTIALLY-NaN row is legal at this
+    // boundary (`try_argmax` only rejects all-NaN), and the old
+    // `partial_cmp().unwrap()` here was the one panic reachable from
+    // the decode hot path on such a row
+    let sane = logits.iter().filter(|v| !v.is_nan()).count();
+    let k = k.min(sane).max(1);
+    let key = |i: usize| {
+        let v = logits[i];
+        if v.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            v
+        }
+    };
     let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.select_nth_unstable_by(k - 1, |&a, &b| {
-        logits[b].partial_cmp(&logits[a]).unwrap()
-    });
+    idx.select_nth_unstable_by(k - 1, |&a, &b| key(b).total_cmp(&key(a)));
     let top = &idx[..k];
     let m = top
         .iter()
@@ -191,5 +203,19 @@ mod tests {
     fn top_k_1_is_greedy() {
         let mut s = Sampler::top_k(1, 1.0, 0);
         assert_eq!(s.sample(&[0.3, 0.9, 0.1]).unwrap(), 1);
+    }
+
+    #[test]
+    fn top_k_over_partial_nan_row_does_not_panic() {
+        // Regression: a row with SOME NaNs passes `try_argmax` (that is
+        // the contract — only empty/all-NaN is a backend fault), so
+        // top-k must sample it without panicking, and the NaNs must
+        // never win a slot over a finite logit.
+        let logits = vec![1.0, f32::NAN, 0.5, f32::NAN];
+        let mut s = Sampler::top_k(3, 1.0, 11);
+        for _ in 0..100 {
+            let t = s.sample(&logits).unwrap();
+            assert!(t == 0 || t == 2, "sampled NaN-logit token {t}");
+        }
     }
 }

@@ -1,0 +1,151 @@
+//! Self-speculative drafting: prompt-lookup / n-gram continuation
+//! proposals, no second model.
+//!
+//! The decode loop's residual cost after fusion (PR 7) is the
+//! one-dispatch-per-token structure itself.  Speculative decoding
+//! breaks it: propose `k` continuation tokens cheaply, score them all
+//! in ONE backend dispatch ([`crate::runtime::Backend::paged_verify`]),
+//! and accept the longest prefix the model agrees with plus the
+//! model's own correction token — at least one REAL token per
+//! dispatch, up to `k + 1`.
+//!
+//! Drafts here are free: [`draft`] matches the trailing n-gram of the
+//! lane's own `prompt ++ generated` context against its earlier
+//! occurrences (prompt-lookup decoding) and proposes the tokens that
+//! followed the most recent match.  Pure index comparisons — no model
+//! pass, no allocation beyond the returned proposal.  Templated and
+//! repetitive text (the paper's AIGC serving traces are full of it)
+//! accepts long; novel text rejects and costs one correction token,
+//! which plain decode would have paid a whole dispatch for anyway.
+//!
+//! Verification preserves the engine-wide identity discipline: the
+//! verifier runs the SAME forward math as plain decode at every
+//! drafted position and accepts by argmax equality, so the emitted
+//! stream is bitwise-identical to plain greedy decode (property-tested
+//! across dtypes, kernels, block geometries, chunked prefill, prefix
+//! sharing, and preemption).  Rejected positions are rolled back
+//! virtually: the session simply does not advance past them, and the
+//! block reservation (`prompt + max_new`) guarantees the next write
+//! lands back on the rejected slots.
+
+/// Longest trailing n-gram [`draft`] tries to match (it falls back to
+/// shorter ones, down to a single token, so a lane that loops on one
+/// token still drafts).
+pub const MAX_NGRAM: usize = 3;
+
+/// Speculative-decoding counters for one session / worker / run.
+///
+/// `drafted` counts proposed tokens, `accepted` the drafted tokens the
+/// verifier agreed with (the correction token is NOT counted — plain
+/// decode would have produced it too), and `dispatches_saved` the
+/// decode dispatches those acceptances avoided versus per-token
+/// dispatch (numerically equal to `accepted`; kept separate so the
+/// wire name stays meaningful if the accounting ever diverges).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft tokens proposed across all verify dispatches.
+    pub drafted: u64,
+    /// Draft tokens accepted by the verifier.
+    pub accepted: u64,
+    /// Decode dispatches avoided by accepted drafts.
+    pub dispatches_saved: u64,
+}
+
+impl SpecStats {
+    /// Accepted fraction of drafted tokens (0.0 when nothing drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Fold another counter set into this one (pool-level merge).
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.dispatches_saved += other.dispatches_saved;
+    }
+}
+
+/// Propose up to `max_k` continuation tokens for `context`
+/// (`prompt ++ generated`, trailing token = the lane's next decode
+/// input) by prompt lookup: find the most recent earlier occurrence of
+/// the trailing n-gram (longest n first, [`MAX_NGRAM`] down to 1) and
+/// propose the tokens that followed it.  Returns `None` when the
+/// context never repeats its tail or `max_k == 0`; otherwise the
+/// proposal is non-empty and at most `max_k` long.
+pub fn draft(context: &[u32], max_k: usize) -> Option<Vec<u32>> {
+    let len = context.len();
+    if max_k == 0 || len < 2 {
+        return None;
+    }
+    for n in (1..=MAX_NGRAM.min(len - 1)).rev() {
+        let pattern = &context[len - n..];
+        // most recent earlier occurrence; overlap with the trailing
+        // pattern itself is fine (a period-1 loop matches at len-n-1)
+        for start in (0..len - n).rev() {
+            if &context[start..start + n] == pattern {
+                let from = start + n;
+                let take = max_k.min(len - from);
+                return Some(context[from..from + take].to_vec());
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draft_proposes_continuation_of_most_recent_match() {
+        // trailing trigram [5,6,7] recurs; the most recent earlier
+        // occurrence is followed by [8,9]
+        let ctx = [1, 5, 6, 7, 8, 9, 5, 6, 7];
+        assert_eq!(draft(&ctx, 4), Some(vec![8, 9, 5, 6]));
+        assert_eq!(draft(&ctx, 2), Some(vec![8, 9]));
+        assert_eq!(draft(&ctx, 1), Some(vec![8]));
+    }
+
+    #[test]
+    fn draft_prefers_longest_ngram() {
+        // unigram [7] also matches at index 0, but the trigram match
+        // (index 2) wins and proposes what followed IT
+        let ctx = [7, 1, 5, 6, 7, 9, 5, 6, 7];
+        assert_eq!(draft(&ctx, 1), Some(vec![9]));
+    }
+
+    #[test]
+    fn draft_falls_back_to_single_token_loop() {
+        // a lane looping on one token drafts that loop
+        let ctx = [3, 4, 4];
+        assert_eq!(draft(&ctx, 3), Some(vec![4]));
+        let ctx = [9, 4, 4, 4];
+        assert_eq!(draft(&ctx, 3), Some(vec![4, 4]));
+    }
+
+    #[test]
+    fn draft_returns_none_without_repetition() {
+        assert_eq!(draft(&[1, 2, 3, 4], 4), None);
+        assert_eq!(draft(&[5], 4), None);
+        assert_eq!(draft(&[], 4), None);
+        // k = 0 disables drafting regardless of context
+        assert_eq!(draft(&[4, 4, 4], 0), None);
+    }
+
+    #[test]
+    fn spec_stats_rate_and_merge() {
+        let mut a = SpecStats { drafted: 8, accepted: 6, dispatches_saved: 6 };
+        assert!((a.acceptance_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(SpecStats::default().acceptance_rate(), 0.0);
+        let b = SpecStats { drafted: 2, accepted: 1, dispatches_saved: 1 };
+        a.merge(&b);
+        assert_eq!(
+            a,
+            SpecStats { drafted: 10, accepted: 7, dispatches_saved: 7 }
+        );
+    }
+}

@@ -46,6 +46,11 @@ fn usage() -> ! {
                  --prefill-chunk N (paged KV: spread each admission's\n\
                  prompt prefill over decode steps in N-token chunks,\n\
                  bounding per-step latency; default 0 = monolithic)\n\
+                 --speculate K (self-speculative decoding: draft up to\n\
+                 K tokens per step by n-gram lookup over the row's own\n\
+                 context, verify in ONE fused dispatch; greedy-only —\n\
+                 top-k sampling silently takes the plain path; default\n\
+                 0 = off)  --no-speculate (force it off, the A/B arm)\n\
                  --prune-vocab C (runtime vocab pruning: serve with the\n\
                  embedding/logit matrices sliced to a kept set covering\n\
                  fraction C of corpus token occurrences, e.g. 0.99)\n\
@@ -170,6 +175,16 @@ fn build_config(args: &Args) -> ServingConfig {
             eprintln!("--prefill-chunk expects an integer (0 = monolithic)");
             usage()
         });
+    }
+    if let Some(k) = args.get("speculate") {
+        cfg.gen.speculate = k.parse().unwrap_or_else(|_| {
+            eprintln!("--speculate expects an integer draft length (0 = off)");
+            usage()
+        });
+    }
+    if args.has("no-speculate") {
+        // explicit off (overrides --config), the A/B baseline arm
+        cfg.gen.speculate = 0;
     }
     if let Some(c) = args.get("prune-vocab") {
         let coverage: f64 = c.parse().unwrap_or_else(|_| {
@@ -344,6 +359,16 @@ fn cmd_run(args: &Args) {
                         s.kv.prefix_lookups,
                         s.kv.prefix_hit_rate() * 100.0,
                         s.kv.prefix_tokens_reused
+                    );
+                }
+                if let Some(sp) = &s.spec {
+                    println!(
+                        "speculation   {} accepted / {} drafted ({:.0}% \
+                         acceptance), {} decode dispatches saved",
+                        sp.accepted,
+                        sp.drafted,
+                        sp.acceptance_rate() * 100.0,
+                        sp.dispatches_saved
                     );
                 }
             } else {

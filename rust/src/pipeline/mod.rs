@@ -44,7 +44,7 @@ use crate::coordinator::{
     PoolEvent, PreparedRequest, Priority, ServingResponse,
 };
 use crate::data::Request;
-use crate::engine::{build_with_kv as build_engine, sampler_for};
+use crate::engine::{build_with_kv as build_engine, sampler_for, SpecStats};
 use crate::metrics::{Histogram, StageTimer};
 use crate::pruning::TokenRemap;
 use crate::runtime::{
@@ -130,6 +130,9 @@ pub struct RunSummary {
     pub step_latency: Histogram,
     /// Runtime vocab pruning the run executed with (None = off).
     pub prune: Option<PruneSummary>,
+    /// Speculative-decoding counters merged across sessions/workers
+    /// (None = speculation off or unsupported by the session shape).
+    pub spec: Option<SpecStats>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -149,6 +152,7 @@ fn summarize(
     kv: KvMetrics,
     step_latency: Histogram,
     prune: Option<PruneSummary>,
+    spec: Option<SpecStats>,
 ) -> RunSummary {
     let mut latency = Histogram::new();
     let mut ttft = Histogram::new();
@@ -198,6 +202,7 @@ fn summarize(
         kv,
         step_latency,
         prune,
+        spec,
     }
 }
 
@@ -350,6 +355,7 @@ pub fn postprocess(
         preemptions: req.preemptions,
         prefix: None,
         pruned_vocab: None,
+        spec_accepted: None,
     }
 }
 
@@ -407,6 +413,9 @@ pub fn run_sequential(
     let mut stages = StageTimer::default();
     let mut session_latency = Histogram::new();
     let mut kv = KvMetrics::default();
+    // None until some session reports speculation counters, so the
+    // summary distinguishes "off/unsupported" from zero acceptance
+    let mut spec: Option<SpecStats> = None;
     let mut responses = Vec::with_capacity(requests.len());
     let wall_start = Instant::now();
     // only compilation INSIDE the measured window counts against steady
@@ -457,6 +466,9 @@ pub fn run_sequential(
                     .kv_peak_blocks_in_use
                     .max(st.used_blocks() as u64);
             }
+            if let Some(s) = batch_stats.spec {
+                spec.get_or_insert_with(SpecStats::default).merge(&s);
+            }
 
             let t = Instant::now();
             for stepped in outs {
@@ -499,6 +511,7 @@ pub fn run_sequential(
         kv,
         Histogram::new(),
         prune.as_ref().map(PruneSummary::of),
+        spec,
     ))
 }
 
@@ -636,6 +649,7 @@ pub fn run_pipelined(
                         ttft,
                         kv,
                         prefix,
+                        spec,
                         ..
                     } => {
                         let t = Instant::now();
@@ -659,6 +673,7 @@ pub fn run_pipelined(
                         });
                         resp.prefix =
                             prefix.map(|p| (p.hits, p.tokens_reused));
+                        resp.spec_accepted = spec.map(|s| s.accepted);
                         responses.push(resp);
                         busy += t.elapsed();
                     }
@@ -726,6 +741,10 @@ pub fn run_pipelined(
         report.kv_metrics(),
         report.step_latency(),
         prune.as_ref().map(PruneSummary::of),
+        // worker reports carry merged counters but not on/off-ness;
+        // the config is the ground truth for whether drafting ran
+        (cfg.gen.speculate > 0 && cfg.kv.paged)
+            .then(|| report.spec_metrics()),
     ))
 }
 

@@ -324,6 +324,36 @@ pub trait Backend: Send + Sync {
         )))
     }
 
+    /// Score a speculative draft for each row in ONE fused pass — the
+    /// verification half of self-speculative decoding
+    /// (`engine::spec`).  For row `i`, consume `rows[i].token` at
+    /// `rows[i].position`, then each token of `drafts[i]` at the
+    /// following slots, taking the argmax after every input:
+    /// `drafts[i].len() + 1` output tokens per row, concatenated in
+    /// row order (rows may carry different draft lengths — the
+    /// flattening is offset-aware, not rectangular).  KV lands at
+    /// `position .. position + drafts[i].len()`, which the tables must
+    /// cover; rejected slots are simply overwritten by the caller's
+    /// next dispatch (virtual rollback).  Each output is
+    /// bitwise-identical to what a [`Backend::paged_decode`] + argmax
+    /// round trip fed the same accepted prefix would produce — the
+    /// invariant the engine's accept-by-equality loop relies on.
+    /// `drafts.len()` must equal `rows.len()`; empty drafts are legal
+    /// (that row degenerates to one decode step).
+    fn paged_verify(
+        &self,
+        _variant: &str,
+        _k: OpaqueTensor,
+        _v: OpaqueTensor,
+        _rows: &[PagedDecodeRow],
+        _drafts: &[Vec<i32>],
+    ) -> Result<(Vec<i32>, OpaqueTensor, OpaqueTensor)> {
+        Err(Error::Other(format!(
+            "backend '{}' has no paged KV support",
+            self.name()
+        )))
+    }
+
     /// Copy every K/V slot of pool block `src` into pool block `dst`
     /// (all layers/heads) — the storage half of copy-on-write prefix
     /// adoption: the session detaches a shared block via

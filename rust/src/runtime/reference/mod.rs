@@ -1342,6 +1342,99 @@ impl Backend for RefBackend {
         Ok((toks, OpaqueTensor::new(k), OpaqueTensor::new(v)))
     }
 
+    /// Fused speculative verification: for each row, consume its decode
+    /// input and then its drafted continuation in ONE pass, taking the
+    /// argmax after every input — `drafts[i].len() + 1` output tokens
+    /// per row, concatenated in row order (drafts are ragged, so the
+    /// flattening is offset-aware).  Every position runs exactly the
+    /// scalar walk a [`Backend::paged_decode`] + argmax round trip fed
+    /// the same prefix would run, so an output equal to its draft token
+    /// certifies that draft as the true greedy continuation — the
+    /// bitwise-identity contract the engine's accept-by-equality loop
+    /// relies on (asserted by
+    /// `paged_verify_matches_sequential_single_steps`).  A draft token
+    /// is consumed regardless of whether the model agreed at the
+    /// previous offset; the engine discards outputs past the first
+    /// disagreement, and the rejected slots' stale K/V is overwritten
+    /// by the row's next dispatch (virtual rollback — the block
+    /// reservation guarantees the slots stay owned by the row).
+    fn paged_verify(
+        &self,
+        variant: &str,
+        k: OpaqueTensor,
+        v: OpaqueTensor,
+        rows: &[PagedDecodeRow],
+        drafts: &[Vec<i32>],
+    ) -> Result<(Vec<i32>, OpaqueTensor, OpaqueTensor)> {
+        if drafts.len() != rows.len() {
+            return Err(Error::Other(format!(
+                "paged_verify: {} draft rows for {} decode rows",
+                drafts.len(),
+                rows.len()
+            )));
+        }
+        let model = self.model_for_variant(variant)?;
+        let cfg = model.cfg;
+        let vsize = cfg.vocab_size;
+        let mut k = take_paged(k, cfg, "paged_verify k_cache")?;
+        let mut v = take_paged(v, cfg, "paged_verify v_cache")?;
+        let t0 = Instant::now();
+        let max_ctx = rows
+            .iter()
+            .zip(drafts)
+            .map(|(r, d)| r.position.max(0) as usize + d.len() + 1)
+            .max()
+            .unwrap_or(0);
+        // validate every row's table against its FINAL drafted slot up
+        // front so no KV writes land before an error surfaces
+        for (row, draft) in rows.iter().zip(drafts) {
+            let at = row.position.max(0) as usize;
+            check_table(
+                &row.blocks,
+                at + draft.len() + 1,
+                &k,
+                "paged_verify",
+            )?;
+        }
+        let total: usize = drafts.iter().map(|d| d.len() + 1).sum();
+        let mut toks = Vec::with_capacity(total);
+        let mut ps = self
+            .paged_scratch
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        ps.fit(cfg, max_ctx.max(1));
+        let PagedScratch { scratch, x } = &mut *ps;
+        let mut logits = vec![0.0f32; vsize];
+        // row-major (unlike the step-major fused decode): each row's
+        // input chain is fixed up front, so nothing crosses rows
+        for (i, row) in rows.iter().enumerate() {
+            let start = row.position.max(0) as usize;
+            for (j, &tok) in
+                std::iter::once(&row.token).chain(&drafts[i]).enumerate()
+            {
+                let at = start + j;
+                model.embed_row(tok.max(0), at, x);
+                model.forward_row_paged(
+                    &row.blocks,
+                    at,
+                    at + 1,
+                    x,
+                    &mut k,
+                    &mut v,
+                    scratch,
+                );
+                model.logits_row(x, &mut logits);
+                toks.push(argmax(&logits) as i32);
+            }
+        }
+        drop(ps);
+        let mut st = self.stats.lock().unwrap_or_else(|e| e.into_inner());
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        drop(st);
+        Ok((toks, OpaqueTensor::new(k), OpaqueTensor::new(v)))
+    }
+
     /// Duplicate pool block `src` into `dst` across both paged stores —
     /// the storage half of copy-on-write prefix adoption.  Pure
     /// `memcpy`-shaped work (one contiguous run per (layer, head)
@@ -2019,6 +2112,120 @@ mod tests {
         assert!(b
             .paged_decode_multi("full", pk, pv, &rows, 2)
             .is_ok());
+    }
+
+    #[test]
+    fn paged_verify_matches_sequential_single_steps() {
+        // THE speculative-identity guarantee, at the backend layer: one
+        // fused paged_verify call must emit, at every offset, exactly
+        // the argmax a sequential paged_decode chain fed the same
+        // inputs would — including offsets PAST a disagreement (the
+        // engine discards those; the backend still scores them
+        // deterministically).  Both dtypes, both kernels.
+        let prompt = [special::BOS as i32, 3, 8, 4, special::SEP as i32];
+        for f16 in [false, true] {
+            for kernel in [Kernel::Scalar, Kernel::Blocked] {
+                let mut b = RefBackend::with_preset(&tiny_preset());
+                if f16 {
+                    b.set_dtype(DType::F16);
+                }
+                b.set_kernel(kernel);
+                let table = vec![4u32, 1, 6];
+                let prefill = |b: &RefBackend| {
+                    let (pk, pv) = b.paged_kv_alloc("full", 8, 4).unwrap();
+                    let rows = vec![PagedPrefillRow {
+                        tokens: prompt.to_vec(),
+                        start: 0,
+                        blocks: table.clone(),
+                    }];
+                    let (l, pk, pv) =
+                        b.paged_prefill("full", pk, pv, &rows).unwrap();
+                    (argmax(&l) as i32, pk, pv)
+                };
+                // a deliberately mixed draft: the sequential reference
+                // consumes it blindly, exactly like the verifier
+                let draft = vec![9i32, 2, 17];
+
+                let (first, pk, pv) = prefill(&b);
+                let rows = vec![PagedDecodeRow {
+                    token: first,
+                    position: prompt.len() as i32,
+                    blocks: table.clone(),
+                }];
+                let (outs, vk, _) = b
+                    .paged_verify(
+                        "full",
+                        pk,
+                        pv,
+                        &rows,
+                        std::slice::from_ref(&draft),
+                    )
+                    .unwrap();
+                assert_eq!(outs.len(), draft.len() + 1);
+
+                // sequential reference from a fresh pool: feed the SAME
+                // input chain one decode at a time
+                let (first2, mut pk, mut pv) = prefill(&b);
+                assert_eq!(first, first2);
+                let mut singles = Vec::new();
+                let mut at = prompt.len() as i32;
+                for &tok in std::iter::once(&first).chain(&draft) {
+                    let rows = vec![PagedDecodeRow {
+                        token: tok,
+                        position: at,
+                        blocks: table.clone(),
+                    }];
+                    let (l, k2, v2) =
+                        b.paged_decode("full", pk, pv, &rows).unwrap();
+                    pk = k2;
+                    pv = v2;
+                    singles.push(argmax(&l) as i32);
+                    at += 1;
+                }
+                assert_eq!(
+                    outs, singles,
+                    "paged_verify diverged (fp16={f16}, kernel={kernel:?})"
+                );
+                // the fused call's KV writes land identically
+                let fkc = vk.downcast::<PagedKvCache>().unwrap();
+                let skc = pk.downcast::<PagedKvCache>().unwrap();
+                assert_eq!(fkc.data, skc.data, "verify k cache diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn paged_verify_validates_drafts_and_tables() {
+        let b = RefBackend::with_preset(&tiny_preset());
+        let (pk, pv) = b.paged_kv_alloc("full", 4, 4).unwrap();
+        let rows = vec![PagedDecodeRow {
+            token: 5,
+            position: 6,
+            blocks: vec![0, 1],
+        }];
+        // drafts must align with rows
+        assert!(b
+            .paged_verify("full", pk.clone(), pv.clone(), &rows, &[])
+            .is_err());
+        // the table covers slot 6 but not slots 7..9 a 3-token draft
+        // would write — the call must refuse up front
+        assert!(b
+            .paged_verify(
+                "full",
+                pk.clone(),
+                pv.clone(),
+                &rows,
+                &[vec![1, 2, 3]]
+            )
+            .is_err());
+        // an empty draft degenerates to one decode step
+        let (outs, pk, pv) = b
+            .paged_verify("full", pk, pv, &rows, &[vec![]])
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let (outs, _, _) =
+            b.paged_verify("full", pk, pv, &rows, &[vec![7]]).unwrap();
+        assert_eq!(outs.len(), 2);
     }
 
     #[test]

@@ -153,6 +153,19 @@ impl ServerBuilder {
         self
     }
 
+    /// Self-speculative decoding draft length (`--speculate`); 0 = off.
+    /// With `k > 0`, greedy paged decode drafts up to `k` continuation
+    /// tokens per row by n-gram lookup over the row's own context and
+    /// verifies them in ONE fused dispatch — token streams stay
+    /// bitwise-identical to plain greedy, accepted drafts just skip
+    /// their own dispatches.  Greedy-only: top-k sampling silently
+    /// takes the plain per-step path.  Successful replies carry
+    /// `spec_accepted`.
+    pub fn speculate(mut self, k: usize) -> Self {
+        self.cfg.gen.speculate = k;
+        self
+    }
+
     /// Runtime vocab pruning (`--prune-vocab`): derive a
     /// workload-specific kept-vocabulary covering `coverage` of token
     /// occurrences from a seeded corpus sample, and serve with the

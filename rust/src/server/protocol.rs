@@ -29,6 +29,10 @@
 //! cache-pressure signal.  When prefix sharing is on, replies also
 //! carry the session's cumulative `"prefix_hits"` /
 //! `"prefix_tokens_reused"` counters (omitted when sharing is off).
+//! Servers decoding speculatively (`--speculate k`) stamp successful
+//! replies with `"spec_accepted"` — the session's cumulative count of
+//! draft tokens verified-and-accepted (omitted when speculation is
+//! off, so clients can tell "off" from "on but nothing accepted").
 //! Servers running runtime vocab pruning (`--prune-vocab`) stamp
 //! successful replies with `"pruned_vocab"` / `"full_vocab"` — the
 //! dense kept-set size the engines decoded over and the original
@@ -151,6 +155,9 @@ pub fn response_to_json(r: &ServingResponse) -> String {
         pairs.push(("pruned_vocab", Value::num(kept as f64)));
         pairs.push(("full_vocab", Value::num(full as f64)));
     }
+    if let Some(acc) = r.spec_accepted {
+        pairs.push(("spec_accepted", Value::num(acc as f64)));
+    }
     if r.preemptions > 0 {
         pairs.push(("preemptions", Value::num(r.preemptions as f64)));
     }
@@ -215,6 +222,9 @@ pub fn event_to_json(id: u64, ev: &ServingEvent) -> String {
                 pairs.push(("pruned_vocab", Value::num(kept as f64)));
                 pairs.push(("full_vocab", Value::num(full as f64)));
             }
+            if let Some(acc) = r.spec_accepted {
+                pairs.push(("spec_accepted", Value::num(acc as f64)));
+            }
             if r.preemptions > 0 {
                 pairs.push(("preemptions", Value::num(r.preemptions as f64)));
             }
@@ -275,6 +285,7 @@ mod tests {
             preemptions: 1,
             prefix: Some((2, 32)),
             pruned_vocab: Some((4000, 8000)),
+            spec_accepted: Some(7),
         }
     }
 
@@ -345,20 +356,24 @@ mod tests {
         assert_eq!(v.get("prefix_tokens_reused").as_u64(), Some(32));
         assert_eq!(v.get("pruned_vocab").as_u64(), Some(4000));
         assert_eq!(v.get("full_vocab").as_u64(), Some(8000));
+        assert_eq!(v.get("spec_accepted").as_u64(), Some(7));
         assert_eq!(v.get("preemptions").as_u64(), Some(1));
         assert!(v.get("code").is_null());
         // never-preempted replies omit the field entirely, and so do
-        // replies from sessions without a prefix cache or pruning
+        // replies from sessions without a prefix cache, pruning, or
+        // speculation
         let mut clean = ok_response(3);
         clean.preemptions = 0;
         clean.prefix = None;
         clean.pruned_vocab = None;
+        clean.spec_accepted = None;
         let v = json::parse(&response_to_json(&clean)).unwrap();
         assert!(v.get("preemptions").is_null());
         assert!(v.get("prefix_hits").is_null());
         assert!(v.get("prefix_tokens_reused").is_null());
         assert!(v.get("pruned_vocab").is_null());
         assert!(v.get("full_vocab").is_null());
+        assert!(v.get("spec_accepted").is_null());
     }
 
     #[test]
@@ -407,6 +422,7 @@ mod tests {
         assert_eq!(v.get("prefix_tokens_reused").as_u64(), Some(32));
         assert_eq!(v.get("pruned_vocab").as_u64(), Some(4000));
         assert_eq!(v.get("full_vocab").as_u64(), Some(8000));
+        assert_eq!(v.get("spec_accepted").as_u64(), Some(7));
         assert_eq!(v.get("preemptions").as_u64(), Some(1));
     }
 

@@ -415,6 +415,7 @@ impl StreamingPipeline {
                             ttft,
                             kv,
                             prefix,
+                            spec,
                             ..
                         } => {
                             if let Some(p) = &post_prune {
@@ -443,6 +444,7 @@ impl StreamingPipeline {
                             });
                             resp.prefix =
                                 prefix.map(|p| (p.hits, p.tokens_reused));
+                            resp.spec_accepted = spec.map(|s| s.accepted);
                             reply_done(&post_routes, request.id, resp);
                         }
                         PoolEvent::Failed {
